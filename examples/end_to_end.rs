@@ -1,0 +1,214 @@
+//! End-to-end validation driver (DESIGN.md experiment "end-to-end"):
+//! active-learn an LJ₈ cluster potential through the full PAL stack and log
+//! the learning curve — held-out MSE and committee uncertainty vs labels.
+//!
+//! The run is phased: each phase is a complete PAL workflow bounded by a
+//! label budget; committee members checkpoint to `results/end_to_end/` (the
+//! paper's `save_progress` persistence) so weights and datasets carry over.
+//! Between phases the driver evaluates every member on a fixed
+//! oracle-labeled test set and records energy MSE + committee std.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::config::{AlSetting, StopCriteria};
+use pal::coordinator::selection::CommitteeStdUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::json::{arr_f64, obj, Value};
+use pal::kernels::generators::{MdGenerator, MdLayout};
+use pal::kernels::models::{HloPotentialModel, TrainOptions};
+use pal::kernels::oracles::{LatencyOracle, PesOracle};
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::potential::{LennardJones, Pes};
+use pal::rng::Rng;
+use pal::runtime::{default_artifacts_dir, Manifest};
+
+const N_ATOMS: usize = 8; // ground1 artifact set
+const COMMITTEE: usize = 4;
+const PHASES: usize = 6;
+const LABELS_PER_PHASE: u64 = 24;
+const RESULT_DIR: &str = "results/end_to_end";
+
+fn ckpt_path(replica: usize) -> std::path::PathBuf {
+    std::path::Path::new(RESULT_DIR).join(format!("member_{replica}.ckpt.json"))
+}
+
+fn input_row(x: &[f32]) -> Vec<f32> {
+    let mut row = x.to_vec();
+    row.push(0.0); // global
+    row.push(1.0); // ground state
+    row
+}
+
+/// Fixed held-out test set: thermally perturbed LJ₈ geometries + labels.
+fn test_set(n: usize) -> Vec<(Vec<f32>, f32)> {
+    let pes = LennardJones::cluster(N_ATOMS);
+    let mut rng = Rng::new(0xE2E);
+    (0..n)
+        .map(|_| {
+            let mut x = pes.initial_geometry(&mut rng);
+            for v in &mut x {
+                *v += (rng.normal() * 0.08) as f32;
+            }
+            let e = pes.energy(&x) as f32;
+            (input_row(&x), e)
+        })
+        .collect()
+}
+
+/// Evaluate the checkpointed committee on the test set:
+/// (energy MSE of the committee mean, mean committee std).
+fn evaluate(test: &[(Vec<f32>, f32)]) -> anyhow::Result<(f64, f64)> {
+    let dir = default_artifacts_dir();
+    let rows: Vec<Vec<f32>> = test.iter().map(|(x, _)| x.clone()).collect();
+    let mut per_member: Vec<Vec<f32>> = Vec::new();
+    for replica in 0..COMMITTEE {
+        let opts = TrainOptions { checkpoint: Some(ckpt_path(replica)), ..Default::default() };
+        let mut model = HloPotentialModel::new(
+            Manifest::load(&dir)?,
+            "ground1",
+            Mode::Predict,
+            200 + replica as u32,
+            opts,
+        )?;
+        let preds = model.predict(&rows);
+        per_member.push(preds.iter().map(|p| p[0]).collect()); // energy channel
+    }
+    let m = COMMITTEE as f64;
+    let mut mse = 0.0;
+    let mut mean_std = 0.0;
+    for (i, (_, e_ref)) in test.iter().enumerate() {
+        let vals: Vec<f64> = per_member.iter().map(|p| p[i] as f64).collect();
+        let mean = vals.iter().sum::<f64>() / m;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (m - 1.0);
+        mse += (mean - *e_ref as f64) * (mean - *e_ref as f64);
+        mean_std += var.sqrt();
+    }
+    Ok((mse / test.len() as f64, mean_std / test.len() as f64))
+}
+
+fn run_phase(phase: usize) -> anyhow::Result<pal::telemetry::RunReport> {
+    let setting = AlSetting {
+        result_dir: RESULT_DIR.into(),
+        gene_process: 8,
+        pred_process: COMMITTEE,
+        ml_process: COMMITTEE,
+        orcl_process: 4,
+        retrain_size: 8,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(LABELS_PER_PHASE),
+            max_wall: Some(Duration::from_secs(120)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let layout = MdLayout { n_atoms: N_ATOMS, n_globals: 1, n_states: 1 };
+    let generators: Vec<_> = (0..setting.gene_process)
+        .map(|i| {
+            let seed = (phase * 100 + i) as u64;
+            Box::new(move || {
+                let pes = LennardJones::cluster(N_ATOMS);
+                let mut rng = Rng::new(seed);
+                let x0 = pes.initial_geometry(&mut rng);
+                Box::new(
+                    MdGenerator::new(layout, x0, seed).with_dt(0.01).with_patience(4),
+                ) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles: Vec<_> = (0..setting.orcl_process)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(
+                    LatencyOracle::new(
+                        PesOracle::fixed(LennardJones::cluster(N_ATOMS), 1),
+                        Duration::from_millis(60),
+                    )
+                    .with_jitter(0.2, i as u64),
+                ) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let dir = default_artifacts_dir();
+    let model = Arc::new(move |mode: Mode, replica: usize| {
+        let manifest = Manifest::load(&dir).expect("artifacts");
+        let opts = TrainOptions {
+            epochs_per_round: 24,
+            checkpoint: Some(ckpt_path(replica)),
+            ..Default::default()
+        };
+        Box::new(
+            HloPotentialModel::new(manifest, "ground1", mode, 200 + replica as u32, opts)
+                .expect("lj model"),
+        ) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(CommitteeStdUtils::new(0.3, 6)) as Box<dyn Utils>);
+    Workflow::new(setting).run(KernelSet { generators, oracles, model, utils })
+}
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all(RESULT_DIR)?;
+    // fresh run: clear stale checkpoints
+    for r in 0..COMMITTEE {
+        let _ = std::fs::remove_file(ckpt_path(r));
+    }
+    let test = test_set(64);
+
+    println!("=== PAL end-to-end validation: LJ{N_ATOMS} committee potential ===");
+    println!(
+        "{PHASES} phases x {LABELS_PER_PHASE} labels; committee of {COMMITTEE}; held-out test set of {}",
+        test.len()
+    );
+    println!();
+    println!("{:<8} {:>8} {:>12} {:>14} {:>12}", "phase", "labels", "test MSE", "committee std", "retrains");
+
+    let mut labels_total = 0u64;
+    let mut curve_mse = Vec::new();
+    let mut curve_std = Vec::new();
+    let mut curve_labels = Vec::new();
+
+    // phase 0: untrained committee baseline
+    let (mse0, std0) = evaluate(&test)?;
+    println!("{:<8} {:>8} {:>12.4} {:>14.4} {:>12}", "init", 0, mse0, std0, 0);
+    curve_labels.push(0.0);
+    curve_mse.push(mse0);
+    curve_std.push(std0);
+
+    for phase in 0..PHASES {
+        let report = run_phase(phase)?;
+        labels_total += report.oracle_labels;
+        let (mse, std) = evaluate(&test)?;
+        println!(
+            "{:<8} {:>8} {:>12.4} {:>14.4} {:>12}",
+            phase, labels_total, mse, std, report.retrain_rounds
+        );
+        curve_labels.push(labels_total as f64);
+        curve_mse.push(mse);
+        curve_std.push(std);
+    }
+
+    let improved = curve_mse.last().unwrap() < curve_mse.first().unwrap();
+    println!();
+    println!(
+        "learning curve: MSE {:.4} -> {:.4} ({})",
+        curve_mse.first().unwrap(),
+        curve_mse.last().unwrap(),
+        if improved { "improved" } else { "NOT improved" }
+    );
+
+    let curve = obj(vec![
+        ("labels", arr_f64(&curve_labels)),
+        ("test_mse", arr_f64(&curve_mse)),
+        ("committee_std", arr_f64(&curve_std)),
+        ("improved", Value::Bool(improved)),
+    ]);
+    let path = format!("{RESULT_DIR}/learning_curve.json");
+    std::fs::write(&path, pal::json::to_string(&curve))?;
+    println!("curve written to {path}");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the SI §S3 toy workflow, end to end.
+//!
+//! 20 random-number generators, 3 prediction + 3 training processes hosting
+//! the HLO toy committee (linear 4→4, AOT-compiled from JAX), 5 oracles
+//! labeling with a sin map, std-threshold selection.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::config::{AlSetting, StopCriteria};
+use pal::coordinator::selection::CommitteeStdUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::generators::RandomGenerator;
+use pal::kernels::models::HloToyModel;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::runtime::{default_artifacts_dir, Manifest};
+use pal::sim::workload::SyntheticOracle;
+
+fn main() -> anyhow::Result<()> {
+    // the SI example's process counts (scaled-down stop criteria)
+    let setting = AlSetting {
+        result_dir: "results/quickstart".into(),
+        pred_process: 3,
+        orcl_process: 5,
+        gene_process: 20,
+        ml_process: 3,
+        retrain_size: 20,
+        stop: StopCriteria {
+            max_iterations: Some(300),
+            max_labels: Some(200),
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    let generators: Vec<_> = (0..setting.gene_process)
+        .map(|i| {
+            let seed = i as u64;
+            Box::new(move || {
+                // the SI toy generator: limit 300000 + rank
+                Box::new(RandomGenerator::new(4, 300_000 + seed, seed)) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+
+    let oracles: Vec<_> = (0..setting.orcl_process)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle { label_cost: Duration::from_millis(5), out_dim: 4 })
+                    as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+
+    let dir = default_artifacts_dir();
+    let model = Arc::new(move |mode: Mode, replica: usize| {
+        let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+        Box::new(HloToyModel::new(manifest, mode, replica as u32).expect("toy model"))
+            as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(CommitteeStdUtils::new(0.05, 10)) as Box<dyn Utils>);
+
+    let report = Workflow::new(setting).run(KernelSet { generators, oracles, model, utils })?;
+
+    println!("=== PAL quickstart (SI §S3 toy) ===");
+    println!("exchange iterations : {}", report.al_iterations);
+    println!("oracle labels       : {}", report.oracle_labels);
+    println!("retraining rounds   : {}", report.retrain_rounds);
+    println!("wall time           : {:.2}s", report.wall.as_secs_f64());
+    println!(
+        "prediction latency  : {:.3} ms/batch (committee of {})",
+        report.mean_timer_ms("prediction", "predict"),
+        3
+    );
+    println!(
+        "comm               : {} messages, {} KiB",
+        report.messages,
+        report.payload_bytes / 1024
+    );
+    println!(
+        "final losses        : {:?}",
+        report.final_losses
+    );
+    Ok(())
+}

@@ -1,0 +1,287 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+Run once via ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``).
+The rust runtime (`rust/src/runtime/`) consumes ``manifest.json`` and the
+``*.hlo.txt`` files; Python is never imported at runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+All entry points are lowered with ``return_tuple=True`` and the rust side
+unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import descriptor as desc_kernel
+from .kernels import committee_mlp as cmlp_kernel
+
+F32, U32 = "f32", "u32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the xla-0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype: str = F32) -> jax.ShapeDtypeStruct:
+    jdt = jnp.float32 if dtype == F32 else jnp.uint32
+    return jax.ShapeDtypeStruct(tuple(shape), jdt)
+
+
+class Exporter:
+    """Collects artifact entries and writes HLO text + manifest.json."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: List[Dict] = []
+
+    def add(self, name: str, fn: Callable,
+            inputs: List[Tuple[str, Sequence[int], str]],
+            outputs: List[Tuple[str, Sequence[int]]],
+            meta: Dict) -> None:
+        """Lower ``fn`` at the given input specs and record the entry."""
+        specs = [_spec(shape, dt) for (_, shape, dt) in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(s), "dtype": dt}
+                       for (n, s, dt) in inputs],
+            "outputs": [{"name": n, "shape": list(s), "dtype": F32}
+                        for (n, s) in outputs],
+            "meta": meta,
+        })
+        print(f"  {name}: {len(text)} chars")
+
+    def finish(self) -> None:
+        manifest = {"version": 1, "entries": self.entries}
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"wrote manifest with {len(self.entries)} entries")
+
+
+# --------------------------------------------------------------------------
+# Export sets
+# --------------------------------------------------------------------------
+
+
+def export_potential(ex: Exporter, tag: str, cfg: model.PotentialConfig,
+                     fwd_batches: Sequence[int], euq_batches: Sequence[int],
+                     train_batch: int) -> None:
+    m, p, n3 = cfg.n_members, cfg.param_size, cfg.n_atoms * 3
+    g, s = cfg.n_globals, cfg.n_states
+    meta = {
+        "kind": "potential", "tag": tag,
+        "n_atoms": cfg.n_atoms, "n_rbf": cfg.n_rbf, "hidden": cfg.hidden,
+        "n_members": m, "n_states": s, "n_globals": g,
+        "param_size": p, "opt_size": cfg.opt_size,
+        "lr": cfg.lr, "force_weight": cfg.force_weight,
+        "vmem_descriptor_bytes": desc_kernel.vmem_estimate_bytes(
+            cfg.n_atoms, cfg.n_rbf),
+    }
+    for b in fwd_batches:
+        ex.add(
+            f"potential_{tag}_fwd_b{b}",
+            functools.partial(model.potential_fwd, cfg=cfg),
+            inputs=[("w_all", [m * p], F32), ("x", [b, n3], F32),
+                    ("g", [b, g], F32), ("s", [b, s], F32)],
+            outputs=[("e_all", [m, b, s]), ("e_mean", [b, s]),
+                     ("e_std", [b, s]), ("f_mean", [b, n3]),
+                     ("f_std", [b, n3])],
+            meta={**meta, "batch": b, "entry": "fwd"},
+        )
+    for b in euq_batches:
+        ex.add(
+            f"potential_{tag}_euq_b{b}",
+            functools.partial(model.potential_euq, cfg=cfg),
+            inputs=[("w_all", [m * p], F32), ("x", [b, n3], F32),
+                    ("g", [b, g], F32)],
+            outputs=[("e_all", [m, b, s]), ("e_mean", [b, s]),
+                     ("e_std", [b, s])],
+            meta={**meta, "batch": b, "entry": "euq",
+                  "vmem_committee_bytes": cmlp_kernel.vmem_estimate_bytes(
+                      b, cfg.n_atoms, cfg.feat_dim, cfg.hidden, s),
+                  "mxu_utilization": cmlp_kernel.mxu_utilization_estimate(
+                      b, cfg.n_atoms, cfg.feat_dim, cfg.hidden)},
+        )
+    t = train_batch
+    ex.add(
+        f"potential_{tag}_train_t{t}",
+        functools.partial(model.potential_train_step, cfg=cfg),
+        inputs=[("w", [p], F32), ("opt", [cfg.opt_size], F32),
+                ("x", [t, n3], F32), ("g", [t, g], F32), ("s", [t, s], F32),
+                ("y_e", [t, s], F32), ("y_f", [t, n3], F32)],
+        outputs=[("w2", [p]), ("opt2", [cfg.opt_size]), ("loss", [1])],
+        meta={**meta, "batch": t, "entry": "train"},
+    )
+    ex.add(
+        f"potential_{tag}_init",
+        functools.partial(model.potential_init, cfg=cfg),
+        inputs=[("seed", [], U32)],
+        outputs=[("w_all", [m * p])],
+        meta={**meta, "entry": "init"},
+    )
+
+
+def export_surrogate(ex: Exporter, cfg: model.SurrogateConfig,
+                     fwd_batches: Sequence[int], train_batch: int,
+                     prefix: str = "surrogate") -> None:
+    m, p, gr, o = cfg.n_members, cfg.param_size, cfg.grid, cfg.n_out
+    meta = {
+        "kind": "surrogate", "tag": prefix, "grid": gr, "channels": cfg.channels,
+        "dense": cfg.dense, "n_members": m, "n_out": o,
+        "param_size": p, "opt_size": cfg.opt_size, "lr": cfg.lr,
+    }
+    for b in fwd_batches:
+        ex.add(
+            f"{prefix}_fwd_b{b}",
+            functools.partial(model.surrogate_fwd, cfg=cfg),
+            inputs=[("w_all", [m * p], F32), ("grid", [b, gr, gr], F32)],
+            outputs=[("y_all", [m, b, o]), ("y_mean", [b, o]),
+                     ("y_std", [b, o])],
+            meta={**meta, "batch": b, "entry": "fwd"},
+        )
+    t = train_batch
+    ex.add(
+        f"{prefix}_train_t{t}",
+        functools.partial(model.surrogate_train_step, cfg=cfg),
+        inputs=[("w", [p], F32), ("opt", [cfg.opt_size], F32),
+                ("grid", [t, gr, gr], F32), ("y", [t, o], F32)],
+        outputs=[("w2", [p]), ("opt2", [cfg.opt_size]), ("loss", [1])],
+        meta={**meta, "batch": t, "entry": "train"},
+    )
+    ex.add(
+        f"{prefix}_init",
+        functools.partial(model.surrogate_init, cfg=cfg),
+        inputs=[("seed", [], U32)],
+        outputs=[("w_all", [m * p])],
+        meta={**meta, "entry": "init"},
+    )
+
+
+def export_toy(ex: Exporter, cfg: model.ToyConfig,
+               fwd_batches: Sequence[int], train_batch: int) -> None:
+    m, p = cfg.n_members, cfg.param_size
+    meta = {
+        "kind": "toy", "tag": "toy", "n_in": cfg.n_in, "n_out": cfg.n_out,
+        "n_members": m, "param_size": p, "opt_size": cfg.opt_size,
+        "lr": cfg.lr,
+    }
+    for b in fwd_batches:
+        ex.add(
+            f"toy_fwd_b{b}",
+            functools.partial(model.toy_fwd, cfg=cfg),
+            inputs=[("w_all", [m * p], F32), ("x", [b, cfg.n_in], F32)],
+            outputs=[("y_all", [m, b, cfg.n_out]), ("y_mean", [b, cfg.n_out]),
+                     ("y_std", [b, cfg.n_out])],
+            meta={**meta, "batch": b, "entry": "fwd"},
+        )
+    t = train_batch
+    ex.add(
+        f"toy_train_t{t}",
+        functools.partial(model.toy_train_step, cfg=cfg),
+        inputs=[("w", [p], F32), ("opt", [cfg.opt_size], F32),
+                ("x", [t, cfg.n_in], F32), ("y", [t, cfg.n_out], F32)],
+        outputs=[("w2", [p]), ("opt2", [cfg.opt_size]), ("loss", [1])],
+        meta={**meta, "batch": t, "entry": "train"},
+    )
+    ex.add(
+        "toy_init",
+        functools.partial(model.toy_init, cfg=cfg),
+        inputs=[("seed", [], U32)],
+        outputs=[("w_all", [m * p])],
+        meta={**meta, "entry": "init"},
+    )
+
+
+# Canonical configs — keep in sync with rust examples (they look these up
+# through the manifest, so shape changes here propagate automatically).
+#
+# Committee (n_members>1) variants compute fused committee statistics in one
+# call (used by the fused-path benches). Single-member (*1) variants back the
+# paper-faithful protocol where each prediction/training MPI rank owns one
+# committee member and the controller aggregates across ranks.
+GROUND = model.PotentialConfig(n_atoms=8, n_rbf=16, hidden=32, n_members=4,
+                               n_states=1, n_globals=1)
+GROUND1 = model.PotentialConfig(n_atoms=8, n_rbf=16, hidden=32, n_members=1,
+                                n_states=1, n_globals=1)
+PHOTO = model.PotentialConfig(n_atoms=6, n_rbf=16, hidden=32, n_members=4,
+                              n_states=3, n_globals=1)
+PHOTO1 = model.PotentialConfig(n_atoms=6, n_rbf=16, hidden=32, n_members=1,
+                               n_states=3, n_globals=1)
+DIMER = model.PotentialConfig(n_atoms=2, n_rbf=8, hidden=16, n_members=4,
+                              n_states=1, n_globals=1)
+DIMER1 = model.PotentialConfig(n_atoms=2, n_rbf=8, hidden=16, n_members=1,
+                               n_states=1, n_globals=1)
+# HAT reaction-path model: 3-atom embedding of a 2-D reactive surface
+# (two fixed reference atoms + the moving H), see examples/hat_reactions.rs
+HAT1 = model.PotentialConfig(n_atoms=3, n_rbf=8, hidden=16, n_members=1,
+                             n_states=1, n_globals=1)
+CFD = model.SurrogateConfig()
+CFD1 = model.SurrogateConfig(n_members=1)
+TOY = model.ToyConfig()
+TOY1 = model.ToyConfig(n_members=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: ground,photo,dimer,cfd,toy")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    sets = (args.only.split(",") if args.only
+            else ["ground", "photo", "dimer", "cfd", "toy"])
+
+    ex = Exporter(args.out_dir)
+    if "ground" in sets:
+        export_potential(ex, "ground", GROUND,
+                         fwd_batches=[1, 16, 89], euq_batches=[16],
+                         train_batch=32)
+        export_potential(ex, "ground1", GROUND1,
+                         fwd_batches=[1, 16, 89], euq_batches=[16],
+                         train_batch=32)
+    if "photo" in sets:
+        export_potential(ex, "photo", PHOTO,
+                         fwd_batches=[89], euq_batches=[89], train_batch=32)
+        export_potential(ex, "photo1", PHOTO1,
+                         fwd_batches=[89], euq_batches=[89], train_batch=32)
+    if "dimer" in sets:
+        export_potential(ex, "dimer", DIMER,
+                         fwd_batches=[1, 8], euq_batches=[8], train_batch=16)
+        export_potential(ex, "dimer1", DIMER1,
+                         fwd_batches=[1, 8], euq_batches=[8], train_batch=16)
+        export_potential(ex, "hat1", HAT1,
+                         fwd_batches=[1, 8], euq_batches=[8], train_batch=16)
+    if "cfd" in sets:
+        export_surrogate(ex, CFD, fwd_batches=[8, 32], train_batch=16)
+        export_surrogate(ex, CFD1, fwd_batches=[8, 32], train_batch=16,
+                         prefix="surrogate1")
+    if "toy" in sets:
+        export_toy(ex, TOY, fwd_batches=[20], train_batch=10)
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

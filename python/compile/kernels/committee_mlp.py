@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: fused query-by-committee MLP forward (energy-only path).
+
+Used by the ``*_euq`` (energy + uncertainty-quantification) artifacts that
+back the controller's ``adjust_input_for_oracle`` re-scoring and any
+prediction path that does not need forces. The committee dimension M is the
+Pallas grid: each grid step holds one member's full weight set plus the
+(shared) feature tile in VMEM and emits that member's (B, S) energies, so
+members never contend for VMEM and a real-TPU build runs each layer as an
+MXU-resident matmul.
+
+The gradient path is not needed here (UQ only), so no custom_vjp: this
+kernel is exported exactly as lowered. Correctness oracle:
+``ref.committee_mlp_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _committee_kernel(n_atoms: int,
+                      f_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+                      out_ref):
+    """One grid step = one committee member over the full batch.
+
+    f_ref:  (B*N, D) shared feature tile (same block for every step).
+    w*_ref: (1, ...) this member's weights.
+    out_ref:(1, B, S) this member's total energies.
+    """
+    f = f_ref[...]                                        # (B*N, D)
+    h1 = jnp.tanh(f @ w1_ref[0] + b1_ref[0])              # (B*N, H)
+    h2 = jnp.tanh(h1 @ w2_ref[0] + b2_ref[0])             # (B*N, H)
+    e = h2 @ w3_ref[0] + b3_ref[0]                        # (B*N, S)
+    bn, s = e.shape
+    b = bn // n_atoms
+    out_ref[0] = e.reshape(b, n_atoms, s).sum(axis=1)     # (B, S)
+
+
+def committee_mlp(feats: jnp.ndarray,
+                  w1: jnp.ndarray, b1: jnp.ndarray,
+                  w2: jnp.ndarray, b2: jnp.ndarray,
+                  w3: jnp.ndarray, b3: jnp.ndarray) -> jnp.ndarray:
+    """Fused committee forward.
+
+    Args:
+      feats: (B, N, D) per-atom features.
+      w1: (M, D, H), b1: (M, H), w2: (M, H, H), b2: (M, H),
+      w3: (M, H, S), b3: (M, S).
+
+    Returns:
+      (M, B, S) committee energies == ``ref.committee_mlp_ref``.
+    """
+    b, n, d = feats.shape
+    m, _, h = w1.shape
+    s = w3.shape[-1]
+    f2 = feats.reshape(b * n, d)
+    return pl.pallas_call(
+        functools.partial(_committee_kernel, n),
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((b * n, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, s), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, b, s), feats.dtype),
+        interpret=True,
+    )(f2, w1, b1, w2, b2, w3, b3)
+
+
+def vmem_estimate_bytes(batch: int, n_atoms: int, d: int, h: int, s: int) -> int:
+    """Static VMEM footprint per grid step (one member)."""
+    f = 4
+    bn = batch * n_atoms
+    return f * (bn * d + d * h + h + h * h + h + h * s + s + 2 * bn * h + bn * s)
+
+
+def mxu_utilization_estimate(batch: int, n_atoms: int, d: int, h: int) -> float:
+    """MXU occupancy estimate for the dominant (B*N, D) @ (D, H) matmul.
+
+    A 128x128 systolic tile is fully used only when every contracted and
+    output dimension reaches 128; smaller dims waste the corresponding
+    fraction of the array. This is the static number DESIGN.md §Perf reports
+    for the TPU target (interpret-mode wallclock is not a TPU proxy).
+    """
+    bn = batch * n_atoms
+    frac = lambda v: min(v, 128) / 128.0
+    return frac(bn) * frac(d) * frac(h)

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: pairwise-RBF descriptor (the inference hot-spot).
+
+TPU-oriented structure (see DESIGN.md §Hardware-Adaptation): the grid runs
+over the batch dimension, one geometry per grid step, so each step holds a
+``(1, N, 3)`` coordinate tile plus the K RBF centers in VMEM and emits a
+``(1, N, K)`` feature tile. On a real TPU this is the HBM→VMEM schedule the
+paper's GPU implementations express with thread blocks; here we lower with
+``interpret=True`` so the kernel becomes plain HLO runnable on the CPU PJRT
+plugin (real-TPU lowering emits a Mosaic custom-call the CPU client cannot
+execute).
+
+Autodiff: ``pallas_call`` has no automatic VJP, but forces (−∂E/∂x) and
+training both need gradients through the descriptor. We wrap the kernel in
+``jax.custom_vjp`` with the backward pass derived from the pure-jnp reference
+(`ref.descriptor_ref`) — forward runs the Pallas kernel, backward the
+mathematically identical reference transpose.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _descriptor_kernel(n_rbf: int, x_ref, out_ref):
+    """One grid step: features for a single geometry.
+
+    x_ref:   (1, N, 3) VMEM tile of coordinates.
+    out_ref: (1, N, K) VMEM tile of features.
+    """
+    x = x_ref[0]                                          # (N, 3)
+    n = x.shape[0]
+    diff = x[:, None, :] - x[None, :, :]                  # (N, N, 3)
+    d2 = jnp.sum(diff * diff, axis=-1)                    # (N, N)
+    eye = jnp.eye(n, dtype=x.dtype)
+    d = jnp.sqrt(d2 + ref.EPS_D) + eye * (2.0 * ref.R_CUT)
+    mu = ref.rbf_centers(n_rbf).astype(x.dtype)           # (K,)
+    g = jnp.exp(-((d[..., None] - mu) ** 2) / (2.0 * ref.SIGMA**2))
+    w = ref.cutoff_fn(d)[..., None]
+    out_ref[0] = jnp.sum(g * w, axis=1)                   # (N, K)
+
+
+def _descriptor_pallas(x: jnp.ndarray, n_rbf: int) -> jnp.ndarray:
+    """Raw pallas_call wrapper: (B, N, 3) -> (B, N, K)."""
+    b, n, _ = x.shape
+    return pl.pallas_call(
+        functools.partial(_descriptor_kernel, n_rbf),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, 3), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, n, n_rbf), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n_rbf), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def descriptor(x: jnp.ndarray, n_rbf: int) -> jnp.ndarray:
+    """Pairwise-RBF descriptor, Pallas forward / reference backward.
+
+    Args:
+      x: (B, N, 3) coordinates.
+      n_rbf: number of RBF centers (static).
+
+    Returns:
+      (B, N, K) features, identical (to float32 tolerance) to
+      ``ref.descriptor_ref``.
+    """
+    return _descriptor_pallas(x, n_rbf)
+
+
+def _descriptor_fwd(x, n_rbf):
+    return _descriptor_pallas(x, n_rbf), x
+
+
+def _descriptor_bwd(n_rbf, x, ct):
+    _, vjp = jax.vjp(lambda xx: ref.descriptor_ref(xx, n_rbf), x)
+    return (vjp(ct)[0],)
+
+
+descriptor.defvjp(_descriptor_fwd, _descriptor_bwd)
+
+
+def vmem_estimate_bytes(n_atoms: int, n_rbf: int) -> int:
+    """Static VMEM footprint estimate for one grid step (see DESIGN.md §Perf).
+
+    Tiles resident per step: x (N*3), out (N*K), plus the (N, N, K) RBF
+    intermediate and (N, N) distance matrices the compiler keeps live.
+    """
+    f = 4  # f32
+    return f * (
+        n_atoms * 3
+        + n_atoms * n_rbf
+        + n_atoms * n_atoms * n_rbf
+        + 2 * n_atoms * n_atoms
+        + n_rbf
+    )

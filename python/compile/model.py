@@ -1,0 +1,444 @@
+"""L2: JAX compute graphs for PAL's machine-learned models (build-time only).
+
+Three model families, all exported AOT to HLO text by ``aot.py`` and executed
+from the rust coordinator via PJRT; Python never runs on the request path.
+
+1. **Potential**: RBF-descriptor (L1 Pallas kernel) → per-atom tanh MLP →
+   total energy; forces via autodiff; query-by-committee of M members.
+   Used by the photodynamics / HAT / cluster applications (Table 1).
+2. **Surrogate**: small CNN grid → (C_f, St) committee for the thermo-fluid
+   application (Table 1, Fig. 3d).
+3. **Toy**: the SI toy model (4 → 4 linear), used by the quickstart example
+   and the comm-protocol tests.
+
+State convention (mirrors the paper's SI §S4 ``get_weight``/``update``):
+*all* model and optimizer state crosses the rust↔HLO boundary as flat 1-D
+f32 arrays. Member ``i`` of the committee owns ``w_flat[i*P:(i+1)*P]``.
+Adam state per member is ``[m (P), v (P), t (1)]`` (length 2P+1).
+
+Gradients: inference artifacts differentiate through the Pallas descriptor
+via its ``custom_vjp`` (forward = Pallas, backward = reference transpose).
+The training artifact needs second-order structure (d/dw of forces which are
+d/dx), so it uses the pure-jnp reference descriptor throughout — numerically
+identical, and ``custom_vjp`` does not support grad-of-grad.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import ref
+from .kernels.descriptor import descriptor
+from .kernels.committee_mlp import committee_mlp
+
+# --------------------------------------------------------------------------
+# Configs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PotentialConfig:
+    """Shape parameters of the committee potential (fixed per artifact)."""
+
+    n_atoms: int = 8
+    n_rbf: int = 16
+    hidden: int = 32
+    n_members: int = 4
+    n_states: int = 1    # >1 for excited-state (photodynamics) PES
+    n_globals: int = 1   # global scalar features (e.g. cluster charge)
+    lr: float = 1e-3
+    force_weight: float = 0.1
+
+    @property
+    def feat_dim(self) -> int:
+        return self.n_rbf + self.n_globals
+
+    @property
+    def layer_shapes(self) -> List[Tuple[int, ...]]:
+        d, h, s = self.feat_dim, self.hidden, self.n_states
+        return [(d, h), (h,), (h, h), (h,), (h, s), (s,)]
+
+    @property
+    def param_size(self) -> int:
+        total = 0
+        for s in self.layer_shapes:
+            n = 1
+            for d in s:
+                n *= d
+            total += n
+        return total
+
+    @property
+    def opt_size(self) -> int:
+        return 2 * self.param_size + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateConfig:
+    """Shape parameters of the CNN thermo-fluid surrogate."""
+
+    grid: int = 16       # H = W
+    channels: int = 8
+    dense: int = 32
+    n_members: int = 4
+    n_out: int = 2       # (C_f, St)
+    lr: float = 1e-3
+
+    @property
+    def layer_shapes(self) -> List[Tuple[int, ...]]:
+        c, d, o = self.channels, self.dense, self.n_out
+        g = self.grid // 4  # two 2x2 poolings
+        return [
+            (3, 3, 1, c), (c,),          # conv1 HWIO
+            (3, 3, c, c), (c,),          # conv2
+            (g * g * c, d), (d,),        # dense
+            (d, o), (o,),                # head
+        ]
+
+    @property
+    def param_size(self) -> int:
+        total = 0
+        for s in self.layer_shapes:
+            n = 1
+            for d in s:
+                n *= d
+            total += n
+        return total
+
+    @property
+    def opt_size(self) -> int:
+        return 2 * self.param_size + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ToyConfig:
+    """The SI §S4 toy model: linear 4 → 4."""
+
+    n_in: int = 4
+    n_out: int = 4
+    n_members: int = 3
+    lr: float = 1e-2
+
+    @property
+    def layer_shapes(self) -> List[Tuple[int, ...]]:
+        return [(self.n_in, self.n_out), (self.n_out,)]
+
+    @property
+    def param_size(self) -> int:
+        return self.n_in * self.n_out + self.n_out
+
+    @property
+    def opt_size(self) -> int:
+        return 2 * self.param_size + 1
+
+
+# --------------------------------------------------------------------------
+# Flat-weight plumbing
+# --------------------------------------------------------------------------
+
+
+def unflatten(w: jnp.ndarray, shapes: List[Tuple[int, ...]]) -> List[jnp.ndarray]:
+    """Split a flat (P,) weight vector into the layer tensors of ``shapes``."""
+    out, off = [], 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(w[off:off + n].reshape(s))
+        off += n
+    return out
+
+
+def members_view(w_all: jnp.ndarray, n_members: int, param_size: int) -> jnp.ndarray:
+    """(M*P,) → (M, P)."""
+    return w_all.reshape(n_members, param_size)
+
+
+def stack_member_layers(w_all: jnp.ndarray, n_members: int,
+                        shapes: List[Tuple[int, ...]]) -> List[jnp.ndarray]:
+    """(M*P,) → list of (M, *shape) stacked layer tensors."""
+    p = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        p += n
+    wm = members_view(w_all, n_members, p)
+    stacked, off = [], 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        stacked.append(wm[:, off:off + n].reshape((n_members,) + s))
+        off += n
+    return stacked
+
+
+def committee_stats(y_all: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean and ddof=1 std over the leading committee axis (paper's np.std)."""
+    m = y_all.shape[0]
+    mean = jnp.mean(y_all, axis=0)
+    if m > 1:
+        var = jnp.sum((y_all - mean[None]) ** 2, axis=0) / (m - 1)
+    else:
+        var = jnp.zeros_like(mean)
+    return mean, jnp.sqrt(var)
+
+
+# --------------------------------------------------------------------------
+# Adam (shared by all train steps)
+# --------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_step(w: jnp.ndarray, opt: jnp.ndarray, grad: jnp.ndarray,
+              lr: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One Adam update on flat weights. ``opt = [m, v, t]``."""
+    p = w.shape[0]
+    m, v, t = opt[:p], opt[p:2 * p], opt[2 * p]
+    t = t + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    w2 = w - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return w2, jnp.concatenate([m, v, t[None]])
+
+
+# --------------------------------------------------------------------------
+# Potential model
+# --------------------------------------------------------------------------
+
+
+def build_features(x: jnp.ndarray, g: jnp.ndarray, cfg: PotentialConfig,
+                   use_pallas: bool) -> jnp.ndarray:
+    """(B, N*3) coords + (B, G) globals → (B, N, K+G) per-atom features."""
+    b = x.shape[0]
+    xs = x.reshape(b, cfg.n_atoms, 3)
+    if use_pallas:
+        feats = descriptor(xs, cfg.n_rbf)                    # L1 kernel
+    else:
+        feats = ref.descriptor_ref(xs, cfg.n_rbf)            # 2nd-order-safe
+    gb = jnp.broadcast_to(g[:, None, :], (b, cfg.n_atoms, cfg.n_globals))
+    return jnp.concatenate([feats, gb], axis=-1)
+
+
+def _committee_energies(w_all: jnp.ndarray, feats: jnp.ndarray,
+                        cfg: PotentialConfig) -> jnp.ndarray:
+    """Differentiable committee energies (M, B, S) from stacked flat weights."""
+    w1, b1, w2, b2, w3, b3 = stack_member_layers(
+        w_all, cfg.n_members, cfg.layer_shapes)
+    return ref.committee_mlp_ref(feats, w1, b1, w2, b2, w3, b3)
+
+
+def potential_fwd(w_all: jnp.ndarray, x: jnp.ndarray, g: jnp.ndarray,
+                  s: jnp.ndarray, cfg: PotentialConfig):
+    """Full inference entry point (the request-path artifact).
+
+    Args:
+      w_all: (M*P,) committee weights.
+      x: (B, N*3) coordinates.
+      g: (B, G) global features (charge, ...).
+      s: (B, S) state weights (one-hot active PES for photodynamics;
+         all-ones column for ground-state models).
+
+    Returns (tuple of 5):
+      e_all  (M, B, S) per-member energies,
+      e_mean (B, S), e_std (B, S) committee statistics,
+      f_mean (B, N*3) mean forces on the state-weighted PES,
+      f_std  (B, N*3) committee force std (ddof=1).
+    """
+
+    def member_weighted_sum(xx):
+        feats = build_features(xx, g, cfg, use_pallas=True)
+        e_all = _committee_energies(w_all, feats, cfg)       # (M, B, S)
+        return jnp.sum(e_all * s[None], axis=(1, 2)), e_all  # (M,), aux
+
+    # jacrev gives per-member forces in one sweep: (M, B, N*3)
+    jac, e_all = jax.jacrev(member_weighted_sum, has_aux=True)(x)
+    f_all = -jac
+    e_mean, e_std = committee_stats(e_all)
+    f_mean, f_std = committee_stats(f_all)
+    return e_all, e_mean, e_std, f_mean, f_std
+
+
+def potential_euq(w_all: jnp.ndarray, x: jnp.ndarray, g: jnp.ndarray,
+                  cfg: PotentialConfig):
+    """Energy+UQ-only path (no forces) through the fused L1 committee kernel.
+
+    Backs ``adjust_input_for_oracle`` re-scoring, where only prediction
+    spread matters. Returns (e_all, e_mean, e_std).
+    """
+    feats = build_features(x, g, cfg, use_pallas=True)
+    w1, b1, w2, b2, w3, b3 = stack_member_layers(
+        w_all, cfg.n_members, cfg.layer_shapes)
+    e_all = committee_mlp(feats, w1, b1, w2, b2, w3, b3)
+    e_mean, e_std = committee_stats(e_all)
+    return e_all, e_mean, e_std
+
+
+def potential_loss(w: jnp.ndarray, x: jnp.ndarray, g: jnp.ndarray,
+                   s: jnp.ndarray, y_e: jnp.ndarray, y_f: jnp.ndarray,
+                   cfg: PotentialConfig) -> jnp.ndarray:
+    """Single-member loss: energy MSE over all states + weighted force MSE."""
+    feats = build_features(x, g, cfg, use_pallas=False)
+    w1, b1, w2, b2, w3, b3 = unflatten(w, cfg.layer_shapes)
+    e = ref.committee_mlp_ref(feats, w1[None], b1[None], w2[None], b2[None],
+                              w3[None], b3[None])[0]         # (T, S)
+
+    def weighted_total(xx):
+        f2 = build_features(xx, g, cfg, use_pallas=False)
+        ee = ref.committee_mlp_ref(f2, w1[None], b1[None], w2[None],
+                                   b2[None], w3[None], b3[None])[0]
+        return jnp.sum(ee * s)
+
+    forces = -jax.grad(weighted_total)(x)                    # (T, N*3)
+    loss_e = jnp.mean((e - y_e) ** 2)
+    loss_f = jnp.mean((forces - y_f) ** 2)
+    return loss_e + cfg.force_weight * loss_f
+
+
+def potential_train_step(w: jnp.ndarray, opt: jnp.ndarray, x: jnp.ndarray,
+                         g: jnp.ndarray, s: jnp.ndarray, y_e: jnp.ndarray,
+                         y_f: jnp.ndarray, cfg: PotentialConfig):
+    """One Adam step for one committee member.
+
+    Returns (w', opt', loss) — loss is pre-update, so callers can log the
+    descent curve without an extra forward.
+    """
+    loss, grad = jax.value_and_grad(potential_loss)(w, x, g, s, y_e, y_f, cfg)
+    w2, opt2 = adam_step(w, opt, grad, cfg.lr)
+    return w2, opt2, loss[None]
+
+
+def potential_init(seed: jnp.ndarray, cfg: PotentialConfig) -> jnp.ndarray:
+    """Committee weight init: (u32 scalar seed) → (M*P,) flat weights.
+
+    Glorot-ish scaling per layer; each member gets an independent subkey so
+    the committee has genuine weight diversity (query-by-committee needs it).
+    """
+    key = jax.random.PRNGKey(seed)
+    members = []
+    for i in range(cfg.n_members):
+        k = jax.random.fold_in(key, i)
+        parts = []
+        for shape in cfg.layer_shapes:
+            k, sub = jax.random.split(k)
+            if len(shape) >= 2:
+                fan_in = shape[0]
+                parts.append(
+                    (jax.random.normal(sub, shape, dtype=jnp.float32)
+                     / jnp.sqrt(jnp.float32(fan_in))).reshape(-1))
+            else:
+                parts.append(jnp.zeros(shape, dtype=jnp.float32).reshape(-1))
+        members.append(jnp.concatenate(parts))
+    return jnp.concatenate(members)
+
+
+# --------------------------------------------------------------------------
+# CNN surrogate (thermo-fluid application)
+# --------------------------------------------------------------------------
+
+
+def _cnn_single(w: jnp.ndarray, grid: jnp.ndarray, cfg: SurrogateConfig):
+    """One member's CNN: (P,), (B, H, W) → (B, n_out)."""
+    k1, c1, k2, c2, wd, bd, wo, bo = unflatten(w, cfg.layer_shapes)
+    x = grid[:, :, :, None]                                  # NHWC
+    dn = lax.conv_dimension_numbers(x.shape, k1.shape, ("NHWC", "HWIO", "NHWC"))
+    x = lax.conv_general_dilated(x, k1, (1, 1), "SAME", dimension_numbers=dn)
+    x = jnp.maximum(x + c1, 0.0)
+    x = lax.reduce_window(x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    dn2 = lax.conv_dimension_numbers(x.shape, k2.shape, ("NHWC", "HWIO", "NHWC"))
+    x = lax.conv_general_dilated(x, k2, (1, 1), "SAME", dimension_numbers=dn2)
+    x = jnp.maximum(x + c2, 0.0)
+    x = lax.reduce_window(x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ wd + bd)
+    return x @ wo + bo
+
+
+def surrogate_fwd(w_all: jnp.ndarray, grid: jnp.ndarray, cfg: SurrogateConfig):
+    """Committee CNN inference: returns (y_all (M,B,O), y_mean, y_std)."""
+    wm = members_view(w_all, cfg.n_members, cfg.param_size)
+    y_all = jax.vmap(lambda w: _cnn_single(w, grid, cfg))(wm)
+    y_mean, y_std = committee_stats(y_all)
+    return y_all, y_mean, y_std
+
+
+def surrogate_loss(w, grid, y, cfg: SurrogateConfig):
+    pred = _cnn_single(w, grid, cfg)
+    return jnp.mean((pred - y) ** 2)
+
+
+def surrogate_train_step(w, opt, grid, y, cfg: SurrogateConfig):
+    loss, grad = jax.value_and_grad(surrogate_loss)(w, grid, y, cfg)
+    w2, opt2 = adam_step(w, opt, grad, cfg.lr)
+    return w2, opt2, loss[None]
+
+
+def surrogate_init(seed: jnp.ndarray, cfg: SurrogateConfig) -> jnp.ndarray:
+    key = jax.random.PRNGKey(seed)
+    members = []
+    for i in range(cfg.n_members):
+        k = jax.random.fold_in(key, i)
+        parts = []
+        for shape in cfg.layer_shapes:
+            k, sub = jax.random.split(k)
+            if len(shape) >= 2:
+                fan_in = 1
+                for d in shape[:-1]:
+                    fan_in *= d
+                parts.append(
+                    (jax.random.normal(sub, shape, dtype=jnp.float32)
+                     / jnp.sqrt(jnp.float32(fan_in))).reshape(-1))
+            else:
+                parts.append(jnp.zeros(shape, dtype=jnp.float32).reshape(-1))
+        members.append(jnp.concatenate(parts))
+    return jnp.concatenate(members)
+
+
+# --------------------------------------------------------------------------
+# Toy model (SI §S4 quickstart)
+# --------------------------------------------------------------------------
+
+
+def toy_fwd(w_all: jnp.ndarray, x: jnp.ndarray, cfg: ToyConfig):
+    """Committee linear model: returns (y_all (M,B,O), y_mean, y_std)."""
+    wm = members_view(w_all, cfg.n_members, cfg.param_size)
+
+    def single(w):
+        wt, b = unflatten(w, cfg.layer_shapes)
+        return x @ wt + b
+
+    y_all = jax.vmap(single)(wm)
+    y_mean, y_std = committee_stats(y_all)
+    return y_all, y_mean, y_std
+
+
+def toy_loss(w, x, y, cfg: ToyConfig):
+    wt, b = unflatten(w, cfg.layer_shapes)
+    return jnp.mean((x @ wt + b - y) ** 2)
+
+
+def toy_train_step(w, opt, x, y, cfg: ToyConfig):
+    loss, grad = jax.value_and_grad(toy_loss)(w, x, y, cfg)
+    w2, opt2 = adam_step(w, opt, grad, cfg.lr)
+    return w2, opt2, loss[None]
+
+
+def toy_init(seed: jnp.ndarray, cfg: ToyConfig) -> jnp.ndarray:
+    key = jax.random.PRNGKey(seed)
+    members = []
+    for i in range(cfg.n_members):
+        k = jax.random.fold_in(key, i)
+        wt = jax.random.normal(k, (cfg.n_in, cfg.n_out), dtype=jnp.float32)
+        wt = wt / jnp.sqrt(jnp.float32(cfg.n_in))
+        members.append(jnp.concatenate(
+            [wt.reshape(-1), jnp.zeros(cfg.n_out, dtype=jnp.float32)]))
+    return jnp.concatenate(members)

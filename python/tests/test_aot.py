@@ -1,0 +1,103 @@
+"""AOT path: manifest consistency + HLO text is parseable and well-formed.
+
+These tests re-lower a small artifact in-process (fast) and validate the
+manifest that `make artifacts` wrote, so a stale or hand-edited artifacts/
+directory fails loudly before the rust side ever sees it.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip_smoke():
+    """Lower a tiny fn; the text must contain an ENTRY computation."""
+    lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "parameter(0)" in text
+
+
+def test_toy_fwd_lowering_has_tuple_root():
+    cfg = model.ToyConfig()
+    lowered = jax.jit(lambda w, x: model.toy_fwd(w, x, cfg)).lower(
+        jax.ShapeDtypeStruct((cfg.n_members * cfg.param_size,), jnp.float32),
+        jax.ShapeDtypeStruct((4, cfg.n_in), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "tuple(" in text.lower()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    @pytest.fixture(autouse=True)
+    def _load(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            self.manifest = json.load(f)
+        self.by_name = {e["name"]: e for e in self.manifest["entries"]}
+
+    def test_every_entry_file_exists(self):
+        for e in self.manifest["entries"]:
+            p = os.path.join(ART, e["file"])
+            assert os.path.exists(p), e["name"]
+            assert os.path.getsize(p) > 100
+
+    def test_expected_entries_present(self):
+        for name in ["potential_ground_fwd_b16", "potential_ground_train_t32",
+                     "potential_ground_init", "potential_photo_fwd_b89",
+                     "potential_dimer_fwd_b1", "surrogate_fwd_b8",
+                     "toy_fwd_b20", "toy_train_t10", "toy_init"]:
+            assert name in self.by_name, name
+
+    def test_param_sizes_consistent(self):
+        """meta.param_size must equal the config-derived size rust relies on."""
+        cfgs = {"ground": aot.GROUND, "photo": aot.PHOTO, "dimer": aot.DIMER}
+        for tag, cfg in cfgs.items():
+            e = self.by_name[f"potential_{tag}_init"]
+            assert e["meta"]["param_size"] == cfg.param_size
+            assert e["meta"]["opt_size"] == cfg.opt_size
+            assert e["outputs"][0]["shape"] == [cfg.n_members * cfg.param_size]
+
+    def test_fwd_io_shapes(self):
+        e = self.by_name["potential_ground_fwd_b16"]
+        m = e["meta"]
+        n3 = m["n_atoms"] * 3
+        ins = {i["name"]: i["shape"] for i in e["inputs"]}
+        outs = {o["name"]: o["shape"] for o in e["outputs"]}
+        assert ins["w_all"] == [m["n_members"] * m["param_size"]]
+        assert ins["x"] == [16, n3]
+        assert outs["e_all"] == [m["n_members"], 16, m["n_states"]]
+        assert outs["f_mean"] == [16, n3]
+
+    def test_train_io_shapes(self):
+        e = self.by_name["potential_ground_train_t32"]
+        m = e["meta"]
+        ins = {i["name"]: i["shape"] for i in e["inputs"]}
+        outs = {o["name"]: o["shape"] for o in e["outputs"]}
+        assert ins["w"] == [m["param_size"]]
+        assert ins["opt"] == [m["opt_size"]]
+        assert outs["w2"] == [m["param_size"]]
+        assert outs["loss"] == [1]
+
+    def test_hlo_text_entry_computation(self):
+        for name in ["toy_fwd_b20", "potential_ground_fwd_b16"]:
+            with open(os.path.join(ART, self.by_name[name]["file"])) as f:
+                text = f.read()
+            assert "ENTRY" in text
+            # one parameter per manifest input
+            for i, _inp in enumerate(self.by_name[name]["inputs"]):
+                assert f"parameter({i})" in text
+
+    def test_vmem_meta_recorded(self):
+        e = self.by_name["potential_ground_euq_b16"]
+        assert e["meta"]["vmem_committee_bytes"] > 0
+        assert 0 < e["meta"]["mxu_utilization"] <= 1.0

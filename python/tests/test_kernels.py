@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+Hypothesis sweeps shapes; assert_allclose against ref.py is THE core
+correctness signal for the kernels that end up inside the AOT artifacts.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.descriptor import descriptor, vmem_estimate_bytes
+from compile.kernels.committee_mlp import (
+    committee_mlp,
+    mxu_utilization_estimate,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _coords(rng, b, n, spread=3.0):
+    return jnp.asarray(rng.randn(b, n, 3) * spread, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# descriptor kernel
+# ---------------------------------------------------------------------------
+
+
+@given(b=st.integers(1, 6), n=st.integers(2, 10), k=st.integers(2, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_descriptor_matches_ref(b, n, k, seed):
+    x = _coords(np.random.RandomState(seed), b, n)
+    got = descriptor(x, k)
+    want = ref.descriptor_ref(x, k)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_descriptor_permutation_equivariance():
+    """Permuting atoms permutes the per-atom features identically."""
+    rng = np.random.RandomState(0)
+    x = _coords(rng, 2, 6)
+    perm = np.array([3, 1, 5, 0, 2, 4])
+    f = descriptor(x, 8)
+    fp = descriptor(x[:, perm], 8)
+    np.testing.assert_allclose(np.asarray(f)[:, perm], fp, rtol=1e-5, atol=1e-5)
+
+
+def test_descriptor_translation_invariance():
+    rng = np.random.RandomState(1)
+    x = _coords(rng, 3, 5)
+    shift = jnp.asarray(rng.randn(1, 1, 3), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        descriptor(x, 8), descriptor(x + shift, 8), rtol=1e-4, atol=1e-4)
+
+
+def test_descriptor_cutoff_zero_beyond_rc():
+    """Two atoms farther apart than R_CUT contribute nothing."""
+    x = jnp.array([[[0.0, 0.0, 0.0], [ref.R_CUT + 1.0, 0.0, 0.0]]],
+                  dtype=jnp.float32)
+    f = descriptor(x, 8)
+    np.testing.assert_allclose(f, np.zeros_like(f), atol=1e-6)
+
+
+def test_descriptor_grad_matches_ref_grad():
+    """custom_vjp backward (reference transpose) == grad of the reference."""
+    rng = np.random.RandomState(2)
+    x = _coords(rng, 2, 4)
+
+    def loss_k(xx):
+        return jnp.sum(jnp.sin(descriptor(xx, 6)))
+
+    def loss_r(xx):
+        return jnp.sum(jnp.sin(ref.descriptor_ref(xx, 6)))
+
+    gk = jax.grad(loss_k)(x)
+    gr = jax.grad(loss_r)(x)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+
+
+def test_descriptor_grad_finite_difference():
+    rng = np.random.RandomState(3)
+    x = np.asarray(_coords(rng, 1, 3))
+
+    def loss(xx):
+        return float(jnp.sum(descriptor(jnp.asarray(xx, jnp.float32), 4)))
+
+    g = np.asarray(jax.grad(
+        lambda xx: jnp.sum(descriptor(xx, 4)))(jnp.asarray(x, jnp.float32)))
+    eps = 1e-3
+    for idx in [(0, 0, 0), (0, 1, 2), (0, 2, 1)]:
+        xp, xm = x.copy(), x.copy()
+        xp[idx] += eps
+        xm[idx] -= eps
+        fd = (loss(xp) - loss(xm)) / (2 * eps)
+        assert abs(fd - g[idx]) < 5e-2 * max(1.0, abs(fd)), (idx, fd, g[idx])
+
+
+def test_descriptor_vmem_estimate_positive_and_monotone():
+    a = vmem_estimate_bytes(4, 8)
+    b = vmem_estimate_bytes(8, 8)
+    c = vmem_estimate_bytes(8, 16)
+    assert 0 < a < b < c
+
+
+# ---------------------------------------------------------------------------
+# committee MLP kernel
+# ---------------------------------------------------------------------------
+
+
+def _mlp_weights(rng, m, d, h, s):
+    mk = lambda *sh: jnp.asarray(rng.randn(*sh) * 0.3, dtype=jnp.float32)
+    return (mk(m, d, h), mk(m, h), mk(m, h, h), mk(m, h), mk(m, h, s),
+            mk(m, s))
+
+
+@given(m=st.integers(1, 5), b=st.integers(1, 4), n=st.integers(1, 6),
+       d=st.integers(1, 12), h=st.integers(1, 16), s=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+def test_committee_mlp_matches_ref(m, b, n, d, h, s, seed):
+    rng = np.random.RandomState(seed)
+    feats = jnp.asarray(rng.randn(b, n, d), dtype=jnp.float32)
+    w = _mlp_weights(rng, m, d, h, s)
+    got = committee_mlp(feats, *w)
+    want = ref.committee_mlp_ref(feats, *w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_committee_members_independent():
+    """Changing member j's weights must not change member i's output."""
+    rng = np.random.RandomState(0)
+    feats = jnp.asarray(rng.randn(2, 3, 4), dtype=jnp.float32)
+    w = list(_mlp_weights(rng, 3, 4, 8, 1))
+    base = np.asarray(committee_mlp(feats, *w))
+    w2 = [x.copy() for x in w]
+    w2[0] = w2[0].at[2].set(w2[0][2] * 2.0 + 1.0)  # perturb member 2 only
+    pert = np.asarray(committee_mlp(feats, *w2))
+    np.testing.assert_allclose(base[:2], pert[:2], rtol=1e-6)
+    assert np.abs(base[2] - pert[2]).max() > 1e-4
+
+
+def test_mxu_estimate_bounds():
+    assert 0.0 < mxu_utilization_estimate(89, 8, 17, 32) <= 1.0
+    assert mxu_utilization_estimate(128, 1, 128, 128) == pytest.approx(1.0)

@@ -1,0 +1,175 @@
+"""L2 correctness: potential/surrogate/toy committee models + train steps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+CFG = model.PotentialConfig(n_atoms=5, n_rbf=8, hidden=16, n_members=3,
+                            n_states=2, n_globals=1)
+
+
+def _batch(rng, b, cfg=CFG):
+    x = jnp.asarray(rng.randn(b, cfg.n_atoms * 3) * 2.0, dtype=jnp.float32)
+    g = jnp.asarray(rng.randn(b, cfg.n_globals), dtype=jnp.float32)
+    s = jnp.zeros((b, cfg.n_states), jnp.float32).at[:, 0].set(1.0)
+    return x, g, s
+
+
+def test_param_size_matches_init():
+    w = model.potential_init(jnp.uint32(0), CFG)
+    assert w.shape == (CFG.n_members * CFG.param_size,)
+
+
+def test_init_members_differ():
+    w = model.members_view(model.potential_init(jnp.uint32(0), CFG),
+                           CFG.n_members, CFG.param_size)
+    assert float(jnp.max(jnp.abs(w[0] - w[1]))) > 1e-3
+    assert float(jnp.max(jnp.abs(w[1] - w[2]))) > 1e-3
+
+
+def test_init_deterministic_in_seed():
+    a = model.potential_init(jnp.uint32(7), CFG)
+    b = model.potential_init(jnp.uint32(7), CFG)
+    c = model.potential_init(jnp.uint32(8), CFG)
+    np.testing.assert_allclose(a, b)
+    assert float(jnp.max(jnp.abs(a - c))) > 1e-4
+
+
+def test_fwd_shapes():
+    rng = np.random.RandomState(0)
+    x, g, s = _batch(rng, 4)
+    w = model.potential_init(jnp.uint32(0), CFG)
+    e_all, e_mean, e_std, f_mean, f_std = model.potential_fwd(w, x, g, s, CFG)
+    assert e_all.shape == (3, 4, 2)
+    assert e_mean.shape == e_std.shape == (4, 2)
+    assert f_mean.shape == f_std.shape == (4, 15)
+
+
+def test_committee_stats_ddof1():
+    y = jnp.asarray(np.random.RandomState(0).randn(4, 5, 2), jnp.float32)
+    mean, std = model.committee_stats(y)
+    np.testing.assert_allclose(mean, np.mean(np.asarray(y), axis=0), rtol=1e-5)
+    np.testing.assert_allclose(std, np.std(np.asarray(y), axis=0, ddof=1),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_forces_are_negative_gradient():
+    """f_mean == -d(mean state-weighted energy)/dx by finite differences."""
+    rng = np.random.RandomState(1)
+    x, g, s = _batch(rng, 2)
+    w = model.potential_init(jnp.uint32(3), CFG)
+    _, _, _, f_mean, _ = model.potential_fwd(w, x, g, s, CFG)
+
+    def mean_e(xx):
+        e_all, *_ = model.potential_fwd(w, xx, g, s, CFG)
+        return float(jnp.mean(jnp.sum(e_all * s[None], axis=2), axis=0).sum())
+
+    eps = 1e-3
+    xn = np.asarray(x)
+    for idx in [(0, 0), (1, 7), (0, 14)]:
+        xp, xm = xn.copy(), xn.copy()
+        xp[idx] += eps
+        xm[idx] -= eps
+        fd = (mean_e(jnp.asarray(xp)) - mean_e(jnp.asarray(xm))) / (2 * eps)
+        assert abs(-fd - float(f_mean[idx])) < 5e-2 * max(1.0, abs(fd))
+
+
+def test_euq_matches_fwd_energies():
+    rng = np.random.RandomState(2)
+    x, g, _ = _batch(rng, 3)
+    w = model.potential_init(jnp.uint32(1), CFG)
+    s = jnp.zeros((3, 2), jnp.float32).at[:, 0].set(1.0)
+    e_fwd = model.potential_fwd(w, x, g, s, CFG)[0]
+    e_euq = model.potential_euq(w, x, g, CFG)[0]
+    np.testing.assert_allclose(e_fwd, e_euq, rtol=2e-5, atol=2e-5)
+
+
+@given(seed=st.integers(0, 1000))
+def test_train_step_descends(seed):
+    """~30 Adam steps on a fixed batch must reduce the loss substantially."""
+    rng = np.random.RandomState(seed)
+    x, g, s = _batch(rng, 6)
+    y_e = jnp.asarray(rng.randn(6, 2), jnp.float32)
+    y_f = jnp.asarray(rng.randn(6, 15) * 0.1, jnp.float32)
+    w = model.potential_init(jnp.uint32(seed), CFG)[:CFG.param_size]
+    opt = jnp.zeros(CFG.opt_size, jnp.float32)
+    first = None
+    for i in range(30):
+        w, opt, loss = model.potential_train_step(w, opt, x, g, s, y_e, y_f, CFG)
+        if i == 0:
+            first = float(loss[0])
+    assert float(loss[0]) < first
+
+
+def test_adam_step_count_advances():
+    w = jnp.zeros(4, jnp.float32)
+    opt = jnp.zeros(9, jnp.float32)
+    gradv = jnp.ones(4, jnp.float32)
+    _, opt1 = model.adam_step(w, opt, gradv, 1e-3)
+    _, opt2 = model.adam_step(w, opt1, gradv, 1e-3)
+    assert float(opt1[-1]) == 1.0 and float(opt2[-1]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# surrogate
+# ---------------------------------------------------------------------------
+
+SCFG = model.SurrogateConfig(grid=8, channels=4, dense=16, n_members=3)
+
+
+def test_surrogate_shapes_and_stats():
+    rng = np.random.RandomState(0)
+    grid = jnp.asarray(rng.rand(5, 8, 8), jnp.float32)
+    w = model.surrogate_init(jnp.uint32(0), SCFG)
+    assert w.shape == (SCFG.n_members * SCFG.param_size,)
+    y_all, y_mean, y_std = model.surrogate_fwd(w, grid, SCFG)
+    assert y_all.shape == (3, 5, 2)
+    np.testing.assert_allclose(y_mean, np.mean(np.asarray(y_all), 0), rtol=1e-4, atol=1e-5)
+    assert float(jnp.min(y_std)) >= 0.0
+
+
+def test_surrogate_train_descends():
+    rng = np.random.RandomState(1)
+    grid = jnp.asarray(rng.rand(6, 8, 8), jnp.float32)
+    y = jnp.asarray(rng.randn(6, 2), jnp.float32)
+    w = model.surrogate_init(jnp.uint32(1), SCFG)[:SCFG.param_size]
+    opt = jnp.zeros(SCFG.opt_size, jnp.float32)
+    losses = []
+    for _ in range(40):
+        w, opt, loss = model.surrogate_train_step(w, opt, grid, y, SCFG)
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# toy
+# ---------------------------------------------------------------------------
+
+TCFG = model.ToyConfig()
+
+
+def test_toy_learns_identity():
+    """The SI toy setup: learn y = x (linear) to near-zero loss."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(32, 4), jnp.float32)
+    w = model.toy_init(jnp.uint32(0), TCFG)[:TCFG.param_size]
+    opt = jnp.zeros(TCFG.opt_size, jnp.float32)
+    for _ in range(300):
+        w, opt, loss = model.toy_train_step(w, opt, x, x, TCFG)
+    assert float(loss[0]) < 5e-2
+
+
+def test_toy_fwd_committee():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(7, 4), jnp.float32)
+    w = model.toy_init(jnp.uint32(0), TCFG)
+    y_all, y_mean, y_std = model.toy_fwd(w, x, TCFG)
+    assert y_all.shape == (3, 7, 4)
+    assert float(jnp.max(y_std)) > 0.0  # members differ

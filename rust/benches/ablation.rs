@@ -1,0 +1,128 @@
+//! Design-choice ablations (DESIGN.md §5): knobs the paper exposes but does
+//! not sweep — retrain_size (training-buffer threshold), uncertainty
+//! patience, and dynamic oracle-list re-scoring. Reports how each choice
+//! moves labeling/training throughput on a fixed workload.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::bench_util::{Report, Row};
+use pal::config::{AlSetting, StopCriteria};
+use pal::coordinator::selection::CommitteeStdUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+use pal::telemetry::RunReport;
+
+fn run(retrain_size: usize, dynamic: bool, threshold: f32) -> RunReport {
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-ablation".into(),
+        gene_process: 6,
+        pred_process: 2,
+        ml_process: 2,
+        orcl_process: 2,
+        retrain_size,
+        dynamic_oracle_list: dynamic,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(40),
+            max_wall: Some(Duration::from_secs(15)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let generators = (0..6usize)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(
+                    8,
+                    Duration::from_millis(1),
+                    u64::MAX,
+                    i as u64,
+                )) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..2usize)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle {
+                    label_cost: Duration::from_millis(15),
+                    out_dim: 8,
+                }) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, replica: usize| {
+        let mut m = SyntheticModel::new(
+            8,
+            8,
+            Duration::ZERO,
+            Duration::from_micros(400),
+            16,
+            mode,
+        );
+        let w: Vec<f32> = (0..64).map(|k| ((k + replica * 11) % 7) as f32 * 0.07).collect();
+        m.update(&w);
+        Box::new(m) as Box<dyn Model>
+    });
+    let utils =
+        Arc::new(move || Box::new(CommitteeStdUtils::new(threshold, 6)) as Box<dyn Utils>);
+    Workflow::new(s)
+        .run(KernelSet { generators, oracles, model, utils })
+        .unwrap()
+}
+
+fn main() {
+    // ---- retrain_size sweep: small = fresher models, more flush traffic ----
+    let mut rep = Report::new("ablation — retrain_size (training-buffer threshold)");
+    for rs in [2usize, 8, 20] {
+        let r = run(rs, false, 0.0);
+        let manager = &r.kernel("manager")[0];
+        rep.push(
+            Row::new(format!("retrain_size={rs}"))
+                .ms("makespan", r.wall)
+                .field("labels", r.oracle_labels)
+                .field("retrain_rounds", r.retrain_rounds)
+                .field("flushes", manager.counter("train_flushes"))
+                .f("weight_syncs", r.sum_counter("prediction", "weight_updates") as f64),
+        );
+    }
+    rep.print();
+    println!("(small thresholds buy model freshness with more broadcast/retrain churn)");
+
+    // ---- dynamic oracle list on/off ----
+    let mut rep2 = Report::new("ablation — dynamic_orcale_list (buffer re-scoring)");
+    for dynamic in [false, true] {
+        let r = run(4, dynamic, 0.0);
+        let manager = &r.kernel("manager")[0];
+        rep2.push(
+            Row::new(if dynamic { "on" } else { "off" })
+                .ms("makespan", r.wall)
+                .field("labels", r.oracle_labels)
+                .field("adjustments", manager.counter("adjustments"))
+                .field("queue_dropped", manager.counter("adjusted_dropped"))
+                .f("rescores", r.sum_counter("prediction", "rescores") as f64),
+        );
+    }
+    rep2.print();
+    println!("(re-scoring prunes stale queue entries at the cost of predictor cycles)");
+
+    // ---- selection threshold sweep: labeling pressure vs exploration ----
+    let mut rep3 = Report::new("ablation — committee-std selection threshold");
+    for th in [0.0f32, 0.2, 0.6] {
+        let r = run(8, false, th);
+        rep3.push(
+            Row::new(format!("threshold={th}"))
+                .ms("makespan", r.wall)
+                .field("labels", r.oracle_labels)
+                .field("selected", r.sum_counter("exchange", "selected_for_oracle"))
+                .field("iterations", r.al_iterations),
+        );
+    }
+    rep3.print();
+    println!("(higher thresholds label less per iteration; the run needs more");
+    println!(" exploration to hit the same label budget — the paper's UQ economy)");
+}

@@ -1,0 +1,165 @@
+//! Fig. 1 reproduction: serial (1a) vs parallel (1b) active learning on the
+//! same kernels and costs. Reports wall time per AL "unit of work" (one
+//! round of generate → select → label N samples → train) and the measured
+//! speedup, across three bottleneck regimes.
+//!
+//! Run: `cargo bench --bench fig1_speedup`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::bench_util::{Report, Row};
+use pal::config::{AlSetting, StopCriteria};
+use pal::coordinator::selection::SelectAllUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::serial::SerialWorkflow;
+use pal::sim::speedup::Workload;
+use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+
+struct Regime {
+    name: &'static str,
+    oracle_ms: u64,
+    epoch_us: u64,
+    epochs: usize,
+    gen_ms: u64,
+}
+
+const GENS: usize = 4;
+const ORACLES: usize = 2;
+const MODELS: usize = 2;
+const ITERS: u64 = 6;
+
+fn serial_run(r: &Regime) -> Duration {
+    let mut w = SerialWorkflow {
+        generators: (0..GENS)
+            .map(|i| {
+                Box::new(SyntheticGenerator::new(
+                    4,
+                    Duration::from_millis(r.gen_ms),
+                    u64::MAX,
+                    i as u64,
+                )) as Box<dyn Generator>
+            })
+            .collect(),
+        oracles: (0..ORACLES)
+            .map(|_| {
+                Box::new(SyntheticOracle {
+                    label_cost: Duration::from_millis(r.oracle_ms),
+                    out_dim: 4,
+                }) as Box<dyn Oracle>
+            })
+            .collect(),
+        models: (0..MODELS)
+            .map(|_| {
+                Box::new(SyntheticModel::new(
+                    4,
+                    4,
+                    Duration::ZERO,
+                    Duration::from_micros(r.epoch_us),
+                    r.epochs,
+                    Mode::Train,
+                )) as Box<dyn Model>
+            })
+            .collect(),
+        utils: Box::new(SelectAllUtils { max_per_iter: GENS }),
+        steps_per_iter: 1,
+        iterations: ITERS,
+    };
+    w.run().wall
+}
+
+fn parallel_run(r: &Regime) -> Duration {
+    let labels = ITERS * GENS as u64;
+    // equal work: the serial baseline trains r.epochs per iteration per
+    // model; require the same total epochs before stopping
+    let min_epochs = ITERS * r.epochs as u64 * MODELS as u64;
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-fig1".into(),
+        gene_process: GENS,
+        pred_process: MODELS,
+        ml_process: MODELS,
+        orcl_process: ORACLES,
+        retrain_size: GENS,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(labels),
+            min_train_epochs: min_epochs,
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let oracle_ms = r.oracle_ms;
+    let (epoch_us, epochs, gen_ms) = (r.epoch_us, r.epochs, r.gen_ms);
+    let generators = (0..GENS)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(
+                    4,
+                    Duration::from_millis(gen_ms),
+                    u64::MAX,
+                    i as u64,
+                )) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..ORACLES)
+        .map(|_| {
+            Box::new(move || {
+                Box::new(SyntheticOracle {
+                    label_cost: Duration::from_millis(oracle_ms),
+                    out_dim: 4,
+                }) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _r: usize| {
+        Box::new(SyntheticModel::new(
+            4,
+            4,
+            Duration::ZERO,
+            Duration::from_micros(epoch_us),
+            epochs,
+            mode,
+        )) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(SelectAllUtils { max_per_iter: GENS }) as Box<dyn Utils>);
+    let report = Workflow::new(s)
+        .run(KernelSet { generators, oracles, model, utils })
+        .unwrap();
+    report.wall
+}
+
+fn main() {
+    let regimes = [
+        Regime { name: "oracle-bound (DFT-like)", oracle_ms: 40, epoch_us: 500, epochs: 8, gen_ms: 1 },
+        Regime { name: "train-bound (xTB-like)", oracle_ms: 2, epoch_us: 2_000, epochs: 24, gen_ms: 1 },
+        Regime { name: "balanced (CFD-like)", oracle_ms: 20, epoch_us: 1_200, epochs: 16, gen_ms: 8 },
+    ];
+    let mut rep = Report::new(
+        "Fig. 1 — serial vs parallel AL wall time (same kernels, same label budget)",
+    );
+    for r in &regimes {
+        let ts = serial_run(r);
+        let tp = parallel_run(r);
+        // analytic lower bound from the SI §S2 model
+        let w = Workload {
+            t_oracle: r.oracle_ms as f64 / 1e3,
+            t_train: (r.epoch_us as f64 * r.epochs as f64) / 1e6,
+            t_gen: r.gen_ms as f64 / 1e3,
+            n_samples: GENS as u64,
+            p_workers: ORACLES as u64,
+        };
+        rep.push(
+            Row::new(r.name)
+                .ms("serial", ts)
+                .ms("parallel", tp)
+                .f("speedup", ts.as_secs_f64() / tp.as_secs_f64())
+                .f("analytic_lower_bound", w.speedup()),
+        );
+    }
+    rep.print();
+    println!("(paper claim: the parallel workflow overlaps labeling/training/generation;");
+    println!(" speedup >= 1 everywhere, largest where no single kernel dominates)");
+}

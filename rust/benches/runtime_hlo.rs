@@ -1,0 +1,64 @@
+//! Runtime hot path (§Perf): per-artifact execution latency on the PJRT CPU
+//! client — committee forwards at every exported batch size, the
+//! energy-only fused-Pallas euq path, and the single-member train step.
+//!
+//! Run: `cargo bench --bench runtime_hlo`
+
+use pal::bench_util::{bench, Report, Row};
+use pal::runtime::{default_artifacts_dir, Manifest, TensorIn};
+use pal::rng::Rng;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("run `make artifacts`");
+    let engine = pal::runtime::Engine::new(manifest).unwrap();
+    let mut rng = Rng::new(0);
+
+    let mut rep = Report::new("runtime — HLO artifact execution latency (PJRT CPU)");
+    let names: Vec<String> = engine
+        .manifest()
+        .entries
+        .keys()
+        .filter(|n| {
+            n.starts_with("potential_ground_fwd")
+                || n.starts_with("potential_ground1_fwd")
+                || n.starts_with("potential_ground_euq")
+                || n.starts_with("potential_photo_fwd")
+                || n.starts_with("potential_ground_train")
+                || n.starts_with("potential_ground1_train")
+                || n.starts_with("surrogate_fwd")
+                || n.starts_with("toy_fwd")
+        })
+        .cloned()
+        .collect();
+
+    for name in names {
+        let entry = engine.entry(&name).unwrap();
+        let inputs: Vec<Vec<f32>> = entry
+            .inputs
+            .iter()
+            .map(|spec| rng.uniform_vec(spec.len(), -0.5, 0.5))
+            .collect();
+        let tensor_ins: Vec<TensorIn> = inputs.iter().map(|v| TensorIn::F32(v)).collect();
+        engine.warm(&name).unwrap();
+        let stats = bench(3, 25, || engine.call(&name, &tensor_ins).unwrap());
+        let batch = entry.meta.get("batch").as_usize().unwrap_or(1);
+        rep.push(
+            Row::new(&name)
+                .ms("mean", stats.mean())
+                .ms("p99", stats.percentile(99.0))
+                .f("us_per_sample", stats.mean().as_secs_f64() * 1e6 / batch as f64),
+        );
+    }
+    rep.print();
+
+    // compile-time table (one-time cost per kernel host)
+    let mut rep2 = Report::new("runtime — one-time compile cost");
+    for name in ["potential_ground_fwd_b89", "potential_ground_train_t32", "toy_fwd_b20"] {
+        let m2 = Manifest::load(&dir).unwrap();
+        let e2 = pal::runtime::Engine::new(m2).unwrap();
+        let ns = e2.warm(name).unwrap();
+        rep2.push(Row::new(name).f("compile_ms", ns as f64 / 1e6));
+    }
+    rep2.print();
+}

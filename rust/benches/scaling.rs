@@ -1,0 +1,94 @@
+//! Scaling sweep (abstract claim: "significant speed-ups through
+//! asynchronous parallelization"): labeling throughput and makespan vs the
+//! number of parallel oracle workers P, at fixed oracle cost.
+//!
+//! Run: `cargo bench --bench scaling`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::bench_util::{Report, Row};
+use pal::config::{AlSetting, StopCriteria};
+use pal::coordinator::selection::SelectAllUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+
+const LABELS: u64 = 48;
+const ORACLE_MS: u64 = 25;
+
+fn run_p(p: usize) -> (Duration, u64) {
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-scaling".into(),
+        gene_process: 8,
+        pred_process: 2,
+        ml_process: 2,
+        orcl_process: p,
+        retrain_size: 16,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(LABELS),
+            max_wall: Some(Duration::from_secs(120)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let generators = (0..8usize)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(
+                    4,
+                    Duration::from_micros(200),
+                    u64::MAX,
+                    i as u64,
+                )) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..p)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle {
+                    label_cost: Duration::from_millis(ORACLE_MS),
+                    out_dim: 4,
+                }) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(|mode: Mode, _r: usize| {
+        Box::new(SyntheticModel::new(
+            4,
+            4,
+            Duration::ZERO,
+            Duration::from_micros(300),
+            16,
+            mode,
+        )) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(SelectAllUtils { max_per_iter: 8 }) as Box<dyn Utils>);
+    let report = Workflow::new(s)
+        .run(KernelSet { generators, oracles, model, utils })
+        .unwrap();
+    (report.wall, report.oracle_labels)
+}
+
+fn main() {
+    let mut rep = Report::new(&format!(
+        "Scaling — {LABELS} labels at {ORACLE_MS} ms/label vs oracle workers P"
+    ));
+    let mut t1 = None;
+    for p in [1usize, 2, 4, 8, 16] {
+        let (wall, labels) = run_p(p);
+        let thpt = labels as f64 / wall.as_secs_f64();
+        let t1v = *t1.get_or_insert(wall.as_secs_f64());
+        rep.push(
+            Row::new(format!("P={p}"))
+                .ms("makespan", wall)
+                .f("labels_per_s", thpt)
+                .f("speedup_vs_P1", t1v / wall.as_secs_f64())
+                .f("ideal", p as f64),
+        );
+    }
+    rep.print();
+    println!("(sub-linear tail expected once labeling stops being the bottleneck)");
+}

@@ -1,0 +1,185 @@
+//! Micro-benchmark harness (offline `criterion` substitute).
+//!
+//! Each bench target is a plain binary (`harness = false`); this module
+//! provides warmup + timed sampling with mean/p50/p99 reporting and a
+//! markdown table writer so bench output can be pasted into
+//! EXPERIMENTS.md directly.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from discarding a value (stable-rust black_box).
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+/// Timing statistics over samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    fn sorted(&self) -> Vec<Duration> {
+        let mut s = self.samples.clone();
+        s.sort();
+        s
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let s = self.sorted();
+        if s.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((s.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or(Duration::ZERO)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean().as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` for `warmup` unmeasured iterations then `samples` measured ones.
+pub fn bench<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        black_box(f());
+        out.push(t0.elapsed());
+    }
+    Stats { samples: out }
+}
+
+/// One row of a bench report.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub fields: Vec<(String, String)>,
+}
+
+impl Row {
+    pub fn new(name: impl Into<String>) -> Self {
+        Row { name: name.into(), fields: vec![] }
+    }
+
+    pub fn field(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        self.fields.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn ms(self, key: &str, d: Duration) -> Self {
+        let v = format!("{:.3}", d.as_secs_f64() * 1e3);
+        self.field(key, v)
+    }
+
+    pub fn f(self, key: &str, v: f64) -> Self {
+        let s = format!("{v:.3}");
+        self.field(key, s)
+    }
+}
+
+/// Markdown table printer: collects rows, prints an aligned table.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), rows: vec![] }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render as a GitHub-markdown table.
+    pub fn render(&self) -> String {
+        let mut out = format!("\n### {}\n\n", self.title);
+        if self.rows.is_empty() {
+            return out;
+        }
+        let mut cols: Vec<String> = vec!["case".into()];
+        for r in &self.rows {
+            for (k, _) in &r.fields {
+                if !cols.contains(k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        out.push('|');
+        for c in &cols {
+            out.push_str(&format!(" {c} |"));
+        }
+        out.push_str("\n|");
+        for _ in &cols {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push('|');
+            out.push_str(&format!(" {} |", r.name));
+            for c in cols.iter().skip(1) {
+                let v = r
+                    .fields
+                    .iter()
+                    .find(|(k, _)| k == c)
+                    .map(|(_, v)| v.as_str())
+                    .unwrap_or("");
+                out.push_str(&format!(" {v} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench(2, 10, || 1 + 1);
+        assert_eq!(s.samples.len(), 10);
+        assert!(s.mean() < Duration::from_millis(1));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let s = bench(0, 20, || std::thread::sleep(Duration::from_micros(100)));
+        assert!(s.percentile(50.0) <= s.percentile(99.0));
+        assert!(s.min() <= s.mean());
+    }
+
+    #[test]
+    fn report_renders_markdown() {
+        let mut rep = Report::new("test table");
+        rep.push(Row::new("a").field("x", 1).f("y", 2.5));
+        rep.push(Row::new("b").field("x", 3));
+        let md = rep.render();
+        assert!(md.contains("### test table"));
+        assert!(md.contains("| a | 1 | 2.500 |"));
+        assert!(md.contains("| b | 3 |  |"));
+    }
+}

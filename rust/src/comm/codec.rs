@@ -1,0 +1,152 @@
+//! Packing structured data into flat f32 payloads.
+//!
+//! The paper fixes the MPI wire format to 1-D numerical arrays; anything
+//! structured (a list of per-generator arrays, an (input, label) pair, a
+//! batch of labeled datapoints) is packed with a small numeric header:
+//!
+//! ```text
+//! [ count, len_0, len_1, ..., len_{count-1}, data_0..., data_1..., ... ]
+//! ```
+//!
+//! Lengths are exact in f32 up to 2^24 elements — far beyond any message
+//! here; [`pack`] asserts the bound. This mirrors the paper's
+//! `fixed_size_data=False` mode where "sizes of data are passed first for
+//! every MPI communication" (§S3), just fused into one message.
+
+/// Maximum exactly-representable length in an f32 header.
+pub const MAX_LEN: usize = 1 << 24;
+
+/// Pack a list of arrays into one flat payload.
+pub fn pack(parts: &[&[f32]]) -> Vec<f32> {
+    assert!(parts.len() < MAX_LEN, "too many parts");
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(1 + parts.len() + total);
+    out.push(parts.len() as f32);
+    for p in parts {
+        assert!(p.len() < MAX_LEN, "part too long for f32 header");
+        out.push(p.len() as f32);
+    }
+    for p in parts {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Pack a list of owned arrays.
+pub fn pack_vecs(parts: &[Vec<f32>]) -> Vec<f32> {
+    pack(&parts.iter().map(|p| p.as_slice()).collect::<Vec<_>>())
+}
+
+/// Unpack a payload produced by [`pack`]. Returns `None` on malformed input.
+pub fn unpack(data: &[f32]) -> Option<Vec<Vec<f32>>> {
+    let count = *data.first()? as usize;
+    if count >= MAX_LEN {
+        return None;
+    }
+    let mut lens = Vec::with_capacity(count);
+    for i in 0..count {
+        let l = *data.get(1 + i)? as usize;
+        if l >= MAX_LEN {
+            return None;
+        }
+        lens.push(l);
+    }
+    let mut off = 1 + count;
+    let mut out = Vec::with_capacity(count);
+    for l in lens {
+        let end = off.checked_add(l)?;
+        out.push(data.get(off..end)?.to_vec());
+        off = end;
+    }
+    if off != data.len() {
+        return None; // trailing garbage
+    }
+    Some(out)
+}
+
+/// Pack labeled datapoints `[(input, label), ...]` (the yellow flow of
+/// Fig. 4: controller → training kernel).
+pub fn pack_datapoints(points: &[(Vec<f32>, Vec<f32>)]) -> Vec<f32> {
+    let mut parts: Vec<&[f32]> = Vec::with_capacity(points.len() * 2);
+    for (x, y) in points {
+        parts.push(x);
+        parts.push(y);
+    }
+    pack(&parts)
+}
+
+/// Inverse of [`pack_datapoints`].
+pub fn unpack_datapoints(data: &[f32]) -> Option<Vec<(Vec<f32>, Vec<f32>)>> {
+    let parts = unpack(data)?;
+    if parts.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(parts.len() / 2);
+    let mut it = parts.into_iter();
+    while let (Some(x), Some(y)) = (it.next(), it.next()) {
+        out.push((x, y));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0];
+        let c: Vec<f32> = vec![];
+        let packed = pack(&[&a, &b, &c]);
+        assert_eq!(unpack(&packed).unwrap(), vec![a, b, c]);
+    }
+
+    #[test]
+    fn roundtrip_empty_list() {
+        let packed = pack(&[]);
+        assert_eq!(unpack(&packed).unwrap(), Vec::<Vec<f32>>::new());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let packed = pack(&[&[1.0, 2.0, 3.0]]);
+        assert!(unpack(&packed[..packed.len() - 1]).is_none());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut packed = pack(&[&[1.0]]);
+        packed.push(9.0);
+        assert!(unpack(&packed).is_none());
+    }
+
+    #[test]
+    fn rejects_empty_input() {
+        assert!(unpack(&[]).is_none());
+    }
+
+    #[test]
+    fn datapoints_roundtrip() {
+        let pts = vec![
+            (vec![1.0, 2.0], vec![0.5]),
+            (vec![3.0], vec![0.25, 0.75]),
+        ];
+        let packed = pack_datapoints(&pts);
+        assert_eq!(unpack_datapoints(&packed).unwrap(), pts);
+    }
+
+    #[test]
+    fn datapoints_odd_parts_rejected() {
+        let packed = pack(&[&[1.0], &[2.0], &[3.0]]); // 3 parts: not pairs
+        assert!(unpack_datapoints(&packed).is_none());
+    }
+
+    #[test]
+    fn large_payload_roundtrip() {
+        let big: Vec<f32> = (0..100_000).map(|i| i as f32).collect();
+        let packed = pack(&[&big]);
+        let got = unpack(&packed).unwrap();
+        assert_eq!(got[0], big);
+    }
+}

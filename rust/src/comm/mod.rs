@@ -1,0 +1,25 @@
+//! MPI-work-alike message passing substrate.
+//!
+//! PAL (the paper) runs every kernel instance as an MPI process and moves
+//! data as 1-D numpy arrays. This module reproduces that model in-process:
+//! a [`World`] of `n` ranks, one [`Endpoint`] per rank (owned by that
+//! kernel's host thread), tagged point-to-point messages with MPI-style
+//! matching (`recv(src, tag)`), non-blocking probes (the paper's
+//! `req_data.Test()`), and the collective patterns the controller uses
+//! (broadcast / gather / scatter).
+//!
+//! Payloads are flat `Vec<f32>` — exactly the paper's convention ("data
+//! transferred among kernels should be arranged as 1-D Numpy numerical
+//! arrays"). Structured data (lists of arrays, labeled pairs) is packed
+//! with [`codec`].
+//!
+//! For the speedup/overhead benches a per-message latency can be injected
+//! ([`World::with_latency`]); messages only become visible to `recv` after
+//! their simulated arrival time, modeling a real interconnect without
+//! blocking the sender.
+
+pub mod bus;
+pub mod codec;
+pub mod protocol;
+
+pub use bus::{Endpoint, Message, RecvError, World};

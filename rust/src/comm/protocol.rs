@@ -1,0 +1,96 @@
+//! Wire protocol: tags and message conventions between PAL kernels.
+//!
+//! Mirrors the data flows of the paper's Fig. 4:
+//!
+//! * **red** — generators → (gather) → Exchange → (bcast) → predictors
+//! * **blue** — predictors → (gather) → Exchange → `prediction_check` →
+//!   (scatter) → generators
+//! * **green** — Exchange → Manager (selected inputs) → oracle → Manager
+//! * **yellow** — Manager → (bcast) → trainers (labeled datapoints)
+//! * weights — trainer *i* → predictor *i* directly (paper §2.4: "trained
+//!   model weights are periodically copied directly to the prediction
+//!   kernel")
+//! * control — stop requests to Manager; shutdown fan-out from Manager.
+
+/// generator → Exchange: `[stop_flag, data_to_pred...]` (red flow).
+pub const TAG_GEN_TO_PRED: u32 = 10;
+/// Exchange → predictors: packed list of per-generator inputs (red flow).
+pub const TAG_PRED_IN: u32 = 11;
+/// predictor → Exchange: packed list of per-generator predictions (blue).
+pub const TAG_PRED_OUT: u32 = 12;
+/// Exchange → generators: checked prediction for that generator (blue).
+pub const TAG_GENE_IN: u32 = 13;
+/// generator → Exchange: 1-element size header preceding the payload, sent
+/// only when `fixed_size_data = false` (SI §S3: "sizes of data are passed
+/// first for every MPI communication ... thus lower efficiency").
+pub const TAG_GEN_SIZE: u32 = 14;
+
+/// Exchange → Manager: packed list of inputs selected for labeling (green).
+pub const TAG_ORCL_SELECT: u32 = 20;
+/// Manager → oracle: one input to label (green).
+pub const TAG_TO_ORACLE: u32 = 21;
+/// oracle → Manager: packed `[input, label]` (green).
+pub const TAG_ORACLE_RESULT: u32 = 22;
+
+/// Manager → trainers: packed labeled datapoints (yellow).
+pub const TAG_TRAIN_DATA: u32 = 30;
+/// trainer i → predictor i: flat weight array.
+pub const TAG_WEIGHTS: u32 = 31;
+/// trainer → Manager: `[loss]` after a retraining round (telemetry).
+pub const TAG_RETRAIN_DONE: u32 = 32;
+
+/// Manager → predictors: packed oracle-buffer inputs for re-scoring
+/// (`dynamic_orcale_list`, SI Utilities).
+pub const TAG_RESCORE_REQ: u32 = 40;
+/// predictor → Manager: packed per-input predictions.
+pub const TAG_RESCORE_RESP: u32 = 41;
+
+/// any kernel → Manager: request workflow shutdown (`stop_run = true`).
+pub const TAG_STOP: u32 = 90;
+/// Manager → everyone: drain and exit.
+pub const TAG_SHUTDOWN: u32 = 91;
+
+/// Encode a generator's step message: `[stop_flag, data...]`.
+pub fn encode_gen(stop: bool, data: &[f32]) -> Vec<f32> {
+    let mut v = Vec::with_capacity(1 + data.len());
+    v.push(if stop { 1.0 } else { 0.0 });
+    v.extend_from_slice(data);
+    v
+}
+
+/// Decode a generator's step message.
+pub fn decode_gen(msg: &[f32]) -> (bool, &[f32]) {
+    let stop = msg.first().map(|&f| f != 0.0).unwrap_or(false);
+    (stop, msg.get(1..).unwrap_or(&[]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_encoding_roundtrip() {
+        let enc = encode_gen(true, &[1.0, 2.0]);
+        let (stop, data) = decode_gen(&enc);
+        assert!(stop);
+        assert_eq!(data, &[1.0, 2.0]);
+        let enc = encode_gen(false, &[]);
+        let (stop, data) = decode_gen(&enc);
+        assert!(!stop);
+        assert!(data.is_empty());
+    }
+
+    #[test]
+    fn tags_are_distinct() {
+        let tags = [
+            TAG_GEN_TO_PRED, TAG_PRED_IN, TAG_PRED_OUT, TAG_GENE_IN, TAG_GEN_SIZE,
+            TAG_ORCL_SELECT, TAG_TO_ORACLE, TAG_ORACLE_RESULT,
+            TAG_TRAIN_DATA, TAG_WEIGHTS, TAG_RETRAIN_DONE,
+            TAG_RESCORE_REQ, TAG_RESCORE_RESP, TAG_STOP, TAG_SHUTDOWN,
+        ];
+        let mut sorted = tags.to_vec();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), tags.len());
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration: the paper's `AL_SETTING` dict (SI §S3) as a typed struct,
+//! plus the rank topology derived from it.
+
+mod settings;
+pub mod topology;
+
+pub use settings::{AlSetting, StopCriteria};
+pub use topology::Topology;

@@ -1,0 +1,309 @@
+//! `AL_SETTING` (SI §S3) as a typed, validated struct.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use crate::json::{self, obj, Value};
+
+/// Workflow-level stop criteria (ours; the paper leaves stopping to
+/// user-defined kernel logic, these bound a run for benches/tests).
+#[derive(Debug, Clone)]
+pub struct StopCriteria {
+    /// Stop after this many Exchange iterations (None = unbounded).
+    pub max_iterations: Option<u64>,
+    /// Stop after this many oracle labels (None = unbounded).
+    pub max_labels: Option<u64>,
+    /// When `max_labels` is set, additionally require this many completed
+    /// retraining rounds before stopping — "equal work" semantics for
+    /// speedup comparisons against the serial baseline (which always trains
+    /// after labeling).
+    pub min_retrain_rounds: u64,
+    /// When `max_labels` is set, additionally require this many total
+    /// training epochs across trainers (equal-work comparisons; interrupts
+    /// make *rounds* variable-sized, epochs are the stable unit).
+    pub min_train_epochs: u64,
+    /// Wall-clock budget.
+    pub max_wall: Option<Duration>,
+}
+
+impl Default for StopCriteria {
+    fn default() -> Self {
+        StopCriteria {
+            max_iterations: None,
+            max_labels: None,
+            min_retrain_rounds: 0,
+            min_train_epochs: 0,
+            max_wall: None,
+        }
+    }
+}
+
+/// Mirror of the paper's `AL_SETTING` (SI §S3) plus reproduction-specific
+/// knobs. Field names follow the paper where a counterpart exists.
+#[derive(Debug, Clone)]
+pub struct AlSetting {
+    /// Directory for metadata/results (`result_dir`).
+    pub result_dir: String,
+    /// Number of prediction processes (`pred_process`).
+    pub pred_process: usize,
+    /// Number of oracle processes (`orcl_process`).
+    pub orcl_process: usize,
+    /// Number of generator processes (`gene_process`).
+    pub gene_process: usize,
+    /// Number of training processes (`ml_process`).
+    pub ml_process: usize,
+    /// Fixed-size messages (`fixed_size_data`). When false, payloads carry
+    /// a size header on every exchange (extra overhead, see §4).
+    pub fixed_size_data: bool,
+    /// Seconds between progress snapshots (`progress_save_interval`).
+    pub progress_save_interval: Duration,
+    /// Labeled samples buffered before a retraining broadcast
+    /// (`retrain_size`).
+    pub retrain_size: usize,
+    /// Re-score the oracle buffer with fresh models after each retraining
+    /// (`dynamic_orcale_list` — the paper's spelling).
+    pub dynamic_oracle_list: bool,
+    /// Task placement per node (`task_per_node`) — informational in the
+    /// single-node reproduction, but validated for shape.
+    pub task_per_node: Option<Vec<usize>>,
+    /// Simulated per-message interconnect latency (reproduction knob;
+    /// 0 = in-process).
+    pub comm_latency: Duration,
+    /// Deterministic seed for all kernel RNG streams.
+    pub seed: u64,
+    /// Workflow stop criteria.
+    pub stop: StopCriteria,
+    /// Max epochs per retraining round before the trainer yields to check
+    /// for new data (bounded version of the paper's `max_epo`).
+    pub epochs_per_round: usize,
+    /// Blocking-receive granularity; every blocking wait polls shutdown at
+    /// this period.
+    pub poll_interval: Duration,
+}
+
+impl Default for AlSetting {
+    fn default() -> Self {
+        AlSetting {
+            result_dir: "results/run".into(),
+            pred_process: 1,
+            orcl_process: 1,
+            gene_process: 1,
+            ml_process: 1,
+            fixed_size_data: true,
+            progress_save_interval: Duration::from_secs(60),
+            retrain_size: 20,
+            dynamic_oracle_list: false,
+            task_per_node: None,
+            comm_latency: Duration::ZERO,
+            seed: 0,
+            stop: StopCriteria::default(),
+            epochs_per_round: 32,
+            poll_interval: Duration::from_millis(2),
+        }
+    }
+}
+
+impl AlSetting {
+    /// The SI toy configuration (3 predictors, 5 oracles, 20 generators,
+    /// 3 trainers), bounded for tests.
+    pub fn default_toy() -> Self {
+        AlSetting {
+            result_dir: "results/toy".into(),
+            pred_process: 3,
+            orcl_process: 5,
+            gene_process: 20,
+            ml_process: 3,
+            retrain_size: 20,
+            stop: StopCriteria {
+                max_iterations: Some(200),
+                max_labels: Some(200),
+                max_wall: Some(Duration::from_secs(60)),
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Validate invariants the coordinator relies on.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.pred_process == 0 || self.gene_process == 0 {
+            bail!("pred_process and gene_process must be >= 1");
+        }
+        if self.ml_process > 0 && self.ml_process != self.pred_process {
+            // paper §2.4: "An equal number of ML models as in the prediction
+            // kernel are trained in parallel within the training kernel"
+            bail!(
+                "ml_process ({}) must equal pred_process ({}) or be 0 (training disabled)",
+                self.ml_process,
+                self.pred_process
+            );
+        }
+        if self.ml_process > 0 && self.retrain_size == 0 {
+            bail!("retrain_size must be >= 1 when training is enabled");
+        }
+        if let Some(tpn) = &self.task_per_node {
+            let total: usize = tpn.iter().sum();
+            let want = self.pred_process + self.orcl_process + self.gene_process + self.ml_process + 2;
+            if total != want {
+                bail!("task_per_node sums to {total}, expected {want}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Oracle+training kernels disabled → pure prediction-generation loop
+    /// (paper §2.5: "can be disabled to convert PAL into a
+    /// prediction-generation workflow").
+    pub fn is_inference_only(&self) -> bool {
+        self.orcl_process == 0 && self.ml_process == 0
+    }
+
+    /// Parse from JSON (same field names as SI §S3 where applicable).
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).context("AL setting is not valid JSON")?;
+        let mut s = AlSetting::default();
+        if let Some(x) = v.get("result_dir").as_str() {
+            s.result_dir = x.to_string();
+        }
+        if let Some(x) = v.get("pred_process").as_usize() {
+            s.pred_process = x;
+        }
+        if let Some(x) = v.get("orcl_process").as_usize() {
+            s.orcl_process = x;
+        }
+        if let Some(x) = v.get("gene_process").as_usize() {
+            s.gene_process = x;
+        }
+        if let Some(x) = v.get("ml_process").as_usize() {
+            s.ml_process = x;
+        }
+        if let Some(x) = v.get("fixed_size_data").as_bool() {
+            s.fixed_size_data = x;
+        }
+        if let Some(x) = v.get("progress_save_interval").as_f64() {
+            s.progress_save_interval = Duration::from_secs_f64(x);
+        }
+        if let Some(x) = v.get("retrain_size").as_usize() {
+            s.retrain_size = x;
+        }
+        if let Some(x) = v.get("dynamic_orcale_list").as_bool() {
+            s.dynamic_oracle_list = x;
+        }
+        if let Some(x) = v.get("dynamic_oracle_list").as_bool() {
+            s.dynamic_oracle_list = x;
+        }
+        if let Some(arr) = v.get("task_per_node").as_array() {
+            s.task_per_node =
+                Some(arr.iter().filter_map(|x| x.as_usize()).collect());
+        }
+        if let Some(x) = v.get("comm_latency_ms").as_f64() {
+            s.comm_latency = Duration::from_secs_f64(x / 1e3);
+        }
+        if let Some(x) = v.get("seed").as_f64() {
+            s.seed = x as u64;
+        }
+        if let Some(x) = v.get("max_iterations").as_f64() {
+            s.stop.max_iterations = Some(x as u64);
+        }
+        if let Some(x) = v.get("max_labels").as_f64() {
+            s.stop.max_labels = Some(x as u64);
+        }
+        if let Some(x) = v.get("max_wall_s").as_f64() {
+            s.stop.max_wall = Some(Duration::from_secs_f64(x));
+        }
+        if let Some(x) = v.get("epochs_per_round").as_usize() {
+            s.epochs_per_round = x;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Serialize (for progress snapshots / reproducibility records).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("result_dir", Value::Str(self.result_dir.clone())),
+            ("pred_process", Value::Num(self.pred_process as f64)),
+            ("orcl_process", Value::Num(self.orcl_process as f64)),
+            ("gene_process", Value::Num(self.gene_process as f64)),
+            ("ml_process", Value::Num(self.ml_process as f64)),
+            ("fixed_size_data", Value::Bool(self.fixed_size_data)),
+            (
+                "progress_save_interval",
+                Value::Num(self.progress_save_interval.as_secs_f64()),
+            ),
+            ("retrain_size", Value::Num(self.retrain_size as f64)),
+            ("dynamic_orcale_list", Value::Bool(self.dynamic_oracle_list)),
+            ("comm_latency_ms", Value::Num(self.comm_latency.as_secs_f64() * 1e3)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("epochs_per_round", Value::Num(self.epochs_per_round as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        AlSetting::default().validate().unwrap();
+        AlSetting::default_toy().validate().unwrap();
+    }
+
+    #[test]
+    fn trainer_predictor_parity_enforced() {
+        let s = AlSetting { pred_process: 3, ml_process: 2, ..Default::default() };
+        assert!(s.validate().is_err());
+        let ok = AlSetting { pred_process: 3, ml_process: 3, ..Default::default() };
+        assert!(ok.validate().is_ok());
+        let disabled = AlSetting { pred_process: 3, ml_process: 0, ..Default::default() };
+        assert!(disabled.validate().is_ok());
+    }
+
+    #[test]
+    fn zero_generators_rejected() {
+        let s = AlSetting { gene_process: 0, ..Default::default() };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn task_per_node_sum_checked() {
+        let mut s = AlSetting::default_toy();
+        s.task_per_node = Some(vec![1, 2]);
+        assert!(s.validate().is_err());
+        let want = s.pred_process + s.orcl_process + s.gene_process + s.ml_process + 2;
+        s.task_per_node = Some(vec![want / 2, want - want / 2]);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = AlSetting::default_toy();
+        let text = json::to_string(&s.to_json());
+        let s2 = AlSetting::from_json(&text).unwrap();
+        assert_eq!(s2.pred_process, s.pred_process);
+        assert_eq!(s2.gene_process, s.gene_process);
+        assert_eq!(s2.retrain_size, s.retrain_size);
+        assert_eq!(s2.fixed_size_data, s.fixed_size_data);
+    }
+
+    #[test]
+    fn json_accepts_paper_field_spelling() {
+        let s = AlSetting::from_json(
+            r#"{"pred_process": 2, "ml_process": 2, "dynamic_orcale_list": true,
+                "retrain_size": 5}"#,
+        )
+        .unwrap();
+        assert!(s.dynamic_oracle_list);
+        assert_eq!(s.retrain_size, 5);
+    }
+
+    #[test]
+    fn inference_only_detection() {
+        let mut s = AlSetting::default();
+        s.orcl_process = 0;
+        s.ml_process = 0;
+        assert!(s.is_inference_only());
+    }
+}

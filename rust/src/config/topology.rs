@@ -1,0 +1,161 @@
+//! Rank topology: the paper's process layout.
+//!
+//! "The total number of processes initialized by PAL should be the summation
+//! of processes in the four kernels with two additional processes for the
+//! Controller" (SI §S3). Rank 0 is the Manager sub-kernel, rank 1 the
+//! Exchange sub-kernel (Fig. 2's two controller boxes), then prediction,
+//! training, generator, and oracle ranks in contiguous blocks.
+
+use super::AlSetting;
+
+/// Derived rank layout for one workflow run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub pred: std::ops::Range<usize>,
+    pub train: std::ops::Range<usize>,
+    pub gene: std::ops::Range<usize>,
+    pub orcl: std::ops::Range<usize>,
+}
+
+/// Manager controller rank (buffers, oracle dispatch, shutdown).
+pub const MANAGER: usize = 0;
+/// Exchange controller rank (high-frequency generator↔prediction loop).
+pub const EXCHANGE: usize = 1;
+
+impl Topology {
+    pub fn new(s: &AlSetting) -> Self {
+        let pred_start = 2;
+        let train_start = pred_start + s.pred_process;
+        let gene_start = train_start + s.ml_process;
+        let orcl_start = gene_start + s.gene_process;
+        Topology {
+            pred: pred_start..train_start,
+            train: train_start..gene_start,
+            gene: gene_start..orcl_start,
+            orcl: orcl_start..orcl_start + s.orcl_process,
+        }
+    }
+
+    /// Total number of ranks (kernels + 2 controller sub-kernels).
+    pub fn n_ranks(&self) -> usize {
+        self.orcl.end
+    }
+
+    pub fn pred_ranks(&self) -> Vec<usize> {
+        self.pred.clone().collect()
+    }
+
+    pub fn train_ranks(&self) -> Vec<usize> {
+        self.train.clone().collect()
+    }
+
+    pub fn gene_ranks(&self) -> Vec<usize> {
+        self.gene.clone().collect()
+    }
+
+    pub fn orcl_ranks(&self) -> Vec<usize> {
+        self.orcl.clone().collect()
+    }
+
+    /// The predictor that trainer `train_rank` pushes weights to
+    /// (paper: prediction models are replicas of training models, 1:1).
+    pub fn predictor_for_trainer(&self, train_rank: usize) -> usize {
+        debug_assert!(self.train.contains(&train_rank));
+        self.pred.start + (train_rank - self.train.start)
+    }
+
+    /// Index of a generator rank within the generator kernel (0-based),
+    /// used to order scatter lists ("sorted by the rank of generator").
+    pub fn gene_index(&self, rank: usize) -> usize {
+        debug_assert!(self.gene.contains(&rank));
+        rank - self.gene.start
+    }
+
+    /// Which kernel a rank belongs to (for telemetry labels).
+    pub fn kernel_of(&self, rank: usize) -> &'static str {
+        if rank == MANAGER {
+            "manager"
+        } else if rank == EXCHANGE {
+            "exchange"
+        } else if self.pred.contains(&rank) {
+            "prediction"
+        } else if self.train.contains(&rank) {
+            "training"
+        } else if self.gene.contains(&rank) {
+            "generator"
+        } else if self.orcl.contains(&rank) {
+            "oracle"
+        } else {
+            "unknown"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Topology {
+        Topology::new(&AlSetting::default_toy())
+    }
+
+    #[test]
+    fn layout_matches_si_example() {
+        // SI §S3: 3 pred + 5 orcl + 20 gene + 3 ml + 2 controller = 33
+        let t = toy();
+        assert_eq!(t.n_ranks(), 33);
+        assert_eq!(t.pred, 2..5);
+        assert_eq!(t.train, 5..8);
+        assert_eq!(t.gene, 8..28);
+        assert_eq!(t.orcl, 28..33);
+    }
+
+    #[test]
+    fn blocks_are_disjoint_and_cover() {
+        let t = toy();
+        let mut seen = vec![0u8; t.n_ranks()];
+        seen[MANAGER] += 1;
+        seen[EXCHANGE] += 1;
+        for r in t.pred_ranks().into_iter()
+            .chain(t.train_ranks())
+            .chain(t.gene_ranks())
+            .chain(t.orcl_ranks())
+        {
+            seen[r] += 1;
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn trainer_predictor_pairing() {
+        let t = toy();
+        assert_eq!(t.predictor_for_trainer(5), 2);
+        assert_eq!(t.predictor_for_trainer(7), 4);
+    }
+
+    #[test]
+    fn kernel_labels() {
+        let t = toy();
+        assert_eq!(t.kernel_of(0), "manager");
+        assert_eq!(t.kernel_of(1), "exchange");
+        assert_eq!(t.kernel_of(2), "prediction");
+        assert_eq!(t.kernel_of(5), "training");
+        assert_eq!(t.kernel_of(8), "generator");
+        assert_eq!(t.kernel_of(28), "oracle");
+    }
+
+    #[test]
+    fn disabled_kernels_shrink_world() {
+        let s = AlSetting {
+            pred_process: 2,
+            ml_process: 0,
+            orcl_process: 0,
+            gene_process: 4,
+            ..Default::default()
+        };
+        let t = Topology::new(&s);
+        assert_eq!(t.n_ranks(), 8);
+        assert!(t.train_ranks().is_empty());
+        assert!(t.orcl_ranks().is_empty());
+    }
+}

@@ -1,0 +1,179 @@
+//! Manager-side buffers: oracle input buffer + training data buffer
+//! (the "metadata storage" of §2.5).
+
+use std::collections::VecDeque;
+
+use crate::data::Datapoint;
+
+/// FIFO of inputs awaiting oracle labeling, with optional capacity bound
+/// (backpressure: when full, the oldest *lowest-priority* entries are
+/// dropped — the controller decided they were stale).
+#[derive(Debug, Default)]
+pub struct OracleBuffer {
+    queue: VecDeque<Vec<f32>>,
+    /// Hard cap; None = unbounded.
+    pub capacity: Option<usize>,
+    /// Total samples ever enqueued / dropped (telemetry).
+    pub enqueued: u64,
+    pub dropped: u64,
+}
+
+impl OracleBuffer {
+    pub fn new(capacity: Option<usize>) -> Self {
+        OracleBuffer { capacity, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue inputs; drops from the *back* (newest beyond cap) under
+    /// pressure — entries already ordered by priority by `prediction_check`
+    /// / `adjust_input_for_oracle`.
+    pub fn push_all(&mut self, inputs: Vec<Vec<f32>>) {
+        for x in inputs {
+            self.enqueued += 1;
+            self.queue.push_back(x);
+        }
+        if let Some(cap) = self.capacity {
+            while self.queue.len() > cap {
+                self.queue.pop_back();
+                self.dropped += 1;
+            }
+        }
+    }
+
+    /// Next input for a free oracle.
+    pub fn pop(&mut self) -> Option<Vec<f32>> {
+        self.queue.pop_front()
+    }
+
+    /// Drain all buffered inputs (for `adjust_input_for_oracle` re-scoring).
+    pub fn drain(&mut self) -> Vec<Vec<f32>> {
+        self.queue.drain(..).collect()
+    }
+
+    /// Replace contents (after user adjustment). The adjusted list must be
+    /// a sub-multiset of the drained one — validated by the caller in
+    /// debug builds.
+    pub fn replace(&mut self, inputs: Vec<Vec<f32>>) {
+        self.queue = inputs.into();
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Vec<f32>> {
+        self.queue.iter()
+    }
+}
+
+/// Labeled data accumulating toward a retraining broadcast (§2.5:
+/// "distributed to the ML models in the training kernel once the buffer
+/// size reaches a user-defined threshold").
+#[derive(Debug, Default)]
+pub struct TrainBuffer {
+    buf: Vec<Datapoint>,
+    pub threshold: usize,
+    /// Total datapoints ever flushed (telemetry).
+    pub flushed: u64,
+}
+
+impl TrainBuffer {
+    pub fn new(threshold: usize) -> Self {
+        TrainBuffer { buf: vec![], threshold: threshold.max(1), flushed: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, point: Datapoint) {
+        self.buf.push(point);
+    }
+
+    pub fn ready(&self) -> bool {
+        self.buf.len() >= self.threshold
+    }
+
+    /// Take the accumulated batch if the threshold is met.
+    pub fn flush(&mut self) -> Option<Vec<Datapoint>> {
+        if !self.ready() {
+            return None;
+        }
+        self.flushed += self.buf.len() as u64;
+        Some(std::mem::take(&mut self.buf))
+    }
+
+    /// Unconditional drain (shutdown path: don't lose labeled data).
+    pub fn flush_all(&mut self) -> Vec<Datapoint> {
+        self.flushed += self.buf.len() as u64;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_buffer_fifo() {
+        let mut b = OracleBuffer::new(None);
+        b.push_all(vec![vec![1.0], vec![2.0]]);
+        assert_eq!(b.pop().unwrap(), vec![1.0]);
+        assert_eq!(b.pop().unwrap(), vec![2.0]);
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn oracle_buffer_caps_dropping_newest() {
+        let mut b = OracleBuffer::new(Some(2));
+        b.push_all(vec![vec![1.0], vec![2.0], vec![3.0]]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.dropped, 1);
+        assert_eq!(b.pop().unwrap(), vec![1.0]); // priority head kept
+    }
+
+    #[test]
+    fn oracle_buffer_drain_replace() {
+        let mut b = OracleBuffer::new(None);
+        b.push_all(vec![vec![1.0], vec![2.0], vec![3.0]]);
+        let drained = b.drain();
+        assert_eq!(drained.len(), 3);
+        assert!(b.is_empty());
+        b.replace(vec![drained[2].clone(), drained[0].clone()]);
+        assert_eq!(b.pop().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn train_buffer_threshold() {
+        let mut t = TrainBuffer::new(3);
+        t.push((vec![1.0], vec![0.0]));
+        t.push((vec![2.0], vec![0.0]));
+        assert!(t.flush().is_none());
+        t.push((vec![3.0], vec![0.0]));
+        let batch = t.flush().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(t.is_empty());
+        assert_eq!(t.flushed, 3);
+    }
+
+    #[test]
+    fn train_buffer_flush_all_ignores_threshold() {
+        let mut t = TrainBuffer::new(100);
+        t.push((vec![1.0], vec![0.0]));
+        assert_eq!(t.flush_all().len(), 1);
+        assert_eq!(t.flushed, 1);
+    }
+
+    #[test]
+    fn zero_threshold_clamped() {
+        let t = TrainBuffer::new(0);
+        assert_eq!(t.threshold, 1);
+    }
+}

@@ -1,0 +1,176 @@
+//! Exchange controller sub-kernel: the dedicated high-frequency loop
+//! between generator and prediction kernels (Fig. 2: "One dedicated
+//! controller sub-kernel ensures high-frequency communication between
+//! generation and prediction kernels").
+
+use std::time::Instant;
+
+use crate::comm::bus::Endpoint;
+use crate::comm::codec;
+use crate::comm::protocol::*;
+use crate::config::{topology, AlSetting, Topology};
+use crate::coordinator::hosts::{gather_poll, is_down, ShutdownFlag};
+use crate::kernels::Utils;
+use crate::telemetry::KernelTelemetry;
+
+/// Run the Exchange loop until stop criteria or shutdown.
+///
+/// One iteration = one lockstep round of the red+blue flows of Fig. 4:
+/// gather `data_to_pred` from every generator → broadcast to predictors →
+/// gather committee predictions → `prediction_check` → forward selected
+/// inputs to the Manager → scatter checked predictions to generators.
+pub fn exchange_host(
+    mut ep: Endpoint,
+    mut utils: Box<dyn Utils>,
+    setting: &AlSetting,
+    topo: &Topology,
+    down: ShutdownFlag,
+) -> KernelTelemetry {
+    let mut tel = KernelTelemetry::new("exchange", ep.rank());
+    let poll = setting.poll_interval;
+    let gene = topo.gene_ranks();
+    let pred = topo.pred_ranks();
+    let oracle_enabled = !topo.orcl_ranks().is_empty();
+    let mut iterations: u64 = 0;
+    let t_start = Instant::now();
+
+    'outer: loop {
+        if is_down(&down) {
+            break;
+        }
+        if let Some(max) = setting.stop.max_iterations {
+            if iterations >= max {
+                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                tel.bump("stop_signals");
+                break;
+            }
+        }
+        if let Some(max_wall) = setting.stop.max_wall {
+            if t_start.elapsed() >= max_wall {
+                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                tel.bump("stop_signals");
+                break;
+            }
+        }
+
+        // red flow: inputs from every generator
+        let t0 = Instant::now();
+        if !setting.fixed_size_data {
+            // consume the size headers first (SI §S3 variable-size mode)
+            match gather_poll(&mut ep, &gene, TAG_GEN_SIZE, &down, poll) {
+                Some(sizes) => {
+                    tel.add("size_headers", sizes.len() as u64);
+                }
+                None => break,
+            }
+        }
+        let raw = match gather_poll(&mut ep, &gene, TAG_GEN_TO_PRED, &down, poll) {
+            Some(r) => r,
+            None => break,
+        };
+        tel.record("gather_gen", t0.elapsed());
+
+        let mut any_stop = false;
+        let inputs: Vec<Vec<f32>> = raw
+            .iter()
+            .map(|m| {
+                let (stop, data) = decode_gen(m);
+                any_stop |= stop;
+                data.to_vec()
+            })
+            .collect();
+        if any_stop {
+            // a generator met its stop criterion (SI §S6); tell the Manager
+            ep.send(topology::MANAGER, TAG_STOP, vec![]);
+            tel.bump("stop_signals");
+        }
+
+        // broadcast the same input list to every prediction process
+        let t1 = Instant::now();
+        let packed_inputs = codec::pack_vecs(&inputs);
+        ep.bcast(&pred, TAG_PRED_IN, &packed_inputs);
+        tel.record("bcast_pred", t1.elapsed());
+
+        // blue flow: committee predictions
+        let t2 = Instant::now();
+        let packed_preds = match gather_poll(&mut ep, &pred, TAG_PRED_OUT, &down, poll) {
+            Some(p) => p,
+            None => break,
+        };
+        tel.record("gather_pred", t2.elapsed());
+
+        let mut preds_per_model = Vec::with_capacity(packed_preds.len());
+        for p in &packed_preds {
+            match codec::unpack(p) {
+                Some(list) if list.len() == gene.len() => preds_per_model.push(list),
+                _ => {
+                    tel.bump("malformed");
+                    continue 'outer;
+                }
+            }
+        }
+
+        // controller-side UQ decision (paper: "the uncertainty
+        // quantification ... is handled centrally by the controller kernel")
+        let t3 = Instant::now();
+        let (to_orcl, checked) = utils.prediction_check(&inputs, &preds_per_model);
+        tel.record("prediction_check", t3.elapsed());
+        assert_eq!(
+            checked.len(),
+            gene.len(),
+            "prediction_check must return one entry per generator"
+        );
+
+        if oracle_enabled && !to_orcl.is_empty() {
+            tel.add("selected_for_oracle", to_orcl.len() as u64);
+            ep.send(topology::MANAGER, TAG_ORCL_SELECT, codec::pack_vecs(&to_orcl));
+        }
+
+        // scatter checked predictions back, ordered by generator rank
+        let t4 = Instant::now();
+        ep.scatter(&gene, TAG_GENE_IN, checked);
+        tel.record("scatter_gene", t4.elapsed());
+
+        iterations += 1;
+        tel.bump("iterations");
+    }
+    tel
+}
+
+#[cfg(test)]
+mod tests {
+    //! Exchange is exercised end-to-end in `rust/tests/`; unit-level
+    //! protocol pieces (encode/decode, selection) have their own tests.
+    //! Here: the stop-criteria bookkeeping contract.
+    use super::*;
+    use crate::comm::World;
+    use crate::config::AlSetting;
+    use crate::coordinator::selection::CommitteeStdUtils;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn exchange_stops_at_zero_max_iterations() {
+        let mut s = AlSetting::default();
+        s.gene_process = 1;
+        s.pred_process = 1;
+        s.ml_process = 0;
+        s.orcl_process = 0;
+        s.stop.max_iterations = Some(0);
+        let topo = Topology::new(&s);
+        let mut world = World::new(topo.n_ranks());
+        let manager_ep = world.endpoint(topology::MANAGER);
+        let ex_ep = world.endpoint(topology::EXCHANGE);
+        let down = Arc::new(AtomicBool::new(false));
+        let tel = exchange_host(
+            ex_ep,
+            Box::new(CommitteeStdUtils::new(0.5, 4)),
+            &s,
+            &topo,
+            down,
+        );
+        assert_eq!(tel.counter("iterations"), 0);
+        assert_eq!(tel.counter("stop_signals"), 1);
+        drop(manager_ep);
+    }
+}

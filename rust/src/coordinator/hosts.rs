@@ -1,0 +1,274 @@
+//! Kernel host loops: one per rank, each owning its kernel object and its
+//! [`crate::comm::Endpoint`]. All blocking waits poll the shared shutdown
+//! flag so the drain discipline can never deadlock.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::bus::{Endpoint, Message, Src};
+use crate::comm::codec;
+use crate::comm::protocol::*;
+use crate::config::{AlSetting, Topology};
+use crate::kernels::{Generator, Mode, Model, Oracle};
+use crate::telemetry::KernelTelemetry;
+
+/// Shared run flag; `true` once the Manager initiates shutdown.
+pub type ShutdownFlag = Arc<AtomicBool>;
+
+pub fn is_down(f: &ShutdownFlag) -> bool {
+    f.load(Ordering::Acquire)
+}
+
+/// Blocking receive that polls the shutdown flag. `None` = shutting down.
+pub fn recv_poll(
+    ep: &mut Endpoint,
+    src: Src,
+    tag: u32,
+    down: &ShutdownFlag,
+    poll: Duration,
+) -> Option<Message> {
+    loop {
+        if is_down(down) {
+            return None;
+        }
+        match ep.recv_timeout(src, tag, poll) {
+            Ok(m) => return Some(m),
+            Err(crate::comm::RecvError::Timeout) => continue,
+            Err(crate::comm::RecvError::Disconnected) => return None,
+        }
+    }
+}
+
+/// Ordered gather (one message per `srcs` entry) polling shutdown.
+pub fn gather_poll(
+    ep: &mut Endpoint,
+    srcs: &[usize],
+    tag: u32,
+    down: &ShutdownFlag,
+    poll: Duration,
+) -> Option<Vec<Vec<f32>>> {
+    let mut slots: Vec<Option<Vec<f32>>> = vec![None; srcs.len()];
+    let mut remaining = srcs.len();
+    while remaining > 0 {
+        let m = recv_poll(ep, Src::Any, tag, down, poll)?;
+        if let Some(i) = srcs.iter().position(|&s| s == m.src) {
+            if slots[i].is_none() {
+                slots[i] = Some(m.data);
+                remaining -= 1;
+            }
+        }
+    }
+    Some(slots.into_iter().map(|s| s.unwrap()).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Generator host (SI §S6)
+// ---------------------------------------------------------------------------
+
+/// Drive one generator process: `generate_new_data(None)` first, then a
+/// lockstep loop of send-to-Exchange / receive-checked-prediction.
+pub fn generator_host(
+    mut ep: Endpoint,
+    mut gen: Box<dyn Generator>,
+    setting: &AlSetting,
+    down: ShutdownFlag,
+) -> KernelTelemetry {
+    let mut tel = KernelTelemetry::new("generator", ep.rank());
+    let poll = setting.poll_interval;
+    let mut data_to_gene: Option<Vec<f32>> = None;
+    loop {
+        if is_down(&down) {
+            break;
+        }
+        let (stop, data_to_pred) = tel.time("generate", || {
+            gen.generate_new_data(data_to_gene.as_deref())
+        });
+        tel.bump("steps");
+        let payload = encode_gen(stop, &data_to_pred);
+        if !setting.fixed_size_data {
+            // SI §S3 fixed_size_data=False: a size header precedes every
+            // payload so the receiver can size its MPI buffer
+            ep.send(
+                crate::config::topology::EXCHANGE,
+                TAG_GEN_SIZE,
+                vec![payload.len() as f32],
+            );
+        }
+        ep.send(crate::config::topology::EXCHANGE, TAG_GEN_TO_PRED, payload);
+        if stop {
+            tel.bump("stop_signals");
+            // Exchange forwards the stop to the Manager; keep looping until
+            // the shutdown flag lands so in-flight scatters drain.
+        }
+        match recv_poll(&mut ep, Src::Rank(crate::config::topology::EXCHANGE), TAG_GENE_IN, &down, poll) {
+            Some(m) => data_to_gene = Some(m.data),
+            None => break,
+        }
+    }
+    gen.stop_run();
+    tel
+}
+
+// ---------------------------------------------------------------------------
+// Oracle host (SI §S7)
+// ---------------------------------------------------------------------------
+
+/// Drive one oracle process: receive inputs from the Manager, label, reply.
+pub fn oracle_host(
+    mut ep: Endpoint,
+    mut oracle: Box<dyn Oracle>,
+    setting: &AlSetting,
+    down: ShutdownFlag,
+) -> KernelTelemetry {
+    let mut tel = KernelTelemetry::new("oracle", ep.rank());
+    let poll = setting.poll_interval;
+    loop {
+        let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TO_ORACLE, &down, poll) {
+            Some(m) => m,
+            None => break,
+        };
+        let label = tel.time("run_calc", || oracle.run_calc(&m.data));
+        tel.bump("labels");
+        ep.send(
+            crate::config::topology::MANAGER,
+            TAG_ORACLE_RESULT,
+            codec::pack(&[&m.data, &label]),
+        );
+    }
+    oracle.stop_run();
+    tel
+}
+
+// ---------------------------------------------------------------------------
+// Prediction host (SI §S4)
+// ---------------------------------------------------------------------------
+
+/// Drive one prediction process: serve Exchange broadcasts, absorb weight
+/// pushes from the paired trainer, serve Manager re-scoring requests.
+pub fn prediction_host(
+    mut ep: Endpoint,
+    mut model: Box<dyn Model>,
+    setting: &AlSetting,
+    down: ShutdownFlag,
+) -> KernelTelemetry {
+    let mut tel = KernelTelemetry::new("prediction", ep.rank());
+    let poll = setting.poll_interval;
+    loop {
+        if is_down(&down) {
+            break;
+        }
+        // newest weights win; stale updates are discarded (paper §2.1:
+        // models "updated periodically by replicating weights")
+        if let Some(m) = ep.recv_latest(Src::Any, TAG_WEIGHTS) {
+            tel.time("update", || model.update(&m.data));
+            tel.bump("weight_updates");
+        }
+        // manager re-scoring for dynamic_orcale_list
+        if let Some(m) = ep.try_recv(Src::Rank(crate::config::topology::MANAGER), TAG_RESCORE_REQ) {
+            if let Some(inputs) = codec::unpack(&m.data) {
+                let preds = tel.time("rescore", || model.predict(&inputs));
+                tel.bump("rescores");
+                ep.send(
+                    crate::config::topology::MANAGER,
+                    TAG_RESCORE_RESP,
+                    codec::pack_vecs(&preds),
+                );
+            }
+        }
+        // the hot path: a batch of generator inputs from Exchange
+        match ep.recv_timeout(Src::Rank(crate::config::topology::EXCHANGE), TAG_PRED_IN, poll) {
+            Ok(m) => {
+                let Some(inputs) = codec::unpack(&m.data) else {
+                    tel.bump("malformed");
+                    continue;
+                };
+                let preds = tel.time("predict", || model.predict(&inputs));
+                debug_assert_eq!(preds.len(), inputs.len());
+                tel.bump("batches");
+                tel.add("samples", inputs.len() as u64);
+                ep.send(
+                    crate::config::topology::EXCHANGE,
+                    TAG_PRED_OUT,
+                    codec::pack_vecs(&preds),
+                );
+            }
+            Err(crate::comm::RecvError::Timeout) => continue,
+            Err(crate::comm::RecvError::Disconnected) => break,
+        }
+    }
+    model.stop_run();
+    tel
+}
+
+// ---------------------------------------------------------------------------
+// Training host (SI §S5)
+// ---------------------------------------------------------------------------
+
+/// Drive one training process: wait for labeled batches, retrain until new
+/// data or shutdown interrupts, then push weights to the paired predictor.
+pub fn training_host(
+    mut ep: Endpoint,
+    mut model: Box<dyn Model>,
+    setting: &AlSetting,
+    topology: &Topology,
+    down: ShutdownFlag,
+) -> KernelTelemetry {
+    let mut tel = KernelTelemetry::new("training", ep.rank());
+    let poll = setting.poll_interval;
+    let predictor = topology.predictor_for_trainer(ep.rank());
+    // initial weight sync so predictors start from the same replica
+    ep.send(predictor, TAG_WEIGHTS, model.get_weight());
+    loop {
+        let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TRAIN_DATA, &down, poll) {
+            Some(m) => m,
+            None => break,
+        };
+        let Some(points) = codec::unpack_datapoints(&m.data) else {
+            tel.bump("malformed");
+            continue;
+        };
+        tel.add("datapoints", points.len() as u64);
+        model.add_trainingset(&points);
+        // retrain, interruptible by new data / shutdown (paper §S5:
+        // "checking req_data.Test() at every training epoch")
+        let stop = {
+            let down2 = down.clone();
+            let probe_ep_interrupt = |ep: &mut Endpoint| {
+                is_down(&down2) || ep.probe(Src::Rank(crate::config::topology::MANAGER), TAG_TRAIN_DATA)
+            };
+            let t0 = std::time::Instant::now();
+            // split borrow: retrain takes the model; the closure needs the
+            // endpoint. Endpoint probing is cheap and lock-free.
+            let stop = model.retrain(&mut || probe_ep_interrupt(&mut ep));
+            tel.record("retrain", t0.elapsed());
+            stop
+        };
+        tel.bump("rounds");
+        ep.send(predictor, TAG_WEIGHTS, model.get_weight());
+        let loss = model.last_loss().unwrap_or(f32::NAN);
+        let epochs = model.last_round_epochs() as f32;
+        tel.add("epochs", epochs as u64);
+        ep.send(
+            crate::config::topology::MANAGER,
+            TAG_RETRAIN_DONE,
+            vec![loss, epochs],
+        );
+        model.save_progress();
+        if stop {
+            tel.bump("stop_signals");
+            ep.send(crate::config::topology::MANAGER, TAG_STOP, vec![]);
+        }
+    }
+    model.stop_run();
+    tel
+}
+
+/// Construct the model for a host thread.
+pub fn build_model(
+    factory: &crate::kernels::ModelFactory,
+    mode: Mode,
+    replica: usize,
+) -> Box<dyn Model> {
+    factory(mode, replica)
+}

@@ -1,0 +1,280 @@
+//! Manager controller sub-kernel: buffers, oracle dispatch, training
+//! flushes, dynamic oracle-list adjustment, progress snapshots, shutdown.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use crate::comm::bus::{Endpoint, Src};
+use crate::comm::codec;
+use crate::comm::protocol::*;
+use crate::config::{AlSetting, Topology};
+use crate::coordinator::buffers::{OracleBuffer, TrainBuffer};
+use crate::coordinator::hosts::ShutdownFlag;
+use crate::json::{obj, Value};
+use crate::kernels::Utils;
+use crate::telemetry::KernelTelemetry;
+
+/// Outcome counters the workflow report needs from the Manager.
+#[derive(Debug, Default, Clone)]
+pub struct ManagerOutcome {
+    pub oracle_labels: u64,
+    pub retrain_rounds: u64,
+    pub losses: Vec<f32>,
+}
+
+/// Run the Manager until a stop request or a stop criterion fires, then
+/// fan out shutdown.
+pub fn manager_host(
+    mut ep: Endpoint,
+    mut utils: Box<dyn Utils>,
+    setting: &AlSetting,
+    topo: &Topology,
+    down: ShutdownFlag,
+) -> (KernelTelemetry, ManagerOutcome) {
+    let mut tel = KernelTelemetry::new("manager", ep.rank());
+    let mut out = ManagerOutcome::default();
+    let orcl = topo.orcl_ranks();
+    let pred = topo.pred_ranks();
+    let train = topo.train_ranks();
+    let mut oracle_busy = vec![false; orcl.len()];
+    let mut orcl_buffer = OracleBuffer::new(Some(4096));
+    let mut train_buffer = TrainBuffer::new(setting.retrain_size);
+    let mut last_save = Instant::now();
+    let t_start = Instant::now();
+    let mut losses_latest: Vec<f32> = vec![f32::NAN; train.len()];
+    let mut total_epochs: u64 = 0;
+    let mut stop_requested = false;
+
+    loop {
+        let mut did_work = false;
+
+        // --- selected inputs from the Exchange (green flow in) ---
+        while let Some(m) = ep.try_recv(Src::Rank(crate::config::topology::EXCHANGE), TAG_ORCL_SELECT) {
+            if let Some(inputs) = codec::unpack(&m.data) {
+                tel.add("selected_in", inputs.len() as u64);
+                orcl_buffer.push_all(inputs);
+            } else {
+                tel.bump("malformed");
+            }
+            did_work = true;
+        }
+
+        // --- completed oracle labels (green flow back) ---
+        while let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_RESULT) {
+            if let Some(i) = orcl.iter().position(|&r| r == m.src) {
+                oracle_busy[i] = false;
+            }
+            match codec::unpack(&m.data) {
+                Some(parts) if parts.len() == 2 => {
+                    let mut it = parts.into_iter();
+                    let input = it.next().unwrap();
+                    let label = it.next().unwrap();
+                    out.oracle_labels += 1;
+                    tel.bump("labels");
+                    train_buffer.push((input, label));
+                }
+                _ => tel.bump("malformed"),
+            }
+            did_work = true;
+        }
+
+        // --- retrain notifications ---
+        while let Some(m) = ep.try_recv(Src::Any, TAG_RETRAIN_DONE) {
+            out.retrain_rounds += 1;
+            tel.bump("retrain_rounds");
+            if let Some(i) = train.iter().position(|&r| r == m.src) {
+                if let Some(&loss) = m.data.first() {
+                    losses_latest[i] = loss;
+                }
+            }
+            if let Some(&epochs) = m.data.get(1) {
+                total_epochs += epochs as u64;
+                tel.add("train_epochs", epochs as u64);
+            }
+            did_work = true;
+            // dynamic oracle-list adjustment with the freshly-synced models
+            if setting.dynamic_oracle_list && !orcl_buffer.is_empty() && !pred.is_empty() {
+                adjust_oracle_buffer(&mut ep, &mut *utils, &mut orcl_buffer, &pred, setting, &mut tel);
+            }
+        }
+
+        // --- dispatch buffered inputs to free oracles (first available) ---
+        for (i, &rank) in orcl.iter().enumerate() {
+            if oracle_busy[i] {
+                continue;
+            }
+            if let Some(input) = orcl_buffer.pop() {
+                ep.send(rank, TAG_TO_ORACLE, input);
+                oracle_busy[i] = true;
+                tel.bump("dispatched");
+                did_work = true;
+            } else {
+                break;
+            }
+        }
+
+        // --- flush labeled batch to every trainer ---
+        if !train.is_empty() {
+            if let Some(batch) = train_buffer.flush() {
+                let packed = codec::pack_datapoints(&batch);
+                ep.bcast(&train, TAG_TRAIN_DATA, &packed);
+                tel.bump("train_flushes");
+                tel.add("train_points", batch.len() as u64);
+                did_work = true;
+            }
+        }
+
+        // --- progress snapshot ---
+        if last_save.elapsed() >= setting.progress_save_interval {
+            save_progress(setting, &tel, &out, orcl_buffer.len(), train_buffer.len());
+            last_save = Instant::now();
+        }
+
+        // --- stop requests from any kernel (checked after dispatch so the
+        // final round of selected inputs reaches the oracles; their results
+        // are collected by the bounded drain below) ---
+        if ep.try_recv(Src::Any, TAG_STOP).is_some() {
+            tel.bump("stop_requests");
+            stop_requested = true;
+        }
+        if let Some(max) = setting.stop.max_labels {
+            if out.oracle_labels >= max
+                && out.retrain_rounds >= setting.stop.min_retrain_rounds
+                && total_epochs >= setting.stop.min_train_epochs
+            {
+                stop_requested = true;
+            }
+        }
+        if let Some(max_wall) = setting.stop.max_wall {
+            // grace factor: the Exchange enforces its own wall limit; the
+            // Manager is the backstop in case Exchange is blocked
+            if t_start.elapsed() >= max_wall + Duration::from_secs(5) {
+                stop_requested = true;
+                tel.bump("wall_backstop");
+            }
+        }
+        if stop_requested {
+            break;
+        }
+
+        if !did_work {
+            std::thread::sleep(setting.poll_interval);
+        }
+    }
+
+    // --- bounded drain: don't discard labels already paid for (a DFT hour
+    // that finished during shutdown must land in the training buffer) ---
+    let drain_deadline = Instant::now() + Duration::from_millis(300);
+    while oracle_busy.iter().any(|&b| b) && Instant::now() < drain_deadline {
+        if let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_RESULT) {
+            if let Some(i) = orcl.iter().position(|&r| r == m.src) {
+                oracle_busy[i] = false;
+            }
+            if let Some(parts) = codec::unpack(&m.data) {
+                if parts.len() == 2 {
+                    let mut it = parts.into_iter();
+                    let input = it.next().unwrap();
+                    let label = it.next().unwrap();
+                    out.oracle_labels += 1;
+                    tel.bump("labels");
+                    tel.bump("drained_labels");
+                    train_buffer.push((input, label));
+                }
+            }
+        } else {
+            std::thread::sleep(setting.poll_interval);
+        }
+    }
+    // flush what we can so trainers see the drained labels before exiting
+    if !train.is_empty() {
+        if let Some(batch) = train_buffer.flush() {
+            let packed = codec::pack_datapoints(&batch);
+            ep.bcast(&train, TAG_TRAIN_DATA, &packed);
+            tel.bump("train_flushes");
+            tel.add("train_points", batch.len() as u64);
+        }
+    }
+
+    // --- shutdown fan-out: flag first (the truth), then wake every rank ---
+    down.store(true, Ordering::Release);
+    for r in 0..ep.world_size() {
+        if r != ep.rank() {
+            ep.send(r, TAG_SHUTDOWN, vec![]);
+        }
+    }
+    // final drain: labels already computed should not be lost — push any
+    // complete batch out before trainers exit (they poll until down)
+    let rest = train_buffer.flush_all();
+    if !rest.is_empty() && !train.is_empty() {
+        tel.add("train_points_dropped", rest.len() as u64);
+    }
+    save_progress(setting, &tel, &out, orcl_buffer.len(), 0);
+
+    out.losses = losses_latest;
+    (tel, out)
+}
+
+/// Re-score the oracle buffer with the prediction committee and let the
+/// user's `adjust_input_for_oracle` reorder/prune it (SI Utilities,
+/// `dynamic_orcale_list`).
+fn adjust_oracle_buffer(
+    ep: &mut Endpoint,
+    utils: &mut dyn Utils,
+    buffer: &mut OracleBuffer,
+    pred: &[usize],
+    setting: &AlSetting,
+    tel: &mut KernelTelemetry,
+) {
+    let inputs = buffer.drain();
+    let packed = codec::pack_vecs(&inputs);
+    ep.bcast(pred, TAG_RESCORE_REQ, &packed);
+    // bounded wait: predictors are serving the hot loop; if they cannot
+    // answer quickly, skip the adjustment rather than stall labeling
+    let deadline = Duration::from_millis(500).max(setting.poll_interval * 50);
+    match ep.gather(pred, TAG_RESCORE_RESP, deadline) {
+        Ok(packed_preds) => {
+            let mut preds_per_model = Vec::with_capacity(packed_preds.len());
+            for p in &packed_preds {
+                match codec::unpack(p) {
+                    Some(list) if list.len() == inputs.len() => preds_per_model.push(list),
+                    _ => {
+                        tel.bump("malformed");
+                        buffer.replace(inputs);
+                        return;
+                    }
+                }
+            }
+            let before = inputs.len();
+            let adjusted = utils.adjust_input_for_oracle(inputs, &preds_per_model);
+            tel.add("adjusted_dropped", (before - adjusted.len().min(before)) as u64);
+            tel.bump("adjustments");
+            buffer.replace(adjusted);
+        }
+        Err(_) => {
+            tel.bump("adjust_timeouts");
+            buffer.replace(inputs);
+        }
+    }
+}
+
+fn save_progress(
+    setting: &AlSetting,
+    tel: &KernelTelemetry,
+    out: &ManagerOutcome,
+    orcl_buffered: usize,
+    train_buffered: usize,
+) {
+    let dir = std::path::Path::new(&setting.result_dir);
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let snapshot = obj(vec![
+        ("oracle_labels", Value::Num(out.oracle_labels as f64)),
+        ("retrain_rounds", Value::Num(out.retrain_rounds as f64)),
+        ("oracle_buffered", Value::Num(orcl_buffered as f64)),
+        ("train_buffered", Value::Num(train_buffered as f64)),
+        ("manager", tel.to_json()),
+        ("setting", setting.to_json()),
+    ]);
+    let _ = std::fs::write(dir.join("progress.json"), crate::json::to_string(&snapshot));
+}

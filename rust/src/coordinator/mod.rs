@@ -1,0 +1,23 @@
+//! The PAL controller: the paper's system contribution.
+//!
+//! Two controller sub-kernels (Fig. 2):
+//!
+//! * [`exchange`] — the dedicated high-frequency sub-kernel driving the
+//!   generator ↔ prediction loop (gather inputs → broadcast to predictors →
+//!   gather predictions → `prediction_check` → scatter back + forward
+//!   selected samples to the Manager).
+//! * [`manager`] — buffers (oracle input buffer, training data buffer),
+//!   oracle dispatch to the first free oracle, retrain-threshold flushes to
+//!   the training kernel, `dynamic_orcale_list` re-scoring, progress
+//!   snapshots, and the shutdown fan-out.
+//!
+//! [`hosts`] holds the per-kernel host loops (prediction / training /
+//! generator / oracle ranks) and [`workflow`] wires everything into threads
+//! over a [`crate::comm::World`].
+
+pub mod buffers;
+pub mod exchange;
+pub mod hosts;
+pub mod manager;
+pub mod selection;
+pub mod workflow;

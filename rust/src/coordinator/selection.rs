@@ -1,0 +1,229 @@
+//! Selection strategies: implementations of the paper's `prediction_check`
+//! and `adjust_input_for_oracle` utilities (SI "Utilities").
+
+use crate::kernels::Utils;
+
+/// Committee std over models for each generator: `preds[model][generator]`.
+/// Returns per-generator max-component std.
+pub fn committee_std(preds_per_model: &[Vec<Vec<f32>>]) -> Vec<f32> {
+    let n_models = preds_per_model.len();
+    if n_models == 0 {
+        return vec![];
+    }
+    let n_gen = preds_per_model[0].len();
+    let mut out = Vec::with_capacity(n_gen);
+    for g in 0..n_gen {
+        let width = preds_per_model[0][g].len();
+        let mut max_std = 0.0f32;
+        for k in 0..width {
+            let vals: Vec<f32> = preds_per_model.iter().map(|m| m[g][k]).collect();
+            let mean = vals.iter().sum::<f32>() / n_models as f32;
+            let var = if n_models > 1 {
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                    / (n_models as f32 - 1.0)
+            } else {
+                0.0
+            };
+            max_std = max_std.max(var.sqrt());
+        }
+        out.push(max_std);
+    }
+    out
+}
+
+/// Committee mean per generator.
+pub fn committee_mean(preds_per_model: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+    let n_models = preds_per_model.len();
+    if n_models == 0 {
+        return vec![];
+    }
+    let n_gen = preds_per_model[0].len();
+    (0..n_gen)
+        .map(|g| {
+            let width = preds_per_model[0][g].len();
+            (0..width)
+                .map(|k| {
+                    preds_per_model.iter().map(|m| m[g][k]).sum::<f32>() / n_models as f32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The paper's example `prediction_check`: inputs whose committee std
+/// exceeds `threshold` go to the oracle (capped at `max_per_iter`, highest
+/// std first); their returned prediction is zeroed so the generator knows
+/// not to trust it, everyone else receives the committee mean.
+pub fn committee_std_check(
+    list_data_to_pred: &[Vec<f32>],
+    preds_per_model: &[Vec<Vec<f32>>],
+    threshold: f32,
+    max_per_iter: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let stds = committee_std(preds_per_model);
+    let mut means = committee_mean(preds_per_model);
+    // rank candidate generators by std, descending
+    let mut cand: Vec<usize> = (0..stds.len()).filter(|&g| stds[g] > threshold).collect();
+    cand.sort_by(|&a, &b| stds[b].partial_cmp(&stds[a]).unwrap_or(std::cmp::Ordering::Equal));
+    cand.truncate(max_per_iter);
+    let mut to_orcl = Vec::with_capacity(cand.len());
+    for &g in &cand {
+        to_orcl.push(list_data_to_pred[g].clone());
+        for v in &mut means[g] {
+            *v = 0.0; // paper: "send 0 instead to generator"
+        }
+    }
+    (to_orcl, means)
+}
+
+/// Std-threshold [`Utils`] with the paper's dynamic oracle-buffer
+/// adjustment: re-sort buffered inputs by fresh committee std and drop the
+/// ones the retrained committee now agrees on.
+pub struct CommitteeStdUtils {
+    pub threshold: f32,
+    pub max_per_iter: usize,
+}
+
+impl CommitteeStdUtils {
+    pub fn new(threshold: f32, max_per_iter: usize) -> Self {
+        CommitteeStdUtils { threshold, max_per_iter }
+    }
+}
+
+impl Utils for CommitteeStdUtils {
+    fn prediction_check(
+        &mut self,
+        list_data_to_pred: &[Vec<f32>],
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        committee_std_check(list_data_to_pred, preds_per_model, self.threshold, self.max_per_iter)
+    }
+
+    fn adjust_input_for_oracle(
+        &mut self,
+        buffer: Vec<Vec<f32>>,
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> Vec<Vec<f32>> {
+        if preds_per_model.is_empty() || buffer.is_empty() {
+            return buffer;
+        }
+        let stds = committee_std(preds_per_model);
+        debug_assert_eq!(stds.len(), buffer.len());
+        // sort by std descending, keep those still above threshold
+        let mut idx: Vec<usize> = (0..buffer.len()).collect();
+        idx.sort_by(|&a, &b| stds[b].partial_cmp(&stds[a]).unwrap_or(std::cmp::Ordering::Equal));
+        idx.into_iter()
+            .filter(|&i| stds[i] > self.threshold)
+            .map(|i| buffer[i].clone())
+            .collect()
+    }
+}
+
+/// Label-everything utils (serial-baseline parity tests; no UQ gating).
+pub struct SelectAllUtils {
+    pub max_per_iter: usize,
+}
+
+impl Utils for SelectAllUtils {
+    fn prediction_check(
+        &mut self,
+        list_data_to_pred: &[Vec<f32>],
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let means = committee_mean(preds_per_model);
+        let take = self.max_per_iter.min(list_data_to_pred.len());
+        (list_data_to_pred[..take].to_vec(), means)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 models × 3 generators × width 2.
+    fn preds() -> Vec<Vec<Vec<f32>>> {
+        vec![
+            vec![vec![1.0, 2.0], vec![0.0, 0.0], vec![5.0, 5.0]],
+            vec![vec![1.0, 2.0], vec![1.0, 0.0], vec![5.0, 7.0]],
+        ]
+    }
+
+    #[test]
+    fn std_zero_when_models_agree() {
+        let s = committee_std(&preds());
+        assert!(s[0].abs() < 1e-7);
+        assert!(s[1] > 0.5);
+        assert!(s[2] > 1.0);
+    }
+
+    #[test]
+    fn std_ddof1_matches_manual() {
+        // two models, values 0 and 1 → std (ddof=1) = sqrt(0.5)*sqrt(2) = 0.7071
+        let p = vec![vec![vec![0.0]], vec![vec![1.0]]];
+        let s = committee_std(&p);
+        assert!((s[0] - std::f32::consts::FRAC_1_SQRT_2).abs() < 1e-6, "{}", s[0]);
+    }
+
+    #[test]
+    fn mean_is_elementwise() {
+        let m = committee_mean(&preds());
+        assert_eq!(m[0], vec![1.0, 2.0]);
+        assert_eq!(m[1], vec![0.5, 0.0]);
+        assert_eq!(m[2], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn check_selects_above_threshold_and_zeroes() {
+        let inputs = vec![vec![10.0], vec![20.0], vec![30.0]];
+        let (orcl, checked) = committee_std_check(&inputs, &preds(), 0.3, 10);
+        // generators 1 and 2 exceed threshold; 2 has larger std → first
+        assert_eq!(orcl, vec![vec![30.0], vec![20.0]]);
+        assert_eq!(checked[0], vec![1.0, 2.0]); // untouched mean
+        assert_eq!(checked[1], vec![0.0, 0.0]); // zeroed
+        assert_eq!(checked[2], vec![0.0, 0.0]); // zeroed
+        assert_eq!(checked.len(), 3); // one entry per generator, always
+    }
+
+    #[test]
+    fn check_caps_selection() {
+        let inputs = vec![vec![10.0], vec![20.0], vec![30.0]];
+        let (orcl, checked) = committee_std_check(&inputs, &preds(), 0.3, 1);
+        assert_eq!(orcl.len(), 1);
+        assert_eq!(orcl[0], vec![30.0]);
+        assert_eq!(checked.len(), 3);
+    }
+
+    #[test]
+    fn adjust_drops_agreed_and_sorts() {
+        let mut u = CommitteeStdUtils::new(0.3, 10);
+        let buffer = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let adjusted = u.adjust_input_for_oracle(buffer, &preds());
+        // generator-0-like entry (std 0) dropped; order: highest std first
+        assert_eq!(adjusted, vec![vec![3.0], vec![2.0]]);
+    }
+
+    #[test]
+    fn adjust_is_subset_invariant() {
+        let mut u = CommitteeStdUtils::new(0.0, 10);
+        let buffer = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let adjusted = u.adjust_input_for_oracle(buffer.clone(), &preds());
+        for a in &adjusted {
+            assert!(buffer.contains(a));
+        }
+    }
+
+    #[test]
+    fn single_model_std_is_zero() {
+        let p = vec![vec![vec![3.0, 4.0]]];
+        assert_eq!(committee_std(&p), vec![0.0]);
+    }
+
+    #[test]
+    fn select_all_caps() {
+        let mut u = SelectAllUtils { max_per_iter: 2 };
+        let inputs = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let (orcl, checked) = u.prediction_check(&inputs, &preds());
+        assert_eq!(orcl.len(), 2);
+        assert_eq!(checked.len(), 3);
+    }
+}

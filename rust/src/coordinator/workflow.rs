@@ -1,0 +1,167 @@
+//! Workflow launcher: spawns one host thread per rank over a
+//! [`crate::comm::World`] and aggregates the run report.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::comm::World;
+use crate::config::{topology, AlSetting, Topology};
+use crate::coordinator::{exchange, hosts, manager};
+use crate::kernels::{KernelSet, Mode};
+use crate::telemetry::{KernelTelemetry, RunReport};
+
+pub use crate::kernels::KernelSet as Kernels;
+
+/// A configured PAL workflow, ready to run a kernel set.
+pub struct Workflow {
+    setting: AlSetting,
+}
+
+impl Workflow {
+    pub fn new(setting: AlSetting) -> Self {
+        Workflow { setting }
+    }
+
+    pub fn setting(&self) -> &AlSetting {
+        &self.setting
+    }
+
+    /// Run the five-kernel workflow to completion. Blocks until every rank
+    /// has drained and joined; returns the aggregated report.
+    pub fn run(&self, kernels: KernelSet) -> anyhow::Result<RunReport> {
+        self.setting.validate()?;
+        kernels.validate(&self.setting)?;
+        let topo = Topology::new(&self.setting);
+        let mut world = World::with_latency(topo.n_ranks(), self.setting.comm_latency);
+        let world_stats = world.stats();
+        let down = Arc::new(AtomicBool::new(false));
+        let t0 = Instant::now();
+
+        let KernelSet { generators, oracles, model, utils } = kernels;
+
+        let mut tel_handles: Vec<std::thread::JoinHandle<KernelTelemetry>> = Vec::new();
+
+        // Exchange controller (rank 1)
+        {
+            let ep = world.endpoint(topology::EXCHANGE);
+            let setting = self.setting.clone();
+            let topo = topo.clone();
+            let down = down.clone();
+            let utils_f = utils.clone();
+            tel_handles.push(
+                std::thread::Builder::new()
+                    .name("pal-exchange".into())
+                    .spawn(move || exchange::exchange_host(ep, utils_f(), &setting, &topo, down))
+                    .context("spawning exchange")?,
+            );
+        }
+
+        // Prediction hosts
+        for (i, rank) in topo.pred_ranks().into_iter().enumerate() {
+            let ep = world.endpoint(rank);
+            let setting = self.setting.clone();
+            let down = down.clone();
+            let factory = model.clone();
+            tel_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pal-pred-{i}"))
+                    .spawn(move || {
+                        let m = factory(Mode::Predict, i);
+                        hosts::prediction_host(ep, m, &setting, down)
+                    })
+                    .context("spawning predictor")?,
+            );
+        }
+
+        // Training hosts
+        for (i, rank) in topo.train_ranks().into_iter().enumerate() {
+            let ep = world.endpoint(rank);
+            let setting = self.setting.clone();
+            let topo2 = topo.clone();
+            let down = down.clone();
+            let factory = model.clone();
+            tel_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pal-train-{i}"))
+                    .spawn(move || {
+                        let m = factory(Mode::Train, i);
+                        hosts::training_host(ep, m, &setting, &topo2, down)
+                    })
+                    .context("spawning trainer")?,
+            );
+        }
+
+        // Generator hosts
+        for (i, (rank, factory)) in topo
+            .gene_ranks()
+            .into_iter()
+            .zip(generators.into_iter())
+            .enumerate()
+        {
+            let ep = world.endpoint(rank);
+            let setting = self.setting.clone();
+            let down = down.clone();
+            tel_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pal-gen-{i}"))
+                    .spawn(move || hosts::generator_host(ep, factory(), &setting, down))
+                    .context("spawning generator")?,
+            );
+        }
+
+        // Oracle hosts
+        for (i, (rank, factory)) in topo
+            .orcl_ranks()
+            .into_iter()
+            .zip(oracles.into_iter())
+            .enumerate()
+        {
+            let ep = world.endpoint(rank);
+            let setting = self.setting.clone();
+            let down = down.clone();
+            tel_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pal-orcl-{i}"))
+                    .spawn(move || hosts::oracle_host(ep, factory(), &setting, down))
+                    .context("spawning oracle")?,
+            );
+        }
+
+        // Manager runs on the caller thread (rank 0) — it is the shutdown
+        // authority, so the workflow returns exactly when it decides.
+        let manager_ep = world.endpoint(topology::MANAGER);
+        drop(world); // release the spare sender clones held by World
+        let (manager_tel, outcome) =
+            manager::manager_host(manager_ep, utils(), &self.setting, &topo, down);
+
+        let mut report = RunReport {
+            al_iterations: 0,
+            oracle_labels: outcome.oracle_labels,
+            retrain_rounds: outcome.retrain_rounds,
+            final_losses: outcome.losses,
+            wall: t0.elapsed(),
+            kernels: vec![manager_tel],
+            messages: world_stats.messages(),
+            payload_bytes: world_stats.payload_bytes(),
+        };
+        for h in tel_handles {
+            let tel = h.join().map_err(|_| anyhow::anyhow!("kernel host panicked"))?;
+            if tel.kernel == "exchange" {
+                report.al_iterations = tel.counter("iterations");
+            }
+            report.kernels.push(tel);
+        }
+        // Trainers may finish their final round during shutdown, after the
+        // Manager stopped counting — the trainer-side counter is the truth.
+        let trainer_rounds: u64 =
+            report.kernels.iter().filter(|k| k.kernel == "training").map(|k| k.counter("rounds")).sum();
+        report.retrain_rounds = report.retrain_rounds.max(trainer_rounds);
+        report.wall = t0.elapsed();
+        report.messages = world_stats.messages();
+        report.payload_bytes = world_stats.payload_bytes();
+        Ok(report)
+    }
+}

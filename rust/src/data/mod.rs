@@ -1,0 +1,184 @@
+//! Labeled-dataset store: train/val split, rolling window (SI use case 2).
+
+use crate::rng::Rng;
+
+/// One labeled sample: `(input, label)` flat arrays (paper wire format).
+pub type Datapoint = (Vec<f32>, Vec<f32>);
+
+/// Training/validation store with optional rolling window.
+///
+/// The rolling window implements the SI use-case-2 recommendation: "newly
+/// incoming xTB-labeled samples are added after every single training epoch,
+/// and old samples are removed to keep the training set size constant".
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x_train: Vec<Vec<f32>>,
+    pub y_train: Vec<Vec<f32>>,
+    pub x_val: Vec<Vec<f32>>,
+    pub y_val: Vec<Vec<f32>>,
+    /// Fraction of incoming data routed to validation.
+    pub val_split: f64,
+    /// If set, training set is capped at this size (oldest dropped first).
+    pub rolling_window: Option<usize>,
+    rng: Rng,
+    total_added: u64,
+}
+
+impl Dataset {
+    pub fn new(val_split: f64, seed: u64) -> Self {
+        Dataset {
+            x_train: vec![],
+            y_train: vec![],
+            x_val: vec![],
+            y_val: vec![],
+            val_split,
+            rolling_window: None,
+            rng: Rng::new(seed),
+            total_added: 0,
+        }
+    }
+
+    pub fn with_rolling_window(mut self, cap: usize) -> Self {
+        self.rolling_window = Some(cap);
+        self
+    }
+
+    /// Add labeled datapoints, assigning each to train or val
+    /// (paper SI §S5 `add_trainingset`).
+    pub fn add(&mut self, points: &[Datapoint]) {
+        for (x, y) in points {
+            self.total_added += 1;
+            if self.rng.f64() < self.val_split && !self.x_train.is_empty() {
+                self.x_val.push(x.clone());
+                self.y_val.push(y.clone());
+            } else {
+                self.x_train.push(x.clone());
+                self.y_train.push(y.clone());
+            }
+        }
+        if let Some(cap) = self.rolling_window {
+            while self.x_train.len() > cap {
+                self.x_train.remove(0);
+                self.y_train.remove(0);
+            }
+            // keep validation bounded too (half the window)
+            while self.x_val.len() > cap / 2 + 1 {
+                self.x_val.remove(0);
+                self.y_val.remove(0);
+            }
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.x_train.len()
+    }
+
+    pub fn n_val(&self) -> usize {
+        self.x_val.len()
+    }
+
+    pub fn total_added(&self) -> u64 {
+        self.total_added
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x_train.is_empty()
+    }
+
+    /// Sample a training minibatch of exactly `batch` rows (with
+    /// replacement if the set is smaller — the fixed-shape HLO train step
+    /// needs full batches).
+    pub fn minibatch(&mut self, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(!self.x_train.is_empty(), "minibatch from empty dataset");
+        let xw = self.x_train[0].len();
+        let yw = self.y_train[0].len();
+        let mut xs = Vec::with_capacity(batch * xw);
+        let mut ys = Vec::with_capacity(batch * yw);
+        for _ in 0..batch {
+            let i = self.rng.below(self.x_train.len());
+            xs.extend_from_slice(&self.x_train[i]);
+            ys.extend_from_slice(&self.y_train[i]);
+        }
+        (xs, ys)
+    }
+
+    /// Flattened validation set (or train set if no val yet), padded by
+    /// cycling to exactly `batch` rows. Returns (x, y, real_rows).
+    pub fn val_batch(&self, batch: usize) -> (Vec<f32>, Vec<f32>, usize) {
+        let (xs_src, ys_src) = if self.x_val.is_empty() {
+            (&self.x_train, &self.y_train)
+        } else {
+            (&self.x_val, &self.y_val)
+        };
+        let n = xs_src.len().min(batch);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..batch {
+            let idx = i % xs_src.len();
+            xs.extend_from_slice(&xs_src[idx]);
+            ys.extend_from_slice(&ys_src[idx]);
+        }
+        (xs, ys, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(n: usize) -> Vec<Datapoint> {
+        (0..n).map(|i| (vec![i as f32; 3], vec![i as f32])).collect()
+    }
+
+    #[test]
+    fn add_splits_train_val() {
+        let mut d = Dataset::new(0.25, 0);
+        d.add(&pts(200));
+        assert_eq!(d.n_train() + d.n_val(), 200);
+        assert!(d.n_val() > 20 && d.n_val() < 80, "val {}", d.n_val());
+        assert_eq!(d.total_added(), 200);
+    }
+
+    #[test]
+    fn first_sample_goes_to_train() {
+        let mut d = Dataset::new(0.99, 0);
+        d.add(&pts(1));
+        assert_eq!(d.n_train(), 1);
+    }
+
+    #[test]
+    fn rolling_window_caps_and_drops_oldest() {
+        let mut d = Dataset::new(0.0, 0).with_rolling_window(10);
+        d.add(&pts(25));
+        assert_eq!(d.n_train(), 10);
+        // oldest dropped: first remaining input should be from the tail
+        assert!(d.x_train[0][0] >= 15.0);
+    }
+
+    #[test]
+    fn minibatch_shapes() {
+        let mut d = Dataset::new(0.0, 0);
+        d.add(&pts(5));
+        let (xs, ys) = d.minibatch(8);
+        assert_eq!(xs.len(), 8 * 3);
+        assert_eq!(ys.len(), 8);
+    }
+
+    #[test]
+    fn val_batch_pads_by_cycling() {
+        let mut d = Dataset::new(0.0, 0);
+        d.add(&pts(3));
+        let (xs, _ys, real) = d.val_batch(7);
+        assert_eq!(xs.len(), 7 * 3);
+        assert_eq!(real, 3);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = Dataset::new(0.3, 42);
+        let mut b = Dataset::new(0.3, 42);
+        a.add(&pts(50));
+        b.add(&pts(50));
+        assert_eq!(a.n_train(), b.n_train());
+    }
+}

@@ -1,0 +1,269 @@
+//! MD generator: velocity-Verlet propagation on the *predicted* PES, with
+//! the paper's uncertainty-patience / trajectory-restart policy (§2.2).
+//!
+//! Wire contract with the HLO committee model:
+//! `data_to_pred = [x (n_atoms*3), g (n_globals), s (n_states one-hot)]`
+//! `data_to_gene = [e (n_states), f (n_atoms*3)]` — after the controller's
+//! `prediction_check` this is the committee mean (or zeros when uncertain).
+//! A zeroed `data_to_gene` means the controller flagged the step as
+//! unreliable (paper: "send 0 instead to generator").
+
+use crate::kernels::Generator;
+use crate::rng::Rng;
+
+/// Geometry/feature layout shared between MD generators and the committee
+/// model (kept in sync through the artifact manifest metadata).
+#[derive(Debug, Clone, Copy)]
+pub struct MdLayout {
+    pub n_atoms: usize,
+    pub n_globals: usize,
+    pub n_states: usize,
+}
+
+impl MdLayout {
+    pub fn x_len(&self) -> usize {
+        self.n_atoms * 3
+    }
+    pub fn input_len(&self) -> usize {
+        self.x_len() + self.n_globals + self.n_states
+    }
+    pub fn output_len(&self) -> usize {
+        self.n_states + self.x_len()
+    }
+}
+
+/// Velocity-Verlet MD over ML-predicted forces.
+pub struct MdGenerator {
+    layout: MdLayout,
+    /// timestep
+    pub dt: f32,
+    /// friction for a crude Langevin thermostat (0 = NVE)
+    pub friction: f32,
+    /// thermal noise amplitude
+    pub temperature: f32,
+    /// allowed consecutive uncertain steps before restart (paper's
+    /// 'patience')
+    pub patience: u32,
+    /// stop after this many steps (None = run until the workflow stops)
+    pub max_steps: Option<u64>,
+    /// global features (e.g. charge), fixed per trajectory
+    pub globals: Vec<f32>,
+    /// active PES one-hot (photodynamics: current surface)
+    pub state_weights: Vec<f32>,
+
+    x: Vec<f32>,
+    v: Vec<f32>,
+    restart_geometry: Vec<f32>,
+    uncertain_streak: u32,
+    steps: u64,
+    restarts: u64,
+    rng: Rng,
+}
+
+impl MdGenerator {
+    pub fn new(layout: MdLayout, x0: Vec<f32>, seed: u64) -> Self {
+        assert_eq!(x0.len(), layout.x_len());
+        let mut state_weights = vec![0.0; layout.n_states];
+        state_weights[0] = 1.0;
+        MdGenerator {
+            layout,
+            dt: 0.05,
+            friction: 0.02,
+            temperature: 0.05,
+            patience: 5,
+            max_steps: None,
+            globals: vec![0.0; layout.n_globals],
+            state_weights,
+            v: vec![0.0; x0.len()],
+            restart_geometry: x0.clone(),
+            x: x0,
+            uncertain_streak: 0,
+            steps: 0,
+            restarts: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn with_dt(mut self, dt: f32) -> Self {
+        self.dt = dt;
+        self
+    }
+
+    pub fn with_patience(mut self, patience: u32) -> Self {
+        self.patience = patience;
+        self
+    }
+
+    pub fn with_max_steps(mut self, n: u64) -> Self {
+        self.max_steps = Some(n);
+        self
+    }
+
+    pub fn with_globals(mut self, g: Vec<f32>) -> Self {
+        assert_eq!(g.len(), self.layout.n_globals);
+        self.globals = g;
+        self
+    }
+
+    /// Set the active PES (photodynamics surface hopping).
+    pub fn set_state(&mut self, state: usize) {
+        self.state_weights.iter_mut().for_each(|w| *w = 0.0);
+        self.state_weights[state] = 1.0;
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts
+    }
+
+    fn assemble_input(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.layout.input_len());
+        out.extend_from_slice(&self.x);
+        out.extend_from_slice(&self.globals);
+        out.extend_from_slice(&self.state_weights);
+        out
+    }
+
+    fn restart(&mut self) {
+        self.restarts += 1;
+        self.uncertain_streak = 0;
+        // restart from the reference geometry with fresh thermal jitter
+        // (paper: "whether to restart trajectories")
+        for (x, &x0) in self.x.iter_mut().zip(&self.restart_geometry) {
+            *x = x0 + (self.rng.normal() * 0.05) as f32;
+        }
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    fn step(&mut self, forces: &[f32]) {
+        let dt = self.dt;
+        for i in 0..self.x.len() {
+            // Langevin-ish velocity update (unit masses)
+            self.v[i] = (1.0 - self.friction) * self.v[i]
+                + forces[i] * dt
+                + self.temperature * (self.rng.normal() as f32) * dt.sqrt();
+            self.x[i] += self.v[i] * dt;
+        }
+    }
+}
+
+impl Generator for MdGenerator {
+    fn generate_new_data(&mut self, data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        match data_to_gene {
+            None => {} // first call: just emit the initial geometry
+            Some(pred) if pred.len() != self.layout.output_len() => {
+                // malformed prediction — treat as uncertain
+                self.uncertain_streak += 1;
+                if self.uncertain_streak > self.patience {
+                    self.restart();
+                }
+            }
+            Some(pred) => {
+                let zeroed = pred.iter().all(|&p| p == 0.0);
+                if zeroed {
+                    // controller flagged high uncertainty: keep exploring on
+                    // the last velocities for up to `patience` steps, then
+                    // restart the trajectory (paper §2.2)
+                    self.uncertain_streak += 1;
+                    if self.uncertain_streak > self.patience {
+                        self.restart();
+                    } else {
+                        let zero_f = vec![0.0; self.layout.x_len()];
+                        self.step(&zero_f);
+                    }
+                } else {
+                    self.uncertain_streak = 0;
+                    let f_off = self.layout.n_states;
+                    let forces = &pred[f_off..f_off + self.layout.x_len()].to_vec();
+                    self.step(forces);
+                }
+            }
+        }
+        self.steps += 1;
+        let stop = self.max_steps.map(|m| self.steps >= m).unwrap_or(false);
+        (stop, self.assemble_input())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> MdLayout {
+        MdLayout { n_atoms: 2, n_globals: 1, n_states: 1 }
+    }
+
+    fn pred(e: f32, f: [f32; 6]) -> Vec<f32> {
+        let mut p = vec![e];
+        p.extend_from_slice(&f);
+        p
+    }
+
+    #[test]
+    fn first_call_emits_initial_geometry() {
+        let x0 = vec![0.0, 0.0, 0.0, 1.4, 0.0, 0.0];
+        let mut g = MdGenerator::new(layout(), x0.clone(), 0);
+        let (stop, out) = g.generate_new_data(None);
+        assert!(!stop);
+        assert_eq!(out.len(), layout().input_len());
+        assert_eq!(&out[..6], &x0[..]);
+        assert_eq!(out[6], 0.0); // global
+        assert_eq!(out[7], 1.0); // state one-hot
+    }
+
+    #[test]
+    fn forces_move_the_geometry() {
+        let x0 = vec![0.0; 6];
+        let mut g = MdGenerator::new(layout(), x0, 0);
+        g.temperature = 0.0;
+        let (_, before) = g.generate_new_data(None);
+        let (_, after) = g.generate_new_data(Some(&pred(0.0, [1.0, 0.0, 0.0, -1.0, 0.0, 0.0])));
+        assert!(after[0] > before[0]);
+        assert!(after[3] < before[3]);
+    }
+
+    #[test]
+    fn patience_then_restart_on_zeroed_predictions() {
+        let x0 = vec![0.0, 0.0, 0.0, 1.4, 0.0, 0.0];
+        let mut g = MdGenerator::new(layout(), x0, 0).with_patience(3);
+        g.generate_new_data(None);
+        let zero = vec![0.0; layout().output_len()];
+        for _ in 0..3 {
+            g.generate_new_data(Some(&zero));
+            assert_eq!(g.restarts(), 0);
+        }
+        g.generate_new_data(Some(&zero)); // patience exceeded
+        assert_eq!(g.restarts(), 1);
+    }
+
+    #[test]
+    fn certainty_resets_streak() {
+        let mut g = MdGenerator::new(layout(), vec![0.0; 6], 0).with_patience(2);
+        g.generate_new_data(None);
+        let zero = vec![0.0; layout().output_len()];
+        g.generate_new_data(Some(&zero));
+        g.generate_new_data(Some(&pred(-1.0, [0.1; 6]))); // confident
+        g.generate_new_data(Some(&zero));
+        g.generate_new_data(Some(&zero));
+        assert_eq!(g.restarts(), 0); // streak was reset in between
+    }
+
+    #[test]
+    fn stops_at_max_steps() {
+        let mut g = MdGenerator::new(layout(), vec![0.0; 6], 0).with_max_steps(2);
+        assert!(!g.generate_new_data(None).0);
+        assert!(g.generate_new_data(Some(&pred(1.0, [0.0; 6]))).0);
+    }
+
+    #[test]
+    fn state_switch_changes_onehot() {
+        let lay = MdLayout { n_atoms: 2, n_globals: 1, n_states: 3 };
+        let mut g = MdGenerator::new(lay, vec![0.0; 6], 0);
+        g.set_state(2);
+        let (_, out) = g.generate_new_data(None);
+        assert_eq!(&out[7..10], &[0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Built-in generator kernels: the exploration algorithms of Table 1.
+
+mod md;
+mod pso;
+mod random;
+mod sampler;
+
+pub use md::{MdGenerator, MdLayout};
+pub use pso::PsoGenerator;
+pub use random::RandomGenerator;
+pub use sampler::BiasedSampler;

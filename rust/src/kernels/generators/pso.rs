@@ -1,0 +1,180 @@
+//! Particle-swarm generator for the thermo-fluid application (§3.4):
+//! optimizes eddy-promoter layouts against the *predicted* objective.
+//!
+//! Wire contract with the CNN surrogate model:
+//! `data_to_pred = flattened occupancy grid (H*W)`,
+//! `data_to_gene = [C_f, St] committee mean` (zeroed when uncertain).
+//! The PSO minimizes `C_f − weight·St` (low drag, high heat transfer).
+
+use crate::kernels::Generator;
+use crate::rng::Rng;
+
+/// One PSO particle per generator process; the swarm lives across processes
+/// and shares information *through the surrogate* (each particle refines
+/// the model that all particles query — the paper's coupling).
+pub struct PsoGenerator {
+    pub grid: usize,
+    /// number of eddy promoters to place
+    pub n_promoters: usize,
+    /// trade-off weight in the objective
+    pub st_weight: f32,
+    /// inertia / cognitive / social-ish coefficients
+    pub inertia: f32,
+    pub cognitive: f32,
+    pub max_steps: Option<u64>,
+
+    /// promoter center positions in [0, grid)² (continuous; rasterized per
+    /// query)
+    pos: Vec<f32>,
+    vel: Vec<f32>,
+    best_pos: Vec<f32>,
+    best_obj: f32,
+    last_obj: Option<f32>,
+    steps: u64,
+    rng: Rng,
+}
+
+impl PsoGenerator {
+    pub fn new(grid: usize, n_promoters: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let pos: Vec<f32> =
+            (0..2 * n_promoters).map(|_| rng.range(1.0, (grid - 1) as f64) as f32).collect();
+        PsoGenerator {
+            grid,
+            n_promoters,
+            st_weight: 0.5,
+            inertia: 0.6,
+            cognitive: 0.4,
+            max_steps: None,
+            vel: vec![0.0; 2 * n_promoters],
+            best_pos: pos.clone(),
+            pos,
+            best_obj: f32::INFINITY,
+            last_obj: None,
+            steps: 0,
+            rng,
+        }
+    }
+
+    pub fn with_max_steps(mut self, n: u64) -> Self {
+        self.max_steps = Some(n);
+        self
+    }
+
+    /// Rasterize promoter centers into the occupancy grid the CNN consumes.
+    pub fn rasterize(&self) -> Vec<f32> {
+        let g = self.grid;
+        let mut grid = vec![0.0f32; g * g];
+        for p in 0..self.n_promoters {
+            let cx = self.pos[2 * p].clamp(0.0, (g - 1) as f32);
+            let cy = self.pos[2 * p + 1].clamp(0.0, (g - 1) as f32);
+            // 2x2 soft stamp
+            let (ix, iy) = (cx as usize, cy as usize);
+            for (dx, dy) in [(0usize, 0usize), (1, 0), (0, 1), (1, 1)] {
+                let (x, y) = ((ix + dx).min(g - 1), (iy + dy).min(g - 1));
+                grid[y * g + x] = 1.0;
+            }
+        }
+        grid
+    }
+
+    fn objective(&self, cf_st: &[f32]) -> f32 {
+        cf_st[0] - self.st_weight * cf_st.get(1).copied().unwrap_or(0.0)
+    }
+
+    pub fn best_objective(&self) -> f32 {
+        self.best_obj
+    }
+
+    fn move_particle(&mut self) {
+        for i in 0..self.pos.len() {
+            let r = self.rng.f32();
+            self.vel[i] = self.inertia * self.vel[i]
+                + self.cognitive * r * (self.best_pos[i] - self.pos[i])
+                + 0.3 * (self.rng.normal() as f32);
+            self.pos[i] = (self.pos[i] + self.vel[i]).clamp(0.0, (self.grid - 1) as f32);
+        }
+    }
+}
+
+impl Generator for PsoGenerator {
+    fn generate_new_data(&mut self, data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        match data_to_gene {
+            None => {}
+            Some(pred) if pred.iter().all(|&p| p == 0.0) => {
+                // surrogate uncertain here: exploit elsewhere while the
+                // oracle labels this region — random kick
+                for i in 0..self.pos.len() {
+                    self.pos[i] = (self.pos[i] + (self.rng.normal() as f32) * 2.0)
+                        .clamp(0.0, (self.grid - 1) as f32);
+                }
+            }
+            Some(pred) => {
+                let obj = self.objective(pred);
+                self.last_obj = Some(obj);
+                if obj < self.best_obj {
+                    self.best_obj = obj;
+                    self.best_pos.copy_from_slice(&self.pos);
+                }
+                self.move_particle();
+            }
+        }
+        self.steps += 1;
+        let stop = self.max_steps.map(|m| self.steps >= m).unwrap_or(false);
+        (stop, self.rasterize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rasterized_grid_shape_and_occupancy() {
+        let g = PsoGenerator::new(16, 3, 0);
+        let grid = g.rasterize();
+        assert_eq!(grid.len(), 256);
+        let occ: f32 = grid.iter().sum();
+        assert!(occ >= 3.0 && occ <= 12.0, "occupancy {occ}");
+    }
+
+    #[test]
+    fn improving_objective_updates_best() {
+        let mut g = PsoGenerator::new(16, 2, 1);
+        g.generate_new_data(None);
+        g.generate_new_data(Some(&[1.0, 0.0])); // obj 1.0
+        assert!((g.best_objective() - 1.0).abs() < 1e-6);
+        g.generate_new_data(Some(&[0.5, 0.2])); // obj 0.4
+        assert!((g.best_objective() - 0.4).abs() < 1e-6);
+        g.generate_new_data(Some(&[2.0, 0.0])); // worse: best unchanged
+        assert!((g.best_objective() - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zeroed_prediction_kicks_particle() {
+        let mut g = PsoGenerator::new(16, 2, 2);
+        g.generate_new_data(None);
+        let before = g.pos.clone();
+        g.generate_new_data(Some(&[0.0, 0.0]));
+        assert_ne!(before, g.pos);
+    }
+
+    #[test]
+    fn stops_at_max_steps() {
+        let mut g = PsoGenerator::new(8, 1, 3).with_max_steps(2);
+        assert!(!g.generate_new_data(None).0);
+        assert!(g.generate_new_data(Some(&[1.0, 1.0])).0);
+    }
+
+    #[test]
+    fn positions_stay_in_bounds() {
+        let mut g = PsoGenerator::new(8, 2, 4);
+        g.generate_new_data(None);
+        for _ in 0..100 {
+            g.generate_new_data(Some(&[1.0, 0.5]));
+            for &p in &g.pos {
+                assert!((0.0..=7.0).contains(&p));
+            }
+        }
+    }
+}

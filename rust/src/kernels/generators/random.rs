@@ -1,0 +1,75 @@
+//! Random-number generator kernel — the SI toy example (§S6), used by the
+//! quickstart and the protocol tests.
+
+use crate::kernels::Generator;
+use crate::rng::Rng;
+
+/// Mirrors the SI toy: emits random vectors; when the prediction is valid
+/// it multiplies its hidden state by it, when zeroed it resamples; signals
+/// stop after `limit` iterations.
+pub struct RandomGenerator {
+    pub dim: usize,
+    pub limit: u64,
+    counter: u64,
+    state: Vec<f32>,
+    rng: Rng,
+}
+
+impl RandomGenerator {
+    pub fn new(dim: usize, limit: u64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let state = rng.normal_vec(dim);
+        RandomGenerator { dim, limit, counter: 0, state, rng }
+    }
+}
+
+impl Generator for RandomGenerator {
+    fn generate_new_data(&mut self, data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        let data_to_pred = match data_to_gene {
+            None => self.rng.normal_vec(self.dim),
+            Some(pred) if pred.iter().any(|&p| p == 0.0) => self.rng.normal_vec(self.dim),
+            Some(pred) => {
+                // state * prediction (the SI example's update rule)
+                self.state.iter().zip(pred).map(|(s, p)| s * p).collect()
+            }
+        };
+        self.counter += 1;
+        (self.counter > self.limit, data_to_pred)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_fixed_width() {
+        let mut g = RandomGenerator::new(4, 100, 0);
+        let (_, d) = g.generate_new_data(None);
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn stop_after_limit() {
+        let mut g = RandomGenerator::new(4, 2, 0);
+        assert!(!g.generate_new_data(None).0);
+        assert!(!g.generate_new_data(None).0);
+        assert!(g.generate_new_data(None).0);
+    }
+
+    #[test]
+    fn multiplies_state_by_valid_prediction() {
+        let mut g = RandomGenerator::new(2, 10, 1);
+        g.state = vec![2.0, 3.0];
+        let (_, d) = g.generate_new_data(Some(&[4.0, 5.0]));
+        assert_eq!(d, vec![8.0, 15.0]);
+    }
+
+    #[test]
+    fn resamples_on_zeroed_prediction() {
+        let mut g = RandomGenerator::new(2, 10, 2);
+        g.state = vec![2.0, 3.0];
+        let (_, d) = g.generate_new_data(Some(&[0.0, 5.0]));
+        assert_ne!(d, vec![0.0, 15.0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Biased reaction-path sampler for the HAT application (§3.2): generates
+//! geometries along randomized interpolation paths between minima —
+//! "randomized sampling of relevant geometries; transition state search"
+//! (Table 1), producing an infinite stream of diverse unlabeled samples.
+
+use crate::kernels::Generator;
+use crate::potential::MullerBrown;
+use crate::rng::Rng;
+
+/// Minima of the Müller-Brown surface used as path endpoints.
+pub mod mb {
+    pub use crate::potential::muller_brown::MINIMA;
+}
+
+/// Walks interpolation paths between randomly chosen basin pairs with
+/// transverse noise — concentrating samples near reaction paths and
+/// transition regions, where the HAT models need data.
+pub struct BiasedSampler {
+    pub layout_len: usize,
+    pub n_states: usize,
+    pub n_globals: usize,
+    pub path_steps: u32,
+    pub noise: f32,
+    pub max_steps: Option<u64>,
+
+    #[allow(dead_code)]
+    surface: MullerBrown,
+    from: (f64, f64),
+    to: (f64, f64),
+    t: f32,
+    steps: u64,
+    rng: Rng,
+}
+
+impl BiasedSampler {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let (from, to) = Self::pick_pair(&mut rng);
+        BiasedSampler {
+            layout_len: 3,
+            n_states: 1,
+            n_globals: 1,
+            path_steps: 20,
+            noise: 0.08,
+            max_steps: None,
+            surface: MullerBrown::default(),
+            from,
+            to,
+            t: 0.0,
+            steps: 0,
+            rng,
+        }
+    }
+
+    pub fn with_max_steps(mut self, n: u64) -> Self {
+        self.max_steps = Some(n);
+        self
+    }
+
+    fn pick_pair(rng: &mut Rng) -> ((f64, f64), (f64, f64)) {
+        let i = rng.below(3);
+        let mut j = rng.below(3);
+        if j == i {
+            j = (j + 1) % 3;
+        }
+        (mb::MINIMA[i], mb::MINIMA[j])
+    }
+
+    fn current_point(&mut self) -> (f32, f32) {
+        let t = self.t as f64;
+        let x = self.from.0 + t * (self.to.0 - self.from.0);
+        let y = self.from.1 + t * (self.to.1 - self.from.1);
+        (
+            x as f32 + (self.rng.normal() as f32) * self.noise,
+            y as f32 + (self.rng.normal() as f32) * self.noise,
+        )
+    }
+}
+
+impl Generator for BiasedSampler {
+    fn generate_new_data(&mut self, _data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        // This generator streams diverse samples regardless of predictions
+        // (the paper's HAT case: "an infinite stream of diverse unlabeled
+        // samples"); predictions are still received (and used for UQ by the
+        // controller) but do not steer the path walk.
+        let (x, y) = self.current_point();
+        self.t += 1.0 / self.path_steps as f32;
+        if self.t >= 1.0 {
+            self.t = 0.0;
+            let (f, t2) = Self::pick_pair(&mut self.rng);
+            self.from = f;
+            self.to = t2;
+        }
+        self.steps += 1;
+        // layout: [x, y, z=0, globals..., state one-hot]
+        let mut out = vec![x, y, 0.0];
+        out.extend(std::iter::repeat(0.0).take(self.n_globals));
+        out.push(1.0);
+        out.extend(std::iter::repeat(0.0).take(self.n_states - 1));
+        let stop = self.max_steps.map(|m| self.steps >= m).unwrap_or(false);
+        (stop, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_have_expected_layout() {
+        let mut s = BiasedSampler::new(0);
+        let (_, d) = s.generate_new_data(None);
+        assert_eq!(d.len(), 3 + 1 + 1); // xyz + global + 1 state
+        assert_eq!(d[2], 0.0);
+        assert_eq!(d[4], 1.0);
+    }
+
+    #[test]
+    fn path_cycles_between_minima() {
+        let mut s = BiasedSampler::new(1);
+        s.noise = 0.0;
+        let first = s.generate_new_data(None).1;
+        for _ in 0..s.path_steps {
+            s.generate_new_data(None);
+        }
+        let later = s.generate_new_data(None).1;
+        // after a full path the sampler starts a new pair — samples differ
+        assert!((first[0] - later[0]).abs() + (first[1] - later[1]).abs() > 1e-3);
+    }
+
+    #[test]
+    fn samples_cover_transition_region() {
+        // noise-free midpoints must leave the basins (x between minima)
+        let mut s = BiasedSampler::new(2);
+        s.noise = 0.0;
+        let mut saw_midpath = false;
+        for _ in 0..200 {
+            let (_, d) = s.generate_new_data(None);
+            let near_minimum = mb::MINIMA.iter().any(|&(mx, my)| {
+                ((d[0] as f64 - mx).powi(2) + (d[1] as f64 - my).powi(2)).sqrt() < 0.15
+            });
+            if !near_minimum {
+                saw_midpath = true;
+            }
+        }
+        assert!(saw_midpath, "sampler never left the basins");
+    }
+
+    #[test]
+    fn stops_at_max_steps() {
+        let mut s = BiasedSampler::new(3).with_max_steps(2);
+        assert!(!s.generate_new_data(None).0);
+        assert!(s.generate_new_data(None).0);
+    }
+}

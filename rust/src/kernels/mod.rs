@@ -1,0 +1,17 @@
+//! Kernel interfaces + built-in implementations.
+//!
+//! [`traits`] defines the four user-facing kernel interfaces exactly as the
+//! paper's SI does (`UserGene.generate_new_data`, `UserOracle.run_calc`,
+//! `UserModel.{predict, update, get_weight, add_trainingset, retrain}`,
+//! plus the `Utils` pair `prediction_check` / `adjust_input_for_oracle`).
+//! The submodules provide the implementations used by the four application
+//! studies (Table 1) and the benches.
+
+pub mod generators;
+pub mod models;
+pub mod oracles;
+pub mod traits;
+
+pub use traits::{
+    Generator, KernelSet, Mode, Model, ModelFactory, Oracle, Utils,
+};

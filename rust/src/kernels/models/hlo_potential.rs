@@ -1,0 +1,430 @@
+//! The machine-learned potential as a PAL model kernel, backed by the AOT
+//! artifacts (`potential_<tag>_{fwd,euq,train,init}`).
+//!
+//! One instance = one committee member (one prediction or training rank).
+//! Wire formats (shared with [`crate::kernels::generators::MdGenerator`]
+//! and [`crate::kernels::oracles::PesOracle`]):
+//!
+//! * `data_to_pred` row = `[x (N*3), g (G), s (S)]`
+//! * prediction row     = `[e (S), f (N*3)]` (this member's energies +
+//!   state-weighted forces)
+//! * datapoint          = `(input_row, [e (S), f (N*3)])`
+
+use std::collections::BTreeMap;
+
+use anyhow::Context;
+
+use crate::data::Dataset;
+use crate::kernels::{Mode, Model};
+use crate::runtime::{Engine, Manifest, TensorIn};
+
+use super::util::{pad_rows, plan_chunks, split_columns};
+
+/// Tunables for the training side.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Adam steps per retraining round (between interrupt checks the cost
+    /// is one HLO call, so interrupts are honored at step granularity).
+    pub epochs_per_round: usize,
+    /// Validation fraction of incoming labeled data.
+    pub val_split: f64,
+    /// Rolling-window cap on the training set (SI use case 2), if any.
+    pub rolling_window: Option<usize>,
+    /// Ask the controller to stop the workflow once training loss falls
+    /// below this (end-to-end convergence criterion).
+    pub stop_below_loss: Option<f32>,
+    /// Checkpoint file for `save_progress` (weights + optimizer + dataset);
+    /// loaded back on construction when it exists (the paper's `result_dir`
+    /// persistence, SI §S5).
+    pub checkpoint: Option<std::path::PathBuf>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            epochs_per_round: 32,
+            val_split: 0.15,
+            rolling_window: None,
+            stop_below_loss: None,
+            checkpoint: None,
+        }
+    }
+}
+
+/// One committee member of the ML potential, serving either kernel side.
+pub struct HloPotentialModel {
+    engine: Engine,
+    mode: Mode,
+    // manifest-derived shapes
+    n_atoms: usize,
+    n_globals: usize,
+    n_states: usize,
+    param_size: usize,
+    opt_size: usize,
+    fwd_names: BTreeMap<usize, String>,
+    train_name: String,
+    train_batch: usize,
+    // state
+    w: Vec<f32>,
+    opt: Vec<f32>,
+    dataset: Dataset,
+    last_loss: Option<f32>,
+    last_round_epochs: u64,
+    opts: TrainOptions,
+    rounds: u64,
+}
+
+impl HloPotentialModel {
+    /// Build a member model from the artifact set `potential_<tag>_*`.
+    /// `seed` individualizes the member (pass `base_seed + replica`).
+    pub fn new(
+        manifest: Manifest,
+        tag: &str,
+        mode: Mode,
+        seed: u32,
+        opts: TrainOptions,
+    ) -> anyhow::Result<Self> {
+        let engine = Engine::new(manifest)?;
+        let init_name = format!("potential_{tag}_init");
+        let init = engine.entry(&init_name)?;
+        anyhow::ensure!(
+            init.meta_usize("n_members")? == 1,
+            "HloPotentialModel needs a single-member artifact set (tag {tag} has n_members={})",
+            init.meta_usize("n_members")?
+        );
+        let n_atoms = init.meta_usize("n_atoms")?;
+        let n_globals = init.meta_usize("n_globals")?;
+        let n_states = init.meta_usize("n_states")?;
+        let param_size = init.meta_usize("param_size")?;
+        let opt_size = init.meta_usize("opt_size")?;
+
+        let mut fwd_names = BTreeMap::new();
+        let mut train_name = None;
+        let mut train_batch = 0;
+        for e in engine.manifest().with_prefix(&format!("potential_{tag}_")) {
+            match e.meta.get("entry").as_str() {
+                Some("fwd") => {
+                    fwd_names.insert(e.meta_usize("batch")?, e.name.clone());
+                }
+                Some("train") => {
+                    train_batch = e.meta_usize("batch")?;
+                    train_name = Some(e.name.clone());
+                }
+                _ => {}
+            }
+        }
+        let train_name = train_name.context("no train artifact for tag")?;
+        anyhow::ensure!(!fwd_names.is_empty(), "no fwd artifacts for tag {tag}");
+
+        // member init on-device (same HLO the paper's training kernel owns)
+        let w = engine
+            .call(&init_name, &[TensorIn::U32(seed)])?
+            .remove(0);
+        debug_assert_eq!(w.len(), param_size);
+
+        let mut model = HloPotentialModel {
+            engine,
+            mode,
+            n_atoms,
+            n_globals,
+            n_states,
+            param_size,
+            opt_size,
+            fwd_names,
+            train_name,
+            train_batch,
+            w,
+            opt: vec![0.0; opt_size],
+            dataset: {
+                let d = Dataset::new(opts.val_split, seed as u64 ^ 0xDA7A);
+                match opts.rolling_window {
+                    Some(cap) => d.with_rolling_window(cap),
+                    None => d,
+                }
+            },
+            last_loss: None,
+            last_round_epochs: 0,
+            opts,
+            rounds: 0,
+        };
+        model.try_load_checkpoint();
+        Ok(model)
+    }
+
+    /// Restore weights/optimizer/dataset from the checkpoint, if present.
+    fn try_load_checkpoint(&mut self) {
+        let Some(path) = self.opts.checkpoint.clone() else { return };
+        let Ok(text) = std::fs::read_to_string(&path) else { return };
+        let Ok(v) = crate::json::parse(&text) else { return };
+        let read_vec = |val: &crate::json::Value| -> Vec<f32> {
+            val.as_array()
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|f| f as f32).collect())
+                .unwrap_or_default()
+        };
+        let w = read_vec(v.get("w"));
+        let opt = read_vec(v.get("opt"));
+        if w.len() == self.param_size && opt.len() == self.opt_size {
+            self.w = w;
+            self.opt = opt;
+        }
+        if let Some(rounds) = v.get("rounds").as_f64() {
+            self.rounds = rounds as u64;
+        }
+        if let (Some(xs), Some(ys)) = (v.get("xs").as_array(), v.get("ys").as_array()) {
+            let points: Vec<(Vec<f32>, Vec<f32>)> = xs
+                .iter()
+                .zip(ys)
+                .map(|(x, y)| (read_vec(x), read_vec(y)))
+                .filter(|(x, y)| {
+                    x.len() == self.input_row_len() && y.len() == self.label_row_len()
+                })
+                .collect();
+            self.dataset.add(&points);
+        }
+        if let Some(loss) = v.get("last_loss").as_f64() {
+            self.last_loss = Some(loss as f32);
+        }
+    }
+
+    fn write_checkpoint(&self) {
+        let Some(path) = &self.opts.checkpoint else { return };
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        use crate::json::{arr_f32, obj, Value};
+        let xs = Value::Array(self.dataset.x_train.iter().map(|x| arr_f32(x)).collect());
+        let ys = Value::Array(self.dataset.y_train.iter().map(|y| arr_f32(y)).collect());
+        let snap = obj(vec![
+            ("w", arr_f32(&self.w)),
+            ("opt", arr_f32(&self.opt)),
+            ("rounds", Value::Num(self.rounds as f64)),
+            ("last_loss", match self.last_loss {
+                Some(l) if l.is_finite() => Value::Num(l as f64),
+                _ => Value::Null,
+            }),
+            ("xs", xs),
+            ("ys", ys),
+        ]);
+        let _ = std::fs::write(path, crate::json::to_string(&snap));
+    }
+
+    pub fn input_row_len(&self) -> usize {
+        self.n_atoms * 3 + self.n_globals + self.n_states
+    }
+
+    pub fn output_row_len(&self) -> usize {
+        self.n_states + self.n_atoms * 3
+    }
+
+    pub fn label_row_len(&self) -> usize {
+        self.n_states + self.n_atoms * 3
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.dataset.n_train()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn widths(&self) -> [usize; 3] {
+        [self.n_atoms * 3, self.n_globals, self.n_states]
+    }
+
+    /// Forward one padded chunk; returns (e rows, f rows) flattened.
+    fn fwd_chunk(&self, batch: usize, rows: &[Vec<f32>]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let name = &self.fwd_names[&batch];
+        let [n3, g, s] = self.widths();
+        let mut cols = split_columns(rows, &self.widths());
+        pad_rows(&mut cols[0], rows.len(), batch, n3);
+        pad_rows(&mut cols[1], rows.len(), batch, g);
+        pad_rows(&mut cols[2], rows.len(), batch, s);
+        let out = self.engine.call(
+            name,
+            &[
+                TensorIn::F32(&self.w),
+                TensorIn::F32(&cols[0]),
+                TensorIn::F32(&cols[1]),
+                TensorIn::F32(&cols[2]),
+            ],
+        )?;
+        // outputs: e_all(M=1,B,S), e_mean(B,S), e_std, f_mean(B,N3), f_std
+        Ok((out[1].clone(), out[3].clone()))
+    }
+
+    /// Energy-only committee UQ through the fused Pallas kernel path —
+    /// exposed for the euq benches and dynamic-buffer experiments.
+    pub fn euq(&self, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        // find an euq artifact
+        let prefix = self
+            .train_name
+            .strip_suffix(&format!("_train_t{}", self.train_batch))
+            .unwrap_or("potential")
+            .to_string();
+        let euq = self
+            .engine
+            .manifest()
+            .with_prefix(&prefix)
+            .find(|e| e.meta.get("entry").as_str() == Some("euq"))
+            .map(|e| (e.name.clone(), e.meta_usize("batch").unwrap_or(0)))
+            .context("no euq artifact")?;
+        let (name, batch) = euq;
+        let [n3, g, _] = self.widths();
+        let take = rows.len().min(batch);
+        let mut cols = split_columns(&rows[..take], &self.widths());
+        pad_rows(&mut cols[0], take, batch, n3);
+        pad_rows(&mut cols[1], take, batch, g);
+        let out = self.engine.call(
+            &name,
+            &[TensorIn::F32(&self.w), TensorIn::F32(&cols[0]), TensorIn::F32(&cols[1])],
+        )?;
+        Ok(out[1][..take * self.n_states].to_vec()) // e_mean rows
+    }
+
+    /// Validation energy MSE with current weights (learning-curve metric).
+    pub fn validation_mse(&mut self) -> anyhow::Result<Option<f32>> {
+        if self.dataset.n_val() == 0 && self.dataset.n_train() == 0 {
+            return Ok(None);
+        }
+        let batch = *self.fwd_names.keys().last().unwrap();
+        let (xs, ys, real) = self.dataset.val_batch(batch);
+        let rows: Vec<Vec<f32>> = xs
+            .chunks(self.input_row_len())
+            .map(|c| c.to_vec())
+            .collect();
+        let (e, _f) = self.fwd_chunk(batch, &rows)?;
+        let s = self.n_states;
+        let yl = self.label_row_len();
+        let mut mse = 0.0f32;
+        for i in 0..real {
+            for k in 0..s {
+                let d = e[i * s + k] - ys[i * yl + k];
+                mse += d * d;
+            }
+        }
+        Ok(Some(mse / (real * s) as f32))
+    }
+
+    fn train_step(&mut self) -> anyhow::Result<f32> {
+        let t = self.train_batch;
+        let (xs, ys) = self.dataset.minibatch(t);
+        let in_rows: Vec<Vec<f32>> = xs.chunks(self.input_row_len()).map(|c| c.to_vec()).collect();
+        let lab_rows: Vec<Vec<f32>> = ys.chunks(self.label_row_len()).map(|c| c.to_vec()).collect();
+        let in_cols = split_columns(&in_rows, &self.widths());
+        let lab_cols = split_columns(&lab_rows, &[self.n_states, self.n_atoms * 3]);
+        let out = self.engine.call(
+            &self.train_name,
+            &[
+                TensorIn::F32(&self.w),
+                TensorIn::F32(&self.opt),
+                TensorIn::F32(&in_cols[0]),
+                TensorIn::F32(&in_cols[1]),
+                TensorIn::F32(&in_cols[2]),
+                TensorIn::F32(&lab_cols[0]),
+                TensorIn::F32(&lab_cols[1]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.w = it.next().unwrap();
+        self.opt = it.next().unwrap();
+        let loss = it.next().unwrap()[0];
+        Ok(loss)
+    }
+}
+
+impl Model for HloPotentialModel {
+    fn predict(&mut self, list_data_to_pred: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let batches: Vec<usize> = self.fwd_names.keys().copied().collect();
+        let mut out = Vec::with_capacity(list_data_to_pred.len());
+        let mut off = 0;
+        for (batch, used) in plan_chunks(list_data_to_pred.len(), &batches) {
+            let rows = &list_data_to_pred[off..off + used];
+            match self.fwd_chunk(batch, rows) {
+                Ok((e, f)) => {
+                    let s = self.n_states;
+                    let n3 = self.n_atoms * 3;
+                    for i in 0..used {
+                        let mut row = Vec::with_capacity(s + n3);
+                        row.extend_from_slice(&e[i * s..(i + 1) * s]);
+                        row.extend_from_slice(&f[i * n3..(i + 1) * n3]);
+                        out.push(row);
+                    }
+                }
+                Err(_) => {
+                    // degrade gracefully: zeroed predictions signal
+                    // "unreliable" to the controller/generators
+                    for _ in 0..used {
+                        out.push(vec![0.0; self.output_row_len()]);
+                    }
+                }
+            }
+            off += used;
+        }
+        out
+    }
+
+    fn update(&mut self, weight_array: &[f32]) {
+        if weight_array.len() == self.param_size {
+            self.w.copy_from_slice(weight_array);
+        }
+    }
+
+    fn get_weight(&self) -> Vec<f32> {
+        self.w.clone()
+    }
+
+    fn get_weight_size(&self) -> usize {
+        self.param_size
+    }
+
+    fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
+        self.dataset.add(datapoints);
+    }
+
+    fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {
+        if self.dataset.is_empty() {
+            return false;
+        }
+        self.last_round_epochs = 0;
+        for _ in 0..self.opts.epochs_per_round {
+            match self.train_step() {
+                Ok(loss) => self.last_loss = Some(loss),
+                Err(_) => break,
+            }
+            self.last_round_epochs += 1;
+            if interrupt() {
+                break;
+            }
+        }
+        self.rounds += 1;
+        match (self.opts.stop_below_loss, self.last_loss) {
+            (Some(th), Some(loss)) => loss < th,
+            _ => false,
+        }
+    }
+
+    fn last_loss(&self) -> Option<f32> {
+        self.last_loss
+    }
+
+    fn last_round_epochs(&self) -> u64 {
+        self.last_round_epochs
+    }
+
+    fn save_progress(&mut self) {
+        self.write_checkpoint();
+    }
+
+    fn stop_run(&mut self) {
+        self.write_checkpoint();
+    }
+}

@@ -1,0 +1,210 @@
+//! The CNN thermo-fluid surrogate as a PAL model kernel
+//! (`surrogate1_{fwd,train,init}` artifacts), one committee member per rank.
+//!
+//! Wire formats (shared with [`crate::kernels::generators::PsoGenerator`]
+//! and [`crate::kernels::oracles::ChannelFlowOracle`]):
+//! `data_to_pred` row = flattened occupancy grid (H*W);
+//! prediction row = `[C_f, St]`; datapoint = `(grid, [C_f, St])`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Context;
+
+use crate::data::Dataset;
+use crate::kernels::{Mode, Model};
+use crate::runtime::{Engine, Manifest, TensorIn};
+
+use super::util::{pad_rows, plan_chunks};
+
+/// One committee member of the CNN surrogate.
+pub struct HloSurrogateModel {
+    engine: Engine,
+    #[allow(dead_code)]
+    mode: Mode,
+    grid: usize,
+    n_out: usize,
+    param_size: usize,
+    #[allow(dead_code)]
+    opt_size: usize,
+    fwd_names: BTreeMap<usize, String>,
+    train_name: String,
+    train_batch: usize,
+    w: Vec<f32>,
+    opt: Vec<f32>,
+    dataset: Dataset,
+    last_loss: Option<f32>,
+    pub epochs_per_round: usize,
+    rounds: u64,
+}
+
+impl HloSurrogateModel {
+    pub fn new(manifest: Manifest, mode: Mode, seed: u32) -> anyhow::Result<Self> {
+        let engine = Engine::new(manifest)?;
+        let init = engine.entry("surrogate1_init")?;
+        anyhow::ensure!(init.meta_usize("n_members")? == 1, "need single-member surrogate");
+        let grid = init.meta_usize("grid")?;
+        let n_out = init.meta_usize("n_out")?;
+        let param_size = init.meta_usize("param_size")?;
+        let opt_size = init.meta_usize("opt_size")?;
+        let mut fwd_names = BTreeMap::new();
+        let mut train_name = None;
+        let mut train_batch = 0;
+        for e in engine.manifest().with_prefix("surrogate1_") {
+            match e.meta.get("entry").as_str() {
+                Some("fwd") => {
+                    fwd_names.insert(e.meta_usize("batch")?, e.name.clone());
+                }
+                Some("train") => {
+                    train_batch = e.meta_usize("batch")?;
+                    train_name = Some(e.name.clone());
+                }
+                _ => {}
+            }
+        }
+        let train_name = train_name.context("no surrogate train artifact")?;
+        let w = engine.call("surrogate1_init", &[TensorIn::U32(seed)])?.remove(0);
+        Ok(HloSurrogateModel {
+            engine,
+            mode,
+            grid,
+            n_out,
+            param_size,
+            opt_size,
+            fwd_names,
+            train_name,
+            train_batch,
+            w,
+            opt: vec![0.0; opt_size],
+            dataset: Dataset::new(0.15, seed as u64 ^ 0xCFD),
+            last_loss: None,
+            epochs_per_round: 32,
+            rounds: 0,
+        })
+    }
+
+    pub fn input_row_len(&self) -> usize {
+        self.grid * self.grid
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.dataset.n_train()
+    }
+
+    fn fwd_chunk(&self, batch: usize, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        let name = &self.fwd_names[&batch];
+        let w = self.input_row_len();
+        let mut flat = Vec::with_capacity(batch * w);
+        for r in rows {
+            flat.extend_from_slice(r);
+        }
+        pad_rows(&mut flat, rows.len(), batch, w);
+        let out = self.engine.call(name, &[TensorIn::F32(&self.w), TensorIn::F32(&flat)])?;
+        Ok(out[1].clone()) // y_mean (B, n_out)
+    }
+
+    fn train_step(&mut self) -> anyhow::Result<f32> {
+        let (xs, ys) = self.dataset.minibatch(self.train_batch);
+        let out = self.engine.call(
+            &self.train_name,
+            &[
+                TensorIn::F32(&self.w),
+                TensorIn::F32(&self.opt),
+                TensorIn::F32(&xs),
+                TensorIn::F32(&ys),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.w = it.next().unwrap();
+        self.opt = it.next().unwrap();
+        Ok(it.next().unwrap()[0])
+    }
+
+    /// Validation MSE (learning-curve metric for the thermo-fluid example).
+    pub fn validation_mse(&mut self) -> anyhow::Result<Option<f32>> {
+        if self.dataset.n_val() == 0 && self.dataset.n_train() == 0 {
+            return Ok(None);
+        }
+        let batch = *self.fwd_names.keys().last().unwrap();
+        let (xs, ys, real) = self.dataset.val_batch(batch);
+        let rows: Vec<Vec<f32>> =
+            xs.chunks(self.input_row_len()).map(|c| c.to_vec()).collect();
+        let y = self.fwd_chunk(batch, &rows)?;
+        let o = self.n_out;
+        let mut mse = 0.0;
+        for i in 0..real {
+            for k in 0..o {
+                let d = y[i * o + k] - ys[i * o + k];
+                mse += d * d;
+            }
+        }
+        Ok(Some(mse / (real * o) as f32))
+    }
+}
+
+impl Model for HloSurrogateModel {
+    fn predict(&mut self, list_data_to_pred: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let batches: Vec<usize> = self.fwd_names.keys().copied().collect();
+        let mut out = Vec::with_capacity(list_data_to_pred.len());
+        let mut off = 0;
+        for (batch, used) in plan_chunks(list_data_to_pred.len(), &batches) {
+            let rows = &list_data_to_pred[off..off + used];
+            match self.fwd_chunk(batch, rows) {
+                Ok(y) => {
+                    for i in 0..used {
+                        out.push(y[i * self.n_out..(i + 1) * self.n_out].to_vec());
+                    }
+                }
+                Err(_) => {
+                    for _ in 0..used {
+                        out.push(vec![0.0; self.n_out]);
+                    }
+                }
+            }
+            off += used;
+        }
+        out
+    }
+
+    fn update(&mut self, weight_array: &[f32]) {
+        if weight_array.len() == self.param_size {
+            self.w.copy_from_slice(weight_array);
+        }
+    }
+
+    fn get_weight(&self) -> Vec<f32> {
+        self.w.clone()
+    }
+
+    fn get_weight_size(&self) -> usize {
+        self.param_size
+    }
+
+    fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
+        self.dataset.add(datapoints);
+    }
+
+    fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {
+        if self.dataset.is_empty() {
+            return false;
+        }
+        for _ in 0..self.epochs_per_round {
+            match self.train_step() {
+                Ok(loss) => self.last_loss = Some(loss),
+                Err(_) => break,
+            }
+            if interrupt() {
+                break;
+            }
+        }
+        self.rounds += 1;
+        false
+    }
+
+    fn last_loss(&self) -> Option<f32> {
+        self.last_loss
+    }
+}

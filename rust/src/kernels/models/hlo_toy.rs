@@ -1,0 +1,175 @@
+//! The SI toy model (linear 4→4) as an HLO-backed PAL kernel — used by the
+//! quickstart example to demonstrate the full artifact path with negligible
+//! compute.
+//!
+//! The toy artifacts are lowered with the full 3-member committee in one
+//! program (`toy_fwd_b20` takes all members' weights). Each rank owns one
+//! member, so the fused forward is fed the member's weights replicated M
+//! times and `y_mean` (identical across replicas) is that member's output.
+
+use anyhow::Context;
+
+use crate::data::Dataset;
+use crate::kernels::{Mode, Model};
+use crate::runtime::{Engine, Manifest, TensorIn};
+
+use super::util::pad_rows;
+
+/// One committee member of the SI toy model.
+pub struct HloToyModel {
+    engine: Engine,
+    #[allow(dead_code)]
+    mode: Mode,
+    n_in: usize,
+    n_out: usize,
+    n_members: usize,
+    param_size: usize,
+    #[allow(dead_code)]
+    opt_size: usize,
+    fwd_name: String,
+    fwd_batch: usize,
+    train_name: String,
+    train_batch: usize,
+    w: Vec<f32>,
+    opt: Vec<f32>,
+    dataset: Dataset,
+    last_loss: Option<f32>,
+    pub epochs_per_round: usize,
+}
+
+impl HloToyModel {
+    pub fn new(manifest: Manifest, mode: Mode, seed: u32) -> anyhow::Result<Self> {
+        let engine = Engine::new(manifest)?;
+        let init = engine.entry("toy_init")?;
+        let n_in = init.meta_usize("n_in")?;
+        let n_out = init.meta_usize("n_out")?;
+        let n_members = init.meta_usize("n_members")?;
+        let param_size = init.meta_usize("param_size")?;
+        let opt_size = init.meta_usize("opt_size")?;
+        let mut fwd = None;
+        let mut train = None;
+        for e in engine.manifest().with_prefix("toy_") {
+            match e.meta.get("entry").as_str() {
+                Some("fwd") => fwd = Some((e.name.clone(), e.meta_usize("batch")?)),
+                Some("train") => train = Some((e.name.clone(), e.meta_usize("batch")?)),
+                _ => {}
+            }
+        }
+        let (fwd_name, fwd_batch) = fwd.context("no toy fwd artifact")?;
+        let (train_name, train_batch) = train.context("no toy train artifact")?;
+        // all members initialized on-device; this rank keeps one slice
+        let w_all = engine.call("toy_init", &[TensorIn::U32(0)])?.remove(0);
+        let member = (seed as usize) % n_members;
+        let w = w_all[member * param_size..(member + 1) * param_size].to_vec();
+        Ok(HloToyModel {
+            engine,
+            mode,
+            n_in,
+            n_out,
+            n_members,
+            param_size,
+            opt_size,
+            fwd_name,
+            fwd_batch,
+            train_name,
+            train_batch,
+            w,
+            opt: vec![0.0; opt_size],
+            dataset: Dataset::new(0.2, seed as u64),
+            last_loss: None,
+            epochs_per_round: 16,
+        })
+    }
+
+    fn replicated_weights(&self) -> Vec<f32> {
+        let mut w_all = Vec::with_capacity(self.n_members * self.param_size);
+        for _ in 0..self.n_members {
+            w_all.extend_from_slice(&self.w);
+        }
+        w_all
+    }
+}
+
+impl Model for HloToyModel {
+    fn predict(&mut self, list_data_to_pred: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let b = self.fwd_batch;
+        let w_all = self.replicated_weights();
+        let mut out = Vec::with_capacity(list_data_to_pred.len());
+        for chunk in list_data_to_pred.chunks(b) {
+            let mut flat = Vec::with_capacity(b * self.n_in);
+            for row in chunk {
+                flat.extend_from_slice(&row[..self.n_in.min(row.len())]);
+                if row.len() < self.n_in {
+                    flat.extend(std::iter::repeat(0.0).take(self.n_in - row.len()));
+                }
+            }
+            pad_rows(&mut flat, chunk.len(), b, self.n_in);
+            match self.engine.call(&self.fwd_name, &[TensorIn::F32(&w_all), TensorIn::F32(&flat)]) {
+                Ok(res) => {
+                    let y_mean = &res[1]; // (B, n_out); identical members
+                    for i in 0..chunk.len() {
+                        out.push(y_mean[i * self.n_out..(i + 1) * self.n_out].to_vec());
+                    }
+                }
+                Err(_) => {
+                    for _ in 0..chunk.len() {
+                        out.push(vec![0.0; self.n_out]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn update(&mut self, weight_array: &[f32]) {
+        if weight_array.len() == self.param_size {
+            self.w.copy_from_slice(weight_array);
+        }
+    }
+
+    fn get_weight(&self) -> Vec<f32> {
+        self.w.clone()
+    }
+
+    fn get_weight_size(&self) -> usize {
+        self.param_size
+    }
+
+    fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
+        self.dataset.add(datapoints);
+    }
+
+    fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {
+        if self.dataset.is_empty() {
+            return false;
+        }
+        for _ in 0..self.epochs_per_round {
+            let (xs, ys) = self.dataset.minibatch(self.train_batch);
+            match self.engine.call(
+                &self.train_name,
+                &[
+                    TensorIn::F32(&self.w),
+                    TensorIn::F32(&self.opt),
+                    TensorIn::F32(&xs),
+                    TensorIn::F32(&ys),
+                ],
+            ) {
+                Ok(res) => {
+                    let mut it = res.into_iter();
+                    self.w = it.next().unwrap();
+                    self.opt = it.next().unwrap();
+                    self.last_loss = Some(it.next().unwrap()[0]);
+                }
+                Err(_) => break,
+            }
+            if interrupt() {
+                break;
+            }
+        }
+        false
+    }
+
+    fn last_loss(&self) -> Option<f32> {
+        self.last_loss
+    }
+}

@@ -1,0 +1,16 @@
+//! Model kernels backed by AOT artifacts (PJRT) — the deployed ML models.
+//!
+//! Each prediction/training rank owns **one committee member**, exactly like
+//! the paper's one-MPI-process-per-model layout; the controller aggregates
+//! across ranks (query-by-committee). The `*1` artifact variants
+//! (`potential_ground1_*`, `surrogate1_*`) are single-member lowerings used
+//! here; the fused multi-member variants back the fused-committee benches.
+
+mod hlo_potential;
+mod hlo_surrogate;
+mod hlo_toy;
+pub(crate) mod util;
+
+pub use hlo_potential::{HloPotentialModel, TrainOptions};
+pub use hlo_surrogate::HloSurrogateModel;
+pub use hlo_toy::HloToyModel;

@@ -1,0 +1,108 @@
+//! Shared plumbing for HLO-backed models: row splitting and batch planning.
+
+/// Split a list of equal-width rows into contiguous column blocks.
+///
+/// `widths` partitions each row; returns one flat column-major-batch array
+/// per block: `out[b]` holds `rows.len() * widths[b]` values.
+pub fn split_columns(rows: &[Vec<f32>], widths: &[usize]) -> Vec<Vec<f32>> {
+    let row_len: usize = widths.iter().sum();
+    let mut out: Vec<Vec<f32>> =
+        widths.iter().map(|w| Vec::with_capacity(w * rows.len())).collect();
+    for row in rows {
+        assert_eq!(row.len(), row_len, "row width mismatch");
+        let mut off = 0;
+        for (b, &w) in widths.iter().enumerate() {
+            out[b].extend_from_slice(&row[off..off + w]);
+            off += w;
+        }
+    }
+    out
+}
+
+/// Plan chunking of `n` rows over the available fixed batch sizes
+/// (ascending). Returns a list of `(batch_size, rows_used)` chunks covering
+/// all `n` rows; the final chunk may be padded (`rows_used < batch_size`).
+pub fn plan_chunks(n: usize, batches: &[usize]) -> Vec<(usize, usize)> {
+    assert!(!batches.is_empty(), "no fwd batch variants in manifest");
+    let mut sorted = batches.to_vec();
+    sorted.sort_unstable();
+    let largest = *sorted.last().unwrap();
+    let mut plan = Vec::new();
+    let mut remaining = n;
+    while remaining > 0 {
+        if remaining >= largest {
+            plan.push((largest, largest));
+            remaining -= largest;
+        } else {
+            // smallest variant that covers the remainder
+            let b = *sorted.iter().find(|&&b| b >= remaining).unwrap_or(&largest);
+            plan.push((b, remaining));
+            remaining = 0;
+        }
+    }
+    plan
+}
+
+/// Pad `rows`-rows flat array of width `w` up to `batch` rows by repeating
+/// the final row (keeps values in-distribution for the padded lanes).
+pub fn pad_rows(data: &mut Vec<f32>, rows: usize, batch: usize, w: usize) {
+    debug_assert_eq!(data.len(), rows * w);
+    if rows == 0 {
+        data.resize(batch * w, 0.0);
+        return;
+    }
+    let last: Vec<f32> = data[(rows - 1) * w..rows * w].to_vec();
+    for _ in rows..batch {
+        data.extend_from_slice(&last);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_columns_partitions() {
+        let rows = vec![vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        let cols = split_columns(&rows, &[3, 1]);
+        assert_eq!(cols[0], vec![1.0, 2.0, 3.0, 5.0, 6.0, 7.0]);
+        assert_eq!(cols[1], vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn plan_exact_fit() {
+        assert_eq!(plan_chunks(16, &[1, 16, 89]), vec![(16, 16)]);
+        assert_eq!(plan_chunks(89, &[1, 16, 89]), vec![(89, 89)]);
+    }
+
+    #[test]
+    fn plan_chunks_large_n() {
+        let plan = plan_chunks(200, &[1, 16, 89]);
+        let used: usize = plan.iter().map(|&(_, u)| u).sum();
+        assert_eq!(used, 200);
+        assert_eq!(plan[0], (89, 89));
+        assert_eq!(plan[1], (89, 89));
+        // remainder 22 → smallest variant >= 22 is 89
+        assert_eq!(plan[2], (89, 22));
+    }
+
+    #[test]
+    fn plan_small_n_picks_tight_variant() {
+        assert_eq!(plan_chunks(3, &[1, 16, 89]), vec![(16, 3)]);
+        assert_eq!(plan_chunks(1, &[1, 16, 89]), vec![(1, 1)]);
+    }
+
+    #[test]
+    fn pad_repeats_last_row() {
+        let mut d = vec![1.0, 2.0, 3.0, 4.0];
+        pad_rows(&mut d, 2, 4, 2);
+        assert_eq!(d, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pad_empty_zero_fills() {
+        let mut d: Vec<f32> = vec![];
+        pad_rows(&mut d, 0, 2, 3);
+        assert_eq!(d, vec![0.0; 6]);
+    }
+}

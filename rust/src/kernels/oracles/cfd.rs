@@ -1,0 +1,167 @@
+//! Reduced-order channel-flow "CFD" oracle for the thermo-fluid
+//! application (§3.4) — the OpenFOAM stand-in.
+//!
+//! Computes drag coefficient `C_f` and Stanton number `St` for a 2-D
+//! laminar channel with eddy promoters, using a deterministic reduced-order
+//! model: promoters add blockage drag (∝ projected area with wake-shadowing
+//! between streamwise neighbours) and enhance heat transfer (mixing ∝
+//! promoter count and wall proximity, with diminishing returns). The exact
+//! coefficients are not physical truth — what matters for the AL loop is a
+//! smooth, nontrivial geometry→(C_f, St) map with realistic trade-off
+//! structure (more promoters → more drag *and* more heat transfer), which
+//! gives the PSO a meaningful Pareto landscape.
+
+use crate::kernels::Oracle;
+
+/// Baseline fully-developed laminar values (dimensionless toy units).
+const CF0: f32 = 0.085;
+const ST0: f32 = 0.021;
+
+/// Reduced-order 2-D channel flow labeled `[C_f, St]`.
+pub struct ChannelFlowOracle {
+    pub grid: usize,
+    labels: u64,
+}
+
+impl ChannelFlowOracle {
+    pub fn new(grid: usize) -> Self {
+        ChannelFlowOracle { grid, labels: 0 }
+    }
+
+    pub fn labels(&self) -> u64 {
+        self.labels
+    }
+
+    /// Evaluate the ROM on an occupancy grid (row-major, H = W = grid).
+    pub fn evaluate(&self, grid: &[f32]) -> (f32, f32) {
+        let g = self.grid;
+        debug_assert_eq!(grid.len(), g * g);
+        let occ = |x: usize, y: usize| grid[y * g + x] > 0.5;
+
+        // column blockage: fraction of each streamwise column occupied
+        let mut drag = 0.0f32;
+        let mut shadow = vec![false; g]; // wake shadowing per row
+        for x in 0..g {
+            let mut col_block = 0.0f32;
+            for y in 0..g {
+                if occ(x, y) {
+                    // a promoter in the wake of an upstream one adds less drag
+                    col_block += if shadow[y] { 0.25 } else { 1.0 };
+                    shadow[y] = true;
+                } else {
+                    // wake decays
+                    if shadow[y] && (x % 3 == 0) {
+                        shadow[y] = false;
+                    }
+                }
+            }
+            drag += col_block / g as f32;
+        }
+        drag /= g as f32;
+
+        // mixing: promoters near the channel centerline mix best; wall-
+        // adjacent ones disturb the boundary layer directly
+        let mut mixing = 0.0f32;
+        let mut wall_disturb = 0.0f32;
+        for y in 0..g {
+            let yn = (y as f32 + 0.5) / g as f32; // 0..1 across channel
+            let center_w = 1.0 - (2.0 * yn - 1.0).abs(); // 1 at center
+            let wall_w = 1.0 - center_w;
+            for x in 0..g {
+                if occ(x, y) {
+                    mixing += center_w;
+                    wall_disturb += wall_w;
+                }
+            }
+        }
+        let n_occ: f32 = grid.iter().filter(|&&v| v > 0.5).count() as f32;
+        let norm = (g * g) as f32;
+
+        // diminishing returns on heat-transfer enhancement
+        let enhancement = 1.0 + 2.5 * (1.0 - (-(3.0 * mixing / norm + 1.5 * wall_disturb / norm)).exp());
+        let cf = CF0 * (1.0 + 9.0 * drag + 0.8 * n_occ / norm);
+        let st = ST0 * enhancement;
+        (cf, st)
+    }
+}
+
+impl Oracle for ChannelFlowOracle {
+    fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+        self.labels += 1;
+        let (cf, st) = self.evaluate(input);
+        vec![cf, st]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty(g: usize) -> Vec<f32> {
+        vec![0.0; g * g]
+    }
+
+    #[test]
+    fn empty_channel_is_baseline() {
+        let o = ChannelFlowOracle::new(16);
+        let (cf, st) = o.evaluate(&empty(16));
+        assert!((cf - CF0).abs() < 1e-6);
+        assert!((st - ST0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn promoters_increase_both_cf_and_st() {
+        let o = ChannelFlowOracle::new(16);
+        let mut grid = empty(16);
+        for (x, y) in [(4usize, 8usize), (8, 4), (12, 10)] {
+            grid[y * 16 + x] = 1.0;
+        }
+        let (cf, st) = o.evaluate(&grid);
+        assert!(cf > CF0, "cf {cf}");
+        assert!(st > ST0, "st {st}");
+    }
+
+    #[test]
+    fn centerline_promoter_mixes_more_than_wall() {
+        let o = ChannelFlowOracle::new(16);
+        let mut center = empty(16);
+        center[8 * 16 + 8] = 1.0;
+        let mut wall = empty(16);
+        wall[15 * 16 + 8] = 1.0; // same column, near wall
+        let (_, st_c) = o.evaluate(&center);
+        let (_, st_w) = o.evaluate(&wall);
+        assert!(st_c > st_w, "center {st_c} vs wall {st_w}");
+    }
+
+    #[test]
+    fn wake_shadowing_discounts_downstream_drag() {
+        let o = ChannelFlowOracle::new(16);
+        // two promoters in the same row, adjacent columns (shadowed)
+        let mut tandem = empty(16);
+        tandem[8 * 16 + 4] = 1.0;
+        tandem[8 * 16 + 5] = 1.0;
+        // two promoters in different rows (both exposed)
+        let mut spread = empty(16);
+        spread[4 * 16 + 4] = 1.0;
+        spread[12 * 16 + 10] = 1.0;
+        let (cf_t, _) = o.evaluate(&tandem);
+        let (cf_s, _) = o.evaluate(&spread);
+        assert!(cf_t < cf_s, "tandem {cf_t} should draft below spread {cf_s}");
+    }
+
+    #[test]
+    fn oracle_interface_counts_labels() {
+        let mut o = ChannelFlowOracle::new(8);
+        let out = o.run_calc(&empty(8));
+        assert_eq!(out.len(), 2);
+        assert_eq!(o.labels(), 1);
+    }
+
+    #[test]
+    fn st_saturates() {
+        let o = ChannelFlowOracle::new(8);
+        let full: Vec<f32> = vec![1.0; 64];
+        let (_, st_full) = o.evaluate(&full);
+        assert!(st_full < ST0 * 4.0, "diminishing returns violated: {st_full}");
+    }
+}

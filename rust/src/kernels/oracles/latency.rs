@@ -1,0 +1,87 @@
+//! Latency wrapper: makes any oracle cost what the paper's oracles cost.
+//!
+//! The AL *dynamics* depend on the oracle's wall time (DFT ≈ 1 h, xTB ≈
+//! 10 s, CFD ≈ 10 min — SI §S2.2); this wrapper injects that cost (at a
+//! benchable scale) around an analytic labeler, optionally with
+//! multiplicative jitter so dispatch order gets exercised.
+
+use std::time::Duration;
+
+use crate::kernels::Oracle;
+use crate::rng::Rng;
+
+/// Wraps an oracle with simulated compute latency.
+pub struct LatencyOracle<O: Oracle> {
+    pub inner: O,
+    pub latency: Duration,
+    /// Uniform multiplicative jitter in `[1-j, 1+j]` (0 = deterministic).
+    pub jitter: f64,
+    rng: Rng,
+}
+
+impl<O: Oracle> LatencyOracle<O> {
+    pub fn new(inner: O, latency: Duration) -> Self {
+        LatencyOracle { inner, latency, jitter: 0.0, rng: Rng::new(0x0A11) }
+    }
+
+    pub fn with_jitter(mut self, jitter: f64, seed: u64) -> Self {
+        self.jitter = jitter.clamp(0.0, 0.99);
+        self.rng = Rng::new(seed);
+        self
+    }
+}
+
+impl<O: Oracle> Oracle for LatencyOracle<O> {
+    fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+        let scale = 1.0 + self.jitter * (2.0 * self.rng.f64() - 1.0);
+        let wait = self.latency.mul_f64(scale.max(0.0));
+        if wait > Duration::ZERO {
+            std::thread::sleep(wait);
+        }
+        self.inner.run_calc(input)
+    }
+
+    fn stop_run(&mut self) {
+        self.inner.stop_run();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Oracle for Echo {
+        fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+            input.to_vec()
+        }
+    }
+
+    #[test]
+    fn latency_is_applied() {
+        let mut o = LatencyOracle::new(Echo, Duration::from_millis(30));
+        let t0 = std::time::Instant::now();
+        let out = o.run_calc(&[1.0, 2.0]);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn zero_latency_is_fast() {
+        let mut o = LatencyOracle::new(Echo, Duration::ZERO);
+        let t0 = std::time::Instant::now();
+        o.run_calc(&[1.0]);
+        assert!(t0.elapsed() < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn jitter_bounds_wait() {
+        let mut o = LatencyOracle::new(Echo, Duration::from_millis(10)).with_jitter(0.5, 1);
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            o.run_calc(&[1.0]);
+            let dt = t0.elapsed();
+            assert!(dt >= Duration::from_millis(4) && dt < Duration::from_millis(60), "{dt:?}");
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Built-in oracle kernels: ground-truth labelers of Table 1 (analytic
+//! stand-ins for TDDFT/DFT/xTB/CFD — see DESIGN.md §3).
+
+mod cfd;
+mod latency;
+mod pes_oracle;
+
+pub use cfd::ChannelFlowOracle;
+pub use latency::LatencyOracle;
+pub use pes_oracle::{MultiStateOracle, PesOracle};

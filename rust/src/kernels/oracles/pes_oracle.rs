@@ -1,0 +1,146 @@
+//! PES-backed oracles: label geometries with analytic energy + forces.
+//!
+//! Wire contract (matches the HLO committee model's training layout):
+//! input  = `[x (n_atoms*3), g (n_globals), s (n_states)]`
+//! label  = `[e (n_states), f (n_atoms*3)]`
+//! where `f` are the forces on the state-weighted PES.
+
+use crate::kernels::Oracle;
+use crate::potential::{MultiState, Pes};
+
+/// Ground-state oracle over any [`Pes`]. The global features are passed
+/// through to a user hook so charge-dependent PES (e.g. Gupta) can use them.
+pub struct PesOracle<P: Pes> {
+    pes_for: Box<dyn Fn(&[f32]) -> P + Send>,
+    pub n_atoms: usize,
+    pub n_globals: usize,
+    pub n_states: usize,
+    labels: u64,
+}
+
+impl<P: Pes> PesOracle<P> {
+    /// Fixed-PES oracle (globals ignored).
+    pub fn fixed(pes: P, n_globals: usize) -> Self
+    where
+        P: Clone + Send + 'static,
+    {
+        let n_atoms = pes.n_atoms();
+        PesOracle {
+            pes_for: Box::new(move |_| pes.clone()),
+            n_atoms,
+            n_globals,
+            n_states: 1,
+            labels: 0,
+        }
+    }
+
+    /// Globals-dependent oracle (e.g. charge → Gupta parameters).
+    pub fn from_globals(n_atoms: usize, n_globals: usize, f: impl Fn(&[f32]) -> P + Send + 'static) -> Self {
+        PesOracle { pes_for: Box::new(f), n_atoms, n_globals, n_states: 1, labels: 0 }
+    }
+
+    pub fn labels(&self) -> u64 {
+        self.labels
+    }
+}
+
+impl<P: Pes> Oracle for PesOracle<P> {
+    fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+        let n3 = self.n_atoms * 3;
+        let x = &input[..n3];
+        let g = &input[n3..n3 + self.n_globals];
+        let pes = (self.pes_for)(g);
+        let e = pes.energy(x) as f32;
+        let f = pes.forces(x);
+        self.labels += 1;
+        let mut out = Vec::with_capacity(self.n_states + n3);
+        out.push(e);
+        out.extend(std::iter::repeat(0.0).take(self.n_states - 1));
+        out.extend_from_slice(&f);
+        out
+    }
+}
+
+/// Excited-state oracle over [`MultiState`] (the TDDFT stand-in, §3.1):
+/// labels all state energies plus forces on the active (one-hot) state.
+pub struct MultiStateOracle {
+    pub pes: MultiState,
+    pub n_globals: usize,
+    labels: u64,
+}
+
+impl MultiStateOracle {
+    pub fn new(pes: MultiState, n_globals: usize) -> Self {
+        MultiStateOracle { pes, n_globals, labels: 0 }
+    }
+
+    pub fn labels(&self) -> u64 {
+        self.labels
+    }
+}
+
+impl Oracle for MultiStateOracle {
+    fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+        let n3 = self.pes.n_atoms * 3;
+        let s_off = n3 + self.n_globals;
+        let x = &input[..n3];
+        let s = &input[s_off..s_off + self.pes.n_states];
+        // energies of every state
+        let energies: Vec<f32> = self.pes.energies(x).iter().map(|&e| e as f32).collect();
+        // forces on the state-weighted PES
+        let active = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let f = self.pes.state_forces(x, active);
+        self.labels += 1;
+        let mut out = energies;
+        out.extend_from_slice(&f);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potential::{Gupta, Morse};
+
+    #[test]
+    fn ground_state_label_layout() {
+        let mut o = PesOracle::fixed(Morse::dimer(), 1);
+        let input = [0.0, 0.0, 0.0, 1.4, 0.0, 0.0, /*g*/ 0.0, /*s*/ 1.0];
+        let label = o.run_calc(&input);
+        assert_eq!(label.len(), 1 + 6);
+        assert!((label[0] - (-1.0)).abs() < 1e-5); // Morse minimum
+        assert_eq!(o.labels(), 1);
+    }
+
+    #[test]
+    fn globals_change_the_label() {
+        let mut o = PesOracle::from_globals(2, 1, |g| Gupta::bismuth(2, g[0] as f64));
+        let mut input = vec![0.0, 0.0, 0.0, 3.0, 0.0, 0.0, 0.0, 1.0];
+        let neutral = o.run_calc(&input);
+        input[6] = 1.0; // charge +1
+        let cation = o.run_calc(&input);
+        assert!((neutral[0] - cation[0]).abs() > 1e-7);
+    }
+
+    #[test]
+    fn multistate_label_layout_and_active_state_forces() {
+        let pes = MultiState::photo(2, 3);
+        let mut o = MultiStateOracle::new(pes.clone(), 1);
+        // active state 1
+        let input = [0.0, 0.0, 0.0, 1.5, 0.0, 0.0, /*g*/ 0.0, /*s*/ 0.0, 1.0, 0.0];
+        let label = o.run_calc(&input);
+        assert_eq!(label.len(), 3 + 6);
+        // energies sorted by state index at this geometry
+        assert!(label[0] < label[1] && label[1] < label[2]);
+        // forces match state 1 directly
+        let f1 = pes.state_forces(&input[..6], 1);
+        for (a, b) in label[3..].iter().zip(&f1) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

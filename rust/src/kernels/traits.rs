@@ -1,0 +1,155 @@
+//! User-facing kernel interfaces, mirroring the paper's SI §S4–S7 APIs.
+//!
+//! Construction model: kernel *factories* (closures) are `Send` and move
+//! into the host threads, where they build the actual kernel objects.
+//! The objects themselves need not be `Send` — important because the
+//! HLO-backed models own thread-affine PJRT handles, exactly like the
+//! paper's per-MPI-rank model replicas.
+
+/// Whether a [`Model`] instance serves the prediction or the training kernel
+/// (the paper's `mode` flag in `UserModel.__init__`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Predict,
+    Train,
+}
+
+/// Generator kernel (SI §S6): explores the input space.
+pub trait Generator {
+    /// One generation step. `data_to_gene` is `None` on the first call and
+    /// the checked prediction thereafter (zeroed when the controller flagged
+    /// the previous step as unreliable). Returns `(stop_run, data_to_pred)`.
+    fn generate_new_data(&mut self, data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>);
+
+    /// Persist state; called every `progress_save_interval`.
+    fn save_progress(&mut self) {}
+
+    /// Called once before the process terminates at workflow shutdown.
+    fn stop_run(&mut self) {}
+}
+
+/// Oracle kernel (SI §S7): produces ground-truth labels.
+///
+/// `Send` is required (unlike [`Generator`]/[`Model`]) because the serial
+/// baseline labels through scoped worker threads (eq. (1)'s `N/P`); all
+/// oracle implementations are plain computation + sleep, so this costs
+/// nothing.
+pub trait Oracle: Send {
+    /// Label one input (blocking; this is where DFT/CFD wall time lives).
+    fn run_calc(&mut self, input_for_orcl: &[f32]) -> Vec<f32>;
+
+    fn stop_run(&mut self) {}
+}
+
+/// Prediction + training kernel (SI §S4/§S5). One implementation serves
+/// both kernels; instances are constructed with [`Mode::Predict`] or
+/// [`Mode::Train`] (the paper's single `UserModel` class with a mode flag).
+pub trait Model {
+    /// Predict for every generator's input; must return one output per
+    /// input, in order (SI: "size and order should match processes in
+    /// Generator kernel").
+    fn predict(&mut self, list_data_to_pred: &[Vec<f32>]) -> Vec<Vec<f32>>;
+
+    /// Replace model weights from a flat array (prediction side).
+    fn update(&mut self, weight_array: &[f32]);
+
+    /// Current weights as a flat array (training side).
+    fn get_weight(&self) -> Vec<f32>;
+
+    /// Size of the flat weight array (SI: exchanged once at startup so MPI
+    /// knows message sizes).
+    fn get_weight_size(&self) -> usize;
+
+    /// Extend the training set with labeled datapoints (training side).
+    fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]);
+
+    /// Run (re)training until `interrupt()` turns true (new data arrived /
+    /// shutdown) or an internal criterion stops the round. Returns
+    /// `stop_run`: `true` asks the controller to shut the workflow down.
+    fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool;
+
+    /// Most recent training loss (telemetry; `None` before first round).
+    fn last_loss(&self) -> Option<f32> {
+        None
+    }
+
+    /// Epochs actually executed in the most recent `retrain` round
+    /// (interrupts truncate rounds; the Manager sums these for the
+    /// equal-work stop criterion).
+    fn last_round_epochs(&self) -> u64 {
+        0
+    }
+
+    fn save_progress(&mut self) {}
+
+    fn stop_run(&mut self) {}
+}
+
+/// Controller customization points (SI "Utilities").
+pub trait Utils {
+    /// The paper's `prediction_check`: given every generator's input and
+    /// every prediction-model's outputs (outer index = model, inner =
+    /// generator), select inputs for oracle labeling and produce the checked
+    /// per-generator payloads.
+    ///
+    /// Returns `(list_input_to_orcl, list_data_to_gene_checked)`; the second
+    /// list must have exactly one entry per generator, in order.
+    fn prediction_check(
+        &mut self,
+        list_data_to_pred: &[Vec<f32>],
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+    /// The paper's `adjust_input_for_oracle`: re-order / prune the oracle
+    /// buffer given fresh per-model predictions for each buffered input
+    /// (outer index = model). Must return a subset (permutation allowed) of
+    /// `buffer`. Only called when `dynamic_orcale_list` is set.
+    fn adjust_input_for_oracle(
+        &mut self,
+        buffer: Vec<Vec<f32>>,
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> Vec<Vec<f32>> {
+        let _ = preds_per_model;
+        buffer
+    }
+}
+
+/// Factory closures moved into host threads. `Model` factories take the
+/// [`Mode`] so prediction and training construct independent replicas.
+/// `Utils` factories are shared: both controller sub-kernels (Exchange for
+/// `prediction_check`, Manager for `adjust_input_for_oracle`) build one.
+pub type GeneratorFactory = Box<dyn FnOnce() -> Box<dyn Generator> + Send>;
+pub type OracleFactory = Box<dyn FnOnce() -> Box<dyn Oracle> + Send>;
+pub type ModelFactory = std::sync::Arc<dyn Fn(Mode, usize) -> Box<dyn Model> + Send + Sync>;
+pub type UtilsFactory = std::sync::Arc<dyn Fn() -> Box<dyn Utils> + Send + Sync>;
+
+/// Everything the workflow needs to staff its kernels.
+pub struct KernelSet {
+    pub generators: Vec<GeneratorFactory>,
+    pub oracles: Vec<OracleFactory>,
+    /// One factory shared by prediction and training hosts; called with
+    /// `(mode, replica_index)`.
+    pub model: ModelFactory,
+    pub utils: UtilsFactory,
+}
+
+impl KernelSet {
+    /// Sanity-check against a setting before spawning.
+    pub fn validate(&self, s: &crate::config::AlSetting) -> anyhow::Result<()> {
+        if self.generators.len() != s.gene_process {
+            anyhow::bail!(
+                "kernel set has {} generators, setting wants {}",
+                self.generators.len(),
+                s.gene_process
+            );
+        }
+        if self.oracles.len() != s.orcl_process {
+            anyhow::bail!(
+                "kernel set has {} oracles, setting wants {}",
+                self.oracles.len(),
+                s.orcl_process
+            );
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,44 @@
+//! # PAL — Parallel Active Learning for machine-learned potentials
+//!
+//! Rust reproduction of *"PAL — Parallel active learning for machine-learned
+//! potentials"* (Zhou et al., KIT, 2024). The crate implements the paper's
+//! five-kernel architecture — **prediction**, **generator**, **training**,
+//! **oracle**, and a two-part **controller** (Manager + Exchange) — on top of
+//! an in-process MPI-work-alike ([`comm`]), with all ML compute AOT-compiled
+//! from JAX/Pallas to HLO and executed through the PJRT C API ([`runtime`]).
+//! Python never runs on the request path.
+//!
+//! ## Layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`comm`] | MPI-like message passing substrate (ranks, tags, requests) |
+//! | [`config`] | `AL_SETTING`-style configuration + rank topology |
+//! | [`coordinator`] | the paper's contribution: Manager + Exchange controllers, buffers, selection |
+//! | [`kernels`] | user-facing kernel traits + built-in generators/oracles/models |
+//! | [`runtime`] | PJRT artifact loading & execution (`artifacts/*.hlo.txt`) |
+//! | [`potential`] | analytic PES substrate standing in for DFT/TDDFT/xTB oracles |
+//! | [`serial`] | the Fig.-1a serial active-learning baseline |
+//! | [`sim`] | SI §S2 analytic speedup model + synthetic workloads |
+//! | [`data`] | labeled dataset store, splits, rolling windows |
+//! | [`telemetry`] | per-kernel timing and counters |
+//! | [`json`], [`rng`], [`prop`], [`bench_util`] | offline substrates (no external deps available) |
+
+pub mod bench_util;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod kernels;
+pub mod potential;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod serial;
+pub mod sim;
+pub mod telemetry;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

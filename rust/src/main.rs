@@ -1,0 +1,175 @@
+//! `pal` — launcher CLI for the PAL workflow.
+//!
+//! ```text
+//! pal info                         # artifact + topology summary
+//! pal speedup [--n N --p P]        # SI §S2 analytic speedup table
+//! pal run [--config file.json]     # run the toy workflow (SI §S3 example)
+//! ```
+
+use std::time::Duration;
+
+use pal::cli::Args;
+use pal::config::{AlSetting, Topology};
+use pal::coordinator::selection::CommitteeStdUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::{KernelSet, Mode};
+use pal::runtime::{default_artifacts_dir, Manifest};
+use pal::sim::speedup;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "info" => cmd_info(&args),
+        "speedup" => cmd_speedup(&args),
+        "run" => cmd_run(&args),
+        _ => {
+            eprintln!(
+                "usage: pal <info|speedup|run> [options]\n\
+                 \n\
+                 info                       artifact + topology summary\n\
+                 speedup [--n N --p P]      SI §S2 analytic speedup table\n\
+                 run [--config f.json]      run the SI toy workflow\n\
+                 \x20   [--iters N]          bound exchange iterations (default 50)"
+            );
+            if cmd == "help" { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_info(_args: &Args) -> i32 {
+    let dir = default_artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("{} artifacts:", m.entries.len());
+            for e in m.entries.values() {
+                let ins: Vec<String> =
+                    e.inputs.iter().map(|t| format!("{}{:?}", t.name, t.shape)).collect();
+                println!("  {:32} {}", e.name, ins.join(" "));
+            }
+        }
+        Err(e) => {
+            eprintln!("no manifest: {e:#}");
+            return 1;
+        }
+    }
+    let s = AlSetting::default_toy();
+    let t = Topology::new(&s);
+    println!(
+        "\ntoy topology: {} ranks (manager=0, exchange=1, pred={:?}, train={:?}, gene={:?}, orcl={:?})",
+        t.n_ranks(),
+        t.pred,
+        t.train,
+        t.gene,
+        t.orcl
+    );
+    0
+}
+
+fn cmd_speedup(args: &Args) -> i32 {
+    let n = args.get_u64("n", 8);
+    let p = args.get_u64("p", 8);
+    println!("SI §S2 analytic speedup (N={n}, P={p})\n");
+    println!("{:<34} {:>9} {:>11} {:>8}", "use case", "T_serial", "T_parallel", "S");
+    for (name, w) in [
+        ("1: DFT+GNN (t_o = t_t)", speedup::use_case_1(n, p)),
+        ("2: xTB oracle (train-bound)", speedup::use_case_2(n, p)),
+        ("3: CFD (balanced)", speedup::use_case_3(n, p)),
+    ] {
+        println!(
+            "{:<34} {:>9.2} {:>11.2} {:>8.3}",
+            name,
+            w.t_serial(),
+            w.t_parallel(),
+            w.speedup()
+        );
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let mut setting = match args.get("config") {
+        Some(path) => match std::fs::read_to_string(path)
+            .map_err(anyhow::Error::from)
+            .and_then(|t| AlSetting::from_json(&t))
+        {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bad config: {e:#}");
+                return 1;
+            }
+        },
+        None => AlSetting::default_toy(),
+    };
+    let iters = args.get_u64("iters", 50);
+    setting.stop.max_iterations = Some(iters);
+    setting.stop.max_wall = Some(Duration::from_secs(args.get_u64("max-wall-s", 120)));
+
+    let dir = default_artifacts_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("artifacts missing (run `make artifacts`): {e:#}");
+            return 1;
+        }
+    };
+
+    // SI §S3 toy workflow: random generators, sin-labeling oracles, HLO toy
+    // committee (linear 4→4).
+    let gens: Vec<_> = (0..setting.gene_process)
+        .map(|i| {
+            let seed = setting.seed + i as u64;
+            Box::new(move || {
+                Box::new(pal::kernels::generators::RandomGenerator::new(4, 300_000 + seed, seed))
+                    as Box<dyn pal::kernels::Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn pal::kernels::Generator> + Send>
+        })
+        .collect();
+    let oracles: Vec<_> = (0..setting.orcl_process)
+        .map(|_| {
+            Box::new(move || {
+                Box::new(pal::sim::workload::SyntheticOracle {
+                    label_cost: Duration::from_millis(5),
+                    out_dim: 4,
+                }) as Box<dyn pal::kernels::Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn pal::kernels::Oracle> + Send>
+        })
+        .collect();
+    let mdir = manifest.dir.clone();
+    let model = std::sync::Arc::new(move |mode: Mode, replica: usize| {
+        let m = Manifest::load(&mdir).expect("manifest reload");
+        Box::new(
+            pal::kernels::models::HloToyModel::new(m, mode, replica as u32)
+                .expect("toy model build"),
+        ) as Box<dyn pal::kernels::Model>
+    });
+    let utils = std::sync::Arc::new(|| {
+        Box::new(CommitteeStdUtils::new(0.05, 8)) as Box<dyn pal::kernels::Utils>
+    });
+
+    let kernels = KernelSet { generators: gens, oracles, model, utils };
+    match Workflow::new(setting).run(kernels) {
+        Ok(report) => {
+            println!(
+                "done: {} exchange iterations, {} oracle labels, {} retrain rounds in {:.2}s",
+                report.al_iterations,
+                report.oracle_labels,
+                report.retrain_rounds,
+                report.wall.as_secs_f64()
+            );
+            println!(
+                "prediction mean latency {:.3} ms; messages {}, payload {} KiB",
+                report.mean_timer_ms("prediction", "predict"),
+                report.messages,
+                report.payload_bytes / 1024
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("workflow failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Lennard-Jones cluster potential (end-to-end driver workload).
+
+use super::{add_pair_force, dist, Pes};
+use crate::rng::Rng;
+
+/// Truncation-free 12-6 Lennard-Jones: `V = Σ 4ε[(σ/r)¹² − (σ/r)⁶]`.
+#[derive(Debug, Clone)]
+pub struct LennardJones {
+    pub n_atoms: usize,
+    pub epsilon: f64,
+    pub sigma: f64,
+}
+
+impl LennardJones {
+    pub fn cluster(n: usize) -> Self {
+        LennardJones { n_atoms: n, epsilon: 1.0, sigma: 1.0 }
+    }
+
+    fn pair_energy(&self, r: f64) -> f64 {
+        let sr6 = (self.sigma / r).powi(6);
+        4.0 * self.epsilon * (sr6 * sr6 - sr6)
+    }
+
+    fn pair_dv_dr(&self, r: f64) -> f64 {
+        let sr6 = (self.sigma / r).powi(6);
+        4.0 * self.epsilon * (-12.0 * sr6 * sr6 + 6.0 * sr6) / r
+    }
+}
+
+impl Pes for LennardJones {
+    fn n_atoms(&self) -> usize {
+        self.n_atoms
+    }
+
+    fn energy(&self, x: &[f32]) -> f64 {
+        let mut e = 0.0;
+        for i in 0..self.n_atoms {
+            for j in (i + 1)..self.n_atoms {
+                e += self.pair_energy(dist(x, i, j).max(0.3));
+            }
+        }
+        e
+    }
+
+    fn forces(&self, x: &[f32]) -> Vec<f32> {
+        let mut f = vec![0.0f32; x.len()];
+        for i in 0..self.n_atoms {
+            for j in (i + 1)..self.n_atoms {
+                let r = dist(x, i, j).max(0.3);
+                add_pair_force(&mut f, x, i, j, self.pair_dv_dr(r));
+            }
+        }
+        f
+    }
+
+    fn initial_geometry(&self, rng: &mut Rng) -> Vec<f32> {
+        // jittered cubic lattice at ~2^(1/6) σ spacing (LJ minimum distance)
+        let a = 1.12 * self.sigma as f32;
+        let side = (self.n_atoms as f64).cbrt().ceil() as usize;
+        let mut x = Vec::with_capacity(3 * self.n_atoms);
+        'fill: for i in 0..side {
+            for j in 0..side {
+                for k in 0..side {
+                    if x.len() >= 3 * self.n_atoms {
+                        break 'fill;
+                    }
+                    x.push(i as f32 * a + (rng.normal() * 0.03) as f32);
+                    x.push(j as f32 * a + (rng.normal() * 0.03) as f32);
+                    x.push(k as f32 * a + (rng.normal() * 0.03) as f32);
+                }
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potential::test_util::check_forces;
+
+    #[test]
+    fn dimer_minimum_near_two_sixth_sigma() {
+        let lj = LennardJones::cluster(2);
+        let rmin = 2f64.powf(1.0 / 6.0);
+        let e_min = lj.energy(&[0.0, 0.0, 0.0, rmin as f32, 0.0, 0.0]);
+        assert!((e_min + 1.0).abs() < 1e-5, "{e_min}");
+        for r in [0.95 * rmin, 1.05 * rmin] {
+            let e = lj.energy(&[0.0, 0.0, 0.0, r as f32, 0.0, 0.0]);
+            assert!(e > e_min);
+        }
+    }
+
+    #[test]
+    fn forces_match_finite_difference() {
+        let lj = LennardJones::cluster(5);
+        let mut rng = Rng::new(1);
+        let x = lj.initial_geometry(&mut rng);
+        check_forces(&lj, &x, 5e-3);
+    }
+
+    #[test]
+    fn initial_geometry_has_no_overlaps() {
+        let lj = LennardJones::cluster(8);
+        let mut rng = Rng::new(2);
+        let x = lj.initial_geometry(&mut rng);
+        assert_eq!(x.len(), 24);
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert!(super::dist(&x, i, j) > 0.8);
+            }
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Analytic potential-energy surfaces (oracle substrate).
+//!
+//! The paper's oracles are quantum-chemistry codes (TDDFT/DFT/xTB via
+//! Turbomole) and a CFD solver. None are available here, so each application
+//! gets an analytic stand-in with the same interface: smooth, nontrivial
+//! `energy(x)` and `forces(x) = -∇E` over flat coordinate arrays. AL
+//! dynamics only depend on label values + oracle cost (injected separately
+//! by [`crate::kernels::oracles::LatencyOracle`]), so these preserve the
+//! behaviour the paper's experiments exercise — see DESIGN.md §3.
+
+mod gupta;
+mod lj;
+mod morse;
+pub mod muller_brown;
+mod multistate;
+
+pub use gupta::Gupta;
+pub use lj::LennardJones;
+pub use morse::Morse;
+pub use muller_brown::{MullerBrown, MINIMA};
+pub use multistate::MultiState;
+
+/// A potential-energy surface over flat `[n_atoms * 3]` coordinates.
+pub trait Pes {
+    /// Number of atoms.
+    fn n_atoms(&self) -> usize;
+
+    /// Total energy.
+    fn energy(&self, x: &[f32]) -> f64;
+
+    /// Forces `-∇E`, same length as `x`. Default: central finite
+    /// differences (implementations override with analytic forms).
+    fn forces(&self, x: &[f32]) -> Vec<f32> {
+        let mut f = vec![0.0f32; x.len()];
+        let mut xp = x.to_vec();
+        let h = 1e-4f32;
+        for i in 0..x.len() {
+            xp[i] = x[i] + h;
+            let ep = self.energy(&xp);
+            xp[i] = x[i] - h;
+            let em = self.energy(&xp);
+            xp[i] = x[i];
+            f[i] = (-(ep - em) / (2.0 * h as f64)) as f32;
+        }
+        f
+    }
+
+    /// A reasonable equilibrium-ish starting geometry.
+    fn initial_geometry(&self, rng: &mut crate::rng::Rng) -> Vec<f32>;
+}
+
+/// Pair distance helper over flat coords.
+pub(crate) fn dist(x: &[f32], i: usize, j: usize) -> f64 {
+    let (xi, xj) = (&x[3 * i..3 * i + 3], &x[3 * j..3 * j + 3]);
+    let dx = (xi[0] - xj[0]) as f64;
+    let dy = (xi[1] - xj[1]) as f64;
+    let dz = (xi[2] - xj[2]) as f64;
+    (dx * dx + dy * dy + dz * dz).sqrt()
+}
+
+/// Accumulate a pair force with magnitude `dv_dr` (dV/dr) on atoms i, j.
+pub(crate) fn add_pair_force(f: &mut [f32], x: &[f32], i: usize, j: usize, dv_dr: f64) {
+    let r = dist(x, i, j).max(1e-9);
+    for k in 0..3 {
+        let u = ((x[3 * i + k] - x[3 * j + k]) as f64) / r;
+        // F_i = -dV/dr * unit(i-j)
+        f[3 * i + k] -= (dv_dr * u) as f32;
+        f[3 * j + k] += (dv_dr * u) as f32;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::Pes;
+
+    /// Assert analytic forces match finite differences.
+    pub fn check_forces(pes: &dyn Pes, x: &[f32], tol: f64) {
+        let f = pes.forces(x);
+        let mut xp = x.to_vec();
+        let h = 1e-3f32;
+        for i in 0..x.len() {
+            xp[i] = x[i] + h;
+            let ep = pes.energy(&xp);
+            xp[i] = x[i] - h;
+            let em = pes.energy(&xp);
+            xp[i] = x[i];
+            let fd = -(ep - em) / (2.0 * h as f64);
+            assert!(
+                (fd - f[i] as f64).abs() < tol * fd.abs().max(1.0),
+                "force mismatch at {i}: analytic {} vs fd {fd}",
+                f[i]
+            );
+        }
+    }
+}

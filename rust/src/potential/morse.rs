@@ -1,0 +1,119 @@
+//! Morse potential — pairwise bonded model, the classic diatomic test PES.
+
+use super::{add_pair_force, dist, Pes};
+use crate::rng::Rng;
+
+/// Sum-of-pairs Morse potential:
+/// `V = Σ_{i<j} D (1 - exp(-a (r_ij - r0)))² - D`.
+#[derive(Debug, Clone)]
+pub struct Morse {
+    pub n_atoms: usize,
+    /// Well depth.
+    pub d: f64,
+    /// Width parameter.
+    pub a: f64,
+    /// Equilibrium bond length.
+    pub r0: f64,
+}
+
+impl Morse {
+    /// A dimer with H₂-ish dimensionless parameters.
+    pub fn dimer() -> Self {
+        Morse { n_atoms: 2, d: 1.0, a: 1.3, r0: 1.4 }
+    }
+
+    /// `n`-atom Morse cluster.
+    pub fn cluster(n: usize) -> Self {
+        Morse { n_atoms: n, d: 1.0, a: 1.3, r0: 1.4 }
+    }
+
+    fn pair_energy(&self, r: f64) -> f64 {
+        let e = 1.0 - (-self.a * (r - self.r0)).exp();
+        self.d * e * e - self.d
+    }
+
+    fn pair_dv_dr(&self, r: f64) -> f64 {
+        let ex = (-self.a * (r - self.r0)).exp();
+        2.0 * self.d * (1.0 - ex) * self.a * ex
+    }
+}
+
+impl Pes for Morse {
+    fn n_atoms(&self) -> usize {
+        self.n_atoms
+    }
+
+    fn energy(&self, x: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), 3 * self.n_atoms);
+        let mut e = 0.0;
+        for i in 0..self.n_atoms {
+            for j in (i + 1)..self.n_atoms {
+                e += self.pair_energy(dist(x, i, j));
+            }
+        }
+        e
+    }
+
+    fn forces(&self, x: &[f32]) -> Vec<f32> {
+        let mut f = vec![0.0f32; x.len()];
+        for i in 0..self.n_atoms {
+            for j in (i + 1)..self.n_atoms {
+                let r = dist(x, i, j);
+                add_pair_force(&mut f, x, i, j, self.pair_dv_dr(r));
+            }
+        }
+        f
+    }
+
+    fn initial_geometry(&self, rng: &mut Rng) -> Vec<f32> {
+        // atoms on a jittered line at roughly r0 spacing
+        let mut x = vec![0.0f32; 3 * self.n_atoms];
+        for i in 0..self.n_atoms {
+            x[3 * i] = i as f32 * self.r0 as f32;
+            for k in 0..3 {
+                x[3 * i + k] += (rng.normal() * 0.05) as f32;
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potential::test_util::check_forces;
+
+    #[test]
+    fn minimum_at_r0() {
+        let m = Morse::dimer();
+        let e_min = m.energy(&[0.0, 0.0, 0.0, 1.4, 0.0, 0.0]);
+        let e_off1 = m.energy(&[0.0, 0.0, 0.0, 1.2, 0.0, 0.0]);
+        let e_off2 = m.energy(&[0.0, 0.0, 0.0, 1.7, 0.0, 0.0]);
+        assert!(e_min < e_off1 && e_min < e_off2);
+        assert!((e_min - (-1.0)).abs() < 1e-9); // depth −D at r0
+    }
+
+    #[test]
+    fn forces_match_finite_difference() {
+        let m = Morse::cluster(4);
+        let mut rng = Rng::new(0);
+        let x = m.initial_geometry(&mut rng);
+        check_forces(&m, &x, 1e-3);
+    }
+
+    #[test]
+    fn forces_vanish_at_equilibrium_dimer() {
+        let m = Morse::dimer();
+        let f = m.forces(&[0.0, 0.0, 0.0, 1.4, 0.0, 0.0]);
+        for fi in f {
+            assert!(fi.abs() < 1e-5, "{fi}");
+        }
+    }
+
+    #[test]
+    fn dissociation_limit_is_zero() {
+        let m = Morse::dimer();
+        let e = m.energy(&[0.0, 0.0, 0.0, 100.0, 0.0, 0.0]);
+        assert!(e.abs() < 1e-6);
+    }
+}

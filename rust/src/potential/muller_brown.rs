@@ -1,0 +1,103 @@
+//! Müller-Brown surface — the canonical 2-D test PES for transition-state
+//! search, standing in for the HAT reaction-path exploration (§3.2).
+
+use super::Pes;
+use crate::rng::Rng;
+
+/// The standard 4-Gaussian Müller-Brown surface, scaled by `0.01` so its
+/// energy range is O(1) like the other PES here. Treated as one "atom"
+/// whose (x, y) are the first two coordinates (z ignored, kept zero).
+#[derive(Debug, Clone)]
+pub struct MullerBrown {
+    pub scale: f64,
+}
+
+const A: [f64; 4] = [-200.0, -100.0, -170.0, 15.0];
+const AX: [f64; 4] = [-1.0, -1.0, -6.5, 0.7];
+const BXY: [f64; 4] = [0.0, 0.0, 11.0, 0.6];
+const CY: [f64; 4] = [-10.0, -10.0, -6.5, 0.7];
+const X0: [f64; 4] = [1.0, 0.0, -0.5, -1.0];
+const Y0: [f64; 4] = [0.0, 0.5, 1.5, 1.0];
+
+/// Approximate locations of the three minima (textbook values).
+pub const MINIMA: [(f64, f64); 3] =
+    [(-0.558, 1.442), (0.623, 0.028), (-0.050, 0.467)];
+
+impl Default for MullerBrown {
+    fn default() -> Self {
+        MullerBrown { scale: 0.01 }
+    }
+}
+
+impl MullerBrown {
+    fn eg(&self, x: f64, y: f64) -> (f64, f64, f64) {
+        let (mut e, mut gx, mut gy) = (0.0, 0.0, 0.0);
+        for k in 0..4 {
+            let dx = x - X0[k];
+            let dy = y - Y0[k];
+            let t = A[k] * (AX[k] * dx * dx + BXY[k] * dx * dy + CY[k] * dy * dy).exp();
+            e += t;
+            gx += t * (2.0 * AX[k] * dx + BXY[k] * dy);
+            gy += t * (BXY[k] * dx + 2.0 * CY[k] * dy);
+        }
+        (e * self.scale, gx * self.scale, gy * self.scale)
+    }
+}
+
+impl Pes for MullerBrown {
+    fn n_atoms(&self) -> usize {
+        1
+    }
+
+    fn energy(&self, x: &[f32]) -> f64 {
+        self.eg(x[0] as f64, x[1] as f64).0
+    }
+
+    fn forces(&self, x: &[f32]) -> Vec<f32> {
+        let (_, gx, gy) = self.eg(x[0] as f64, x[1] as f64);
+        vec![-gx as f32, -gy as f32, 0.0]
+    }
+
+    fn initial_geometry(&self, rng: &mut Rng) -> Vec<f32> {
+        let (mx, my) = MINIMA[rng.below(3)];
+        vec![
+            mx as f32 + (rng.normal() * 0.05) as f32,
+            my as f32 + (rng.normal() * 0.05) as f32,
+            0.0,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potential::test_util::check_forces;
+
+    #[test]
+    fn minima_are_local_minima() {
+        let mb = MullerBrown::default();
+        for (mx, my) in MINIMA {
+            let e0 = mb.energy(&[mx as f32, my as f32, 0.0]);
+            for (dx, dy) in [(0.05, 0.0), (-0.05, 0.0), (0.0, 0.05), (0.0, -0.05)] {
+                let e = mb.energy(&[(mx + dx) as f32, (my + dy) as f32, 0.0]);
+                assert!(e > e0 - 1e-6, "minimum ({mx},{my}) not minimal: {e0} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_minimum_is_first() {
+        let mb = MullerBrown::default();
+        let es: Vec<f64> = MINIMA
+            .iter()
+            .map(|&(x, y)| mb.energy(&[x as f32, y as f32, 0.0]))
+            .collect();
+        assert!(es[0] < es[1] && es[0] < es[2], "{es:?}");
+    }
+
+    #[test]
+    fn forces_match_finite_difference() {
+        let mb = MullerBrown::default();
+        check_forces(&mb, &[0.2, 0.7, 0.0], 2e-2);
+    }
+}

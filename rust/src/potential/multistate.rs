@@ -1,0 +1,137 @@
+//! Multi-state PES — excited-state (TDDFT) stand-in for photodynamics (§3.1).
+//!
+//! The photodynamics application propagates surface-hopping MD on several
+//! excited-state surfaces of an organic semiconductor, labeled by TDDFT.
+//! We substitute a ladder of Morse-like surfaces with state-dependent well
+//! depth, displaced minima, and a harmonic coupling bump near the crossing
+//! region — enough structure for committee models to disagree in the
+//! crossing zone (where the paper's UQ triggers oracle calls).
+
+use super::{dist, Pes};
+use crate::rng::Rng;
+
+/// `n_states` stacked surfaces over an `n_atoms` geometry.
+#[derive(Debug, Clone)]
+pub struct MultiState {
+    pub n_atoms: usize,
+    pub n_states: usize,
+    pub d: f64,
+    pub a: f64,
+    pub r0: f64,
+    /// Vertical excitation gap between adjacent states.
+    pub gap: f64,
+}
+
+impl MultiState {
+    /// Sulfone-ish toy: 6 atoms, 3 states (S0, S1, S2).
+    pub fn photo(n_atoms: usize, n_states: usize) -> Self {
+        MultiState { n_atoms, n_states, d: 1.0, a: 1.1, r0: 1.5, gap: 0.8 }
+    }
+
+    /// Energy of one state.
+    pub fn state_energy(&self, x: &[f32], state: usize) -> f64 {
+        debug_assert!(state < self.n_states);
+        let s = state as f64;
+        // state-displaced equilibrium and shallower well per excitation
+        let r0 = self.r0 * (1.0 + 0.08 * s);
+        let d = self.d / (1.0 + 0.3 * s);
+        let mut e = self.gap * s;
+        for i in 0..self.n_atoms {
+            for j in (i + 1)..self.n_atoms {
+                let r = dist(x, i, j);
+                let m = 1.0 - (-self.a * (r - r0)).exp();
+                e += d * m * m - d;
+                // crossing bump: states approach near r ≈ 1.5 r0
+                if state > 0 {
+                    let dr = r - 1.5 * self.r0;
+                    e -= 0.3 * self.gap * (-dr * dr / 0.08).exp();
+                }
+            }
+        }
+        e
+    }
+
+    /// Energies of all states.
+    pub fn energies(&self, x: &[f32]) -> Vec<f64> {
+        (0..self.n_states).map(|s| self.state_energy(x, s)).collect()
+    }
+
+    /// Forces on one state via central differences (TDDFT gradients are the
+    /// expensive oracle step; cost realism is injected by LatencyOracle).
+    pub fn state_forces(&self, x: &[f32], state: usize) -> Vec<f32> {
+        let mut f = vec![0.0f32; x.len()];
+        let mut xp = x.to_vec();
+        let h = 1e-4f32;
+        for i in 0..x.len() {
+            xp[i] = x[i] + h;
+            let ep = self.state_energy(&xp, state);
+            xp[i] = x[i] - h;
+            let em = self.state_energy(&xp, state);
+            xp[i] = x[i];
+            f[i] = (-(ep - em) / (2.0 * h as f64)) as f32;
+        }
+        f
+    }
+}
+
+impl Pes for MultiState {
+    fn n_atoms(&self) -> usize {
+        self.n_atoms
+    }
+
+    /// Ground-state energy (Pes trait view).
+    fn energy(&self, x: &[f32]) -> f64 {
+        self.state_energy(x, 0)
+    }
+
+    fn forces(&self, x: &[f32]) -> Vec<f32> {
+        self.state_forces(x, 0)
+    }
+
+    fn initial_geometry(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut x = vec![0.0f32; 3 * self.n_atoms];
+        for i in 0..self.n_atoms {
+            // ring-ish arrangement
+            let th = 2.0 * std::f64::consts::PI * i as f64 / self.n_atoms as f64;
+            x[3 * i] = (self.r0 * th.cos()) as f32 + (rng.normal() * 0.05) as f32;
+            x[3 * i + 1] = (self.r0 * th.sin()) as f32 + (rng.normal() * 0.05) as f32;
+            x[3 * i + 2] = (rng.normal() * 0.05) as f32;
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn states_are_ordered_at_equilibrium() {
+        let ms = MultiState::photo(4, 3);
+        let mut rng = Rng::new(0);
+        let x = ms.initial_geometry(&mut rng);
+        let es = ms.energies(&x);
+        assert!(es[0] < es[1] && es[1] < es[2], "{es:?}");
+    }
+
+    #[test]
+    fn gap_shrinks_near_crossing_region() {
+        let ms = MultiState::photo(2, 2);
+        // equilibrium-ish vs stretched into the bump region
+        let near = [0.0, 0.0, 0.0, ms.r0 as f32, 0.0, 0.0];
+        let cross = [0.0, 0.0, 0.0, (1.5 * ms.r0) as f32, 0.0, 0.0];
+        let g_near = ms.state_energy(&near, 1) - ms.state_energy(&near, 0);
+        let g_cross = ms.state_energy(&cross, 1) - ms.state_energy(&cross, 0);
+        assert!(g_cross < g_near, "gap near {g_near}, at crossing {g_cross}");
+    }
+
+    #[test]
+    fn state_forces_shape() {
+        let ms = MultiState::photo(3, 3);
+        let mut rng = Rng::new(1);
+        let x = ms.initial_geometry(&mut rng);
+        for s in 0..3 {
+            assert_eq!(ms.state_forces(&x, s).len(), 9);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Mini property-testing framework (offline `proptest` substitute).
+//!
+//! Usage (`no_run`: doctest binaries can't see the xla rpath):
+//! ```no_run
+//! use pal::prop::{forall, Gen};
+//! forall(64, |g| (g.usize(1, 10), g.vec_f32(5, -1.0, 1.0)), |(n, v)| {
+//!     v.len() == 5 && n >= 1
+//! });
+//! ```
+//!
+//! On failure it retries with progressively simpler inputs derived from the
+//! failing seed (cheap shrinking: re-generates with smaller size hints) and
+//! panics with the seed so the case is reproducible.
+
+use crate::rng::Rng;
+
+/// Value generator handed to the input closure.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0.0, 1.0]; shrinking re-runs with smaller hints.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// Uniform usize in [lo, hi], scaled toward `lo` when shrinking.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1) }
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let span = (hi - lo) * self.size as f32;
+        lo + self.rng.f32() * span
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo) * self.size
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.f64() < 0.5
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        self.rng.normal_vec(len)
+    }
+
+    /// A list of `count` arrays of width `w`.
+    pub fn arrays(&mut self, count: usize, w: usize) -> Vec<Vec<f32>> {
+        (0..count).map(|_| self.vec_normal(w)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases: generate an input, check the property.
+/// Panics with the reproducing seed on the first failure (after attempting
+/// smaller-sized reproductions for a friendlier counterexample).
+pub fn forall<T: std::fmt::Debug>(
+    cases: u64,
+    mut make: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0x9E3779B9u64.wrapping_mul(case + 1);
+        let input = make(&mut Gen::new(seed, 1.0));
+        if !prop(input) {
+            // try to find a smaller failing case from the same seed
+            for &size in &[0.1, 0.3, 0.6] {
+                let small = make(&mut Gen::new(seed, size));
+                if !prop(small) {
+                    let repro = make(&mut Gen::new(seed, size));
+                    panic!(
+                        "property failed (seed={seed}, size={size}); counterexample: {repro:?}"
+                    );
+                }
+            }
+            let repro = make(&mut Gen::new(seed, 1.0));
+            panic!("property failed (seed={seed}); counterexample: {repro:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(50, |g| g.usize(0, 10), |n| n <= 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(50, |g| g.usize(0, 100), |n| n < 90);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(
+            100,
+            |g| (g.f32(-2.0, 3.0), g.usize(5, 9)),
+            |(x, n)| (-2.0..=3.0).contains(&x) && (5..=9).contains(&n),
+        );
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        let mut first = vec![];
+        forall(5, |g| g.vec_f32(3, 0.0, 1.0), |v| {
+            first.push(v);
+            true
+        });
+        let mut second = vec![];
+        forall(5, |g| g.vec_f32(3, 0.0, 1.0), |v| {
+            second.push(v);
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

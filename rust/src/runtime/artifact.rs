@@ -1,0 +1,221 @@
+//! Artifact manifest: typed view over `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::json::{self, Value};
+
+/// Element type of a tensor crossing the rust↔HLO boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "u32" => Ok(DType::U32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn parse(v: &Value) -> anyhow::Result<Self> {
+        let name = v.get("name").as_str().context("tensor missing name")?.to_string();
+        let shape = v
+            .get("shape")
+            .as_array()
+            .context("tensor missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad dim"))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = DType::parse(v.get("dtype").as_str().unwrap_or("f32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata written by aot.py (param_size, n_members, ...).
+    pub meta: Value,
+}
+
+impl ArtifactEntry {
+    /// Integer metadata accessor (panics are reserved for programmer error,
+    /// so this returns a Result).
+    pub fn meta_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.meta
+            .get(key)
+            .as_usize()
+            .with_context(|| format!("artifact {}: missing meta.{key}", self.name))
+    }
+
+    pub fn meta_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.meta
+            .get(key)
+            .as_f64()
+            .with_context(|| format!("artifact {}: missing meta.{key}", self.name))
+    }
+
+    fn parse(v: &Value) -> anyhow::Result<Self> {
+        let name = v.get("name").as_str().context("entry missing name")?.to_string();
+        let file = v.get("file").as_str().context("entry missing file")?.to_string();
+        let inputs = v
+            .get("inputs")
+            .as_array()
+            .context("entry missing inputs")?
+            .iter()
+            .map(TensorSpec::parse)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let outputs = v
+            .get("outputs")
+            .as_array()
+            .context("entry missing outputs")?
+            .iter()
+            .map(TensorSpec::parse)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ArtifactEntry { name, file, inputs, outputs, meta: v.get("meta").clone() })
+    }
+}
+
+/// Parsed manifest: artifact directory + entries by name.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Self> {
+        let v = json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = v.get("version").as_i64().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = BTreeMap::new();
+        for e in v.get("entries").as_array().context("manifest missing entries")? {
+            let entry = ArtifactEntry::parse(e)?;
+            if entries.insert(entry.name.clone(), entry.clone()).is_some() {
+                bail!("duplicate artifact name {}", entry.name);
+            }
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Lookup an entry, with a helpful error listing near-misses.
+    pub fn entry(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.entries.get(name).with_context(|| {
+            let known: Vec<&str> = self
+                .entries
+                .keys()
+                .filter(|k| k.split('_').next() == name.split('_').next())
+                .map(|s| s.as_str())
+                .collect();
+            format!("unknown artifact {name}; similar: {known:?}")
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// All entries whose name starts with `prefix` (e.g. one model family).
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> {
+        self.entries.values().filter(move |e| e.name.starts_with(prefix))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "toy_fwd_b20", "file": "toy_fwd_b20.hlo.txt",
+         "inputs": [{"name": "w", "shape": [60], "dtype": "f32"},
+                    {"name": "x", "shape": [20, 4], "dtype": "f32"}],
+         "outputs": [{"name": "y", "shape": [3, 20, 4], "dtype": "f32"}],
+         "meta": {"param_size": 20, "n_members": 3}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MANIFEST, "/tmp".into()).unwrap();
+        let e = m.entry("toy_fwd_b20").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].shape, vec![20, 4]);
+        assert_eq!(e.inputs[1].len(), 80);
+        assert_eq!(e.outputs[0].shape, vec![3, 20, 4]);
+        assert_eq!(e.meta_usize("param_size").unwrap(), 20);
+    }
+
+    #[test]
+    fn unknown_entry_is_error() {
+        let m = Manifest::parse(MANIFEST, "/tmp".into()).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn version_checked() {
+        assert!(Manifest::parse(r#"{"version": 2, "entries": []}"#, "/tmp".into()).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let dup = MANIFEST.replace("]\n    }", concat!(
+            ",{\"name\": \"toy_fwd_b20\", \"file\": \"x\", ",
+            "\"inputs\": [], \"outputs\": [], \"meta\": {}}]\n    }"));
+        // Only assert when the replace actually produced a duplicate doc.
+        if dup != MANIFEST {
+            assert!(Manifest::parse(&dup, "/tmp".into()).is_err());
+        }
+    }
+
+    #[test]
+    fn prefix_filter() {
+        let m = Manifest::parse(MANIFEST, "/tmp".into()).unwrap();
+        assert_eq!(m.with_prefix("toy").count(), 1);
+        assert_eq!(m.with_prefix("potential").count(), 0);
+    }
+}

@@ -1,0 +1,254 @@
+//! PJRT execution engine: compile-once, execute-many, flat `Vec<f32>` I/O.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use super::artifact::{ArtifactEntry, DType, Manifest};
+
+/// Borrowed input tensor for [`Engine::call`].
+#[derive(Debug, Clone, Copy)]
+pub enum TensorIn<'a> {
+    /// Flat f32 data; must match the spec's element count.
+    F32(&'a [f32]),
+    /// Scalar u32 (seeds).
+    U32(u32),
+}
+
+/// Per-artifact execution statistics (used by the §Perf pass).
+#[derive(Debug, Default, Clone)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_ns: u128,
+    pub compile_ns: u128,
+}
+
+/// A PJRT CPU client plus a lazily-compiled executable cache.
+///
+/// Not `Send`/`Sync` by construction (raw PJRT handles); build one per
+/// kernel-host thread — see the module docs.
+pub struct Engine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<HashMap<String, CallStats>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over a manifest.
+    pub fn new(manifest: Manifest) -> anyhow::Result<Self> {
+        // Many engines (one per kernel rank) share the host: multi-threaded
+        // eigen inside each PJRT client oversubscribes the machine and
+        // inflates tail latency. Our per-call tensors are small; force
+        // single-threaded execution unless the user overrides XLA_FLAGS.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: load the default artifacts directory.
+    pub fn from_default_dir() -> anyhow::Result<Self> {
+        Engine::new(Manifest::load(super::default_artifacts_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Look up the artifact entry (shape metadata) for `name`.
+    pub fn entry(&self, name: &str) -> anyhow::Result<ArtifactEntry> {
+        Ok(self.manifest.entry(name)?.clone())
+    }
+
+    /// Ensure `name` is compiled; returns compile wall time in ns (0 if cached).
+    pub fn warm(&self, name: &str) -> anyhow::Result<u128> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(0);
+        }
+        let entry = self.manifest.entry(name)?;
+        let path = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let dt = t0.elapsed().as_nanos();
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_ns += dt;
+        Ok(dt)
+    }
+
+    fn validate(&self, entry: &ArtifactEntry, inputs: &[TensorIn]) -> anyhow::Result<()> {
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (spec, input) in entry.inputs.iter().zip(inputs) {
+            match (spec.dtype, input) {
+                (DType::F32, TensorIn::F32(data)) => {
+                    if data.len() != spec.len() {
+                        bail!(
+                            "artifact {} input {}: expected {} elements ({:?}), got {}",
+                            entry.name,
+                            spec.name,
+                            spec.len(),
+                            spec.shape,
+                            data.len()
+                        );
+                    }
+                }
+                (DType::U32, TensorIn::U32(_)) => {
+                    if !spec.shape.is_empty() {
+                        bail!("artifact {} input {}: u32 inputs must be scalar", entry.name, spec.name);
+                    }
+                }
+                (want, _) => {
+                    bail!("artifact {} input {}: dtype mismatch (manifest {want:?})", entry.name, spec.name)
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name`. Returns one flat `Vec<f32>` per output, in
+    /// manifest order.
+    pub fn call(&self, name: &str, inputs: &[TensorIn]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.entry(name)?.clone();
+        self.validate(&entry, inputs)?;
+        self.warm(name)?;
+
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, input) in entry.inputs.iter().zip(inputs) {
+            let lit = match input {
+                TensorIn::F32(data) => {
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .with_context(|| format!("reshaping input {}", spec.name))?
+                }
+                TensorIn::U32(v) => xla::Literal::scalar(*v),
+            };
+            literals.push(lit);
+        }
+
+        let t0 = Instant::now();
+        let exes = self.executables.borrow();
+        let exe = exes.get(name).expect("warmed above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {name}"))?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        drop(exes);
+
+        // aot.py lowers with return_tuple=True — always a tuple root.
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "artifact {name}: manifest promises {} outputs, executable returned {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (spec, lit) in entry.outputs.iter().zip(parts) {
+            let v = lit
+                .to_vec::<f32>()
+                .with_context(|| format!("reading output {} of {name}", spec.name))?;
+            if v.len() != spec.len() {
+                bail!(
+                    "artifact {name} output {}: expected {} elements, got {}",
+                    spec.name,
+                    spec.len(),
+                    v.len()
+                );
+            }
+            out.push(v);
+        }
+
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_ns += t0.elapsed().as_nanos();
+        Ok(out)
+    }
+
+    /// Snapshot of per-artifact stats (name → stats).
+    pub fn stats(&self) -> HashMap<String, CallStats> {
+        self.stats.borrow().clone()
+    }
+
+    /// Mean execution latency of `name` in milliseconds, if called.
+    pub fn mean_latency_ms(&self, name: &str) -> Option<f64> {
+        let stats = self.stats.borrow();
+        let s = stats.get(name)?;
+        if s.calls == 0 {
+            return None;
+        }
+        Some(s.total_ns as f64 / s.calls as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests need built artifacts; they live in `rust/tests/` as
+    //! integration tests so `cargo test --lib` stays artifact-free. Here we
+    //! only test validation logic against a fake manifest.
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fake_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"version":1,"entries":[
+                {"name":"f","file":"f.hlo.txt",
+                 "inputs":[{"name":"a","shape":[2,3],"dtype":"f32"},
+                           {"name":"s","shape":[],"dtype":"u32"}],
+                 "outputs":[{"name":"y","shape":[6],"dtype":"f32"}],
+                 "meta":{}}]}"#,
+            PathBuf::from("/nonexistent"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn validate_checks_arity_and_shape() {
+        let engine = Engine::new(fake_manifest()).unwrap();
+        let entry = engine.entry("f").unwrap();
+        let data = [0f32; 6];
+        assert!(engine.validate(&entry, &[TensorIn::F32(&data), TensorIn::U32(1)]).is_ok());
+        // wrong arity
+        assert!(engine.validate(&entry, &[TensorIn::F32(&data)]).is_err());
+        // wrong element count
+        let short = [0f32; 5];
+        assert!(engine
+            .validate(&entry, &[TensorIn::F32(&short), TensorIn::U32(1)])
+            .is_err());
+        // dtype mismatch
+        assert!(engine
+            .validate(&entry, &[TensorIn::U32(3), TensorIn::U32(1)])
+            .is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_is_error() {
+        let engine = Engine::new(fake_manifest()).unwrap();
+        let data = [0f32; 6];
+        assert!(engine.call("f", &[TensorIn::F32(&data), TensorIn::U32(1)]).is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute them.
+//!
+//! The compile path (`python/compile/aot.py`) lowers every L2 entry point to
+//! HLO *text* and records shapes/dtypes plus model metadata in
+//! `manifest.json`. This module is the only place the rust side touches XLA:
+//!
+//! ```text
+//! Manifest::load(dir)          — parse manifest.json
+//! Engine::new(&manifest)       — PJRT CPU client
+//! engine.call(name, &inputs)   — compile-once-then-execute, Vec<f32> I/O
+//! ```
+//!
+//! `Engine` is deliberately **not** `Send`: PJRT handles are thread-affine in
+//! the `xla` crate, so each kernel host thread builds its own engine. This
+//! mirrors the paper's process model (every MPI rank owns its model replica)
+//! and keeps prediction decoupled from training — a training engine running
+//! a long step never blocks the prediction engine.
+
+mod artifact;
+mod engine;
+
+pub use artifact::{ArtifactEntry, DType, Manifest, TensorSpec};
+pub use engine::{Engine, TensorIn};
+
+/// Default artifacts directory, overridable with `PAL_ARTIFACTS`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("PAL_ARTIFACTS") {
+        Ok(p) => p.into(),
+        Err(_) => {
+            // Walk up from CWD until we find artifacts/manifest.json so
+            // examples work from target/ subdirectories too.
+            let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+            loop {
+                let cand = dir.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !dir.pop() {
+                    return "artifacts".into();
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Serial active-learning baseline (the paper's Fig. 1a).
+//!
+//! Runs the *same* kernel objects as the parallel workflow, but strictly
+//! sequentially per iteration: (1) explore — `k` generation/prediction
+//! steps; (2) label — the selected samples through the oracles (the only
+//! parallelism the paper grants the serial baseline: `P` oracle workers,
+//! eq. (1)'s `N/P` term); (3) train to completion. This is the comparator
+//! for the Fig-1/S2 speedup benches.
+
+use std::time::{Duration, Instant};
+
+use crate::kernels::{Generator, Model, Oracle, Utils};
+use crate::telemetry::KernelTelemetry;
+
+/// Phase timings + counters of one serial run.
+#[derive(Debug, Default, Clone)]
+pub struct SerialReport {
+    pub iterations: u64,
+    pub oracle_labels: u64,
+    pub wall: Duration,
+    pub gen_time: Duration,
+    pub oracle_time: Duration,
+    pub train_time: Duration,
+    pub final_loss: Option<f32>,
+    pub telemetry: KernelTelemetry,
+}
+
+/// Serial workflow over user kernels.
+pub struct SerialWorkflow {
+    pub generators: Vec<Box<dyn Generator>>,
+    pub oracles: Vec<Box<dyn Oracle>>,
+    /// One model per committee member (predict + train roles fused —
+    /// serial AL retrains the same weights it predicts with).
+    pub models: Vec<Box<dyn Model>>,
+    pub utils: Box<dyn Utils>,
+    /// generation/prediction steps per AL iteration
+    pub steps_per_iter: usize,
+    /// AL iterations to run
+    pub iterations: u64,
+}
+
+impl SerialWorkflow {
+    pub fn run(&mut self) -> SerialReport {
+        let mut report = SerialReport::default();
+        let mut tel = KernelTelemetry::new("serial", 0);
+        let t_start = Instant::now();
+        let mut last_pred: Vec<Option<Vec<f32>>> = vec![None; self.generators.len()];
+
+        for _ in 0..self.iterations {
+            // ---- phase 1: explore (generation + prediction, sequential) ----
+            let t0 = Instant::now();
+            let mut selected: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..self.steps_per_iter {
+                let mut inputs = Vec::with_capacity(self.generators.len());
+                for (g, prev) in self.generators.iter_mut().zip(&last_pred) {
+                    let (_stop, data) = g.generate_new_data(prev.as_deref());
+                    inputs.push(data);
+                }
+                let preds_per_model: Vec<Vec<Vec<f32>>> =
+                    self.models.iter_mut().map(|m| m.predict(&inputs)).collect();
+                let (to_orcl, checked) =
+                    self.utils.prediction_check(&inputs, &preds_per_model);
+                selected.extend(to_orcl);
+                for (slot, c) in last_pred.iter_mut().zip(checked) {
+                    *slot = Some(c);
+                }
+            }
+            report.gen_time += t0.elapsed();
+            tel.record("generate", t0.elapsed());
+
+            // ---- phase 2: label (P-parallel oracles — eq. (1)'s N/P) ----
+            let t1 = Instant::now();
+            let labeled = label_parallel(&mut self.oracles, &selected);
+            report.oracle_labels += labeled.len() as u64;
+            report.oracle_time += t1.elapsed();
+            tel.record("label", t1.elapsed());
+
+            // ---- phase 3: train to completion ----
+            let t2 = Instant::now();
+            if !labeled.is_empty() {
+                for m in self.models.iter_mut() {
+                    m.add_trainingset(&labeled);
+                    m.retrain(&mut || false);
+                    report.final_loss = m.last_loss().or(report.final_loss);
+                }
+            }
+            report.train_time += t2.elapsed();
+            tel.record("train", t2.elapsed());
+
+            report.iterations += 1;
+        }
+        report.wall = t_start.elapsed();
+        report.telemetry = tel;
+        report
+    }
+}
+
+/// Label `inputs` using round-robin assignment over `P` oracle workers run
+/// on scoped threads — the serial workflow's only concurrency (the paper
+/// assumes "only parallelization of the oracles", eq. (1)).
+fn label_parallel(
+    oracles: &mut [Box<dyn Oracle>],
+    inputs: &[Vec<f32>],
+) -> Vec<(Vec<f32>, Vec<f32>)> {
+    if inputs.is_empty() || oracles.is_empty() {
+        return vec![];
+    }
+    let p = oracles.len();
+    // partition inputs round-robin across workers
+    let mut shards: Vec<Vec<(usize, Vec<f32>)>> = vec![vec![]; p];
+    for (i, x) in inputs.iter().enumerate() {
+        shards[i % p].push((i, x.clone()));
+    }
+    let mut results: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; inputs.len()];
+    // Scoped threads: oracle objects are borrowed mutably, one per thread.
+    // Oracle is not Sync, so each worker gets exactly one oracle by value of
+    // the mutable borrow.
+    let shard_results: Vec<Vec<(usize, Vec<f32>, Vec<f32>)>> =
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for (oracle, shard) in oracles.iter_mut().zip(shards.into_iter()) {
+                handles.push(scope.spawn(move || {
+                    shard
+                        .into_iter()
+                        .map(|(i, x)| {
+                            let y = oracle.run_calc(&x);
+                            (i, x, y)
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("oracle worker panicked")).collect()
+        });
+    for shard in shard_results {
+        for (i, x, y) in shard {
+            results[i] = Some((x, y));
+        }
+    }
+    results.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::selection::SelectAllUtils;
+    use crate::kernels::Mode;
+    use crate::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+    use std::time::Duration;
+
+    fn workflow(n_oracles: usize, label_cost: Duration) -> SerialWorkflow {
+        SerialWorkflow {
+            generators: (0..4)
+                .map(|i| {
+                    Box::new(SyntheticGenerator::new(4, Duration::ZERO, u64::MAX, i as u64))
+                        as Box<dyn Generator>
+                })
+                .collect(),
+            oracles: (0..n_oracles)
+                .map(|_| {
+                    Box::new(SyntheticOracle { label_cost, out_dim: 2 }) as Box<dyn Oracle>
+                })
+                .collect(),
+            models: (0..2)
+                .map(|_| {
+                    Box::new(SyntheticModel::new(
+                        4,
+                        2,
+                        Duration::ZERO,
+                        Duration::ZERO,
+                        4,
+                        Mode::Train,
+                    )) as Box<dyn Model>
+                })
+                .collect(),
+            utils: Box::new(SelectAllUtils { max_per_iter: 4 }),
+            steps_per_iter: 2,
+            iterations: 3,
+        }
+    }
+
+    #[test]
+    fn serial_runs_and_labels() {
+        let mut w = workflow(2, Duration::ZERO);
+        let r = w.run();
+        assert_eq!(r.iterations, 3);
+        // 3 iters × 2 steps × 4 selected per step
+        assert_eq!(r.oracle_labels, 24);
+        assert!(r.final_loss.is_some());
+    }
+
+    #[test]
+    fn oracle_parallelism_scales_labeling() {
+        let cost = Duration::from_millis(8);
+        let mut w1 = workflow(1, cost);
+        let r1 = w1.run();
+        let mut w4 = workflow(4, cost);
+        let r4 = w4.run();
+        assert_eq!(r1.oracle_labels, r4.oracle_labels);
+        // 4 workers should label ≥2x faster than 1
+        assert!(
+            r4.oracle_time < r1.oracle_time / 2,
+            "1 worker {:?}, 4 workers {:?}",
+            r1.oracle_time,
+            r4.oracle_time
+        );
+    }
+
+    #[test]
+    fn phases_sum_to_wall_approximately() {
+        let mut w = workflow(2, Duration::from_millis(2));
+        let r = w.run();
+        let phases = r.gen_time + r.oracle_time + r.train_time;
+        assert!(phases <= r.wall + Duration::from_millis(5));
+        assert!(phases >= r.wall / 2, "phases {phases:?} wall {:?}", r.wall);
+    }
+}

@@ -1,0 +1,4 @@
+//! Analytic models + synthetic workloads for the speedup experiments.
+
+pub mod speedup;
+pub mod workload;

@@ -1,0 +1,165 @@
+//! SI §S2: analytic runtime/speedup model for parallel vs serial AL.
+//!
+//! Implements equations (1)–(4) and the three use-case estimates. The
+//! `si_s2_usecases` bench compares these predictions against measured runs
+//! of the full coordinator and the serial baseline.
+
+/// Workload parameters (SI §S2.1). Times in seconds (scale-free: only
+/// ratios matter for the speedup).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    /// Time to label a single sample (`t_oracle`).
+    pub t_oracle: f64,
+    /// Time to train the ML model (`t_train`).
+    pub t_train: f64,
+    /// Time for the generator+predictor phase (`t_gen`).
+    pub t_gen: f64,
+    /// Samples to label per iteration (`N`).
+    pub n_samples: u64,
+    /// Parallel labeling workers (`P <= N` assumed by the paper).
+    pub p_workers: u64,
+}
+
+impl Workload {
+    /// Eq. (1): `T_serial = N/P · t_oracle + t_train + t_gen`.
+    pub fn t_serial(&self) -> f64 {
+        self.oracle_phase() + self.t_train + self.t_gen
+    }
+
+    /// Eq. (2): `T_parallel = max(N/P · t_oracle, t_train, t_gen)`.
+    pub fn t_parallel(&self) -> f64 {
+        self.oracle_phase().max(self.t_train).max(self.t_gen)
+    }
+
+    /// Eq. (3)/(4): `S = T_serial / T_parallel` (a lower bound — the paper
+    /// notes parallel resources are never idle).
+    pub fn speedup(&self) -> f64 {
+        self.t_serial() / self.t_parallel()
+    }
+
+    /// `N/P · t_oracle` with the paper's `P ≤ N` assumption relaxed to
+    /// `ceil` semantics for small integer cases.
+    pub fn oracle_phase(&self) -> f64 {
+        if self.p_workers == 0 {
+            return f64::INFINITY;
+        }
+        (self.n_samples as f64 / self.p_workers as f64) * self.t_oracle
+    }
+
+    /// Which module bounds `T_parallel`.
+    pub fn bottleneck(&self) -> Bottleneck {
+        let o = self.oracle_phase();
+        if o >= self.t_train && o >= self.t_gen {
+            Bottleneck::Oracle
+        } else if self.t_train >= self.t_gen {
+            Bottleneck::Training
+        } else {
+            Bottleneck::Generation
+        }
+    }
+}
+
+/// The binding module in eq. (2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    Oracle,
+    Training,
+    Generation,
+}
+
+/// SI §S2.2 use case 1 — DFT oracle + GNN training, `t_oracle = t_train`,
+/// `t_gen ≪ both`. Paper: `S = 1 + P/N` (→ 2 at `P = N`).
+pub fn use_case_1(n: u64, p: u64) -> Workload {
+    Workload { t_oracle: 1.0, t_train: 1.0, t_gen: 0.001, n_samples: n, p_workers: p }
+}
+
+/// SI §S2.2 use case 2 — cheap xTB oracle, training-bound. Paper: `S ≈ 1`.
+/// (10 s oracle, 1 h training, 10 min generator; scale-free ratios.)
+pub fn use_case_2(n: u64, p: u64) -> Workload {
+    Workload { t_oracle: 10.0, t_train: 3600.0, t_gen: 600.0, n_samples: n, p_workers: p }
+}
+
+/// SI §S2.2 use case 3 — CFD, balanced costs. Paper: `S → 3`.
+pub fn use_case_3(n: u64, p: u64) -> Workload {
+    Workload { t_oracle: 600.0, t_train: 600.0, t_gen: 600.0, n_samples: n, p_workers: p }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_eq2_basic() {
+        let w = Workload { t_oracle: 2.0, t_train: 3.0, t_gen: 1.0, n_samples: 10, p_workers: 5 };
+        assert!((w.t_serial() - (4.0 + 3.0 + 1.0)).abs() < 1e-12);
+        assert!((w.t_parallel() - 4.0).abs() < 1e-12);
+        assert!((w.speedup() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn use_case_1_limit_is_one_plus_p_over_n() {
+        // balanced oracle/training: S = 1 + P/N when N/P >= 1 (eq. 7)
+        for (n, p) in [(8u64, 8u64), (16, 8), (32, 8)] {
+            let w = use_case_1(n, p);
+            let expected = 1.0 + p as f64 / n as f64;
+            // t_gen is negligible but nonzero; allow small slack
+            assert!(
+                (w.speedup() - expected).abs() < 0.01,
+                "N={n} P={p}: {} vs {expected}",
+                w.speedup()
+            );
+        }
+        // P = N → speedup 2
+        assert!((use_case_1(8, 8).speedup() - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn use_case_2_no_speedup() {
+        // training-bound: S ≈ 1 (eq. 10); with N=P=1 the oracle is 10s vs 3600s train
+        let s = use_case_2(1, 1).speedup();
+        assert!(s < 1.2, "expected ~1, got {s}");
+        assert_eq!(use_case_2(1, 1).bottleneck(), Bottleneck::Training);
+    }
+
+    #[test]
+    fn use_case_3_approaches_three() {
+        // balanced: S = 3 exactly at P = N (eq. 13)
+        let s = use_case_3(4, 4).speedup();
+        assert!((s - 3.0).abs() < 1e-9, "{s}");
+        assert_eq!(use_case_3(4, 4).bottleneck(), Bottleneck::Oracle);
+    }
+
+    #[test]
+    fn speedup_at_least_one() {
+        // S >= 1 for any non-degenerate workload
+        for t_o in [0.1, 1.0, 10.0] {
+            for t_t in [0.1, 1.0, 10.0] {
+                for t_g in [0.1, 1.0, 10.0] {
+                    let w = Workload {
+                        t_oracle: t_o,
+                        t_train: t_t,
+                        t_gen: t_g,
+                        n_samples: 6,
+                        p_workers: 3,
+                    };
+                    assert!(w.speedup() >= 1.0);
+                    assert!(w.speedup() <= 3.0 + 1e-9); // bounded by #modules
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_workers_shrink_oracle_phase() {
+        let a = use_case_1(16, 2);
+        let b = use_case_1(16, 8);
+        assert!(b.oracle_phase() < a.oracle_phase());
+        assert!(b.speedup() >= a.speedup());
+    }
+
+    #[test]
+    fn zero_workers_is_infinite() {
+        let w = Workload { t_oracle: 1.0, t_train: 1.0, t_gen: 1.0, n_samples: 4, p_workers: 0 };
+        assert!(w.oracle_phase().is_infinite());
+    }
+}

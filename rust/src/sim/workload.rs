@@ -1,0 +1,273 @@
+//! Synthetic latency workloads: kernel implementations with *configurable
+//! simulated cost*, used by the speedup/scaling benches to reproduce the
+//! paper's use-case cost structure at bench-friendly timescales.
+
+use std::time::Duration;
+
+use crate::kernels::{Generator, Mode, Model, Oracle, Utils};
+
+/// Spin-sleep for `d` (thread::sleep granularity is fine at our scales).
+pub fn busy_wait(d: Duration) {
+    if d > Duration::ZERO {
+        std::thread::sleep(d);
+    }
+}
+
+/// Generator producing a fixed-width random-walk vector, with optional
+/// per-step cost. Signals stop after `max_steps`.
+pub struct SyntheticGenerator {
+    pub dim: usize,
+    pub step_cost: Duration,
+    pub max_steps: u64,
+    steps: u64,
+    state: Vec<f32>,
+    rng: crate::rng::Rng,
+}
+
+impl SyntheticGenerator {
+    pub fn new(dim: usize, step_cost: Duration, max_steps: u64, seed: u64) -> Self {
+        let mut rng = crate::rng::Rng::new(seed);
+        let state = rng.normal_vec(dim);
+        SyntheticGenerator { dim, step_cost, max_steps, steps: 0, state, rng }
+    }
+}
+
+impl Generator for SyntheticGenerator {
+    fn generate_new_data(&mut self, data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        busy_wait(self.step_cost);
+        self.steps += 1;
+        if let Some(pred) = data_to_gene {
+            // random walk biased by the prediction (arbitrary but
+            // deterministic dynamics; zeroed predictions → fresh restart,
+            // mirroring the SI toy example)
+            if pred.iter().all(|&p| p == 0.0) {
+                self.state = self.rng.normal_vec(self.dim);
+            } else {
+                for (s, p) in self.state.iter_mut().zip(pred) {
+                    *s = 0.9 * *s + 0.1 * p + (self.rng.normal() * 0.1) as f32;
+                }
+            }
+        }
+        (self.steps >= self.max_steps, self.state.clone())
+    }
+}
+
+/// Oracle with fixed simulated cost; label = elementwise `sin` of the input
+/// (nontrivial learnable map).
+pub struct SyntheticOracle {
+    pub label_cost: Duration,
+    pub out_dim: usize,
+}
+
+impl Oracle for SyntheticOracle {
+    fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+        busy_wait(self.label_cost);
+        (0..self.out_dim)
+            .map(|k| input.iter().enumerate().map(|(i, &v)| ((i + k + 1) as f32 * v).sin()).sum())
+            .collect()
+    }
+}
+
+/// Model whose predict/train have fixed simulated cost. "Prediction" is a
+/// linear readout of trainable weights; retraining runs `epochs` of
+/// simulated epochs, each costing `epoch_cost`, interruptible between
+/// epochs (paper §S5 `req_data.Test()` semantics).
+pub struct SyntheticModel {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub predict_cost: Duration,
+    pub epoch_cost: Duration,
+    pub epochs: usize,
+    weights: Vec<f32>,
+    dataset: Vec<(Vec<f32>, Vec<f32>)>,
+    last_loss: Option<f32>,
+    last_round_epochs: u64,
+    pub mode: Mode,
+}
+
+impl SyntheticModel {
+    pub fn new(
+        in_dim: usize,
+        out_dim: usize,
+        predict_cost: Duration,
+        epoch_cost: Duration,
+        epochs: usize,
+        mode: Mode,
+    ) -> Self {
+        SyntheticModel {
+            in_dim,
+            out_dim,
+            predict_cost,
+            epoch_cost,
+            epochs,
+            weights: vec![0.0; in_dim * out_dim],
+            dataset: vec![],
+            last_loss: None,
+            last_round_epochs: 0,
+            mode,
+        }
+    }
+
+    fn predict_one(&self, x: &[f32]) -> Vec<f32> {
+        (0..self.out_dim)
+            .map(|o| {
+                x.iter()
+                    .take(self.in_dim)
+                    .enumerate()
+                    .map(|(i, &v)| v * self.weights[o * self.in_dim + i])
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+impl Model for SyntheticModel {
+    fn predict(&mut self, list_data_to_pred: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        busy_wait(self.predict_cost);
+        list_data_to_pred.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    fn update(&mut self, weight_array: &[f32]) {
+        let n = self.weights.len();
+        self.weights.copy_from_slice(&weight_array[..n]);
+    }
+
+    fn get_weight(&self) -> Vec<f32> {
+        self.weights.clone()
+    }
+
+    fn get_weight_size(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
+        self.dataset.extend_from_slice(datapoints);
+    }
+
+    fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {
+        let dataset = std::mem::take(&mut self.dataset);
+        self.last_round_epochs = 0;
+        for _ in 0..self.epochs {
+            self.last_round_epochs += 1;
+            busy_wait(self.epoch_cost);
+            // one LMS pass over the data (cheap, just to make weights move)
+            let mut loss = 0.0f32;
+            let n = dataset.len().max(1);
+            for (x, y) in &dataset {
+                let pred = self.predict_one(x);
+                for (o, (&p, &t)) in pred.iter().zip(y.iter()).enumerate() {
+                    let err = t - p;
+                    loss += err * err;
+                    for i in 0..self.in_dim.min(x.len()) {
+                        self.weights[o * self.in_dim + i] += 0.01 * err * x[i] / n as f32;
+                    }
+                }
+            }
+            self.last_loss = Some(loss / n as f32);
+            if interrupt() {
+                break;
+            }
+        }
+        self.dataset = dataset;
+        false
+    }
+
+    fn last_loss(&self) -> Option<f32> {
+        self.last_loss
+    }
+
+    fn last_round_epochs(&self) -> u64 {
+        self.last_round_epochs
+    }
+}
+
+/// Std-threshold utils over the synthetic model committee (see
+/// [`crate::coordinator::selection`] for the production implementation).
+pub struct SyntheticUtils {
+    pub threshold: f32,
+    pub max_per_iter: usize,
+}
+
+impl Utils for SyntheticUtils {
+    fn prediction_check(
+        &mut self,
+        list_data_to_pred: &[Vec<f32>],
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        crate::coordinator::selection::committee_std_check(
+            list_data_to_pred,
+            preds_per_model,
+            self.threshold,
+            self.max_per_iter,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_stops_at_max_steps() {
+        let mut g = SyntheticGenerator::new(4, Duration::ZERO, 3, 0);
+        assert!(!g.generate_new_data(None).0);
+        assert!(!g.generate_new_data(Some(&[0.1; 4])).0);
+        assert!(g.generate_new_data(Some(&[0.1; 4])).0);
+    }
+
+    #[test]
+    fn generator_restarts_on_zero_prediction() {
+        let mut g = SyntheticGenerator::new(4, Duration::ZERO, 100, 0);
+        let (_, before) = g.generate_new_data(None);
+        let (_, after) = g.generate_new_data(Some(&[0.0; 4]));
+        assert_ne!(before, after);
+    }
+
+    #[test]
+    fn oracle_label_deterministic() {
+        let mut o = SyntheticOracle { label_cost: Duration::ZERO, out_dim: 2 };
+        let a = o.run_calc(&[0.5, -0.5]);
+        let b = o.run_calc(&[0.5, -0.5]);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn model_learns_linear_map() {
+        let mut m = SyntheticModel::new(2, 1, Duration::ZERO, Duration::ZERO, 3000, Mode::Train);
+        // y = x0 + 2 x1
+        let data: Vec<(Vec<f32>, Vec<f32>)> = (0..20)
+            .map(|i| {
+                let x = vec![(i as f32) / 10.0 - 1.0, ((i * 7 % 13) as f32) / 6.0 - 1.0];
+                let y = vec![x[0] + 2.0 * x[1]];
+                (x, y)
+            })
+            .collect();
+        m.add_trainingset(&data);
+        m.retrain(&mut || false);
+        assert!(m.last_loss().unwrap() < 0.05, "loss {:?}", m.last_loss());
+    }
+
+    #[test]
+    fn retrain_interruptible() {
+        let mut m = SyntheticModel::new(2, 1, Duration::ZERO, Duration::from_millis(1), 1000, Mode::Train);
+        m.add_trainingset(&[(vec![1.0, 0.0], vec![1.0])]);
+        let mut calls = 0;
+        let t0 = std::time::Instant::now();
+        m.retrain(&mut || {
+            calls += 1;
+            calls >= 3
+        });
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn weight_roundtrip() {
+        let mut m = SyntheticModel::new(3, 2, Duration::ZERO, Duration::ZERO, 1, Mode::Predict);
+        let w: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        m.update(&w);
+        assert_eq!(m.get_weight(), w);
+        assert_eq!(m.get_weight_size(), 6);
+    }
+}

@@ -1,0 +1,218 @@
+//! Per-kernel timing and counters; aggregated into the run report.
+//!
+//! The paper reports per-phase latencies (§3.1: 51.5 ms committee forward,
+//! 4.27 ms communication + propagation). Each kernel host owns a
+//! [`KernelTelemetry`], times its phases with [`KernelTelemetry::time`],
+//! and returns it on join; [`RunReport`] aggregates across ranks.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::json::{obj, Value};
+
+/// Accumulating timer: count + total + max.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Timer {
+    pub count: u64,
+    pub total: Duration,
+    pub max: Duration,
+}
+
+impl Timer {
+    pub fn record(&mut self, d: Duration) {
+        self.count += 1;
+        self.total += d;
+        if d > self.max {
+            self.max = d;
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean().as_secs_f64() * 1e3
+    }
+}
+
+/// One kernel instance's telemetry.
+#[derive(Debug, Default, Clone)]
+pub struct KernelTelemetry {
+    pub kernel: String,
+    pub rank: usize,
+    pub counters: BTreeMap<String, u64>,
+    pub timers: BTreeMap<String, Timer>,
+}
+
+impl KernelTelemetry {
+    pub fn new(kernel: &str, rank: usize) -> Self {
+        KernelTelemetry { kernel: kernel.into(), rank, ..Default::default() }
+    }
+
+    pub fn bump(&mut self, counter: &str) {
+        self.add(counter, 1);
+    }
+
+    pub fn add(&mut self, counter: &str, n: u64) {
+        *self.counters.entry(counter.to_string()).or_default() += n;
+    }
+
+    pub fn record(&mut self, timer: &str, d: Duration) {
+        self.timers.entry(timer.to_string()).or_default().record(d);
+    }
+
+    /// Time a closure under `timer`.
+    pub fn time<T>(&mut self, timer: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(timer, t0.elapsed());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer(&self, name: &str) -> Timer {
+        self.timers.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let counters = Value::Object(
+            self.counters.iter().map(|(k, v)| (k.clone(), Value::Num(*v as f64))).collect(),
+        );
+        let timers = Value::Object(
+            self.timers
+                .iter()
+                .map(|(k, t)| {
+                    (
+                        k.clone(),
+                        obj(vec![
+                            ("count", Value::Num(t.count as f64)),
+                            ("mean_ms", Value::Num(t.mean_ms())),
+                            ("total_ms", Value::Num(t.total.as_secs_f64() * 1e3)),
+                            ("max_ms", Value::Num(t.max.as_secs_f64() * 1e3)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("kernel", Value::Str(self.kernel.clone())),
+            ("rank", Value::Num(self.rank as f64)),
+            ("counters", counters),
+            ("timers", timers),
+        ])
+    }
+}
+
+/// Aggregated result of one workflow run.
+#[derive(Debug, Default, Clone)]
+pub struct RunReport {
+    /// Exchange loop iterations completed.
+    pub al_iterations: u64,
+    /// Samples labeled by the oracle kernel.
+    pub oracle_labels: u64,
+    /// Retraining rounds completed across trainers.
+    pub retrain_rounds: u64,
+    /// Final (most recent) training losses per trainer.
+    pub final_losses: Vec<f32>,
+    /// Total wall time.
+    pub wall: Duration,
+    /// Per-rank telemetry.
+    pub kernels: Vec<KernelTelemetry>,
+    /// comm stats: total messages, payload bytes.
+    pub messages: u64,
+    pub payload_bytes: u64,
+}
+
+impl RunReport {
+    /// All telemetry of one kernel type.
+    pub fn kernel(&self, name: &str) -> Vec<&KernelTelemetry> {
+        self.kernels.iter().filter(|k| k.kernel == name).collect()
+    }
+
+    /// Mean of a timer across ranks of a kernel (ms).
+    pub fn mean_timer_ms(&self, kernel: &str, timer: &str) -> f64 {
+        let ks = self.kernel(kernel);
+        let (mut total, mut count) = (Duration::ZERO, 0u64);
+        for k in ks {
+            let t = k.timer(timer);
+            total += t.total;
+            count += t.count;
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total.as_secs_f64() * 1e3 / count as f64
+        }
+    }
+
+    /// Sum of a counter across ranks of a kernel.
+    pub fn sum_counter(&self, kernel: &str, counter: &str) -> u64 {
+        self.kernel(kernel).iter().map(|k| k.counter(counter)).sum()
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("al_iterations", Value::Num(self.al_iterations as f64)),
+            ("oracle_labels", Value::Num(self.oracle_labels as f64)),
+            ("retrain_rounds", Value::Num(self.retrain_rounds as f64)),
+            ("wall_s", Value::Num(self.wall.as_secs_f64())),
+            ("messages", Value::Num(self.messages as f64)),
+            ("payload_bytes", Value::Num(self.payload_bytes as f64)),
+            (
+                "final_losses",
+                Value::Array(self.final_losses.iter().map(|l| Value::Num(*l as f64)).collect()),
+            ),
+            ("kernels", Value::Array(self.kernels.iter().map(|k| k.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates() {
+        let mut t = Timer::default();
+        t.record(Duration::from_millis(10));
+        t.record(Duration::from_millis(30));
+        assert_eq!(t.count, 2);
+        assert_eq!(t.max, Duration::from_millis(30));
+        assert!((t.mean_ms() - 20.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn telemetry_counters_and_timers() {
+        let mut k = KernelTelemetry::new("prediction", 2);
+        k.bump("predictions");
+        k.add("predictions", 4);
+        let out = k.time("fwd", || 7);
+        assert_eq!(out, 7);
+        assert_eq!(k.counter("predictions"), 5);
+        assert_eq!(k.timer("fwd").count, 1);
+        let j = k.to_json();
+        assert_eq!(j.get("kernel").as_str(), Some("prediction"));
+    }
+
+    #[test]
+    fn report_aggregates_across_ranks() {
+        let mut r = RunReport::default();
+        for rank in 0..3 {
+            let mut k = KernelTelemetry::new("prediction", rank);
+            k.record("fwd", Duration::from_millis(10));
+            k.bump("n");
+            r.kernels.push(k);
+        }
+        assert_eq!(r.sum_counter("prediction", "n"), 3);
+        assert!((r.mean_timer_ms("prediction", "fwd") - 10.0).abs() < 2.0);
+        assert_eq!(r.mean_timer_ms("oracle", "calc"), 0.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! End-to-end: the full PAL workflow with HLO-backed committee models, MD
+//! generators, and analytic-PES oracles — the production configuration of
+//! the cluster/photodynamics applications, scaled down for CI.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::config::{AlSetting, StopCriteria};
+use pal::coordinator::selection::CommitteeStdUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::generators::{MdGenerator, MdLayout};
+use pal::kernels::models::HloPotentialModel;
+use pal::kernels::models::HloToyModel;
+use pal::kernels::oracles::PesOracle;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::potential::{Morse, Pes};
+use pal::runtime::{default_artifacts_dir, Manifest};
+use pal::rng::Rng;
+
+fn dimer_layout() -> MdLayout {
+    MdLayout { n_atoms: 2, n_globals: 1, n_states: 1 }
+}
+
+/// 3 MD generators on the Morse dimer, 2-member committee (2 pred + 2 train
+/// ranks), 2 analytic oracles.
+fn dimer_kernels(setting: &AlSetting) -> KernelSet {
+    let layout = dimer_layout();
+    let generators = (0..setting.gene_process)
+        .map(|i| {
+            let seed = 100 + i as u64;
+            Box::new(move || {
+                let mut rng = Rng::new(seed);
+                let x0 = Morse::dimer().initial_geometry(&mut rng);
+                Box::new(
+                    MdGenerator::new(layout, x0, seed).with_dt(0.02).with_patience(3),
+                ) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..setting.orcl_process)
+        .map(|_| {
+            Box::new(|| {
+                // ~100 ms simulated QC cost so labeling overlaps trainer
+                // startup (PJRT compile) as in a real deployment
+                Box::new(pal::kernels::oracles::LatencyOracle::new(
+                    PesOracle::fixed(Morse::dimer(), 1),
+                    Duration::from_millis(100),
+                )) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let dir = default_artifacts_dir();
+    let model = Arc::new(move |mode: Mode, replica: usize| {
+        let manifest = Manifest::load(&dir).expect("artifacts");
+        let opts = pal::kernels::models::TrainOptions {
+            epochs_per_round: 8,
+            ..Default::default()
+        };
+        Box::new(
+            HloPotentialModel::new(manifest, "dimer1", mode, 41 + replica as u32, opts)
+                .expect("model"),
+        ) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(CommitteeStdUtils::new(0.05, 4)) as Box<dyn Utils>);
+    KernelSet { generators, oracles, model, utils }
+}
+
+#[test]
+fn hlo_dimer_workflow_labels_and_trains() {
+    let setting = AlSetting {
+        result_dir: "/tmp/pal-e2e-dimer".into(),
+        gene_process: 3,
+        pred_process: 2,
+        ml_process: 2,
+        orcl_process: 2,
+        retrain_size: 4,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(24),
+            max_wall: Some(Duration::from_secs(120)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let kernels = dimer_kernels(&setting);
+    let report = Workflow::new(setting).run(kernels).unwrap();
+    assert!(report.oracle_labels >= 24, "labels {}", report.oracle_labels);
+    assert!(report.retrain_rounds > 0, "no retraining happened");
+    assert!(report.al_iterations > 0);
+    // the committee actually served predictions through PJRT
+    let samples = report.sum_counter("prediction", "samples");
+    assert!(samples > 0);
+    // reported training losses are finite (NaN = trainer finished its
+    // round during shutdown, after the Manager stopped listening)
+    for l in &report.final_losses {
+        assert!(l.is_finite() || l.is_nan(), "loss {l}");
+    }
+}
+
+#[test]
+fn hlo_model_learns_morse_offline() {
+    // The model kernel alone: feed it oracle-labeled dimer data and verify
+    // the loss decreases and validation improves — the learning-curve
+    // mechanism behind examples/end_to_end.rs.
+    let manifest = Manifest::load(default_artifacts_dir()).unwrap();
+    let opts = pal::kernels::models::TrainOptions {
+        epochs_per_round: 60,
+        val_split: 0.25,
+        ..Default::default()
+    };
+    let mut model =
+        HloPotentialModel::new(manifest, "dimer1", Mode::Train, 7, opts).unwrap();
+
+    let mut oracle = PesOracle::fixed(Morse::dimer(), 1);
+    let mut rng = Rng::new(3);
+    let mut points = Vec::new();
+    for _ in 0..48 {
+        let r = 0.9 + 1.6 * rng.f32();
+        let input = vec![0.0, 0.0, 0.0, r, 0.0, 0.0, 0.0, 1.0];
+        let label = oracle.run_calc(&input);
+        points.push((input, label));
+    }
+    model.add_trainingset(&points);
+    let v0 = model.validation_mse().unwrap().unwrap();
+    model.retrain(&mut || false);
+    let l1 = model.last_loss().unwrap();
+    for _ in 0..3 {
+        model.retrain(&mut || false);
+    }
+    let l2 = model.last_loss().unwrap();
+    let v1 = model.validation_mse().unwrap().unwrap();
+    assert!(l2 < l1, "train loss did not descend: {l1} -> {l2}");
+    assert!(v1 < v0, "val mse did not improve: {v0} -> {v1}");
+}
+
+#[test]
+fn hlo_model_weight_sync_roundtrip() {
+    let dir = default_artifacts_dir();
+    let mk = |mode, seed| {
+        HloPotentialModel::new(
+            Manifest::load(&dir).unwrap(),
+            "dimer1",
+            mode,
+            seed,
+            Default::default(),
+        )
+        .unwrap()
+    };
+    let trainer = mk(Mode::Train, 1);
+    let mut predictor = mk(Mode::Predict, 2);
+    // different seeds → different weights
+    assert_ne!(trainer.get_weight(), predictor.get_weight());
+    // paper protocol: trainer → predictor flat-array sync
+    let w = trainer.get_weight();
+    assert_eq!(w.len(), trainer.get_weight_size());
+    predictor.update(&w);
+    assert_eq!(predictor.get_weight(), w);
+    // synced predictors now agree on predictions
+    let input = vec![0.0, 0.0, 0.0, 1.3, 0.0, 0.0, 0.0, 1.0];
+    let mut trainer = trainer;
+    let a = trainer.predict(&[input.clone()]);
+    let b = predictor.predict(&[input]);
+    for (x, y) in a[0].iter().zip(&b[0]) {
+        assert!((x - y).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn hlo_toy_quickstart_workflow() {
+    // The SI §S3 toy at reduced scale, over the real toy artifacts.
+    let setting = AlSetting {
+        result_dir: "/tmp/pal-e2e-toy".into(),
+        gene_process: 5,
+        pred_process: 2,
+        ml_process: 2,
+        orcl_process: 2,
+        retrain_size: 5,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(10),
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let generators = (0..5usize)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(pal::kernels::generators::RandomGenerator::new(
+                    4,
+                    u64::MAX,
+                    i as u64,
+                )) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..2usize)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(pal::sim::workload::SyntheticOracle {
+                    label_cost: Duration::from_millis(1),
+                    out_dim: 4,
+                }) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let dir = default_artifacts_dir();
+    let model = Arc::new(move |mode: Mode, replica: usize| {
+        let manifest = Manifest::load(&dir).unwrap();
+        Box::new(HloToyModel::new(manifest, mode, replica as u32).unwrap()) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(CommitteeStdUtils::new(0.01, 5)) as Box<dyn Utils>);
+    let report = Workflow::new(setting)
+        .run(KernelSet { generators, oracles, model, utils })
+        .unwrap();
+    assert!(report.oracle_labels >= 10);
+    assert!(report.sum_counter("prediction", "batches") > 0);
+}

@@ -1,0 +1,254 @@
+//! Property tests (mini-prop harness) on coordinator invariants:
+//! routing order, buffer conservation, selection contracts, codec
+//! round-trips, speedup-model bounds.
+
+use pal::comm::codec;
+use pal::coordinator::buffers::{OracleBuffer, TrainBuffer};
+use pal::coordinator::selection::{
+    committee_mean, committee_std, committee_std_check, CommitteeStdUtils,
+};
+use pal::kernels::Utils;
+use pal::prop::{forall, Gen};
+use pal::sim::speedup::Workload;
+
+fn gen_preds(g: &mut Gen, models: usize, gens: usize, width: usize) -> Vec<Vec<Vec<f32>>> {
+    (0..models).map(|_| g.arrays(gens, width)).collect()
+}
+
+#[test]
+fn codec_roundtrip_any_shapes() {
+    forall(
+        200,
+        |g| {
+            let n = g.usize(0, 12);
+            (0..n).map(|_| {
+                let w = g.usize(0, 40);
+                g.vec_normal(w)
+            }).collect::<Vec<_>>()
+        },
+        |parts| {
+            let packed = codec::pack_vecs(&parts);
+            codec::unpack(&packed) == Some(parts)
+        },
+    );
+}
+
+#[test]
+fn datapoints_roundtrip_any_widths() {
+    forall(
+        150,
+        |g| {
+            let n = g.usize(0, 10);
+            (0..n)
+                .map(|_| {
+                    let a = g.usize(1, 20);
+                    let b = g.usize(1, 8);
+                    (g.vec_normal(a), g.vec_normal(b))
+                })
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            let packed = codec::pack_datapoints(&pts);
+            codec::unpack_datapoints(&packed) == Some(pts)
+        },
+    );
+}
+
+#[test]
+fn prediction_check_returns_one_entry_per_generator() {
+    // SI: "length must match the number of generators and should be sorted
+    // by the rank of generator"
+    forall(
+        150,
+        |g| {
+            let models = g.usize(1, 5);
+            let gens = g.usize(1, 12);
+            let width = g.usize(1, 6);
+            let inputs = g.arrays(gens, width + 2);
+            let preds = gen_preds(g, models, gens, width);
+            let threshold = g.f32(0.0, 0.5);
+            let cap = g.usize(0, 15);
+            (inputs, preds, threshold, cap)
+        },
+        |(inputs, preds, threshold, cap)| {
+            let (to_orcl, checked) = committee_std_check(&inputs, &preds, threshold, cap);
+            checked.len() == inputs.len() && to_orcl.len() <= cap.min(inputs.len())
+        },
+    );
+}
+
+#[test]
+fn selected_inputs_are_actual_generator_inputs() {
+    forall(
+        100,
+        |g| {
+            let gens = g.usize(1, 10);
+            let inputs = g.arrays(gens, 4);
+            let preds = gen_preds(g, 3, gens, 3);
+            (inputs, preds)
+        },
+        |(inputs, preds)| {
+            let (to_orcl, _) = committee_std_check(&inputs, &preds, 0.01, 100);
+            to_orcl.iter().all(|x| inputs.contains(x))
+        },
+    );
+}
+
+#[test]
+fn selected_generators_get_zeroed_predictions_everyone_else_mean() {
+    forall(
+        100,
+        |g| {
+            let gens = g.usize(1, 8);
+            let inputs = g.arrays(gens, 3);
+            let preds = gen_preds(g, 4, gens, 2);
+            let threshold = g.f32(0.0, 0.3);
+            (inputs, preds, threshold)
+        },
+        |(inputs, preds, threshold)| {
+            let stds = committee_std(&preds);
+            let means = committee_mean(&preds);
+            let (to_orcl, checked) =
+                committee_std_check(&inputs, &preds, threshold, usize::MAX);
+            let mut selected_count = 0;
+            for gidx in 0..inputs.len() {
+                let zeroed = checked[gidx].iter().all(|&v| v == 0.0);
+                let was_selected = stds[gidx] > threshold;
+                if was_selected {
+                    selected_count += 1;
+                    if !zeroed {
+                        return false;
+                    }
+                } else if checked[gidx] != means[gidx] {
+                    // unselected generators receive the untouched mean
+                    return false;
+                }
+            }
+            selected_count == to_orcl.len()
+        },
+    );
+}
+
+#[test]
+fn adjust_output_is_submultiset_of_buffer() {
+    forall(
+        100,
+        |g| {
+            let n = g.usize(0, 10);
+            let buffer = g.arrays(n, 4);
+            let preds: Vec<Vec<Vec<f32>>> = (0..3).map(|_| g.arrays(n, 2)).collect();
+            let threshold = g.f32(0.0, 0.4);
+            (buffer, preds, threshold)
+        },
+        |(buffer, preds, threshold)| {
+            let mut u = CommitteeStdUtils::new(threshold, usize::MAX);
+            let adjusted = u.adjust_input_for_oracle(buffer.clone(), &preds);
+            // every adjusted entry appears in the buffer at least as often
+            adjusted.len() <= buffer.len()
+                && adjusted.iter().all(|a| {
+                    let in_buf = buffer.iter().filter(|b| *b == a).count();
+                    let in_adj = adjusted.iter().filter(|b| *b == a).count();
+                    in_adj <= in_buf
+                })
+        },
+    );
+}
+
+#[test]
+fn oracle_buffer_conserves_entries() {
+    forall(
+        100,
+        |g| {
+            let batches = g.usize(1, 6);
+            let sizes: Vec<usize> = (0..batches).map(|_| g.usize(0, 8)).collect();
+            let cap = g.usize(1, 24);
+            (sizes, cap)
+        },
+        |(sizes, cap)| {
+            let mut buf = OracleBuffer::new(Some(cap));
+            let mut pushed = 0u64;
+            for (bi, n) in sizes.iter().enumerate() {
+                buf.push_all((0..*n).map(|i| vec![bi as f32, i as f32]).collect());
+                pushed += *n as u64;
+            }
+            let mut popped = 0u64;
+            while buf.pop().is_some() {
+                popped += 1;
+            }
+            // conservation: enqueued == popped + dropped
+            buf.enqueued == pushed && popped + buf.dropped == pushed
+        },
+    );
+}
+
+#[test]
+fn train_buffer_flush_boundary() {
+    forall(
+        100,
+        |g| {
+            let threshold = g.usize(1, 10);
+            let pushes = g.usize(0, 40);
+            (threshold, pushes)
+        },
+        |(threshold, pushes)| {
+            let mut buf = TrainBuffer::new(threshold);
+            let mut flushed_total = 0;
+            for i in 0..pushes {
+                buf.push((vec![i as f32], vec![0.0]));
+                if let Some(batch) = buf.flush() {
+                    // flushes only at >= threshold, and take everything
+                    if batch.len() < threshold {
+                        return false;
+                    }
+                    flushed_total += batch.len();
+                }
+            }
+            flushed_total + buf.len() == pushes
+        },
+    );
+}
+
+#[test]
+fn speedup_bounds_hold_generally() {
+    forall(
+        300,
+        |g| Workload {
+            t_oracle: g.f64(0.001, 100.0),
+            t_train: g.f64(0.001, 100.0),
+            t_gen: g.f64(0.001, 100.0),
+            n_samples: g.usize(1, 64) as u64,
+            p_workers: g.usize(1, 64) as u64,
+        },
+        |w| {
+            let s = w.speedup();
+            // S in [1, 3]: parallel can't be slower than serial, and with 3
+            // overlapping phases can't beat 3x
+            s >= 1.0 - 1e-9 && s <= 3.0 + 1e-9
+        },
+    );
+}
+
+#[test]
+fn committee_stats_model_count_invariance() {
+    // replicating the same model's predictions M times gives zero std and
+    // the same mean
+    forall(
+        100,
+        |g| {
+            let gens = g.usize(1, 6);
+            let preds = g.arrays(gens, 3);
+            let m = g.usize(1, 6);
+            (preds, m)
+        },
+        |(preds, m)| {
+            let replicated: Vec<Vec<Vec<f32>>> = (0..m).map(|_| preds.clone()).collect();
+            let stds = committee_std(&replicated);
+            let means = committee_mean(&replicated);
+            stds.iter().all(|&s| s.abs() < 1e-6)
+                && means
+                    .iter()
+                    .zip(&preds)
+                    .all(|(a, b)| a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-5))
+        },
+    );
+}

@@ -1,0 +1,262 @@
+//! Integration: PJRT runtime round-trip against real artifacts.
+//!
+//! Requires `make artifacts`. These tests validate the numerics of the AOT
+//! bridge — the same checks the python suite runs in-process, but through
+//! the production path: HLO text → PJRT compile → execute.
+
+use pal::runtime::{default_artifacts_dir, Engine, Manifest, TensorIn};
+
+fn engine() -> Engine {
+    let m = Manifest::load(default_artifacts_dir()).expect("run `make artifacts` first");
+    Engine::new(m).unwrap()
+}
+
+#[test]
+fn toy_init_is_deterministic_and_member_diverse() {
+    let e = engine();
+    let w1 = e.call("toy_init", &[TensorIn::U32(0)]).unwrap().remove(0);
+    let w2 = e.call("toy_init", &[TensorIn::U32(0)]).unwrap().remove(0);
+    assert_eq!(w1, w2);
+    let p = e.entry("toy_init").unwrap().meta_usize("param_size").unwrap();
+    let m0 = &w1[..p];
+    let m1 = &w1[p..2 * p];
+    assert!(m0.iter().zip(m1).any(|(a, b)| (a - b).abs() > 1e-4), "members identical");
+}
+
+#[test]
+fn toy_train_descends_and_fwd_agrees() {
+    let e = engine();
+    let entry = e.entry("toy_train_t10").unwrap();
+    let p = entry.meta_usize("param_size").unwrap();
+    let opt_size = entry.meta_usize("opt_size").unwrap();
+    let w_all = e.call("toy_init", &[TensorIn::U32(1)]).unwrap().remove(0);
+    let mut w = w_all[..p].to_vec();
+    let mut opt = vec![0.0f32; opt_size];
+    // learn y = x on a fixed batch
+    let x: Vec<f32> = (0..40).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+    let y = x.clone();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..60 {
+        let out = e
+            .call(
+                "toy_train_t10",
+                &[TensorIn::F32(&w), TensorIn::F32(&opt), TensorIn::F32(&x), TensorIn::F32(&y)],
+            )
+            .unwrap();
+        w = out[0].clone();
+        opt = out[1].clone();
+        last = out[2][0];
+        first.get_or_insert(last);
+    }
+    assert!(
+        last < first.unwrap() * 0.5,
+        "training did not descend: {first:?} -> {last}"
+    );
+
+    // fwd with trained member replicated across the committee
+    let members = e.entry("toy_init").unwrap().meta_usize("n_members").unwrap();
+    let mut w_rep = Vec::new();
+    for _ in 0..members {
+        w_rep.extend_from_slice(&w);
+    }
+    let xb: Vec<f32> = (0..80).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+    let out = e.call("toy_fwd_b20", &[TensorIn::F32(&w_rep), TensorIn::F32(&xb)]).unwrap();
+    let y_std = &out[2];
+    // identical members → zero committee std
+    assert!(y_std.iter().all(|s| s.abs() < 1e-5));
+}
+
+#[test]
+fn potential_fwd_committee_has_positive_std_and_finite_forces() {
+    let e = engine();
+    let entry = e.entry("potential_dimer_fwd_b8").unwrap();
+    let meta_members = entry.meta_usize("n_members").unwrap();
+    let p = entry.meta_usize("param_size").unwrap();
+    let w = e.call("potential_dimer_init", &[TensorIn::U32(3)]).unwrap().remove(0);
+    assert_eq!(w.len(), meta_members * p);
+    // 8 dimer geometries at varying bond length
+    let mut x = Vec::new();
+    for i in 0..8 {
+        x.extend_from_slice(&[0.0, 0.0, 0.0, 1.0 + 0.1 * i as f32, 0.0, 0.0]);
+    }
+    let g = vec![0.0f32; 8];
+    let s = vec![1.0f32; 8];
+    let out = e
+        .call(
+            "potential_dimer_fwd_b8",
+            &[TensorIn::F32(&w), TensorIn::F32(&x), TensorIn::F32(&g), TensorIn::F32(&s)],
+        )
+        .unwrap();
+    let (e_std, f_mean) = (&out[2], &out[3]);
+    assert!(e_std.iter().any(|&v| v > 1e-5), "committee should disagree untrained");
+    assert!(f_mean.iter().all(|v| v.is_finite()));
+    // forces on a symmetric dimer point along the bond axis only
+    for row in f_mean.chunks(6) {
+        assert!(row[1].abs() < 1e-3 && row[2].abs() < 1e-3, "{row:?}");
+    }
+}
+
+#[test]
+fn potential_m1_variant_has_zero_committee_std() {
+    let e = engine();
+    let p = e.entry("potential_dimer1_init").unwrap().meta_usize("param_size").unwrap();
+    let w = e.call("potential_dimer1_init", &[TensorIn::U32(0)]).unwrap().remove(0);
+    assert_eq!(w.len(), p);
+    let mut x = Vec::new();
+    for i in 0..8 {
+        x.extend_from_slice(&[0.0, 0.0, 0.0, 1.2 + 0.05 * i as f32, 0.0, 0.0]);
+    }
+    let g = vec![0.0f32; 8];
+    let s = vec![1.0f32; 8];
+    let out = e
+        .call(
+            "potential_dimer1_fwd_b8",
+            &[TensorIn::F32(&w), TensorIn::F32(&x), TensorIn::F32(&g), TensorIn::F32(&s)],
+        )
+        .unwrap();
+    assert!(out[2].iter().all(|&v| v.abs() < 1e-6), "single member must have std 0");
+}
+
+#[test]
+fn potential_train_step_descends_on_morse_labels() {
+    use pal::potential::{Morse, Pes};
+    let e = engine();
+    let entry = e.entry("potential_dimer1_train_t16").unwrap();
+    let p = entry.meta_usize("param_size").unwrap();
+    let opt_size = entry.meta_usize("opt_size").unwrap();
+    let mut w = e.call("potential_dimer1_init", &[TensorIn::U32(7)]).unwrap().remove(0);
+    let mut opt = vec![0.0f32; opt_size];
+    assert_eq!(w.len(), p);
+
+    // labeled batch from the analytic Morse oracle
+    let pes = Morse::dimer();
+    let mut x = Vec::new();
+    let mut ye = Vec::new();
+    let mut yf = Vec::new();
+    for i in 0..16 {
+        let r = 1.0 + 0.08 * i as f32;
+        let geom = [0.0, 0.0, 0.0, r, 0.0, 0.0];
+        x.extend_from_slice(&geom);
+        ye.push(pes.energy(&geom) as f32);
+        yf.extend_from_slice(&pes.forces(&geom));
+    }
+    let g = vec![0.0f32; 16];
+    let s = vec![1.0f32; 16];
+    let mut first = None;
+    let mut last = f32::NAN;
+    for _ in 0..80 {
+        let out = e
+            .call(
+                "potential_dimer1_train_t16",
+                &[
+                    TensorIn::F32(&w),
+                    TensorIn::F32(&opt),
+                    TensorIn::F32(&x),
+                    TensorIn::F32(&g),
+                    TensorIn::F32(&s),
+                    TensorIn::F32(&ye),
+                    TensorIn::F32(&yf),
+                ],
+            )
+            .unwrap();
+        w = out[0].clone();
+        opt = out[1].clone();
+        last = out[2][0];
+        first.get_or_insert(last);
+    }
+    assert!(
+        last < first.unwrap() * 0.5,
+        "potential training did not descend: {first:?} -> {last}"
+    );
+}
+
+#[test]
+fn euq_energy_matches_fwd_energy() {
+    let e = engine();
+    let w = e.call("potential_dimer_init", &[TensorIn::U32(5)]).unwrap().remove(0);
+    let mut x = Vec::new();
+    for i in 0..8 {
+        x.extend_from_slice(&[0.0, 0.0, 0.0, 1.3 + 0.07 * i as f32, 0.0, 0.0]);
+    }
+    let g = vec![0.0f32; 8];
+    let s = vec![1.0f32; 8];
+    let fwd = e
+        .call(
+            "potential_dimer_fwd_b8",
+            &[TensorIn::F32(&w), TensorIn::F32(&x), TensorIn::F32(&g), TensorIn::F32(&s)],
+        )
+        .unwrap();
+    let euq = e
+        .call(
+            "potential_dimer_euq_b8",
+            &[TensorIn::F32(&w), TensorIn::F32(&x), TensorIn::F32(&g)],
+        )
+        .unwrap();
+    // e_all from both paths agree: Pallas fused committee kernel == jnp path
+    for (a, b) in fwd[0].iter().zip(euq[0].iter()) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn surrogate_fwd_and_train_roundtrip() {
+    let e = engine();
+    let entry = e.entry("surrogate1_train_t16").unwrap();
+    let opt_size = entry.meta_usize("opt_size").unwrap();
+    let grid = entry.meta_usize("grid").unwrap();
+    let mut w = e.call("surrogate1_init", &[TensorIn::U32(2)]).unwrap().remove(0);
+    let mut opt = vec![0.0f32; opt_size];
+    // toy dataset: checkerboard grids → fixed targets
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..16 {
+        for k in 0..grid * grid {
+            xs.push(((k + i) % 5 == 0) as u8 as f32);
+        }
+        ys.extend_from_slice(&[0.1 + 0.01 * i as f32, 0.02]);
+    }
+    let mut first = None;
+    let mut last = f32::NAN;
+    for _ in 0..40 {
+        let out = e
+            .call(
+                "surrogate1_train_t16",
+                &[TensorIn::F32(&w), TensorIn::F32(&opt), TensorIn::F32(&xs), TensorIn::F32(&ys)],
+            )
+            .unwrap();
+        w = out[0].clone();
+        opt = out[1].clone();
+        last = out[2][0];
+        first.get_or_insert(last);
+    }
+    assert!(last < first.unwrap(), "surrogate loss should descend");
+
+    let xb = &xs[..8 * grid * grid];
+    let out = e.call("surrogate1_fwd_b8", &[TensorIn::F32(&w), TensorIn::F32(xb)]).unwrap();
+    assert_eq!(out[1].len(), 8 * 2);
+    assert!(out[1].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn engine_stats_track_calls() {
+    let e = engine();
+    let w = e.call("toy_init", &[TensorIn::U32(0)]).unwrap().remove(0);
+    let x = vec![0.0f32; 80];
+    e.call("toy_fwd_b20", &[TensorIn::F32(&w), TensorIn::F32(&x)]).unwrap();
+    e.call("toy_fwd_b20", &[TensorIn::F32(&w), TensorIn::F32(&x)]).unwrap();
+    let stats = e.stats();
+    assert_eq!(stats["toy_fwd_b20"].calls, 2);
+    assert!(e.mean_latency_ms("toy_fwd_b20").unwrap() > 0.0);
+    assert!(stats["toy_init"].compile_ns > 0);
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let e = engine();
+    let w = e.call("toy_init", &[TensorIn::U32(0)]).unwrap().remove(0);
+    let short = vec![0.0f32; 10];
+    assert!(e.call("toy_fwd_b20", &[TensorIn::F32(&w), TensorIn::F32(&short)]).is_err());
+    assert!(e.call("toy_fwd_b20", &[TensorIn::F32(&w)]).is_err());
+    assert!(e.call("nonexistent", &[]).is_err());
+}

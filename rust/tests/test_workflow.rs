@@ -1,0 +1,228 @@
+//! Integration: the full five-kernel PAL workflow over synthetic kernels
+//! (no artifacts needed — the HLO path is covered by test_e2e.rs).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::config::{AlSetting, StopCriteria};
+use pal::coordinator::selection::{CommitteeStdUtils, SelectAllUtils};
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+
+fn setting(gene: usize, pred: usize, orcl: usize, ml: usize) -> AlSetting {
+    AlSetting {
+        result_dir: format!("/tmp/pal-test-{gene}-{pred}-{orcl}-{ml}"),
+        gene_process: gene,
+        pred_process: pred,
+        orcl_process: orcl,
+        ml_process: ml,
+        retrain_size: 4,
+        stop: StopCriteria {
+            max_iterations: Some(40),
+            max_labels: None,
+            max_wall: Some(Duration::from_secs(30)),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn synthetic_kernels(s: &AlSetting, threshold: f32) -> KernelSet {
+    let generators = (0..s.gene_process)
+        .map(|i| {
+            let seed = i as u64;
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(4, Duration::ZERO, u64::MAX, seed))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..s.orcl_process)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle { label_cost: Duration::from_millis(1), out_dim: 4 })
+                    as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, replica: usize| {
+        let mut m =
+            SyntheticModel::new(4, 4, Duration::ZERO, Duration::from_micros(200), 64, mode);
+        // diversify members so the committee has nonzero std
+        let w: Vec<f32> = (0..16).map(|k| ((k + replica * 7) % 5) as f32 * 0.1).collect();
+        m.update(&w);
+        Box::new(m) as Box<dyn Model>
+    });
+    let utils =
+        Arc::new(move || Box::new(CommitteeStdUtils::new(threshold, 8)) as Box<dyn Utils>);
+    KernelSet { generators, oracles, model, utils }
+}
+
+#[test]
+fn full_workflow_runs_and_stops() {
+    let s = setting(6, 3, 2, 3);
+    let mut kernels = synthetic_kernels(&s, 0.01);
+    // pace the exchange loop (2 ms/step) so labeling + retraining overlap
+    // the run instead of racing the 40-iteration bound
+    kernels.generators = (0..6usize)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(
+                    4,
+                    Duration::from_millis(2),
+                    u64::MAX,
+                    i as u64,
+                )) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let report = Workflow::new(s).run(kernels).unwrap();
+    assert_eq!(report.al_iterations, 40);
+    assert!(report.oracle_labels > 0, "uncertain committee should trigger labeling");
+    assert!(report.retrain_rounds > 0, "labels should trigger retraining");
+    assert!(report.wall < Duration::from_secs(30));
+    // every generator stepped every iteration (lockstep loop)
+    let gen_steps = report.sum_counter("generator", "steps");
+    assert!(gen_steps >= 40 * 6, "generators stepped {gen_steps}");
+}
+
+#[test]
+fn max_labels_stops_the_run() {
+    let mut s = setting(4, 2, 2, 2);
+    s.stop.max_iterations = None;
+    s.stop.max_labels = Some(5);
+    let kernels = synthetic_kernels(&s, 0.0); // everything uncertain
+    let report = Workflow::new(s).run(kernels).unwrap();
+    assert!(report.oracle_labels >= 5, "labels {}", report.oracle_labels);
+    assert!(report.oracle_labels < 200, "should stop promptly after 5");
+}
+
+#[test]
+fn inference_only_mode_runs_without_oracle_and_training() {
+    // §2.5: oracle and training kernels can be disabled
+    let s = setting(5, 2, 0, 0);
+    let kernels = synthetic_kernels(&s, 0.01);
+    let report = Workflow::new(s).run(kernels).unwrap();
+    assert_eq!(report.al_iterations, 40);
+    assert_eq!(report.oracle_labels, 0);
+    assert_eq!(report.retrain_rounds, 0);
+}
+
+#[test]
+fn generator_stop_signal_shuts_down_workflow() {
+    let mut s = setting(3, 2, 1, 2);
+    s.stop.max_iterations = None; // only the generator can stop the run
+    s.stop.max_wall = Some(Duration::from_secs(20));
+    let generators = (0..3usize)
+        .map(|i| {
+            Box::new(move || {
+                // generator 0 signals stop after 10 steps
+                let max = if i == 0 { 10 } else { u64::MAX };
+                Box::new(SyntheticGenerator::new(4, Duration::ZERO, max, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let mut kernels = synthetic_kernels(&s, 0.5);
+    kernels.generators = generators;
+    let report = Workflow::new(s).run(kernels).unwrap();
+    assert!(report.al_iterations >= 9 && report.al_iterations < 1000,
+        "iterations {}", report.al_iterations);
+}
+
+#[test]
+fn no_sample_lost_between_oracle_and_training() {
+    // conservation: labels produced == datapoints delivered to each trainer
+    // (within one retrain_size of in-flight buffering at shutdown)
+    let mut s = setting(4, 2, 2, 2);
+    s.retrain_size = 3;
+    s.stop.max_iterations = Some(30);
+    let kernels = synthetic_kernels(&s, 0.0);
+    let report = Workflow::new(s.clone()).run(kernels).unwrap();
+    let labels = report.oracle_labels;
+    // each trainer receives the same broadcast batches
+    for t in report.kernel("training") {
+        let got = t.counter("datapoints");
+        assert!(
+            got <= labels && got + (s.retrain_size as u64) + 3 >= labels / 1, // got in [labels - buffered, labels]
+            "trainer {} got {got} of {labels} labels",
+            t.rank
+        );
+    }
+}
+
+#[test]
+fn weight_updates_reach_predictors() {
+    let s = setting(4, 2, 2, 2);
+    let kernels = synthetic_kernels(&s, 0.0);
+    let report = Workflow::new(s).run(kernels).unwrap();
+    let updates = report.sum_counter("prediction", "weight_updates");
+    assert!(updates >= 2, "predictors saw {updates} weight updates");
+}
+
+#[test]
+fn dynamic_oracle_list_rescoring_runs() {
+    let mut s = setting(4, 2, 1, 2);
+    s.dynamic_oracle_list = true;
+    s.retrain_size = 2;
+    // run until enough labels accumulated that at least one retraining
+    // finished while the oracle buffer was non-empty
+    s.stop.max_iterations = None;
+    s.stop.max_labels = Some(12);
+    let mut kernels = synthetic_kernels(&s, 0.0);
+    kernels.oracles = (0..1)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle {
+                    label_cost: Duration::from_millis(5),
+                    out_dim: 4,
+                }) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let report = Workflow::new(s).run(kernels).unwrap();
+    // the manager should have attempted at least one rescoring round
+    let manager = &report.kernel("manager")[0];
+    let adjustments = manager.counter("adjustments") + manager.counter("adjust_timeouts");
+    assert!(adjustments > 0, "dynamic oracle list never exercised: {:?}", manager.counters);
+}
+
+#[test]
+fn select_all_utils_labels_at_full_rate() {
+    let mut s = setting(3, 1, 3, 1);
+    s.stop.max_iterations = Some(10);
+    s.retrain_size = 100; // never flush; isolate labeling
+    let mut kernels = synthetic_kernels(&s, 0.0);
+    // pace the exchange loop so the (fast) oracles keep up — otherwise the
+    // run shuts down with the selection buffer still queued, which is
+    // correct PAL semantics but not what this test measures
+    kernels.generators = (0..3usize)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(
+                    4,
+                    Duration::from_millis(4),
+                    u64::MAX,
+                    i as u64,
+                )) as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    kernels.utils = Arc::new(|| Box::new(SelectAllUtils { max_per_iter: 3 }) as Box<dyn Utils>);
+    let report = Workflow::new(s).run(kernels).unwrap();
+    // 10 iterations × 3 selected, minus in-flight at shutdown
+    assert!(report.oracle_labels >= 15, "labels {}", report.oracle_labels);
+}
+
+#[test]
+fn comm_latency_slows_but_does_not_break() {
+    let mut s = setting(3, 2, 1, 2);
+    s.comm_latency = Duration::from_millis(2);
+    s.stop.max_iterations = Some(10);
+    let kernels = synthetic_kernels(&s, 0.1);
+    let report = Workflow::new(s).run(kernels).unwrap();
+    assert_eq!(report.al_iterations, 10);
+    // each iteration pays ≥ 2 latency hops on the gen→pred→gen path
+    assert!(report.wall >= Duration::from_millis(10 * 4));
+}
