@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use pal::bench_util::{bench, Report, Row};
 use pal::comm::bus::{Src, World};
-use pal::config::{AlSetting, StopCriteria};
+use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
 use pal::coordinator::selection::CommitteeStdUtils;
 use pal::coordinator::workflow::Workflow;
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
@@ -90,6 +90,63 @@ fn exchange_rate(pred_ms: u64, iters: u64, extra_size_msg: bool) -> f64 {
     report.al_iterations as f64 / report.wall.as_secs_f64()
 }
 
+/// Run the batched exchange inference-only at one micro-batch size and
+/// report `(total bus messages, items served, wall seconds)`.
+///
+/// `batch_size = 1` is the one-request-at-a-time relay; larger sizes
+/// coalesce. The topology is fixed (16 generators, one 2-member committee
+/// shard) so the message delta is purely the coalescing win.
+fn batched_messages(batch_size: usize, total_items: u64) -> (u64, u64, f64) {
+    const GENS: usize = 16;
+    let per_batch = batch_size.min(GENS) as u64;
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-batch".into(),
+        gene_process: GENS,
+        pred_process: 2,
+        ml_process: 0,
+        orcl_process: 0,
+        committee_size: Some(2),
+        exchange_mode: ExchangeMode::Batched,
+        batch: BatchSetting {
+            max_size: batch_size,
+            // long deadline: batches fill to max_size, so each row isolates
+            // one coalescing factor
+            max_delay: Duration::from_millis(250),
+            max_outstanding: 2,
+        },
+        stop: StopCriteria {
+            max_iterations: Some(total_items / per_batch),
+            max_labels: None,
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let generators = (0..GENS)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(64, Duration::ZERO, u64::MAX, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _m: usize| {
+        Box::new(SyntheticModel::new(64, 64, Duration::ZERO, Duration::ZERO, 1, mode))
+            as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(CommitteeStdUtils::new(f32::MAX, 0)) as Box<dyn Utils>);
+    let report = Workflow::new(s)
+        .run(KernelSet {
+            generators,
+            oracles: Vec::<Box<dyn FnOnce() -> Box<dyn Oracle> + Send>>::new(),
+            model,
+            utils,
+        })
+        .unwrap();
+    let items = report.sum_counter("exchange", "batch_items").max(1);
+    (report.messages, items, report.wall.as_secs_f64())
+}
+
 fn main() {
     // ---- (a) raw bus round-trip vs payload size ----
     let mut rep = Report::new("comm bus — round-trip latency vs payload (1-D f32 arrays)");
@@ -124,4 +181,34 @@ fn main() {
     rep3.push(Row::new("fixed").f("iters_per_s", fixed));
     rep3.push(Row::new("variable").f("iters_per_s", varsize).f("overhead_pct", (fixed / varsize - 1.0) * 100.0));
     rep3.print();
+
+    // ---- (d) batched exchange: bus messages per AL iteration vs batch size ----
+    // One AL iteration = one step of every generator (16 items). batch=1 is
+    // the unbatched one-request-at-a-time relay; coalescing amortizes the
+    // controller↔predictor frames across the batch.
+    const GENS_D: f64 = 16.0;
+    let total_items = 320u64;
+    let mut rep4 = Report::new(
+        "batched exchange — bus messages per AL iteration (16 gens, 2-member shard)",
+    );
+    let mut per_iter_at = std::collections::BTreeMap::new();
+    for batch in [1usize, 2, 4, 8, 16] {
+        let (messages, items, wall) = batched_messages(batch, total_items);
+        let al_iters = items as f64 / GENS_D;
+        let per_iter = messages as f64 / al_iters;
+        per_iter_at.insert(batch, per_iter);
+        rep4.push(
+            Row::new(format!("batch={batch}"))
+                .f("msgs_per_al_iter", per_iter)
+                .f("msgs_per_item", messages as f64 / items as f64)
+                .f("items_per_s", items as f64 / wall),
+        );
+    }
+    rep4.print();
+    let reduction = per_iter_at[&1] / per_iter_at[&8];
+    println!(
+        "(batch=8 sends {reduction:.2}x fewer bus messages per AL iteration than the \
+         unbatched relay{})",
+        if reduction >= 2.0 { " — >= 2x target met" } else { " — BELOW the 2x target" }
+    );
 }

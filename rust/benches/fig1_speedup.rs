@@ -9,7 +9,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use pal::bench_util::{Report, Row};
-use pal::config::{AlSetting, StopCriteria};
+use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
 use pal::coordinator::selection::SelectAllUtils;
 use pal::coordinator::workflow::Workflow;
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
@@ -131,6 +131,100 @@ fn parallel_run(r: &Regime) -> Duration {
     report.wall
 }
 
+// ---------------------------------------------------------------------------
+// Prediction-rank scaling: lockstep vs batched/sharded exchange
+// ---------------------------------------------------------------------------
+
+const SCALE_GENS: usize = 8;
+/// Inference cost model: a 1 ms launch overhead + 1 ms per stacked item —
+/// the regime the paper's §3.1 committee forward (tens of ms) lives in.
+const PRED_BASE_MS: u64 = 1;
+const PRED_PER_ITEM_MS: u64 = 1;
+
+fn scaling_model(mode: Mode) -> Box<dyn Model> {
+    Box::new(
+        SyntheticModel::new(
+            4,
+            4,
+            Duration::from_millis(PRED_BASE_MS),
+            Duration::ZERO,
+            1,
+            mode,
+        )
+        .with_per_item_cost(Duration::from_millis(PRED_PER_ITEM_MS)),
+    ) as Box<dyn Model>
+}
+
+fn scaling_kernels(s: &AlSetting) -> KernelSet {
+    let generators = (0..s.gene_process)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(4, Duration::ZERO, u64::MAX, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _m: usize| scaling_model(mode));
+    // no selection: this section isolates inference routing
+    let utils = Arc::new(|| Box::new(SelectAllUtils { max_per_iter: 0 }) as Box<dyn Utils>);
+    KernelSet {
+        generators,
+        oracles: Vec::<Box<dyn FnOnce() -> Box<dyn Oracle> + Send>>::new(),
+        model,
+        utils,
+    }
+}
+
+/// Lockstep: every prediction rank evaluates every generator input each
+/// round — adding ranks adds committee members, not throughput.
+fn lockstep_items_per_s(preds: usize, rounds: u64) -> f64 {
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-scale-lockstep".into(),
+        gene_process: SCALE_GENS,
+        pred_process: preds,
+        ml_process: 0,
+        orcl_process: 0,
+        stop: StopCriteria {
+            max_iterations: Some(rounds),
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let kernels = scaling_kernels(&s);
+    let report = Workflow::new(s).run(kernels).unwrap();
+    (report.al_iterations * SCALE_GENS as u64) as f64 / report.wall.as_secs_f64()
+}
+
+/// Batched: 2-member committee shards serve single-item batches
+/// concurrently — adding ranks adds shards, i.e. throughput.
+fn batched_items_per_s(preds: usize, batches: u64) -> f64 {
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-scale-batched".into(),
+        gene_process: SCALE_GENS,
+        pred_process: preds,
+        ml_process: 0,
+        orcl_process: 0,
+        committee_size: Some(2),
+        exchange_mode: ExchangeMode::Batched,
+        batch: BatchSetting {
+            max_size: 1,
+            max_delay: Duration::from_millis(1),
+            max_outstanding: 1,
+        },
+        stop: StopCriteria {
+            max_iterations: Some(batches),
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let kernels = scaling_kernels(&s);
+    let report = Workflow::new(s).run(kernels).unwrap();
+    let items = report.sum_counter("exchange", "batch_items").max(1);
+    items as f64 / report.wall.as_secs_f64()
+}
+
 fn main() {
     let regimes = [
         Regime { name: "oracle-bound (DFT-like)", oracle_ms: 40, epoch_us: 500, epochs: 8, gen_ms: 1 },
@@ -162,4 +256,25 @@ fn main() {
     rep.print();
     println!("(paper claim: the parallel workflow overlaps labeling/training/generation;");
     println!(" speedup >= 1 everywhere, largest where no single kernel dominates)");
+
+    // ---- prediction-rank scaling: lockstep vs batched/sharded exchange ----
+    let mut rep2 = Report::new(
+        "prediction scaling — items/s at 2/4/8 prediction ranks (8 generators, \
+         1 ms + 1 ms/item inference)",
+    );
+    let mut first_batched = None;
+    for preds in [2usize, 4, 8] {
+        let lockstep = lockstep_items_per_s(preds, 40);
+        let batched = batched_items_per_s(preds, 320);
+        let base = *first_batched.get_or_insert(batched);
+        rep2.push(
+            Row::new(format!("pred={preds}"))
+                .f("lockstep_items_per_s", lockstep)
+                .f("batched_items_per_s", batched)
+                .f("batched_scaling_vs_pred2", batched / base),
+        );
+    }
+    rep2.print();
+    println!("(lockstep broadcasts every input to every rank: throughput is flat in P;");
+    println!(" the batched exchange routes batches across P/2 committee shards and scales)");
 }

@@ -17,14 +17,23 @@ pub struct Message {
 }
 
 /// Error returned by receive operations.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RecvError {
-    #[error("receive timed out")]
     Timeout,
     /// All senders dropped — the world is shutting down.
-    #[error("world disconnected")]
     Disconnected,
 }
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Timeout => write!(f, "receive timed out"),
+            RecvError::Disconnected => write!(f, "world disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
 
 /// Aggregate transport statistics (for the comm-overhead bench).
 #[derive(Debug, Default)]
@@ -174,11 +183,15 @@ impl Endpoint {
     }
 
     fn pop_pending(&mut self, src: Src, tag: u32) -> Option<Message> {
+        self.pop_pending_tags(src, &[tag])
+    }
+
+    fn pop_pending_tags(&mut self, src: Src, tags: &[u32]) -> Option<Message> {
         let now = Instant::now();
         let idx = self
             .pending
             .iter()
-            .position(|m| m.tag == tag && src.matches(m.src) && m.ready_at <= now)?;
+            .position(|m| tags.contains(&m.tag) && src.matches(m.src) && m.ready_at <= now)?;
         self.pending.remove(idx)
     }
 
@@ -210,10 +223,23 @@ impl Endpoint {
         tag: u32,
         timeout: Duration,
     ) -> Result<Message, RecvError> {
+        self.recv_timeout_tags(src, &[tag], timeout)
+    }
+
+    /// Blocking receive matching *any* of `tags` (first available wins;
+    /// `Message::tag` tells the caller which). Used by hosts that serve
+    /// multiple request kinds on one loop — e.g. predictors serving both
+    /// lockstep broadcasts and batch frames.
+    pub fn recv_timeout_tags(
+        &mut self,
+        src: Src,
+        tags: &[u32],
+        timeout: Duration,
+    ) -> Result<Message, RecvError> {
         // short cooperative spin before blocking
         for _ in 0..8 {
             self.drain_channel();
-            if let Some(m) = self.pop_pending(src, tag) {
+            if let Some(m) = self.pop_pending_tags(src, tags) {
                 return Ok(m);
             }
             std::thread::yield_now();
@@ -221,7 +247,7 @@ impl Endpoint {
         let deadline = Instant::now() + timeout;
         loop {
             self.drain_channel();
-            if let Some(m) = self.pop_pending(src, tag) {
+            if let Some(m) = self.pop_pending_tags(src, tags) {
                 return Ok(m);
             }
             // If a matching message exists but its simulated arrival is in
@@ -229,7 +255,7 @@ impl Endpoint {
             let next_ready = self
                 .pending
                 .iter()
-                .filter(|m| m.tag == tag && src.matches(m.src))
+                .filter(|m| tags.contains(&m.tag) && src.matches(m.src))
                 .map(|m| m.ready_at)
                 .min();
             let now = Instant::now();
@@ -243,7 +269,11 @@ impl Endpoint {
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => {
                         // Drain pending before giving up.
-                        if self.pending.iter().any(|m| m.tag == tag && src.matches(m.src)) {
+                        if self
+                            .pending
+                            .iter()
+                            .any(|m| tags.contains(&m.tag) && src.matches(m.src))
+                        {
                             continue;
                         }
                         return Err(RecvError::Disconnected);
@@ -360,6 +390,24 @@ mod tests {
         }
         assert!(b.try_recv(Src::Rank(0), 5).is_some());
         assert!(!b.probe(Src::Rank(0), 5));
+    }
+
+    #[test]
+    fn multi_tag_recv_takes_first_available() {
+        let mut w = World::new(2);
+        let a = w.endpoint(0);
+        let mut b = w.endpoint(1);
+        a.send(1, 5, vec![5.0]);
+        a.send(1, 3, vec![3.0]);
+        // arrival order wins across the tag set
+        let m = b.recv_timeout_tags(Src::Rank(0), &[3, 5], Duration::from_secs(1)).unwrap();
+        assert_eq!(m.tag, 5);
+        let m = b.recv_timeout_tags(Src::Rank(0), &[3, 5], Duration::from_secs(1)).unwrap();
+        assert_eq!(m.tag, 3);
+        // non-listed tags don't match
+        a.send(1, 9, vec![]);
+        let r = b.recv_timeout_tags(Src::Rank(0), &[3, 5], Duration::from_millis(20));
+        assert_eq!(r.unwrap_err(), RecvError::Timeout);
     }
 
     #[test]

@@ -17,6 +17,16 @@
 //! ([`World::with_latency`]); messages only become visible to `recv` after
 //! their simulated arrival time, modeling a real interconnect without
 //! blocking the sender.
+//!
+//! Beyond the paper's per-rank payloads, [`protocol`] defines two batch
+//! frames for the batched exchange mode: `PredictBatch`
+//! ([`protocol::TAG_PRED_BATCH`]) carries a micro-batch of inputs coalesced
+//! from several generators to one prediction shard, and
+//! `PredictBatchResult` ([`protocol::TAG_PRED_BATCH_RESULT`]) carries the
+//! per-item outputs back, echoing the batch id. Both are self-describing
+//! (`[id_hi, id_lo, packed item list]`), so no size headers are needed even
+//! in `fixed_size_data = false` mode, and one frame replaces what the
+//! unbatched relay pays per item.
 
 pub mod bus;
 pub mod codec;

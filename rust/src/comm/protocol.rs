@@ -24,6 +24,12 @@ pub const TAG_GENE_IN: u32 = 13;
 /// only when `fixed_size_data = false` (SI §S3: "sizes of data are passed
 /// first for every MPI communication ... thus lower efficiency").
 pub const TAG_GEN_SIZE: u32 = 14;
+/// Exchange → one shard's predictors: a `PredictBatch` frame — coalesced
+/// inputs from several generators (batched exchange mode, red flow).
+pub const TAG_PRED_BATCH: u32 = 15;
+/// predictor → Exchange: the matching `PredictBatchResult` frame with one
+/// output per batched item (batched exchange mode, blue flow).
+pub const TAG_PRED_BATCH_RESULT: u32 = 16;
 
 /// Exchange → Manager: packed list of inputs selected for labeling (green).
 pub const TAG_ORCL_SELECT: u32 = 20;
@@ -64,6 +70,67 @@ pub fn decode_gen(msg: &[f32]) -> (bool, &[f32]) {
     (stop, msg.get(1..).unwrap_or(&[]))
 }
 
+// ---------------------------------------------------------------------------
+// Batch frames (batched exchange mode)
+// ---------------------------------------------------------------------------
+//
+// `PredictBatch` (Exchange → shard) and `PredictBatchResult` (predictor →
+// Exchange) share one self-describing layout over the flat-f32 wire:
+//
+// ```text
+// [ id_hi, id_lo, <codec::pack of the item list> ]
+// ```
+//
+// The batch id is split into two 24-bit halves so it stays exact in f32
+// (ids are sequence numbers; 2^48 batches outlives any run).
+
+const ID_HALF: u64 = 1 << 24;
+
+fn encode_frame(id: u64, items: &[Vec<f32>]) -> Vec<f32> {
+    debug_assert!(id < ID_HALF * ID_HALF, "batch id overflows 48 bits");
+    let packed = crate::comm::codec::pack_vecs(items);
+    let mut out = Vec::with_capacity(2 + packed.len());
+    out.push(((id / ID_HALF) % ID_HALF) as f32);
+    out.push((id % ID_HALF) as f32);
+    out.extend_from_slice(&packed);
+    out
+}
+
+fn decode_frame(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
+    let hi = *msg.first()?;
+    let lo = *msg.get(1)?;
+    if hi < 0.0 || lo < 0.0 || hi.fract() != 0.0 || lo.fract() != 0.0 {
+        return None;
+    }
+    let (hi, lo) = (hi as u64, lo as u64);
+    if hi >= ID_HALF || lo >= ID_HALF {
+        return None;
+    }
+    let items = crate::comm::codec::unpack(&msg[2..])?;
+    Some((hi * ID_HALF + lo, items))
+}
+
+/// Encode a `PredictBatch` frame: coalesced generator inputs under one id.
+pub fn encode_predict_batch(id: u64, items: &[Vec<f32>]) -> Vec<f32> {
+    encode_frame(id, items)
+}
+
+/// Decode a `PredictBatch` frame. `None` on malformed input.
+pub fn decode_predict_batch(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
+    decode_frame(msg)
+}
+
+/// Encode a `PredictBatchResult` frame: one output per batched item, in
+/// batch order, echoing the request id.
+pub fn encode_predict_batch_result(id: u64, outputs: &[Vec<f32>]) -> Vec<f32> {
+    encode_frame(id, outputs)
+}
+
+/// Decode a `PredictBatchResult` frame. `None` on malformed input.
+pub fn decode_predict_batch_result(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
+    decode_frame(msg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,9 +148,35 @@ mod tests {
     }
 
     #[test]
+    fn batch_frame_roundtrip() {
+        let items = vec![vec![1.0, 2.0], vec![], vec![3.0]];
+        let enc = encode_predict_batch(7, &items);
+        assert_eq!(decode_predict_batch(&enc), Some((7, items.clone())));
+        let enc = encode_predict_batch_result((1 << 30) + 5, &items);
+        assert_eq!(decode_predict_batch_result(&enc), Some(((1 << 30) + 5, items)));
+        // empty batch
+        let enc = encode_predict_batch(0, &[]);
+        assert_eq!(decode_predict_batch(&enc), Some((0, vec![])));
+    }
+
+    #[test]
+    fn batch_frame_rejects_malformed() {
+        assert!(decode_predict_batch(&[]).is_none());
+        assert!(decode_predict_batch(&[0.0]).is_none());
+        // non-integer id halves
+        assert!(decode_predict_batch(&[0.5, 0.0, 0.0]).is_none());
+        // negative id halves
+        assert!(decode_predict_batch(&[-1.0, 0.0, 0.0]).is_none());
+        // truncated payload
+        let enc = encode_predict_batch(3, &[vec![1.0, 2.0]]);
+        assert!(decode_predict_batch(&enc[..enc.len() - 1]).is_none());
+    }
+
+    #[test]
     fn tags_are_distinct() {
         let tags = [
             TAG_GEN_TO_PRED, TAG_PRED_IN, TAG_PRED_OUT, TAG_GENE_IN, TAG_GEN_SIZE,
+            TAG_PRED_BATCH, TAG_PRED_BATCH_RESULT,
             TAG_ORCL_SELECT, TAG_TO_ORACLE, TAG_ORACLE_RESULT,
             TAG_TRAIN_DATA, TAG_WEIGHTS, TAG_RETRAIN_DONE,
             TAG_RESCORE_REQ, TAG_RESCORE_RESP, TAG_STOP, TAG_SHUTDOWN,

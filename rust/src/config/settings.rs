@@ -39,6 +39,45 @@ impl Default for StopCriteria {
     }
 }
 
+/// How the Exchange relays generator → prediction traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Paper-faithful lockstep rounds: gather one input from every
+    /// generator, broadcast the whole list to every prediction rank, gather
+    /// the committee's outputs, scatter checked results back.
+    Lockstep,
+    /// Coalesce concurrent generator requests into micro-batches
+    /// ([`BatchSetting`]: size- and deadline-triggered) and route each batch
+    /// to one committee *shard* — a group of `committee_size` prediction
+    /// ranks holding one replica of each committee member. Batches to
+    /// different shards are in flight concurrently; when every shard has
+    /// `max_outstanding` batches pending, requests queue (FIFO
+    /// backpressure) until a shard frees.
+    Batched,
+}
+
+/// Micro-batching knobs for [`ExchangeMode::Batched`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchSetting {
+    /// Size trigger: dispatch as soon as this many requests are queued.
+    pub max_size: usize,
+    /// Deadline trigger: dispatch a partial batch once the oldest queued
+    /// request has waited this long.
+    pub max_delay: Duration,
+    /// Batches in flight per shard before backpressure kicks in.
+    pub max_outstanding: usize,
+}
+
+impl Default for BatchSetting {
+    fn default() -> Self {
+        BatchSetting {
+            max_size: 8,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        }
+    }
+}
+
 /// Mirror of the paper's `AL_SETTING` (SI §S3) plus reproduction-specific
 /// knobs. Field names follow the paper where a counterpart exists.
 #[derive(Debug, Clone)]
@@ -80,6 +119,23 @@ pub struct AlSetting {
     /// Blocking-receive granularity; every blocking wait polls shutdown at
     /// this period.
     pub poll_interval: Duration,
+    /// Exchange relay strategy (lockstep rounds vs batched/sharded).
+    pub exchange_mode: ExchangeMode,
+    /// Micro-batching knobs (used by [`ExchangeMode::Batched`]).
+    pub batch: BatchSetting,
+    /// Committee members per prediction shard. `None` = all prediction
+    /// ranks form one shard (the paper's layout). In batched mode,
+    /// `pred_process / committee_size` shards serve batches concurrently,
+    /// and each trainer syncs weights to its member's replica in every
+    /// shard.
+    pub committee_size: Option<usize>,
+    /// When true and `stop.max_labels` is set, the Manager never dispatches
+    /// more than `max_labels` inputs to the oracles: no oracle hours are
+    /// spent past the stop criterion, and the final label count is exact
+    /// (required for bit-stable deterministic runs). When false (default),
+    /// labeling continues until the stop fires — the paper's behavior, and
+    /// what the equal-work speedup benches rely on.
+    pub strict_label_budget: bool,
 }
 
 impl Default for AlSetting {
@@ -100,6 +156,10 @@ impl Default for AlSetting {
             stop: StopCriteria::default(),
             epochs_per_round: 32,
             poll_interval: Duration::from_millis(2),
+            exchange_mode: ExchangeMode::Lockstep,
+            batch: BatchSetting::default(),
+            committee_size: None,
+            strict_label_budget: false,
         }
     }
 }
@@ -125,19 +185,54 @@ impl AlSetting {
         }
     }
 
+    /// Committee members per prediction shard (defaults to every prediction
+    /// rank in one shard, the paper's layout).
+    pub fn committee(&self) -> usize {
+        self.committee_size.unwrap_or(self.pred_process).max(1)
+    }
+
+    /// Number of prediction shards (`pred_process / committee()`).
+    pub fn n_shards(&self) -> usize {
+        (self.pred_process / self.committee()).max(1)
+    }
+
     /// Validate invariants the coordinator relies on.
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.pred_process == 0 || self.gene_process == 0 {
             bail!("pred_process and gene_process must be >= 1");
         }
-        if self.ml_process > 0 && self.ml_process != self.pred_process {
-            // paper §2.4: "An equal number of ML models as in the prediction
-            // kernel are trained in parallel within the training kernel"
+        let committee = self.committee();
+        if self.pred_process % committee != 0 {
             bail!(
-                "ml_process ({}) must equal pred_process ({}) or be 0 (training disabled)",
-                self.ml_process,
+                "committee_size ({committee}) must divide pred_process ({}): every shard \
+                 holds one replica of each committee member",
                 self.pred_process
             );
+        }
+        if self.exchange_mode == ExchangeMode::Lockstep && committee != self.pred_process {
+            bail!(
+                "lockstep exchange broadcasts to the whole prediction kernel; \
+                 committee_size ({committee}) must equal pred_process ({}) — use \
+                 exchange_mode = \"batched\" for sharded prediction",
+                self.pred_process
+            );
+        }
+        if self.ml_process > 0 && self.ml_process != committee {
+            // paper §2.4: "An equal number of ML models as in the prediction
+            // kernel are trained in parallel within the training kernel" —
+            // with shards, one trainer per distinct member; replicas across
+            // shards share that member's weight stream.
+            bail!(
+                "ml_process ({}) must equal the committee size ({committee}) or be 0 \
+                 (training disabled)",
+                self.ml_process
+            );
+        }
+        if self.batch.max_size == 0 {
+            bail!("batch.max_size must be >= 1");
+        }
+        if self.batch.max_outstanding == 0 {
+            bail!("batch.max_outstanding must be >= 1");
         }
         if self.ml_process > 0 && self.retrain_size == 0 {
             bail!("retrain_size must be >= 1 when training is enabled");
@@ -215,6 +310,28 @@ impl AlSetting {
         if let Some(x) = v.get("epochs_per_round").as_usize() {
             s.epochs_per_round = x;
         }
+        if let Some(x) = v.get("exchange_mode").as_str() {
+            s.exchange_mode = match x {
+                "lockstep" => ExchangeMode::Lockstep,
+                "batched" => ExchangeMode::Batched,
+                other => bail!("unknown exchange_mode: {other} (lockstep|batched)"),
+            };
+        }
+        if let Some(x) = v.get("batch_max_size").as_usize() {
+            s.batch.max_size = x;
+        }
+        if let Some(x) = v.get("batch_max_delay_ms").as_f64() {
+            s.batch.max_delay = Duration::from_secs_f64(x / 1e3);
+        }
+        if let Some(x) = v.get("batch_max_outstanding").as_usize() {
+            s.batch.max_outstanding = x;
+        }
+        if let Some(x) = v.get("committee_size").as_usize() {
+            s.committee_size = Some(x);
+        }
+        if let Some(x) = v.get("strict_label_budget").as_bool() {
+            s.strict_label_budget = x;
+        }
         s.validate()?;
         Ok(s)
     }
@@ -237,6 +354,24 @@ impl AlSetting {
             ("comm_latency_ms", Value::Num(self.comm_latency.as_secs_f64() * 1e3)),
             ("seed", Value::Num(self.seed as f64)),
             ("epochs_per_round", Value::Num(self.epochs_per_round as f64)),
+            (
+                "exchange_mode",
+                Value::Str(
+                    match self.exchange_mode {
+                        ExchangeMode::Lockstep => "lockstep",
+                        ExchangeMode::Batched => "batched",
+                    }
+                    .into(),
+                ),
+            ),
+            ("batch_max_size", Value::Num(self.batch.max_size as f64)),
+            (
+                "batch_max_delay_ms",
+                Value::Num(self.batch.max_delay.as_secs_f64() * 1e3),
+            ),
+            ("batch_max_outstanding", Value::Num(self.batch.max_outstanding as f64)),
+            ("committee_size", Value::Num(self.committee() as f64)),
+            ("strict_label_budget", Value::Bool(self.strict_label_budget)),
         ])
     }
 }
@@ -297,6 +432,53 @@ mod tests {
         .unwrap();
         assert!(s.dynamic_oracle_list);
         assert_eq!(s.retrain_size, 5);
+    }
+
+    #[test]
+    fn sharded_committee_validation() {
+        let mut s = AlSetting { pred_process: 4, ml_process: 2, ..Default::default() };
+        s.committee_size = Some(2);
+        // lockstep broadcasts to every predictor: one shard only
+        assert!(s.validate().is_err());
+        s.exchange_mode = ExchangeMode::Batched;
+        assert!(s.validate().is_ok());
+        assert_eq!(s.committee(), 2);
+        assert_eq!(s.n_shards(), 2);
+        // committee must divide pred_process
+        s.committee_size = Some(3);
+        s.ml_process = 3;
+        assert!(s.validate().is_err());
+        // trainers must match members, not replicas
+        s.committee_size = Some(2);
+        s.ml_process = 4;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn batch_knobs_validated_and_roundtrip() {
+        let mut s = AlSetting::default();
+        s.batch.max_size = 0;
+        assert!(s.validate().is_err());
+        s.batch.max_size = 4;
+        s.batch.max_outstanding = 0;
+        assert!(s.validate().is_err());
+
+        let s = AlSetting::from_json(
+            r#"{"pred_process": 4, "ml_process": 2, "committee_size": 2,
+                "exchange_mode": "batched", "batch_max_size": 16,
+                "batch_max_delay_ms": 5, "batch_max_outstanding": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(s.exchange_mode, ExchangeMode::Batched);
+        assert_eq!(s.batch.max_size, 16);
+        assert_eq!(s.batch.max_delay, Duration::from_millis(5));
+        assert_eq!(s.batch.max_outstanding, 3);
+        assert_eq!(s.n_shards(), 2);
+        let text = json::to_string(&s.to_json());
+        let s2 = AlSetting::from_json(&text).unwrap();
+        assert_eq!(s2.exchange_mode, s.exchange_mode);
+        assert_eq!(s2.batch, s.batch);
+        assert_eq!(s2.committee(), s.committee());
     }
 
     #[test]

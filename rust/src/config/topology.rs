@@ -15,6 +15,10 @@ pub struct Topology {
     pub train: std::ops::Range<usize>,
     pub gene: std::ops::Range<usize>,
     pub orcl: std::ops::Range<usize>,
+    /// Committee members per prediction shard. Prediction rank
+    /// `pred.start + i` hosts member `i % committee` of shard
+    /// `i / committee`; the default (one shard) is the paper's layout.
+    pub committee: usize,
 }
 
 /// Manager controller rank (buffers, oracle dispatch, shutdown).
@@ -33,6 +37,7 @@ impl Topology {
             train: train_start..gene_start,
             gene: gene_start..orcl_start,
             orcl: orcl_start..orcl_start + s.orcl_process,
+            committee: s.committee(),
         }
     }
 
@@ -57,11 +62,55 @@ impl Topology {
         self.orcl.clone().collect()
     }
 
-    /// The predictor that trainer `train_rank` pushes weights to
+    /// Number of prediction shards (groups of `committee` ranks).
+    pub fn n_shards(&self) -> usize {
+        (self.pred.len() / self.committee.max(1)).max(1)
+    }
+
+    /// Ranks of prediction shard `shard` (one replica of every member).
+    pub fn shard_ranks(&self, shard: usize) -> Vec<usize> {
+        debug_assert!(shard < self.n_shards());
+        let start = self.pred.start + shard * self.committee;
+        (start..start + self.committee).collect()
+    }
+
+    /// All shards, as rank lists (shard 0 first).
+    pub fn shards(&self) -> Vec<Vec<usize>> {
+        (0..self.n_shards()).map(|s| self.shard_ranks(s)).collect()
+    }
+
+    /// Committee-member index hosted by prediction rank `pred_rank`.
+    pub fn member_of_pred(&self, pred_rank: usize) -> usize {
+        debug_assert!(self.pred.contains(&pred_rank));
+        (pred_rank - self.pred.start) % self.committee.max(1)
+    }
+
+    /// The first-shard predictor paired with trainer `train_rank`
     /// (paper: prediction models are replicas of training models, 1:1).
     pub fn predictor_for_trainer(&self, train_rank: usize) -> usize {
         debug_assert!(self.train.contains(&train_rank));
         self.pred.start + (train_rank - self.train.start)
+    }
+
+    /// Every replica of trainer `train_rank`'s member across all shards —
+    /// weight pushes go to each so shards stay interchangeable.
+    pub fn replicas_for_trainer(&self, train_rank: usize) -> Vec<usize> {
+        debug_assert!(self.train.contains(&train_rank));
+        let member = train_rank - self.train.start;
+        (0..self.n_shards())
+            .map(|s| self.pred.start + s * self.committee + member)
+            .collect()
+    }
+
+    /// Prediction ranks the Manager targets for oracle-buffer re-scoring:
+    /// one full committee (the first shard) is enough — replicas in other
+    /// shards hold the same member weights.
+    pub fn rescore_ranks(&self) -> Vec<usize> {
+        if self.pred.is_empty() {
+            vec![]
+        } else {
+            self.shard_ranks(0)
+        }
     }
 
     /// Index of a generator rank within the generator kernel (0-based),
@@ -142,6 +191,42 @@ mod tests {
         assert_eq!(t.kernel_of(5), "training");
         assert_eq!(t.kernel_of(8), "generator");
         assert_eq!(t.kernel_of(28), "oracle");
+    }
+
+    #[test]
+    fn sharded_layout_partitions_predictors() {
+        // 6 predictors, committee 2 → shards {2,3} {4,5} {6,7}
+        let s = AlSetting {
+            pred_process: 6,
+            ml_process: 2,
+            committee_size: Some(2),
+            exchange_mode: crate::config::ExchangeMode::Batched,
+            ..Default::default()
+        };
+        let t = Topology::new(&s);
+        assert_eq!(t.n_shards(), 3);
+        assert_eq!(t.shard_ranks(0), vec![2, 3]);
+        assert_eq!(t.shard_ranks(2), vec![6, 7]);
+        let all: Vec<usize> = t.shards().into_iter().flatten().collect();
+        assert_eq!(all, t.pred_ranks());
+        // member layout: rank 2 and 4 and 6 host member 0; 3/5/7 member 1
+        assert_eq!(t.member_of_pred(2), 0);
+        assert_eq!(t.member_of_pred(5), 1);
+        assert_eq!(t.member_of_pred(6), 0);
+        // trainer 8 (member 0) syncs ranks 2, 4, 6; trainer 9 → 3, 5, 7
+        assert_eq!(t.train, 8..10);
+        assert_eq!(t.replicas_for_trainer(8), vec![2, 4, 6]);
+        assert_eq!(t.replicas_for_trainer(9), vec![3, 5, 7]);
+        assert_eq!(t.rescore_ranks(), vec![2, 3]);
+    }
+
+    #[test]
+    fn single_shard_matches_legacy_pairing() {
+        let t = toy();
+        assert_eq!(t.n_shards(), 1);
+        assert_eq!(t.shard_ranks(0), t.pred_ranks());
+        assert_eq!(t.replicas_for_trainer(5), vec![t.predictor_for_trainer(5)]);
+        assert_eq!(t.rescore_ranks(), t.pred_ranks());
     }
 
     #[test]

@@ -2,24 +2,54 @@
 //! between generator and prediction kernels (Fig. 2: "One dedicated
 //! controller sub-kernel ensures high-frequency communication between
 //! generation and prediction kernels").
+//!
+//! Two relay strategies ([`crate::config::ExchangeMode`]):
+//!
+//! * **Lockstep** — the paper's Fig. 4 rounds: gather one input from every
+//!   generator, broadcast the list to every prediction rank, gather the
+//!   committee's outputs, `prediction_check`, scatter back.
+//! * **Batched** — requests from generators are coalesced into
+//!   micro-batches ([`BatchScheduler`]: dispatch at `batch.max_size` queued
+//!   items, or when the oldest request has waited `batch.max_delay`), each
+//!   batch is routed to one prediction *shard* (a full committee replica
+//!   group) chosen round-robin with a least-outstanding fallback, and
+//!   per-item results are scattered back to the originating generators.
+//!   When every shard already has `batch.max_outstanding` batches in
+//!   flight, requests queue and are released in FIFO order (backpressure).
 
-use std::time::Instant;
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
 
-use crate::comm::bus::Endpoint;
+use crate::comm::bus::{Endpoint, Src};
 use crate::comm::codec;
 use crate::comm::protocol::*;
-use crate::config::{topology, AlSetting, Topology};
+use crate::config::{topology, AlSetting, BatchSetting, ExchangeMode, Topology};
 use crate::coordinator::hosts::{gather_poll, is_down, ShutdownFlag};
 use crate::kernels::Utils;
 use crate::telemetry::KernelTelemetry;
 
 /// Run the Exchange loop until stop criteria or shutdown.
 ///
-/// One iteration = one lockstep round of the red+blue flows of Fig. 4:
-/// gather `data_to_pred` from every generator → broadcast to predictors →
-/// gather committee predictions → `prediction_check` → forward selected
-/// inputs to the Manager → scatter checked predictions to generators.
+/// In lockstep mode one iteration is one Fig.-4 round (every generator steps
+/// once); in batched mode one iteration is one completed batch round-trip.
 pub fn exchange_host(
+    ep: Endpoint,
+    utils: Box<dyn Utils>,
+    setting: &AlSetting,
+    topo: &Topology,
+    down: ShutdownFlag,
+) -> KernelTelemetry {
+    match setting.exchange_mode {
+        ExchangeMode::Lockstep => lockstep_host(ep, utils, setting, topo, down),
+        ExchangeMode::Batched => batched_host(ep, utils, setting, topo, down),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lockstep relay (paper-faithful Fig. 4 rounds)
+// ---------------------------------------------------------------------------
+
+fn lockstep_host(
     mut ep: Endpoint,
     mut utils: Box<dyn Utils>,
     setting: &AlSetting,
@@ -137,11 +167,326 @@ pub fn exchange_host(
     tel
 }
 
+// ---------------------------------------------------------------------------
+// Batch scheduler (pure core: triggers, shard routing, backpressure)
+// ---------------------------------------------------------------------------
+
+/// One queued prediction request.
+#[derive(Debug)]
+struct Pending {
+    origin: usize,
+    data: Vec<f32>,
+    enqueued: Instant,
+}
+
+/// A batch the scheduler has routed to a shard, ready to send.
+#[derive(Debug)]
+pub struct DispatchedBatch {
+    pub id: u64,
+    pub shard: usize,
+    /// Originating generator rank per item, aligned with `items`.
+    pub origins: Vec<usize>,
+    pub items: Vec<Vec<f32>>,
+}
+
+/// Size-/deadline-triggered micro-batching with shard routing and
+/// per-shard backpressure. Pure state machine: callers inject `now`, so the
+/// trigger semantics are unit-testable without threads or sleeps.
+pub struct BatchScheduler {
+    queue: VecDeque<Pending>,
+    max_size: usize,
+    max_delay: Duration,
+    max_outstanding: usize,
+    /// Batches in flight per shard.
+    outstanding: Vec<usize>,
+    /// Round-robin preference for the next dispatch.
+    rr_cursor: usize,
+    next_id: u64,
+}
+
+impl BatchScheduler {
+    pub fn new(batch: &BatchSetting, n_shards: usize) -> Self {
+        BatchScheduler {
+            queue: VecDeque::new(),
+            max_size: batch.max_size.max(1),
+            max_delay: batch.max_delay,
+            max_outstanding: batch.max_outstanding.max(1),
+            outstanding: vec![0; n_shards.max(1)],
+            rr_cursor: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue one request (FIFO).
+    pub fn push(&mut self, origin: usize, data: Vec<f32>, now: Instant) {
+        self.queue.push_back(Pending { origin, data, enqueued: now });
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn outstanding(&self, shard: usize) -> usize {
+        self.outstanding[shard]
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.iter().sum()
+    }
+
+    /// Whether a dispatch trigger (size or deadline) has fired.
+    fn triggered(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.max_size {
+            return true; // size trigger preempts the deadline
+        }
+        self.queue
+            .front()
+            .map(|p| now.duration_since(p.enqueued) >= self.max_delay)
+            .unwrap_or(false)
+    }
+
+    /// Pick a shard with spare capacity: the round-robin preferred shard if
+    /// free, otherwise the least-outstanding one. `None` = all saturated.
+    fn pick_shard(&mut self) -> Option<usize> {
+        let n = self.outstanding.len();
+        let preferred = self.rr_cursor % n;
+        let shard = if self.outstanding[preferred] < self.max_outstanding {
+            preferred
+        } else {
+            let (best, &count) = self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &c)| c)
+                .expect("at least one shard");
+            if count >= self.max_outstanding {
+                return None; // backpressure: every shard saturated
+            }
+            best
+        };
+        self.rr_cursor = (preferred + 1) % n;
+        Some(shard)
+    }
+
+    /// Form and route one batch if a trigger fired and a shard is free.
+    /// Items leave the queue oldest-first (FIFO under backpressure); within
+    /// a batch they are ordered by origin rank ("sorted by the rank of
+    /// generator", SI) so downstream processing is arrival-order
+    /// independent.
+    pub fn try_dispatch(&mut self, now: Instant) -> Option<DispatchedBatch> {
+        if !self.triggered(now) {
+            return None;
+        }
+        let shard = self.pick_shard()?;
+        let n = self.queue.len().min(self.max_size);
+        let mut taken: Vec<Pending> = self.queue.drain(..n).collect();
+        taken.sort_by_key(|p| p.origin); // stable: FIFO within an origin
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outstanding[shard] += 1;
+        let origins = taken.iter().map(|p| p.origin).collect();
+        let items = taken.into_iter().map(|p| p.data).collect();
+        Some(DispatchedBatch { id, shard, origins, items })
+    }
+
+    /// A batch for `shard` completed its round-trip.
+    pub fn complete(&mut self, shard: usize) {
+        debug_assert!(self.outstanding[shard] > 0);
+        self.outstanding[shard] = self.outstanding[shard].saturating_sub(1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched relay host
+// ---------------------------------------------------------------------------
+
+/// A dispatched batch awaiting its committee replies.
+struct InFlight {
+    shard: usize,
+    origins: Vec<usize>,
+    items: Vec<Vec<f32>>,
+    /// One slot per committee member (well-formed replies only).
+    replies: Vec<Option<Vec<Vec<f32>>>>,
+    n_replies: usize,
+}
+
+fn batched_host(
+    mut ep: Endpoint,
+    mut utils: Box<dyn Utils>,
+    setting: &AlSetting,
+    topo: &Topology,
+    down: ShutdownFlag,
+) -> KernelTelemetry {
+    let mut tel = KernelTelemetry::new("exchange", ep.rank());
+    let poll = setting.poll_interval;
+    let committee = topo.committee.max(1);
+    let shards = topo.shards();
+    let oracle_enabled = !topo.orcl_ranks().is_empty();
+    let mut scheduler = BatchScheduler::new(&setting.batch, shards.len());
+    let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+    let mut iterations: u64 = 0;
+    let mut stop_forwarded = false;
+    let t_start = Instant::now();
+
+    loop {
+        if is_down(&down) {
+            break;
+        }
+        if let Some(max) = setting.stop.max_iterations {
+            if iterations >= max {
+                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                tel.bump("stop_signals");
+                break;
+            }
+        }
+        if let Some(max_wall) = setting.stop.max_wall {
+            if t_start.elapsed() >= max_wall {
+                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                tel.bump("stop_signals");
+                break;
+            }
+        }
+
+        let mut did_work = false;
+
+        // --- red flow in: drain generator requests into the queue ---
+        while ep.try_recv(Src::Any, TAG_GEN_SIZE).is_some() {
+            // batch frames are self-describing; size headers are consumed
+            // and dropped (SI §S3 compatibility)
+            tel.bump("size_headers");
+            did_work = true;
+        }
+        while let Some(m) = ep.try_recv(Src::Any, TAG_GEN_TO_PRED) {
+            if !topo.gene.contains(&m.src) {
+                tel.bump("malformed");
+                continue;
+            }
+            let (stop, data) = decode_gen(&m.data);
+            if stop && !stop_forwarded {
+                // a generator met its stop criterion; tell the Manager once
+                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                tel.bump("stop_signals");
+                stop_forwarded = true;
+            }
+            scheduler.push(m.src, data.to_vec(), Instant::now());
+            did_work = true;
+        }
+
+        // --- blue flow in: committee replies, one frame per member ---
+        while let Some(m) = ep.try_recv(Src::Any, TAG_PRED_BATCH_RESULT) {
+            did_work = true;
+            let Some((id, outputs)) = decode_predict_batch_result(&m.data) else {
+                tel.bump("malformed");
+                continue;
+            };
+            let Some(fl) = inflight.get_mut(&id) else {
+                tel.bump("orphan_replies");
+                continue;
+            };
+            let Some(member) = shards[fl.shard].iter().position(|&r| r == m.src) else {
+                tel.bump("orphan_replies");
+                continue;
+            };
+            if fl.replies[member].is_some() {
+                tel.bump("duplicate_replies");
+                continue;
+            }
+            fl.n_replies += 1;
+            if outputs.len() == fl.items.len() {
+                fl.replies[member] = Some(outputs);
+            } else {
+                tel.bump("malformed");
+            }
+            if fl.n_replies < committee {
+                continue;
+            }
+
+            // batch complete: UQ check, forward selections, scatter results
+            let fl = inflight.remove(&id).expect("present above");
+            scheduler.complete(fl.shard);
+            let preds_per_model: Vec<Vec<Vec<f32>>> =
+                fl.replies.into_iter().flatten().collect();
+            let t0 = Instant::now();
+            let (to_orcl, checked) = if preds_per_model.is_empty() {
+                // every member reply was malformed; unblock the generators
+                // with empty payloads rather than stalling the loop
+                (Vec::new(), vec![Vec::new(); fl.items.len()])
+            } else {
+                utils.prediction_check(&fl.items, &preds_per_model)
+            };
+            tel.record("prediction_check", t0.elapsed());
+            assert_eq!(
+                checked.len(),
+                fl.items.len(),
+                "prediction_check must return one entry per batched item"
+            );
+            if oracle_enabled && !to_orcl.is_empty() {
+                tel.add("selected_for_oracle", to_orcl.len() as u64);
+                ep.send(topology::MANAGER, TAG_ORCL_SELECT, codec::pack_vecs(&to_orcl));
+            }
+            for (&origin, payload) in fl.origins.iter().zip(checked) {
+                ep.send(origin, TAG_GENE_IN, payload);
+            }
+            iterations += 1;
+            tel.bump("iterations");
+            tel.add("batch_items", fl.items.len() as u64);
+            if setting.stop.max_iterations.map_or(false, |max| iterations >= max) {
+                // budget reached mid-drain: stop completing further batches
+                // so the counter lands exactly on the limit; the outer loop
+                // sends the stop signal
+                break;
+            }
+        }
+
+        // --- dispatch: size/deadline triggers, shard routing, backpressure ---
+        loop {
+            if let Some(max) = setting.stop.max_iterations {
+                // completed + in-flight batches must stay within the
+                // iteration budget, or the drain pass overshoots it
+                if iterations + inflight.len() as u64 >= max {
+                    break;
+                }
+            }
+            let Some(batch) = scheduler.try_dispatch(Instant::now()) else {
+                break;
+            };
+            let frame = encode_predict_batch(batch.id, &batch.items);
+            ep.bcast(&shards[batch.shard], TAG_PRED_BATCH, &frame);
+            tel.bump("batches_dispatched");
+            if batch.items.len() < setting.batch.max_size {
+                tel.bump("partial_batches");
+            }
+            inflight.insert(
+                batch.id,
+                InFlight {
+                    shard: batch.shard,
+                    origins: batch.origins,
+                    items: batch.items,
+                    replies: vec![None; committee],
+                    n_replies: 0,
+                },
+            );
+            did_work = true;
+        }
+        if scheduler.queue_len() > 0 && scheduler.in_flight() == shards.len() * setting.batch.max_outstanding {
+            tel.bump("backpressure_polls");
+        }
+
+        if !did_work {
+            // bound the sleep by the deadline trigger so partial batches
+            // are not delayed past batch.max_delay by the poll cadence
+            std::thread::sleep(poll.min(setting.batch.max_delay).max(Duration::from_micros(50)));
+        }
+    }
+    tel
+}
+
 #[cfg(test)]
 mod tests {
-    //! Exchange is exercised end-to-end in `rust/tests/`; unit-level
-    //! protocol pieces (encode/decode, selection) have their own tests.
-    //! Here: the stop-criteria bookkeeping contract.
+    //! The batched relay is exercised end-to-end in
+    //! `rust/tests/test_batched_exchange.rs`; here: the stop-criteria
+    //! bookkeeping contract and the pure [`BatchScheduler`] trigger /
+    //! backpressure semantics.
     use super::*;
     use crate::comm::World;
     use crate::config::AlSetting;
@@ -172,5 +517,156 @@ mod tests {
         assert_eq!(tel.counter("iterations"), 0);
         assert_eq!(tel.counter("stop_signals"), 1);
         drop(manager_ep);
+    }
+
+    #[test]
+    fn batched_exchange_stops_at_zero_max_iterations() {
+        let mut s = AlSetting::default();
+        s.gene_process = 1;
+        s.pred_process = 1;
+        s.ml_process = 0;
+        s.orcl_process = 0;
+        s.exchange_mode = ExchangeMode::Batched;
+        s.stop.max_iterations = Some(0);
+        let topo = Topology::new(&s);
+        let mut world = World::new(topo.n_ranks());
+        let manager_ep = world.endpoint(topology::MANAGER);
+        let ex_ep = world.endpoint(topology::EXCHANGE);
+        let down = Arc::new(AtomicBool::new(false));
+        let tel = exchange_host(
+            ex_ep,
+            Box::new(CommitteeStdUtils::new(0.5, 4)),
+            &s,
+            &topo,
+            down,
+        );
+        assert_eq!(tel.counter("iterations"), 0);
+        assert_eq!(tel.counter("stop_signals"), 1);
+        drop(manager_ep);
+    }
+
+    fn sched(max_size: usize, max_delay_ms: u64, max_outstanding: usize, shards: usize) -> BatchScheduler {
+        BatchScheduler::new(
+            &BatchSetting {
+                max_size,
+                max_delay: Duration::from_millis(max_delay_ms),
+                max_outstanding,
+            },
+            shards,
+        )
+    }
+
+    #[test]
+    fn no_trigger_before_size_or_deadline() {
+        let mut s = sched(4, 10, 2, 2);
+        let t0 = Instant::now();
+        s.push(8, vec![1.0], t0);
+        s.push(9, vec![2.0], t0);
+        // neither full nor old enough → nothing dispatches
+        assert!(s.try_dispatch(t0 + Duration::from_millis(1)).is_none());
+        assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn deadline_fires_with_partial_batch() {
+        let mut s = sched(4, 10, 2, 2);
+        let t0 = Instant::now();
+        s.push(8, vec![1.0], t0);
+        s.push(9, vec![2.0], t0 + Duration::from_millis(5));
+        let b = s.try_dispatch(t0 + Duration::from_millis(10)).expect("deadline trigger");
+        assert_eq!(b.items.len(), 2, "partial batch takes everything queued");
+        assert_eq!(b.origins, vec![8, 9]);
+        assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn size_trigger_preempts_deadline() {
+        let mut s = sched(3, 1_000_000, 2, 2);
+        let t0 = Instant::now();
+        for origin in [10, 8, 9] {
+            s.push(origin, vec![origin as f32], t0);
+        }
+        // deadline is far away, but the queue hit max_size → dispatch now
+        let b = s.try_dispatch(t0).expect("size trigger");
+        assert_eq!(b.items.len(), 3);
+        // items ordered by origin rank within the batch
+        assert_eq!(b.origins, vec![8, 9, 10]);
+        assert_eq!(b.items, vec![vec![8.0], vec![9.0], vec![10.0]]);
+    }
+
+    #[test]
+    fn size_trigger_caps_batch_and_keeps_fifo_remainder() {
+        let mut s = sched(2, 1_000_000, 4, 1);
+        let t0 = Instant::now();
+        for origin in [5, 6, 7] {
+            s.push(origin, vec![origin as f32], t0);
+        }
+        let b = s.try_dispatch(t0).unwrap();
+        assert_eq!(b.origins, vec![5, 6], "oldest two leave first");
+        assert_eq!(s.queue_len(), 1);
+    }
+
+    #[test]
+    fn round_robin_rotates_shards() {
+        let mut s = sched(1, 0, 2, 3);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            s.push(8, vec![i as f32], t0);
+        }
+        let shards: Vec<usize> = (0..3).map(|_| s.try_dispatch(t0).unwrap().shard).collect();
+        assert_eq!(shards, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn saturated_preferred_shard_falls_back_to_least_outstanding() {
+        let mut s = sched(1, 0, 1, 2);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            s.push(8, vec![i as f32], t0);
+        }
+        let a = s.try_dispatch(t0).unwrap();
+        assert_eq!(a.shard, 0);
+        let b = s.try_dispatch(t0).unwrap();
+        assert_eq!(b.shard, 1);
+        // both saturated → backpressure
+        assert!(s.try_dispatch(t0).is_none());
+        // shard 1 frees; preferred cursor points at 0 (saturated) → fall
+        // back to the least-outstanding shard 1
+        s.complete(1);
+        let c = s.try_dispatch(t0).unwrap();
+        assert_eq!(c.shard, 1);
+    }
+
+    #[test]
+    fn backpressure_releases_in_fifo_order() {
+        let mut s = sched(1, 0, 1, 1);
+        let t0 = Instant::now();
+        s.push(8, vec![0.0], t0);
+        let first = s.try_dispatch(t0).unwrap();
+        assert_eq!(first.items, vec![vec![0.0]]);
+        // queue three more while the only shard is busy
+        for i in 1..=3 {
+            s.push(8, vec![i as f32], t0);
+        }
+        assert!(s.try_dispatch(t0).is_none(), "shard saturated");
+        assert_eq!(s.queue_len(), 3, "backpressure leaves the queue intact");
+        // each completion releases exactly the oldest queued request
+        for i in 1..=3 {
+            s.complete(0);
+            let b = s.try_dispatch(t0).unwrap();
+            assert_eq!(b.items, vec![vec![i as f32]], "FIFO release");
+        }
+        assert_eq!(s.queue_len(), 0);
+    }
+
+    #[test]
+    fn batch_ids_are_unique_and_sequential() {
+        let mut s = sched(1, 0, 8, 2);
+        let t0 = Instant::now();
+        for i in 0..5 {
+            s.push(8, vec![i as f32], t0);
+        }
+        let ids: Vec<u64> = (0..5).map(|_| s.try_dispatch(t0).unwrap().id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
     }
 }

@@ -144,8 +144,10 @@ pub fn oracle_host(
 // Prediction host (SI §S4)
 // ---------------------------------------------------------------------------
 
-/// Drive one prediction process: serve Exchange broadcasts, absorb weight
-/// pushes from the paired trainer, serve Manager re-scoring requests.
+/// Drive one prediction process: serve Exchange traffic (lockstep
+/// broadcasts *and* batched `PredictBatch` frames — models take stacked
+/// input lists either way), absorb weight pushes from the paired trainer,
+/// serve Manager re-scoring requests.
 pub fn prediction_host(
     mut ep: Endpoint,
     mut model: Box<dyn Model>,
@@ -176,8 +178,28 @@ pub fn prediction_host(
                 );
             }
         }
-        // the hot path: a batch of generator inputs from Exchange
-        match ep.recv_timeout(Src::Rank(crate::config::topology::EXCHANGE), TAG_PRED_IN, poll) {
+        // the hot path: stacked generator inputs from Exchange, as either a
+        // lockstep broadcast or a sharded batch frame
+        match ep.recv_timeout_tags(
+            Src::Rank(crate::config::topology::EXCHANGE),
+            &[TAG_PRED_IN, TAG_PRED_BATCH],
+            poll,
+        ) {
+            Ok(m) if m.tag == TAG_PRED_BATCH => {
+                let Some((id, items)) = decode_predict_batch(&m.data) else {
+                    tel.bump("malformed");
+                    continue;
+                };
+                let preds = tel.time("predict", || model.predict(&items));
+                debug_assert_eq!(preds.len(), items.len());
+                tel.bump("batches");
+                tel.add("samples", items.len() as u64);
+                ep.send(
+                    crate::config::topology::EXCHANGE,
+                    TAG_PRED_BATCH_RESULT,
+                    encode_predict_batch_result(id, &preds),
+                );
+            }
             Ok(m) => {
                 let Some(inputs) = codec::unpack(&m.data) else {
                     tel.bump("malformed");
@@ -216,9 +238,14 @@ pub fn training_host(
 ) -> KernelTelemetry {
     let mut tel = KernelTelemetry::new("training", ep.rank());
     let poll = setting.poll_interval;
-    let predictor = topology.predictor_for_trainer(ep.rank());
+    // this member's replica in every prediction shard (one shard = the
+    // paper's 1:1 trainer→predictor pairing; sharded mode fans out so all
+    // shards serve the same committee)
+    let replicas = topology.replicas_for_trainer(ep.rank());
     // initial weight sync so predictors start from the same replica
-    ep.send(predictor, TAG_WEIGHTS, model.get_weight());
+    for &r in &replicas {
+        ep.send(r, TAG_WEIGHTS, model.get_weight());
+    }
     loop {
         let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TRAIN_DATA, &down, poll) {
             Some(m) => m,
@@ -245,7 +272,9 @@ pub fn training_host(
             stop
         };
         tel.bump("rounds");
-        ep.send(predictor, TAG_WEIGHTS, model.get_weight());
+        for &r in &replicas {
+            ep.send(r, TAG_WEIGHTS, model.get_weight());
+        }
         let loss = model.last_loss().unwrap_or(f32::NAN);
         let epochs = model.last_round_epochs() as f32;
         tel.add("epochs", epochs as u64);

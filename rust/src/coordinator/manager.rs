@@ -34,9 +34,17 @@ pub fn manager_host(
     let mut tel = KernelTelemetry::new("manager", ep.rank());
     let mut out = ManagerOutcome::default();
     let orcl = topo.orcl_ranks();
-    let pred = topo.pred_ranks();
+    // re-scoring needs one full committee; the first shard suffices (other
+    // shards hold replicas of the same members)
+    let rescore = topo.rescore_ranks();
     let train = topo.train_ranks();
     let mut oracle_busy = vec![false; orcl.len()];
+    // strict label budget: never dispatch beyond stop.max_labels — oracle
+    // hours past the stop criterion are wasted work, and a bounded dispatch
+    // count makes the final label tally exact (the deterministic e2e test
+    // relies on this)
+    let label_budget = if setting.strict_label_budget { setting.stop.max_labels } else { None };
+    let mut dispatched_total: u64 = 0;
     let mut orcl_buffer = OracleBuffer::new(Some(4096));
     let mut train_buffer = TrainBuffer::new(setting.retrain_size);
     let mut last_save = Instant::now();
@@ -93,19 +101,27 @@ pub fn manager_host(
             }
             did_work = true;
             // dynamic oracle-list adjustment with the freshly-synced models
-            if setting.dynamic_oracle_list && !orcl_buffer.is_empty() && !pred.is_empty() {
-                adjust_oracle_buffer(&mut ep, &mut *utils, &mut orcl_buffer, &pred, setting, &mut tel);
+            if setting.dynamic_oracle_list && !orcl_buffer.is_empty() && !rescore.is_empty() {
+                adjust_oracle_buffer(&mut ep, &mut *utils, &mut orcl_buffer, &rescore, setting, &mut tel);
             }
         }
 
-        // --- dispatch buffered inputs to free oracles (first available) ---
+        // --- dispatch buffered inputs to free oracles (first available),
+        //     bounded by the label budget when one is set ---
         for (i, &rank) in orcl.iter().enumerate() {
             if oracle_busy[i] {
                 continue;
             }
+            if let Some(max) = label_budget {
+                if dispatched_total >= max {
+                    tel.bump("budget_gated");
+                    break;
+                }
+            }
             if let Some(input) = orcl_buffer.pop() {
                 ep.send(rank, TAG_TO_ORACLE, input);
                 oracle_busy[i] = true;
+                dispatched_total += 1;
                 tel.bump("dispatched");
                 did_work = true;
             } else {

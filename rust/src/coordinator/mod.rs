@@ -3,13 +3,21 @@
 //! Two controller sub-kernels (Fig. 2):
 //!
 //! * [`exchange`] — the dedicated high-frequency sub-kernel driving the
-//!   generator ↔ prediction loop (gather inputs → broadcast to predictors →
-//!   gather predictions → `prediction_check` → scatter back + forward
-//!   selected samples to the Manager).
+//!   generator ↔ prediction loop. Two relay strategies
+//!   ([`crate::config::ExchangeMode`]):
+//!   - *lockstep* (paper Fig. 4): gather inputs → broadcast to predictors →
+//!     gather predictions → `prediction_check` → scatter back + forward
+//!     selected samples to the Manager;
+//!   - *batched*: requests are coalesced into micro-batches (size trigger
+//!     `batch.max_size`, deadline trigger `batch.max_delay`), routed to one
+//!     committee shard per batch (round-robin, least-outstanding fallback,
+//!     FIFO backpressure at `batch.max_outstanding` per shard), UQ-checked
+//!     per batch, and scattered back per item.
 //! * [`manager`] — buffers (oracle input buffer, training data buffer),
-//!   oracle dispatch to the first free oracle, retrain-threshold flushes to
-//!   the training kernel, `dynamic_orcale_list` re-scoring, progress
-//!   snapshots, and the shutdown fan-out.
+//!   oracle dispatch to the first free oracle (optionally capped by the
+//!   strict label budget), retrain-threshold flushes to the training
+//!   kernel, `dynamic_orcale_list` re-scoring against one committee shard,
+//!   progress snapshots, and the shutdown fan-out.
 //!
 //! [`hosts`] holds the per-kernel host loops (prediction / training /
 //! generator / oracle ranks) and [`workflow`] wires everything into threads

@@ -59,17 +59,21 @@ impl Workflow {
             );
         }
 
-        // Prediction hosts
+        // Prediction hosts. Rank `pred.start + i` hosts committee member
+        // `i % committee`: with shards, replicas of the same member are
+        // constructed identically so any shard answers any batch, and the
+        // member's trainer keeps every replica in sync.
         for (i, rank) in topo.pred_ranks().into_iter().enumerate() {
             let ep = world.endpoint(rank);
             let setting = self.setting.clone();
             let down = down.clone();
             let factory = model.clone();
+            let member = i % topo.committee.max(1);
             tel_handles.push(
                 std::thread::Builder::new()
                     .name(format!("pal-pred-{i}"))
                     .spawn(move || {
-                        let m = factory(Mode::Predict, i);
+                        let m = factory(Mode::Predict, member);
                         hosts::prediction_host(ep, m, &setting, down)
                     })
                     .context("spawning predictor")?,

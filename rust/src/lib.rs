@@ -12,10 +12,10 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`comm`] | MPI-like message passing substrate (ranks, tags, requests) |
-//! | [`config`] | `AL_SETTING`-style configuration + rank topology |
-//! | [`coordinator`] | the paper's contribution: Manager + Exchange controllers, buffers, selection |
-//! | [`kernels`] | user-facing kernel traits + built-in generators/oracles/models |
+//! | [`comm`] | MPI-like message passing substrate (ranks, tags, requests, batch frames) |
+//! | [`config`] | `AL_SETTING`-style configuration + rank/shard topology + batching knobs |
+//! | [`coordinator`] | the paper's contribution: Manager + Exchange controllers (lockstep *and* batched/sharded relay), buffers, selection |
+//! | [`kernels`] | user-facing kernel traits + built-in generators/oracles/models (models take stacked input lists) |
 //! | [`runtime`] | PJRT artifact loading & execution (`artifacts/*.hlo.txt`) |
 //! | [`potential`] | analytic PES substrate standing in for DFT/TDDFT/xTB oracles |
 //! | [`serial`] | the Fig.-1a serial active-learning baseline |
@@ -23,6 +23,25 @@
 //! | [`data`] | labeled dataset store, splits, rolling windows |
 //! | [`telemetry`] | per-kernel timing and counters |
 //! | [`json`], [`rng`], [`prop`], [`bench_util`] | offline substrates (no external deps available) |
+//!
+//! ## Batched, sharded prediction (beyond the paper)
+//!
+//! The paper's Exchange runs lockstep rounds: every generator's input is
+//! broadcast to every prediction rank, so adding prediction ranks adds
+//! committee members but no throughput. With
+//! `AlSetting { exchange_mode: ExchangeMode::Batched, .. }` the Exchange
+//! instead coalesces concurrent generator requests into micro-batches
+//! (dispatch at `batch.max_size` queued items, or when the oldest has
+//! waited `batch.max_delay`), routes each batch to one prediction *shard*
+//! — `committee_size` ranks holding one replica of each committee member,
+//! chosen round-robin with a least-outstanding fallback — and scatters
+//! per-item results back to the originating generators. When every shard
+//! has `batch.max_outstanding` batches in flight, requests queue and
+//! release in FIFO order (backpressure). Trainers push weights to their
+//! member's replica in every shard, so shards stay interchangeable, and
+//! `stop.max_labels` can be made a hard dispatch budget with
+//! `strict_label_budget` (exact label counts; see
+//! `rust/tests/test_determinism.rs` for a bit-stable end-to-end run).
 
 pub mod bench_util;
 pub mod cli;

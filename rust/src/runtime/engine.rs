@@ -7,6 +7,10 @@ use std::time::Instant;
 use anyhow::{bail, Context};
 
 use super::artifact::{ArtifactEntry, DType, Manifest};
+// The external `xla` crate needs an XLA/PJRT shared library that the offline
+// build can't link; the stub exposes the same API and fails only at compile
+// (`Engine::backend_available` lets callers probe before relying on it).
+use super::pjrt_stub as xla;
 
 /// Borrowed input tensor for [`Engine::call`].
 #[derive(Debug, Clone, Copy)]
@@ -58,6 +62,14 @@ impl Engine {
     /// Convenience: load the default artifacts directory.
     pub fn from_default_dir() -> anyhow::Result<Self> {
         Engine::new(Manifest::load(super::default_artifacts_dir())?)
+    }
+
+    /// Whether a real PJRT backend is linked into this build. When false,
+    /// [`Engine::call`] fails at compile time for every artifact; callers
+    /// that need execution (HLO model kernels, runtime tests) should probe
+    /// this and fall back or skip.
+    pub fn backend_available() -> bool {
+        xla::BACKEND_AVAILABLE
     }
 
     pub fn manifest(&self) -> &Manifest {

@@ -18,9 +18,18 @@
 
 mod artifact;
 mod engine;
+pub mod pjrt_stub;
 
 pub use artifact::{ArtifactEntry, DType, Manifest, TensorSpec};
 pub use engine::{Engine, TensorIn};
+
+/// True when HLO artifacts exist *and* a real PJRT backend is linked, i.e.
+/// the full artifact execution path can run. Tests and examples that
+/// exercise HLO-backed models probe this and skip (loudly) otherwise, the
+/// same way GPU-gated suites skip without a device.
+pub fn hlo_available() -> bool {
+    Engine::backend_available() && Manifest::load(default_artifacts_dir()).is_ok()
+}
 
 /// Default artifacts directory, overridable with `PAL_ARTIFACTS`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

@@ -72,10 +72,17 @@ impl Oracle for SyntheticOracle {
 /// linear readout of trainable weights; retraining runs `epochs` of
 /// simulated epochs, each costing `epoch_cost`, interruptible between
 /// epochs (paper §S5 `req_data.Test()` semantics).
+///
+/// The prediction cost model is `predict_cost + n_items *
+/// predict_cost_per_item` per call: a fixed launch overhead plus a
+/// per-stacked-item term, so benches can reproduce both overhead-bound and
+/// throughput-bound inference regimes.
 pub struct SyntheticModel {
     pub in_dim: usize,
     pub out_dim: usize,
     pub predict_cost: Duration,
+    /// Marginal cost per stacked input row (default zero: call-bound).
+    pub predict_cost_per_item: Duration,
     pub epoch_cost: Duration,
     pub epochs: usize,
     weights: Vec<f32>,
@@ -98,6 +105,7 @@ impl SyntheticModel {
             in_dim,
             out_dim,
             predict_cost,
+            predict_cost_per_item: Duration::ZERO,
             epoch_cost,
             epochs,
             weights: vec![0.0; in_dim * out_dim],
@@ -106,6 +114,12 @@ impl SyntheticModel {
             last_round_epochs: 0,
             mode,
         }
+    }
+
+    /// Set the marginal per-stacked-item prediction cost.
+    pub fn with_per_item_cost(mut self, d: Duration) -> Self {
+        self.predict_cost_per_item = d;
+        self
     }
 
     fn predict_one(&self, x: &[f32]) -> Vec<f32> {
@@ -123,7 +137,9 @@ impl SyntheticModel {
 
 impl Model for SyntheticModel {
     fn predict(&mut self, list_data_to_pred: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        busy_wait(self.predict_cost);
+        busy_wait(
+            self.predict_cost + self.predict_cost_per_item * list_data_to_pred.len() as u32,
+        );
         list_data_to_pred.iter().map(|x| self.predict_one(x)).collect()
     }
 

@@ -1,0 +1,190 @@
+//! Integration: the batched, sharded prediction Exchange
+//! (`exchange_mode = Batched`) over synthetic kernels — coalescing,
+//! shard routing, weight fan-out to replicas, message-count wins, and
+//! variable-size-mode compatibility.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
+use pal::coordinator::selection::CommitteeStdUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+use pal::telemetry::RunReport;
+
+fn batched_setting(gene: usize, pred: usize, committee: usize, orcl: usize, ml: usize) -> AlSetting {
+    AlSetting {
+        result_dir: format!("/tmp/pal-batched-{gene}-{pred}-{committee}-{orcl}-{ml}"),
+        gene_process: gene,
+        pred_process: pred,
+        orcl_process: orcl,
+        ml_process: ml,
+        committee_size: Some(committee),
+        exchange_mode: ExchangeMode::Batched,
+        retrain_size: 4,
+        batch: BatchSetting {
+            max_size: gene.max(1),
+            max_delay: Duration::from_millis(1),
+            max_outstanding: 2,
+        },
+        stop: StopCriteria {
+            max_iterations: Some(40),
+            max_labels: None,
+            max_wall: Some(Duration::from_secs(30)),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn synthetic_kernels(s: &AlSetting, threshold: f32) -> KernelSet {
+    let generators = (0..s.gene_process)
+        .map(|i| {
+            let seed = i as u64;
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(4, Duration::ZERO, u64::MAX, seed))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..s.orcl_process)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle { label_cost: Duration::from_millis(1), out_dim: 4 })
+                    as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, member: usize| {
+        let mut m =
+            SyntheticModel::new(4, 4, Duration::ZERO, Duration::from_micros(200), 16, mode);
+        // diversify members (replicas of one member stay identical)
+        let w: Vec<f32> = (0..16).map(|k| ((k + member * 7) % 5) as f32 * 0.1).collect();
+        m.update(&w);
+        Box::new(m) as Box<dyn Model>
+    });
+    let utils =
+        Arc::new(move || Box::new(CommitteeStdUtils::new(threshold, 8)) as Box<dyn Utils>);
+    KernelSet { generators, oracles, model, utils }
+}
+
+fn run(s: AlSetting, threshold: f32) -> RunReport {
+    let kernels = synthetic_kernels(&s, threshold);
+    Workflow::new(s).run(kernels).unwrap()
+}
+
+#[test]
+fn batched_workflow_labels_and_trains() {
+    let mut s = batched_setting(6, 4, 2, 2, 2);
+    s.stop.max_iterations = None;
+    s.stop.max_labels = Some(10);
+    let report = run(s, 0.0); // everything uncertain → labeling flows
+    assert!(report.oracle_labels >= 10, "labels {}", report.oracle_labels);
+    assert!(report.retrain_rounds > 0, "labels should trigger retraining");
+    assert!(report.sum_counter("prediction", "samples") > 0);
+    assert!(report.sum_counter("exchange", "batches_dispatched") > 0);
+    // every batched item came back to a generator
+    let items = report.sum_counter("exchange", "batch_items");
+    assert!(items > 0);
+}
+
+#[test]
+fn sharded_routing_exercises_every_predictor() {
+    // 4 predictors in 2 shards of 2; round-robin must spread batches so
+    // every rank serves traffic
+    let s = batched_setting(6, 4, 2, 0, 0);
+    let report = run(s, f32::MAX);
+    assert_eq!(report.al_iterations, 40);
+    for p in report.kernel("prediction") {
+        assert!(
+            p.counter("batches") > 0,
+            "predictor rank {} never served a batch",
+            p.rank
+        );
+    }
+    // generators kept stepping throughout
+    assert!(report.sum_counter("generator", "steps") >= 40);
+}
+
+#[test]
+fn weight_sync_reaches_replicas_in_every_shard() {
+    // trainers (one per member) must push weights to the member's replica
+    // in both shards, not just the paired first-shard rank
+    let mut s = batched_setting(4, 4, 2, 2, 2);
+    s.stop.max_iterations = None;
+    s.stop.max_labels = Some(8);
+    let report = run(s, 0.0);
+    for p in report.kernel("prediction") {
+        assert!(
+            p.counter("weight_updates") >= 1,
+            "prediction rank {} saw no weight sync",
+            p.rank
+        );
+    }
+}
+
+#[test]
+fn coalescing_cuts_messages_per_item_at_least_2x() {
+    // same items through the same topology; only the batch size differs.
+    // batch=1 models the one-request-at-a-time relay; batch=G coalesces a
+    // full generator round into one shard dispatch.
+    let gene = 8usize;
+    let items_target = 240u64;
+
+    let mut coalesced = batched_setting(gene, 2, 2, 0, 0);
+    coalesced.batch.max_size = gene;
+    coalesced.batch.max_delay = Duration::from_millis(200); // full batches
+    coalesced.stop.max_iterations = Some(items_target / gene as u64);
+    let rep_coalesced = run(coalesced, f32::MAX);
+
+    let mut single = batched_setting(gene, 2, 2, 0, 0);
+    single.batch.max_size = 1;
+    single.stop.max_iterations = Some(items_target);
+    let rep_single = run(single, f32::MAX);
+
+    let items_c = rep_coalesced.sum_counter("exchange", "batch_items").max(1);
+    let items_s = rep_single.sum_counter("exchange", "batch_items").max(1);
+    let per_item_c = rep_coalesced.messages as f64 / items_c as f64;
+    let per_item_s = rep_single.messages as f64 / items_s as f64;
+    assert!(
+        per_item_s >= 2.0 * per_item_c,
+        "coalescing saved too little: {per_item_s:.2} vs {per_item_c:.2} msgs/item \
+         ({items_s} vs {items_c} items)"
+    );
+}
+
+#[test]
+fn variable_size_mode_is_consumed_by_batched_exchange() {
+    let mut s = batched_setting(4, 2, 2, 0, 0);
+    s.fixed_size_data = false;
+    s.stop.max_iterations = Some(20);
+    let report = run(s, f32::MAX);
+    assert_eq!(report.al_iterations, 20);
+    let headers = report.sum_counter("exchange", "size_headers");
+    assert!(headers > 0, "size headers were not consumed");
+}
+
+#[test]
+fn generator_stop_signal_reaches_manager_in_batched_mode() {
+    let mut s = batched_setting(3, 2, 2, 1, 2);
+    s.stop.max_iterations = None; // only the generator can stop the run
+    s.stop.max_wall = Some(Duration::from_secs(20));
+    let mut kernels = synthetic_kernels(&s, 0.5);
+    kernels.generators = (0..3usize)
+        .map(|i| {
+            Box::new(move || {
+                // generator 0 signals stop after 10 steps
+                let max = if i == 0 { 10 } else { u64::MAX };
+                Box::new(SyntheticGenerator::new(4, Duration::ZERO, max, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let report = Workflow::new(s).run(kernels).unwrap();
+    assert!(
+        report.wall < Duration::from_secs(20),
+        "stop signal did not shut the workflow down"
+    );
+    assert!(report.sum_counter("exchange", "stop_signals") >= 1);
+}

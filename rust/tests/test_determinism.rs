@@ -1,0 +1,233 @@
+//! Deterministic end-to-end AL loop: full Manager + Exchange workflow on
+//! the Müller–Brown potential with fixed RNG seeds, asserting the
+//! oracle-label count, the retrain-round count, and the final training
+//! losses are bit-stable across runs.
+//!
+//! Determinism is by construction, not by luck:
+//!
+//! * generators are fixed-seed walkers that ignore `data_to_gene`, so
+//!   trajectories don't depend on when weight syncs land;
+//! * selection is a pure function of the *inputs* (Müller–Brown energy
+//!   threshold), not of the committee's predictions;
+//! * batches are full (`batch.max_size = gene_process`, long deadline) and
+//!   items are ordered by origin rank inside a batch, so batch composition
+//!   is arrival-order independent;
+//! * a single oracle labels in dispatch order, and the Manager's strict
+//!   label budget (`strict_label_budget`) dispatches exactly
+//!   `stop.max_labels` inputs — never an in-flight extra;
+//! * trainers run fixed-epoch rounds (interrupts ignored), so the final
+//!   loss is a pure function of the (deterministic) labeled dataset.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::kernels::oracles::PesOracle;
+use pal::potential::{MullerBrown, Pes};
+use pal::rng::Rng;
+use pal::sim::workload::SyntheticModel;
+use pal::telemetry::RunReport;
+
+/// Wire layout for a 1-"atom" PES with 1 global and 1 state:
+/// input `[x, y, z, g, s]`, label `[e, fx, fy, fz]`.
+const IN_DIM: usize = 5;
+const OUT_DIM: usize = 4;
+
+/// Fixed-seed random walker over the Müller–Brown landscape. Ignores the
+/// checked predictions entirely: the trajectory is a pure function of the
+/// seed, which is what makes the whole loop replayable.
+struct MbWalker {
+    rng: Rng,
+    pos: [f32; 2],
+}
+
+impl MbWalker {
+    fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let pes = MullerBrown::default();
+        let x0 = pes.initial_geometry(&mut rng);
+        MbWalker { rng, pos: [x0[0], x0[1]] }
+    }
+}
+
+impl Generator for MbWalker {
+    fn generate_new_data(&mut self, _data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        self.pos[0] += (self.rng.normal() * 0.08) as f32;
+        self.pos[1] += (self.rng.normal() * 0.08) as f32;
+        (false, vec![self.pos[0], self.pos[1], 0.0, 0.0, 1.0])
+    }
+}
+
+/// Selection that depends only on the *input*: configurations whose
+/// Müller–Brown energy exceeds `threshold` go to the oracle (high-energy =
+/// poorly-sampled transition regions). The checked payloads are the
+/// committee means, but nothing downstream consumes them.
+struct EnergySelectUtils {
+    pes: MullerBrown,
+    threshold: f64,
+    max_per_batch: usize,
+}
+
+impl Utils for EnergySelectUtils {
+    fn prediction_check(
+        &mut self,
+        list_data_to_pred: &[Vec<f32>],
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let checked = pal::coordinator::selection::committee_mean(preds_per_model);
+        let to_orcl: Vec<Vec<f32>> = list_data_to_pred
+            .iter()
+            .filter(|x| self.pes.energy(&x[..3]) > self.threshold)
+            .take(self.max_per_batch)
+            .cloned()
+            .collect();
+        (to_orcl, checked)
+    }
+}
+
+/// Fixed-epoch committee member: like the synthetic model but immune to
+/// retraining interrupts, so every round runs the same number of epochs.
+struct FixedEpochModel(SyntheticModel);
+
+impl Model for FixedEpochModel {
+    fn predict(&mut self, list: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.0.predict(list)
+    }
+    fn update(&mut self, w: &[f32]) {
+        self.0.update(w)
+    }
+    fn get_weight(&self) -> Vec<f32> {
+        self.0.get_weight()
+    }
+    fn get_weight_size(&self) -> usize {
+        self.0.get_weight_size()
+    }
+    fn add_trainingset(&mut self, points: &[(Vec<f32>, Vec<f32>)]) {
+        self.0.add_trainingset(points)
+    }
+    fn retrain(&mut self, _interrupt: &mut dyn FnMut() -> bool) -> bool {
+        self.0.retrain(&mut || false)
+    }
+    fn last_loss(&self) -> Option<f32> {
+        self.0.last_loss()
+    }
+    fn last_round_epochs(&self) -> u64 {
+        self.0.last_round_epochs()
+    }
+}
+
+const GENS: usize = 4;
+const MEMBERS: usize = 2;
+const SHARDS: usize = 2;
+const LABELS: u64 = 12;
+const RETRAIN_SIZE: usize = 4;
+
+fn deterministic_setting() -> AlSetting {
+    let flushes = LABELS / RETRAIN_SIZE as u64; // 3
+    AlSetting {
+        result_dir: "/tmp/pal-determinism".into(),
+        gene_process: GENS,
+        pred_process: MEMBERS * SHARDS,
+        ml_process: MEMBERS,
+        orcl_process: 1, // single oracle → labels land in dispatch order
+        committee_size: Some(MEMBERS),
+        exchange_mode: ExchangeMode::Batched,
+        retrain_size: RETRAIN_SIZE,
+        strict_label_budget: true,
+        seed: 7,
+        batch: BatchSetting {
+            // full batches only: every batch holds one item per generator,
+            // ordered by rank — composition is timing-independent
+            max_size: GENS,
+            max_delay: Duration::from_secs(10),
+            max_outstanding: 2,
+        },
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(LABELS),
+            // wait for every flushed batch to finish retraining (one
+            // RETRAIN_DONE per trainer per flush) before shutting down
+            min_retrain_rounds: flushes * MEMBERS as u64,
+            min_train_epochs: 0,
+            max_wall: Some(Duration::from_secs(60)),
+        },
+        ..Default::default()
+    }
+}
+
+fn deterministic_kernels() -> KernelSet {
+    let generators = (0..GENS)
+        .map(|i| {
+            let seed = 100 + i as u64;
+            Box::new(move || Box::new(MbWalker::new(seed)) as Box<dyn Generator>)
+                as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = vec![Box::new(|| {
+        Box::new(PesOracle::fixed(MullerBrown::default(), 1)) as Box<dyn Oracle>
+    }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>];
+    let model = Arc::new(move |mode: Mode, member: usize| {
+        let mut inner =
+            SyntheticModel::new(IN_DIM, OUT_DIM, Duration::ZERO, Duration::ZERO, 8, mode);
+        // member-specific deterministic init; replicas of a member match
+        let w: Vec<f32> = (0..IN_DIM * OUT_DIM)
+            .map(|k| ((k + member * 11) % 7) as f32 * 0.05)
+            .collect();
+        inner.update(&w);
+        Box::new(FixedEpochModel(inner)) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| {
+        Box::new(EnergySelectUtils {
+            pes: MullerBrown::default(),
+            // far below every reachable energy → select everything, so the
+            // selected sequence is exactly the generator round-robin
+            threshold: -1e9,
+            max_per_batch: GENS,
+        }) as Box<dyn Utils>
+    });
+    KernelSet { generators, oracles, model, utils }
+}
+
+fn run_once() -> RunReport {
+    Workflow::new(deterministic_setting())
+        .run(deterministic_kernels())
+        .unwrap()
+}
+
+#[test]
+fn muller_brown_loop_is_bit_stable_across_runs() {
+    let a = run_once();
+    let b = run_once();
+
+    // exact label budget, both runs
+    assert_eq!(a.oracle_labels, LABELS, "run A labels");
+    assert_eq!(b.oracle_labels, LABELS, "run B labels");
+
+    // every flushed batch retrained on every committee member, both runs
+    let expected_rounds = (LABELS / RETRAIN_SIZE as u64) * MEMBERS as u64;
+    assert_eq!(a.retrain_rounds, expected_rounds, "run A rounds");
+    assert_eq!(b.retrain_rounds, expected_rounds, "run B rounds");
+
+    // final losses are bit-identical per trainer
+    assert_eq!(a.final_losses.len(), MEMBERS);
+    assert_eq!(b.final_losses.len(), MEMBERS);
+    for (i, (x, y)) in a.final_losses.iter().zip(&b.final_losses).enumerate() {
+        assert!(x.is_finite(), "trainer {i} loss not reported: {x}");
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "trainer {i} loss differs across runs: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn strict_budget_never_overshoots() {
+    let report = run_once();
+    let manager = &report.kernel("manager")[0];
+    assert_eq!(manager.counter("dispatched"), LABELS);
+    assert_eq!(manager.counter("labels"), LABELS);
+    assert_eq!(report.sum_counter("oracle", "labels"), LABELS);
+}

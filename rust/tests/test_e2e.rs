@@ -17,6 +17,18 @@ use pal::potential::{Morse, Pes};
 use pal::runtime::{default_artifacts_dir, Manifest};
 use pal::rng::Rng;
 
+/// Skip (loudly) when the HLO execution path is unavailable — these tests
+/// exercise the artifact-backed production models end-to-end and need both
+/// built artifacts and a linked PJRT backend.
+macro_rules! require_hlo {
+    () => {
+        if !pal::runtime::hlo_available() {
+            eprintln!("skipping: PJRT backend/artifacts unavailable in this build");
+            return;
+        }
+    };
+}
+
 fn dimer_layout() -> MdLayout {
     MdLayout { n_atoms: 2, n_globals: 1, n_states: 1 }
 }
@@ -67,6 +79,7 @@ fn dimer_kernels(setting: &AlSetting) -> KernelSet {
 
 #[test]
 fn hlo_dimer_workflow_labels_and_trains() {
+    require_hlo!();
     let setting = AlSetting {
         result_dir: "/tmp/pal-e2e-dimer".into(),
         gene_process: 3,
@@ -99,6 +112,7 @@ fn hlo_dimer_workflow_labels_and_trains() {
 
 #[test]
 fn hlo_model_learns_morse_offline() {
+    require_hlo!();
     // The model kernel alone: feed it oracle-labeled dimer data and verify
     // the loss decreases and validation improves — the learning-curve
     // mechanism behind examples/end_to_end.rs.
@@ -135,6 +149,7 @@ fn hlo_model_learns_morse_offline() {
 
 #[test]
 fn hlo_model_weight_sync_roundtrip() {
+    require_hlo!();
     let dir = default_artifacts_dir();
     let mk = |mode, seed| {
         HloPotentialModel::new(
@@ -167,6 +182,7 @@ fn hlo_model_weight_sync_roundtrip() {
 
 #[test]
 fn hlo_toy_quickstart_workflow() {
+    require_hlo!();
     // The SI §S3 toy at reduced scale, over the real toy artifacts.
     let setting = AlSetting {
         result_dir: "/tmp/pal-e2e-toy".into(),

@@ -3,6 +3,7 @@
 //! round-trips, speedup-model bounds.
 
 use pal::comm::codec;
+use pal::comm::protocol;
 use pal::coordinator::buffers::{OracleBuffer, TrainBuffer};
 use pal::coordinator::selection::{
     committee_mean, committee_std, committee_std_check, CommitteeStdUtils,
@@ -50,6 +51,79 @@ fn datapoints_roundtrip_any_widths() {
         |pts| {
             let packed = codec::pack_datapoints(&pts);
             codec::unpack_datapoints(&packed) == Some(pts)
+        },
+    );
+}
+
+#[test]
+fn gen_frame_roundtrip_any_payload() {
+    forall(
+        200,
+        |g| {
+            let stop = g.bool();
+            let w = g.usize(0, 60);
+            (stop, g.vec_normal(w))
+        },
+        |(stop, data)| {
+            let enc = protocol::encode_gen(stop, &data);
+            let (s2, d2) = protocol::decode_gen(&enc);
+            s2 == stop && d2 == data.as_slice()
+        },
+    );
+}
+
+#[test]
+fn batch_frames_roundtrip_any_ids_and_shapes() {
+    // encode→decode identity for both batch frames, across the whole
+    // 48-bit id space and item lists including empty items/empty batches
+    forall(
+        200,
+        |g| {
+            let id = g.rng().next_u64() & ((1u64 << 48) - 1);
+            let n = g.usize(0, 12);
+            let items: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let w = g.usize(0, 40);
+                    g.vec_normal(w)
+                })
+                .collect();
+            (id, items)
+        },
+        |(id, items)| {
+            let req = protocol::encode_predict_batch(id, &items);
+            let resp = protocol::encode_predict_batch_result(id, &items);
+            protocol::decode_predict_batch(&req) == Some((id, items.clone()))
+                && protocol::decode_predict_batch_result(&resp) == Some((id, items))
+        },
+    );
+}
+
+#[test]
+fn batch_frame_max_size_payload_roundtrip() {
+    // one big stacked item near the id-space ceiling (property sizes stay
+    // small for speed; the boundary case is pinned here)
+    let id = (1u64 << 48) - 1;
+    let big: Vec<f32> = (0..200_000).map(|i| (i % 977) as f32 * 0.5).collect();
+    let items = vec![big, Vec::new()];
+    let enc = protocol::encode_predict_batch(id, &items);
+    assert_eq!(protocol::decode_predict_batch(&enc), Some((id, items)));
+}
+
+#[test]
+fn batch_frames_reject_truncation_anywhere() {
+    forall(
+        80,
+        |g| {
+            let n = g.usize(1, 6);
+            let w = g.size as usize + 3;
+            let items: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(w)).collect();
+            let cut = g.usize(0, 2);
+            (items, cut)
+        },
+        |(items, cut)| {
+            let enc = protocol::encode_predict_batch(1, &items);
+            // removing trailing elements must never decode successfully
+            protocol::decode_predict_batch(&enc[..enc.len().saturating_sub(cut + 1)]).is_none()
         },
     );
 }

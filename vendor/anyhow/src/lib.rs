@@ -1,0 +1,196 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the `pal` crate uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait (on `Result` and `Option`),
+//! and the `anyhow!` / `bail!` / `ensure!` macros. Error values keep a
+//! simple context chain: `Display` shows the outermost message, `{:#}`
+//! joins the whole chain with `": "`, and `Debug` renders a `Caused by:`
+//! list — the same conventions real `anyhow` users rely on.
+
+use std::fmt;
+
+/// A context-chained error. `chain[0]` is the outermost message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn wrap(mut self, context: String) -> Self {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// Add context (outermost first), mirroring `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        self.wrap(context.to_string())
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait attaching context to fallible values.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::Error::msg(format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)+) => {
+        return Err($crate::anyhow!($($tt)+).into())
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: `", stringify!($cond), "`")).into());
+        }
+    };
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($rest)+).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err()).context("loading config").unwrap_err();
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+        assert_eq!(Some(3u32).context("empty").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too large: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too large: 11");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn anyhow_result_context() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+}
