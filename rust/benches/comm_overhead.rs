@@ -5,9 +5,14 @@
 //!
 //! Measures: (a) raw bus throughput vs message size, (b) exchange-loop rate
 //! vs simulated prediction latency, (c) fixed- vs variable-size message
-//! cost (modeled as one extra header message per payload).
+//! cost (modeled as one extra header message per payload), (d) batched
+//! exchange message coalescing, (e) weight-broadcast physical copy cost:
+//! shared `Payload` fan-out vs the per-destination clone it replaced.
 //!
 //! Run: `cargo bench --bench comm_overhead`
+//!
+//! Results are also written machine-readable to `BENCH_comm.json` so the
+//! perf trajectory is tracked across PRs.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -17,8 +22,9 @@ use pal::comm::bus::{Src, World};
 use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
 use pal::coordinator::selection::CommitteeStdUtils;
 use pal::coordinator::workflow::Workflow;
+use pal::json::{obj, Value};
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
-use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+use pal::sim::workload::{SyntheticGenerator, SyntheticModel};
 
 fn bus_roundtrip(size: usize, pairs: usize) -> Duration {
     let mut w = World::new(2);
@@ -27,6 +33,7 @@ fn bus_roundtrip(size: usize, pairs: usize) -> Duration {
     let h = std::thread::spawn(move || {
         for _ in 0..pairs {
             let m = b.recv_timeout(Src::Rank(0), 1, Duration::from_secs(10)).unwrap();
+            // echo is a zero-copy relay: re-sending the shared payload
             b.send(0, 2, m.data);
         }
     });
@@ -90,13 +97,22 @@ fn exchange_rate(pred_ms: u64, iters: u64, extra_size_msg: bool) -> f64 {
     report.al_iterations as f64 / report.wall.as_secs_f64()
 }
 
-/// Run the batched exchange inference-only at one micro-batch size and
-/// report `(total bus messages, items served, wall seconds)`.
+/// One batched-exchange run: `(messages, items, wall_s, payload_bytes,
+/// bytes_copied)`.
+struct BatchedRun {
+    messages: u64,
+    items: u64,
+    wall_s: f64,
+    payload_bytes: u64,
+    bytes_copied: u64,
+}
+
+/// Run the batched exchange inference-only at one micro-batch size.
 ///
 /// `batch_size = 1` is the one-request-at-a-time relay; larger sizes
 /// coalesce. The topology is fixed (16 generators, one 2-member committee
 /// shard) so the message delta is purely the coalescing win.
-fn batched_messages(batch_size: usize, total_items: u64) -> (u64, u64, f64) {
+fn batched_messages(batch_size: usize, total_items: u64) -> BatchedRun {
     const GENS: usize = 16;
     let per_batch = batch_size.min(GENS) as u64;
     let s = AlSetting {
@@ -143,25 +159,138 @@ fn batched_messages(batch_size: usize, total_items: u64) -> (u64, u64, f64) {
             utils,
         })
         .unwrap();
-    let items = report.sum_counter("exchange", "batch_items").max(1);
-    (report.messages, items, report.wall.as_secs_f64())
+    BatchedRun {
+        messages: report.messages,
+        items: report.sum_counter("exchange", "batch_items").max(1),
+        wall_s: report.wall.as_secs_f64(),
+        payload_bytes: report.payload_bytes,
+        bytes_copied: report.bytes_copied,
+    }
+}
+
+/// Broadcast a `weight_len`-f32 vector to `ranks` destinations for `rounds`
+/// rounds, either as one shared `Payload` per round (the trainer → replica
+/// fan-out path) or as one materialized buffer per destination (the
+/// per-destination clone the shared path replaced). Returns
+/// `(bytes_copied, payload_bytes, payload_clones)` from the world stats.
+fn weight_fanout(ranks: usize, weight_len: usize, rounds: usize, shared: bool) -> (u64, u64, u64) {
+    let mut w = World::new(ranks + 1);
+    let stats = w.stats();
+    let mut eps = w.endpoints();
+    let root = eps.remove(0);
+    let dsts: Vec<usize> = (1..=ranks).collect();
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|mut e| {
+            std::thread::spawn(move || {
+                let mut got = 0usize;
+                while got < rounds {
+                    match e.recv_timeout(Src::Rank(0), 31, Duration::from_secs(10)) {
+                        Ok(_) => got += 1,
+                        Err(_) => break,
+                    }
+                }
+            })
+        })
+        .collect();
+    let weights = vec![0.5f32; weight_len];
+    for _ in 0..rounds {
+        if shared {
+            // one ingest copy, then a refcount bump per destination
+            root.bcast(&dsts, 31, weights.clone());
+        } else {
+            // old transport: one materialized buffer per destination
+            for &d in &dsts {
+                root.send(d, 31, weights.clone());
+            }
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    (stats.bytes_copied(), stats.payload_bytes(), stats.payload_clones())
+}
+
+/// End-to-end twin of [`weight_fanout`]: a short batched workflow whose
+/// trainers pad their weight vectors to `weight_len`
+/// (`SyntheticModel::with_weight_padding`), so the trainer → replica weight
+/// sync crosses the real transport. Returns `(payload_bytes, bytes_copied,
+/// weight_updates)` — with shared payloads the copied fraction stays near
+/// `1 / replicas_per_trainer` for the weight traffic.
+fn weight_fanout_e2e(weight_len: usize) -> (u64, u64, u64) {
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-wfan".into(),
+        gene_process: 4,
+        pred_process: 8,
+        ml_process: 2,
+        orcl_process: 0,
+        committee_size: Some(2),
+        exchange_mode: ExchangeMode::Batched,
+        batch: BatchSetting {
+            max_size: 4,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        },
+        stop: StopCriteria {
+            max_iterations: Some(8),
+            max_labels: None,
+            max_wall: Some(Duration::from_secs(30)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let generators = (0..4usize)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(8, Duration::ZERO, u64::MAX, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _m: usize| {
+        Box::new(
+            SyntheticModel::new(8, 8, Duration::ZERO, Duration::ZERO, 1, mode)
+                .with_weight_padding(weight_len),
+        ) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(CommitteeStdUtils::new(f32::MAX, 0)) as Box<dyn Utils>);
+    let report = Workflow::new(s)
+        .run(KernelSet {
+            generators,
+            oracles: Vec::<Box<dyn FnOnce() -> Box<dyn Oracle> + Send>>::new(),
+            model,
+            utils,
+        })
+        .unwrap();
+    (
+        report.payload_bytes,
+        report.bytes_copied,
+        report.sum_counter("prediction", "weight_updates"),
+    )
 }
 
 fn main() {
+    let mut json_sections: Vec<(&str, Value)> = vec![("bench", Value::Str("comm_overhead".into()))];
+
     // ---- (a) raw bus round-trip vs payload size ----
     let mut rep = Report::new("comm bus — round-trip latency vs payload (1-D f32 arrays)");
+    let mut roundtrip_rows = Vec::new();
     for size in [4usize, 64, 1024, 16 * 1024, 256 * 1024] {
         let rt = bench(1, 5, || bus_roundtrip(size, 200)).mean();
-        rep.push(
-            Row::new(format!("{size} f32"))
-                .ms("roundtrip", rt)
-                .f("MB_per_s", (size as f64 * 4.0 * 2.0) / rt.as_secs_f64() / 1e6),
-        );
+        let mb_per_s = (size as f64 * 4.0 * 2.0) / rt.as_secs_f64() / 1e6;
+        rep.push(Row::new(format!("{size} f32")).ms("roundtrip", rt).f("MB_per_s", mb_per_s));
+        roundtrip_rows.push(obj(vec![
+            ("size_f32", Value::Num(size as f64)),
+            ("roundtrip_ms", Value::Num(rt.as_secs_f64() * 1e3)),
+            ("mb_per_s", Value::Num(mb_per_s)),
+        ]));
     }
     rep.print();
+    json_sections.push(("bus_roundtrip", Value::Array(roundtrip_rows)));
 
     // ---- (b) exchange-loop rate vs prediction latency (§4 claim) ----
     let mut rep2 = Report::new("§4 — exploration rate vs prediction latency (8 generators)");
+    let mut rate_rows = Vec::new();
     for pred_ms in [0u64, 1, 5, 10, 50] {
         let rate = exchange_rate(pred_ms, 60, false);
         rep2.push(
@@ -169,8 +298,13 @@ fn main() {
                 .f("iters_per_s", rate)
                 .f("pred_bound_iters_per_s", if pred_ms == 0 { f64::NAN } else { 1000.0 / pred_ms as f64 }),
         );
+        rate_rows.push(obj(vec![
+            ("pred_ms", Value::Num(pred_ms as f64)),
+            ("iters_per_s", Value::Num(rate)),
+        ]));
     }
     rep2.print();
+    json_sections.push(("exchange_rate", Value::Array(rate_rows)));
     println!("(paper: below ~10 ms inference the communication becomes the bottleneck —");
     println!(" visible here as iters/s flattening away from the prediction-bound line)");
 
@@ -181,6 +315,13 @@ fn main() {
     rep3.push(Row::new("fixed").f("iters_per_s", fixed));
     rep3.push(Row::new("variable").f("iters_per_s", varsize).f("overhead_pct", (fixed / varsize - 1.0) * 100.0));
     rep3.print();
+    json_sections.push((
+        "fixed_vs_variable",
+        obj(vec![
+            ("fixed_iters_per_s", Value::Num(fixed)),
+            ("variable_iters_per_s", Value::Num(varsize)),
+        ]),
+    ));
 
     // ---- (d) batched exchange: bus messages per AL iteration vs batch size ----
     // One AL iteration = one step of every generator (16 items). batch=1 is
@@ -192,23 +333,104 @@ fn main() {
         "batched exchange — bus messages per AL iteration (16 gens, 2-member shard)",
     );
     let mut per_iter_at = std::collections::BTreeMap::new();
+    let mut batched_rows = Vec::new();
     for batch in [1usize, 2, 4, 8, 16] {
-        let (messages, items, wall) = batched_messages(batch, total_items);
-        let al_iters = items as f64 / GENS_D;
-        let per_iter = messages as f64 / al_iters;
+        let r = batched_messages(batch, total_items);
+        let al_iters = r.items as f64 / GENS_D;
+        let per_iter = r.messages as f64 / al_iters;
         per_iter_at.insert(batch, per_iter);
         rep4.push(
             Row::new(format!("batch={batch}"))
                 .f("msgs_per_al_iter", per_iter)
-                .f("msgs_per_item", messages as f64 / items as f64)
-                .f("items_per_s", items as f64 / wall),
+                .f("msgs_per_item", r.messages as f64 / r.items as f64)
+                .f("items_per_s", r.items as f64 / r.wall_s)
+                .f("bytes_copied_frac", r.bytes_copied as f64 / r.payload_bytes as f64),
         );
+        batched_rows.push(obj(vec![
+            ("batch", Value::Num(batch as f64)),
+            ("messages", Value::Num(r.messages as f64)),
+            ("items", Value::Num(r.items as f64)),
+            ("items_per_s", Value::Num(r.items as f64 / r.wall_s)),
+            ("wall_s", Value::Num(r.wall_s)),
+            ("payload_bytes", Value::Num(r.payload_bytes as f64)),
+            ("bytes_copied", Value::Num(r.bytes_copied as f64)),
+        ]));
     }
     rep4.print();
+    json_sections.push(("batched", Value::Array(batched_rows)));
     let reduction = per_iter_at[&1] / per_iter_at[&8];
     println!(
         "(batch=8 sends {reduction:.2}x fewer bus messages per AL iteration than the \
          unbatched relay{})",
         if reduction >= 2.0 { " — >= 2x target met" } else { " — BELOW the 2x target" }
     );
+
+    // ---- (e) weight broadcast: shared Payload vs per-destination clone ----
+    // The trainer → replica fan-out at 8 prediction ranks; physical copy
+    // volume should drop by the destination count (8x), logical traffic is
+    // identical by construction.
+    const FAN_RANKS: usize = 8;
+    const WEIGHT_LEN: usize = 100_000;
+    const FAN_ROUNDS: usize = 20;
+    let (copied_clone, logical_clone, clones_clone) =
+        weight_fanout(FAN_RANKS, WEIGHT_LEN, FAN_ROUNDS, false);
+    let (copied_shared, logical_shared, clones_shared) =
+        weight_fanout(FAN_RANKS, WEIGHT_LEN, FAN_ROUNDS, true);
+    let copy_reduction = copied_clone as f64 / copied_shared.max(1) as f64;
+    let mut rep5 = Report::new(format!(
+        "weight broadcast — physical copies at {FAN_RANKS} prediction ranks \
+         ({WEIGHT_LEN} f32 weights, {FAN_ROUNDS} rounds)"
+    ));
+    rep5.push(
+        Row::new("per-dest clone (old)")
+            .field("bytes_copied", copied_clone)
+            .field("payload_bytes", logical_clone)
+            .field("payload_clones", clones_clone),
+    );
+    rep5.push(
+        Row::new("shared Payload (new)")
+            .field("bytes_copied", copied_shared)
+            .field("payload_bytes", logical_shared)
+            .field("payload_clones", clones_shared)
+            .f("copy_reduction_x", copy_reduction),
+    );
+    // end-to-end confirmation: the same fan-out through a real workflow
+    // (2 trainers × 4 shard replicas, padded weights) — the physical copy
+    // fraction of the logical traffic collapses once payloads are shared
+    let (e2e_logical, e2e_copied, e2e_updates) = weight_fanout_e2e(WEIGHT_LEN);
+    rep5.push(
+        Row::new("e2e workflow (8 preds, 2 trainers)")
+            .field("bytes_copied", e2e_copied)
+            .field("payload_bytes", e2e_logical)
+            .field("weight_updates", e2e_updates)
+            .f("copied_frac", e2e_copied as f64 / e2e_logical.max(1) as f64),
+    );
+    rep5.print();
+    println!(
+        "(shared fan-out copies {copy_reduction:.2}x fewer bytes than per-destination \
+         clones{})",
+        if copy_reduction >= 4.0 { " — >= 4x target met" } else { " — BELOW the 4x target" }
+    );
+    json_sections.push((
+        "weight_broadcast",
+        obj(vec![
+            ("ranks", Value::Num(FAN_RANKS as f64)),
+            ("weight_len", Value::Num(WEIGHT_LEN as f64)),
+            ("rounds", Value::Num(FAN_ROUNDS as f64)),
+            ("bytes_copied_per_dest_clone", Value::Num(copied_clone as f64)),
+            ("bytes_copied_shared", Value::Num(copied_shared as f64)),
+            ("payload_bytes_logical", Value::Num(logical_shared as f64)),
+            ("copy_reduction_x", Value::Num(copy_reduction)),
+            ("target_met", Value::Bool(copy_reduction >= 4.0)),
+            ("e2e_payload_bytes", Value::Num(e2e_logical as f64)),
+            ("e2e_bytes_copied", Value::Num(e2e_copied as f64)),
+            ("e2e_weight_updates", Value::Num(e2e_updates as f64)),
+        ]),
+    ));
+
+    let out = pal::json::to_string(&obj(json_sections));
+    match std::fs::write("BENCH_comm.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_comm.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_comm.json: {e}"),
+    }
 }

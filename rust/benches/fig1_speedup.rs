@@ -4,11 +4,15 @@
 //! speedup, across three bottleneck regimes.
 //!
 //! Run: `cargo bench --bench fig1_speedup`
+//!
+//! Results are also written machine-readable to `BENCH_speedup.json` so the
+//! perf trajectory is tracked across PRs.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use pal::bench_util::{Report, Row};
+use pal::json::{obj, Value};
 use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
 use pal::coordinator::selection::SelectAllUtils;
 use pal::coordinator::workflow::Workflow;
@@ -69,7 +73,7 @@ fn serial_run(r: &Regime) -> Duration {
     w.run().wall
 }
 
-fn parallel_run(r: &Regime) -> Duration {
+fn parallel_run(r: &Regime) -> pal::telemetry::RunReport {
     let labels = ITERS * GENS as u64;
     // equal work: the serial baseline trains r.epochs per iteration per
     // model; require the same total epochs before stopping
@@ -128,7 +132,7 @@ fn parallel_run(r: &Regime) -> Duration {
     let report = Workflow::new(s)
         .run(KernelSet { generators, oracles, model, utils })
         .unwrap();
-    report.wall
+    report
 }
 
 // ---------------------------------------------------------------------------
@@ -234,9 +238,11 @@ fn main() {
     let mut rep = Report::new(
         "Fig. 1 — serial vs parallel AL wall time (same kernels, same label budget)",
     );
+    let mut regime_rows = Vec::new();
     for r in &regimes {
         let ts = serial_run(r);
-        let tp = parallel_run(r);
+        let preport = parallel_run(r);
+        let tp = preport.wall;
         // analytic lower bound from the SI §S2 model
         let w = Workload {
             t_oracle: r.oracle_ms as f64 / 1e3,
@@ -252,6 +258,16 @@ fn main() {
                 .f("speedup", ts.as_secs_f64() / tp.as_secs_f64())
                 .f("analytic_lower_bound", w.speedup()),
         );
+        regime_rows.push(obj(vec![
+            ("regime", Value::Str(r.name.into())),
+            ("serial_s", Value::Num(ts.as_secs_f64())),
+            ("parallel_s", Value::Num(tp.as_secs_f64())),
+            ("speedup", Value::Num(ts.as_secs_f64() / tp.as_secs_f64())),
+            ("analytic_lower_bound", Value::Num(w.speedup())),
+            ("messages", Value::Num(preport.messages as f64)),
+            ("payload_bytes", Value::Num(preport.payload_bytes as f64)),
+            ("bytes_copied", Value::Num(preport.bytes_copied as f64)),
+        ]));
     }
     rep.print();
     println!("(paper claim: the parallel workflow overlaps labeling/training/generation;");
@@ -263,6 +279,7 @@ fn main() {
          1 ms + 1 ms/item inference)",
     );
     let mut first_batched = None;
+    let mut scaling_rows = Vec::new();
     for preds in [2usize, 4, 8] {
         let lockstep = lockstep_items_per_s(preds, 40);
         let batched = batched_items_per_s(preds, 320);
@@ -273,8 +290,24 @@ fn main() {
                 .f("batched_items_per_s", batched)
                 .f("batched_scaling_vs_pred2", batched / base),
         );
+        scaling_rows.push(obj(vec![
+            ("pred_ranks", Value::Num(preds as f64)),
+            ("lockstep_items_per_s", Value::Num(lockstep)),
+            ("batched_items_per_s", Value::Num(batched)),
+            ("batched_scaling_vs_pred2", Value::Num(batched / base)),
+        ]));
     }
     rep2.print();
     println!("(lockstep broadcasts every input to every rank: throughput is flat in P;");
     println!(" the batched exchange routes batches across P/2 committee shards and scales)");
+
+    let out = pal::json::to_string(&obj(vec![
+        ("bench", Value::Str("fig1_speedup".into())),
+        ("regimes", Value::Array(regime_rows)),
+        ("prediction_scaling", Value::Array(scaling_rows)),
+    ]));
+    match std::fs::write("BENCH_speedup.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_speedup.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_speedup.json: {e}"),
+    }
 }

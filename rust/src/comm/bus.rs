@@ -1,19 +1,164 @@
 //! Rank endpoints, tagged matching, collectives, and injectable latency.
+//!
+//! ## Zero-copy payloads
+//!
+//! Every message carries a [`Payload`]: an `Arc<[f32]>`-backed, cheaply
+//! clonable buffer. Sending a `Payload` (or `&Payload`) is a refcount bump —
+//! the transport never copies the data. Sending owned/borrowed `f32` data
+//! (`Vec<f32>`, `&[f32]`) converts it into shared storage exactly once at
+//! the bus boundary; collectives ([`Endpoint::bcast`]) perform that
+//! conversion once and then share, so fan-out cost is independent of the
+//! destination count. [`WorldStats`] separates the *logical* traffic volume
+//! (`payload_bytes`, which scales with destinations) from the *physical*
+//! copy volume (`bytes_copied` / `payload_clones`, which does not).
+//!
+//! ## Indexed mailboxes
+//!
+//! Received-but-unmatched messages are held in per-tag mailboxes
+//! (`HashMap<tag, VecDeque>`), so `recv(src, tag)` inspects only that tag's
+//! queue instead of rescanning all queued traffic — O(1) amortized per
+//! message for the common exact-tag case. Cross-tag arrival order (needed by
+//! [`Endpoint::recv_timeout_tags`]) is preserved with a per-endpoint
+//! sequence stamp assigned at mailbox insertion.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// A shared, immutable message payload (`Arc<[f32]>`).
+///
+/// Cloning is a refcount bump; all reads go through `Deref<Target = [f32]>`.
+/// Construction from owned or borrowed data copies once into shared storage
+/// — after that the buffer can fan out to any number of destinations (or be
+/// re-sent on a relay hop) without touching the heap. This is the seam where
+/// a real shared-memory or RDMA transport would plug in: everything above
+/// the bus already treats payloads as immutable shared buffers.
+#[derive(Debug, Clone)]
+pub struct Payload(Arc<[f32]>);
+
+impl Payload {
+    /// An empty payload (control messages).
+    pub fn empty() -> Self {
+        Payload(Arc::from(Vec::new()))
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// Number of other live handles sharing this buffer (diagnostics).
+    pub fn shared_handles(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+}
+
+impl From<Vec<f32>> for Payload {
+    fn from(v: Vec<f32>) -> Self {
+        Payload(Arc::from(v))
+    }
+}
+
+impl From<&[f32]> for Payload {
+    fn from(s: &[f32]) -> Self {
+        Payload(Arc::from(s))
+    }
+}
+
+impl Deref for Payload {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl AsRef<[f32]> for Payload {
+    fn as_ref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Self) -> bool {
+        self.0[..] == other.0[..]
+    }
+}
+
+impl PartialEq<[f32]> for Payload {
+    fn eq(&self, other: &[f32]) -> bool {
+        &self.0[..] == other
+    }
+}
+
+impl PartialEq<Vec<f32>> for Payload {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        &self.0[..] == other.as_slice()
+    }
+}
+
+impl PartialEq<&[f32]> for Payload {
+    fn eq(&self, other: &&[f32]) -> bool {
+        &self.0[..] == *other
+    }
+}
+
+/// Conversion into a [`Payload`] at the bus boundary, reporting whether the
+/// conversion had to copy data into fresh shared storage. Already-shared
+/// payloads convert for free; owned/borrowed data costs exactly one copy,
+/// charged to [`WorldStats::bytes_copied`] by the sending endpoint.
+pub trait IntoPayload {
+    fn into_payload(self) -> (Payload, bool);
+}
+
+impl IntoPayload for Payload {
+    fn into_payload(self) -> (Payload, bool) {
+        (self, false)
+    }
+}
+
+impl IntoPayload for &Payload {
+    fn into_payload(self) -> (Payload, bool) {
+        (self.clone(), false)
+    }
+}
+
+impl IntoPayload for Vec<f32> {
+    fn into_payload(self) -> (Payload, bool) {
+        (Payload::from(self), true)
+    }
+}
+
+impl IntoPayload for &[f32] {
+    fn into_payload(self) -> (Payload, bool) {
+        (Payload::from(self), true)
+    }
+}
+
+impl IntoPayload for &Vec<f32> {
+    fn into_payload(self) -> (Payload, bool) {
+        (Payload::from(self.as_slice()), true)
+    }
+}
+
+impl<const N: usize> IntoPayload for &[f32; N] {
+    fn into_payload(self) -> (Payload, bool) {
+        (Payload::from(&self[..]), true)
+    }
+}
 
 /// A tagged message between ranks.
 #[derive(Debug, Clone)]
 pub struct Message {
     pub src: usize,
     pub tag: u32,
-    pub data: Vec<f32>,
+    pub data: Payload,
     /// Simulated arrival time (send time + world latency).
     ready_at: Instant,
+    /// Mailbox arrival stamp (assigned by the receiving endpoint) so
+    /// multi-tag receives preserve cross-tag arrival order.
+    seq: u64,
 }
 
 /// Error returned by receive operations.
@@ -36,18 +181,37 @@ impl std::fmt::Display for RecvError {
 impl std::error::Error for RecvError {}
 
 /// Aggregate transport statistics (for the comm-overhead bench).
+///
+/// `messages`/`payload_f32s` count *logical* traffic: every destination of a
+/// broadcast counts its full payload. `payload_clones`/`bytes_copied`
+/// count *physical* work: payload buffers the transport had to materialize.
+/// A broadcast of one shared [`Payload`] to `n` ranks is `n` messages and
+/// `n × len × 4` logical bytes, but zero clones and zero copied bytes.
 #[derive(Debug, Default)]
 pub struct WorldStats {
     pub messages: AtomicU64,
     pub payload_f32s: AtomicU64,
+    /// Payload buffers materialized (deep-copied) by the transport.
+    pub payload_clones: AtomicU64,
+    /// Bytes physically copied into shared storage by the transport.
+    pub bytes_copied: AtomicU64,
 }
 
 impl WorldStats {
     pub fn messages(&self) -> u64 {
         self.messages.load(Ordering::Relaxed)
     }
+    /// Logical payload volume: bytes delivered, counted per destination.
     pub fn payload_bytes(&self) -> u64 {
         self.payload_f32s.load(Ordering::Relaxed) * 4
+    }
+    /// Physical copy count: payload buffers the transport materialized.
+    pub fn payload_clones(&self) -> u64 {
+        self.payload_clones.load(Ordering::Relaxed)
+    }
+    /// Physical copy volume in bytes (0 for refcount-bump sends).
+    pub fn bytes_copied(&self) -> u64 {
+        self.bytes_copied.load(Ordering::Relaxed)
     }
 }
 
@@ -99,7 +263,8 @@ impl World {
             rank,
             rx,
             senders,
-            pending: VecDeque::new(),
+            pending: HashMap::new(),
+            next_seq: 0,
             latency: self.latency,
             stats: Arc::clone(&self.stats),
         }
@@ -118,8 +283,11 @@ pub struct Endpoint {
     /// Senders to every rank; the slot for our own rank is None so that
     /// channel disconnection (all peers + World dropped) is observable.
     senders: Vec<Option<Sender<Message>>>,
-    /// Received-but-unmatched messages (MPI-style out-of-order matching).
-    pending: VecDeque<Message>,
+    /// Received-but-unmatched messages, indexed by tag (MPI-style
+    /// out-of-order matching without rescanning unrelated traffic).
+    pending: HashMap<u32, VecDeque<Message>>,
+    /// Mailbox arrival stamp source (see [`Message::seq`]).
+    next_seq: u64,
     latency: Duration,
     stats: Arc<WorldStats>,
 }
@@ -149,9 +317,15 @@ impl Endpoint {
         self.senders.len()
     }
 
-    /// Point-to-point send. Never blocks (channels are unbounded); the
-    /// injected latency delays *visibility*, not the sender.
-    pub fn send(&self, dst: usize, tag: u32, data: Vec<f32>) {
+    fn note_copy(&self, copied: bool, len: usize) {
+        if copied {
+            self.stats.payload_clones.fetch_add(1, Ordering::Relaxed);
+            self.stats.bytes_copied.fetch_add(len as u64 * 4, Ordering::Relaxed);
+        }
+    }
+
+    /// Ship an already-shared payload to `dst`: refcount bump, no copy.
+    fn send_payload(&self, dst: usize, tag: u32, data: Payload) {
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.payload_f32s.fetch_add(data.len() as u64, Ordering::Relaxed);
         // A send can fail only if the destination endpoint was dropped during
@@ -163,22 +337,50 @@ impl Endpoint {
                 tag,
                 data,
                 ready_at: Instant::now() + self.latency,
+                seq: 0,
             });
         }
     }
 
-    /// Broadcast the same payload to every rank in `dsts`.
-    pub fn bcast(&self, dsts: &[usize], tag: u32, data: &[f32]) {
+    /// Point-to-point send. Never blocks (channels are unbounded); the
+    /// injected latency delays *visibility*, not the sender. Accepts
+    /// anything [`IntoPayload`]: pass a [`Payload`] (or `&Payload`) for a
+    /// zero-copy send, or owned/borrowed data for a one-copy ingest.
+    pub fn send<P: IntoPayload>(&self, dst: usize, tag: u32, data: P) {
+        let (payload, copied) = data.into_payload();
+        self.note_copy(copied, payload.len());
+        self.send_payload(dst, tag, payload);
+    }
+
+    /// Broadcast the same payload to every rank in `dsts`. The payload is
+    /// converted to shared storage at most once; each destination then gets
+    /// a refcount bump, so physical copy cost is independent of `dsts.len()`.
+    pub fn bcast<P: IntoPayload>(&self, dsts: &[usize], tag: u32, data: P) {
+        let (payload, copied) = data.into_payload();
+        self.note_copy(copied, payload.len());
         for &d in dsts {
-            self.send(d, tag, data.to_vec());
+            self.send_payload(d, tag, payload.clone());
         }
     }
 
     /// Scatter one payload per destination (lengths may differ).
-    pub fn scatter(&self, dsts: &[usize], tag: u32, payloads: Vec<Vec<f32>>) {
+    pub fn scatter<P: IntoPayload>(&self, dsts: &[usize], tag: u32, payloads: Vec<P>) {
         assert_eq!(dsts.len(), payloads.len(), "scatter arity mismatch");
         for (&d, p) in dsts.iter().zip(payloads) {
             self.send(d, tag, p);
+        }
+    }
+
+    /// Stamp and file an arrived message into its tag's mailbox.
+    fn enqueue(&mut self, mut m: Message) {
+        m.seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.entry(m.tag).or_default().push_back(m);
+    }
+
+    fn drain_channel(&mut self) {
+        while let Ok(m) = self.rx.try_recv() {
+            self.enqueue(m);
         }
     }
 
@@ -186,13 +388,46 @@ impl Endpoint {
         self.pop_pending_tags(src, &[tag])
     }
 
+    /// Pop the earliest-arrived ready message matching `src` and any of
+    /// `tags`. Only the named tags' mailboxes are inspected; the earliest
+    /// candidate across them (by arrival stamp) wins, preserving the
+    /// first-available semantics of the old single-queue matcher.
     fn pop_pending_tags(&mut self, src: Src, tags: &[u32]) -> Option<Message> {
         let now = Instant::now();
-        let idx = self
-            .pending
-            .iter()
-            .position(|m| tags.contains(&m.tag) && src.matches(m.src) && m.ready_at <= now)?;
-        self.pending.remove(idx)
+        let mut best: Option<(u64, u32, usize)> = None;
+        for &t in tags {
+            if let Some(q) = self.pending.get(&t) {
+                if let Some((idx, m)) = q
+                    .iter()
+                    .enumerate()
+                    .find(|(_, m)| src.matches(m.src) && m.ready_at <= now)
+                {
+                    let earlier = match best {
+                        None => true,
+                        Some((s, _, _)) => m.seq < s,
+                    };
+                    if earlier {
+                        best = Some((m.seq, t, idx));
+                    }
+                }
+            }
+        }
+        let (_, tag, idx) = best?;
+        let q = self.pending.get_mut(&tag).expect("candidate mailbox exists");
+        let m = q.remove(idx);
+        if q.is_empty() {
+            self.pending.remove(&tag);
+        }
+        m
+    }
+
+    /// Whether any message matching `src` over `tags` exists in the
+    /// mailboxes (ready or not; used for arrival-time waits).
+    fn pending_matches(&self, src: Src, tags: &[u32]) -> bool {
+        tags.iter()
+            .filter_map(|t| self.pending.get(t))
+            .flat_map(|q| q.iter())
+            .any(|m| src.matches(m.src))
     }
 
     /// Non-blocking check whether a matching message is available
@@ -200,14 +435,9 @@ impl Endpoint {
     pub fn probe(&mut self, src: Src, tag: u32) -> bool {
         self.drain_channel();
         let now = Instant::now();
-        self.pending
-            .iter()
-            .any(|m| m.tag == tag && src.matches(m.src) && m.ready_at <= now)
-    }
-
-    fn drain_channel(&mut self) {
-        while let Ok(m) = self.rx.try_recv() {
-            self.pending.push_back(m);
+        match self.pending.get(&tag) {
+            Some(q) => q.iter().any(|m| src.matches(m.src) && m.ready_at <= now),
+            None => false,
         }
     }
 
@@ -252,10 +482,11 @@ impl Endpoint {
             }
             // If a matching message exists but its simulated arrival is in
             // the future, sleep until it is ready (bounded by the deadline).
-            let next_ready = self
-                .pending
+            let next_ready = tags
                 .iter()
-                .filter(|m| tags.contains(&m.tag) && src.matches(m.src))
+                .filter_map(|t| self.pending.get(t))
+                .flat_map(|q| q.iter())
+                .filter(|m| src.matches(m.src))
                 .map(|m| m.ready_at)
                 .min();
             let now = Instant::now();
@@ -265,15 +496,11 @@ impl Endpoint {
             let wait_until = next_ready.unwrap_or(deadline).min(deadline);
             if wait_until > now {
                 match self.rx.recv_timeout(wait_until - now) {
-                    Ok(m) => self.pending.push_back(m),
+                    Ok(m) => self.enqueue(m),
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => {
                         // Drain pending before giving up.
-                        if self
-                            .pending
-                            .iter()
-                            .any(|m| tags.contains(&m.tag) && src.matches(m.src))
-                        {
+                        if self.pending_matches(src, tags) {
                             continue;
                         }
                         return Err(RecvError::Disconnected);
@@ -301,35 +528,55 @@ impl Endpoint {
 
     /// Gather one message from every rank in `srcs` (any arrival order),
     /// returning payloads ordered like `srcs`.
+    ///
+    /// A second message from an already-filled source (the next round's
+    /// traffic arriving early) is parked in a local deferred list and
+    /// reinjected at the *front* of the tag's mailbox once the gather
+    /// completes — per-(src, tag) FIFO is preserved because anything still
+    /// queued arrived later. The match loop therefore never re-pops its own
+    /// requeue, and needs no anti-spin sleep on the hot relay path.
     pub fn gather(
         &mut self,
         srcs: &[usize],
         tag: u32,
         timeout: Duration,
-    ) -> Result<Vec<Vec<f32>>, RecvError> {
+    ) -> Result<Vec<Payload>, RecvError> {
         let deadline = Instant::now() + timeout;
-        let mut slots: Vec<Option<Vec<f32>>> = vec![None; srcs.len()];
+        let mut slots: Vec<Option<Payload>> = vec![None; srcs.len()];
         let mut remaining = srcs.len();
-        while remaining > 0 {
+        let mut deferred: Vec<Message> = Vec::new();
+        let result = loop {
+            if remaining == 0 {
+                break Ok(());
+            }
             let now = Instant::now();
             if now >= deadline {
-                return Err(RecvError::Timeout);
+                break Err(RecvError::Timeout);
             }
-            let m = self.recv_timeout(Src::Any, tag, deadline - now)?;
-            if let Some(i) = srcs.iter().position(|&s| s == m.src) {
-                if slots[i].is_none() {
-                    slots[i] = Some(m.data);
-                    remaining -= 1;
-                } else {
-                    // Duplicate from the same src (next iteration's message
-                    // arriving early) — keep it for the next gather.
-                    self.pending.push_back(m);
-                    // Avoid busy-spinning on our own requeued message.
-                    std::thread::sleep(Duration::from_micros(50));
+            match self.recv_timeout(Src::Any, tag, deadline - now) {
+                Ok(m) => {
+                    if let Some(i) = srcs.iter().position(|&s| s == m.src) {
+                        if slots[i].is_none() {
+                            slots[i] = Some(m.data);
+                            remaining -= 1;
+                        } else {
+                            deferred.push(m);
+                        }
+                    }
                 }
+                Err(e) => break Err(e),
+            }
+        };
+        if !deferred.is_empty() {
+            // Oldest deferred message ends up frontmost: they were popped
+            // earliest-first, so reinserting in reverse restores seq order.
+            let q = self.pending.entry(tag).or_default();
+            for m in deferred.into_iter().rev() {
+                q.push_front(m);
             }
         }
-        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+        result?;
+        Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
     }
 }
 
@@ -460,6 +707,29 @@ mod tests {
     }
 
     #[test]
+    fn gather_defers_duplicates_without_reordering() {
+        let mut w = World::new(3);
+        let mut eps = w.endpoints();
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // rank 1 races two rounds ahead before rank 2 sends round 1
+        e1.send(0, 9, vec![1.0]); // round 1
+        e1.send(0, 9, vec![10.0]); // round 2, early
+        e1.send(0, 9, vec![100.0]); // round 3, early
+        e2.send(0, 9, vec![2.0]); // round 1
+        let r1 = e0.gather(&[1, 2], 9, Duration::from_secs(1)).unwrap();
+        assert_eq!(r1, vec![vec![1.0], vec![2.0]]);
+        // deferred messages replay in FIFO order on later gathers
+        e2.send(0, 9, vec![20.0]);
+        let r2 = e0.gather(&[1, 2], 9, Duration::from_secs(1)).unwrap();
+        assert_eq!(r2, vec![vec![10.0], vec![20.0]]);
+        e2.send(0, 9, vec![200.0]);
+        let r3 = e0.gather(&[1, 2], 9, Duration::from_secs(1)).unwrap();
+        assert_eq!(r3, vec![vec![100.0], vec![200.0]]);
+    }
+
+    #[test]
     fn scatter_delivers_distinct_payloads() {
         let mut w = World::new(3);
         let mut eps = w.endpoints();
@@ -522,6 +792,77 @@ mod tests {
         a.send(1, 1, vec![0.0; 5]);
         assert_eq!(stats.messages(), 2);
         assert_eq!(stats.payload_bytes(), 60);
+        // Vec sends ingest into shared storage: one physical copy each
+        assert_eq!(stats.payload_clones(), 2);
+        assert_eq!(stats.bytes_copied(), 60);
+    }
+
+    #[test]
+    fn bcast_of_shared_payload_is_zero_copy() {
+        const DSTS: usize = 8;
+        const LEN: usize = 1024;
+        let mut w = World::new(DSTS + 1);
+        let stats = w.stats();
+        let mut eps = w.endpoints();
+        let root = eps.remove(0);
+        let dsts: Vec<usize> = (1..=DSTS).collect();
+        let weights = Payload::from(vec![0.5f32; LEN]);
+        root.bcast(&dsts, 31, &weights);
+        // logical traffic scales with destination count ...
+        assert_eq!(stats.messages(), DSTS as u64);
+        assert_eq!(stats.payload_bytes(), (DSTS * LEN * 4) as u64);
+        // ... physical copies do not happen at all
+        assert_eq!(stats.payload_clones(), 0);
+        assert_eq!(stats.bytes_copied(), 0);
+        for e in eps.iter_mut() {
+            let m = e.recv_timeout(Src::Rank(0), 31, Duration::from_secs(1)).unwrap();
+            assert_eq!(m.data.len(), LEN);
+        }
+        // the old per-destination-clone pattern pays one copy per rank
+        for &d in &dsts {
+            root.send(d, 31, vec![0.5f32; LEN]);
+        }
+        assert_eq!(stats.payload_clones(), DSTS as u64);
+        assert_eq!(stats.bytes_copied(), (DSTS * LEN * 4) as u64);
+    }
+
+    #[test]
+    fn bcast_bytes_copied_flat_in_destination_count() {
+        const LEN: usize = 256;
+        let mut copied = Vec::new();
+        let mut logical = Vec::new();
+        for n in [2usize, 8] {
+            let mut w = World::new(n + 1);
+            let stats = w.stats();
+            let mut eps = w.endpoints();
+            let root = eps.remove(0);
+            let dsts: Vec<usize> = (1..=n).collect();
+            // owned Vec: exactly one ingest copy regardless of fan-out
+            root.bcast(&dsts, 6, vec![0.25f32; LEN]);
+            copied.push(stats.bytes_copied());
+            logical.push(stats.payload_bytes());
+            assert_eq!(stats.payload_clones(), 1);
+        }
+        assert_eq!(copied[0], copied[1], "physical copies must not scale with fan-out");
+        assert_eq!(copied[0], (LEN * 4) as u64);
+        assert_eq!(logical[1], 4 * logical[0], "logical bytes scale 2 -> 8 ranks");
+    }
+
+    #[test]
+    fn payload_relay_resend_is_zero_copy() {
+        let mut w = World::new(3);
+        let stats = w.stats();
+        let mut eps = w.endpoints();
+        let mut e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e0.send(1, 1, vec![1.0, 2.0, 3.0]); // one ingest copy
+        let m = e1.recv_timeout(Src::Rank(0), 1, Duration::from_secs(1)).unwrap();
+        e1.send(2, 1, m.data); // relay hop: refcount bump only
+        let m2 = e2.recv_timeout(Src::Rank(1), 1, Duration::from_secs(1)).unwrap();
+        assert_eq!(m2.data, vec![1.0, 2.0, 3.0]);
+        assert_eq!(stats.payload_clones(), 1);
+        assert_eq!(stats.bytes_copied(), 12);
     }
 
     #[test]

@@ -12,33 +12,91 @@
 //! here; [`pack`] asserts the bound. This mirrors the paper's
 //! `fixed_size_data=False` mode where "sizes of data are passed first for
 //! every MPI communication" (§S3), just fused into one message.
+//!
+//! ## Allocation discipline
+//!
+//! The borrowed view API ([`unpack_views`], [`unpack_datapoint_views`])
+//! splits a packed payload into subslices of the original buffer — no
+//! per-part allocation — and is the single parse path: the owned variants
+//! ([`unpack`], [`unpack_datapoints`]) are thin copies on top, so the two
+//! accept and reject exactly the same inputs. On the encode side,
+//! [`pack_into`] appends to a caller-owned buffer and [`PackBuffer`] wraps
+//! one for reuse, so hot relay loops re-encode every round without a fresh
+//! heap allocation.
 
 /// Maximum exactly-representable length in an f32 header.
 pub const MAX_LEN: usize = 1 << 24;
 
-/// Pack a list of arrays into one flat payload.
-pub fn pack(parts: &[&[f32]]) -> Vec<f32> {
+/// Append the packed encoding of `parts` to `out` (no clear; composable
+/// with frame headers). Accepts any slice-of-slice-like list:
+/// `&[&[f32]]`, `&[Vec<f32>]`, `&[Payload]`, ...
+pub fn pack_into<S: AsRef<[f32]>>(parts: &[S], out: &mut Vec<f32>) {
     assert!(parts.len() < MAX_LEN, "too many parts");
-    let total: usize = parts.iter().map(|p| p.len()).sum();
-    let mut out = Vec::with_capacity(1 + parts.len() + total);
+    let total: usize = parts.iter().map(|p| p.as_ref().len()).sum();
+    out.reserve(1 + parts.len() + total);
     out.push(parts.len() as f32);
     for p in parts {
-        assert!(p.len() < MAX_LEN, "part too long for f32 header");
-        out.push(p.len() as f32);
+        assert!(p.as_ref().len() < MAX_LEN, "part too long for f32 header");
+        out.push(p.as_ref().len() as f32);
     }
     for p in parts {
-        out.extend_from_slice(p);
+        out.extend_from_slice(p.as_ref());
     }
+}
+
+/// Pack a list of arrays into one flat payload.
+pub fn pack(parts: &[&[f32]]) -> Vec<f32> {
+    let mut out = Vec::new();
+    pack_into(parts, &mut out);
     out
 }
 
 /// Pack a list of owned arrays.
 pub fn pack_vecs(parts: &[Vec<f32>]) -> Vec<f32> {
-    pack(&parts.iter().map(|p| p.as_slice()).collect::<Vec<_>>())
+    let mut out = Vec::new();
+    pack_into(parts, &mut out);
+    out
 }
 
-/// Unpack a payload produced by [`pack`]. Returns `None` on malformed input.
-pub fn unpack(data: &[f32]) -> Option<Vec<Vec<f32>>> {
+/// Reusable packing scratch. Each [`PackBuffer::pack`] clears and refills
+/// one internal buffer, so steady-state re-encoding on a relay hop costs
+/// zero allocations; the returned view is valid until the next call.
+#[derive(Debug, Default)]
+pub struct PackBuffer {
+    buf: Vec<f32>,
+}
+
+impl PackBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack `parts` into the internal buffer and return a view of it.
+    pub fn pack<S: AsRef<[f32]>>(&mut self, parts: &[S]) -> &[f32] {
+        self.buf.clear();
+        pack_into(parts, &mut self.buf);
+        &self.buf
+    }
+
+    /// Pack labeled datapoints (view-typed twin of [`pack_datapoints`]).
+    pub fn pack_datapoints(&mut self, points: &[(Vec<f32>, Vec<f32>)]) -> &[f32] {
+        let parts = datapoint_parts(points);
+        self.buf.clear();
+        pack_into(&parts, &mut self.buf);
+        &self.buf
+    }
+
+    /// Current scratch capacity (diagnostics: should plateau on hot loops).
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+}
+
+/// Split a payload produced by [`pack`] into borrowed part views — zero
+/// copies, zero per-part allocations. Returns `None` on malformed input;
+/// the acceptance set is identical to [`unpack`] by construction (the owned
+/// variant is implemented on top of this).
+pub fn unpack_views(data: &[f32]) -> Option<Vec<&[f32]>> {
     let count = *data.first()? as usize;
     if count >= MAX_LEN {
         return None;
@@ -55,7 +113,7 @@ pub fn unpack(data: &[f32]) -> Option<Vec<Vec<f32>>> {
     let mut out = Vec::with_capacity(count);
     for l in lens {
         let end = off.checked_add(l)?;
-        out.push(data.get(off..end)?.to_vec());
+        out.push(data.get(off..end)?);
         off = end;
     }
     if off != data.len() {
@@ -64,29 +122,44 @@ pub fn unpack(data: &[f32]) -> Option<Vec<Vec<f32>>> {
     Some(out)
 }
 
-/// Pack labeled datapoints `[(input, label), ...]` (the yellow flow of
-/// Fig. 4: controller → training kernel).
-pub fn pack_datapoints(points: &[(Vec<f32>, Vec<f32>)]) -> Vec<f32> {
+/// Unpack a payload produced by [`pack`]. Returns `None` on malformed input.
+pub fn unpack(data: &[f32]) -> Option<Vec<Vec<f32>>> {
+    Some(unpack_views(data)?.into_iter().map(|s| s.to_vec()).collect())
+}
+
+fn datapoint_parts(points: &[(Vec<f32>, Vec<f32>)]) -> Vec<&[f32]> {
     let mut parts: Vec<&[f32]> = Vec::with_capacity(points.len() * 2);
     for (x, y) in points {
         parts.push(x);
         parts.push(y);
     }
-    pack(&parts)
+    parts
+}
+
+/// Pack labeled datapoints `[(input, label), ...]` (the yellow flow of
+/// Fig. 4: controller → training kernel).
+pub fn pack_datapoints(points: &[(Vec<f32>, Vec<f32>)]) -> Vec<f32> {
+    pack(&datapoint_parts(points))
+}
+
+/// Borrowed-view inverse of [`pack_datapoints`]: `(input, label)` subslice
+/// pairs into the original buffer.
+pub fn unpack_datapoint_views(data: &[f32]) -> Option<Vec<(&[f32], &[f32])>> {
+    let parts = unpack_views(data)?;
+    if parts.len() % 2 != 0 {
+        return None;
+    }
+    Some(parts.chunks_exact(2).map(|pair| (pair[0], pair[1])).collect())
 }
 
 /// Inverse of [`pack_datapoints`].
 pub fn unpack_datapoints(data: &[f32]) -> Option<Vec<(Vec<f32>, Vec<f32>)>> {
-    let parts = unpack(data)?;
-    if parts.len() % 2 != 0 {
-        return None;
-    }
-    let mut out = Vec::with_capacity(parts.len() / 2);
-    let mut it = parts.into_iter();
-    while let (Some(x), Some(y)) = (it.next(), it.next()) {
-        out.push((x, y));
-    }
-    Some(out)
+    Some(
+        unpack_datapoint_views(data)?
+            .into_iter()
+            .map(|(x, y)| (x.to_vec(), y.to_vec()))
+            .collect(),
+    )
 }
 
 #[cfg(test)]
@@ -127,6 +200,39 @@ mod tests {
     }
 
     #[test]
+    fn views_are_subslices_of_input() {
+        let a = vec![1.0, 2.0];
+        let b: Vec<f32> = vec![];
+        let c = vec![3.0, 4.0, 5.0];
+        let packed = pack(&[&a, &b, &c]);
+        let views = unpack_views(&packed).unwrap();
+        assert_eq!(views, vec![&a[..], &b[..], &c[..]]);
+        // views alias the packed buffer, not fresh allocations
+        let base = packed.as_ptr() as usize;
+        let end = base + packed.len() * std::mem::size_of::<f32>();
+        for v in &views {
+            if !v.is_empty() {
+                let p = v.as_ptr() as usize;
+                assert!(p >= base && p < end, "view escapes the packed buffer");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_buffer_reuses_allocation() {
+        let mut buf = PackBuffer::new();
+        let parts: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; 32]).collect();
+        let first = buf.pack(&parts).to_vec();
+        assert_eq!(unpack(&first).unwrap(), parts);
+        let cap = buf.capacity();
+        for _ in 0..10 {
+            let packed = buf.pack(&parts);
+            assert_eq!(packed, first.as_slice());
+        }
+        assert_eq!(buf.capacity(), cap, "steady-state packing must not reallocate");
+    }
+
+    #[test]
     fn datapoints_roundtrip() {
         let pts = vec![
             (vec![1.0, 2.0], vec![0.5]),
@@ -134,12 +240,17 @@ mod tests {
         ];
         let packed = pack_datapoints(&pts);
         assert_eq!(unpack_datapoints(&packed).unwrap(), pts);
+        let views = unpack_datapoint_views(&packed).unwrap();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0], (&pts[0].0[..], &pts[0].1[..]));
+        assert_eq!(views[1], (&pts[1].0[..], &pts[1].1[..]));
     }
 
     #[test]
     fn datapoints_odd_parts_rejected() {
         let packed = pack(&[&[1.0], &[2.0], &[3.0]]); // 3 parts: not pairs
         assert!(unpack_datapoints(&packed).is_none());
+        assert!(unpack_datapoint_views(&packed).is_none());
     }
 
     #[test]

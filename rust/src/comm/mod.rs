@@ -8,10 +8,52 @@
 //! `req_data.Test()`), and the collective patterns the controller uses
 //! (broadcast / gather / scatter).
 //!
-//! Payloads are flat `Vec<f32>` — exactly the paper's convention ("data
+//! Payloads are flat 1-D f32 arrays — exactly the paper's convention ("data
 //! transferred among kernels should be arranged as 1-D Numpy numerical
 //! arrays"). Structured data (lists of arrays, labeled pairs) is packed
 //! with [`codec`].
+//!
+//! ## Zero-copy payload model
+//!
+//! Wire payloads are [`bus::Payload`]s: immutable `Arc<[f32]>` buffers.
+//! The rules for when a send copies vs. shares:
+//!
+//! * **Sharing (free):** sending a `Payload` or `&Payload` — including
+//!   re-sending a received `Message::data` on a relay hop — is a refcount
+//!   bump. [`bus::Endpoint::bcast`] converts its argument at most once and
+//!   then shares, so broadcasting weights to *n* shard replicas or a batch
+//!   frame to a whole committee costs one buffer regardless of *n*.
+//! * **Ingest (one copy):** sending owned/borrowed data (`Vec<f32>`,
+//!   `&[f32]`) copies it into shared storage exactly once at the bus
+//!   boundary, no matter how many destinations receive it.
+//! * **Never:** the transport itself never copies per destination.
+//!
+//! [`bus::WorldStats`] makes the distinction observable: `messages` /
+//! `payload_bytes` count *logical* traffic (a broadcast to 8 ranks counts 8
+//! messages and 8× the bytes), while `payload_clones` / `bytes_copied`
+//! count *physical* buffer materializations (the same broadcast counts one
+//! ingest — or zero, if the caller passed an existing `Payload`). Watching
+//! `bytes_copied` stay flat while `payload_bytes` scales with fan-out is
+//! the zero-copy invariant, pinned by the bus unit tests and measured by
+//! the `comm_overhead` bench (`BENCH_comm.json`).
+//!
+//! On the codec side, the *encode* half of every relay hop is
+//! allocation-free in steady state: [`codec::PackBuffer`] and the `*_into`
+//! encoders re-encode into reusable scratch space, and the packed scratch
+//! converts into one shared payload per hop (the single ingest copy). The
+//! *decode* half offers borrowed views ([`codec::unpack_views`] and the
+//! datapoint/batch-frame variants in [`codec`]/[`protocol`]) that split a
+//! payload into subslices of the received buffer; they are the single
+//! parse path under the owned decoders, which still materialize owned
+//! lists where downstream kernel traits (`Model::predict`,
+//! `Utils::prediction_check`) require owned storage. Migrating those
+//! traits to view-typed inputs is the remaining step to a fully
+//! borrow-through decode path.
+//!
+//! Receive-side matching is indexed: each endpoint files unmatched messages
+//! into per-tag mailboxes, so `recv(src, tag)` inspects only its own tag's
+//! queue — O(1) amortized per message — instead of rescanning all queued
+//! traffic as the old single-queue matcher did.
 //!
 //! For the speedup/overhead benches a per-message latency can be injected
 //! ([`World::with_latency`]); messages only become visible to `recv` after
@@ -32,4 +74,4 @@ pub mod bus;
 pub mod codec;
 pub mod protocol;
 
-pub use bus::{Endpoint, Message, RecvError, World};
+pub use bus::{Endpoint, Message, Payload, RecvError, World};

@@ -56,11 +56,19 @@ pub const TAG_STOP: u32 = 90;
 /// Manager → everyone: drain and exit.
 pub const TAG_SHUTDOWN: u32 = 91;
 
+/// Encode a generator's step message into a reusable scratch buffer:
+/// `[stop_flag, data...]`. Clears `out` first.
+pub fn encode_gen_into(stop: bool, data: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(1 + data.len());
+    out.push(if stop { 1.0 } else { 0.0 });
+    out.extend_from_slice(data);
+}
+
 /// Encode a generator's step message: `[stop_flag, data...]`.
 pub fn encode_gen(stop: bool, data: &[f32]) -> Vec<f32> {
-    let mut v = Vec::with_capacity(1 + data.len());
-    v.push(if stop { 1.0 } else { 0.0 });
-    v.extend_from_slice(data);
+    let mut v = Vec::new();
+    encode_gen_into(stop, data, &mut v);
     v
 }
 
@@ -86,17 +94,15 @@ pub fn decode_gen(msg: &[f32]) -> (bool, &[f32]) {
 
 const ID_HALF: u64 = 1 << 24;
 
-fn encode_frame(id: u64, items: &[Vec<f32>]) -> Vec<f32> {
+fn encode_frame_into<S: AsRef<[f32]>>(id: u64, items: &[S], out: &mut Vec<f32>) {
     debug_assert!(id < ID_HALF * ID_HALF, "batch id overflows 48 bits");
-    let packed = crate::comm::codec::pack_vecs(items);
-    let mut out = Vec::with_capacity(2 + packed.len());
+    out.clear();
     out.push(((id / ID_HALF) % ID_HALF) as f32);
     out.push((id % ID_HALF) as f32);
-    out.extend_from_slice(&packed);
-    out
+    crate::comm::codec::pack_into(items, out);
 }
 
-fn decode_frame(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
+fn decode_frame_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
     let hi = *msg.first()?;
     let lo = *msg.get(1)?;
     if hi < 0.0 || lo < 0.0 || hi.fract() != 0.0 || lo.fract() != 0.0 {
@@ -106,13 +112,27 @@ fn decode_frame(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
     if hi >= ID_HALF || lo >= ID_HALF {
         return None;
     }
-    let items = crate::comm::codec::unpack(&msg[2..])?;
+    let items = crate::comm::codec::unpack_views(&msg[2..])?;
     Some((hi * ID_HALF + lo, items))
+}
+
+fn decode_frame(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
+    let (id, views) = decode_frame_views(msg)?;
+    Some((id, views.into_iter().map(|s| s.to_vec()).collect()))
 }
 
 /// Encode a `PredictBatch` frame: coalesced generator inputs under one id.
 pub fn encode_predict_batch(id: u64, items: &[Vec<f32>]) -> Vec<f32> {
-    encode_frame(id, items)
+    let mut out = Vec::new();
+    encode_frame_into(id, items, &mut out);
+    out
+}
+
+/// Encode a `PredictBatch` frame into a reusable scratch (clears `out`):
+/// the hot relay path re-encodes every batch with zero steady-state
+/// allocations, then converts once into a shared payload for the shard.
+pub fn encode_predict_batch_into<S: AsRef<[f32]>>(id: u64, items: &[S], out: &mut Vec<f32>) {
+    encode_frame_into(id, items, out)
 }
 
 /// Decode a `PredictBatch` frame. `None` on malformed input.
@@ -120,15 +140,40 @@ pub fn decode_predict_batch(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
     decode_frame(msg)
 }
 
+/// Borrowed-view decode of a `PredictBatch` frame: items are subslices of
+/// `msg`, so validation and relay never materialize an owned item list.
+/// Accepts/rejects exactly like [`decode_predict_batch`].
+pub fn decode_predict_batch_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
+    decode_frame_views(msg)
+}
+
 /// Encode a `PredictBatchResult` frame: one output per batched item, in
 /// batch order, echoing the request id.
 pub fn encode_predict_batch_result(id: u64, outputs: &[Vec<f32>]) -> Vec<f32> {
-    encode_frame(id, outputs)
+    let mut out = Vec::new();
+    encode_frame_into(id, outputs, &mut out);
+    out
+}
+
+/// Encode a `PredictBatchResult` frame into a reusable scratch (clears
+/// `out`); see [`encode_predict_batch_into`].
+pub fn encode_predict_batch_result_into<S: AsRef<[f32]>>(
+    id: u64,
+    outputs: &[S],
+    out: &mut Vec<f32>,
+) {
+    encode_frame_into(id, outputs, out)
 }
 
 /// Decode a `PredictBatchResult` frame. `None` on malformed input.
 pub fn decode_predict_batch_result(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
     decode_frame(msg)
+}
+
+/// Borrowed-view decode of a `PredictBatchResult` frame; see
+/// [`decode_predict_batch_views`].
+pub fn decode_predict_batch_result_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
+    decode_frame_views(msg)
 }
 
 #[cfg(test)]
@@ -157,6 +202,30 @@ mod tests {
         // empty batch
         let enc = encode_predict_batch(0, &[]);
         assert_eq!(decode_predict_batch(&enc), Some((0, vec![])));
+    }
+
+    #[test]
+    fn batch_frame_views_match_owned_decode() {
+        let items = vec![vec![1.0, 2.0], vec![], vec![3.0]];
+        let enc = encode_predict_batch(7, &items);
+        let (id, views) = decode_predict_batch_views(&enc).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(views, items.iter().map(|v| v.as_slice()).collect::<Vec<_>>());
+        let (id2, views2) = decode_predict_batch_result_views(&enc).unwrap();
+        assert_eq!((id2, views2.len()), (7, 3));
+        // scratch encoders clear and produce identical bytes
+        let mut scratch = vec![9.9f32; 3];
+        encode_predict_batch_into(7, &items, &mut scratch);
+        assert_eq!(scratch, enc);
+        encode_predict_batch_result_into(7, &items, &mut scratch);
+        assert_eq!(scratch, enc);
+    }
+
+    #[test]
+    fn gen_encode_into_clears_scratch() {
+        let mut scratch = vec![7.0f32; 5];
+        encode_gen_into(true, &[1.0, 2.0], &mut scratch);
+        assert_eq!(scratch, encode_gen(true, &[1.0, 2.0]));
     }
 
     #[test]

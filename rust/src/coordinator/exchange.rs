@@ -61,6 +61,10 @@ fn lockstep_host(
     let gene = topo.gene_ranks();
     let pred = topo.pred_ranks();
     let oracle_enabled = !topo.orcl_ranks().is_empty();
+    // reusable pack scratch: each round re-encodes the stacked input list
+    // without a fresh allocation, then converts once into a shared payload
+    // that fans out to every prediction rank by refcount
+    let mut pack_buf = codec::PackBuffer::new();
     let mut iterations: u64 = 0;
     let t_start = Instant::now();
 
@@ -117,8 +121,7 @@ fn lockstep_host(
 
         // broadcast the same input list to every prediction process
         let t1 = Instant::now();
-        let packed_inputs = codec::pack_vecs(&inputs);
-        ep.bcast(&pred, TAG_PRED_IN, &packed_inputs);
+        ep.bcast(&pred, TAG_PRED_IN, pack_buf.pack(&inputs));
         tel.record("bcast_pred", t1.elapsed());
 
         // blue flow: committee predictions
@@ -324,6 +327,9 @@ fn batched_host(
     let oracle_enabled = !topo.orcl_ranks().is_empty();
     let mut scheduler = BatchScheduler::new(&setting.batch, shards.len());
     let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+    // reusable frame scratch: each dispatched batch is encoded in place and
+    // converted once into a shared payload for the whole committee shard
+    let mut frame_buf: Vec<f32> = Vec::new();
     let mut iterations: u64 = 0;
     let mut stop_forwarded = false;
     let t_start = Instant::now();
@@ -375,7 +381,9 @@ fn batched_host(
         // --- blue flow in: committee replies, one frame per member ---
         while let Some(m) = ep.try_recv(Src::Any, TAG_PRED_BATCH_RESULT) {
             did_work = true;
-            let Some((id, outputs)) = decode_predict_batch_result(&m.data) else {
+            // borrowed-view decode: orphan, duplicate, and wrong-arity
+            // replies are rejected without materializing owned output lists
+            let Some((id, output_views)) = decode_predict_batch_result_views(&m.data) else {
                 tel.bump("malformed");
                 continue;
             };
@@ -392,8 +400,10 @@ fn batched_host(
                 continue;
             }
             fl.n_replies += 1;
-            if outputs.len() == fl.items.len() {
-                fl.replies[member] = Some(outputs);
+            if output_views.len() == fl.items.len() {
+                // accepted: own the outputs (they outlive this frame)
+                fl.replies[member] =
+                    Some(output_views.into_iter().map(|s| s.to_vec()).collect());
             } else {
                 tel.bump("malformed");
             }
@@ -450,8 +460,8 @@ fn batched_host(
             let Some(batch) = scheduler.try_dispatch(Instant::now()) else {
                 break;
             };
-            let frame = encode_predict_batch(batch.id, &batch.items);
-            ep.bcast(&shards[batch.shard], TAG_PRED_BATCH, &frame);
+            encode_predict_batch_into(batch.id, &batch.items, &mut frame_buf);
+            ep.bcast(&shards[batch.shard], TAG_PRED_BATCH, &frame_buf[..]);
             tel.bump("batches_dispatched");
             if batch.items.len() < setting.batch.max_size {
                 tel.bump("partial_batches");

@@ -6,8 +6,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::comm::bus::{Endpoint, Message, Src};
-use crate::comm::codec;
+use crate::comm::bus::{Endpoint, Message, Payload, Src};
+use crate::comm::codec::{self, PackBuffer};
 use crate::comm::protocol::*;
 use crate::config::{AlSetting, Topology};
 use crate::kernels::{Generator, Mode, Model, Oracle};
@@ -41,14 +41,15 @@ pub fn recv_poll(
 }
 
 /// Ordered gather (one message per `srcs` entry) polling shutdown.
+/// Payloads come back shared (zero-copy), ordered like `srcs`.
 pub fn gather_poll(
     ep: &mut Endpoint,
     srcs: &[usize],
     tag: u32,
     down: &ShutdownFlag,
     poll: Duration,
-) -> Option<Vec<Vec<f32>>> {
-    let mut slots: Vec<Option<Vec<f32>>> = vec![None; srcs.len()];
+) -> Option<Vec<Payload>> {
+    let mut slots: Vec<Option<Payload>> = vec![None; srcs.len()];
     let mut remaining = srcs.len();
     while remaining > 0 {
         let m = recv_poll(ep, Src::Any, tag, down, poll)?;
@@ -76,7 +77,11 @@ pub fn generator_host(
 ) -> KernelTelemetry {
     let mut tel = KernelTelemetry::new("generator", ep.rank());
     let poll = setting.poll_interval;
-    let mut data_to_gene: Option<Vec<f32>> = None;
+    // checked predictions arrive as shared payloads; hold the Arc instead of
+    // copying it out — the generator reads through `as_deref`
+    let mut data_to_gene: Option<Payload> = None;
+    // reusable frame scratch: steady-state encoding allocates nothing
+    let mut frame = Vec::new();
     loop {
         if is_down(&down) {
             break;
@@ -85,17 +90,17 @@ pub fn generator_host(
             gen.generate_new_data(data_to_gene.as_deref())
         });
         tel.bump("steps");
-        let payload = encode_gen(stop, &data_to_pred);
+        encode_gen_into(stop, &data_to_pred, &mut frame);
         if !setting.fixed_size_data {
             // SI §S3 fixed_size_data=False: a size header precedes every
             // payload so the receiver can size its MPI buffer
             ep.send(
                 crate::config::topology::EXCHANGE,
                 TAG_GEN_SIZE,
-                vec![payload.len() as f32],
+                vec![frame.len() as f32],
             );
         }
-        ep.send(crate::config::topology::EXCHANGE, TAG_GEN_TO_PRED, payload);
+        ep.send(crate::config::topology::EXCHANGE, TAG_GEN_TO_PRED, &frame[..]);
         if stop {
             tel.bump("stop_signals");
             // Exchange forwards the stop to the Manager; keep looping until
@@ -123,6 +128,7 @@ pub fn oracle_host(
 ) -> KernelTelemetry {
     let mut tel = KernelTelemetry::new("oracle", ep.rank());
     let poll = setting.poll_interval;
+    let mut reply = PackBuffer::new();
     loop {
         let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TO_ORACLE, &down, poll) {
             Some(m) => m,
@@ -133,7 +139,7 @@ pub fn oracle_host(
         ep.send(
             crate::config::topology::MANAGER,
             TAG_ORACLE_RESULT,
-            codec::pack(&[&m.data, &label]),
+            reply.pack(&[m.data.as_slice(), label.as_slice()]),
         );
     }
     oracle.stop_run();
@@ -156,6 +162,9 @@ pub fn prediction_host(
 ) -> KernelTelemetry {
     let mut tel = KernelTelemetry::new("prediction", ep.rank());
     let poll = setting.poll_interval;
+    // reusable reply scratches (lockstep pack + batch frame encode)
+    let mut reply = PackBuffer::new();
+    let mut frame = Vec::new();
     loop {
         if is_down(&down) {
             break;
@@ -174,7 +183,7 @@ pub fn prediction_host(
                 ep.send(
                     crate::config::topology::MANAGER,
                     TAG_RESCORE_RESP,
-                    codec::pack_vecs(&preds),
+                    reply.pack(&preds),
                 );
             }
         }
@@ -194,10 +203,11 @@ pub fn prediction_host(
                 debug_assert_eq!(preds.len(), items.len());
                 tel.bump("batches");
                 tel.add("samples", items.len() as u64);
+                encode_predict_batch_result_into(id, &preds, &mut frame);
                 ep.send(
                     crate::config::topology::EXCHANGE,
                     TAG_PRED_BATCH_RESULT,
-                    encode_predict_batch_result(id, &preds),
+                    &frame[..],
                 );
             }
             Ok(m) => {
@@ -212,7 +222,7 @@ pub fn prediction_host(
                 ep.send(
                     crate::config::topology::EXCHANGE,
                     TAG_PRED_OUT,
-                    codec::pack_vecs(&preds),
+                    reply.pack(&preds),
                 );
             }
             Err(crate::comm::RecvError::Timeout) => continue,
@@ -242,10 +252,10 @@ pub fn training_host(
     // paper's 1:1 trainer→predictor pairing; sharded mode fans out so all
     // shards serve the same committee)
     let replicas = topology.replicas_for_trainer(ep.rank());
-    // initial weight sync so predictors start from the same replica
-    for &r in &replicas {
-        ep.send(r, TAG_WEIGHTS, model.get_weight());
-    }
+    // initial weight sync so predictors start from the same replica; the
+    // weight vector converts to shared storage once and fans out by
+    // refcount — replica count does not multiply copies
+    ep.bcast(&replicas, TAG_WEIGHTS, model.get_weight());
     loop {
         let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TRAIN_DATA, &down, poll) {
             Some(m) => m,
@@ -272,9 +282,8 @@ pub fn training_host(
             stop
         };
         tel.bump("rounds");
-        for &r in &replicas {
-            ep.send(r, TAG_WEIGHTS, model.get_weight());
-        }
+        // one shared weight payload for every shard replica (zero-copy fan-out)
+        ep.bcast(&replicas, TAG_WEIGHTS, model.get_weight());
         let loss = model.last_loss().unwrap_or(f32::NAN);
         let epochs = model.last_round_epochs() as f32;
         tel.add("epochs", epochs as u64);

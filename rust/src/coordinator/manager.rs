@@ -129,11 +129,10 @@ pub fn manager_host(
             }
         }
 
-        // --- flush labeled batch to every trainer ---
+        // --- flush labeled batch to every trainer (one shared payload) ---
         if !train.is_empty() {
             if let Some(batch) = train_buffer.flush() {
-                let packed = codec::pack_datapoints(&batch);
-                ep.bcast(&train, TAG_TRAIN_DATA, &packed);
+                ep.bcast(&train, TAG_TRAIN_DATA, codec::pack_datapoints(&batch));
                 tel.bump("train_flushes");
                 tel.add("train_points", batch.len() as u64);
                 did_work = true;
@@ -204,8 +203,7 @@ pub fn manager_host(
     // flush what we can so trainers see the drained labels before exiting
     if !train.is_empty() {
         if let Some(batch) = train_buffer.flush() {
-            let packed = codec::pack_datapoints(&batch);
-            ep.bcast(&train, TAG_TRAIN_DATA, &packed);
+            ep.bcast(&train, TAG_TRAIN_DATA, codec::pack_datapoints(&batch));
             tel.bump("train_flushes");
             tel.add("train_points", batch.len() as u64);
         }
@@ -242,8 +240,8 @@ fn adjust_oracle_buffer(
     tel: &mut KernelTelemetry,
 ) {
     let inputs = buffer.drain();
-    let packed = codec::pack_vecs(&inputs);
-    ep.bcast(pred, TAG_RESCORE_REQ, &packed);
+    // one shared request payload for the whole committee
+    ep.bcast(pred, TAG_RESCORE_REQ, codec::pack_vecs(&inputs));
     // bounded wait: predictors are serving the hot loop; if they cannot
     // answer quickly, skip the adjustment rather than stall labeling
     let deadline = Duration::from_millis(500).max(setting.poll_interval * 50);

@@ -150,6 +150,8 @@ impl Workflow {
             kernels: vec![manager_tel],
             messages: world_stats.messages(),
             payload_bytes: world_stats.payload_bytes(),
+            payload_clones: world_stats.payload_clones(),
+            bytes_copied: world_stats.bytes_copied(),
         };
         for h in tel_handles {
             let tel = h.join().map_err(|_| anyhow::anyhow!("kernel host panicked"))?;
@@ -166,6 +168,8 @@ impl Workflow {
         report.wall = t0.elapsed();
         report.messages = world_stats.messages();
         report.payload_bytes = world_stats.payload_bytes();
+        report.payload_clones = world_stats.payload_clones();
+        report.bytes_copied = world_stats.bytes_copied();
         Ok(report)
     }
 }

@@ -42,6 +42,41 @@
 //! `stop.max_labels` can be made a hard dispatch budget with
 //! `strict_label_budget` (exact label counts; see
 //! `rust/tests/test_determinism.rs` for a bit-stable end-to-end run).
+//!
+//! ## Zero-copy transport
+//!
+//! The simulated MPI bus moves [`comm::Payload`]s — immutable,
+//! `Arc<[f32]>`-backed buffers. Owned data is copied into shared storage at
+//! most once at the bus boundary; after that, broadcasts, scatters of
+//! shared data, relay re-sends, and the trainer → replica weight fan-out
+//! are refcount bumps, so physical copy volume is independent of the
+//! destination count. [`comm::bus::WorldStats`] (surfaced as
+//! `RunReport::payload_clones` / `bytes_copied` next to the logical
+//! `messages` / `payload_bytes`) keeps the distinction honest, and the
+//! codec's reusable [`comm::codec::PackBuffer`] scratches and `*_into`
+//! encoders keep the re-encode half of every Exchange hop allocation-free
+//! in steady state, with borrowed-view decoders
+//! ([`comm::codec::unpack_views`]) as the single parse path underneath the
+//! owned variants. See [`comm`] for the full copy-vs-share rules.
+//!
+//! ## Performance
+//!
+//! Perf-tracking benches write machine-readable JSON next to their
+//! human-readable tables, so the trajectory is comparable across PRs:
+//!
+//! ```text
+//! cargo bench --bench comm_overhead   # → BENCH_comm.json
+//! cargo bench --bench fig1_speedup    # → BENCH_speedup.json
+//! ```
+//!
+//! `comm_overhead` measures raw bus round-trips, exchange-loop rates vs
+//! prediction latency, message coalescing under the batched exchange, and
+//! the physical-copy reduction of shared-payload weight broadcasts
+//! (`bytes_copied` vs per-destination clones at 8 prediction ranks).
+//! `fig1_speedup` reproduces the paper's serial-vs-parallel comparison and
+//! the prediction-rank scaling of the sharded exchange. The remaining
+//! benches (`sec31_latency`, `ablation`, `si_s2_usecases`, `scaling`)
+//! print tables only.
 
 pub mod bench_util;
 pub mod cli;

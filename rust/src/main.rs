@@ -160,10 +160,13 @@ fn cmd_run(args: &Args) -> i32 {
                 report.wall.as_secs_f64()
             );
             println!(
-                "prediction mean latency {:.3} ms; messages {}, payload {} KiB",
+                "prediction mean latency {:.3} ms; messages {}, payload {} KiB \
+                 (physically copied {} KiB in {} buffers)",
                 report.mean_timer_ms("prediction", "predict"),
                 report.messages,
-                report.payload_bytes / 1024
+                report.payload_bytes / 1024,
+                report.bytes_copied / 1024,
+                report.payload_clones
             );
             0
         }

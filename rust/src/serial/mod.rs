@@ -98,6 +98,10 @@ impl SerialWorkflow {
 /// Label `inputs` using round-robin assignment over `P` oracle workers run
 /// on scoped threads — the serial workflow's only concurrency (the paper
 /// assumes "only parallelization of the oracles", eq. (1)).
+///
+/// Workers borrow `inputs` directly (scoped threads share the slice
+/// read-only), so no per-shard input copies are made; inputs are copied
+/// exactly once, into the returned labeled pairs.
 fn label_parallel(
     oracles: &mut [Box<dyn Oracle>],
     inputs: &[Vec<f32>],
@@ -106,34 +110,25 @@ fn label_parallel(
         return vec![];
     }
     let p = oracles.len();
-    // partition inputs round-robin across workers
-    let mut shards: Vec<Vec<(usize, Vec<f32>)>> = vec![vec![]; p];
-    for (i, x) in inputs.iter().enumerate() {
-        shards[i % p].push((i, x.clone()));
-    }
-    let mut results: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; inputs.len()];
     // Scoped threads: oracle objects are borrowed mutably, one per thread.
     // Oracle is not Sync, so each worker gets exactly one oracle by value of
-    // the mutable borrow.
-    let shard_results: Vec<Vec<(usize, Vec<f32>, Vec<f32>)>> =
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(p);
-            for (oracle, shard) in oracles.iter_mut().zip(shards.into_iter()) {
-                handles.push(scope.spawn(move || {
-                    shard
-                        .into_iter()
-                        .map(|(i, x)| {
-                            let y = oracle.run_calc(&x);
-                            (i, x, y)
-                        })
-                        .collect::<Vec<_>>()
-                }));
-            }
-            handles.into_iter().map(|h| h.join().expect("oracle worker panicked")).collect()
-        });
+    // the mutable borrow; worker w takes indices w, w+p, w+2p, ...
+    let shard_results: Vec<Vec<(usize, Vec<f32>)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        for (w, oracle) in oracles.iter_mut().enumerate() {
+            handles.push(scope.spawn(move || {
+                (w..inputs.len())
+                    .step_by(p)
+                    .map(|i| (i, oracle.run_calc(&inputs[i])))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("oracle worker panicked")).collect()
+    });
+    let mut results: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; inputs.len()];
     for shard in shard_results {
-        for (i, x, y) in shard {
-            results[i] = Some((x, y));
+        for (i, y) in shard {
+            results[i] = Some((inputs[i].clone(), y));
         }
     }
     results.into_iter().flatten().collect()

@@ -122,6 +122,19 @@ impl SyntheticModel {
         self
     }
 
+    /// Pad the weight vector to at least `n` entries. The readout still uses
+    /// only the first `in_dim * out_dim` weights; the padding models
+    /// realistic MLP weight-payload sizes so comm benches can measure the
+    /// trainer → replica fan-out cost without inflating the predict cost.
+    /// Every replica must be constructed with the same padding (weight
+    /// messages are fixed-size).
+    pub fn with_weight_padding(mut self, n: usize) -> Self {
+        if self.weights.len() < n {
+            self.weights.resize(n, 0.0);
+        }
+        self
+    }
+
     fn predict_one(&self, x: &[f32]) -> Vec<f32> {
         (0..self.out_dim)
             .map(|o| {
@@ -285,5 +298,20 @@ mod tests {
         m.update(&w);
         assert_eq!(m.get_weight(), w);
         assert_eq!(m.get_weight_size(), 6);
+    }
+
+    #[test]
+    fn weight_padding_grows_payload_not_readout() {
+        let mut m = SyntheticModel::new(2, 1, Duration::ZERO, Duration::ZERO, 1, Mode::Predict)
+            .with_weight_padding(64);
+        assert_eq!(m.get_weight_size(), 64);
+        let mut w = vec![0.0f32; 64];
+        w[0] = 1.0;
+        w[1] = 2.0;
+        m.update(&w);
+        assert_eq!(m.get_weight(), w);
+        // readout uses only the first in_dim * out_dim weights
+        let preds = m.predict(&[vec![1.0, 1.0]]);
+        assert_eq!(preds, vec![vec![3.0]]);
     }
 }

@@ -126,9 +126,16 @@ pub struct RunReport {
     pub wall: Duration,
     /// Per-rank telemetry.
     pub kernels: Vec<KernelTelemetry>,
-    /// comm stats: total messages, payload bytes.
+    /// comm stats: total messages and *logical* payload bytes (counted per
+    /// destination, so broadcasts scale with fan-out).
     pub messages: u64,
     pub payload_bytes: u64,
+    /// Payload buffers the transport physically materialized (deep copies).
+    /// Shared-payload broadcasts and relay re-sends contribute zero.
+    pub payload_clones: u64,
+    /// Bytes physically copied by the transport (the copy volume behind
+    /// `payload_clones`; compare against `payload_bytes` to see sharing).
+    pub bytes_copied: u64,
 }
 
 impl RunReport {
@@ -166,6 +173,8 @@ impl RunReport {
             ("wall_s", Value::Num(self.wall.as_secs_f64())),
             ("messages", Value::Num(self.messages as f64)),
             ("payload_bytes", Value::Num(self.payload_bytes as f64)),
+            ("payload_clones", Value::Num(self.payload_clones as f64)),
+            ("bytes_copied", Value::Num(self.bytes_copied as f64)),
             (
                 "final_losses",
                 Value::Array(self.final_losses.iter().map(|l| Value::Num(*l as f64)).collect()),

@@ -35,6 +35,153 @@ fn codec_roundtrip_any_shapes() {
 }
 
 #[test]
+fn unpack_views_equivalent_to_unpack_on_roundtrips() {
+    forall(
+        200,
+        |g| {
+            let n = g.usize(0, 12);
+            (0..n).map(|_| {
+                let w = g.usize(0, 40);
+                g.vec_normal(w)
+            }).collect::<Vec<_>>()
+        },
+        |parts| {
+            let packed = codec::pack_vecs(&parts);
+            let owned = codec::unpack(&packed);
+            let views = codec::unpack_views(&packed);
+            match (owned, views) {
+                (Some(o), Some(v)) => {
+                    o == parts
+                        && v.len() == o.len()
+                        && v.iter().zip(&o).all(|(a, b)| *a == b.as_slice())
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+/// Apply one of the malformation modes the codec must reject (or none).
+fn mutate_packed(g: &mut Gen, mut packed: Vec<f32>) -> Vec<f32> {
+    match g.usize(0, 3) {
+        // truncation (from 1 element up to the whole payload)
+        0 => {
+            let cut = g.usize(1, packed.len());
+            packed.truncate(packed.len() - cut);
+        }
+        // trailing garbage
+        1 => {
+            let extra = g.usize(1, 4);
+            for _ in 0..extra {
+                packed.push(g.f32(-2.0, 2.0));
+            }
+        }
+        // oversized header: part count or a length >= MAX_LEN
+        2 => {
+            let idx = g.usize(0, 1).min(packed.len().saturating_sub(1));
+            if !packed.is_empty() {
+                packed[idx] = codec::MAX_LEN as f32;
+            }
+        }
+        // untouched round-trip
+        _ => {}
+    }
+    packed
+}
+
+#[test]
+fn unpack_views_rejects_exactly_like_unpack() {
+    // identical accept/reject decisions on truncated, trailing-garbage and
+    // oversized-header inputs — and identical values whenever both accept
+    forall(
+        300,
+        |g| {
+            let n = g.usize(0, 8);
+            let parts: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let w = g.usize(0, 12);
+                    g.vec_normal(w)
+                })
+                .collect();
+            let packed = codec::pack_vecs(&parts);
+            mutate_packed(g, packed)
+        },
+        |mutated| {
+            let owned = codec::unpack(&mutated);
+            let views = codec::unpack_views(&mutated);
+            match (owned, views) {
+                (Some(o), Some(v)) => v.iter().zip(&o).all(|(a, b)| *a == b.as_slice()),
+                (None, None) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn datapoint_views_equivalent_to_owned() {
+    forall(
+        150,
+        |g| {
+            let n = g.usize(0, 10);
+            let pts: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    let a = g.usize(1, 16);
+                    let b = g.usize(1, 6);
+                    (g.vec_normal(a), g.vec_normal(b))
+                })
+                .collect();
+            let packed = codec::pack_datapoints(&pts);
+            mutate_packed(g, packed)
+        },
+        |mutated| {
+            let owned = codec::unpack_datapoints(&mutated);
+            let views = codec::unpack_datapoint_views(&mutated);
+            match (owned, views) {
+                (Some(o), Some(v)) => {
+                    v.len() == o.len()
+                        && v.iter()
+                            .zip(&o)
+                            .all(|((vx, vy), (ox, oy))| *vx == ox.as_slice() && *vy == oy.as_slice())
+                }
+                (None, None) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn batch_frame_views_equivalent_to_owned() {
+    forall(
+        150,
+        |g| {
+            let id = g.rng().next_u64() & ((1u64 << 48) - 1);
+            let n = g.usize(0, 8);
+            let items: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let w = g.usize(0, 16);
+                    g.vec_normal(w)
+                })
+                .collect();
+            let packed = protocol::encode_predict_batch(id, &items);
+            mutate_packed(g, packed)
+        },
+        |mutated| {
+            let owned = protocol::decode_predict_batch(&mutated);
+            let views = protocol::decode_predict_batch_views(&mutated);
+            match (owned, views) {
+                (Some((io, o)), Some((iv, v))) => {
+                    io == iv && v.iter().zip(&o).all(|(a, b)| *a == b.as_slice())
+                }
+                (None, None) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
 fn datapoints_roundtrip_any_widths() {
     forall(
         150,
