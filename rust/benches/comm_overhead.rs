@@ -17,14 +17,26 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use pal::bench_util::{bench, Report, Row};
+use pal::bench_util::alloc::{alloc_count, CountingAlloc};
+use pal::bench_util::{bench, black_box, Report, Row};
 use pal::comm::bus::{Src, World};
+use pal::comm::protocol::{
+    decode_predict_batch_result, decode_predict_batch_result_rows, encode_predict_batch_result,
+};
 use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
-use pal::coordinator::selection::CommitteeStdUtils;
+use pal::coordinator::selection::{
+    committee_std_check, committee_std_check_batch, CommitteeStdUtils,
+};
 use pal::coordinator::workflow::Workflow;
+use pal::data::batch::{Batch, BatchView};
 use pal::json::{obj, Value};
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
 use pal::sim::workload::{SyntheticGenerator, SyntheticModel};
+
+// Counting allocator: only the allocations-per-item section reads the
+// counters; the passthrough costs the other sections nothing measurable.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 
 fn bus_roundtrip(size: usize, pairs: usize) -> Duration {
     let mut w = World::new(2);
@@ -269,6 +281,47 @@ fn weight_fanout_e2e(weight_len: usize) -> (u64, u64, u64) {
     )
 }
 
+/// Allocations per predicted item on the decode → committee-reduce hot
+/// path, nested-Vec baseline vs the flat `BatchView` plane. Returns
+/// `(allocs_per_item_nested, allocs_per_item_flat)`.
+fn alloc_per_item(batch: usize, models: usize, width: usize, iters: u64) -> (f64, f64) {
+    // pre-encode one committee round: per-member result frames + inputs
+    let frames: Vec<Vec<f32>> = (0..models)
+        .map(|m| {
+            let items: Vec<Vec<f32>> = (0..batch)
+                .map(|i| (0..width).map(|k| ((m * 31 + i * 7 + k) % 17) as f32 * 0.1).collect())
+                .collect();
+            encode_predict_batch_result(1, &items)
+        })
+        .collect();
+    let inputs: Vec<Vec<f32>> = (0..batch).map(|i| vec![i as f32; 8]).collect();
+    let input_batch = Batch::from_rows(&inputs).unwrap();
+    let items_total = (iters * batch as u64) as f64;
+
+    // nested baseline: owned row lists all the way down
+    let before = alloc_count();
+    for _ in 0..iters {
+        let preds: Vec<Vec<Vec<f32>>> = frames
+            .iter()
+            .map(|f| decode_predict_batch_result(f).unwrap().1)
+            .collect();
+        black_box(committee_std_check(&inputs, &preds, 0.5, 8));
+    }
+    let nested = (alloc_count() - before) as f64 / items_total;
+
+    // flat plane: strided views over the frames, contiguous outputs
+    let before = alloc_count();
+    for _ in 0..iters {
+        let views: Vec<BatchView<'_>> = frames
+            .iter()
+            .map(|f| decode_predict_batch_result_rows(f).unwrap().1)
+            .collect();
+        black_box(committee_std_check_batch(&input_batch.view(), &views, 0.5, 8));
+    }
+    let flat = (alloc_count() - before) as f64 / items_total;
+    (nested, flat)
+}
+
 fn main() {
     let mut json_sections: Vec<(&str, Value)> = vec![("bench", Value::Str("comm_overhead".into()))];
 
@@ -432,5 +485,54 @@ fn main() {
     match std::fs::write("BENCH_comm.json", &out) {
         Ok(()) => println!("\nwrote BENCH_comm.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_comm.json: {e}"),
+    }
+
+    // ---- (f) allocations per item: nested-Vec baseline vs flat plane ----
+    // One committee round-trip's receive side (decode every member's result
+    // frame + committee_std_check), counted by the global CountingAlloc.
+    const AP_MODELS: usize = 3;
+    const AP_WIDTH: usize = 32;
+    const AP_ITERS: u64 = 200;
+    let mut rep6 = Report::new(format!(
+        "allocations per predicted item — decode + committee reduce \
+         ({AP_MODELS}-member committee, width {AP_WIDTH})"
+    ));
+    let mut alloc_rows = Vec::new();
+    let mut reduction_at_8 = 0.0;
+    for batch in [1usize, 8, 32] {
+        let (nested, flat) = alloc_per_item(batch, AP_MODELS, AP_WIDTH, AP_ITERS);
+        let reduction = nested / flat.max(1e-9);
+        if batch == 8 {
+            reduction_at_8 = reduction;
+        }
+        rep6.push(
+            Row::new(format!("batch={batch}"))
+                .f("allocs_per_item_nested", nested)
+                .f("allocs_per_item_flat", flat)
+                .f("reduction_x", reduction),
+        );
+        alloc_rows.push(obj(vec![
+            ("batch", Value::Num(batch as f64)),
+            ("models", Value::Num(AP_MODELS as f64)),
+            ("width", Value::Num(AP_WIDTH as f64)),
+            ("allocs_per_item_nested", Value::Num(nested)),
+            ("allocs_per_item_flat", Value::Num(flat)),
+            ("reduction_x", Value::Num(reduction)),
+        ]));
+    }
+    rep6.print();
+    println!(
+        "(flat plane allocates {reduction_at_8:.1}x less per item at batch=8{})",
+        if reduction_at_8 >= 10.0 { " — >= 10x target met" } else { " — BELOW the 10x target" }
+    );
+    let alloc_json = obj(vec![
+        ("bench", Value::Str("alloc_per_item".into())),
+        ("sections", Value::Array(alloc_rows)),
+        ("reduction_x_at_batch8", Value::Num(reduction_at_8)),
+        ("target_met", Value::Bool(reduction_at_8 >= 10.0)),
+    ]);
+    match std::fs::write("BENCH_alloc.json", pal::json::to_string(&alloc_json)) {
+        Ok(()) => println!("wrote BENCH_alloc.json"),
+        Err(e) => eprintln!("failed to write BENCH_alloc.json: {e}"),
     }
 }

@@ -1,0 +1,69 @@
+//! Counting allocator for allocation-regression tests and benches.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! allocation (and reallocation) through two global atomics. The library
+//! never installs it — production binaries keep the plain system allocator
+//! — a bench or test binary opts in with:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: pal::bench_util::CountingAlloc = pal::bench_util::CountingAlloc::new();
+//! ```
+//!
+//! and then brackets the code under measurement with [`alloc_count`]
+//! deltas. Counts are exact only while nothing else runs concurrently, so
+//! measuring tests must live alone in their test binary (see
+//! `rust/tests/test_flat_plane.rs`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Heap allocations observed so far (monotonic; diff around a region).
+pub fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// Heap bytes requested so far (monotonic; diff around a region).
+pub fn alloc_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// System-allocator wrapper that counts allocations; see the module docs.
+#[derive(Default)]
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+}
+
+// SAFETY: defers every operation to `System`; the atomics only observe.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a grow is the moving cost this crate's flat buffers try to avoid,
+        // so count it like a fresh allocation
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

@@ -7,6 +7,10 @@
 
 use std::time::{Duration, Instant};
 
+pub mod alloc;
+
+pub use alloc::CountingAlloc;
+
 /// Prevent the optimizer from discarding a value (stable-rust black_box).
 pub fn black_box<T>(x: T) -> T {
     // std::hint::black_box is stable since 1.66

@@ -28,79 +28,111 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A shared, immutable message payload (`Arc<[f32]>`).
+/// A shared, immutable message payload: a range view into an `Arc<[f32]>`.
 ///
 /// Cloning is a refcount bump; all reads go through `Deref<Target = [f32]>`.
 /// Construction from owned or borrowed data copies once into shared storage
 /// — after that the buffer can fan out to any number of destinations (or be
-/// re-sent on a relay hop) without touching the heap. This is the seam where
-/// a real shared-memory or RDMA transport would plug in: everything above
-/// the bus already treats payloads as immutable shared buffers.
+/// re-sent on a relay hop) without touching the heap. [`Payload::slice`]
+/// carves sub-range views that share the same backing buffer, so scattering
+/// the rows of one batch to many destinations is *n* refcount bumps over one
+/// allocation. This is the seam where a real shared-memory or RDMA transport
+/// would plug in: everything above the bus already treats payloads as
+/// immutable shared buffers.
 #[derive(Debug, Clone)]
-pub struct Payload(Arc<[f32]>);
+pub struct Payload {
+    buf: Arc<[f32]>,
+    start: usize,
+    len: usize,
+}
 
 impl Payload {
-    /// An empty payload (control messages).
+    fn whole(buf: Arc<[f32]>) -> Self {
+        let len = buf.len();
+        Payload { buf, start: 0, len }
+    }
+
+    /// The empty payload (control messages). Cached in a `OnceLock` so
+    /// zero-length sends never allocate a fresh `Arc`.
     pub fn empty() -> Self {
-        Payload(Arc::from(Vec::new()))
+        static EMPTY: std::sync::OnceLock<Arc<[f32]>> = std::sync::OnceLock::new();
+        Payload::whole(Arc::clone(EMPTY.get_or_init(|| Arc::from(Vec::new()))))
     }
 
     pub fn as_slice(&self) -> &[f32] {
-        &self.0
+        &self.buf[self.start..self.start + self.len]
+    }
+
+    /// A sub-range view sharing this payload's backing buffer — no copy,
+    /// just a refcount bump. Used to scatter the rows of one batch result
+    /// payload to their originating generators.
+    pub fn slice(&self, range: std::ops::Range<usize>) -> Payload {
+        assert!(range.start <= range.end && range.end <= self.len, "payload slice out of range");
+        Payload {
+            buf: Arc::clone(&self.buf),
+            start: self.start + range.start,
+            len: range.end - range.start,
+        }
     }
 
     /// Number of other live handles sharing this buffer (diagnostics).
     pub fn shared_handles(&self) -> usize {
-        Arc::strong_count(&self.0)
+        Arc::strong_count(&self.buf)
     }
 }
 
 impl From<Vec<f32>> for Payload {
     fn from(v: Vec<f32>) -> Self {
-        Payload(Arc::from(v))
+        if v.is_empty() {
+            return Payload::empty();
+        }
+        Payload::whole(Arc::from(v))
     }
 }
 
 impl From<&[f32]> for Payload {
     fn from(s: &[f32]) -> Self {
-        Payload(Arc::from(s))
+        if s.is_empty() {
+            return Payload::empty();
+        }
+        Payload::whole(Arc::from(s))
     }
 }
 
 impl Deref for Payload {
     type Target = [f32];
     fn deref(&self) -> &[f32] {
-        &self.0
+        self.as_slice()
     }
 }
 
 impl AsRef<[f32]> for Payload {
     fn as_ref(&self) -> &[f32] {
-        &self.0
+        self.as_slice()
     }
 }
 
 impl PartialEq for Payload {
     fn eq(&self, other: &Self) -> bool {
-        self.0[..] == other.0[..]
+        self.as_slice() == other.as_slice()
     }
 }
 
 impl PartialEq<[f32]> for Payload {
     fn eq(&self, other: &[f32]) -> bool {
-        &self.0[..] == other
+        self.as_slice() == other
     }
 }
 
 impl PartialEq<Vec<f32>> for Payload {
     fn eq(&self, other: &Vec<f32>) -> bool {
-        &self.0[..] == other.as_slice()
+        self.as_slice() == other.as_slice()
     }
 }
 
 impl PartialEq<&[f32]> for Payload {
     fn eq(&self, other: &&[f32]) -> bool {
-        &self.0[..] == *other
+        self.as_slice() == *other
     }
 }
 
@@ -126,19 +158,22 @@ impl IntoPayload for &Payload {
 
 impl IntoPayload for Vec<f32> {
     fn into_payload(self) -> (Payload, bool) {
-        (Payload::from(self), true)
+        let copied = !self.is_empty(); // empty resolves to the cached payload
+        (Payload::from(self), copied)
     }
 }
 
 impl IntoPayload for &[f32] {
     fn into_payload(self) -> (Payload, bool) {
-        (Payload::from(self), true)
+        let copied = !self.is_empty();
+        (Payload::from(self), copied)
     }
 }
 
 impl IntoPayload for &Vec<f32> {
     fn into_payload(self) -> (Payload, bool) {
-        (Payload::from(self.as_slice()), true)
+        let copied = !self.is_empty();
+        (Payload::from(self.as_slice()), copied)
     }
 }
 
@@ -322,6 +357,16 @@ impl Endpoint {
             self.stats.payload_clones.fetch_add(1, Ordering::Relaxed);
             self.stats.bytes_copied.fetch_add(len as u64 * 4, Ordering::Relaxed);
         }
+    }
+
+    /// Charge a physical payload materialization that happened *outside* a
+    /// send — e.g. converting a staged row block into the shared payload
+    /// whose row slices are then scattered copy-free. Keeps
+    /// `bytes_copied`/`payload_clones` honest when the ingest copy and the
+    /// sends are decoupled. Zero-length ingests resolve to the cached empty
+    /// payload and cost nothing.
+    pub fn note_ingest(&self, f32s: usize) {
+        self.note_copy(f32s > 0, f32s);
     }
 
     /// Ship an already-shared payload to `dst`: refcount bump, no copy.
@@ -863,6 +908,54 @@ mod tests {
         assert_eq!(m2.data, vec![1.0, 2.0, 3.0]);
         assert_eq!(stats.payload_clones(), 1);
         assert_eq!(stats.bytes_copied(), 12);
+    }
+
+    #[test]
+    fn payload_slice_shares_backing_buffer() {
+        let p = Payload::from(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let row = p.slice(2..4);
+        assert_eq!(row.as_slice(), &[2.0, 3.0]);
+        assert_eq!(row.shared_handles(), 2, "slice must share, not copy");
+        // nested slices compose
+        let sub = row.slice(1..2);
+        assert_eq!(sub.as_slice(), &[3.0]);
+        // empty range is fine
+        assert_eq!(p.slice(6..6).len(), 0);
+    }
+
+    #[test]
+    fn payload_row_scatter_is_zero_copy() {
+        let mut w = World::new(3);
+        let stats = w.stats();
+        let mut eps = w.endpoints();
+        let mut e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let block = Payload::from(vec![1.0, 2.0, 3.0, 4.0]); // one ingest
+        e0.scatter(&[1, 2], 4, vec![block.slice(0..2), block.slice(2..4)]);
+        assert_eq!(e1.recv_timeout(Src::Rank(0), 4, Duration::from_secs(1)).unwrap().data, vec![1.0, 2.0]);
+        assert_eq!(e2.recv_timeout(Src::Rank(0), 4, Duration::from_secs(1)).unwrap().data, vec![3.0, 4.0]);
+        // the scatter itself copied nothing
+        assert_eq!(stats.payload_clones(), 0);
+        assert_eq!(stats.bytes_copied(), 0);
+    }
+
+    #[test]
+    fn empty_payload_is_cached_and_copy_free() {
+        let a = Payload::empty();
+        let b = Payload::empty();
+        assert_eq!(a.len(), 0);
+        // both handles share the OnceLock'd buffer (plus the cache's own)
+        assert!(a.shared_handles() >= 2 && b.shared_handles() >= 2);
+        // empty owned sends resolve to the cached payload: no clone counted
+        let mut w = World::new(2);
+        let stats = w.stats();
+        let e0 = w.endpoint(0);
+        let mut e1 = w.endpoint(1);
+        e0.send(1, 90, vec![]);
+        assert_eq!(stats.payload_clones(), 0);
+        assert_eq!(stats.bytes_copied(), 0);
+        assert_eq!(e1.recv_timeout(Src::Rank(0), 90, Duration::from_secs(1)).unwrap().data.len(), 0);
     }
 
     #[test]

@@ -23,6 +23,20 @@
 //! [`pack_into`] appends to a caller-owned buffer and [`PackBuffer`] wraps
 //! one for reuse, so hot relay loops re-encode every round without a fresh
 //! heap allocation.
+//!
+//! ## Flat data plane
+//!
+//! When every packed part shares one width — the common case for stacked
+//! generator inputs and committee outputs — [`unpack_uniform`] parses the
+//! payload with **zero** allocations (it returns `(rows, width, offset)`
+//! over the original buffer) and [`unpack_batch_view`] wraps the result as
+//! a strided [`BatchView`]. Ragged payloads return `None` and fall back to
+//! the per-part view API. The matching encoders ([`pack_batch_into`],
+//! [`pack_rows_into_buf`]) write the *same wire bytes* as [`pack_into`]
+//! over nested rows, so flat and nested endpoints interoperate frame-for-
+//! frame; the flat encode is a header write plus one `memcpy`.
+
+use crate::data::batch::{BatchView, RowBlock};
 
 /// Maximum exactly-representable length in an f32 header.
 pub const MAX_LEN: usize = 1 << 24;
@@ -86,6 +100,21 @@ impl PackBuffer {
         &self.buf
     }
 
+    /// Pack a uniform batch (flat twin of [`PackBuffer::pack`]; identical
+    /// wire bytes, one `memcpy` for the data section).
+    pub fn pack_batch(&mut self, batch: &BatchView<'_>) -> &[f32] {
+        self.buf.clear();
+        pack_batch_into(batch, &mut self.buf);
+        &self.buf
+    }
+
+    /// Pack a contiguous (possibly ragged) row block.
+    pub fn pack_row_block(&mut self, rows: &RowBlock) -> &[f32] {
+        self.buf.clear();
+        pack_rows_into_buf(rows, &mut self.buf);
+        &self.buf
+    }
+
     /// Current scratch capacity (diagnostics: should plateau on hot loops).
     pub fn capacity(&self) -> usize {
         self.buf.capacity()
@@ -125,6 +154,71 @@ pub fn unpack_views(data: &[f32]) -> Option<Vec<&[f32]>> {
 /// Unpack a payload produced by [`pack`]. Returns `None` on malformed input.
 pub fn unpack(data: &[f32]) -> Option<Vec<Vec<f32>>> {
     Some(unpack_views(data)?.into_iter().map(|s| s.to_vec()).collect())
+}
+
+/// Parse a packed payload whose parts all share one width, with **zero**
+/// allocations: returns `(rows, width, data_offset)` such that
+/// `&data[data_offset..]` is the contiguous `rows × width` block.
+///
+/// Accepts exactly the subset of [`unpack_views`]-valid payloads whose part
+/// lengths are all equal (an empty list parses as `(0, 0, _)`); ragged or
+/// malformed payloads return `None`.
+pub fn unpack_uniform(data: &[f32]) -> Option<(usize, usize, usize)> {
+    let rows = *data.first()? as usize;
+    if rows >= MAX_LEN {
+        return None;
+    }
+    let width = if rows == 0 { 0 } else { *data.get(1)? as usize };
+    if width >= MAX_LEN {
+        return None;
+    }
+    for i in 1..rows {
+        if *data.get(1 + i)? as usize != width {
+            return None; // ragged: defer to the per-part view API
+        }
+    }
+    let start = 1 + rows;
+    let end = start.checked_add(rows.checked_mul(width)?)?;
+    if end != data.len() {
+        return None; // truncated or trailing garbage
+    }
+    Some((rows, width, start))
+}
+
+/// [`unpack_uniform`] wrapped as a strided [`BatchView`] over the payload.
+pub fn unpack_batch_view(data: &[f32]) -> Option<BatchView<'_>> {
+    let (rows, width, start) = unpack_uniform(data)?;
+    BatchView::from_parts(&data[start..], rows, width)
+}
+
+/// Append the packed encoding of a uniform batch to `out` — wire-identical
+/// to [`pack_into`] over the batch's rows, but the data section is one
+/// `memcpy` of the flat buffer.
+pub fn pack_batch_into(batch: &BatchView<'_>, out: &mut Vec<f32>) {
+    let (rows, width) = (batch.rows(), batch.width());
+    assert!(rows < MAX_LEN, "too many parts");
+    assert!(width < MAX_LEN, "part too long for f32 header");
+    out.reserve(1 + rows + batch.flat().len());
+    out.push(rows as f32);
+    for _ in 0..rows {
+        out.push(width as f32);
+    }
+    out.extend_from_slice(batch.flat());
+}
+
+/// Append the packed encoding of a (possibly ragged) [`RowBlock`] to `out`
+/// — wire-identical to [`pack_into`] over its rows, data section in one
+/// `memcpy`.
+pub fn pack_rows_into_buf(rows: &RowBlock, out: &mut Vec<f32>) {
+    assert!(rows.len() < MAX_LEN, "too many parts");
+    out.reserve(1 + rows.len() + rows.total_values());
+    out.push(rows.len() as f32);
+    for i in 0..rows.len() {
+        let (s, e) = rows.bounds(i);
+        assert!(e - s < MAX_LEN, "part too long for f32 header");
+        out.push((e - s) as f32);
+    }
+    out.extend_from_slice(rows.flat());
 }
 
 fn datapoint_parts(points: &[(Vec<f32>, Vec<f32>)]) -> Vec<&[f32]> {
@@ -230,6 +324,54 @@ mod tests {
             assert_eq!(packed, first.as_slice());
         }
         assert_eq!(buf.capacity(), cap, "steady-state packing must not reallocate");
+    }
+
+    #[test]
+    fn uniform_parse_matches_views_on_uniform_payloads() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let packed = pack_vecs(&rows);
+        let (n, w, start) = unpack_uniform(&packed).unwrap();
+        assert_eq!((n, w), (3, 2));
+        assert_eq!(&packed[start..], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let view = unpack_batch_view(&packed).unwrap();
+        assert_eq!(view.row(2), &[5.0, 6.0]);
+        // empty list and zero-width rows
+        assert_eq!(unpack_uniform(&pack(&[])).unwrap(), (0, 0, 1));
+        let zw = pack(&[&[][..], &[][..]]);
+        assert_eq!(unpack_uniform(&zw).unwrap(), (2, 0, 3));
+    }
+
+    #[test]
+    fn uniform_parse_rejects_ragged_and_malformed() {
+        let ragged = pack(&[&[1.0, 2.0][..], &[3.0][..]]);
+        assert!(unpack_views(&ragged).is_some(), "ragged is valid for views");
+        assert!(unpack_uniform(&ragged).is_none(), "but not for the flat parse");
+        let uniform = pack(&[&[1.0, 2.0][..], &[3.0, 4.0][..]]);
+        assert!(unpack_uniform(&uniform[..uniform.len() - 1]).is_none());
+        let mut garbage = uniform.clone();
+        garbage.push(9.0);
+        assert!(unpack_uniform(&garbage).is_none());
+        assert!(unpack_uniform(&[]).is_none());
+    }
+
+    #[test]
+    fn flat_encoders_write_identical_wire_bytes() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let nested = pack_vecs(&rows);
+        let batch = crate::data::batch::Batch::from_rows(&rows).unwrap();
+        let mut flat = Vec::new();
+        pack_batch_into(&batch.view(), &mut flat);
+        assert_eq!(flat, nested);
+        // ragged block matches pack over its rows too
+        let ragged = vec![vec![1.0f32, 2.0], vec![3.0]];
+        let rb = RowBlock::from_rows(&ragged);
+        let mut out = Vec::new();
+        pack_rows_into_buf(&rb, &mut out);
+        assert_eq!(out, pack_vecs(&ragged));
+        // PackBuffer twins agree with the free functions
+        let mut pb = PackBuffer::new();
+        assert_eq!(pb.pack_batch(&batch.view()), nested.as_slice());
+        assert_eq!(pb.pack_row_block(&rb), pack_vecs(&ragged).as_slice());
     }
 
     #[test]

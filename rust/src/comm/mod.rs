@@ -44,11 +44,36 @@
 //! *decode* half offers borrowed views ([`codec::unpack_views`] and the
 //! datapoint/batch-frame variants in [`codec`]/[`protocol`]) that split a
 //! payload into subslices of the received buffer; they are the single
-//! parse path under the owned decoders, which still materialize owned
-//! lists where downstream kernel traits (`Model::predict`,
-//! `Utils::prediction_check`) require owned storage. Migrating those
-//! traits to view-typed inputs is the remaining step to a fully
-//! borrow-through decode path.
+//! parse path under the owned decoders.
+//!
+//! ## Flat data plane (Payload → BatchView → strided reduction)
+//!
+//! Uniform-width traffic — the steady state for stacked generator inputs
+//! and committee outputs — never leaves contiguous storage between the
+//! wire and the reduction:
+//!
+//! 1. a received [`bus::Payload`] parses with **zero allocations** into a
+//!    strided [`crate::data::batch::BatchView`] ([`codec::unpack_uniform`],
+//!    [`protocol::decode_predict_batch_rows`]); committee replies are
+//!    retained as [`crate::data::batch::PayloadBatch`]es — refcounted
+//!    slices of the frame payload — until the whole batch reduces;
+//! 2. models consume the view and produce one contiguous
+//!    [`crate::data::batch::RowBlock`] (`Model::predict_batch`; uniform
+//!    rows in practice), and the committee reductions
+//!    (`committee_std_batch` & friends) run single-pass strided loops over
+//!    `&[BatchView]` with zero inner-loop allocations;
+//! 3. checked results convert once into a shared payload and scatter to
+//!    their generators as [`bus::Payload::slice`] row views — n refcount
+//!    bumps over one allocation.
+//!
+//! Ragged traffic (mixed row widths) still flows through the nested-`Vec`
+//! decoders/checks as a fallback; both encoders write identical wire
+//! bytes, so flat and nested endpoints interoperate frame-for-frame. The
+//! allocation bound — decode + committee reduce allocates a small constant
+//! independent of batch size — is pinned by `rust/tests/test_flat_plane.rs`
+//! (counting allocator) and measured per item in `BENCH_alloc.json`.
+//! Control messages ride the `OnceLock`-cached [`bus::Payload::empty`], so
+//! stop/shutdown fan-outs allocate nothing at all.
 //!
 //! Receive-side matching is indexed: each endpoint files unmatched messages
 //! into per-tag mailboxes, so `recv(src, tag)` inspects only its own tag's

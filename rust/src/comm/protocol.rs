@@ -94,15 +94,22 @@ pub fn decode_gen(msg: &[f32]) -> (bool, &[f32]) {
 
 const ID_HALF: u64 = 1 << 24;
 
-fn encode_frame_into<S: AsRef<[f32]>>(id: u64, items: &[S], out: &mut Vec<f32>) {
+/// Clear `out` and write the two-value 48-bit id header every frame
+/// encoder shares (flat and nested encoders must never diverge here).
+fn push_frame_id(id: u64, out: &mut Vec<f32>) {
     debug_assert!(id < ID_HALF * ID_HALF, "batch id overflows 48 bits");
     out.clear();
     out.push(((id / ID_HALF) % ID_HALF) as f32);
     out.push((id % ID_HALF) as f32);
+}
+
+fn encode_frame_into<S: AsRef<[f32]>>(id: u64, items: &[S], out: &mut Vec<f32>) {
+    push_frame_id(id, out);
     crate::comm::codec::pack_into(items, out);
 }
 
-fn decode_frame_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
+/// Split a frame into its 48-bit id and the packed item payload.
+fn decode_frame_id(msg: &[f32]) -> Option<(u64, &[f32])> {
     let hi = *msg.first()?;
     let lo = *msg.get(1)?;
     if hi < 0.0 || lo < 0.0 || hi.fract() != 0.0 || lo.fract() != 0.0 {
@@ -112,8 +119,13 @@ fn decode_frame_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
     if hi >= ID_HALF || lo >= ID_HALF {
         return None;
     }
-    let items = crate::comm::codec::unpack_views(&msg[2..])?;
-    Some((hi * ID_HALF + lo, items))
+    Some((hi * ID_HALF + lo, &msg[2..]))
+}
+
+fn decode_frame_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
+    let (id, rest) = decode_frame_id(msg)?;
+    let items = crate::comm::codec::unpack_views(rest)?;
+    Some((id, items))
 }
 
 fn decode_frame(msg: &[f32]) -> Option<(u64, Vec<Vec<f32>>)> {
@@ -176,6 +188,77 @@ pub fn decode_predict_batch_result_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]
     decode_frame_views(msg)
 }
 
+// ---------------------------------------------------------------------------
+// Flat-data-plane frame codecs (uniform batches, zero per-row work)
+// ---------------------------------------------------------------------------
+
+use crate::comm::bus::Payload;
+use crate::data::batch::{BatchView, PayloadBatch, RowBlock};
+
+fn decode_frame_rows(msg: &[f32]) -> Option<(u64, BatchView<'_>)> {
+    let (id, rest) = decode_frame_id(msg)?;
+    Some((id, crate::comm::codec::unpack_batch_view(rest)?))
+}
+
+/// Decode a `PredictBatch` frame whose items all share one width as a
+/// strided [`BatchView`] over `msg` — **zero allocations**. Returns `None`
+/// on malformed input *or* ragged item widths; callers fall back to
+/// [`decode_predict_batch_views`] for the ragged case.
+pub fn decode_predict_batch_rows(msg: &[f32]) -> Option<(u64, BatchView<'_>)> {
+    decode_frame_rows(msg)
+}
+
+/// Flat-batch decode of a `PredictBatchResult` frame; see
+/// [`decode_predict_batch_rows`].
+pub fn decode_predict_batch_result_rows(msg: &[f32]) -> Option<(u64, BatchView<'_>)> {
+    decode_frame_rows(msg)
+}
+
+/// Payload-retaining decode of a uniform `PredictBatchResult` frame: the
+/// rows region is returned as a [`PayloadBatch`] — a zero-copy slice of the
+/// received payload — so a committee reply can be held by refcount until
+/// the whole batch reduces, without re-boxing any row.
+pub fn decode_predict_batch_result_shared(msg: &Payload) -> Option<(u64, PayloadBatch)> {
+    let (id, rest) = decode_frame_id(msg)?;
+    let (rows, width, start) = crate::comm::codec::unpack_uniform(rest)?;
+    // `rest` starts 2 values into the frame
+    let data_start = 2 + start;
+    let pb = PayloadBatch::from_payload(msg.slice(data_start..msg.len()), rows, width)?;
+    Some((id, pb))
+}
+
+fn encode_frame_rows_into(id: u64, batch: &BatchView<'_>, out: &mut Vec<f32>) {
+    push_frame_id(id, out);
+    crate::comm::codec::pack_batch_into(batch, out);
+}
+
+/// Encode a `PredictBatch` frame from a uniform batch (clears `out`) —
+/// wire-identical to [`encode_predict_batch`] over the batch's rows, but
+/// the data section is a single `memcpy`.
+pub fn encode_predict_batch_rows_into(id: u64, batch: &BatchView<'_>, out: &mut Vec<f32>) {
+    encode_frame_rows_into(id, batch, out)
+}
+
+/// Encode a `PredictBatchResult` frame from a uniform batch (clears `out`).
+pub fn encode_predict_batch_result_rows_into(id: u64, batch: &BatchView<'_>, out: &mut Vec<f32>) {
+    encode_frame_rows_into(id, batch, out)
+}
+
+/// Encode a `PredictBatch` frame from a contiguous (possibly ragged)
+/// [`RowBlock`] (clears `out`) — the scheduler's dispatch path.
+pub fn encode_predict_batch_block_into(id: u64, rows: &RowBlock, out: &mut Vec<f32>) {
+    push_frame_id(id, out);
+    crate::comm::codec::pack_rows_into_buf(rows, out);
+}
+
+/// Encode a `PredictBatchResult` frame from a contiguous (possibly ragged)
+/// [`RowBlock`] (clears `out`) — the prediction host's reply path for
+/// `Model::predict_batch` output.
+pub fn encode_predict_batch_result_block_into(id: u64, rows: &RowBlock, out: &mut Vec<f32>) {
+    push_frame_id(id, out);
+    crate::comm::codec::pack_rows_into_buf(rows, out);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +302,61 @@ mod tests {
         assert_eq!(scratch, enc);
         encode_predict_batch_result_into(7, &items, &mut scratch);
         assert_eq!(scratch, enc);
+    }
+
+    #[test]
+    fn flat_frame_codec_interops_with_nested() {
+        use crate::data::batch::Batch;
+        let items = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let nested_enc = encode_predict_batch(9, &items);
+        // flat decode of a nested-encoded frame
+        let (id, view) = decode_predict_batch_rows(&nested_enc).unwrap();
+        assert_eq!((id, view.rows(), view.width()), (9, 3, 2));
+        assert_eq!(view.row(2), &[5.0, 6.0]);
+        // flat encode produces identical wire bytes
+        let batch = Batch::from_rows(&items).unwrap();
+        let mut flat_enc = vec![0.0f32; 2]; // must be cleared
+        encode_predict_batch_rows_into(9, &batch.view(), &mut flat_enc);
+        assert_eq!(flat_enc, nested_enc);
+        encode_predict_batch_result_rows_into(9, &batch.view(), &mut flat_enc);
+        assert_eq!(flat_enc, nested_enc);
+        let rb = crate::data::batch::RowBlock::from_rows(&items);
+        encode_predict_batch_block_into(9, &rb, &mut flat_enc);
+        assert_eq!(flat_enc, nested_enc);
+        // result-rows decode agrees
+        let (id2, view2) = decode_predict_batch_result_rows(&nested_enc).unwrap();
+        assert_eq!((id2, view2.rows()), (9, 3));
+    }
+
+    #[test]
+    fn flat_frame_decode_rejects_ragged_and_truncated() {
+        let ragged = vec![vec![1.0, 2.0], vec![3.0]];
+        let enc = encode_predict_batch(1, &ragged);
+        assert!(decode_predict_batch(&enc).is_some(), "nested accepts ragged");
+        assert!(decode_predict_batch_rows(&enc).is_none(), "flat rejects ragged");
+        let uniform = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let enc = encode_predict_batch(1, &uniform);
+        assert!(decode_predict_batch_rows(&enc[..enc.len() - 1]).is_none());
+        assert!(decode_predict_batch_rows(&[]).is_none());
+        // empty batch is uniform
+        let empty = encode_predict_batch(5, &[]);
+        let (id, view) = decode_predict_batch_rows(&empty).unwrap();
+        assert_eq!((id, view.rows()), (5, 0));
+    }
+
+    #[test]
+    fn shared_result_decode_slices_payload() {
+        use crate::comm::bus::Payload;
+        let items = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let p = Payload::from(encode_predict_batch_result(3, &items));
+        let (id, pb) = decode_predict_batch_result_shared(&p).unwrap();
+        assert_eq!((id, pb.rows(), pb.width()), (3, 2, 2));
+        assert_eq!(pb.view().row(1), &[3.0, 4.0]);
+        // the rows region shares the frame payload's buffer
+        assert!(p.shared_handles() >= 2);
+        // ragged/truncated payloads reject
+        let ragged = Payload::from(encode_predict_batch_result(3, &[vec![1.0], vec![2.0, 3.0]]));
+        assert!(decode_predict_batch_result_shared(&ragged).is_none());
     }
 
     #[test]

@@ -1,16 +1,21 @@
 //! Manager-side buffers: oracle input buffer + training data buffer
 //! (the "metadata storage" of §2.5).
 
-use std::collections::VecDeque;
-
+use crate::data::batch::RowQueue;
 use crate::data::Datapoint;
 
 /// FIFO of inputs awaiting oracle labeling, with optional capacity bound
 /// (backpressure: when full, the oldest *lowest-priority* entries are
 /// dropped — the controller decided they were stale).
+///
+/// Storage is a flat [`RowQueue`]: staged inputs live contiguously in one
+/// buffer, so enqueuing a decoded selection row ([`OracleBuffer::push_row`])
+/// and handing a row to a free oracle ([`OracleBuffer::pop_row`]) never
+/// allocate per row. The nested-`Vec` API (`push_all` / `pop` / `drain`)
+/// remains for the cold re-scoring path and compatibility.
 #[derive(Debug, Default)]
 pub struct OracleBuffer {
-    queue: VecDeque<Vec<f32>>,
+    queue: RowQueue,
     /// Hard cap; None = unbounded.
     pub capacity: Option<usize>,
     /// Total samples ever enqueued / dropped (telemetry).
@@ -31,40 +36,67 @@ impl OracleBuffer {
         self.queue.is_empty()
     }
 
-    /// Enqueue inputs; drops from the *back* (newest beyond cap) under
-    /// pressure — entries already ordered by priority by `prediction_check`
-    /// / `adjust_input_for_oracle`.
-    pub fn push_all(&mut self, inputs: Vec<Vec<f32>>) {
-        for x in inputs {
-            self.enqueued += 1;
-            self.queue.push_back(x);
-        }
+    fn evict_over_cap(&mut self) {
         if let Some(cap) = self.capacity {
             while self.queue.len() > cap {
-                self.queue.pop_back();
+                self.queue.drop_back();
                 self.dropped += 1;
             }
         }
     }
 
-    /// Next input for a free oracle.
-    pub fn pop(&mut self) -> Option<Vec<f32>> {
-        self.queue.pop_front()
+    /// Enqueue one input row (hot path: values copy straight from the
+    /// decoded payload into the flat staging buffer; no boxing). Drops from
+    /// the *back* (newest beyond cap) under pressure — `prediction_check`
+    /// orders each selection batch by priority, and
+    /// `adjust_input_for_oracle` re-fronts the most uncertain entries on
+    /// every rescore (exactly for the next dispatch window; the tail is
+    /// kept but only approximately ordered).
+    pub fn push_row(&mut self, row: &[f32]) {
+        self.enqueued += 1;
+        self.queue.push_row(row);
+        self.evict_over_cap();
     }
 
-    /// Drain all buffered inputs (for `adjust_input_for_oracle` re-scoring).
+    /// Enqueue owned inputs (legacy API; same eviction semantics).
+    pub fn push_all(&mut self, inputs: Vec<Vec<f32>>) {
+        for x in &inputs {
+            self.enqueued += 1;
+            self.queue.push_row(x);
+        }
+        self.evict_over_cap();
+    }
+
+    /// Next input for a free oracle, borrowed from the flat buffer (valid
+    /// until the next mutation). No allocation.
+    pub fn pop_row(&mut self) -> Option<&[f32]> {
+        self.queue.pop_front_row()
+    }
+
+    /// Next input for a free oracle, owned (legacy API).
+    pub fn pop(&mut self) -> Option<Vec<f32>> {
+        self.queue.pop_front_row().map(|r| r.to_vec())
+    }
+
+    /// Drain all buffered inputs (for `adjust_input_for_oracle` re-scoring;
+    /// cold path, so the nested materialization is fine).
     pub fn drain(&mut self) -> Vec<Vec<f32>> {
-        self.queue.drain(..).collect()
+        let out: Vec<Vec<f32>> = self.queue.iter().map(|r| r.to_vec()).collect();
+        self.queue = RowQueue::new();
+        out
     }
 
     /// Replace contents (after user adjustment). The adjusted list must be
     /// a sub-multiset of the drained one — validated by the caller in
     /// debug builds.
     pub fn replace(&mut self, inputs: Vec<Vec<f32>>) {
-        self.queue = inputs.into();
+        self.queue = RowQueue::new();
+        for x in &inputs {
+            self.queue.push_row(x);
+        }
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &Vec<f32>> {
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
         self.queue.iter()
     }
 }
@@ -148,6 +180,18 @@ mod tests {
         assert!(b.is_empty());
         b.replace(vec![drained[2].clone(), drained[0].clone()]);
         assert_eq!(b.pop().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn oracle_buffer_flat_rows_roundtrip() {
+        let mut b = OracleBuffer::new(Some(2));
+        b.push_row(&[1.0, 2.0]);
+        b.push_row(&[3.0, 4.0]);
+        b.push_row(&[5.0, 6.0]); // over cap: newest dropped
+        assert_eq!((b.len(), b.dropped, b.enqueued), (2, 1, 3));
+        assert_eq!(b.pop_row().unwrap(), &[1.0, 2.0]);
+        assert_eq!(b.pop_row().unwrap(), &[3.0, 4.0]);
+        assert!(b.pop_row().is_none());
     }
 
     #[test]

@@ -20,11 +20,12 @@
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
-use crate::comm::bus::{Endpoint, Src};
+use crate::comm::bus::{Endpoint, Payload, Src};
 use crate::comm::codec;
 use crate::comm::protocol::*;
 use crate::config::{topology, AlSetting, BatchSetting, ExchangeMode, Topology};
 use crate::coordinator::hosts::{gather_poll, is_down, ShutdownFlag};
+use crate::data::batch::{PayloadBatch, RowBlock, RowQueue};
 use crate::kernels::Utils;
 use crate::telemetry::KernelTelemetry;
 
@@ -61,10 +62,13 @@ fn lockstep_host(
     let gene = topo.gene_ranks();
     let pred = topo.pred_ranks();
     let oracle_enabled = !topo.orcl_ranks().is_empty();
-    // reusable pack scratch: each round re-encodes the stacked input list
-    // without a fresh allocation, then converts once into a shared payload
-    // that fans out to every prediction rank by refcount
+    // reusable scratches: the stacked input rows live in one flat RowBlock,
+    // re-encoded each round without fresh allocations, then converted once
+    // into a shared payload that fans out to every prediction rank by
+    // refcount
     let mut pack_buf = codec::PackBuffer::new();
+    let mut orcl_pack = codec::PackBuffer::new();
+    let mut inputs = RowBlock::new();
     let mut iterations: u64 = 0;
     let t_start = Instant::now();
 
@@ -74,14 +78,14 @@ fn lockstep_host(
         }
         if let Some(max) = setting.stop.max_iterations {
             if iterations >= max {
-                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
                 tel.bump("stop_signals");
                 break;
             }
         }
         if let Some(max_wall) = setting.stop.max_wall {
             if t_start.elapsed() >= max_wall {
-                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
                 tel.bump("stop_signals");
                 break;
             }
@@ -105,23 +109,21 @@ fn lockstep_host(
         tel.record("gather_gen", t0.elapsed());
 
         let mut any_stop = false;
-        let inputs: Vec<Vec<f32>> = raw
-            .iter()
-            .map(|m| {
-                let (stop, data) = decode_gen(m);
-                any_stop |= stop;
-                data.to_vec()
-            })
-            .collect();
+        inputs.clear();
+        for m in &raw {
+            let (stop, data) = decode_gen(m);
+            any_stop |= stop;
+            inputs.push_row(data);
+        }
         if any_stop {
             // a generator met its stop criterion (SI §S6); tell the Manager
-            ep.send(topology::MANAGER, TAG_STOP, vec![]);
+            ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
             tel.bump("stop_signals");
         }
 
         // broadcast the same input list to every prediction process
         let t1 = Instant::now();
-        ep.bcast(&pred, TAG_PRED_IN, pack_buf.pack(&inputs));
+        ep.bcast(&pred, TAG_PRED_IN, pack_buf.pack_row_block(&inputs));
         tel.record("bcast_pred", t1.elapsed());
 
         // blue flow: committee predictions
@@ -132,36 +134,88 @@ fn lockstep_host(
         };
         tel.record("gather_pred", t2.elapsed());
 
-        let mut preds_per_model = Vec::with_capacity(packed_preds.len());
-        for p in &packed_preds {
-            match codec::unpack(p) {
-                Some(list) if list.len() == gene.len() => preds_per_model.push(list),
-                _ => {
-                    tel.bump("malformed");
-                    continue 'outer;
+        // flat fast path: uniform inputs + uniform equal-width committee
+        // replies reduce as strided views straight over the received
+        // payloads — no nested materialization anywhere
+        let flat_views = {
+            let mut vs = Vec::with_capacity(packed_preds.len());
+            let mut ok = true;
+            for p in &packed_preds {
+                match codec::unpack_batch_view(p) {
+                    Some(v) if v.rows() == gene.len() => vs.push(v),
+                    _ => {
+                        ok = false;
+                        break;
+                    }
                 }
             }
-        }
+            ok = ok && vs.windows(2).all(|w| w[0].width() == w[1].width());
+            if ok {
+                Some(vs)
+            } else {
+                None
+            }
+        };
 
         // controller-side UQ decision (paper: "the uncertainty
         // quantification ... is handled centrally by the controller kernel")
-        let t3 = Instant::now();
-        let (to_orcl, checked) = utils.prediction_check(&inputs, &preds_per_model);
-        tel.record("prediction_check", t3.elapsed());
-        assert_eq!(
-            checked.len(),
-            gene.len(),
-            "prediction_check must return one entry per generator"
-        );
+        let checked = match (inputs.as_view(), flat_views) {
+            (Some(input_view), Some(views)) => {
+                let t3 = Instant::now();
+                let (to_orcl, checked) = utils.prediction_check_batch(&input_view, &views);
+                tel.record("prediction_check", t3.elapsed());
+                assert_eq!(
+                    checked.len(),
+                    gene.len(),
+                    "prediction_check must return one entry per generator"
+                );
+                if oracle_enabled && !to_orcl.is_empty() {
+                    tel.add("selected_for_oracle", to_orcl.len() as u64);
+                    ep.send(
+                        topology::MANAGER,
+                        TAG_ORCL_SELECT,
+                        orcl_pack.pack_row_block(&to_orcl),
+                    );
+                }
+                checked
+            }
+            _ => {
+                // ragged traffic: legacy nested decode + check
+                let mut preds_per_model = Vec::with_capacity(packed_preds.len());
+                for p in &packed_preds {
+                    match codec::unpack(p) {
+                        Some(list) if list.len() == gene.len() => preds_per_model.push(list),
+                        _ => {
+                            tel.bump("malformed");
+                            continue 'outer;
+                        }
+                    }
+                }
+                let nested_inputs = inputs.to_nested();
+                let t3 = Instant::now();
+                let (to_orcl, checked) = utils.prediction_check(&nested_inputs, &preds_per_model);
+                tel.record("prediction_check", t3.elapsed());
+                assert_eq!(
+                    checked.len(),
+                    gene.len(),
+                    "prediction_check must return one entry per generator"
+                );
+                if oracle_enabled && !to_orcl.is_empty() {
+                    tel.add("selected_for_oracle", to_orcl.len() as u64);
+                    ep.send(topology::MANAGER, TAG_ORCL_SELECT, codec::pack_vecs(&to_orcl));
+                }
+                RowBlock::from_rows(&checked)
+            }
+        };
 
-        if oracle_enabled && !to_orcl.is_empty() {
-            tel.add("selected_for_oracle", to_orcl.len() as u64);
-            ep.send(topology::MANAGER, TAG_ORCL_SELECT, codec::pack_vecs(&to_orcl));
-        }
-
-        // scatter checked predictions back, ordered by generator rank
+        // scatter checked predictions back, ordered by generator rank —
+        // each generator's row is a zero-copy slice of one shared payload
+        // (one counted ingest copy for the whole block)
         let t4 = Instant::now();
-        ep.scatter(&gene, TAG_GENE_IN, checked);
+        ep.note_ingest(checked.total_values());
+        let shared = checked.into_shared();
+        let payloads: Vec<Payload> = (0..gene.len()).map(|i| shared.row_payload(i)).collect();
+        ep.scatter(&gene, TAG_GENE_IN, payloads);
         tel.record("scatter_gene", t4.elapsed());
 
         iterations += 1;
@@ -174,11 +228,11 @@ fn lockstep_host(
 // Batch scheduler (pure core: triggers, shard routing, backpressure)
 // ---------------------------------------------------------------------------
 
-/// One queued prediction request.
+/// One queued prediction request's metadata; the request's values live in
+/// the scheduler's flat [`RowQueue`] at the same position.
 #[derive(Debug)]
 struct Pending {
     origin: usize,
-    data: Vec<f32>,
     enqueued: Instant,
 }
 
@@ -189,14 +243,21 @@ pub struct DispatchedBatch {
     pub shard: usize,
     /// Originating generator rank per item, aligned with `items`.
     pub origins: Vec<usize>,
-    pub items: Vec<Vec<f32>>,
+    /// The batched rows, contiguous in one buffer (ordered like `origins`).
+    pub items: RowBlock,
 }
 
 /// Size-/deadline-triggered micro-batching with shard routing and
 /// per-shard backpressure. Pure state machine: callers inject `now`, so the
 /// trigger semantics are unit-testable without threads or sleeps.
+///
+/// The queue is flat: request values are staged contiguously in a
+/// [`RowQueue`] (the generator buffer of the flat data plane), so enqueuing
+/// a request copies its values once and allocates nothing per request in
+/// steady state.
 pub struct BatchScheduler {
     queue: VecDeque<Pending>,
+    rows: RowQueue,
     max_size: usize,
     max_delay: Duration,
     max_outstanding: usize,
@@ -211,6 +272,7 @@ impl BatchScheduler {
     pub fn new(batch: &BatchSetting, n_shards: usize) -> Self {
         BatchScheduler {
             queue: VecDeque::new(),
+            rows: RowQueue::new(),
             max_size: batch.max_size.max(1),
             max_delay: batch.max_delay,
             max_outstanding: batch.max_outstanding.max(1),
@@ -220,9 +282,11 @@ impl BatchScheduler {
         }
     }
 
-    /// Enqueue one request (FIFO).
-    pub fn push(&mut self, origin: usize, data: Vec<f32>, now: Instant) {
-        self.queue.push_back(Pending { origin, data, enqueued: now });
+    /// Enqueue one request (FIFO). The row copies straight from the decoded
+    /// payload into the flat staging buffer.
+    pub fn push(&mut self, origin: usize, data: &[f32], now: Instant) {
+        self.queue.push_back(Pending { origin, enqueued: now });
+        self.rows.push_row(data);
     }
 
     pub fn queue_len(&self) -> usize {
@@ -282,13 +346,21 @@ impl BatchScheduler {
         }
         let shard = self.pick_shard()?;
         let n = self.queue.len().min(self.max_size);
-        let mut taken: Vec<Pending> = self.queue.drain(..n).collect();
-        taken.sort_by_key(|p| p.origin); // stable: FIFO within an origin
+        // origin-sorted take order (stable: FIFO within an origin)
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| self.queue[i].origin);
+        let total: usize = (0..n).map(|i| self.rows.row(i).len()).sum();
+        let mut origins = Vec::with_capacity(n);
+        let mut items = RowBlock::with_capacity(n, total);
+        for &i in &order {
+            origins.push(self.queue[i].origin);
+            items.push_row(self.rows.row(i));
+        }
+        self.queue.drain(..n);
+        self.rows.drop_front(n);
         let id = self.next_id;
         self.next_id += 1;
         self.outstanding[shard] += 1;
-        let origins = taken.iter().map(|p| p.origin).collect();
-        let items = taken.into_iter().map(|p| p.data).collect();
         Some(DispatchedBatch { id, shard, origins, items })
     }
 
@@ -303,14 +375,76 @@ impl BatchScheduler {
 // Batched relay host
 // ---------------------------------------------------------------------------
 
+/// One committee member's accepted reply.
+#[derive(Debug, Clone)]
+enum MemberReply {
+    /// Uniform reply retained as a zero-copy slice of the received payload
+    /// (the steady state): rows are read by stride straight off the wire
+    /// buffer at reduction time.
+    Flat(PayloadBatch),
+    /// Ragged reply (legacy encoder): owned rows.
+    Nested(Vec<Vec<f32>>),
+}
+
 /// A dispatched batch awaiting its committee replies.
 struct InFlight {
     shard: usize,
     origins: Vec<usize>,
-    items: Vec<Vec<f32>>,
+    items: RowBlock,
     /// One slot per committee member (well-formed replies only).
-    replies: Vec<Option<Vec<Vec<f32>>>>,
+    replies: Vec<Option<MemberReply>>,
     n_replies: usize,
+}
+
+/// Reduce one completed batch. Flat path when the inputs are uniform and
+/// every accepted reply is a uniform, equal-width payload batch — the
+/// committee reduction then reads by stride straight off the received
+/// payloads. Nested fallback otherwise (ragged traffic or mixed encoders).
+/// Zero accepted replies yields empty checked rows so the generators never
+/// stall.
+fn reduce_batch(
+    utils: &mut dyn Utils,
+    items: &RowBlock,
+    replies: Vec<MemberReply>,
+) -> (RowBlock, RowBlock) {
+    if replies.is_empty() {
+        // every member reply was malformed; unblock the generators with
+        // empty payloads rather than stalling the loop
+        let mut checked = RowBlock::new();
+        for _ in 0..items.len() {
+            checked.push_row(&[]);
+        }
+        return (RowBlock::new(), checked);
+    }
+    if let Some(input_view) = items.as_view() {
+        let mut views = Vec::with_capacity(replies.len());
+        for r in &replies {
+            match r {
+                MemberReply::Flat(pb) => views.push(pb.view()),
+                MemberReply::Nested(_) => {
+                    views.clear();
+                    break;
+                }
+            }
+        }
+        if views.len() == replies.len()
+            && views.windows(2).all(|w| w[0].width() == w[1].width())
+        {
+            return utils.prediction_check_batch(&input_view, &views);
+        }
+    }
+    // ragged fallback: legacy nested reduction (owned replies move in;
+    // only payload-backed ones must materialize)
+    let preds_per_model: Vec<Vec<Vec<f32>>> = replies
+        .into_iter()
+        .map(|r| match r {
+            MemberReply::Flat(pb) => pb.view().to_nested(),
+            MemberReply::Nested(v) => v,
+        })
+        .collect();
+    let nested_inputs = items.to_nested();
+    let (o, c) = utils.prediction_check(&nested_inputs, &preds_per_model);
+    (RowBlock::from_rows(&o), RowBlock::from_rows(&c))
 }
 
 fn batched_host(
@@ -327,9 +461,10 @@ fn batched_host(
     let oracle_enabled = !topo.orcl_ranks().is_empty();
     let mut scheduler = BatchScheduler::new(&setting.batch, shards.len());
     let mut inflight: HashMap<u64, InFlight> = HashMap::new();
-    // reusable frame scratch: each dispatched batch is encoded in place and
+    // reusable scratches: each dispatched batch is encoded in place and
     // converted once into a shared payload for the whole committee shard
     let mut frame_buf: Vec<f32> = Vec::new();
+    let mut orcl_pack = codec::PackBuffer::new();
     let mut iterations: u64 = 0;
     let mut stop_forwarded = false;
     let t_start = Instant::now();
@@ -340,14 +475,14 @@ fn batched_host(
         }
         if let Some(max) = setting.stop.max_iterations {
             if iterations >= max {
-                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
                 tel.bump("stop_signals");
                 break;
             }
         }
         if let Some(max_wall) = setting.stop.max_wall {
             if t_start.elapsed() >= max_wall {
-                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
                 tel.bump("stop_signals");
                 break;
             }
@@ -370,23 +505,31 @@ fn batched_host(
             let (stop, data) = decode_gen(&m.data);
             if stop && !stop_forwarded {
                 // a generator met its stop criterion; tell the Manager once
-                ep.send(topology::MANAGER, TAG_STOP, vec![]);
+                ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
                 tel.bump("stop_signals");
                 stop_forwarded = true;
             }
-            scheduler.push(m.src, data.to_vec(), Instant::now());
+            // the request row copies once into the scheduler's flat queue
+            scheduler.push(m.src, data, Instant::now());
             did_work = true;
         }
 
         // --- blue flow in: committee replies, one frame per member ---
         while let Some(m) = ep.try_recv(Src::Any, TAG_PRED_BATCH_RESULT) {
             did_work = true;
-            // borrowed-view decode: orphan, duplicate, and wrong-arity
-            // replies are rejected without materializing owned output lists
-            let Some((id, output_views)) = decode_predict_batch_result_views(&m.data) else {
-                tel.bump("malformed");
-                continue;
-            };
+            // uniform replies are retained as zero-copy slices of the
+            // received payload; ragged ones fall back to owned rows; both
+            // reject orphans, duplicates and wrong arity before any boxing
+            let (id, reply_rows, reply) =
+                if let Some((id, pb)) = decode_predict_batch_result_shared(&m.data) {
+                    (id, pb.rows(), MemberReply::Flat(pb))
+                } else if let Some((id, views)) = decode_predict_batch_result_views(&m.data) {
+                    let owned: Vec<Vec<f32>> = views.into_iter().map(|s| s.to_vec()).collect();
+                    (id, owned.len(), MemberReply::Nested(owned))
+                } else {
+                    tel.bump("malformed");
+                    continue;
+                };
             let Some(fl) = inflight.get_mut(&id) else {
                 tel.bump("orphan_replies");
                 continue;
@@ -400,10 +543,8 @@ fn batched_host(
                 continue;
             }
             fl.n_replies += 1;
-            if output_views.len() == fl.items.len() {
-                // accepted: own the outputs (they outlive this frame)
-                fl.replies[member] =
-                    Some(output_views.into_iter().map(|s| s.to_vec()).collect());
+            if reply_rows == fl.items.len() {
+                fl.replies[member] = Some(reply);
             } else {
                 tel.bump("malformed");
             }
@@ -414,16 +555,9 @@ fn batched_host(
             // batch complete: UQ check, forward selections, scatter results
             let fl = inflight.remove(&id).expect("present above");
             scheduler.complete(fl.shard);
-            let preds_per_model: Vec<Vec<Vec<f32>>> =
-                fl.replies.into_iter().flatten().collect();
+            let replies: Vec<MemberReply> = fl.replies.into_iter().flatten().collect();
             let t0 = Instant::now();
-            let (to_orcl, checked) = if preds_per_model.is_empty() {
-                // every member reply was malformed; unblock the generators
-                // with empty payloads rather than stalling the loop
-                (Vec::new(), vec![Vec::new(); fl.items.len()])
-            } else {
-                utils.prediction_check(&fl.items, &preds_per_model)
-            };
+            let (to_orcl, checked) = reduce_batch(&mut *utils, &fl.items, replies);
             tel.record("prediction_check", t0.elapsed());
             assert_eq!(
                 checked.len(),
@@ -432,10 +566,18 @@ fn batched_host(
             );
             if oracle_enabled && !to_orcl.is_empty() {
                 tel.add("selected_for_oracle", to_orcl.len() as u64);
-                ep.send(topology::MANAGER, TAG_ORCL_SELECT, codec::pack_vecs(&to_orcl));
+                ep.send(
+                    topology::MANAGER,
+                    TAG_ORCL_SELECT,
+                    orcl_pack.pack_row_block(&to_orcl),
+                );
             }
-            for (&origin, payload) in fl.origins.iter().zip(checked) {
-                ep.send(origin, TAG_GENE_IN, payload);
+            // per-item results scatter as zero-copy row slices of one
+            // shared result payload (one counted ingest copy per batch)
+            ep.note_ingest(checked.total_values());
+            let shared = checked.into_shared();
+            for (i, &origin) in fl.origins.iter().enumerate() {
+                ep.send(origin, TAG_GENE_IN, shared.row_payload(i));
             }
             iterations += 1;
             tel.bump("iterations");
@@ -460,7 +602,7 @@ fn batched_host(
             let Some(batch) = scheduler.try_dispatch(Instant::now()) else {
                 break;
             };
-            encode_predict_batch_into(batch.id, &batch.items, &mut frame_buf);
+            encode_predict_batch_block_into(batch.id, &batch.items, &mut frame_buf);
             ep.bcast(&shards[batch.shard], TAG_PRED_BATCH, &frame_buf[..]);
             tel.bump("batches_dispatched");
             if batch.items.len() < setting.batch.max_size {
@@ -570,8 +712,8 @@ mod tests {
     fn no_trigger_before_size_or_deadline() {
         let mut s = sched(4, 10, 2, 2);
         let t0 = Instant::now();
-        s.push(8, vec![1.0], t0);
-        s.push(9, vec![2.0], t0);
+        s.push(8, &[1.0], t0);
+        s.push(9, &[2.0], t0);
         // neither full nor old enough → nothing dispatches
         assert!(s.try_dispatch(t0 + Duration::from_millis(1)).is_none());
         assert_eq!(s.queue_len(), 2);
@@ -581,8 +723,8 @@ mod tests {
     fn deadline_fires_with_partial_batch() {
         let mut s = sched(4, 10, 2, 2);
         let t0 = Instant::now();
-        s.push(8, vec![1.0], t0);
-        s.push(9, vec![2.0], t0 + Duration::from_millis(5));
+        s.push(8, &[1.0], t0);
+        s.push(9, &[2.0], t0 + Duration::from_millis(5));
         let b = s.try_dispatch(t0 + Duration::from_millis(10)).expect("deadline trigger");
         assert_eq!(b.items.len(), 2, "partial batch takes everything queued");
         assert_eq!(b.origins, vec![8, 9]);
@@ -594,14 +736,14 @@ mod tests {
         let mut s = sched(3, 1_000_000, 2, 2);
         let t0 = Instant::now();
         for origin in [10, 8, 9] {
-            s.push(origin, vec![origin as f32], t0);
+            s.push(origin, &[origin as f32], t0);
         }
         // deadline is far away, but the queue hit max_size → dispatch now
         let b = s.try_dispatch(t0).expect("size trigger");
         assert_eq!(b.items.len(), 3);
         // items ordered by origin rank within the batch
         assert_eq!(b.origins, vec![8, 9, 10]);
-        assert_eq!(b.items, vec![vec![8.0], vec![9.0], vec![10.0]]);
+        assert_eq!(b.items.to_nested(), vec![vec![8.0], vec![9.0], vec![10.0]]);
     }
 
     #[test]
@@ -609,7 +751,7 @@ mod tests {
         let mut s = sched(2, 1_000_000, 4, 1);
         let t0 = Instant::now();
         for origin in [5, 6, 7] {
-            s.push(origin, vec![origin as f32], t0);
+            s.push(origin, &[origin as f32], t0);
         }
         let b = s.try_dispatch(t0).unwrap();
         assert_eq!(b.origins, vec![5, 6], "oldest two leave first");
@@ -621,7 +763,7 @@ mod tests {
         let mut s = sched(1, 0, 2, 3);
         let t0 = Instant::now();
         for i in 0..3 {
-            s.push(8, vec![i as f32], t0);
+            s.push(8, &[i as f32], t0);
         }
         let shards: Vec<usize> = (0..3).map(|_| s.try_dispatch(t0).unwrap().shard).collect();
         assert_eq!(shards, vec![0, 1, 2]);
@@ -632,7 +774,7 @@ mod tests {
         let mut s = sched(1, 0, 1, 2);
         let t0 = Instant::now();
         for i in 0..3 {
-            s.push(8, vec![i as f32], t0);
+            s.push(8, &[i as f32], t0);
         }
         let a = s.try_dispatch(t0).unwrap();
         assert_eq!(a.shard, 0);
@@ -651,12 +793,12 @@ mod tests {
     fn backpressure_releases_in_fifo_order() {
         let mut s = sched(1, 0, 1, 1);
         let t0 = Instant::now();
-        s.push(8, vec![0.0], t0);
+        s.push(8, &[0.0], t0);
         let first = s.try_dispatch(t0).unwrap();
-        assert_eq!(first.items, vec![vec![0.0]]);
+        assert_eq!(first.items.to_nested(), vec![vec![0.0]]);
         // queue three more while the only shard is busy
         for i in 1..=3 {
-            s.push(8, vec![i as f32], t0);
+            s.push(8, &[i as f32], t0);
         }
         assert!(s.try_dispatch(t0).is_none(), "shard saturated");
         assert_eq!(s.queue_len(), 3, "backpressure leaves the queue intact");
@@ -664,7 +806,7 @@ mod tests {
         for i in 1..=3 {
             s.complete(0);
             let b = s.try_dispatch(t0).unwrap();
-            assert_eq!(b.items, vec![vec![i as f32]], "FIFO release");
+            assert_eq!(b.items.to_nested(), vec![vec![i as f32]], "FIFO release");
         }
         assert_eq!(s.queue_len(), 0);
     }
@@ -674,7 +816,7 @@ mod tests {
         let mut s = sched(1, 0, 8, 2);
         let t0 = Instant::now();
         for i in 0..5 {
-            s.push(8, vec![i as f32], t0);
+            s.push(8, &[i as f32], t0);
         }
         let ids: Vec<u64> = (0..5).map(|_| s.try_dispatch(t0).unwrap().id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);

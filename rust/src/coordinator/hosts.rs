@@ -177,7 +177,18 @@ pub fn prediction_host(
         }
         // manager re-scoring for dynamic_orcale_list
         if let Some(m) = ep.try_recv(Src::Rank(crate::config::topology::MANAGER), TAG_RESCORE_REQ) {
-            if let Some(inputs) = codec::unpack(&m.data) {
+            if let Some(view) = codec::unpack_batch_view(&m.data) {
+                // flat path: strided view over the request payload in,
+                // contiguous rows out, packed with one memcpy
+                let preds = tel.time("rescore", || model.predict_batch(&view));
+                tel.bump("rescores");
+                ep.send(
+                    crate::config::topology::MANAGER,
+                    TAG_RESCORE_RESP,
+                    reply.pack_row_block(&preds),
+                );
+            } else if let Some(inputs) = codec::unpack(&m.data) {
+                // ragged request: legacy nested path
                 let preds = tel.time("rescore", || model.predict(&inputs));
                 tel.bump("rescores");
                 ep.send(
@@ -188,42 +199,66 @@ pub fn prediction_host(
             }
         }
         // the hot path: stacked generator inputs from Exchange, as either a
-        // lockstep broadcast or a sharded batch frame
+        // lockstep broadcast or a sharded batch frame. Uniform-width frames
+        // (the steady state) decode to a strided view with zero per-row
+        // allocations and feed `predict_batch`; ragged frames fall back to
+        // the nested decode + `predict`.
         match ep.recv_timeout_tags(
             Src::Rank(crate::config::topology::EXCHANGE),
             &[TAG_PRED_IN, TAG_PRED_BATCH],
             poll,
         ) {
             Ok(m) if m.tag == TAG_PRED_BATCH => {
-                let Some((id, items)) = decode_predict_batch(&m.data) else {
+                if let Some((id, view)) = decode_predict_batch_rows(&m.data) {
+                    let preds = tel.time("predict", || model.predict_batch(&view));
+                    debug_assert_eq!(preds.len(), view.rows());
+                    tel.bump("batches");
+                    tel.add("samples", view.rows() as u64);
+                    encode_predict_batch_result_block_into(id, &preds, &mut frame);
+                    ep.send(
+                        crate::config::topology::EXCHANGE,
+                        TAG_PRED_BATCH_RESULT,
+                        &frame[..],
+                    );
+                } else if let Some((id, items)) = decode_predict_batch(&m.data) {
+                    let preds = tel.time("predict", || model.predict(&items));
+                    debug_assert_eq!(preds.len(), items.len());
+                    tel.bump("batches");
+                    tel.add("samples", items.len() as u64);
+                    encode_predict_batch_result_into(id, &preds, &mut frame);
+                    ep.send(
+                        crate::config::topology::EXCHANGE,
+                        TAG_PRED_BATCH_RESULT,
+                        &frame[..],
+                    );
+                } else {
                     tel.bump("malformed");
-                    continue;
-                };
-                let preds = tel.time("predict", || model.predict(&items));
-                debug_assert_eq!(preds.len(), items.len());
-                tel.bump("batches");
-                tel.add("samples", items.len() as u64);
-                encode_predict_batch_result_into(id, &preds, &mut frame);
-                ep.send(
-                    crate::config::topology::EXCHANGE,
-                    TAG_PRED_BATCH_RESULT,
-                    &frame[..],
-                );
+                }
             }
             Ok(m) => {
-                let Some(inputs) = codec::unpack(&m.data) else {
+                if let Some(view) = codec::unpack_batch_view(&m.data) {
+                    let preds = tel.time("predict", || model.predict_batch(&view));
+                    debug_assert_eq!(preds.len(), view.rows());
+                    tel.bump("batches");
+                    tel.add("samples", view.rows() as u64);
+                    ep.send(
+                        crate::config::topology::EXCHANGE,
+                        TAG_PRED_OUT,
+                        reply.pack_row_block(&preds),
+                    );
+                } else if let Some(inputs) = codec::unpack(&m.data) {
+                    let preds = tel.time("predict", || model.predict(&inputs));
+                    debug_assert_eq!(preds.len(), inputs.len());
+                    tel.bump("batches");
+                    tel.add("samples", inputs.len() as u64);
+                    ep.send(
+                        crate::config::topology::EXCHANGE,
+                        TAG_PRED_OUT,
+                        reply.pack(&preds),
+                    );
+                } else {
                     tel.bump("malformed");
-                    continue;
-                };
-                let preds = tel.time("predict", || model.predict(&inputs));
-                debug_assert_eq!(preds.len(), inputs.len());
-                tel.bump("batches");
-                tel.add("samples", inputs.len() as u64);
-                ep.send(
-                    crate::config::topology::EXCHANGE,
-                    TAG_PRED_OUT,
-                    reply.pack(&preds),
-                );
+                }
             }
             Err(crate::comm::RecvError::Timeout) => continue,
             Err(crate::comm::RecvError::Disconnected) => break,
@@ -295,7 +330,7 @@ pub fn training_host(
         model.save_progress();
         if stop {
             tel.bump("stop_signals");
-            ep.send(crate::config::topology::MANAGER, TAG_STOP, vec![]);
+            ep.send(crate::config::topology::MANAGER, TAG_STOP, Payload::empty());
         }
     }
     model.stop_run();

@@ -4,7 +4,7 @@
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
-use crate::comm::bus::{Endpoint, Src};
+use crate::comm::bus::{Endpoint, Payload, Src};
 use crate::comm::codec;
 use crate::comm::protocol::*;
 use crate::config::{AlSetting, Topology};
@@ -58,9 +58,13 @@ pub fn manager_host(
 
         // --- selected inputs from the Exchange (green flow in) ---
         while let Some(m) = ep.try_recv(Src::Rank(crate::config::topology::EXCHANGE), TAG_ORCL_SELECT) {
-            if let Some(inputs) = codec::unpack(&m.data) {
-                tel.add("selected_in", inputs.len() as u64);
-                orcl_buffer.push_all(inputs);
+            // flat ingest: decoded row views copy straight into the oracle
+            // buffer's contiguous staging storage — no per-row boxing
+            if let Some(rows) = codec::unpack_views(&m.data) {
+                tel.add("selected_in", rows.len() as u64);
+                for row in rows {
+                    orcl_buffer.push_row(row);
+                }
             } else {
                 tel.bump("malformed");
             }
@@ -118,7 +122,9 @@ pub fn manager_host(
                     break;
                 }
             }
-            if let Some(input) = orcl_buffer.pop() {
+            if let Some(input) = orcl_buffer.pop_row() {
+                // borrowed row out of the flat buffer; the send ingests it
+                // into a shared payload (the one unavoidable copy)
                 ep.send(rank, TAG_TO_ORACLE, input);
                 oracle_busy[i] = true;
                 dispatched_total += 1;
@@ -209,11 +215,13 @@ pub fn manager_host(
         }
     }
 
-    // --- shutdown fan-out: flag first (the truth), then wake every rank ---
+    // --- shutdown fan-out: flag first (the truth), then wake every rank.
+    // The empty control payload is the OnceLock-cached singleton: the whole
+    // fan-out allocates nothing ---
     down.store(true, Ordering::Release);
     for r in 0..ep.world_size() {
         if r != ep.rank() {
-            ep.send(r, TAG_SHUTDOWN, vec![]);
+            ep.send(r, TAG_SHUTDOWN, Payload::empty());
         }
     }
     // final drain: labels already computed should not be lost — push any

@@ -1,7 +1,47 @@
 //! Selection strategies: implementations of the paper's `prediction_check`
 //! and `adjust_input_for_oracle` utilities (SI "Utilities").
+//!
+//! Every reduction exists twice: the legacy nested-`Vec` form
+//! ([`committee_std`], [`committee_mean`], [`committee_std_check`]) kept
+//! for user kernels and fallback paths, and the flat-data-plane form
+//! ([`committee_std_batch`], [`committee_mean_batch`],
+//! [`committee_std_check_batch`]) operating on strided [`BatchView`]s —
+//! single-pass loops with zero inner-loop allocations, numerically
+//! identical to the nested form (same summation order, pinned by property
+//! tests). Top-k capping uses `select_nth_unstable_by` partial selection,
+//! so only the selected prefix is ever sorted.
 
+use crate::data::batch::{Batch, BatchView, RowBlock};
 use crate::kernels::Utils;
+
+/// Move the `k` largest-std entries of `cand` to the front via partial
+/// selection (`select_nth_unstable_by`, O(n)) and sort exactly that prefix
+/// descending; the tail keeps its arbitrary post-partition order. The one
+/// shared implementation for every top-k consumer, so tie-breaking and
+/// NaN handling can never diverge between them. Ties at the cut are broken
+/// arbitrarily (but deterministically for a given input).
+fn front_top_k_by_std(cand: &mut [usize], stds: &[f32], k: usize) {
+    let desc = |a: &usize, b: &usize| {
+        stds[*b].partial_cmp(&stds[*a]).unwrap_or(std::cmp::Ordering::Equal)
+    };
+    let k = k.min(cand.len());
+    if cand.len() > k {
+        if k == 0 {
+            return;
+        }
+        let _ = cand.select_nth_unstable_by(k - 1, desc);
+        cand[..k].sort_by(desc);
+    } else {
+        cand.sort_by(desc);
+    }
+}
+
+/// Order `cand` by std descending and keep only the top `k`.
+fn top_by_std_desc(mut cand: Vec<usize>, stds: &[f32], k: usize) -> Vec<usize> {
+    front_top_k_by_std(&mut cand, stds, k);
+    cand.truncate(k);
+    cand
+}
 
 /// Committee std over models for each generator: `preds[model][generator]`.
 /// Returns per-generator max-component std.
@@ -62,10 +102,9 @@ pub fn committee_std_check(
 ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
     let stds = committee_std(preds_per_model);
     let mut means = committee_mean(preds_per_model);
-    // rank candidate generators by std, descending
-    let mut cand: Vec<usize> = (0..stds.len()).filter(|&g| stds[g] > threshold).collect();
-    cand.sort_by(|&a, &b| stds[b].partial_cmp(&stds[a]).unwrap_or(std::cmp::Ordering::Equal));
-    cand.truncate(max_per_iter);
+    // candidates above threshold, capped by partial selection
+    let cand: Vec<usize> = (0..stds.len()).filter(|&g| stds[g] > threshold).collect();
+    let cand = top_by_std_desc(cand, &stds, max_per_iter);
     let mut to_orcl = Vec::with_capacity(cand.len());
     for &g in &cand {
         to_orcl.push(list_data_to_pred[g].clone());
@@ -74,6 +113,93 @@ pub fn committee_std_check(
         }
     }
     (to_orcl, means)
+}
+
+// ---------------------------------------------------------------------------
+// Flat-data-plane reductions (strided, zero inner-loop allocations)
+// ---------------------------------------------------------------------------
+
+/// Committee std over models for each row of the batch: `preds[model]` is a
+/// `rows × width` view (typically straight over a received result payload).
+/// Returns the per-row max-component std. Single pass per component, no
+/// inner-loop allocations; numerically identical to [`committee_std`] (same
+/// summation order over models).
+pub fn committee_std_batch(preds_per_model: &[BatchView<'_>]) -> Vec<f32> {
+    let n_models = preds_per_model.len();
+    if n_models == 0 {
+        return vec![];
+    }
+    let rows = preds_per_model[0].rows();
+    let width = preds_per_model[0].width();
+    let mut out = Vec::with_capacity(rows);
+    for g in 0..rows {
+        let mut max_std = 0.0f32;
+        for k in 0..width {
+            let mut sum = 0.0f32;
+            for m in preds_per_model {
+                sum += m.row(g)[k];
+            }
+            let mean = sum / n_models as f32;
+            let var = if n_models > 1 {
+                let mut acc = 0.0f32;
+                for m in preds_per_model {
+                    let d = m.row(g)[k] - mean;
+                    acc += d * d;
+                }
+                acc / (n_models as f32 - 1.0)
+            } else {
+                0.0
+            };
+            max_std = max_std.max(var.sqrt());
+        }
+        out.push(max_std);
+    }
+    out
+}
+
+/// Committee mean per row, as one contiguous [`Batch`]. Numerically
+/// identical to [`committee_mean`].
+pub fn committee_mean_batch(preds_per_model: &[BatchView<'_>]) -> Batch {
+    let n_models = preds_per_model.len();
+    if n_models == 0 {
+        return Batch::new();
+    }
+    let rows = preds_per_model[0].rows();
+    let width = preds_per_model[0].width();
+    let mut out = Batch::zeros(rows, width);
+    for g in 0..rows {
+        let row = out.row_mut(g);
+        for (k, slot) in row.iter_mut().enumerate() {
+            let mut sum = 0.0f32;
+            for m in preds_per_model {
+                sum += m.row(g)[k];
+            }
+            *slot = sum / n_models as f32;
+        }
+    }
+    out
+}
+
+/// Flat twin of [`committee_std_check`]: same selection and zeroing
+/// semantics, but inputs/outputs stay contiguous — the checked block is the
+/// mean batch with selected rows zeroed in place, ready to scatter as
+/// payload row slices.
+pub fn committee_std_check_batch(
+    inputs: &BatchView<'_>,
+    preds_per_model: &[BatchView<'_>],
+    threshold: f32,
+    max_per_iter: usize,
+) -> (RowBlock, RowBlock) {
+    let stds = committee_std_batch(preds_per_model);
+    let mut means = committee_mean_batch(preds_per_model);
+    let cand: Vec<usize> = (0..stds.len()).filter(|&g| stds[g] > threshold).collect();
+    let cand = top_by_std_desc(cand, &stds, max_per_iter);
+    let mut to_orcl = RowBlock::with_capacity(cand.len(), cand.len() * inputs.width());
+    for &g in &cand {
+        to_orcl.push_row(inputs.row(g));
+        means.row_mut(g).fill(0.0);
+    }
+    (to_orcl, means.into_row_block())
 }
 
 /// Std-threshold [`Utils`] with the paper's dynamic oracle-buffer
@@ -99,6 +225,14 @@ impl Utils for CommitteeStdUtils {
         committee_std_check(list_data_to_pred, preds_per_model, self.threshold, self.max_per_iter)
     }
 
+    fn prediction_check_batch(
+        &mut self,
+        inputs: &BatchView<'_>,
+        preds_per_model: &[BatchView<'_>],
+    ) -> (RowBlock, RowBlock) {
+        committee_std_check_batch(inputs, preds_per_model, self.threshold, self.max_per_iter)
+    }
+
     fn adjust_input_for_oracle(
         &mut self,
         buffer: Vec<Vec<f32>>,
@@ -109,13 +243,18 @@ impl Utils for CommitteeStdUtils {
         }
         let stds = committee_std(preds_per_model);
         debug_assert_eq!(stds.len(), buffer.len());
-        // sort by std descending, keep those still above threshold
-        let mut idx: Vec<usize> = (0..buffer.len()).collect();
-        idx.sort_by(|&a, &b| stds[b].partial_cmp(&stds[a]).unwrap_or(std::cmp::Ordering::Equal));
-        idx.into_iter()
-            .filter(|&i| stds[i] > self.threshold)
-            .map(|i| buffer[i].clone())
-            .collect()
+        // drop entries the retrained committee now agrees on, then order by
+        // uncertainty with partial selection: the `max_per_iter` most
+        // uncertain survivors are exactly sorted at the front (the next
+        // dispatch window), while the rest stay buffered behind them —
+        // partitioned below the window's minimum but otherwise unordered.
+        // This trades exact tail ordering between rescores for an O(n)
+        // pass instead of a full sort; each rescore re-fronts the current
+        // top-k, and nothing above threshold is ever discarded.
+        let mut keep: Vec<usize> =
+            (0..buffer.len()).filter(|&i| stds[i] > self.threshold).collect();
+        front_top_k_by_std(&mut keep, &stds, self.max_per_iter);
+        keep.into_iter().map(|i| buffer[i].clone()).collect()
     }
 }
 
@@ -133,6 +272,20 @@ impl Utils for SelectAllUtils {
         let means = committee_mean(preds_per_model);
         let take = self.max_per_iter.min(list_data_to_pred.len());
         (list_data_to_pred[..take].to_vec(), means)
+    }
+
+    fn prediction_check_batch(
+        &mut self,
+        inputs: &BatchView<'_>,
+        preds_per_model: &[BatchView<'_>],
+    ) -> (RowBlock, RowBlock) {
+        let means = committee_mean_batch(preds_per_model);
+        let take = self.max_per_iter.min(inputs.rows());
+        let mut to_orcl = RowBlock::with_capacity(take, take * inputs.width());
+        for g in 0..take {
+            to_orcl.push_row(inputs.row(g));
+        }
+        (to_orcl, means.into_row_block())
     }
 }
 
@@ -216,6 +369,64 @@ mod tests {
     fn single_model_std_is_zero() {
         let p = vec![vec![vec![3.0, 4.0]]];
         assert_eq!(committee_std(&p), vec![0.0]);
+    }
+
+    /// The nested preds() fixture as owned batches (2 models × 3 rows × 2).
+    fn pred_batches() -> Vec<Batch> {
+        preds().iter().map(|m| Batch::from_rows(m).unwrap()).collect()
+    }
+
+    #[test]
+    fn batch_reductions_match_nested_bitwise() {
+        let nested = preds();
+        let batches = pred_batches();
+        let views: Vec<BatchView<'_>> = batches.iter().map(|b| b.view()).collect();
+        assert_eq!(committee_std_batch(&views), committee_std(&nested));
+        assert_eq!(committee_mean_batch(&views).to_nested(), committee_mean(&nested));
+        // empty committee
+        assert!(committee_std_batch(&[]).is_empty());
+        assert_eq!(committee_mean_batch(&[]).rows(), 0);
+    }
+
+    #[test]
+    fn batch_check_matches_nested_check() {
+        let inputs = vec![vec![10.0], vec![20.0], vec![30.0]];
+        let input_batch = Batch::from_rows(&inputs).unwrap();
+        let batches = pred_batches();
+        let views: Vec<BatchView<'_>> = batches.iter().map(|b| b.view()).collect();
+        for (threshold, cap) in [(0.3f32, 10usize), (0.3, 1), (f32::MAX, 8), (0.0, 2)] {
+            let (n_orcl, n_checked) = committee_std_check(&inputs, &preds(), threshold, cap);
+            let (b_orcl, b_checked) =
+                committee_std_check_batch(&input_batch.view(), &views, threshold, cap);
+            assert_eq!(b_orcl.to_nested(), n_orcl, "to_orcl thr={threshold} cap={cap}");
+            assert_eq!(b_checked.to_nested(), n_checked, "checked thr={threshold} cap={cap}");
+        }
+    }
+
+    #[test]
+    fn select_all_batch_matches_nested() {
+        let mut u = SelectAllUtils { max_per_iter: 2 };
+        let inputs = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let (n_orcl, n_checked) = u.prediction_check(&inputs, &preds());
+        let input_batch = Batch::from_rows(&inputs).unwrap();
+        let batches = pred_batches();
+        let views: Vec<BatchView<'_>> = batches.iter().map(|b| b.view()).collect();
+        let (b_orcl, b_checked) = u.prediction_check_batch(&input_batch.view(), &views);
+        assert_eq!(b_orcl.to_nested(), n_orcl);
+        assert_eq!(b_checked.to_nested(), n_checked);
+    }
+
+    #[test]
+    fn adjust_partial_selection_fronts_most_uncertain_and_keeps_survivors() {
+        let mut u = CommitteeStdUtils::new(0.3, 1);
+        let buffer = vec![vec![1.0], vec![2.0], vec![3.0]];
+        // two entries exceed the threshold; only the next dispatch window
+        // (max_per_iter = 1) is exactly ordered, but the other survivor
+        // must stay buffered — nothing above threshold is discarded
+        let adjusted = u.adjust_input_for_oracle(buffer, &preds());
+        assert_eq!(adjusted.len(), 2);
+        assert_eq!(adjusted[0], vec![3.0], "most uncertain entry leads");
+        assert!(adjusted.contains(&vec![2.0]), "survivor beyond the window kept");
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! Contiguous batch storage: the crate's flat data plane.
+//!
+//! PR 1 batched the prediction traffic and PR 2 made the transport
+//! zero-copy, but between the two the in-memory representation was still
+//! `Vec<Vec<f32>>` — one heap allocation per row on every decode, predict,
+//! and reduce. This module provides the contiguous replacements:
+//!
+//! * [`Batch`] — owned `rows × width` over one flat `Vec<f32>`; what
+//!   [`crate::kernels::Model::predict_batch`] returns.
+//! * [`BatchView`] — borrowed strided view (over a decoded frame, a
+//!   [`Payload`], or a [`Batch`]); row access is pointer arithmetic, never
+//!   an allocation.
+//! * [`RowBlock`] — owned contiguous rows with per-row bounds (tolerates
+//!   ragged rows); the staging form for selection outputs and dispatched
+//!   micro-batches.
+//! * [`RowQueue`] — flat FIFO of rows (generator request queue, oracle
+//!   staging buffer): push/pop move `f32`s within one growing buffer
+//!   instead of boxing each row.
+//! * [`SharedRows`] / [`PayloadBatch`] — payload-backed rows: the backing
+//!   buffer is a shared [`Payload`], so each row can be shipped to a
+//!   different destination as a zero-copy [`Payload::slice`].
+//!
+//! The uniform-width types reject ragged input (`Option` constructors);
+//! ragged data stays on the legacy nested-`Vec` paths, which every consumer
+//! keeps as a fallback.
+
+use std::collections::VecDeque;
+
+use crate::comm::bus::Payload;
+
+// ---------------------------------------------------------------------------
+// Batch (owned, uniform width)
+// ---------------------------------------------------------------------------
+
+/// Owned contiguous batch: `rows × width` values in one flat `Vec<f32>`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Batch {
+    data: Vec<f32>,
+    rows: usize,
+    width: usize,
+}
+
+impl Batch {
+    /// An empty batch (0 rows) that will adopt the width of the first
+    /// pushed row.
+    pub fn new() -> Self {
+        Batch::default()
+    }
+
+    /// A zero-filled `rows × width` batch.
+    pub fn zeros(rows: usize, width: usize) -> Self {
+        Batch { data: vec![0.0; rows * width], rows, width }
+    }
+
+    /// An empty batch with reserved capacity for `rows × width` values.
+    pub fn with_capacity(rows: usize, width: usize) -> Self {
+        Batch { data: Vec::with_capacity(rows * width), rows: 0, width }
+    }
+
+    /// Wrap an existing flat buffer. `None` unless `data.len() == rows * width`.
+    pub fn from_flat(data: Vec<f32>, rows: usize, width: usize) -> Option<Self> {
+        if data.len() != rows.checked_mul(width)? {
+            return None;
+        }
+        Some(Batch { data, rows, width })
+    }
+
+    /// Stack equal-width rows into a batch. `None` if the rows are ragged.
+    pub fn from_rows<S: AsRef<[f32]>>(rows: &[S]) -> Option<Self> {
+        let width = rows.first().map(|r| r.as_ref().len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows.len() * width);
+        for r in rows {
+            if r.as_ref().len() != width {
+                return None;
+            }
+            data.extend_from_slice(r.as_ref());
+        }
+        Some(Batch { data, rows: rows.len(), width })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Append one row. An empty batch adopts the row's width; afterwards
+    /// widths must match (panics otherwise — callers stay uniform).
+    pub fn push_row(&mut self, row: &[f32]) {
+        if self.rows == 0 {
+            self.width = row.len();
+        }
+        assert_eq!(row.len(), self.width, "ragged row pushed into Batch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Append one row assembled from consecutive parts (e.g. an energy
+    /// block followed by a force block) without a temporary row buffer.
+    pub fn push_row_concat(&mut self, parts: &[&[f32]]) {
+        let len: usize = parts.iter().map(|p| p.len()).sum();
+        if self.rows == 0 {
+            self.width = len;
+        }
+        assert_eq!(len, self.width, "ragged row pushed into Batch");
+        for p in parts {
+            self.data.extend_from_slice(p);
+        }
+        self.rows += 1;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    /// The whole `rows × width` backing buffer.
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn view(&self) -> BatchView<'_> {
+        BatchView { data: &self.data, rows: self.rows, width: self.width }
+    }
+
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = &[f32]> {
+        (0..self.rows).map(move |i| self.row(i))
+    }
+
+    /// Materialize nested rows (legacy-API shim).
+    pub fn to_nested(&self) -> Vec<Vec<f32>> {
+        (0..self.rows).map(|i| self.row(i).to_vec()).collect()
+    }
+
+    /// Reinterpret as a (trivially uniform) [`RowBlock`].
+    pub fn into_row_block(self) -> RowBlock {
+        let ends = (1..=self.rows).map(|i| i * self.width).collect();
+        RowBlock { data: self.data, ends }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchView (borrowed, uniform width)
+// ---------------------------------------------------------------------------
+
+/// Borrowed strided view of `rows × width` values in one contiguous slice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    width: usize,
+}
+
+impl<'a> BatchView<'a> {
+    /// Wrap a flat slice. `None` unless `data.len() == rows * width`.
+    pub fn from_parts(data: &'a [f32], rows: usize, width: usize) -> Option<Self> {
+        if data.len() != rows.checked_mul(width)? {
+            return None;
+        }
+        Some(BatchView { data, rows, width })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    pub fn flat(&self) -> &'a [f32] {
+        self.data
+    }
+
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = &'a [f32]> + 'a {
+        let v = *self;
+        (0..v.rows).map(move |i| v.row(i))
+    }
+
+    pub fn to_batch(&self) -> Batch {
+        Batch { data: self.data.to_vec(), rows: self.rows, width: self.width }
+    }
+
+    /// Materialize nested rows (legacy-API shim).
+    pub fn to_nested(&self) -> Vec<Vec<f32>> {
+        (0..self.rows).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RowBlock (owned, contiguous, possibly ragged)
+// ---------------------------------------------------------------------------
+
+/// Owned contiguous rows with per-row end offsets. Unlike [`Batch`] the rows
+/// may be ragged, so it can stage anything the nested-`Vec` APIs could —
+/// while still storing every value in one buffer and allocating nothing per
+/// row in steady state.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RowBlock {
+    data: Vec<f32>,
+    /// `ends[i]` = end offset of row `i`; row `i` starts at `ends[i-1]` (0
+    /// for the first).
+    ends: Vec<usize>,
+}
+
+impl RowBlock {
+    pub fn new() -> Self {
+        RowBlock::default()
+    }
+
+    pub fn with_capacity(rows: usize, values: usize) -> Self {
+        RowBlock { data: Vec::with_capacity(values), ends: Vec::with_capacity(rows) }
+    }
+
+    pub fn from_rows<S: AsRef<[f32]>>(rows: &[S]) -> Self {
+        let total = rows.iter().map(|r| r.as_ref().len()).sum();
+        let mut out = RowBlock::with_capacity(rows.len(), total);
+        for r in rows {
+            out.push_row(r.as_ref());
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.ends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ends.is_empty()
+    }
+
+    /// Total stored values across all rows.
+    pub fn total_values(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        self.data.extend_from_slice(row);
+        self.ends.push(self.data.len());
+    }
+
+    /// `(start, end)` bounds of row `i` in [`RowBlock::flat`].
+    pub fn bounds(&self, i: usize) -> (usize, usize) {
+        let start = if i == 0 { 0 } else { self.ends[i - 1] };
+        (start, self.ends[i])
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (s, e) = self.bounds(i);
+        &self.data[s..e]
+    }
+
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = &[f32]> {
+        (0..self.len()).map(move |i| self.row(i))
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.ends.clear();
+    }
+
+    /// All rows share one width (an empty block is uniform with width 0).
+    pub fn as_view(&self) -> Option<BatchView<'_>> {
+        let rows = self.len();
+        if rows == 0 {
+            return Some(BatchView { data: &[], rows: 0, width: 0 });
+        }
+        let width = self.ends[0];
+        for i in 1..rows {
+            if self.ends[i] - self.ends[i - 1] != width {
+                return None;
+            }
+        }
+        Some(BatchView { data: &self.data, rows, width })
+    }
+
+    /// Materialize nested rows (legacy-API shim).
+    pub fn to_nested(&self) -> Vec<Vec<f32>> {
+        (0..self.len()).map(|i| self.row(i).to_vec()).collect()
+    }
+
+    /// Move the backing buffer into a shared [`Payload`] so each row can be
+    /// scattered as a zero-copy payload slice. One ingest copy total,
+    /// regardless of row count.
+    pub fn into_shared(self) -> SharedRows {
+        SharedRows { payload: Payload::from(self.data), ends: self.ends }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SharedRows / PayloadBatch (payload-backed)
+// ---------------------------------------------------------------------------
+
+/// Rows backed by one shared [`Payload`]: per-row access yields payload
+/// slices (refcount bumps), so scattering n rows to n destinations costs
+/// zero copies.
+#[derive(Debug, Clone)]
+pub struct SharedRows {
+    payload: Payload,
+    ends: Vec<usize>,
+}
+
+impl SharedRows {
+    pub fn len(&self) -> usize {
+        self.ends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ends.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let start = if i == 0 { 0 } else { self.ends[i - 1] };
+        &self.payload[start..self.ends[i]]
+    }
+
+    /// Row `i` as a zero-copy slice of the shared payload.
+    pub fn row_payload(&self, i: usize) -> Payload {
+        let start = if i == 0 { 0 } else { self.ends[i - 1] };
+        self.payload.slice(start..self.ends[i])
+    }
+}
+
+/// A uniform `rows × width` batch stored inside a shared [`Payload`] —
+/// typically the rows region of a received `PredictBatchResult` frame, held
+/// alive by refcount instead of being re-boxed into nested `Vec`s.
+#[derive(Debug, Clone)]
+pub struct PayloadBatch {
+    payload: Payload,
+    rows: usize,
+    width: usize,
+}
+
+impl PayloadBatch {
+    /// Wrap a payload. `None` unless `payload.len() == rows * width`.
+    pub fn from_payload(payload: Payload, rows: usize, width: usize) -> Option<Self> {
+        if payload.len() != rows.checked_mul(width)? {
+            return None;
+        }
+        Some(PayloadBatch { payload, rows, width })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn view(&self) -> BatchView<'_> {
+        BatchView { data: self.payload.as_slice(), rows: self.rows, width: self.width }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RowQueue (flat FIFO)
+// ---------------------------------------------------------------------------
+
+/// Flat FIFO of rows: one growing `f32` buffer plus per-row `(start, len)`
+/// metadata. Push appends to the buffer; pop returns a borrowed row and
+/// advances the head. The buffer compacts lazily once at least half of it
+/// is dead space in front of the head, so steady-state traffic moves values
+/// without per-row heap allocations.
+#[derive(Debug, Default)]
+pub struct RowQueue {
+    data: Vec<f32>,
+    rows: VecDeque<(usize, usize)>,
+    /// Dead values in `data` before the first live row.
+    front_waste: usize,
+}
+
+impl RowQueue {
+    pub fn new() -> Self {
+        RowQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.rows.is_empty() {
+            self.data.clear();
+            self.front_waste = 0;
+            return;
+        }
+        if self.front_waste < 1024 || self.front_waste < self.data.len() / 2 {
+            return;
+        }
+        let shift = self.front_waste;
+        self.data.drain(..shift);
+        for (start, _) in self.rows.iter_mut() {
+            *start -= shift;
+        }
+        self.front_waste = 0;
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        self.maybe_compact();
+        let start = self.data.len();
+        self.data.extend_from_slice(row);
+        self.rows.push_back((start, row.len()));
+    }
+
+    /// Borrow row `i` (0 = front) without removing it.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (start, len) = self.rows[i];
+        &self.data[start..start + len]
+    }
+
+    /// Pop the front row, returning a borrow of its values (valid until the
+    /// next `&mut` call). No allocation, no copy.
+    pub fn pop_front_row(&mut self) -> Option<&[f32]> {
+        let (start, len) = self.rows.pop_front()?;
+        self.front_waste = start + len;
+        Some(&self.data[start..start + len])
+    }
+
+    /// Drop the front `n` rows (already consumed via [`RowQueue::row`]).
+    pub fn drop_front(&mut self, n: usize) {
+        for _ in 0..n {
+            if let Some((start, len)) = self.rows.pop_front() {
+                self.front_waste = start + len;
+            }
+        }
+    }
+
+    /// Drop the newest row (capacity eviction). Reclaims its values when
+    /// they sit at the buffer's tail (they always do under push/pop usage).
+    pub fn drop_back(&mut self) -> bool {
+        match self.rows.pop_back() {
+            Some((start, len)) => {
+                if start + len == self.data.len() {
+                    self.data.truncate(start);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.rows.iter().map(move |&(start, len)| &self.data[start..start + len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_push_and_index() {
+        let mut b = Batch::new();
+        b.push_row(&[1.0, 2.0]);
+        b.push_row(&[3.0, 4.0]);
+        assert_eq!((b.rows(), b.width()), (2, 2));
+        assert_eq!(b.row(1), &[3.0, 4.0]);
+        assert_eq!(b.flat(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.to_nested(), vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(b.view().row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn batch_from_rows_rejects_ragged() {
+        assert!(Batch::from_rows(&[vec![1.0], vec![2.0, 3.0]]).is_none());
+        let b = Batch::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(b.rows(), 2);
+        let empty = Batch::from_rows::<Vec<f32>>(&[]).unwrap();
+        assert_eq!((empty.rows(), empty.width()), (0, 0));
+    }
+
+    #[test]
+    fn batch_zero_width_rows() {
+        let b = Batch::from_rows(&[vec![], Vec::<f32>::new()]).unwrap();
+        assert_eq!((b.rows(), b.width()), (2, 0));
+        assert_eq!(b.row(1), &[] as &[f32]);
+        assert_eq!(b.iter().count(), 2);
+    }
+
+    #[test]
+    fn view_from_parts_checks_shape() {
+        let d = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = BatchView::from_parts(&d, 2, 3).unwrap();
+        assert_eq!(v.row(1), &[4.0, 5.0, 6.0]);
+        assert!(BatchView::from_parts(&d, 2, 2).is_none());
+        assert!(BatchView::from_parts(&[], 0, 0).is_some());
+    }
+
+    #[test]
+    fn row_block_ragged_and_uniform() {
+        let mut rb = RowBlock::new();
+        rb.push_row(&[1.0, 2.0]);
+        rb.push_row(&[3.0]);
+        assert_eq!(rb.len(), 2);
+        assert_eq!(rb.row(1), &[3.0]);
+        assert!(rb.as_view().is_none(), "ragged block has no uniform view");
+        let rb2 = RowBlock::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let v = rb2.as_view().unwrap();
+        assert_eq!((v.rows(), v.width()), (2, 2));
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+        assert_eq!(RowBlock::new().as_view().unwrap().rows(), 0);
+    }
+
+    #[test]
+    fn row_block_into_shared_slices() {
+        let rb = RowBlock::from_rows(&[vec![1.0, 2.0], vec![3.0], vec![]]);
+        let shared = rb.into_shared();
+        assert_eq!(shared.len(), 3);
+        assert_eq!(shared.row(0), &[1.0, 2.0]);
+        let p = shared.row_payload(1);
+        assert_eq!(p.as_slice(), &[3.0]);
+        assert_eq!(shared.row_payload(2).len(), 0);
+        // row payloads share the block's backing buffer
+        assert!(p.shared_handles() >= 2);
+    }
+
+    #[test]
+    fn batch_into_row_block_roundtrip() {
+        let b = Batch::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let rb = b.clone().into_row_block();
+        assert_eq!(rb.to_nested(), b.to_nested());
+        assert_eq!(rb.as_view().unwrap().width(), 2);
+    }
+
+    #[test]
+    fn payload_batch_views_payload() {
+        let p = Payload::from(vec![1.0, 2.0, 3.0, 4.0]);
+        let pb = PayloadBatch::from_payload(p.clone(), 2, 2).unwrap();
+        assert_eq!(pb.view().row(1), &[3.0, 4.0]);
+        assert!(PayloadBatch::from_payload(p, 3, 2).is_none());
+    }
+
+    #[test]
+    fn row_queue_fifo_against_model() {
+        let mut q = RowQueue::new();
+        let mut model: VecDeque<Vec<f32>> = VecDeque::new();
+        let mut k = 0u32;
+        for step in 0..500u32 {
+            if step % 3 == 2 {
+                let got = q.pop_front_row().map(|r| r.to_vec());
+                assert_eq!(got, model.pop_front());
+            } else {
+                let row: Vec<f32> = (0..(step % 7)).map(|j| (k + j) as f32).collect();
+                k += 7;
+                q.push_row(&row);
+                model.push_back(row);
+            }
+            assert_eq!(q.len(), model.len());
+        }
+        while let Some(want) = model.pop_front() {
+            assert_eq!(q.pop_front_row().unwrap(), want.as_slice());
+        }
+        assert!(q.pop_front_row().is_none());
+    }
+
+    #[test]
+    fn row_queue_compacts_dead_space() {
+        let mut q = RowQueue::new();
+        for i in 0..2000 {
+            q.push_row(&[i as f32; 4]);
+            if i % 2 == 1 {
+                q.pop_front_row();
+            }
+        }
+        // half the pushed values were popped; compaction must keep the
+        // buffer within a small factor of the live data
+        assert!(q.data.len() <= 4 * (q.len() * 4).max(1024), "buffer never compacts");
+        assert_eq!(q.row(0), q.iter().next().unwrap());
+    }
+
+    #[test]
+    fn row_queue_drop_back_reclaims_tail() {
+        let mut q = RowQueue::new();
+        q.push_row(&[1.0]);
+        q.push_row(&[2.0, 3.0]);
+        assert!(q.drop_back());
+        assert_eq!(q.data.len(), 1);
+        assert_eq!(q.pop_front_row().unwrap(), &[1.0]);
+        assert!(!q.drop_back());
+    }
+}

@@ -2,6 +2,10 @@
 
 use crate::rng::Rng;
 
+pub mod batch;
+
+pub use batch::{Batch, BatchView, PayloadBatch, RowBlock, RowQueue, SharedRows};
+
 /// One labeled sample: `(input, label)` flat arrays (paper wire format).
 pub type Datapoint = (Vec<f32>, Vec<f32>);
 

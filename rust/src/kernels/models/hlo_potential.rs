@@ -14,11 +14,12 @@ use std::collections::BTreeMap;
 
 use anyhow::Context;
 
+use crate::data::batch::{Batch, BatchView, RowBlock};
 use crate::data::Dataset;
 use crate::kernels::{Mode, Model};
 use crate::runtime::{Engine, Manifest, TensorIn};
 
-use super::util::{pad_rows, plan_chunks, split_columns};
+use super::util::{pad_rows, plan_chunks, split_columns, split_columns_range};
 
 /// Tunables for the training side.
 #[derive(Debug, Clone)]
@@ -240,14 +241,21 @@ impl HloPotentialModel {
         [self.n_atoms * 3, self.n_globals, self.n_states]
     }
 
-    /// Forward one padded chunk; returns (e rows, f rows) flattened.
-    fn fwd_chunk(&self, batch: usize, rows: &[Vec<f32>]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+    /// Forward one column-split chunk (`used` live rows in `cols`): pads
+    /// each column block to the artifact batch, runs the forward, and
+    /// extracts the `(e_mean, f_mean)` output tensors — the single place
+    /// both the nested and flat predict paths get the output layout from.
+    fn fwd_cols(
+        &self,
+        batch: usize,
+        used: usize,
+        mut cols: Vec<Vec<f32>>,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
         let name = &self.fwd_names[&batch];
         let [n3, g, s] = self.widths();
-        let mut cols = split_columns(rows, &self.widths());
-        pad_rows(&mut cols[0], rows.len(), batch, n3);
-        pad_rows(&mut cols[1], rows.len(), batch, g);
-        pad_rows(&mut cols[2], rows.len(), batch, s);
+        pad_rows(&mut cols[0], used, batch, n3);
+        pad_rows(&mut cols[1], used, batch, g);
+        pad_rows(&mut cols[2], used, batch, s);
         let out = self.engine.call(
             name,
             &[
@@ -259,6 +267,11 @@ impl HloPotentialModel {
         )?;
         // outputs: e_all(M=1,B,S), e_mean(B,S), e_std, f_mean(B,N3), f_std
         Ok((out[1].clone(), out[3].clone()))
+    }
+
+    /// Forward one padded chunk; returns (e rows, f rows) flattened.
+    fn fwd_chunk(&self, batch: usize, rows: &[Vec<f32>]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.fwd_cols(batch, rows.len(), split_columns(rows, &self.widths()))
     }
 
     /// Energy-only committee UQ through the fused Pallas kernel path —
@@ -370,6 +383,39 @@ impl Model for HloPotentialModel {
             off += used;
         }
         out
+    }
+
+    /// Native flat path: column splitting reads rows straight off the
+    /// strided view ([`split_columns_range`]) and each output row is the
+    /// energy block + force block written contiguously into one [`Batch`].
+    fn predict_batch(&mut self, view: &BatchView<'_>) -> RowBlock {
+        let batches: Vec<usize> = self.fwd_names.keys().copied().collect();
+        let s = self.n_states;
+        let n3 = self.n_atoms * 3;
+        let widths = self.widths();
+        let mut out = Batch::with_capacity(view.rows(), s + n3);
+        let zero = vec![0.0; self.output_row_len()];
+        let mut off = 0;
+        for (chunk_b, used) in plan_chunks(view.rows(), &batches) {
+            let cols = split_columns_range(view, off, off + used, &widths);
+            match self.fwd_cols(chunk_b, used, cols) {
+                Ok((e, f)) => {
+                    for i in 0..used {
+                        out.push_row_concat(&[
+                            &e[i * s..(i + 1) * s],
+                            &f[i * n3..(i + 1) * n3],
+                        ]);
+                    }
+                }
+                Err(_) => {
+                    for _ in 0..used {
+                        out.push_row(&zero);
+                    }
+                }
+            }
+            off += used;
+        }
+        out.into_row_block()
     }
 
     fn update(&mut self, weight_array: &[f32]) {

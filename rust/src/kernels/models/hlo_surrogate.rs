@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Context;
 
+use crate::data::batch::{Batch, BatchView, RowBlock};
 use crate::data::Dataset;
 use crate::kernels::{Mode, Model};
 use crate::runtime::{Engine, Manifest, TensorIn};
@@ -94,16 +95,22 @@ impl HloSurrogateModel {
         self.dataset.n_train()
     }
 
-    fn fwd_chunk(&self, batch: usize, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+    /// Forward one stacked chunk (`used` live rows in `flat`): pads to the
+    /// artifact batch, runs the forward, extracts `y_mean` — the single
+    /// place both predict paths get the output-tensor layout from.
+    fn fwd_flat(&self, batch: usize, used: usize, flat: &mut Vec<f32>) -> anyhow::Result<Vec<f32>> {
         let name = &self.fwd_names[&batch];
-        let w = self.input_row_len();
-        let mut flat = Vec::with_capacity(batch * w);
+        pad_rows(flat, used, batch, self.input_row_len());
+        let out = self.engine.call(name, &[TensorIn::F32(&self.w), TensorIn::F32(flat)])?;
+        Ok(out[1].clone()) // y_mean (B, n_out)
+    }
+
+    fn fwd_chunk(&self, batch: usize, rows: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+        let mut flat = Vec::with_capacity(batch * self.input_row_len());
         for r in rows {
             flat.extend_from_slice(r);
         }
-        pad_rows(&mut flat, rows.len(), batch, w);
-        let out = self.engine.call(name, &[TensorIn::F32(&self.w), TensorIn::F32(&flat)])?;
-        Ok(out[1].clone()) // y_mean (B, n_out)
+        self.fwd_flat(batch, rows.len(), &mut flat)
     }
 
     fn train_step(&mut self) -> anyhow::Result<f32> {
@@ -167,6 +174,39 @@ impl Model for HloSurrogateModel {
             off += used;
         }
         out
+    }
+
+    /// Native flat path: occupancy grids stack straight from the strided
+    /// view into one reusable chunk buffer; outputs land in one contiguous
+    /// block.
+    fn predict_batch(&mut self, view: &BatchView<'_>) -> RowBlock {
+        let batches: Vec<usize> = self.fwd_names.keys().copied().collect();
+        let w = self.input_row_len();
+        let mut out = Batch::with_capacity(view.rows(), self.n_out);
+        let zero = vec![0.0; self.n_out];
+        let mut flat: Vec<f32> = Vec::new();
+        let mut off = 0;
+        for (chunk_b, used) in plan_chunks(view.rows(), &batches) {
+            flat.clear();
+            flat.reserve(chunk_b * w);
+            for i in off..off + used {
+                flat.extend_from_slice(view.row(i));
+            }
+            match self.fwd_flat(chunk_b, used, &mut flat) {
+                Ok(y) => {
+                    for i in 0..used {
+                        out.push_row(&y[i * self.n_out..(i + 1) * self.n_out]);
+                    }
+                }
+                Err(_) => {
+                    for _ in 0..used {
+                        out.push_row(&zero);
+                    }
+                }
+            }
+            off += used;
+        }
+        out.into_row_block()
     }
 
     fn update(&mut self, weight_array: &[f32]) {

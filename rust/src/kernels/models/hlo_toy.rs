@@ -9,6 +9,7 @@
 
 use anyhow::Context;
 
+use crate::data::batch::{Batch, BatchView, RowBlock};
 use crate::data::Dataset;
 use crate::kernels::{Mode, Model};
 use crate::runtime::{Engine, Manifest, TensorIn};
@@ -88,6 +89,28 @@ impl HloToyModel {
         }
         w_all
     }
+
+    /// Forward one stacked chunk (`used` live rows already normalized to
+    /// `n_in` values each in `flat`): pads to the artifact batch, runs the
+    /// fused forward, and extracts `y_mean` — the single place both the
+    /// nested and flat predict paths get the output-tensor layout from.
+    /// `None` on engine failure (callers degrade to zero rows).
+    fn fwd_stacked(&self, w_all: &[f32], used: usize, flat: &mut Vec<f32>) -> Option<Vec<f32>> {
+        pad_rows(flat, used, self.fwd_batch, self.n_in);
+        match self.engine.call(&self.fwd_name, &[TensorIn::F32(w_all), TensorIn::F32(flat)]) {
+            // outputs: y_all, y_mean (B, n_out) — members identical
+            Ok(res) => Some(res[1].clone()),
+            Err(_) => None,
+        }
+    }
+
+    /// Append one row's first `n_in` values to `flat`, zero-padding short
+    /// rows (shared input normalization for both predict paths).
+    fn stack_normalized(&self, row: &[f32], flat: &mut Vec<f32>) {
+        let take = self.n_in.min(row.len());
+        flat.extend_from_slice(&row[..take]);
+        flat.extend(std::iter::repeat(0.0).take(self.n_in - take));
+    }
 }
 
 impl Model for HloToyModel {
@@ -95,23 +118,19 @@ impl Model for HloToyModel {
         let b = self.fwd_batch;
         let w_all = self.replicated_weights();
         let mut out = Vec::with_capacity(list_data_to_pred.len());
+        let mut flat = Vec::with_capacity(b * self.n_in);
         for chunk in list_data_to_pred.chunks(b) {
-            let mut flat = Vec::with_capacity(b * self.n_in);
+            flat.clear();
             for row in chunk {
-                flat.extend_from_slice(&row[..self.n_in.min(row.len())]);
-                if row.len() < self.n_in {
-                    flat.extend(std::iter::repeat(0.0).take(self.n_in - row.len()));
-                }
+                self.stack_normalized(row, &mut flat);
             }
-            pad_rows(&mut flat, chunk.len(), b, self.n_in);
-            match self.engine.call(&self.fwd_name, &[TensorIn::F32(&w_all), TensorIn::F32(&flat)]) {
-                Ok(res) => {
-                    let y_mean = &res[1]; // (B, n_out); identical members
+            match self.fwd_stacked(&w_all, chunk.len(), &mut flat) {
+                Some(y_mean) => {
                     for i in 0..chunk.len() {
                         out.push(y_mean[i * self.n_out..(i + 1) * self.n_out].to_vec());
                     }
                 }
-                Err(_) => {
+                None => {
                     for _ in 0..chunk.len() {
                         out.push(vec![0.0; self.n_out]);
                     }
@@ -119,6 +138,39 @@ impl Model for HloToyModel {
             }
         }
         out
+    }
+
+    /// Native flat path: rows are read straight off the strided view into
+    /// one reusable stacking buffer, outputs land in one contiguous block
+    /// — no per-row boxing on either side.
+    fn predict_batch(&mut self, batch: &BatchView<'_>) -> RowBlock {
+        let b = self.fwd_batch;
+        let w_all = self.replicated_weights();
+        let mut out = Batch::with_capacity(batch.rows(), self.n_out);
+        let zero = vec![0.0; self.n_out];
+        let mut flat = Vec::with_capacity(b * self.n_in);
+        let mut off = 0;
+        while off < batch.rows() {
+            let used = b.min(batch.rows() - off);
+            flat.clear();
+            for i in off..off + used {
+                self.stack_normalized(batch.row(i), &mut flat);
+            }
+            match self.fwd_stacked(&w_all, used, &mut flat) {
+                Some(y_mean) => {
+                    for i in 0..used {
+                        out.push_row(&y_mean[i * self.n_out..(i + 1) * self.n_out]);
+                    }
+                }
+                None => {
+                    for _ in 0..used {
+                        out.push_row(&zero);
+                    }
+                }
+            }
+            off += used;
+        }
+        out.into_row_block()
     }
 
     fn update(&mut self, weight_array: &[f32]) {

@@ -1,5 +1,7 @@
 //! Shared plumbing for HLO-backed models: row splitting and batch planning.
 
+use crate::data::batch::BatchView;
+
 /// Split a list of equal-width rows into contiguous column blocks.
 ///
 /// `widths` partitions each row; returns one flat column-major-batch array
@@ -9,6 +11,30 @@ pub fn split_columns(rows: &[Vec<f32>], widths: &[usize]) -> Vec<Vec<f32>> {
     let mut out: Vec<Vec<f32>> =
         widths.iter().map(|w| Vec::with_capacity(w * rows.len())).collect();
     for row in rows {
+        assert_eq!(row.len(), row_len, "row width mismatch");
+        let mut off = 0;
+        for (b, &w) in widths.iter().enumerate() {
+            out[b].extend_from_slice(&row[off..off + w]);
+            off += w;
+        }
+    }
+    out
+}
+
+/// [`split_columns`] over rows `lo..hi` of a strided [`BatchView`] — the
+/// flat-data-plane twin used by native `predict_batch` implementations: no
+/// nested row list is ever materialized.
+pub fn split_columns_range(
+    view: &BatchView<'_>,
+    lo: usize,
+    hi: usize,
+    widths: &[usize],
+) -> Vec<Vec<f32>> {
+    let row_len: usize = widths.iter().sum();
+    let rows = hi - lo;
+    let mut out: Vec<Vec<f32>> = widths.iter().map(|w| Vec::with_capacity(w * rows)).collect();
+    for i in lo..hi {
+        let row = view.row(i);
         assert_eq!(row.len(), row_len, "row width mismatch");
         let mut off = 0;
         for (b, &w) in widths.iter().enumerate() {
@@ -67,6 +93,20 @@ mod tests {
         let cols = split_columns(&rows, &[3, 1]);
         assert_eq!(cols[0], vec![1.0, 2.0, 3.0, 5.0, 6.0, 7.0]);
         assert_eq!(cols[1], vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn split_columns_range_matches_nested() {
+        let rows = vec![
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![5.0, 6.0, 7.0, 8.0],
+            vec![9.0, 10.0, 11.0, 12.0],
+        ];
+        let batch = crate::data::batch::Batch::from_rows(&rows).unwrap();
+        let all = split_columns_range(&batch.view(), 0, 3, &[3, 1]);
+        assert_eq!(all, split_columns(&rows, &[3, 1]));
+        let tail = split_columns_range(&batch.view(), 1, 3, &[3, 1]);
+        assert_eq!(tail, split_columns(&rows[1..], &[3, 1]));
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! HLO-backed models own thread-affine PJRT handles, exactly like the
 //! paper's per-MPI-rank model replicas.
 
+use crate::data::batch::{BatchView, RowBlock};
+
 /// Whether a [`Model`] instance serves the prediction or the training kernel
 /// (the paper's `mode` flag in `UserModel.__init__`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +51,28 @@ pub trait Model {
     /// input, in order (SI: "size and order should match processes in
     /// Generator kernel").
     fn predict(&mut self, list_data_to_pred: &[Vec<f32>]) -> Vec<Vec<f32>>;
+
+    /// Flat-data-plane twin of [`Model::predict`]: inputs arrive as a
+    /// contiguous `rows × width` view (typically a strided view straight
+    /// over the decoded wire payload) and outputs return as one contiguous
+    /// [`RowBlock`] — no per-row boxing in either direction. Real models
+    /// produce uniform rows (committee reduction needs them, and the
+    /// built-in implementations build a uniform
+    /// [`Batch`](crate::data::batch::Batch) internally), but
+    /// the block form also carries per-row-width outputs losslessly, so a
+    /// legacy kernel that returns ragged predictions keeps working through
+    /// the shim exactly as it did on the nested path.
+    ///
+    /// The default implementation shims through the nested-`Vec`
+    /// [`Model::predict`], so existing kernels keep working and migrate
+    /// incrementally; the built-in HLO and synthetic models override it
+    /// with native strided implementations. The block must contain one
+    /// output row per input row, in order.
+    fn predict_batch(&mut self, batch: &BatchView<'_>) -> RowBlock {
+        let nested = self.predict(&batch.to_nested());
+        debug_assert_eq!(nested.len(), batch.rows());
+        RowBlock::from_rows(&nested)
+    }
 
     /// Replace model weights from a flat array (prediction side).
     fn update(&mut self, weight_array: &[f32]);
@@ -99,6 +123,28 @@ pub trait Utils {
         list_data_to_pred: &[Vec<f32>],
         preds_per_model: &[Vec<Vec<f32>>],
     ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+    /// Flat-data-plane twin of [`Utils::prediction_check`]: inputs and the
+    /// per-model committee outputs arrive as strided views (the latter
+    /// usually directly over the received result payloads), and both
+    /// returned row sets are contiguous [`RowBlock`]s — the controller
+    /// scatters the checked rows as zero-copy payload slices.
+    ///
+    /// The default implementation shims through the nested-`Vec`
+    /// [`Utils::prediction_check`]; the built-in committee-std utilities
+    /// override it with single-pass strided reductions. The checked block
+    /// must contain exactly one row per input row, in order.
+    fn prediction_check_batch(
+        &mut self,
+        inputs: &BatchView<'_>,
+        preds_per_model: &[BatchView<'_>],
+    ) -> (RowBlock, RowBlock) {
+        let nested_inputs = inputs.to_nested();
+        let nested_preds: Vec<Vec<Vec<f32>>> =
+            preds_per_model.iter().map(|v| v.to_nested()).collect();
+        let (to_orcl, checked) = self.prediction_check(&nested_inputs, &nested_preds);
+        (RowBlock::from_rows(&to_orcl), RowBlock::from_rows(&checked))
+    }
 
     /// The paper's `adjust_input_for_oracle`: re-order / prune the oracle
     /// buffer given fresh per-model predictions for each buffered input

@@ -46,9 +46,10 @@
 //! ## Zero-copy transport
 //!
 //! The simulated MPI bus moves [`comm::Payload`]s — immutable,
-//! `Arc<[f32]>`-backed buffers. Owned data is copied into shared storage at
-//! most once at the bus boundary; after that, broadcasts, scatters of
-//! shared data, relay re-sends, and the trainer → replica weight fan-out
+//! `Arc<[f32]>`-backed range views. Owned data is copied into shared
+//! storage at most once at the bus boundary; after that, broadcasts,
+//! scatters of shared data, relay re-sends, payload row slices
+//! ([`comm::Payload::slice`]), and the trainer → replica weight fan-out
 //! are refcount bumps, so physical copy volume is independent of the
 //! destination count. [`comm::bus::WorldStats`] (surfaced as
 //! `RunReport::payload_clones` / `bytes_copied` next to the logical
@@ -58,6 +59,25 @@
 //! in steady state, with borrowed-view decoders
 //! ([`comm::codec::unpack_views`]) as the single parse path underneath the
 //! owned variants. See [`comm`] for the full copy-vs-share rules.
+//!
+//! ## Flat data plane
+//!
+//! In-memory batches are as copy-free as the transport. Uniform-width
+//! traffic decodes straight into strided [`data::BatchView`]s over the
+//! received payload (zero allocations), models serve
+//! `Model::predict_batch(&BatchView) -> RowBlock` (contiguous row storage,
+//! uniform `rows × width` in practice; the nested-`Vec` `predict` remains
+//! as a compatibility shim and ragged legacy kernels keep working),
+//! committee reductions ([`coordinator::selection::committee_std_batch`]
+//! etc.) are single-pass strided loops with zero inner-loop allocations,
+//! and checked results scatter back as [`comm::Payload::slice`] row views
+//! of one shared buffer. Selection staging ([`coordinator::buffers`]) and
+//! the batch scheduler queue rows in flat [`data::RowQueue`]s. The whole
+//! decode → reduce path allocates a small constant independent of batch
+//! size — pinned by the counting-allocator test `test_flat_plane` and
+//! tracked per item in `BENCH_alloc.json` (`cargo bench --bench
+//! comm_overhead`). Ragged traffic falls back to the nested-`Vec` path;
+//! wire bytes are identical either way.
 //!
 //! ## Performance
 //!

@@ -9,6 +9,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::data::batch::{BatchView, RowBlock};
 use crate::kernels::{Generator, Model, Oracle, Utils};
 use crate::telemetry::KernelTelemetry;
 
@@ -44,26 +45,63 @@ impl SerialWorkflow {
         let mut report = SerialReport::default();
         let mut tel = KernelTelemetry::new("serial", 0);
         let t_start = Instant::now();
-        let mut last_pred: Vec<Option<Vec<f32>>> = vec![None; self.generators.len()];
+        // flat data plane: checked predictions (one row per generator),
+        // stacked inputs and the selection staging all live in contiguous
+        // row blocks reused across steps
+        let mut last_checked: Option<RowBlock> = None;
+        let mut inputs = RowBlock::new();
+        let mut selected = RowBlock::new();
 
         for _ in 0..self.iterations {
             // ---- phase 1: explore (generation + prediction, sequential) ----
             let t0 = Instant::now();
-            let mut selected: Vec<Vec<f32>> = Vec::new();
+            selected.clear();
             for _ in 0..self.steps_per_iter {
-                let mut inputs = Vec::with_capacity(self.generators.len());
-                for (g, prev) in self.generators.iter_mut().zip(&last_pred) {
-                    let (_stop, data) = g.generate_new_data(prev.as_deref());
-                    inputs.push(data);
+                inputs.clear();
+                for (g, gen) in self.generators.iter_mut().enumerate() {
+                    // guard against a utils impl returning fewer checked
+                    // rows than generators (e.g. an empty committee)
+                    let prev = last_checked
+                        .as_ref()
+                        .and_then(|c| (g < c.len()).then(|| c.row(g)));
+                    let (_stop, data) = gen.generate_new_data(prev);
+                    inputs.push_row(&data);
                 }
-                let preds_per_model: Vec<Vec<Vec<f32>>> =
-                    self.models.iter_mut().map(|m| m.predict(&inputs)).collect();
-                let (to_orcl, checked) =
-                    self.utils.prediction_check(&inputs, &preds_per_model);
-                selected.extend(to_orcl);
-                for (slot, c) in last_pred.iter_mut().zip(checked) {
-                    *slot = Some(c);
+                let (to_orcl, checked) = match inputs.as_view() {
+                    Some(view) => {
+                        // flat path: each committee member predicts the
+                        // whole stacked batch into one contiguous buffer
+                        let preds: Vec<RowBlock> =
+                            self.models.iter_mut().map(|m| m.predict_batch(&view)).collect();
+                        let views: Option<Vec<BatchView<'_>>> =
+                            preds.iter().map(|b| b.as_view()).collect();
+                        match views {
+                            Some(views) => self.utils.prediction_check_batch(&view, &views),
+                            None => {
+                                // a model produced ragged rows: reduce on
+                                // the legacy nested path
+                                let nested = inputs.to_nested();
+                                let preds_per_model: Vec<Vec<Vec<f32>>> =
+                                    preds.iter().map(|b| b.to_nested()).collect();
+                                let (o, c) =
+                                    self.utils.prediction_check(&nested, &preds_per_model);
+                                (RowBlock::from_rows(&o), RowBlock::from_rows(&c))
+                            }
+                        }
+                    }
+                    None => {
+                        // ragged generators: legacy nested path
+                        let nested = inputs.to_nested();
+                        let preds_per_model: Vec<Vec<Vec<f32>>> =
+                            self.models.iter_mut().map(|m| m.predict(&nested)).collect();
+                        let (o, c) = self.utils.prediction_check(&nested, &preds_per_model);
+                        (RowBlock::from_rows(&o), RowBlock::from_rows(&c))
+                    }
+                };
+                for i in 0..to_orcl.len() {
+                    selected.push_row(to_orcl.row(i));
                 }
+                last_checked = Some(checked);
             }
             report.gen_time += t0.elapsed();
             tel.record("generate", t0.elapsed());
@@ -99,12 +137,12 @@ impl SerialWorkflow {
 /// on scoped threads — the serial workflow's only concurrency (the paper
 /// assumes "only parallelization of the oracles", eq. (1)).
 ///
-/// Workers borrow `inputs` directly (scoped threads share the slice
-/// read-only), so no per-shard input copies are made; inputs are copied
-/// exactly once, into the returned labeled pairs.
+/// Workers borrow the flat selection block directly (scoped threads share
+/// it read-only and index rows by stride), so no per-shard input copies are
+/// made; inputs are copied exactly once, into the returned labeled pairs.
 fn label_parallel(
     oracles: &mut [Box<dyn Oracle>],
-    inputs: &[Vec<f32>],
+    inputs: &RowBlock,
 ) -> Vec<(Vec<f32>, Vec<f32>)> {
     if inputs.is_empty() || oracles.is_empty() {
         return vec![];
@@ -119,7 +157,7 @@ fn label_parallel(
             handles.push(scope.spawn(move || {
                 (w..inputs.len())
                     .step_by(p)
-                    .map(|i| (i, oracle.run_calc(&inputs[i])))
+                    .map(|i| (i, oracle.run_calc(inputs.row(i))))
                     .collect::<Vec<_>>()
             }));
         }
@@ -128,7 +166,7 @@ fn label_parallel(
     let mut results: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; inputs.len()];
     for shard in shard_results {
         for (i, y) in shard {
-            results[i] = Some((inputs[i].clone(), y));
+            results[i] = Some((inputs.row(i).to_vec(), y));
         }
     }
     results.into_iter().flatten().collect()

@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use crate::data::batch::{Batch, BatchView, RowBlock};
 use crate::kernels::{Generator, Mode, Model, Oracle, Utils};
 
 /// Spin-sleep for `d` (thread::sleep granularity is fine at our scales).
@@ -135,16 +136,21 @@ impl SyntheticModel {
         self
     }
 
+    fn predict_one_into(&self, x: &[f32], out: &mut [f32]) {
+        for (o, slot) in out.iter_mut().enumerate() {
+            *slot = x
+                .iter()
+                .take(self.in_dim)
+                .enumerate()
+                .map(|(i, &v)| v * self.weights[o * self.in_dim + i])
+                .sum();
+        }
+    }
+
     fn predict_one(&self, x: &[f32]) -> Vec<f32> {
-        (0..self.out_dim)
-            .map(|o| {
-                x.iter()
-                    .take(self.in_dim)
-                    .enumerate()
-                    .map(|(i, &v)| v * self.weights[o * self.in_dim + i])
-                    .sum()
-            })
-            .collect()
+        let mut out = vec![0.0; self.out_dim];
+        self.predict_one_into(x, &mut out);
+        out
     }
 }
 
@@ -154,6 +160,17 @@ impl Model for SyntheticModel {
             self.predict_cost + self.predict_cost_per_item * list_data_to_pred.len() as u32,
         );
         list_data_to_pred.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    fn predict_batch(&mut self, batch: &BatchView<'_>) -> RowBlock {
+        // native flat path: one output buffer for the whole batch, rows
+        // written in place — no per-row boxing
+        busy_wait(self.predict_cost + self.predict_cost_per_item * batch.rows() as u32);
+        let mut out = Batch::zeros(batch.rows(), self.out_dim);
+        for i in 0..batch.rows() {
+            self.predict_one_into(batch.row(i), out.row_mut(i));
+        }
+        out.into_row_block()
     }
 
     fn update(&mut self, weight_array: &[f32]) {
@@ -230,6 +247,19 @@ impl Utils for SyntheticUtils {
             self.max_per_iter,
         )
     }
+
+    fn prediction_check_batch(
+        &mut self,
+        inputs: &BatchView<'_>,
+        preds_per_model: &[BatchView<'_>],
+    ) -> (RowBlock, RowBlock) {
+        crate::coordinator::selection::committee_std_check_batch(
+            inputs,
+            preds_per_model,
+            self.threshold,
+            self.max_per_iter,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +319,22 @@ mod tests {
         });
         assert!(t0.elapsed() < Duration::from_millis(500));
         assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn predict_batch_matches_nested_predict() {
+        let mut m = SyntheticModel::new(3, 2, Duration::ZERO, Duration::ZERO, 1, Mode::Predict);
+        let w: Vec<f32> = (0..6).map(|i| (i as f32) * 0.25 - 0.5).collect();
+        m.update(&w);
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|i| (0..3).map(|j| (i * 3 + j) as f32 * 0.1).collect())
+            .collect();
+        let nested = m.predict(&rows);
+        let batch = Batch::from_rows(&rows).unwrap();
+        let flat = m.predict_batch(&batch.view());
+        assert_eq!(flat.to_nested(), nested);
+        let view = flat.as_view().expect("native output is uniform");
+        assert_eq!((view.rows(), view.width()), (5, 2));
     }
 
     #[test]

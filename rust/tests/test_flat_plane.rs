@@ -1,0 +1,129 @@
+//! Allocation-count regression for the flat data plane.
+//!
+//! Pins the PR-3 acceptance criterion: decoding a `PredictBatch[Result]`
+//! frame and running the committee reductions over it performs **zero
+//! per-row heap allocations** — the allocation count of the hot region is a
+//! small constant, independent of the batch size.
+//!
+//! This file installs a counting global allocator and therefore contains
+//! exactly ONE `#[test]`: the default test harness runs tests of a binary
+//! concurrently, and any sibling test's allocations would pollute the
+//! counters. Result-equivalence properties live in `test_props.rs`; this
+//! binary only counts.
+
+use pal::bench_util::alloc::{alloc_count, CountingAlloc};
+use pal::comm::protocol::{
+    decode_predict_batch_result, decode_predict_batch_result_rows, encode_predict_batch_result,
+};
+use pal::coordinator::selection::{committee_std, committee_std_batch, committee_std_check_batch};
+use pal::data::batch::{Batch, BatchView};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+const MODELS: usize = 3;
+const WIDTH: usize = 16;
+
+/// Committee result frames (one per member) for `rows` items of `WIDTH`.
+fn frames(rows: usize) -> Vec<Vec<f32>> {
+    (0..MODELS)
+        .map(|m| {
+            let items: Vec<Vec<f32>> = (0..rows)
+                .map(|i| (0..WIDTH).map(|k| ((m * 31 + i * 7 + k) % 13) as f32 * 0.1).collect())
+                .collect();
+            encode_predict_batch_result(1, &items)
+        })
+        .collect()
+}
+
+/// Allocations for one flat decode → `committee_std` pass over `rows` items.
+fn flat_decode_std_allocs(frames: &[Vec<f32>]) -> u64 {
+    let before = alloc_count();
+    let views: [BatchView<'_>; MODELS] = [
+        decode_predict_batch_result_rows(&frames[0]).unwrap().1,
+        decode_predict_batch_result_rows(&frames[1]).unwrap().1,
+        decode_predict_batch_result_rows(&frames[2]).unwrap().1,
+    ];
+    let stds = committee_std_batch(&views);
+    std::hint::black_box(&stds);
+    let delta = alloc_count() - before;
+    drop(stds);
+    delta
+}
+
+/// Allocations for one nested decode → `committee_std` pass (the baseline
+/// this PR replaces).
+fn nested_decode_std_allocs(frames: &[Vec<f32>]) -> u64 {
+    let before = alloc_count();
+    let preds: Vec<Vec<Vec<f32>>> = frames
+        .iter()
+        .map(|f| decode_predict_batch_result(f).unwrap().1)
+        .collect();
+    let stds = committee_std(&preds);
+    std::hint::black_box(&stds);
+    let delta = alloc_count() - before;
+    drop((stds, preds));
+    delta
+}
+
+/// Allocations for one full flat `prediction_check` (std + mean + top-k)
+/// with nothing selected, so the candidate list stays empty and the region
+/// is strictly batch-size-independent.
+fn flat_check_allocs(frames: &[Vec<f32>], inputs: &Batch) -> u64 {
+    let before = alloc_count();
+    let views: [BatchView<'_>; MODELS] = [
+        decode_predict_batch_result_rows(&frames[0]).unwrap().1,
+        decode_predict_batch_result_rows(&frames[1]).unwrap().1,
+        decode_predict_batch_result_rows(&frames[2]).unwrap().1,
+    ];
+    let out = committee_std_check_batch(&inputs.view(), &views, f32::MAX, 8);
+    std::hint::black_box(&out);
+    let delta = alloc_count() - before;
+    drop(out);
+    delta
+}
+
+#[test]
+fn flat_decode_and_reduce_allocate_nothing_per_row() {
+    let small_frames = frames(8);
+    let large_frames = frames(64);
+    let small_inputs = Batch::from_rows(
+        &(0..8).map(|i| vec![i as f32; 4]).collect::<Vec<_>>(),
+    )
+    .unwrap();
+    let large_inputs = Batch::from_rows(
+        &(0..64).map(|i| vec![i as f32; 4]).collect::<Vec<_>>(),
+    )
+    .unwrap();
+
+    // warm-up: lazy one-time allocations (fmt machinery etc.) out of the way
+    let _ = flat_decode_std_allocs(&small_frames);
+    let _ = nested_decode_std_allocs(&small_frames);
+    let _ = flat_check_allocs(&small_frames, &small_inputs);
+
+    // --- flat decode + committee_std: constant, tiny ---
+    let flat_small = flat_decode_std_allocs(&small_frames);
+    let flat_large = flat_decode_std_allocs(&large_frames);
+    assert!(flat_small <= 2, "flat decode+std allocated {flat_small} times (want <= 2)");
+    assert_eq!(
+        flat_small, flat_large,
+        "flat decode+std must not allocate per row (8 rows: {flat_small}, 64 rows: {flat_large})"
+    );
+
+    // --- full flat check (std + mean + empty top-k): constant ---
+    let check_small = flat_check_allocs(&small_frames, &small_inputs);
+    let check_large = flat_check_allocs(&large_frames, &large_inputs);
+    assert!(check_small <= 8, "flat check allocated {check_small} times (want <= 8)");
+    assert_eq!(
+        check_small, check_large,
+        "flat check must not allocate per row (8 rows: {check_small}, 64 rows: {check_large})"
+    );
+
+    // --- >= 10x fewer allocations per item than the nested baseline at
+    //     batch size 8 (the PR's acceptance criterion) ---
+    let nested_small = nested_decode_std_allocs(&small_frames);
+    assert!(
+        nested_small >= 10 * flat_small.max(1),
+        "flat path saves too little: nested {nested_small} vs flat {flat_small} allocs at batch 8"
+    );
+}

@@ -6,8 +6,10 @@ use pal::comm::codec;
 use pal::comm::protocol;
 use pal::coordinator::buffers::{OracleBuffer, TrainBuffer};
 use pal::coordinator::selection::{
-    committee_mean, committee_std, committee_std_check, CommitteeStdUtils,
+    committee_mean, committee_mean_batch, committee_std, committee_std_batch,
+    committee_std_check, committee_std_check_batch, CommitteeStdUtils,
 };
+use pal::data::batch::{Batch, BatchView, RowBlock};
 use pal::kernels::Utils;
 use pal::prop::{forall, Gen};
 use pal::sim::speedup::Workload;
@@ -271,6 +273,205 @@ fn batch_frames_reject_truncation_anywhere() {
             let enc = protocol::encode_predict_batch(1, &items);
             // removing trailing elements must never decode successfully
             protocol::decode_predict_batch(&enc[..enc.len().saturating_sub(cut + 1)]).is_none()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Flat data plane: batch path ≡ nested path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uniform_parse_equivalent_to_views_incl_rejections() {
+    // flat parse accepts exactly the uniform subset of what the view parse
+    // accepts (same values), and rejects everything else (ragged included)
+    forall(
+        300,
+        |g| {
+            let n = g.usize(0, 8);
+            let uniform = g.bool();
+            let w = g.usize(0, 10);
+            let parts: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let len = if uniform { w } else { g.usize(0, 10) };
+                    g.vec_normal(len)
+                })
+                .collect();
+            let packed = codec::pack_vecs(&parts);
+            mutate_packed(g, packed)
+        },
+        |mutated| {
+            let views = codec::unpack_views(&mutated);
+            let flat = codec::unpack_batch_view(&mutated);
+            match (views, flat) {
+                (Some(v), Some(b)) => {
+                    b.rows() == v.len()
+                        && (0..b.rows()).all(|i| b.row(i) == v[i])
+                }
+                (Some(v), None) => {
+                    // flat may reject only ragged part lists
+                    let w0 = v.first().map(|p| p.len()).unwrap_or(0);
+                    v.iter().any(|p| p.len() != w0)
+                }
+                (None, None) => true,
+                (None, Some(_)) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn batch_frame_rows_decode_equivalent_to_nested() {
+    // pack → decode round-trip: the flat frame decoder agrees with the
+    // nested decoder on every uniform frame, including mutated ones
+    forall(
+        250,
+        |g| {
+            let id = g.rng().next_u64() & ((1u64 << 48) - 1);
+            let n = g.usize(0, 10);
+            let w = g.usize(0, 12);
+            let items: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(w)).collect();
+            let packed = protocol::encode_predict_batch(id, &items);
+            mutate_packed(g, packed)
+        },
+        |mutated| {
+            let nested = protocol::decode_predict_batch(&mutated);
+            let flat = protocol::decode_predict_batch_rows(&mutated);
+            match (nested, flat) {
+                (Some((ni, nv)), Some((fi, fv))) => {
+                    ni == fi
+                        && fv.rows() == nv.len()
+                        && (0..fv.rows()).all(|i| fv.row(i) == nv[i].as_slice())
+                }
+                (Some((_, nv)), None) => {
+                    let w0 = nv.first().map(|p| p.len()).unwrap_or(0);
+                    nv.iter().any(|p| p.len() != w0)
+                }
+                (None, None) => true,
+                (None, Some(_)) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn committee_reductions_batch_equivalent_to_nested_bitwise() {
+    forall(
+        200,
+        |g| {
+            let models = g.usize(1, 5);
+            let gens = g.usize(1, 10);
+            let width = g.usize(1, 6);
+            gen_preds(g, models, gens, width)
+        },
+        |nested| {
+            let batches: Vec<Batch> =
+                nested.iter().map(|m| Batch::from_rows(m).unwrap()).collect();
+            let views: Vec<BatchView<'_>> = batches.iter().map(|b| b.view()).collect();
+            committee_std_batch(&views) == committee_std(&nested)
+                && committee_mean_batch(&views).to_nested() == committee_mean(&nested)
+        },
+    );
+}
+
+#[test]
+fn full_pack_decode_reduce_roundtrip_batch_equals_legacy() {
+    // end-to-end: encode per-member result frames, decode both ways, run
+    // the full committee_std_check — identical selections and checked rows
+    forall(
+        150,
+        |g| {
+            let models = g.usize(1, 4);
+            let gens = g.usize(1, 8);
+            let width = g.usize(1, 5);
+            let inputs = g.arrays(gens, width + 1);
+            let preds = gen_preds(g, models, gens, width);
+            let threshold = g.f32(0.0, 0.4);
+            let cap = g.usize(0, 10);
+            (inputs, preds, threshold, cap)
+        },
+        |(inputs, preds, threshold, cap)| {
+            let frames: Vec<Vec<f32>> = preds
+                .iter()
+                .map(|m| protocol::encode_predict_batch_result(7, m))
+                .collect();
+            // legacy: nested decode + nested check
+            let nested: Vec<Vec<Vec<f32>>> = frames
+                .iter()
+                .map(|f| protocol::decode_predict_batch_result(f).unwrap().1)
+                .collect();
+            let (n_orcl, n_checked) = committee_std_check(&inputs, &nested, threshold, cap);
+            // flat: strided decode over the frames + batch check
+            let input_batch = Batch::from_rows(&inputs).unwrap();
+            let views: Vec<BatchView<'_>> = frames
+                .iter()
+                .map(|f| protocol::decode_predict_batch_result_rows(f).unwrap().1)
+                .collect();
+            let (b_orcl, b_checked) =
+                committee_std_check_batch(&input_batch.view(), &views, threshold, cap);
+            b_orcl.to_nested() == n_orcl && b_checked.to_nested() == n_checked
+        },
+    );
+}
+
+#[test]
+fn prediction_check_batch_shim_matches_nested_for_custom_utils() {
+    // a Utils that only implements the nested hook must behave identically
+    // through the batch entry point (the default shim)
+    struct TakeFirst;
+    impl Utils for TakeFirst {
+        fn prediction_check(
+            &mut self,
+            list_data_to_pred: &[Vec<f32>],
+            preds_per_model: &[Vec<Vec<f32>>],
+        ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+            let checked = committee_mean(preds_per_model);
+            (list_data_to_pred.iter().take(1).cloned().collect(), checked)
+        }
+    }
+    forall(
+        100,
+        |g| {
+            let gens = g.usize(1, 6);
+            (g.arrays(gens, 3), gen_preds(g, 2, gens, 2))
+        },
+        |(inputs, preds)| {
+            let mut u = TakeFirst;
+            let (n_orcl, n_checked) = u.prediction_check(&inputs, &preds);
+            let input_batch = Batch::from_rows(&inputs).unwrap();
+            let batches: Vec<Batch> =
+                preds.iter().map(|m| Batch::from_rows(m).unwrap()).collect();
+            let views: Vec<BatchView<'_>> = batches.iter().map(|b| b.view()).collect();
+            let (b_orcl, b_checked) = u.prediction_check_batch(&input_batch.view(), &views);
+            b_orcl.to_nested() == n_orcl && b_checked.to_nested() == n_checked
+        },
+    );
+}
+
+#[test]
+fn row_block_shared_rows_preserve_values() {
+    forall(
+        150,
+        |g| {
+            let n = g.usize(0, 10);
+            (0..n)
+                .map(|_| {
+                    let w = g.usize(0, 8);
+                    g.vec_normal(w)
+                })
+                .collect::<Vec<_>>()
+        },
+        |rows| {
+            let rb = RowBlock::from_rows(&rows);
+            if rb.to_nested() != rows {
+                return false;
+            }
+            let shared = rb.into_shared();
+            shared.len() == rows.len()
+                && (0..shared.len()).all(|i| {
+                    shared.row(i) == rows[i].as_slice()
+                        && shared.row_payload(i).as_slice() == rows[i].as_slice()
+                })
         },
     );
 }
