@@ -281,6 +281,66 @@ fn weight_fanout_e2e(weight_len: usize) -> (u64, u64, u64) {
     )
 }
 
+/// Train-flush fan-out: broadcast one flush of `points` labeled datapoints
+/// to `trainers` ranks, either as one shared payload (the Manager's path)
+/// or as one materialized buffer per destination (the pattern it
+/// replaced). Returns `bytes_copied` from the world stats.
+fn train_flush_copies(trainers: usize, points: usize, width: usize, shared: bool) -> u64 {
+    use pal::comm::codec::PackBuffer;
+    use pal::data::batch::DatapointBlock;
+    let mut w = World::new(trainers + 1);
+    let stats = w.stats();
+    let mut eps = w.endpoints();
+    let root = eps.remove(0);
+    let dsts: Vec<usize> = (1..=trainers).collect();
+    let mut block = DatapointBlock::with_capacity(points, points * width, points * 2);
+    for i in 0..points {
+        let x: Vec<f32> = (0..width).map(|k| ((i * 7 + k) % 13) as f32 * 0.1).collect();
+        block.push(&x, &[i as f32, 0.5]);
+    }
+    let mut pack = PackBuffer::new();
+    let frame = pack.pack_train_block(&block).to_vec();
+    if shared {
+        // one ingest for the whole trainer fan-out
+        root.bcast(&dsts, 30, frame);
+    } else {
+        // old pattern: one materialized buffer per destination
+        for &d in &dsts {
+            root.send(d, 30, frame.clone());
+        }
+    }
+    stats.bytes_copied()
+}
+
+/// Weight sync over `rounds` rounds at `ranks` replicas: payload-cached
+/// (materialize shared storage once, then refcount-only broadcasts) vs
+/// owned-Vec export every round (one ingest per round). Returns
+/// `(bytes_copied, payload_clones)`.
+fn weight_sync_rounds(ranks: usize, len: usize, rounds: usize, cached: bool) -> (u64, u64) {
+    use pal::comm::bus::Payload;
+    let mut w = World::new(ranks + 1);
+    let stats = w.stats();
+    let mut eps = w.endpoints();
+    let root = eps.remove(0);
+    let dsts: Vec<usize> = (1..=ranks).collect();
+    let weights = vec![0.5f32; len];
+    if cached {
+        // Model::get_weight_payload: one materialization, re-exported by
+        // refcount while the weights are unchanged
+        let payload = Payload::from(weights);
+        root.note_ingest(payload.len());
+        for _ in 0..rounds {
+            root.bcast(&dsts, 31, &payload);
+        }
+    } else {
+        // legacy Model::get_weight: a fresh owned export every round
+        for _ in 0..rounds {
+            root.bcast(&dsts, 31, weights.clone());
+        }
+    }
+    (stats.bytes_copied(), stats.payload_clones())
+}
+
 /// Allocations per predicted item on the decode → committee-reduce hot
 /// path, nested-Vec baseline vs the flat `BatchView` plane. Returns
 /// `(allocs_per_item_nested, allocs_per_item_flat)`.
@@ -534,5 +594,89 @@ fn main() {
     match std::fs::write("BENCH_alloc.json", pal::json::to_string(&alloc_json)) {
         Ok(()) => println!("wrote BENCH_alloc.json"),
         Err(e) => eprintln!("failed to write BENCH_alloc.json: {e}"),
+    }
+
+    // ---- (g) flat training plane: flush fan-out + weight sync ----
+    // Physical bytes copied per flushed datapoint (one shared flush payload
+    // vs per-trainer clones), and the payload-cached weight sync (refcount
+    // re-export) vs an owned export every round at 8 replicas.
+    const TF_TRAINERS: usize = 3;
+    const TF_POINTS: usize = 64;
+    const TF_WIDTH: usize = 32;
+    let flush_shared = train_flush_copies(TF_TRAINERS, TF_POINTS, TF_WIDTH, true);
+    let flush_cloned = train_flush_copies(TF_TRAINERS, TF_POINTS, TF_WIDTH, false);
+    let per_point_shared = flush_shared as f64 / TF_POINTS as f64;
+    let per_point_cloned = flush_cloned as f64 / TF_POINTS as f64;
+
+    const WS_RANKS: usize = 8;
+    const WS_LEN: usize = 100_000;
+    const WS_ROUNDS: usize = 20;
+    let (ws_copied_cached, ws_clones_cached) = weight_sync_rounds(WS_RANKS, WS_LEN, WS_ROUNDS, true);
+    let (ws_copied_owned, ws_clones_owned) = weight_sync_rounds(WS_RANKS, WS_LEN, WS_ROUNDS, false);
+    let ws_reduction = ws_copied_owned as f64 / ws_copied_cached.max(1) as f64;
+
+    let mut rep7 = Report::new(format!(
+        "flat training plane — flush fan-out ({TF_TRAINERS} trainers, {TF_POINTS} points) \
+         + weight sync ({WS_RANKS} ranks, {WS_LEN} f32, {WS_ROUNDS} rounds)"
+    ));
+    rep7.push(
+        Row::new("train flush: shared payload")
+            .field("bytes_copied", flush_shared)
+            .f("bytes_copied_per_point", per_point_shared),
+    );
+    rep7.push(
+        Row::new("train flush: per-dest clone (old)")
+            .field("bytes_copied", flush_cloned)
+            .f("bytes_copied_per_point", per_point_cloned)
+            .f("reduction_x", flush_cloned as f64 / flush_shared.max(1) as f64),
+    );
+    rep7.push(
+        Row::new("weight sync: payload-cached")
+            .field("bytes_copied", ws_copied_cached)
+            .field("payload_clones", ws_clones_cached),
+    );
+    rep7.push(
+        Row::new("weight sync: owned export (old)")
+            .field("bytes_copied", ws_copied_owned)
+            .field("payload_clones", ws_clones_owned)
+            .f("reduction_x", ws_reduction),
+    );
+    rep7.print();
+    println!(
+        "(payload-cached weight sync copies {ws_reduction:.1}x fewer bytes over \
+         {WS_ROUNDS} unchanged-weight rounds at {WS_RANKS} ranks)"
+    );
+    let train_json = obj(vec![
+        ("bench", Value::Str("train_plane".into())),
+        (
+            "train_flush",
+            obj(vec![
+                ("trainers", Value::Num(TF_TRAINERS as f64)),
+                ("points", Value::Num(TF_POINTS as f64)),
+                ("width", Value::Num(TF_WIDTH as f64)),
+                ("bytes_copied_shared", Value::Num(flush_shared as f64)),
+                ("bytes_copied_cloned", Value::Num(flush_cloned as f64)),
+                ("bytes_copied_per_point_shared", Value::Num(per_point_shared)),
+                ("bytes_copied_per_point_cloned", Value::Num(per_point_cloned)),
+            ]),
+        ),
+        (
+            "weight_sync",
+            obj(vec![
+                ("ranks", Value::Num(WS_RANKS as f64)),
+                ("weight_len", Value::Num(WS_LEN as f64)),
+                ("rounds", Value::Num(WS_ROUNDS as f64)),
+                ("bytes_copied_cached", Value::Num(ws_copied_cached as f64)),
+                ("bytes_copied_owned", Value::Num(ws_copied_owned as f64)),
+                ("payload_clones_cached", Value::Num(ws_clones_cached as f64)),
+                ("payload_clones_owned", Value::Num(ws_clones_owned as f64)),
+                ("copy_reduction_x", Value::Num(ws_reduction)),
+                ("target_met", Value::Bool(ws_reduction >= 4.0)),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_train.json", pal::json::to_string(&train_json)) {
+        Ok(()) => println!("wrote BENCH_train.json"),
+        Err(e) => eprintln!("failed to write BENCH_train.json: {e}"),
     }
 }

@@ -183,6 +183,34 @@ impl<const N: usize> IntoPayload for &[f32; N] {
     }
 }
 
+/// File one drained batch of messages into a gather's slots: fill the
+/// first message per listed source, *defer* an already-filled source's
+/// early next-round traffic (callers reinject it via
+/// [`Endpoint::requeue_front`] — oldest first, so per-(src, tag) FIFO is
+/// preserved), and drop messages from unlisted sources (matching the
+/// blocking matcher's behavior). Returns the number of newly filled slots.
+/// This is the single ordering-sensitive fill step shared by
+/// [`Endpoint::gather`] and the host-side shutdown-polling gather.
+pub fn fill_gather_slots(
+    batch: Vec<Message>,
+    srcs: &[usize],
+    slots: &mut [Option<Payload>],
+    deferred: &mut Vec<Message>,
+) -> usize {
+    let mut filled = 0;
+    for m in batch {
+        if let Some(i) = srcs.iter().position(|&s| s == m.src) {
+            if slots[i].is_none() {
+                slots[i] = Some(m.data);
+                filled += 1;
+            } else {
+                deferred.push(m);
+            }
+        }
+    }
+    filled
+}
+
 /// A tagged message between ranks.
 #[derive(Debug, Clone)]
 pub struct Message {
@@ -561,6 +589,47 @@ impl Endpoint {
         self.pop_pending(src, tag)
     }
 
+    /// Vectored receive: drain the channel once, then pop *every* ready
+    /// message matching `(src, tag)` in arrival order. Gather-style
+    /// consumers call this once per round instead of waking per message —
+    /// one channel drain and one mailbox scan serve the whole batch.
+    /// Messages whose simulated arrival time lies in the future stay
+    /// queued, preserving the injected-latency semantics.
+    pub fn recv_ready_all(&mut self, src: Src, tag: u32) -> Vec<Message> {
+        self.drain_channel();
+        let now = Instant::now();
+        let Some(q) = self.pending.get_mut(&tag) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < q.len() {
+            if src.matches(q[i].src) && q[i].ready_at <= now {
+                out.push(q.remove(i).expect("index in bounds"));
+            } else {
+                i += 1;
+            }
+        }
+        if q.is_empty() {
+            self.pending.remove(&tag);
+        }
+        out
+    }
+
+    /// Put messages back at the front of their tag's mailbox, preserving
+    /// their relative order (`msgs[0]` ends up frontmost). Used by gather
+    /// loops to park a source's early next-round traffic: anything still
+    /// queued behind it arrived later, so per-(src, tag) FIFO holds.
+    pub fn requeue_front(&mut self, tag: u32, msgs: Vec<Message>) {
+        if msgs.is_empty() {
+            return;
+        }
+        let q = self.pending.entry(tag).or_default();
+        for m in msgs.into_iter().rev() {
+            q.push_front(m);
+        }
+    }
+
     /// Receive the *latest* matching message, discarding older ones
     /// (used for weight updates where only the newest matters).
     pub fn recv_latest(&mut self, src: Src, tag: u32) -> Option<Message> {
@@ -573,6 +642,12 @@ impl Endpoint {
 
     /// Gather one message from every rank in `srcs` (any arrival order),
     /// returning payloads ordered like `srcs`.
+    ///
+    /// The receive is *vectored*: each pass drains the channel once
+    /// ([`Endpoint::recv_ready_all`]) and files every ready message, so a
+    /// round in which all sources have already replied costs one mailbox
+    /// scan instead of one wake-up per source; only when nothing is ready
+    /// does the loop park on the blocking receive.
     ///
     /// A second message from an already-filled source (the next round's
     /// traffic arriving early) is parked in a local deferred list and
@@ -598,28 +673,18 @@ impl Endpoint {
             if now >= deadline {
                 break Err(RecvError::Timeout);
             }
-            match self.recv_timeout(Src::Any, tag, deadline - now) {
-                Ok(m) => {
-                    if let Some(i) = srcs.iter().position(|&s| s == m.src) {
-                        if slots[i].is_none() {
-                            slots[i] = Some(m.data);
-                            remaining -= 1;
-                        } else {
-                            deferred.push(m);
-                        }
-                    }
+            let mut batch = self.recv_ready_all(Src::Any, tag);
+            if batch.is_empty() {
+                match self.recv_timeout(Src::Any, tag, deadline - now) {
+                    Ok(m) => batch.push(m),
+                    Err(e) => break Err(e),
                 }
-                Err(e) => break Err(e),
             }
+            remaining -= fill_gather_slots(batch, srcs, &mut slots, &mut deferred);
         };
-        if !deferred.is_empty() {
-            // Oldest deferred message ends up frontmost: they were popped
-            // earliest-first, so reinserting in reverse restores seq order.
-            let q = self.pending.entry(tag).or_default();
-            for m in deferred.into_iter().rev() {
-                q.push_front(m);
-            }
-        }
+        // Oldest deferred message ends up frontmost: they were popped
+        // earliest-first, so reinserting in reverse restores seq order.
+        self.requeue_front(tag, deferred);
         result?;
         Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
     }
@@ -772,6 +837,66 @@ mod tests {
         e2.send(0, 9, vec![200.0]);
         let r3 = e0.gather(&[1, 2], 9, Duration::from_secs(1)).unwrap();
         assert_eq!(r3, vec![vec![100.0], vec![200.0]]);
+    }
+
+    #[test]
+    fn recv_ready_all_drains_in_arrival_order() {
+        let mut w = World::new(3);
+        let mut eps = w.endpoints();
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 9, vec![1.0]);
+        e2.send(0, 9, vec![2.0]);
+        e1.send(0, 9, vec![3.0]);
+        e1.send(0, 8, vec![8.0]); // different tag: untouched
+        // let the channel deliver
+        thread::sleep(Duration::from_millis(5));
+        let batch = e0.recv_ready_all(Src::Any, 9);
+        let got: Vec<Vec<f32>> = batch.iter().map(|m| m.data.as_slice().to_vec()).collect();
+        assert_eq!(got, vec![vec![1.0], vec![2.0], vec![3.0]]);
+        // one drain takes everything ready; a second returns nothing
+        assert!(e0.recv_ready_all(Src::Any, 9).is_empty());
+        // the other tag's mailbox was not disturbed
+        assert_eq!(e0.try_recv(Src::Rank(1), 8).unwrap().data, vec![8.0]);
+    }
+
+    #[test]
+    fn recv_ready_all_filters_by_src() {
+        let mut w = World::new(3);
+        let mut eps = w.endpoints();
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e1.send(0, 7, vec![1.0]);
+        e2.send(0, 7, vec![2.0]);
+        thread::sleep(Duration::from_millis(5));
+        let batch = e0.recv_ready_all(Src::Rank(2), 7);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].data, vec![2.0]);
+        // rank 1's message is still queued
+        assert_eq!(e0.try_recv(Src::Rank(1), 7).unwrap().data, vec![1.0]);
+    }
+
+    #[test]
+    fn requeue_front_restores_fifo() {
+        let mut w = World::new(2);
+        let a = w.endpoint(0);
+        let mut b = w.endpoint(1);
+        for i in 0..4 {
+            a.send(1, 5, vec![i as f32]);
+        }
+        thread::sleep(Duration::from_millis(5));
+        let mut batch = b.recv_ready_all(Src::Any, 5);
+        assert_eq!(batch.len(), 4);
+        // keep the last two popped, put the first two back
+        let keep: Vec<Message> = batch.drain(..2).collect();
+        b.requeue_front(5, keep);
+        for i in 0..2 {
+            assert_eq!(b.try_recv(Src::Rank(0), 5).unwrap().data, vec![i as f32]);
+        }
+        assert!(b.try_recv(Src::Rank(0), 5).is_none());
+        assert_eq!(batch[0].data, vec![2.0]);
     }
 
     #[test]

@@ -36,7 +36,7 @@
 //! over nested rows, so flat and nested endpoints interoperate frame-for-
 //! frame; the flat encode is a header write plus one `memcpy`.
 
-use crate::data::batch::{BatchView, RowBlock};
+use crate::data::batch::{BatchView, DatapointBlock, DatapointView, RowBlock};
 
 /// Maximum exactly-representable length in an f32 header.
 pub const MAX_LEN: usize = 1 << 24;
@@ -112,6 +112,14 @@ impl PackBuffer {
     pub fn pack_row_block(&mut self, rows: &RowBlock) -> &[f32] {
         self.buf.clear();
         pack_rows_into_buf(rows, &mut self.buf);
+        &self.buf
+    }
+
+    /// Pack a contiguous labeled-data block (flat twin of
+    /// [`PackBuffer::pack_datapoints`]; identical wire bytes).
+    pub fn pack_train_block(&mut self, block: &DatapointBlock) -> &[f32] {
+        self.buf.clear();
+        encode_train_block_into(block, &mut self.buf);
         &self.buf
     }
 
@@ -256,6 +264,64 @@ pub fn unpack_datapoints(data: &[f32]) -> Option<Vec<(Vec<f32>, Vec<f32>)>> {
     )
 }
 
+// ---------------------------------------------------------------------------
+// Flat training plane (contiguous labeled-data blocks; wire bytes identical)
+// ---------------------------------------------------------------------------
+
+/// Append the packed encoding of a [`DatapointBlock`] to `out` —
+/// wire-identical to [`pack_datapoints`] over the block's pairs (count
+/// `2n`, interleaved `x/y` lengths, interleaved `x/y` data), but every
+/// value copies straight out of the block's two flat buffers; no nested
+/// pair list is ever materialized.
+pub fn encode_train_block_into(block: &DatapointBlock, out: &mut Vec<f32>) {
+    let n = block.len();
+    assert!(2 * n < MAX_LEN, "too many parts");
+    out.reserve(1 + 2 * n + block.total_input_values() + block.total_label_values());
+    out.push((2 * n) as f32);
+    for i in 0..n {
+        let (x, y) = block.pair(i);
+        assert!(x.len() < MAX_LEN && y.len() < MAX_LEN, "part too long for f32 header");
+        out.push(x.len() as f32);
+        out.push(y.len() as f32);
+    }
+    for i in 0..n {
+        let (x, y) = block.pair(i);
+        out.extend_from_slice(x);
+        out.extend_from_slice(y);
+    }
+}
+
+/// Borrowed flat-plane inverse of [`pack_datapoints`] /
+/// [`encode_train_block_into`]: the whole payload parses into one
+/// [`DatapointView`] whose pairs are subslices of `data` — one bounds-list
+/// allocation total, independent of the point count. Accepts and rejects
+/// exactly the same inputs as [`unpack_datapoint_views`] (property-tested).
+pub fn decode_train_block_views(data: &[f32]) -> Option<DatapointView<'_>> {
+    let count = *data.first()? as usize;
+    if count >= MAX_LEN || count % 2 != 0 {
+        return None;
+    }
+    let mut bounds = Vec::with_capacity(count / 2);
+    let mut off = 1 + count;
+    for i in (0..count).step_by(2) {
+        let lx = *data.get(1 + i)? as usize;
+        let ly = *data.get(2 + i)? as usize;
+        if lx >= MAX_LEN || ly >= MAX_LEN {
+            return None;
+        }
+        let xe = off.checked_add(lx)?;
+        let ye = xe.checked_add(ly)?;
+        data.get(off..xe)?;
+        data.get(xe..ye)?;
+        bounds.push((off, xe, xe, ye));
+        off = ye;
+    }
+    if off != data.len() {
+        return None; // truncated or trailing garbage
+    }
+    DatapointView::from_bounds(data, data, bounds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +452,54 @@ mod tests {
         assert_eq!(views.len(), 2);
         assert_eq!(views[0], (&pts[0].0[..], &pts[0].1[..]));
         assert_eq!(views[1], (&pts[1].0[..], &pts[1].1[..]));
+    }
+
+    #[test]
+    fn train_block_encode_matches_pack_datapoints_bytes() {
+        let pts = vec![
+            (vec![1.0f32, 2.0], vec![0.5f32]),
+            (vec![3.0], vec![0.25, 0.75]),
+            (vec![], vec![9.0]),
+        ];
+        let nested = pack_datapoints(&pts);
+        let block = DatapointBlock::from_pairs(&pts);
+        let mut flat = Vec::new();
+        encode_train_block_into(&block, &mut flat);
+        assert_eq!(flat, nested, "flat encoder must write identical wire bytes");
+        let mut pb = PackBuffer::new();
+        assert_eq!(pb.pack_train_block(&block), nested.as_slice());
+        // empty flush
+        let empty = DatapointBlock::new();
+        let mut out = Vec::new();
+        encode_train_block_into(&empty, &mut out);
+        assert_eq!(out, pack_datapoints(&[]));
+    }
+
+    #[test]
+    fn decode_train_block_views_roundtrip_and_rejections() {
+        let pts = vec![
+            (vec![1.0f32, 2.0], vec![0.5f32]),
+            (vec![3.0], vec![0.25, 0.75]),
+        ];
+        let packed = pack_datapoints(&pts);
+        let view = decode_train_block_views(&packed).unwrap();
+        assert_eq!(view.len(), 2);
+        assert_eq!(view.to_nested(), pts);
+        // pairs alias the packed buffer, not fresh allocations
+        let base = packed.as_ptr() as usize;
+        let end = base + packed.len() * std::mem::size_of::<f32>();
+        let p = view.input(0).as_ptr() as usize;
+        assert!(p >= base && p < end, "view escapes the packed buffer");
+        // odd part count, truncation, trailing garbage, empty input
+        let odd = pack(&[&[1.0], &[2.0], &[3.0]]);
+        assert!(decode_train_block_views(&odd).is_none());
+        assert!(decode_train_block_views(&packed[..packed.len() - 1]).is_none());
+        let mut garbage = packed.clone();
+        garbage.push(7.0);
+        assert!(decode_train_block_views(&garbage).is_none());
+        assert!(decode_train_block_views(&[]).is_none());
+        // empty list decodes to an empty view
+        assert_eq!(decode_train_block_views(&pack_datapoints(&[])).unwrap().len(), 0);
     }
 
     #[test]

@@ -75,6 +75,35 @@
 //! Control messages ride the `OnceLock`-cached [`bus::Payload::empty`], so
 //! stop/shutdown fan-outs allocate nothing at all.
 //!
+//! ## Flat training plane (oracle → retrain, weights → replicas)
+//!
+//! The training side mirrors the prediction plane end to end:
+//!
+//! 1. an oracle result's `(input, label)` views copy straight from the
+//!    received payload into the Manager's contiguous
+//!    [`crate::data::batch::DatapointBlock`] staging buffer — no per-sample
+//!    `(Vec, Vec)` boxing;
+//! 2. a retrain flush encodes the whole block with
+//!    [`codec::encode_train_block_into`] (wire bytes identical to the
+//!    nested `pack_datapoints`) into a reusable scratch and broadcasts one
+//!    shared payload to every trainer;
+//! 3. the train host decodes with [`codec::decode_train_block_views`] —
+//!    borrowed pair views over the payload, one bounds-list allocation —
+//!    and hands them to `Model::add_trainingset_batch`, whose native
+//!    implementations stage the rows contiguously (O(1) allocations per
+//!    flush, pinned by `rust/tests/test_flat_train.rs`);
+//! 4. weight syncs ship one shared payload per round
+//!    (`Model::get_weight_payload` → [`bus::Endpoint::bcast`]) that every
+//!    shard replica *adopts* by refcount (`Model::update_from`) — zero
+//!    per-destination copies, proven by [`bus::WorldStats`] in the
+//!    regression tests and measured in `BENCH_train.json`.
+//!
+//! Receive-side gathers are *vectored*: [`bus::Endpoint::recv_ready_all`]
+//! drains a whole per-tag mailbox in one pass, so a lockstep round (or a
+//! committee gather) costs one wake-up per round instead of one per
+//! source; early next-round traffic is requeued at the mailbox front
+//! ([`bus::Endpoint::requeue_front`]), preserving per-(src, tag) FIFO.
+//!
 //! Receive-side matching is indexed: each endpoint files unmatched messages
 //! into per-tag mailboxes, so `recv(src, tag)` inspects only its own tag's
 //! queue — O(1) amortized per message — instead of rescanning all queued

@@ -38,9 +38,16 @@ pub const TAG_TO_ORACLE: u32 = 21;
 /// oracle → Manager: packed `[input, label]` (green).
 pub const TAG_ORACLE_RESULT: u32 = 22;
 
-/// Manager → trainers: packed labeled datapoints (yellow).
+/// Manager → trainers: packed labeled datapoints (yellow). Encoded from
+/// the Manager's flat [`crate::data::batch::DatapointBlock`] via
+/// [`crate::comm::codec::encode_train_block_into`] and decoded on the
+/// train host as borrowed views
+/// ([`crate::comm::codec::decode_train_block_views`]); wire bytes are
+/// identical to the legacy nested `pack_datapoints` format.
 pub const TAG_TRAIN_DATA: u32 = 30;
-/// trainer i → predictor i: flat weight array.
+/// trainer i → predictor i: flat weight array, shipped as one shared
+/// payload per sync (`Model::get_weight_payload`) that every shard replica
+/// adopts by refcount (`Model::update_from`) — zero per-destination copies.
 pub const TAG_WEIGHTS: u32 = 31;
 /// trainer → Manager: `[loss]` after a retraining round (telemetry).
 pub const TAG_RETRAIN_DONE: u32 = 32;

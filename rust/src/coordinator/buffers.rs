@@ -1,7 +1,7 @@
 //! Manager-side buffers: oracle input buffer + training data buffer
 //! (the "metadata storage" of §2.5).
 
-use crate::data::batch::RowQueue;
+use crate::data::batch::{DatapointBlock, RowBlock, RowQueue};
 use crate::data::Datapoint;
 
 /// FIFO of inputs awaiting oracle labeling, with optional capacity bound
@@ -78,21 +78,43 @@ impl OracleBuffer {
         self.queue.pop_front_row().map(|r| r.to_vec())
     }
 
-    /// Drain all buffered inputs (for `adjust_input_for_oracle` re-scoring;
-    /// cold path, so the nested materialization is fine).
-    pub fn drain(&mut self) -> Vec<Vec<f32>> {
-        let out: Vec<Vec<f32>> = self.queue.iter().map(|r| r.to_vec()).collect();
+    /// Drain all buffered inputs into one contiguous [`RowBlock`] (the
+    /// `adjust_input_for_oracle_batch` re-scoring path): rows copy straight
+    /// from the flat queue into the flat block, nothing is boxed per row.
+    pub fn drain_block(&mut self) -> RowBlock {
+        let values: usize = self.queue.iter().map(|r| r.len()).sum();
+        let mut out = RowBlock::with_capacity(self.queue.len(), values);
+        for row in self.queue.iter() {
+            out.push_row(row);
+        }
         self.queue = RowQueue::new();
         out
     }
 
-    /// Replace contents (after user adjustment). The adjusted list must be
-    /// a sub-multiset of the drained one — validated by the caller in
-    /// debug builds.
+    /// Drain all buffered inputs (legacy nested API; routed through
+    /// [`OracleBuffer::drain_block`]'s contiguous staging).
+    pub fn drain(&mut self) -> Vec<Vec<f32>> {
+        self.drain_block().to_nested()
+    }
+
+    /// Replace contents from a contiguous block (after user adjustment).
+    /// The adjusted rows must be a sub-multiset of the drained ones —
+    /// validated by the caller in debug builds.
+    pub fn replace_block(&mut self, rows: &RowBlock) {
+        self.fill_from_rows(rows.iter());
+    }
+
+    /// Replace contents (legacy nested API; same internals as
+    /// [`OracleBuffer::replace_block`] — rows move into the flat queue
+    /// without any intermediate re-boxing).
     pub fn replace(&mut self, inputs: Vec<Vec<f32>>) {
+        self.fill_from_rows(inputs.iter().map(|v| v.as_slice()));
+    }
+
+    fn fill_from_rows<'a>(&mut self, rows: impl Iterator<Item = &'a [f32]>) {
         self.queue = RowQueue::new();
-        for x in &inputs {
-            self.queue.push_row(x);
+        for row in rows {
+            self.queue.push_row(row);
         }
     }
 
@@ -104,9 +126,15 @@ impl OracleBuffer {
 /// Labeled data accumulating toward a retraining broadcast (§2.5:
 /// "distributed to the ML models in the training kernel once the buffer
 /// size reaches a user-defined threshold").
+///
+/// Storage is a flat [`DatapointBlock`]: each oracle result's `(input,
+/// label)` views copy straight from the decoded payload into two
+/// contiguous buffers ([`TrainBuffer::push_pair`]), and a flush hands the
+/// whole block to the wire encoder — no `(Vec, Vec)` boxing anywhere
+/// between the oracle and the trainers.
 #[derive(Debug, Default)]
 pub struct TrainBuffer {
-    buf: Vec<Datapoint>,
+    buf: DatapointBlock,
     pub threshold: usize,
     /// Total datapoints ever flushed (telemetry).
     pub flushed: u64,
@@ -114,7 +142,7 @@ pub struct TrainBuffer {
 
 impl TrainBuffer {
     pub fn new(threshold: usize) -> Self {
-        TrainBuffer { buf: vec![], threshold: threshold.max(1), flushed: 0 }
+        TrainBuffer { buf: DatapointBlock::new(), threshold: threshold.max(1), flushed: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -125,8 +153,15 @@ impl TrainBuffer {
         self.buf.is_empty()
     }
 
+    /// Stage one labeled sample from borrowed slices (hot path: the values
+    /// copy once, into the flat block).
+    pub fn push_pair(&mut self, input: &[f32], label: &[f32]) {
+        self.buf.push(input, label);
+    }
+
+    /// Stage one owned sample (legacy API; same flat staging).
     pub fn push(&mut self, point: Datapoint) {
-        self.buf.push(point);
+        self.push_pair(&point.0, &point.1);
     }
 
     pub fn ready(&self) -> bool {
@@ -134,7 +169,7 @@ impl TrainBuffer {
     }
 
     /// Take the accumulated batch if the threshold is met.
-    pub fn flush(&mut self) -> Option<Vec<Datapoint>> {
+    pub fn flush(&mut self) -> Option<DatapointBlock> {
         if !self.ready() {
             return None;
         }
@@ -143,7 +178,7 @@ impl TrainBuffer {
     }
 
     /// Unconditional drain (shutdown path: don't lose labeled data).
-    pub fn flush_all(&mut self) -> Vec<Datapoint> {
+    pub fn flush_all(&mut self) -> DatapointBlock {
         self.flushed += self.buf.len() as u64;
         std::mem::take(&mut self.buf)
     }
@@ -192,6 +227,39 @@ mod tests {
         assert_eq!(b.pop_row().unwrap(), &[1.0, 2.0]);
         assert_eq!(b.pop_row().unwrap(), &[3.0, 4.0]);
         assert!(b.pop_row().is_none());
+    }
+
+    #[test]
+    fn oracle_buffer_drain_replace_block_roundtrip() {
+        let mut b = OracleBuffer::new(None);
+        b.push_row(&[1.0, 2.0]);
+        b.push_row(&[3.0, 4.0]);
+        b.push_row(&[5.0, 6.0]);
+        let drained = b.drain_block();
+        assert_eq!(drained.len(), 3);
+        assert!(b.is_empty());
+        // keep rows 2 and 0, in that order (a typical adjustment)
+        let mut adjusted = RowBlock::new();
+        adjusted.push_row(drained.row(2));
+        adjusted.push_row(drained.row(0));
+        b.replace_block(&adjusted);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.pop_row().unwrap(), &[5.0, 6.0]);
+        assert_eq!(b.pop_row().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn train_buffer_push_pair_matches_owned_push() {
+        let mut a = TrainBuffer::new(2);
+        let mut b = TrainBuffer::new(2);
+        a.push_pair(&[1.0, 2.0], &[0.5]);
+        a.push_pair(&[3.0], &[0.25, 0.75]);
+        b.push((vec![1.0, 2.0], vec![0.5]));
+        b.push((vec![3.0], vec![0.25, 0.75]));
+        let fa = a.flush().unwrap();
+        let fb = b.flush().unwrap();
+        assert_eq!(fa, fb);
+        assert_eq!(fa.pair(1), (&[3.0f32][..], &[0.25f32, 0.75][..]));
     }
 
     #[test]

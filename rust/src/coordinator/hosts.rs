@@ -6,7 +6,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::comm::bus::{Endpoint, Message, Payload, Src};
+use crate::comm::bus::{fill_gather_slots, Endpoint, Message, Payload, Src};
 use crate::comm::codec::{self, PackBuffer};
 use crate::comm::protocol::*;
 use crate::config::{AlSetting, Topology};
@@ -42,6 +42,13 @@ pub fn recv_poll(
 
 /// Ordered gather (one message per `srcs` entry) polling shutdown.
 /// Payloads come back shared (zero-copy), ordered like `srcs`.
+///
+/// The receive is *vectored* ([`Endpoint::recv_ready_all`]): each pass
+/// drains the whole per-tag mailbox once, so a lockstep round in which
+/// every generator has already sent costs one mailbox scan instead of one
+/// wake-up per generator. Early next-round messages from an already-filled
+/// source are deferred and reinjected at the front of the mailbox when the
+/// gather ends (complete or not), preserving per-(src, tag) FIFO.
 pub fn gather_poll(
     ep: &mut Endpoint,
     srcs: &[usize],
@@ -51,15 +58,26 @@ pub fn gather_poll(
 ) -> Option<Vec<Payload>> {
     let mut slots: Vec<Option<Payload>> = vec![None; srcs.len()];
     let mut remaining = srcs.len();
+    let mut deferred: Vec<Message> = Vec::new();
     while remaining > 0 {
-        let m = recv_poll(ep, Src::Any, tag, down, poll)?;
-        if let Some(i) = srcs.iter().position(|&s| s == m.src) {
-            if slots[i].is_none() {
-                slots[i] = Some(m.data);
-                remaining -= 1;
+        if is_down(down) {
+            ep.requeue_front(tag, deferred);
+            return None;
+        }
+        let mut batch = ep.recv_ready_all(Src::Any, tag);
+        if batch.is_empty() {
+            match ep.recv_timeout(Src::Any, tag, poll) {
+                Ok(m) => batch.push(m),
+                Err(crate::comm::RecvError::Timeout) => continue,
+                Err(crate::comm::RecvError::Disconnected) => {
+                    ep.requeue_front(tag, deferred);
+                    return None;
+                }
             }
         }
+        remaining -= fill_gather_slots(batch, srcs, &mut slots, &mut deferred);
     }
+    ep.requeue_front(tag, deferred);
     Some(slots.into_iter().map(|s| s.unwrap()).collect())
 }
 
@@ -170,9 +188,11 @@ pub fn prediction_host(
             break;
         }
         // newest weights win; stale updates are discarded (paper §2.1:
-        // models "updated periodically by replicating weights")
+        // models "updated periodically by replicating weights"). The
+        // payload-typed update lets the replica *adopt* the shared buffer
+        // the trainer materialized once — no per-replica weight copy.
         if let Some(m) = ep.recv_latest(Src::Any, TAG_WEIGHTS) {
-            tel.time("update", || model.update(&m.data));
+            tel.time("update", || model.update_from(&m.data));
             tel.bump("weight_updates");
         }
         // manager re-scoring for dynamic_orcale_list
@@ -272,6 +292,25 @@ pub fn prediction_host(
 // Training host (SI §S5)
 // ---------------------------------------------------------------------------
 
+/// One trainer → replica weight sync: materialize the weights as a shared
+/// payload at most once (the single physical copy, charged to the world
+/// stats via [`Endpoint::note_ingest`]) and fan it out by refcount —
+/// per-destination cost is a pointer bump regardless of the shard count.
+///
+/// A freshly materialized export holds the only handle on its buffer; a
+/// cached re-export (a model holding adopted shared weights) arrives
+/// already shared and is *not* charged — no bytes moved for it.
+pub fn sync_weights(ep: &Endpoint, replicas: &[usize], model: &dyn Model) {
+    if replicas.is_empty() {
+        return;
+    }
+    let w = model.get_weight_payload();
+    if w.shared_handles() <= 1 {
+        ep.note_ingest(w.len());
+    }
+    ep.bcast(replicas, TAG_WEIGHTS, &w);
+}
+
 /// Drive one training process: wait for labeled batches, retrain until new
 /// data or shutdown interrupts, then push weights to the paired predictor.
 pub fn training_host(
@@ -287,21 +326,24 @@ pub fn training_host(
     // paper's 1:1 trainer→predictor pairing; sharded mode fans out so all
     // shards serve the same committee)
     let replicas = topology.replicas_for_trainer(ep.rank());
-    // initial weight sync so predictors start from the same replica; the
-    // weight vector converts to shared storage once and fans out by
-    // refcount — replica count does not multiply copies
-    ep.bcast(&replicas, TAG_WEIGHTS, model.get_weight());
+    // initial weight sync so predictors start from the same replica; one
+    // shared payload fans out by refcount — replica count does not
+    // multiply copies
+    sync_weights(&ep, &replicas, &*model);
     loop {
         let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TRAIN_DATA, &down, poll) {
             Some(m) => m,
             None => break,
         };
-        let Some(points) = codec::unpack_datapoints(&m.data) else {
+        // flat ingest: the labeled pairs are read as borrowed views over
+        // the received payload and staged contiguously by the model — no
+        // (Vec, Vec) boxing between the wire and the training set
+        let Some(points) = codec::decode_train_block_views(&m.data) else {
             tel.bump("malformed");
             continue;
         };
         tel.add("datapoints", points.len() as u64);
-        model.add_trainingset(&points);
+        model.add_trainingset_batch(&points);
         // retrain, interruptible by new data / shutdown (paper §S5:
         // "checking req_data.Test() at every training epoch")
         let stop = {
@@ -318,7 +360,7 @@ pub fn training_host(
         };
         tel.bump("rounds");
         // one shared weight payload for every shard replica (zero-copy fan-out)
-        ep.bcast(&replicas, TAG_WEIGHTS, model.get_weight());
+        sync_weights(&ep, &replicas, &*model);
         let loss = model.last_loss().unwrap_or(f32::NAN);
         let epochs = model.last_round_epochs() as f32;
         tel.add("epochs", epochs as u64);
@@ -344,4 +386,78 @@ pub fn build_model(
     replica: usize,
 ) -> Box<dyn Model> {
     factory(mode, replica)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+
+    fn flag() -> ShutdownFlag {
+        Arc::new(AtomicBool::new(false))
+    }
+
+    #[test]
+    fn vectored_gather_poll_orders_by_src_list() {
+        let mut w = World::new(4);
+        let mut eps = w.endpoints();
+        let e3 = eps.pop().unwrap();
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e3.send(0, 9, vec![3.0]);
+        e1.send(0, 9, vec![1.0]);
+        e2.send(0, 9, vec![2.0]);
+        let got = gather_poll(&mut e0, &[1, 2, 3], 9, &flag(), Duration::from_millis(2)).unwrap();
+        assert_eq!(got, vec![vec![1.0], vec![2.0], vec![3.0]]);
+    }
+
+    #[test]
+    fn vectored_gather_poll_defers_early_rounds_in_fifo_order() {
+        // the satellite's ordering pin: one generator races two rounds
+        // ahead; the vectored drain must not reorder its backlog
+        let mut w = World::new(3);
+        let mut eps = w.endpoints();
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let down = flag();
+        let poll = Duration::from_millis(2);
+        e1.send(0, 9, vec![1.0]); // round 1
+        e1.send(0, 9, vec![10.0]); // round 2, early
+        e1.send(0, 9, vec![100.0]); // round 3, early
+        e2.send(0, 9, vec![2.0]); // round 1
+        let r1 = gather_poll(&mut e0, &[1, 2], 9, &down, poll).unwrap();
+        assert_eq!(r1, vec![vec![1.0], vec![2.0]]);
+        e2.send(0, 9, vec![20.0]);
+        let r2 = gather_poll(&mut e0, &[1, 2], 9, &down, poll).unwrap();
+        assert_eq!(r2, vec![vec![10.0], vec![20.0]]);
+        e2.send(0, 9, vec![200.0]);
+        let r3 = gather_poll(&mut e0, &[1, 2], 9, &down, poll).unwrap();
+        assert_eq!(r3, vec![vec![100.0], vec![200.0]]);
+    }
+
+    #[test]
+    fn gather_poll_requeues_deferred_on_shutdown() {
+        let mut w = World::new(3);
+        let mut eps = w.endpoints();
+        let _e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let down = flag();
+        e1.send(0, 9, vec![1.0]); // round 1
+        e1.send(0, 9, vec![10.0]); // round 2, early — will be deferred
+        // rank 2 never sends; shut down mid-gather from another thread
+        let down2 = down.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            down2.store(true, Ordering::Release);
+        });
+        assert!(gather_poll(&mut e0, &[1, 2], 9, &down, Duration::from_millis(2)).is_none());
+        h.join().unwrap();
+        // the deferred early round survives in the mailbox (the filled
+        // round-1 slot is consumed — shutdown discards the partial gather)
+        assert_eq!(e0.try_recv(Src::Rank(1), 9).unwrap().data, vec![10.0]);
+        assert!(e0.try_recv(Src::Rank(1), 9).is_none());
+    }
 }

@@ -47,6 +47,8 @@ pub fn manager_host(
     let mut dispatched_total: u64 = 0;
     let mut orcl_buffer = OracleBuffer::new(Some(4096));
     let mut train_buffer = TrainBuffer::new(setting.retrain_size);
+    // reusable flush-encode scratch (steady-state flushes allocate nothing)
+    let mut train_pack = codec::PackBuffer::new();
     let mut last_save = Instant::now();
     let t_start = Instant::now();
     let mut losses_latest: Vec<f32> = vec![f32::NAN; train.len()];
@@ -76,14 +78,14 @@ pub fn manager_host(
             if let Some(i) = orcl.iter().position(|&r| r == m.src) {
                 oracle_busy[i] = false;
             }
-            match codec::unpack(&m.data) {
+            // flat ingest: the (input, label) views copy straight from the
+            // decoded payload into the train buffer's contiguous block —
+            // no per-sample (Vec, Vec) boxing
+            match codec::unpack_views(&m.data) {
                 Some(parts) if parts.len() == 2 => {
-                    let mut it = parts.into_iter();
-                    let input = it.next().unwrap();
-                    let label = it.next().unwrap();
                     out.oracle_labels += 1;
                     tel.bump("labels");
-                    train_buffer.push((input, label));
+                    train_buffer.push_pair(parts[0], parts[1]);
                 }
                 _ => tel.bump("malformed"),
             }
@@ -135,10 +137,13 @@ pub fn manager_host(
             }
         }
 
-        // --- flush labeled batch to every trainer (one shared payload) ---
+        // --- flush labeled batch to every trainer (one shared payload; the
+        // flat block encodes into the reusable scratch with zero
+        // steady-state allocations, wire bytes identical to the nested
+        // encoder) ---
         if !train.is_empty() {
             if let Some(batch) = train_buffer.flush() {
-                ep.bcast(&train, TAG_TRAIN_DATA, codec::pack_datapoints(&batch));
+                ep.bcast(&train, TAG_TRAIN_DATA, train_pack.pack_train_block(&batch));
                 tel.bump("train_flushes");
                 tel.add("train_points", batch.len() as u64);
                 did_work = true;
@@ -191,15 +196,12 @@ pub fn manager_host(
             if let Some(i) = orcl.iter().position(|&r| r == m.src) {
                 oracle_busy[i] = false;
             }
-            if let Some(parts) = codec::unpack(&m.data) {
+            if let Some(parts) = codec::unpack_views(&m.data) {
                 if parts.len() == 2 {
-                    let mut it = parts.into_iter();
-                    let input = it.next().unwrap();
-                    let label = it.next().unwrap();
                     out.oracle_labels += 1;
                     tel.bump("labels");
                     tel.bump("drained_labels");
-                    train_buffer.push((input, label));
+                    train_buffer.push_pair(parts[0], parts[1]);
                 }
             }
         } else {
@@ -209,7 +211,7 @@ pub fn manager_host(
     // flush what we can so trainers see the drained labels before exiting
     if !train.is_empty() {
         if let Some(batch) = train_buffer.flush() {
-            ep.bcast(&train, TAG_TRAIN_DATA, codec::pack_datapoints(&batch));
+            ep.bcast(&train, TAG_TRAIN_DATA, train_pack.pack_train_block(&batch));
             tel.bump("train_flushes");
             tel.add("train_points", batch.len() as u64);
         }
@@ -239,6 +241,16 @@ pub fn manager_host(
 /// Re-score the oracle buffer with the prediction committee and let the
 /// user's `adjust_input_for_oracle` reorder/prune it (SI Utilities,
 /// `dynamic_orcale_list`).
+///
+/// Flat path: the buffer drains into one contiguous
+/// [`crate::data::batch::RowBlock`], the
+/// request packs with a single `memcpy`, and when every committee reply
+/// decodes as a uniform strided view the batch-typed
+/// `adjust_input_for_oracle_batch` hook re-scores without materializing a
+/// nested `Vec` anywhere; the adjusted block refills the buffer row by
+/// row. Ragged traffic (or a custom nested-only `Utils`: the default batch
+/// hook shims through the nested one, behaving identically) falls back to
+/// the legacy nested reduction.
 fn adjust_oracle_buffer(
     ep: &mut Endpoint,
     utils: &mut dyn Utils,
@@ -247,36 +259,63 @@ fn adjust_oracle_buffer(
     setting: &AlSetting,
     tel: &mut KernelTelemetry,
 ) {
-    let inputs = buffer.drain();
+    let inputs = buffer.drain_block();
     // one shared request payload for the whole committee
-    ep.bcast(pred, TAG_RESCORE_REQ, codec::pack_vecs(&inputs));
+    let mut pack = codec::PackBuffer::new();
+    ep.bcast(pred, TAG_RESCORE_REQ, pack.pack_row_block(&inputs));
     // bounded wait: predictors are serving the hot loop; if they cannot
     // answer quickly, skip the adjustment rather than stall labeling
     let deadline = Duration::from_millis(500).max(setting.poll_interval * 50);
-    match ep.gather(pred, TAG_RESCORE_RESP, deadline) {
-        Ok(packed_preds) => {
-            let mut preds_per_model = Vec::with_capacity(packed_preds.len());
-            for p in &packed_preds {
-                match codec::unpack(p) {
-                    Some(list) if list.len() == inputs.len() => preds_per_model.push(list),
-                    _ => {
-                        tel.bump("malformed");
-                        buffer.replace(inputs);
-                        return;
-                    }
-                }
-            }
-            let before = inputs.len();
-            let adjusted = utils.adjust_input_for_oracle(inputs, &preds_per_model);
-            tel.add("adjusted_dropped", (before - adjusted.len().min(before)) as u64);
-            tel.bump("adjustments");
-            buffer.replace(adjusted);
-        }
+    let packed_preds = match ep.gather(pred, TAG_RESCORE_RESP, deadline) {
+        Ok(p) => p,
         Err(_) => {
             tel.bump("adjust_timeouts");
-            buffer.replace(inputs);
+            buffer.replace_block(&inputs);
+            return;
+        }
+    };
+    // flat fast path: uniform input block + uniform equal-width replies
+    // re-score as strided views straight over the received payloads
+    if let Some(input_view) = inputs.as_view() {
+        let mut views = Vec::with_capacity(packed_preds.len());
+        let mut flat_ok = true;
+        for p in &packed_preds {
+            match codec::unpack_batch_view(p) {
+                Some(v) if v.rows() == inputs.len() => views.push(v),
+                _ => {
+                    flat_ok = false;
+                    break;
+                }
+            }
+        }
+        flat_ok = flat_ok && views.windows(2).all(|w| w[0].width() == w[1].width());
+        if flat_ok {
+            let before = inputs.len();
+            let adjusted = utils.adjust_input_for_oracle_batch(&input_view, &views);
+            tel.add("adjusted_dropped", (before - adjusted.len().min(before)) as u64);
+            tel.bump("adjustments");
+            buffer.replace_block(&adjusted);
+            return;
         }
     }
+    // ragged fallback: legacy nested decode + adjustment
+    let nested_inputs = inputs.to_nested();
+    let mut preds_per_model = Vec::with_capacity(packed_preds.len());
+    for p in &packed_preds {
+        match codec::unpack(p) {
+            Some(list) if list.len() == nested_inputs.len() => preds_per_model.push(list),
+            _ => {
+                tel.bump("malformed");
+                buffer.replace_block(&inputs);
+                return;
+            }
+        }
+    }
+    let before = nested_inputs.len();
+    let adjusted = utils.adjust_input_for_oracle(nested_inputs, &preds_per_model);
+    tel.add("adjusted_dropped", (before - adjusted.len().min(before)) as u64);
+    tel.bump("adjustments");
+    buffer.replace(adjusted);
 }
 
 fn save_progress(

@@ -256,6 +256,30 @@ impl Utils for CommitteeStdUtils {
         front_top_k_by_std(&mut keep, &stds, self.max_per_iter);
         keep.into_iter().map(|i| buffer[i].clone()).collect()
     }
+
+    /// Flat twin of the nested adjustment above: identical selection and
+    /// ordering (same `committee_std` summation order, same partial
+    /// selection), but the drained buffer is read by stride and the kept
+    /// rows copy once into one contiguous block — no per-row boxing.
+    fn adjust_input_for_oracle_batch(
+        &mut self,
+        buffer: &BatchView<'_>,
+        preds_per_model: &[BatchView<'_>],
+    ) -> RowBlock {
+        if preds_per_model.is_empty() || buffer.is_empty() {
+            return buffer.to_row_block();
+        }
+        let stds = committee_std_batch(preds_per_model);
+        debug_assert_eq!(stds.len(), buffer.rows());
+        let mut keep: Vec<usize> =
+            (0..buffer.rows()).filter(|&i| stds[i] > self.threshold).collect();
+        front_top_k_by_std(&mut keep, &stds, self.max_per_iter);
+        let mut out = RowBlock::with_capacity(keep.len(), keep.len() * buffer.width());
+        for &i in &keep {
+            out.push_row(buffer.row(i));
+        }
+        out
+    }
 }
 
 /// Label-everything utils (serial-baseline parity tests; no UQ gating).
@@ -427,6 +451,27 @@ mod tests {
         assert_eq!(adjusted.len(), 2);
         assert_eq!(adjusted[0], vec![3.0], "most uncertain entry leads");
         assert!(adjusted.contains(&vec![2.0]), "survivor beyond the window kept");
+    }
+
+    #[test]
+    fn adjust_batch_matches_nested_adjust() {
+        let buffer = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let buffer_batch = Batch::from_rows(&buffer).unwrap();
+        let batches = pred_batches();
+        let views: Vec<BatchView<'_>> = batches.iter().map(|b| b.view()).collect();
+        for (threshold, cap) in [(0.3f32, 10usize), (0.3, 1), (f32::MAX, 4), (0.0, 2)] {
+            let mut n = CommitteeStdUtils::new(threshold, cap);
+            let mut b = CommitteeStdUtils::new(threshold, cap);
+            let nested = n.adjust_input_for_oracle(buffer.clone(), &preds());
+            let flat = b.adjust_input_for_oracle_batch(&buffer_batch.view(), &views);
+            assert_eq!(flat.to_nested(), nested, "thr={threshold} cap={cap}");
+        }
+        // empty committee: both return the buffer unchanged
+        let mut u = CommitteeStdUtils::new(0.0, 4);
+        assert_eq!(
+            u.adjust_input_for_oracle_batch(&buffer_batch.view(), &[]).to_nested(),
+            buffer
+        );
     }
 
     #[test]

@@ -19,6 +19,11 @@
 //! * [`SharedRows`] / [`PayloadBatch`] — payload-backed rows: the backing
 //!   buffer is a shared [`Payload`], so each row can be shipped to a
 //!   different destination as a zero-copy [`Payload::slice`].
+//! * [`DatapointBlock`] / [`DatapointView`] — the *training* plane's
+//!   staging form: paired input/label [`RowBlock`]s (owned, contiguous)
+//!   and the borrowed per-pair view over either a block or a decoded
+//!   `TAG_TRAIN_DATA` payload. They replace boxed `Vec<(Vec, Vec)>`
+//!   datapoint lists between the oracle result and `Model::add_trainingset`.
 //!
 //! The uniform-width types reject ragged input (`Option` constructors);
 //! ragged data stays on the legacy nested-`Vec` paths, which every consumer
@@ -198,6 +203,13 @@ impl<'a> BatchView<'a> {
         Batch { data: self.data.to_vec(), rows: self.rows, width: self.width }
     }
 
+    /// Materialize an owned (trivially uniform) [`RowBlock`] — one flat
+    /// copy, no per-row boxing.
+    pub fn to_row_block(&self) -> RowBlock {
+        let ends = (1..=self.rows).map(|i| i * self.width).collect();
+        RowBlock { data: self.data.to_vec(), ends }
+    }
+
     /// Materialize nested rows (legacy-API shim).
     pub fn to_nested(&self) -> Vec<Vec<f32>> {
         (0..self.rows).map(|i| self.row(i).to_vec()).collect()
@@ -256,6 +268,14 @@ impl RowBlock {
         self.ends.push(self.data.len());
     }
 
+    /// Reserve space for `rows` more rows totalling `values` more values,
+    /// so a following run of [`RowBlock::push_row`]s performs at most one
+    /// (re)allocation per backing buffer regardless of the row count.
+    pub fn reserve(&mut self, rows: usize, values: usize) {
+        self.data.reserve(values);
+        self.ends.reserve(rows);
+    }
+
     /// `(start, end)` bounds of row `i` in [`RowBlock::flat`].
     pub fn bounds(&self, i: usize) -> (usize, usize) {
         let start = if i == 0 { 0 } else { self.ends[i - 1] };
@@ -305,6 +325,206 @@ impl RowBlock {
     /// regardless of row count.
     pub fn into_shared(self) -> SharedRows {
         SharedRows { payload: Payload::from(self.data), ends: self.ends }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DatapointBlock / DatapointView (flat training plane)
+// ---------------------------------------------------------------------------
+
+/// Contiguous labeled-data staging: paired input/label [`RowBlock`]s.
+///
+/// This is the training plane's twin of [`RowBlock`]: every input value
+/// lives in one flat buffer and every label value in another, so
+/// accumulating oracle results toward a retraining flush
+/// (`coordinator::buffers::TrainBuffer`), encoding the flush
+/// (`codec::encode_train_block_into`) and staging a model's training set
+/// all move `f32`s without boxing a `(Vec, Vec)` pair per sample.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DatapointBlock {
+    inputs: RowBlock,
+    labels: RowBlock,
+}
+
+impl DatapointBlock {
+    pub fn new() -> Self {
+        DatapointBlock::default()
+    }
+
+    pub fn with_capacity(points: usize, input_values: usize, label_values: usize) -> Self {
+        DatapointBlock {
+            inputs: RowBlock::with_capacity(points, input_values),
+            labels: RowBlock::with_capacity(points, label_values),
+        }
+    }
+
+    /// Build from nested `(input, label)` pairs (legacy-API shim).
+    pub fn from_pairs<X: AsRef<[f32]>, Y: AsRef<[f32]>>(pairs: &[(X, Y)]) -> Self {
+        let xv: usize = pairs.iter().map(|(x, _)| x.as_ref().len()).sum();
+        let yv: usize = pairs.iter().map(|(_, y)| y.as_ref().len()).sum();
+        let mut out = DatapointBlock::with_capacity(pairs.len(), xv, yv);
+        for (x, y) in pairs {
+            out.push(x.as_ref(), y.as_ref());
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    /// Append one labeled sample; both slices copy into the flat buffers.
+    pub fn push(&mut self, input: &[f32], label: &[f32]) {
+        self.inputs.push_row(input);
+        self.labels.push_row(label);
+    }
+
+    pub fn input(&self, i: usize) -> &[f32] {
+        self.inputs.row(i)
+    }
+
+    pub fn label(&self, i: usize) -> &[f32] {
+        self.labels.row(i)
+    }
+
+    pub fn pair(&self, i: usize) -> (&[f32], &[f32]) {
+        (self.inputs.row(i), self.labels.row(i))
+    }
+
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = (&[f32], &[f32])> {
+        (0..self.len()).map(move |i| self.pair(i))
+    }
+
+    pub fn total_input_values(&self) -> usize {
+        self.inputs.total_values()
+    }
+
+    pub fn total_label_values(&self) -> usize {
+        self.labels.total_values()
+    }
+
+    pub fn clear(&mut self) {
+        self.inputs.clear();
+        self.labels.clear();
+    }
+
+    /// Borrow the whole block as a [`DatapointView`] (one bounds-list
+    /// allocation, independent of the point count).
+    pub fn view(&self) -> DatapointView<'_> {
+        let mut bounds = Vec::with_capacity(self.len());
+        for i in 0..self.len() {
+            let (xs, xe) = self.inputs.bounds(i);
+            let (ys, ye) = self.labels.bounds(i);
+            bounds.push((xs, xe, ys, ye));
+        }
+        DatapointView { xs: self.inputs.flat(), ys: self.labels.flat(), bounds }
+    }
+
+    /// Append every pair of `v`, reserving exactly once per backing buffer
+    /// first — the whole extension performs O(1) allocations regardless of
+    /// how many points the view carries.
+    pub fn extend_from_view(&mut self, v: &DatapointView<'_>) {
+        self.inputs.reserve(v.len(), v.total_input_values());
+        self.labels.reserve(v.len(), v.total_label_values());
+        for (x, y) in v.iter() {
+            self.inputs.push_row(x);
+            self.labels.push_row(y);
+        }
+    }
+
+    /// Materialize nested pairs (legacy-API shim).
+    pub fn to_nested(&self) -> Vec<(Vec<f32>, Vec<f32>)> {
+        (0..self.len())
+            .map(|i| (self.inputs.row(i).to_vec(), self.labels.row(i).to_vec()))
+            .collect()
+    }
+}
+
+/// Borrowed labeled samples: per-pair `(input, label)` subslices into up to
+/// two backing buffers.
+///
+/// Two producers share this one consumer-facing type: a
+/// [`DatapointBlock::view`] points `xs`/`ys` at the block's separate
+/// input/label buffers, while `codec::decode_train_block_views` points both
+/// at the *same* decoded wire payload (whose layout interleaves
+/// `x0 y0 x1 y1 ...`). Either way, reading a pair is pointer arithmetic —
+/// never an allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatapointView<'a> {
+    xs: &'a [f32],
+    ys: &'a [f32],
+    /// Per-point `(x_start, x_end, y_start, y_end)`; `x` bounds index into
+    /// `xs`, `y` bounds into `ys`.
+    bounds: Vec<(usize, usize, usize, usize)>,
+}
+
+impl<'a> DatapointView<'a> {
+    /// Wrap backing buffers + bounds. `None` if any bound is out of range.
+    pub fn from_bounds(
+        xs: &'a [f32],
+        ys: &'a [f32],
+        bounds: Vec<(usize, usize, usize, usize)>,
+    ) -> Option<Self> {
+        for &(xs_, xe, ys_, ye) in &bounds {
+            if xs_ > xe || xe > xs.len() || ys_ > ye || ye > ys.len() {
+                return None;
+            }
+        }
+        Some(DatapointView { xs, ys, bounds })
+    }
+
+    pub fn len(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bounds.is_empty()
+    }
+
+    pub fn input(&self, i: usize) -> &'a [f32] {
+        let (s, e, _, _) = self.bounds[i];
+        &self.xs[s..e]
+    }
+
+    pub fn label(&self, i: usize) -> &'a [f32] {
+        let (_, _, s, e) = self.bounds[i];
+        &self.ys[s..e]
+    }
+
+    pub fn pair(&self, i: usize) -> (&'a [f32], &'a [f32]) {
+        (self.input(i), self.label(i))
+    }
+
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = (&'a [f32], &'a [f32])> + '_ {
+        (0..self.len()).map(move |i| self.pair(i))
+    }
+
+    /// Total input values across all points (no allocation).
+    pub fn total_input_values(&self) -> usize {
+        self.bounds.iter().map(|&(s, e, _, _)| e - s).sum()
+    }
+
+    /// Total label values across all points (no allocation).
+    pub fn total_label_values(&self) -> usize {
+        self.bounds.iter().map(|&(_, _, s, e)| e - s).sum()
+    }
+
+    /// Materialize an owned [`DatapointBlock`] (one flat copy per buffer).
+    pub fn to_block(&self) -> DatapointBlock {
+        let mut out = DatapointBlock::new();
+        out.extend_from_view(self);
+        out
+    }
+
+    /// Materialize nested pairs (legacy-API shim).
+    pub fn to_nested(&self) -> Vec<(Vec<f32>, Vec<f32>)> {
+        (0..self.len())
+            .map(|i| (self.input(i).to_vec(), self.label(i).to_vec()))
+            .collect()
     }
 }
 
@@ -538,6 +758,51 @@ mod tests {
         assert_eq!(shared.row_payload(2).len(), 0);
         // row payloads share the block's backing buffer
         assert!(p.shared_handles() >= 2);
+    }
+
+    #[test]
+    fn datapoint_block_pairs_roundtrip() {
+        let pairs = vec![
+            (vec![1.0f32, 2.0], vec![0.5f32]),
+            (vec![3.0], vec![0.25, 0.75]),
+            (vec![], vec![]),
+        ];
+        let block = DatapointBlock::from_pairs(&pairs);
+        assert_eq!(block.len(), 3);
+        assert_eq!(block.pair(1), (&[3.0f32][..], &[0.25f32, 0.75][..]));
+        assert_eq!(block.to_nested(), pairs);
+        assert_eq!(block.total_input_values(), 3);
+        assert_eq!(block.total_label_values(), 3);
+        let view = block.view();
+        assert_eq!(view.len(), 3);
+        assert_eq!(view.to_nested(), pairs);
+        assert_eq!(view.pair(0), (&[1.0f32, 2.0][..], &[0.5f32][..]));
+        assert_eq!(view.total_input_values(), 3);
+        // extend_from_view appends a copy of every pair
+        let mut grown = block.clone();
+        grown.extend_from_view(&view);
+        assert_eq!(grown.len(), 6);
+        assert_eq!(grown.pair(4), block.pair(1));
+        assert_eq!(view.to_block(), block);
+    }
+
+    #[test]
+    fn datapoint_view_from_bounds_checks_ranges() {
+        let xs = [1.0f32, 2.0, 3.0];
+        let ys = [4.0f32];
+        let v = DatapointView::from_bounds(&xs, &ys, vec![(0, 2, 0, 1)]).unwrap();
+        assert_eq!(v.pair(0), (&[1.0f32, 2.0][..], &[4.0f32][..]));
+        assert!(DatapointView::from_bounds(&xs, &ys, vec![(0, 4, 0, 1)]).is_none());
+        assert!(DatapointView::from_bounds(&xs, &ys, vec![(2, 1, 0, 1)]).is_none());
+        assert!(DatapointView::from_bounds(&xs, &ys, vec![(0, 1, 0, 2)]).is_none());
+    }
+
+    #[test]
+    fn batch_view_to_row_block_matches_nested() {
+        let b = Batch::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let rb = b.view().to_row_block();
+        assert_eq!(rb.to_nested(), b.to_nested());
+        assert_eq!(rb.as_view().unwrap().width(), 2);
     }
 
     #[test]

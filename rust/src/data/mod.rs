@@ -4,7 +4,9 @@ use crate::rng::Rng;
 
 pub mod batch;
 
-pub use batch::{Batch, BatchView, PayloadBatch, RowBlock, RowQueue, SharedRows};
+pub use batch::{
+    Batch, BatchView, DatapointBlock, DatapointView, PayloadBatch, RowBlock, RowQueue, SharedRows,
+};
 
 /// One labeled sample: `(input, label)` flat arrays (paper wire format).
 pub type Datapoint = (Vec<f32>, Vec<f32>);
@@ -51,15 +53,35 @@ impl Dataset {
     /// (paper SI §S5 `add_trainingset`).
     pub fn add(&mut self, points: &[Datapoint]) {
         for (x, y) in points {
-            self.total_added += 1;
-            if self.rng.f64() < self.val_split && !self.x_train.is_empty() {
-                self.x_val.push(x.clone());
-                self.y_val.push(y.clone());
-            } else {
-                self.x_train.push(x.clone());
-                self.y_train.push(y.clone());
-            }
+            self.add_one(x, y);
         }
+        self.apply_window();
+    }
+
+    /// Flat-training-plane twin of [`Dataset::add`]: pairs stream in as
+    /// borrowed views (typically straight over a decoded `TAG_TRAIN_DATA`
+    /// payload), so no intermediate nested pair list is materialized. The
+    /// per-point split logic — and therefore the RNG stream — is shared
+    /// with [`Dataset::add`], so both paths produce identical datasets.
+    pub fn add_view(&mut self, points: &DatapointView<'_>) {
+        for (x, y) in points.iter() {
+            self.add_one(x, y);
+        }
+        self.apply_window();
+    }
+
+    fn add_one(&mut self, x: &[f32], y: &[f32]) {
+        self.total_added += 1;
+        if self.rng.f64() < self.val_split && !self.x_train.is_empty() {
+            self.x_val.push(x.to_vec());
+            self.y_val.push(y.to_vec());
+        } else {
+            self.x_train.push(x.to_vec());
+            self.y_train.push(y.to_vec());
+        }
+    }
+
+    fn apply_window(&mut self) {
         if let Some(cap) = self.rolling_window {
             while self.x_train.len() > cap {
                 self.x_train.remove(0);
@@ -175,6 +197,21 @@ mod tests {
         let (xs, _ys, real) = d.val_batch(7);
         assert_eq!(xs.len(), 7 * 3);
         assert_eq!(real, 3);
+    }
+
+    #[test]
+    fn add_view_identical_to_add() {
+        let points = pts(60);
+        let mut nested = Dataset::new(0.3, 7).with_rolling_window(25);
+        nested.add(&points);
+        let mut flat = Dataset::new(0.3, 7).with_rolling_window(25);
+        let block = batch::DatapointBlock::from_pairs(&points);
+        flat.add_view(&block.view());
+        assert_eq!(flat.x_train, nested.x_train);
+        assert_eq!(flat.y_train, nested.y_train);
+        assert_eq!(flat.x_val, nested.x_val);
+        assert_eq!(flat.y_val, nested.y_val);
+        assert_eq!(flat.total_added(), nested.total_added());
     }
 
     #[test]

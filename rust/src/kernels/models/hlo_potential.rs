@@ -14,7 +14,8 @@ use std::collections::BTreeMap;
 
 use anyhow::Context;
 
-use crate::data::batch::{Batch, BatchView, RowBlock};
+use crate::comm::bus::Payload;
+use crate::data::batch::{Batch, BatchView, DatapointView, RowBlock};
 use crate::data::Dataset;
 use crate::kernels::{Mode, Model};
 use crate::runtime::{Engine, Manifest, TensorIn};
@@ -67,6 +68,10 @@ pub struct HloPotentialModel {
     train_batch: usize,
     // state
     w: Vec<f32>,
+    /// Weights adopted from a shared wire payload (`update_from`): the
+    /// prediction replica reads through the trainer's buffer (refcount
+    /// bump, zero copies). Cleared whenever `w` is written locally.
+    w_shared: Option<Payload>,
     opt: Vec<f32>,
     dataset: Dataset,
     last_loss: Option<f32>,
@@ -135,6 +140,7 @@ impl HloPotentialModel {
             train_name,
             train_batch,
             w,
+            w_shared: None,
             opt: vec![0.0; opt_size],
             dataset: {
                 let d = Dataset::new(opts.val_split, seed as u64 ^ 0xDA7A);
@@ -166,6 +172,7 @@ impl HloPotentialModel {
         let opt = read_vec(v.get("opt"));
         if w.len() == self.param_size && opt.len() == self.opt_size {
             self.w = w;
+            self.w_shared = None;
             self.opt = opt;
         }
         if let Some(rounds) = v.get("rounds").as_f64() {
@@ -196,7 +203,7 @@ impl HloPotentialModel {
         let xs = Value::Array(self.dataset.x_train.iter().map(|x| arr_f32(x)).collect());
         let ys = Value::Array(self.dataset.y_train.iter().map(|y| arr_f32(y)).collect());
         let snap = obj(vec![
-            ("w", arr_f32(&self.w)),
+            ("w", arr_f32(self.weights_slice())),
             ("opt", arr_f32(&self.opt)),
             ("rounds", Value::Num(self.rounds as f64)),
             ("last_loss", match self.last_loss {
@@ -237,6 +244,15 @@ impl HloPotentialModel {
         &self.engine
     }
 
+    /// Active weights: the adopted shared payload when one is held, the
+    /// owned buffer otherwise.
+    fn weights_slice(&self) -> &[f32] {
+        match &self.w_shared {
+            Some(p) => p.as_slice(),
+            None => &self.w,
+        }
+    }
+
     fn widths(&self) -> [usize; 3] {
         [self.n_atoms * 3, self.n_globals, self.n_states]
     }
@@ -259,7 +275,7 @@ impl HloPotentialModel {
         let out = self.engine.call(
             name,
             &[
-                TensorIn::F32(&self.w),
+                TensorIn::F32(self.weights_slice()),
                 TensorIn::F32(&cols[0]),
                 TensorIn::F32(&cols[1]),
                 TensorIn::F32(&cols[2]),
@@ -298,23 +314,28 @@ impl HloPotentialModel {
         pad_rows(&mut cols[1], take, batch, g);
         let out = self.engine.call(
             &name,
-            &[TensorIn::F32(&self.w), TensorIn::F32(&cols[0]), TensorIn::F32(&cols[1])],
+            &[
+                TensorIn::F32(self.weights_slice()),
+                TensorIn::F32(&cols[0]),
+                TensorIn::F32(&cols[1]),
+            ],
         )?;
         Ok(out[1][..take * self.n_states].to_vec()) // e_mean rows
     }
 
     /// Validation energy MSE with current weights (learning-curve metric).
+    /// Flat path: the flattened validation batch is viewed as strided rows
+    /// and column-split straight off the view — no nested row list.
     pub fn validation_mse(&mut self) -> anyhow::Result<Option<f32>> {
         if self.dataset.n_val() == 0 && self.dataset.n_train() == 0 {
             return Ok(None);
         }
         let batch = *self.fwd_names.keys().last().unwrap();
         let (xs, ys, real) = self.dataset.val_batch(batch);
-        let rows: Vec<Vec<f32>> = xs
-            .chunks(self.input_row_len())
-            .map(|c| c.to_vec())
-            .collect();
-        let (e, _f) = self.fwd_chunk(batch, &rows)?;
+        let view = BatchView::from_parts(&xs, batch, self.input_row_len())
+            .context("validation batch shape mismatch")?;
+        let cols = split_columns_range(&view, 0, batch, &self.widths());
+        let (e, _f) = self.fwd_cols(batch, batch, cols)?;
         let s = self.n_states;
         let yl = self.label_row_len();
         let mut mse = 0.0f32;
@@ -330,14 +351,18 @@ impl HloPotentialModel {
     fn train_step(&mut self) -> anyhow::Result<f32> {
         let t = self.train_batch;
         let (xs, ys) = self.dataset.minibatch(t);
-        let in_rows: Vec<Vec<f32>> = xs.chunks(self.input_row_len()).map(|c| c.to_vec()).collect();
-        let lab_rows: Vec<Vec<f32>> = ys.chunks(self.label_row_len()).map(|c| c.to_vec()).collect();
-        let in_cols = split_columns(&in_rows, &self.widths());
-        let lab_cols = split_columns(&lab_rows, &[self.n_states, self.n_atoms * 3]);
+        // flat path: both flattened minibatch buffers are viewed as strided
+        // rows and column-split without materializing nested row lists
+        let in_view = BatchView::from_parts(&xs, t, self.input_row_len())
+            .context("minibatch input shape mismatch")?;
+        let lab_view = BatchView::from_parts(&ys, t, self.label_row_len())
+            .context("minibatch label shape mismatch")?;
+        let in_cols = split_columns_range(&in_view, 0, t, &self.widths());
+        let lab_cols = split_columns_range(&lab_view, 0, t, &[self.n_states, self.n_atoms * 3]);
         let out = self.engine.call(
             &self.train_name,
             &[
-                TensorIn::F32(&self.w),
+                TensorIn::F32(self.weights_slice()),
                 TensorIn::F32(&self.opt),
                 TensorIn::F32(&in_cols[0]),
                 TensorIn::F32(&in_cols[1]),
@@ -348,6 +373,7 @@ impl HloPotentialModel {
         )?;
         let mut it = out.into_iter();
         self.w = it.next().unwrap();
+        self.w_shared = None;
         self.opt = it.next().unwrap();
         let loss = it.next().unwrap()[0];
         Ok(loss)
@@ -420,12 +446,28 @@ impl Model for HloPotentialModel {
 
     fn update(&mut self, weight_array: &[f32]) {
         if weight_array.len() == self.param_size {
+            self.w_shared = None;
             self.w.copy_from_slice(weight_array);
         }
     }
 
+    fn update_from(&mut self, weights: &Payload) {
+        // native flat path: adopt the trainer's shared buffer (refcount
+        // bump) instead of copying it into the owned weight array
+        if weights.len() == self.param_size {
+            self.w_shared = Some(weights.clone());
+        }
+    }
+
     fn get_weight(&self) -> Vec<f32> {
-        self.w.clone()
+        self.weights_slice().to_vec()
+    }
+
+    fn get_weight_payload(&self) -> Payload {
+        match &self.w_shared {
+            Some(p) => p.clone(),
+            None => Payload::from(&self.w[..]),
+        }
     }
 
     fn get_weight_size(&self) -> usize {
@@ -434,6 +476,12 @@ impl Model for HloPotentialModel {
 
     fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
         self.dataset.add(datapoints);
+    }
+
+    fn add_trainingset_batch(&mut self, datapoints: &DatapointView<'_>) {
+        // native flat path: pairs stream straight from the decoded payload
+        // into the dataset, skipping the nested (Vec, Vec) staging list
+        self.dataset.add_view(datapoints);
     }
 
     fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {

@@ -10,7 +10,8 @@ use std::collections::BTreeMap;
 
 use anyhow::Context;
 
-use crate::data::batch::{Batch, BatchView, RowBlock};
+use crate::comm::bus::Payload;
+use crate::data::batch::{Batch, BatchView, DatapointView, RowBlock};
 use crate::data::Dataset;
 use crate::kernels::{Mode, Model};
 use crate::runtime::{Engine, Manifest, TensorIn};
@@ -31,6 +32,9 @@ pub struct HloSurrogateModel {
     train_name: String,
     train_batch: usize,
     w: Vec<f32>,
+    /// Weights adopted from a shared wire payload (`update_from`); cleared
+    /// whenever `w` is written locally.
+    w_shared: Option<Payload>,
     opt: Vec<f32>,
     dataset: Dataset,
     last_loss: Option<f32>,
@@ -75,6 +79,7 @@ impl HloSurrogateModel {
             train_name,
             train_batch,
             w,
+            w_shared: None,
             opt: vec![0.0; opt_size],
             dataset: Dataset::new(0.15, seed as u64 ^ 0xCFD),
             last_loss: None,
@@ -95,13 +100,24 @@ impl HloSurrogateModel {
         self.dataset.n_train()
     }
 
+    /// Active weights: the adopted shared payload when one is held, the
+    /// owned buffer otherwise.
+    fn weights_slice(&self) -> &[f32] {
+        match &self.w_shared {
+            Some(p) => p.as_slice(),
+            None => &self.w,
+        }
+    }
+
     /// Forward one stacked chunk (`used` live rows in `flat`): pads to the
     /// artifact batch, runs the forward, extracts `y_mean` — the single
     /// place both predict paths get the output-tensor layout from.
     fn fwd_flat(&self, batch: usize, used: usize, flat: &mut Vec<f32>) -> anyhow::Result<Vec<f32>> {
         let name = &self.fwd_names[&batch];
         pad_rows(flat, used, batch, self.input_row_len());
-        let out = self.engine.call(name, &[TensorIn::F32(&self.w), TensorIn::F32(flat)])?;
+        let out = self
+            .engine
+            .call(name, &[TensorIn::F32(self.weights_slice()), TensorIn::F32(flat)])?;
         Ok(out[1].clone()) // y_mean (B, n_out)
     }
 
@@ -118,7 +134,7 @@ impl HloSurrogateModel {
         let out = self.engine.call(
             &self.train_name,
             &[
-                TensorIn::F32(&self.w),
+                TensorIn::F32(self.weights_slice()),
                 TensorIn::F32(&self.opt),
                 TensorIn::F32(&xs),
                 TensorIn::F32(&ys),
@@ -126,20 +142,25 @@ impl HloSurrogateModel {
         )?;
         let mut it = out.into_iter();
         self.w = it.next().unwrap();
+        self.w_shared = None;
         self.opt = it.next().unwrap();
         Ok(it.next().unwrap()[0])
     }
 
     /// Validation MSE (learning-curve metric for the thermo-fluid example).
+    /// Flat path: the flattened validation batch feeds the forward
+    /// directly — no nested row list is ever materialized.
     pub fn validation_mse(&mut self) -> anyhow::Result<Option<f32>> {
         if self.dataset.n_val() == 0 && self.dataset.n_train() == 0 {
             return Ok(None);
         }
         let batch = *self.fwd_names.keys().last().unwrap();
-        let (xs, ys, real) = self.dataset.val_batch(batch);
-        let rows: Vec<Vec<f32>> =
-            xs.chunks(self.input_row_len()).map(|c| c.to_vec()).collect();
-        let y = self.fwd_chunk(batch, &rows)?;
+        let (mut xs, ys, real) = self.dataset.val_batch(batch);
+        anyhow::ensure!(
+            xs.len() == batch * self.input_row_len(),
+            "validation batch shape mismatch"
+        );
+        let y = self.fwd_flat(batch, batch, &mut xs)?;
         let o = self.n_out;
         let mut mse = 0.0;
         for i in 0..real {
@@ -211,12 +232,28 @@ impl Model for HloSurrogateModel {
 
     fn update(&mut self, weight_array: &[f32]) {
         if weight_array.len() == self.param_size {
+            self.w_shared = None;
             self.w.copy_from_slice(weight_array);
         }
     }
 
+    fn update_from(&mut self, weights: &Payload) {
+        // native flat path: adopt the trainer's shared buffer (refcount
+        // bump) instead of copying it into the owned weight array
+        if weights.len() == self.param_size {
+            self.w_shared = Some(weights.clone());
+        }
+    }
+
     fn get_weight(&self) -> Vec<f32> {
-        self.w.clone()
+        self.weights_slice().to_vec()
+    }
+
+    fn get_weight_payload(&self) -> Payload {
+        match &self.w_shared {
+            Some(p) => p.clone(),
+            None => Payload::from(&self.w[..]),
+        }
     }
 
     fn get_weight_size(&self) -> usize {
@@ -225,6 +262,12 @@ impl Model for HloSurrogateModel {
 
     fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
         self.dataset.add(datapoints);
+    }
+
+    fn add_trainingset_batch(&mut self, datapoints: &DatapointView<'_>) {
+        // native flat path: pairs stream straight from the decoded payload
+        // into the dataset, skipping the nested (Vec, Vec) staging list
+        self.dataset.add_view(datapoints);
     }
 
     fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {

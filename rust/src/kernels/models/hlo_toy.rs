@@ -9,7 +9,8 @@
 
 use anyhow::Context;
 
-use crate::data::batch::{Batch, BatchView, RowBlock};
+use crate::comm::bus::Payload;
+use crate::data::batch::{Batch, BatchView, DatapointView, RowBlock};
 use crate::data::Dataset;
 use crate::kernels::{Mode, Model};
 use crate::runtime::{Engine, Manifest, TensorIn};
@@ -32,6 +33,9 @@ pub struct HloToyModel {
     train_name: String,
     train_batch: usize,
     w: Vec<f32>,
+    /// Weights adopted from a shared wire payload (`update_from`); cleared
+    /// whenever `w` is written locally.
+    w_shared: Option<Payload>,
     opt: Vec<f32>,
     dataset: Dataset,
     last_loss: Option<f32>,
@@ -75,6 +79,7 @@ impl HloToyModel {
             train_name,
             train_batch,
             w,
+            w_shared: None,
             opt: vec![0.0; opt_size],
             dataset: Dataset::new(0.2, seed as u64),
             last_loss: None,
@@ -82,10 +87,19 @@ impl HloToyModel {
         })
     }
 
+    /// Active weights: the adopted shared payload when one is held, the
+    /// owned buffer otherwise.
+    fn weights_slice(&self) -> &[f32] {
+        match &self.w_shared {
+            Some(p) => p.as_slice(),
+            None => &self.w,
+        }
+    }
+
     fn replicated_weights(&self) -> Vec<f32> {
         let mut w_all = Vec::with_capacity(self.n_members * self.param_size);
         for _ in 0..self.n_members {
-            w_all.extend_from_slice(&self.w);
+            w_all.extend_from_slice(self.weights_slice());
         }
         w_all
     }
@@ -175,12 +189,28 @@ impl Model for HloToyModel {
 
     fn update(&mut self, weight_array: &[f32]) {
         if weight_array.len() == self.param_size {
+            self.w_shared = None;
             self.w.copy_from_slice(weight_array);
         }
     }
 
+    fn update_from(&mut self, weights: &Payload) {
+        // native flat path: adopt the trainer's shared buffer (refcount
+        // bump) instead of copying it into the owned weight array
+        if weights.len() == self.param_size {
+            self.w_shared = Some(weights.clone());
+        }
+    }
+
     fn get_weight(&self) -> Vec<f32> {
-        self.w.clone()
+        self.weights_slice().to_vec()
+    }
+
+    fn get_weight_payload(&self) -> Payload {
+        match &self.w_shared {
+            Some(p) => p.clone(),
+            None => Payload::from(&self.w[..]),
+        }
     }
 
     fn get_weight_size(&self) -> usize {
@@ -189,6 +219,12 @@ impl Model for HloToyModel {
 
     fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
         self.dataset.add(datapoints);
+    }
+
+    fn add_trainingset_batch(&mut self, datapoints: &DatapointView<'_>) {
+        // native flat path: pairs stream straight from the decoded payload
+        // into the dataset, skipping the nested (Vec, Vec) staging list
+        self.dataset.add_view(datapoints);
     }
 
     fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {
@@ -200,7 +236,7 @@ impl Model for HloToyModel {
             match self.engine.call(
                 &self.train_name,
                 &[
-                    TensorIn::F32(&self.w),
+                    TensorIn::F32(self.weights_slice()),
                     TensorIn::F32(&self.opt),
                     TensorIn::F32(&xs),
                     TensorIn::F32(&ys),
@@ -209,6 +245,7 @@ impl Model for HloToyModel {
                 Ok(res) => {
                     let mut it = res.into_iter();
                     self.w = it.next().unwrap();
+                    self.w_shared = None;
                     self.opt = it.next().unwrap();
                     self.last_loss = Some(it.next().unwrap()[0]);
                 }

@@ -6,7 +6,8 @@
 //! HLO-backed models own thread-affine PJRT handles, exactly like the
 //! paper's per-MPI-rank model replicas.
 
-use crate::data::batch::{BatchView, RowBlock};
+use crate::comm::bus::Payload;
+use crate::data::batch::{BatchView, DatapointView, RowBlock};
 
 /// Whether a [`Model`] instance serves the prediction or the training kernel
 /// (the paper's `mode` flag in `UserModel.__init__`).
@@ -77,8 +78,31 @@ pub trait Model {
     /// Replace model weights from a flat array (prediction side).
     fn update(&mut self, weight_array: &[f32]);
 
+    /// Flat-training-plane twin of [`Model::update`]: adopt weights from a
+    /// shared wire [`Payload`]. The built-in models override this to *hold*
+    /// the payload (a refcount bump — the replica then reads weights
+    /// through the same buffer the trainer materialized once), so a
+    /// trainer → n-replica sync costs one physical copy total, end to end.
+    ///
+    /// The default implementation shims through [`Model::update`], so
+    /// existing kernels keep working unchanged.
+    fn update_from(&mut self, weights: &Payload) {
+        self.update(weights.as_slice());
+    }
+
     /// Current weights as a flat array (training side).
     fn get_weight(&self) -> Vec<f32>;
+
+    /// Flat-training-plane twin of [`Model::get_weight`]: the current
+    /// weights as a shared [`Payload`], ready to broadcast to every shard
+    /// replica by refcount. Bit-identical to [`Model::get_weight`]
+    /// (property-tested). The default shim pays the nested path's extra
+    /// copy (`get_weight` clone + shared-storage ingest); native overrides
+    /// materialize shared storage directly — or, when the weights already
+    /// live in an adopted payload, just bump its refcount.
+    fn get_weight_payload(&self) -> Payload {
+        Payload::from(self.get_weight())
+    }
 
     /// Size of the flat weight array (SI: exchanged once at startup so MPI
     /// knows message sizes).
@@ -86,6 +110,17 @@ pub trait Model {
 
     /// Extend the training set with labeled datapoints (training side).
     fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]);
+
+    /// Flat-training-plane twin of [`Model::add_trainingset`]: labeled
+    /// samples arrive as a borrowed [`DatapointView`] — typically straight
+    /// over the decoded `TAG_TRAIN_DATA` payload — so a native
+    /// implementation stages them contiguously without boxing a
+    /// `(Vec, Vec)` pair per sample. The default implementation shims
+    /// through the nested [`Model::add_trainingset`]; the built-in
+    /// synthetic and HLO models override it.
+    fn add_trainingset_batch(&mut self, datapoints: &DatapointView<'_>) {
+        self.add_trainingset(&datapoints.to_nested());
+    }
 
     /// Run (re)training until `interrupt()` turns true (new data arrived /
     /// shutdown) or an internal criterion stops the round. Returns
@@ -157,6 +192,28 @@ pub trait Utils {
     ) -> Vec<Vec<f32>> {
         let _ = preds_per_model;
         buffer
+    }
+
+    /// Flat-data-plane twin of [`Utils::adjust_input_for_oracle`]: the
+    /// drained oracle buffer arrives as one strided view over its
+    /// contiguous staging storage and the per-model rescore replies as
+    /// strided views over the received payloads; the adjusted subset
+    /// returns as one contiguous [`RowBlock`], ready to refill the buffer
+    /// without boxing a `Vec` per row. Must return a sub-multiset
+    /// (permutation allowed) of `buffer`'s rows, like the nested hook.
+    ///
+    /// The default implementation shims through the nested
+    /// [`Utils::adjust_input_for_oracle`]; the built-in committee-std
+    /// utilities override it with a strided reduction.
+    fn adjust_input_for_oracle_batch(
+        &mut self,
+        buffer: &BatchView<'_>,
+        preds_per_model: &[BatchView<'_>],
+    ) -> RowBlock {
+        let nested: Vec<Vec<Vec<f32>>> =
+            preds_per_model.iter().map(|v| v.to_nested()).collect();
+        let adjusted = self.adjust_input_for_oracle(buffer.to_nested(), &nested);
+        RowBlock::from_rows(&adjusted)
     }
 }
 

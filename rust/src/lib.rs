@@ -79,6 +79,28 @@
 //! comm_overhead`). Ragged traffic falls back to the nested-`Vec` path;
 //! wire bytes are identical either way.
 //!
+//! ## Flat training plane
+//!
+//! The training side is flat end to end, too. Labeled samples stage
+//! contiguously from the oracle onward: the Manager's
+//! `TrainBuffer` holds one [`data::DatapointBlock`] (paired input/label
+//! row blocks) filled straight from decoded oracle-result views, a flush
+//! encodes the block in place ([`comm::codec::encode_train_block_into`];
+//! wire bytes identical to the nested `pack_datapoints`) and broadcasts
+//! one shared payload, and trainers decode borrowed pair views
+//! ([`comm::codec::decode_train_block_views`]) into
+//! `Model::add_trainingset_batch` — O(1) allocations per flush on the
+//! native models, pinned by the counting-allocator test `test_flat_train`.
+//! Weight syncs are refcount-only: `Model::get_weight_payload` exports one
+//! shared buffer, every shard replica adopts it via `Model::update_from`
+//! (zero per-destination copies, asserted through
+//! [`comm::bus::WorldStats`]), and `Utils::adjust_input_for_oracle_batch`
+//! re-scores the oracle buffer over strided views without materializing
+//! nested `Vec`s. Gathers are vectored
+//! ([`comm::bus::Endpoint::recv_ready_all`]): one mailbox drain per round
+//! instead of one wake-up per source. `BENCH_train.json` tracks
+//! bytes-copied per flushed datapoint and per weight sync.
+//!
 //! ## Performance
 //!
 //! Perf-tracking benches write machine-readable JSON next to their

@@ -9,7 +9,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::data::batch::{BatchView, RowBlock};
+use crate::data::batch::{BatchView, DatapointBlock, RowBlock};
 use crate::kernels::{Generator, Model, Oracle, Utils};
 use crate::telemetry::KernelTelemetry;
 
@@ -113,11 +113,13 @@ impl SerialWorkflow {
             report.oracle_time += t1.elapsed();
             tel.record("label", t1.elapsed());
 
-            // ---- phase 3: train to completion ----
+            // ---- phase 3: train to completion (flat: every model reads
+            // the same borrowed view over the contiguous labeled block) ----
             let t2 = Instant::now();
             if !labeled.is_empty() {
+                let view = labeled.view();
                 for m in self.models.iter_mut() {
-                    m.add_trainingset(&labeled);
+                    m.add_trainingset_batch(&view);
                     m.retrain(&mut || false);
                     report.final_loss = m.last_loss().or(report.final_loss);
                 }
@@ -139,13 +141,12 @@ impl SerialWorkflow {
 ///
 /// Workers borrow the flat selection block directly (scoped threads share
 /// it read-only and index rows by stride), so no per-shard input copies are
-/// made; inputs are copied exactly once, into the returned labeled pairs.
-fn label_parallel(
-    oracles: &mut [Box<dyn Oracle>],
-    inputs: &RowBlock,
-) -> Vec<(Vec<f32>, Vec<f32>)> {
+/// made; inputs and labels are copied exactly once, into the returned
+/// contiguous [`DatapointBlock`] — the flat training plane starts at the
+/// oracle, even in the serial baseline.
+fn label_parallel(oracles: &mut [Box<dyn Oracle>], inputs: &RowBlock) -> DatapointBlock {
     if inputs.is_empty() || oracles.is_empty() {
-        return vec![];
+        return DatapointBlock::new();
     }
     let p = oracles.len();
     // Scoped threads: oracle objects are borrowed mutably, one per thread.
@@ -163,13 +164,21 @@ fn label_parallel(
         }
         handles.into_iter().map(|h| h.join().expect("oracle worker panicked")).collect()
     });
-    let mut results: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; inputs.len()];
+    let mut labels: Vec<Option<Vec<f32>>> = vec![None; inputs.len()];
+    let mut label_values = 0;
     for shard in shard_results {
         for (i, y) in shard {
-            results[i] = Some((inputs.row(i).to_vec(), y));
+            label_values += y.len();
+            labels[i] = Some(y);
         }
     }
-    results.into_iter().flatten().collect()
+    let mut out = DatapointBlock::with_capacity(inputs.len(), inputs.total_values(), label_values);
+    for (i, y) in labels.into_iter().enumerate() {
+        if let Some(y) = y {
+            out.push(inputs.row(i), &y);
+        }
+    }
+    out
 }
 
 #[cfg(test)]

@@ -4,7 +4,8 @@
 
 use std::time::Duration;
 
-use crate::data::batch::{Batch, BatchView, RowBlock};
+use crate::comm::bus::Payload;
+use crate::data::batch::{Batch, BatchView, DatapointBlock, DatapointView, RowBlock};
 use crate::kernels::{Generator, Mode, Model, Oracle, Utils};
 
 /// Spin-sleep for `d` (thread::sleep granularity is fine at our scales).
@@ -87,7 +88,13 @@ pub struct SyntheticModel {
     pub epoch_cost: Duration,
     pub epochs: usize,
     weights: Vec<f32>,
-    dataset: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Weights adopted from a shared wire payload (`update_from`): the
+    /// replica reads through the same buffer the trainer materialized, so
+    /// a weight sync costs this model zero copies. Cleared whenever the
+    /// weights are mutated locally (`update` / `retrain`).
+    shared_weights: Option<Payload>,
+    /// Flat training set: inputs and labels in two contiguous buffers.
+    dataset: DatapointBlock,
     last_loss: Option<f32>,
     last_round_epochs: u64,
     pub mode: Mode,
@@ -110,7 +117,8 @@ impl SyntheticModel {
             epoch_cost,
             epochs,
             weights: vec![0.0; in_dim * out_dim],
-            dataset: vec![],
+            shared_weights: None,
+            dataset: DatapointBlock::new(),
             last_loss: None,
             last_round_epochs: 0,
             mode,
@@ -136,13 +144,32 @@ impl SyntheticModel {
         self
     }
 
+    /// Active weights: the adopted shared payload when one is held (a
+    /// prediction replica after a zero-copy sync), the owned buffer
+    /// otherwise.
+    fn active_weights(&self) -> &[f32] {
+        match &self.shared_weights {
+            Some(p) => p.as_slice(),
+            None => &self.weights,
+        }
+    }
+
+    /// Move adopted shared weights into the owned buffer before a local
+    /// mutation (retraining) — shared payloads are immutable.
+    fn materialize_weights(&mut self) {
+        if let Some(p) = self.shared_weights.take() {
+            self.weights.copy_from_slice(p.as_slice());
+        }
+    }
+
     fn predict_one_into(&self, x: &[f32], out: &mut [f32]) {
+        let w = self.active_weights();
         for (o, slot) in out.iter_mut().enumerate() {
             *slot = x
                 .iter()
                 .take(self.in_dim)
                 .enumerate()
-                .map(|(i, &v)| v * self.weights[o * self.in_dim + i])
+                .map(|(i, &v)| v * w[o * self.in_dim + i])
                 .sum();
         }
     }
@@ -174,12 +201,33 @@ impl Model for SyntheticModel {
     }
 
     fn update(&mut self, weight_array: &[f32]) {
+        self.shared_weights = None;
         let n = self.weights.len();
         self.weights.copy_from_slice(&weight_array[..n]);
     }
 
+    fn update_from(&mut self, weights: &Payload) {
+        // native flat path: adopt the shared buffer (refcount bump, zero
+        // copies) when the size matches the fixed weight-message contract
+        if weights.len() == self.weights.len() {
+            self.shared_weights = Some(weights.clone());
+        } else {
+            self.update(weights.as_slice());
+        }
+    }
+
     fn get_weight(&self) -> Vec<f32> {
-        self.weights.clone()
+        self.active_weights().to_vec()
+    }
+
+    fn get_weight_payload(&self) -> Payload {
+        match &self.shared_weights {
+            // already shared: re-exporting is a refcount bump
+            Some(p) => p.clone(),
+            // one copy straight into shared storage (the default shim pays
+            // an extra get_weight clone on top)
+            None => Payload::from(&self.weights[..]),
+        }
     }
 
     fn get_weight_size(&self) -> usize {
@@ -187,10 +235,20 @@ impl Model for SyntheticModel {
     }
 
     fn add_trainingset(&mut self, datapoints: &[(Vec<f32>, Vec<f32>)]) {
-        self.dataset.extend_from_slice(datapoints);
+        for (x, y) in datapoints {
+            self.dataset.push(x, y);
+        }
+    }
+
+    fn add_trainingset_batch(&mut self, datapoints: &DatapointView<'_>) {
+        // native flat path: reserve once, then copy every pair straight
+        // from the decoded payload into the flat training set — O(1)
+        // allocations regardless of the batch size
+        self.dataset.extend_from_view(datapoints);
     }
 
     fn retrain(&mut self, interrupt: &mut dyn FnMut() -> bool) -> bool {
+        self.materialize_weights();
         let dataset = std::mem::take(&mut self.dataset);
         self.last_round_epochs = 0;
         for _ in 0..self.epochs {
@@ -199,7 +257,7 @@ impl Model for SyntheticModel {
             // one LMS pass over the data (cheap, just to make weights move)
             let mut loss = 0.0f32;
             let n = dataset.len().max(1);
-            for (x, y) in &dataset {
+            for (x, y) in dataset.iter() {
                 let pred = self.predict_one(x);
                 for (o, (&p, &t)) in pred.iter().zip(y.iter()).enumerate() {
                     let err = t - p;
@@ -344,6 +402,50 @@ mod tests {
         m.update(&w);
         assert_eq!(m.get_weight(), w);
         assert_eq!(m.get_weight_size(), 6);
+    }
+
+    #[test]
+    fn weight_payload_bit_equal_and_adopted_without_copy() {
+        let mut trainer = SyntheticModel::new(3, 2, Duration::ZERO, Duration::ZERO, 1, Mode::Train);
+        let w: Vec<f32> = (0..6).map(|i| i as f32 * 0.5 - 1.0).collect();
+        trainer.update(&w);
+        let p = trainer.get_weight_payload();
+        assert_eq!(p.as_slice(), trainer.get_weight().as_slice());
+
+        let mut replica = SyntheticModel::new(3, 2, Duration::ZERO, Duration::ZERO, 1, Mode::Predict);
+        let handles_before = p.shared_handles();
+        replica.update_from(&p);
+        // adoption shares the buffer instead of copying it
+        assert_eq!(p.shared_handles(), handles_before + 1);
+        assert_eq!(replica.get_weight(), w);
+        assert_eq!(replica.get_weight_size(), 6);
+        // the adopted replica predicts exactly like the legacy-updated one
+        let mut legacy = SyntheticModel::new(3, 2, Duration::ZERO, Duration::ZERO, 1, Mode::Predict);
+        legacy.update(&w);
+        let x = vec![vec![0.1, 0.2, 0.3]];
+        assert_eq!(replica.predict(&x), legacy.predict(&x));
+        // re-exporting adopted weights is a refcount bump, bit-identical
+        assert_eq!(replica.get_weight_payload().as_slice(), p.as_slice());
+        // local mutation materializes first and keeps training correct
+        replica.add_trainingset(&[(vec![1.0, 0.0, 0.0], vec![1.0, 0.0])]);
+        replica.retrain(&mut || false);
+        assert_ne!(replica.get_weight(), w);
+    }
+
+    #[test]
+    fn add_trainingset_batch_matches_nested_add() {
+        let pts: Vec<(Vec<f32>, Vec<f32>)> = (0..5)
+            .map(|i| (vec![i as f32, 1.0], vec![i as f32 * 0.5]))
+            .collect();
+        let mut nested = SyntheticModel::new(2, 1, Duration::ZERO, Duration::ZERO, 50, Mode::Train);
+        nested.add_trainingset(&pts);
+        let mut flat = SyntheticModel::new(2, 1, Duration::ZERO, Duration::ZERO, 50, Mode::Train);
+        let block = DatapointBlock::from_pairs(&pts);
+        flat.add_trainingset_batch(&block.view());
+        nested.retrain(&mut || false);
+        flat.retrain(&mut || false);
+        assert_eq!(nested.get_weight(), flat.get_weight());
+        assert_eq!(nested.last_loss(), flat.last_loss());
     }
 
     #[test]

@@ -132,3 +132,54 @@ fn payload_accounting_is_consistent() {
     let mean = report.payload_bytes as f64 / report.messages as f64;
     assert!(mean > 4.0 && mean < 4096.0, "mean payload {mean}");
 }
+
+#[test]
+fn weight_sync_zero_per_destination_copies_at_8_ranks() {
+    // The trainer → replica weight sync exactly as training_host performs
+    // it (hosts::sync_weights): one payload export charged as a single
+    // ingest, then a refcount-only broadcast. Physical copy volume must be
+    // flat in the destination count — zero copies *per destination*.
+    use pal::comm::bus::{Src, World};
+    use pal::comm::protocol::TAG_WEIGHTS;
+    use pal::coordinator::hosts::sync_weights;
+
+    const WEIGHT_LEN: usize = 1024;
+    let mut copied_per_rank_count = Vec::new();
+    for ranks in [2usize, 8] {
+        let mut w = World::new(ranks + 1);
+        let stats = w.stats();
+        let mut eps = w.endpoints();
+        let root = eps.remove(0);
+        let dsts: Vec<usize> = (1..=ranks).collect();
+
+        let mut trainer = SyntheticModel::new(4, 4, Duration::ZERO, Duration::ZERO, 1, Mode::Train)
+            .with_weight_padding(WEIGHT_LEN);
+        let weights: Vec<f32> = (0..WEIGHT_LEN).map(|i| (i % 97) as f32 * 0.01).collect();
+        trainer.update(&weights);
+
+        sync_weights(&root, &dsts, &trainer);
+
+        // exactly one physical materialization for the whole fan-out —
+        // zero per-destination copies — while logical traffic scales
+        assert_eq!(stats.payload_clones(), 1, "one export ingest at {ranks} ranks");
+        assert_eq!(stats.bytes_copied(), (WEIGHT_LEN * 4) as u64);
+        assert_eq!(stats.payload_bytes(), (ranks * WEIGHT_LEN * 4) as u64);
+        copied_per_rank_count.push(stats.bytes_copied());
+
+        // every replica adopts the shared buffer bit-identically
+        for e in eps.iter_mut() {
+            let m = e
+                .recv_timeout(Src::Rank(0), TAG_WEIGHTS, Duration::from_secs(1))
+                .expect("weight sync delivered");
+            let mut replica =
+                SyntheticModel::new(4, 4, Duration::ZERO, Duration::ZERO, 1, Mode::Predict)
+                    .with_weight_padding(WEIGHT_LEN);
+            replica.update_from(&m.data);
+            assert_eq!(replica.get_weight(), trainer.get_weight());
+        }
+    }
+    assert_eq!(
+        copied_per_rank_count[0], copied_per_rank_count[1],
+        "physical weight-sync copies must not scale with the replica count"
+    );
+}

@@ -9,7 +9,9 @@
 //! exactly ONE `#[test]`: the default test harness runs tests of a binary
 //! concurrently, and any sibling test's allocations would pollute the
 //! counters. Result-equivalence properties live in `test_props.rs`; this
-//! binary only counts.
+//! binary only counts. The *training*-plane allocation bounds (label
+//! decode → `add_trainingset_batch`, weight-payload fan-out) live in the
+//! sibling single-test binary `test_flat_train.rs` for the same reason.
 
 use pal::bench_util::alloc::{alloc_count, CountingAlloc};
 use pal::comm::protocol::{

@@ -1,0 +1,123 @@
+//! Allocation-count regression for the flat *training* plane (the sibling
+//! of `test_flat_plane.rs`, which pins the prediction side).
+//!
+//! Pins this PR's acceptance criteria for the training side:
+//!
+//! * label decode → `add_trainingset_batch` stages rows contiguously with
+//!   a **constant** number of allocations, independent of the batch size;
+//! * the trainer → replica weight sync is refcount-only: exporting the
+//!   weight payload costs one shared-storage materialization, and every
+//!   per-replica clone + adoption (`update_from`) allocates **nothing**;
+//! * the flat path allocates ≥ 8× less than the nested
+//!   `unpack_datapoints` → `add_trainingset` baseline it replaces.
+//!
+//! This file installs a counting global allocator and therefore contains
+//! exactly ONE `#[test]`: the default test harness runs tests of a binary
+//! concurrently, and any sibling test's allocations would pollute the
+//! counters.
+
+use pal::bench_util::alloc::{alloc_count, CountingAlloc};
+use pal::comm::codec::{decode_train_block_views, pack_datapoints, unpack_datapoints};
+use pal::kernels::{Mode, Model};
+use pal::sim::workload::SyntheticModel;
+use std::time::Duration;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+const IN_DIM: usize = 8;
+const OUT_DIM: usize = 4;
+
+fn model(mode: Mode) -> SyntheticModel {
+    SyntheticModel::new(IN_DIM, OUT_DIM, Duration::ZERO, Duration::ZERO, 1, mode)
+}
+
+/// A `TAG_TRAIN_DATA` payload carrying `points` labeled samples.
+fn train_payload(points: usize) -> Vec<f32> {
+    let pts: Vec<(Vec<f32>, Vec<f32>)> = (0..points)
+        .map(|i| {
+            let x: Vec<f32> = (0..IN_DIM).map(|k| ((i * 7 + k) % 13) as f32 * 0.1).collect();
+            let y: Vec<f32> = (0..OUT_DIM).map(|k| ((i * 3 + k) % 5) as f32 * 0.2).collect();
+            (x, y)
+        })
+        .collect();
+    pack_datapoints(&pts)
+}
+
+/// Allocations for one flat label ingest: borrowed-view decode of the wire
+/// payload + contiguous staging into the model's training set.
+fn flat_ingest_allocs(payload: &[f32], model: &mut SyntheticModel) -> u64 {
+    let before = alloc_count();
+    let view = decode_train_block_views(payload).unwrap();
+    model.add_trainingset_batch(&view);
+    let delta = alloc_count() - before;
+    std::hint::black_box(&view);
+    delta
+}
+
+/// Allocations for the nested baseline this PR replaces: owned pair decode
+/// + nested `add_trainingset`.
+fn nested_ingest_allocs(payload: &[f32], model: &mut SyntheticModel) -> u64 {
+    let before = alloc_count();
+    let points = unpack_datapoints(payload).unwrap();
+    model.add_trainingset(&points);
+    let delta = alloc_count() - before;
+    std::hint::black_box(&points);
+    delta
+}
+
+#[test]
+fn flat_train_plane_allocates_constant_and_weights_sync_allocation_free() {
+    let small = train_payload(8);
+    let large = train_payload(64);
+
+    // warm-up: lazy one-time allocations out of the way
+    let _ = flat_ingest_allocs(&small, &mut model(Mode::Train));
+    let _ = nested_ingest_allocs(&small, &mut model(Mode::Train));
+
+    // --- label decode → add_trainingset_batch: constant allocations ---
+    // fresh model per measurement so internal reservations don't carry over
+    let flat_small = flat_ingest_allocs(&small, &mut model(Mode::Train));
+    let flat_large = flat_ingest_allocs(&large, &mut model(Mode::Train));
+    assert!(flat_small <= 8, "flat label ingest allocated {flat_small} times (want <= 8)");
+    assert_eq!(
+        flat_small, flat_large,
+        "flat label ingest must not allocate per row (8 rows: {flat_small}, 64 rows: {flat_large})"
+    );
+
+    // --- ≥ 8× fewer allocations than the nested baseline at batch 64 ---
+    let nested_large = nested_ingest_allocs(&large, &mut model(Mode::Train));
+    assert!(
+        nested_large >= 8 * flat_large.max(1),
+        "flat path saves too little: nested {nested_large} vs flat {flat_large} allocs at batch 64"
+    );
+
+    // --- weight payload round-trip: one export materialization, then the
+    //     whole 8-replica fan-out + adoption allocates nothing ---
+    let mut trainer = model(Mode::Train);
+    let w: Vec<f32> = (0..IN_DIM * OUT_DIM).map(|i| i as f32 * 0.01).collect();
+    trainer.update(&w);
+    let mut replicas: Vec<SyntheticModel> = (0..8).map(|_| model(Mode::Predict)).collect();
+
+    let before = alloc_count();
+    let payload = trainer.get_weight_payload();
+    let export_allocs = alloc_count() - before;
+    assert!(
+        export_allocs <= 2,
+        "weight export allocated {export_allocs} times (want <= 2: one shared buffer)"
+    );
+
+    let before = alloc_count();
+    for r in replicas.iter_mut() {
+        let per_replica = payload.clone(); // what the transport does per destination
+        r.update_from(&per_replica);
+    }
+    let fanout_allocs = alloc_count() - before;
+    assert_eq!(
+        fanout_allocs, 0,
+        "per-replica weight sync must be refcount-only (allocated {fanout_allocs} times)"
+    );
+    for r in &replicas {
+        assert_eq!(r.get_weight(), w, "adopted weights must be bit-identical");
+    }
+}

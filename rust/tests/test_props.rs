@@ -9,10 +9,11 @@ use pal::coordinator::selection::{
     committee_mean, committee_mean_batch, committee_std, committee_std_batch,
     committee_std_check, committee_std_check_batch, CommitteeStdUtils,
 };
-use pal::data::batch::{Batch, BatchView, RowBlock};
-use pal::kernels::Utils;
+use pal::data::batch::{Batch, BatchView, DatapointBlock, RowBlock};
+use pal::kernels::{Mode, Model, Utils};
 use pal::prop::{forall, Gen};
 use pal::sim::speedup::Workload;
+use pal::sim::workload::SyntheticModel;
 
 fn gen_preds(g: &mut Gen, models: usize, gens: usize, width: usize) -> Vec<Vec<Vec<f32>>> {
     (0..models).map(|_| g.arrays(gens, width)).collect()
@@ -444,6 +445,147 @@ fn prediction_check_batch_shim_matches_nested_for_custom_utils() {
             let views: Vec<BatchView<'_>> = batches.iter().map(|b| b.view()).collect();
             let (b_orcl, b_checked) = u.prediction_check_batch(&input_batch.view(), &views);
             b_orcl.to_nested() == n_orcl && b_checked.to_nested() == n_checked
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Flat training plane: block path ≡ nested datapoint path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn train_block_views_equivalent_to_datapoint_views() {
+    // the flat train-block decoder accepts/rejects exactly like the nested
+    // pair-view decoder — truncation, trailing garbage, oversized headers
+    // and odd part counts included — and agrees on every value
+    forall(
+        300,
+        |g| {
+            let n = g.usize(0, 10);
+            let pts: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    let a = g.usize(0, 12);
+                    let b = g.usize(0, 6);
+                    (g.vec_normal(a), g.vec_normal(b))
+                })
+                .collect();
+            let packed = codec::pack_datapoints(&pts);
+            mutate_packed(g, packed)
+        },
+        |mutated| {
+            let nested = codec::unpack_datapoint_views(&mutated);
+            let block = codec::decode_train_block_views(&mutated);
+            match (nested, block) {
+                (Some(n), Some(b)) => {
+                    b.len() == n.len()
+                        && (0..b.len()).all(|i| b.pair(i) == n[i])
+                        && b.total_input_values()
+                            == n.iter().map(|(x, _)| x.len()).sum::<usize>()
+                }
+                (None, None) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn train_block_encode_bytes_identical_to_nested_encoder() {
+    // encode: DatapointBlock → wire bytes identical to pack_datapoints;
+    // decode → block → re-encode is the identity on the wire
+    forall(
+        200,
+        |g| {
+            let n = g.usize(0, 10);
+            (0..n)
+                .map(|_| {
+                    let a = g.usize(0, 14);
+                    let b = g.usize(0, 5);
+                    (g.vec_normal(a), g.vec_normal(b))
+                })
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            let nested = codec::pack_datapoints(&pts);
+            let block = DatapointBlock::from_pairs(&pts);
+            let mut flat = Vec::new();
+            codec::encode_train_block_into(&block, &mut flat);
+            if flat != nested {
+                return false;
+            }
+            // decode → materialize → re-encode round-trips the bytes
+            let view = codec::decode_train_block_views(&nested).unwrap();
+            let reblock = view.to_block();
+            let mut again = Vec::new();
+            codec::encode_train_block_into(&reblock, &mut again);
+            again == nested && reblock.to_nested() == pts
+        },
+    );
+}
+
+#[test]
+fn datapoint_block_equivalent_to_nested_datapoints() {
+    forall(
+        200,
+        |g| {
+            let n = g.usize(0, 12);
+            (0..n)
+                .map(|_| {
+                    let a = g.usize(0, 10);
+                    let b = g.usize(0, 4);
+                    (g.vec_normal(a), g.vec_normal(b))
+                })
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            let block = DatapointBlock::from_pairs(&pts);
+            let view = block.view();
+            block.len() == pts.len()
+                && block.to_nested() == pts
+                && view.to_nested() == pts
+                && view.iter().zip(&pts).all(|((x, y), (px, py))| {
+                    x == px.as_slice() && y == py.as_slice()
+                })
+        },
+    );
+}
+
+#[test]
+fn weight_payload_bit_equal_to_get_weight() {
+    forall(
+        100,
+        |g| {
+            let in_dim = g.usize(1, 6);
+            let out_dim = g.usize(1, 4);
+            let w = g.vec_normal(in_dim * out_dim);
+            (in_dim, out_dim, w)
+        },
+        |(in_dim, out_dim, w)| {
+            let mut trainer = SyntheticModel::new(
+                in_dim,
+                out_dim,
+                std::time::Duration::ZERO,
+                std::time::Duration::ZERO,
+                1,
+                Mode::Train,
+            );
+            trainer.update(&w);
+            let p = trainer.get_weight_payload();
+            if p.as_slice() != trainer.get_weight().as_slice() {
+                return false;
+            }
+            // adopting the payload reproduces the weights bit-for-bit
+            let mut replica = SyntheticModel::new(
+                in_dim,
+                out_dim,
+                std::time::Duration::ZERO,
+                std::time::Duration::ZERO,
+                1,
+                Mode::Predict,
+            );
+            replica.update_from(&p);
+            replica.get_weight() == w
+                && replica.get_weight_payload().as_slice() == p.as_slice()
         },
     );
 }
