@@ -7,7 +7,10 @@
 //! vs simulated prediction latency, (c) fixed- vs variable-size message
 //! cost (modeled as one extra header message per payload), (d) batched
 //! exchange message coalescing, (e) weight-broadcast physical copy cost:
-//! shared `Payload` fan-out vs the per-destination clone it replaced.
+//! shared `Payload` fan-out vs the per-destination clone it replaced,
+//! (f) allocations per item on the decode→reduce path, (g) flat training
+//! plane flush/weight-sync copy volume, (h) oracle-plane green-flow
+//! messages per labeled sample, batched vs per-label (`BENCH_oracle.json`).
 //!
 //! Run: `cargo bench --bench comm_overhead`
 //!
@@ -23,15 +26,15 @@ use pal::comm::bus::{Src, World};
 use pal::comm::protocol::{
     decode_predict_batch_result, decode_predict_batch_result_rows, encode_predict_batch_result,
 };
-use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
+use pal::config::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
 use pal::coordinator::selection::{
-    committee_std_check, committee_std_check_batch, CommitteeStdUtils,
+    committee_std_check, committee_std_check_batch, CommitteeStdUtils, SelectAllUtils,
 };
 use pal::coordinator::workflow::Workflow;
 use pal::data::batch::{Batch, BatchView};
 use pal::json::{obj, Value};
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
-use pal::sim::workload::{SyntheticGenerator, SyntheticModel};
+use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
 
 // Counting allocator: only the allocations-per-item section reads the
 // counters; the passthrough costs the other sections nothing measurable.
@@ -382,6 +385,96 @@ fn alloc_per_item(batch: usize, models: usize, width: usize, iters: u64) -> (f64
     (nested, flat)
 }
 
+/// One green-flow run: `(green_msgs, labels, bytes_copied, wall_s)`.
+struct OracleRun {
+    green_msgs: u64,
+    labels: u64,
+    bytes_copied: u64,
+    wall_s: f64,
+}
+
+/// End-to-end workflow with 4 oracles, per-label vs batched oracle
+/// dispatch. Green-flow messages are counted from telemetry: dispatch
+/// frames (`dispatched` items per message in per-label mode,
+/// `oracle_batches` frames in batched mode) plus result frames (one per
+/// label in per-label mode, one per batch in batched mode). Everything
+/// else — selection traffic, prediction relay — is identical between the
+/// two runs by construction.
+fn oracle_messages(mode: OracleMode, labels: u64) -> OracleRun {
+    const GENS: usize = 8;
+    const ORACLES: usize = 4;
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-oracle".into(),
+        gene_process: GENS,
+        pred_process: 2,
+        ml_process: 0,
+        orcl_process: ORACLES,
+        committee_size: Some(2),
+        exchange_mode: ExchangeMode::Batched,
+        batch: BatchSetting {
+            max_size: GENS,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        },
+        oracle_mode: mode,
+        oracle_batch: BatchSetting {
+            max_size: 8,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 4,
+        },
+        strict_label_budget: true,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(labels),
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let generators = (0..GENS)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(16, Duration::ZERO, u64::MAX, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..ORACLES)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle { label_cost: Duration::ZERO, out_dim: 2 })
+                    as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _m: usize| {
+        Box::new(SyntheticModel::new(16, 16, Duration::ZERO, Duration::ZERO, 1, mode))
+            as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(SelectAllUtils { max_per_iter: GENS }) as Box<dyn Utils>);
+    let report = Workflow::new(s)
+        .run(KernelSet { generators, oracles, model, utils })
+        .unwrap();
+    let manager = &report.kernel("manager")[0];
+    let got_labels = report.oracle_labels.max(1);
+    let green_msgs = match mode {
+        // one message per dispatched input + one per label back
+        OracleMode::PerLabel => {
+            manager.counter("dispatched") + report.sum_counter("oracle", "labels")
+        }
+        // one frame per batch out + one result frame per batch back
+        OracleMode::Batched => {
+            manager.counter("oracle_batches") + report.sum_counter("oracle", "batches")
+        }
+    };
+    OracleRun {
+        green_msgs,
+        labels: got_labels,
+        bytes_copied: report.bytes_copied,
+        wall_s: report.wall.as_secs_f64(),
+    }
+}
+
 fn main() {
     let mut json_sections: Vec<(&str, Value)> = vec![("bench", Value::Str("comm_overhead".into()))];
 
@@ -678,5 +771,73 @@ fn main() {
     match std::fs::write("BENCH_train.json", pal::json::to_string(&train_json)) {
         Ok(()) => println!("wrote BENCH_train.json"),
         Err(e) => eprintln!("failed to write BENCH_train.json: {e}"),
+    }
+
+    // ---- (h) oracle plane: green-flow messages per labeled sample ----
+    // 4 oracles, identical selection traffic; only the dispatch leg
+    // changes. Per-label ships 2 messages per label; batched at
+    // oracle_batch.max_size = 8 amortizes 2 frames across up to 8 labels.
+    const ORACLE_LABELS: u64 = 160;
+    let per_label = oracle_messages(OracleMode::PerLabel, ORACLE_LABELS);
+    let batched = oracle_messages(OracleMode::Batched, ORACLE_LABELS);
+    let msgs_per_label_pl = per_label.green_msgs as f64 / per_label.labels as f64;
+    let msgs_per_label_b = batched.green_msgs as f64 / batched.labels as f64;
+    let msg_reduction = msgs_per_label_pl / msgs_per_label_b.max(1e-9);
+    let mut rep8 = Report::new(format!(
+        "oracle plane — green-flow messages per labeled sample \
+         (4 oracles, {ORACLE_LABELS} labels, oracle_batch.max_size = 8)"
+    ));
+    rep8.push(
+        Row::new("per-label (old)")
+            .field("green_msgs", per_label.green_msgs)
+            .field("labels", per_label.labels)
+            .f("msgs_per_label", msgs_per_label_pl)
+            .f("bytes_copied_per_label", per_label.bytes_copied as f64 / per_label.labels as f64),
+    );
+    rep8.push(
+        Row::new("batched (oracle plane)")
+            .field("green_msgs", batched.green_msgs)
+            .field("labels", batched.labels)
+            .f("msgs_per_label", msgs_per_label_b)
+            .f("bytes_copied_per_label", batched.bytes_copied as f64 / batched.labels as f64)
+            .f("msg_reduction_x", msg_reduction),
+    );
+    rep8.print();
+    println!(
+        "(batched oracle dispatch ships {msg_reduction:.2}x fewer green-flow messages per \
+         label{})",
+        if msg_reduction >= 2.0 { " — >= 2x target met" } else { " — BELOW the 2x target" }
+    );
+    let oracle_json = obj(vec![
+        ("bench", Value::Str("oracle_plane".into())),
+        ("oracles", Value::Num(4.0)),
+        ("labels", Value::Num(ORACLE_LABELS as f64)),
+        ("oracle_batch_max_size", Value::Num(8.0)),
+        (
+            "per_label",
+            obj(vec![
+                ("green_msgs", Value::Num(per_label.green_msgs as f64)),
+                ("labels", Value::Num(per_label.labels as f64)),
+                ("msgs_per_label", Value::Num(msgs_per_label_pl)),
+                ("bytes_copied", Value::Num(per_label.bytes_copied as f64)),
+                ("wall_s", Value::Num(per_label.wall_s)),
+            ]),
+        ),
+        (
+            "batched",
+            obj(vec![
+                ("green_msgs", Value::Num(batched.green_msgs as f64)),
+                ("labels", Value::Num(batched.labels as f64)),
+                ("msgs_per_label", Value::Num(msgs_per_label_b)),
+                ("bytes_copied", Value::Num(batched.bytes_copied as f64)),
+                ("wall_s", Value::Num(batched.wall_s)),
+            ]),
+        ),
+        ("msg_reduction_x", Value::Num(msg_reduction)),
+        ("target_met", Value::Bool(msg_reduction >= 2.0)),
+    ]);
+    match std::fs::write("BENCH_oracle.json", pal::json::to_string(&oracle_json)) {
+        Ok(()) => println!("wrote BENCH_oracle.json"),
+        Err(e) => eprintln!("failed to write BENCH_oracle.json: {e}"),
     }
 }

@@ -189,19 +189,25 @@ impl<const N: usize> IntoPayload for &[f32; N] {
 /// [`Endpoint::requeue_front`] — oldest first, so per-(src, tag) FIFO is
 /// preserved), and drop messages from unlisted sources (matching the
 /// blocking matcher's behavior). Returns the number of newly filled slots.
-/// This is the single ordering-sensitive fill step shared by
-/// [`Endpoint::gather`] and the host-side shutdown-polling gather.
+///
+/// Slots hold whole [`Message`]s (not just payloads) so an *aborted*
+/// gather can requeue what it already consumed: dropping the filled
+/// current-round messages while requeueing the deferred next-round ones
+/// would leave the mailbox starting mid-stream — early next-round traffic
+/// interleaved in place of the consumed round. This is the single
+/// ordering-sensitive fill step shared by [`Endpoint::gather`] and the
+/// host-side shutdown-polling gather.
 pub fn fill_gather_slots(
     batch: Vec<Message>,
     srcs: &[usize],
-    slots: &mut [Option<Payload>],
+    slots: &mut [Option<Message>],
     deferred: &mut Vec<Message>,
 ) -> usize {
     let mut filled = 0;
     for m in batch {
         if let Some(i) = srcs.iter().position(|&s| s == m.src) {
             if slots[i].is_none() {
-                slots[i] = Some(m.data);
+                slots[i] = Some(m);
                 filled += 1;
             } else {
                 deferred.push(m);
@@ -662,7 +668,7 @@ impl Endpoint {
         timeout: Duration,
     ) -> Result<Vec<Payload>, RecvError> {
         let deadline = Instant::now() + timeout;
-        let mut slots: Vec<Option<Payload>> = vec![None; srcs.len()];
+        let mut slots: Vec<Option<Message>> = vec![None; srcs.len()];
         let mut remaining = srcs.len();
         let mut deferred: Vec<Message> = Vec::new();
         let result = loop {
@@ -684,9 +690,12 @@ impl Endpoint {
         };
         // Oldest deferred message ends up frontmost: they were popped
         // earliest-first, so reinserting in reverse restores seq order.
+        // (On a timeout the filled slots are intentionally *dropped*, not
+        // requeued: they are replies to this gather's request and would be
+        // stale for the next one.)
         self.requeue_front(tag, deferred);
         result?;
-        Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+        Ok(slots.into_iter().map(|s| s.expect("all slots filled").data).collect())
     }
 }
 
@@ -897,6 +906,28 @@ mod tests {
         }
         assert!(b.try_recv(Src::Rank(0), 5).is_none());
         assert_eq!(batch[0].data, vec![2.0]);
+    }
+
+    #[test]
+    fn requeued_messages_stay_ahead_of_later_arrivals() {
+        // the oracle-plane drain discipline: frames drained but not yet
+        // processed go back to the mailbox front, so traffic that arrived
+        // *after* the drain can never be interleaved ahead of them
+        let mut w = World::new(2);
+        let a = w.endpoint(0);
+        let mut b = w.endpoint(1);
+        a.send(1, 23, vec![1.0]);
+        a.send(1, 23, vec![2.0]);
+        thread::sleep(Duration::from_millis(5));
+        let drained = b.recv_ready_all(Src::Any, 23);
+        assert_eq!(drained.len(), 2);
+        // a newer frame lands in the channel while the drain is parked
+        a.send(1, 23, vec![3.0]);
+        thread::sleep(Duration::from_millis(5));
+        b.requeue_front(23, drained);
+        for want in [1.0, 2.0, 3.0] {
+            assert_eq!(b.try_recv(Src::Rank(0), 23).unwrap().data, vec![want]);
+        }
     }
 
     #[test]

@@ -123,6 +123,20 @@
 //! (`[id_hi, id_lo, packed item list]`), so no size headers are needed even
 //! in `fixed_size_data = false` mode, and one frame replaces what the
 //! unbatched relay pays per item.
+//!
+//! ## Oracle-plane frames (green flow)
+//!
+//! The batched oracle mode rides the same frame discipline: `OracleBatch`
+//! ([`protocol::TAG_ORACLE_BATCH`], layout identical to `PredictBatch`)
+//! carries a micro-batch of Manager-selected inputs to one oracle, and
+//! `OracleBatchResult` ([`protocol::TAG_ORACLE_BATCH_RESULT`]) returns the
+//! interleaved `(input, label)` pairs under the echoed id — its packed
+//! section is byte-identical to `pack_datapoints` over the pairs, so the
+//! Manager ingests a whole batch of labels through the training plane's
+//! borrowed-pair decoder ([`codec::decode_train_block_views`]) with
+//! constant allocations and zero per-label boxing. The per-label leg
+//! ([`protocol::TAG_TO_ORACLE`] / [`protocol::TAG_ORACLE_RESULT`]) is
+//! unchanged on the wire; both legs produce bit-identical labels.
 
 pub mod bus;
 pub mod codec;

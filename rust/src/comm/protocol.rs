@@ -5,7 +5,13 @@
 //! * **red** — generators → (gather) → Exchange → (bcast) → predictors
 //! * **blue** — predictors → (gather) → Exchange → `prediction_check` →
 //!   (scatter) → generators
-//! * **green** — Exchange → Manager (selected inputs) → oracle → Manager
+//! * **green** — Exchange → Manager (selected inputs) → oracle → Manager.
+//!   Two dispatch legs exist: the paper's per-label messages
+//!   ([`TAG_TO_ORACLE`]/[`TAG_ORACLE_RESULT`]) and the batched oracle plane
+//!   ([`TAG_ORACLE_BATCH`]/[`TAG_ORACLE_BATCH_RESULT`]) which coalesces
+//!   many inputs per round-trip; wire bytes of the per-label leg are
+//!   unchanged, and the batched result frame's packed section is
+//!   byte-identical to `pack_datapoints` over its pairs
 //! * **yellow** — Manager → (bcast) → trainers (labeled datapoints)
 //! * weights — trainer *i* → predictor *i* directly (paper §2.4: "trained
 //!   model weights are periodically copied directly to the prediction
@@ -33,10 +39,18 @@ pub const TAG_PRED_BATCH_RESULT: u32 = 16;
 
 /// Exchange → Manager: packed list of inputs selected for labeling (green).
 pub const TAG_ORCL_SELECT: u32 = 20;
-/// Manager → oracle: one input to label (green).
+/// Manager → oracle: one input to label (green, per-label oracle mode).
 pub const TAG_TO_ORACLE: u32 = 21;
-/// oracle → Manager: packed `[input, label]` (green).
+/// oracle → Manager: packed `[input, label]` (green, per-label oracle mode).
 pub const TAG_ORACLE_RESULT: u32 = 22;
+/// Manager → one oracle: an `OracleBatch` frame — a micro-batch of inputs
+/// coalesced by the [`crate::coordinator::oracle_plane::OracleScheduler`]
+/// under one id (green, batched oracle mode).
+pub const TAG_ORACLE_BATCH: u32 = 23;
+/// oracle → Manager: the matching `OracleBatchResult` frame — interleaved
+/// `(input, label)` pairs, one per batched item in dispatch order, echoing
+/// the batch id (green, batched oracle mode).
+pub const TAG_ORACLE_BATCH_RESULT: u32 = 24;
 
 /// Manager → trainers: packed labeled datapoints (yellow). Encoded from
 /// the Manager's flat [`crate::data::batch::DatapointBlock`] via
@@ -266,6 +280,119 @@ pub fn encode_predict_batch_result_block_into(id: u64, rows: &RowBlock, out: &mu
     crate::comm::codec::pack_rows_into_buf(rows, out);
 }
 
+// ---------------------------------------------------------------------------
+// Oracle-plane frames (batched oracle mode, green flow)
+// ---------------------------------------------------------------------------
+//
+// `OracleBatch` (Manager → oracle) reuses the `PredictBatch` layout:
+// `[id_hi, id_lo, pack of the input list]`. `OracleBatchResult` (oracle →
+// Manager) carries interleaved `(input, label)` pairs under the same id
+// header: `[id_hi, id_lo, pack of 2n parts x0 y0 x1 y1 ...]` — the packed
+// section is byte-identical to `codec::pack_datapoints` over the pairs, so
+// the Manager ingests it with the same borrowed-pair decoder
+// (`codec::decode_train_block_views`) the training plane uses.
+
+use crate::data::batch::DatapointView;
+
+/// Encode an `OracleBatch` frame from the scheduler's staged input rows
+/// (clears `out`) — wire-identical to a `PredictBatch` frame over the same
+/// rows.
+pub fn encode_oracle_batch_block_into(id: u64, rows: &RowBlock, out: &mut Vec<f32>) {
+    push_frame_id(id, out);
+    crate::comm::codec::pack_rows_into_buf(rows, out);
+}
+
+/// Flat decode of an `OracleBatch` frame: uniform-width inputs parse as a
+/// strided [`BatchView`] over `msg` with zero allocations. `None` on
+/// malformed input *or* ragged widths (fall back to
+/// [`decode_oracle_batch_views`]).
+pub fn decode_oracle_batch_rows(msg: &[f32]) -> Option<(u64, BatchView<'_>)> {
+    decode_frame_rows(msg)
+}
+
+/// Borrowed-view decode of an `OracleBatch` frame (ragged-capable): inputs
+/// are subslices of `msg`.
+pub fn decode_oracle_batch_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
+    decode_frame_views(msg)
+}
+
+/// Just the 48-bit id of an `OracleBatch` frame, even when the item
+/// section is undecodable. The oracle host uses this to echo an *empty*
+/// result for a malformed batch, so the Manager's scheduler always frees
+/// the in-flight slot — a bad frame costs its labels, never green-flow
+/// liveness.
+pub fn decode_oracle_batch_id(msg: &[f32]) -> Option<u64> {
+    decode_frame_id(msg).map(|(id, _)| id)
+}
+
+/// Encode an `OracleBatchResult` frame (clears `out`): `inputs[i]` pairs
+/// with `labels.row(i)`, in batch order. The packed section is
+/// byte-identical to `codec::pack_datapoints` over the same pairs
+/// (property-tested), so per-label and batched labels interoperate with one
+/// pair decoder.
+pub fn encode_oracle_batch_result_into(
+    id: u64,
+    inputs: &[&[f32]],
+    labels: &RowBlock,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(inputs.len(), labels.len(), "one label row per batched input");
+    const MAX_LEN: usize = crate::comm::codec::MAX_LEN;
+    assert!(2 * inputs.len() < MAX_LEN, "too many parts");
+    push_frame_id(id, out);
+    out.push((2 * inputs.len()) as f32);
+    for (i, x) in inputs.iter().enumerate() {
+        let y = labels.row(i);
+        assert!(x.len() < MAX_LEN && y.len() < MAX_LEN, "part too long for f32 header");
+        out.push(x.len() as f32);
+        out.push(y.len() as f32);
+    }
+    for (i, x) in inputs.iter().enumerate() {
+        out.extend_from_slice(x);
+        out.extend_from_slice(labels.row(i));
+    }
+}
+
+/// Encode an `OracleBatchResult` frame straight from the decoded input
+/// view and the label block (clears `out`) — byte-identical to
+/// [`encode_oracle_batch_result_into`] over the same pairs, with no
+/// per-row adapter list: the oracle host's uniform reply path is
+/// allocation-free beyond the labels the oracle itself staged.
+pub fn encode_oracle_batch_result_rows_into(
+    id: u64,
+    inputs: &BatchView<'_>,
+    labels: &RowBlock,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(inputs.rows(), labels.len(), "one label row per batched input");
+    const MAX_LEN: usize = crate::comm::codec::MAX_LEN;
+    let n = inputs.rows();
+    let w = inputs.width();
+    assert!(2 * n < MAX_LEN, "too many parts");
+    assert!(w < MAX_LEN, "part too long for f32 header");
+    push_frame_id(id, out);
+    out.push((2 * n) as f32);
+    for i in 0..n {
+        let y = labels.row(i);
+        assert!(y.len() < MAX_LEN, "part too long for f32 header");
+        out.push(w as f32);
+        out.push(y.len() as f32);
+    }
+    for i in 0..n {
+        out.extend_from_slice(inputs.row(i));
+        out.extend_from_slice(labels.row(i));
+    }
+}
+
+/// Decode an `OracleBatchResult` frame into its id and a borrowed
+/// [`DatapointView`] over `msg` — one bounds-list allocation total, no
+/// per-pair boxing. Accepts and rejects the packed section exactly like
+/// `codec::decode_train_block_views`.
+pub fn decode_oracle_batch_result_views(msg: &[f32]) -> Option<(u64, DatapointView<'_>)> {
+    let (id, rest) = decode_frame_id(msg)?;
+    Some((id, crate::comm::codec::decode_train_block_views(rest)?))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -367,6 +494,67 @@ mod tests {
     }
 
     #[test]
+    fn oracle_batch_frame_matches_predict_batch_layout() {
+        let items = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let rb = RowBlock::from_rows(&items);
+        let mut enc = vec![9.9f32; 3]; // must be cleared
+        encode_oracle_batch_block_into(11, &rb, &mut enc);
+        assert_eq!(enc, encode_predict_batch(11, &items), "same frame layout");
+        let (id, view) = decode_oracle_batch_rows(&enc).unwrap();
+        assert_eq!((id, view.rows(), view.width()), (11, 2, 2));
+        let (id2, views) = decode_oracle_batch_views(&enc).unwrap();
+        assert_eq!((id2, views.len()), (11, 2));
+        assert_eq!(views[1], &[3.0, 4.0]);
+        // ragged inputs reject the flat decode, survive the view decode
+        let ragged = RowBlock::from_rows(&[vec![1.0f32], vec![2.0, 3.0]]);
+        encode_oracle_batch_block_into(1, &ragged, &mut enc);
+        assert!(decode_oracle_batch_rows(&enc).is_none());
+        assert_eq!(decode_oracle_batch_views(&enc).unwrap().1.len(), 2);
+    }
+
+    #[test]
+    fn oracle_batch_result_packed_section_matches_pack_datapoints() {
+        let pairs = vec![
+            (vec![1.0f32, 2.0], vec![0.5f32]),
+            (vec![3.0], vec![0.25, 0.75]),
+            (vec![], vec![9.0]),
+        ];
+        let inputs: Vec<&[f32]> = pairs.iter().map(|(x, _)| x.as_slice()).collect();
+        let labels = RowBlock::from_rows(&pairs.iter().map(|(_, y)| y.clone()).collect::<Vec<_>>());
+        let mut enc = vec![1.0f32; 2]; // must be cleared
+        encode_oracle_batch_result_into(5, &inputs, &labels, &mut enc);
+        // frame = id header + the legacy datapoint encoding, byte for byte
+        assert_eq!(&enc[2..], crate::comm::codec::pack_datapoints(&pairs).as_slice());
+        let (id, view) = decode_oracle_batch_result_views(&enc).unwrap();
+        assert_eq!(id, 5);
+        assert_eq!(view.to_nested(), pairs);
+        // the view-typed encoder (uniform inputs) writes identical bytes
+        let uniform = vec![(vec![1.0f32, 2.0], vec![0.5f32]), (vec![3.0, 4.0], vec![0.25, 0.75])];
+        let u_inputs: Vec<&[f32]> = uniform.iter().map(|(x, _)| x.as_slice()).collect();
+        let u_labels =
+            RowBlock::from_rows(&uniform.iter().map(|(_, y)| y.clone()).collect::<Vec<_>>());
+        let mut from_slices = Vec::new();
+        encode_oracle_batch_result_into(9, &u_inputs, &u_labels, &mut from_slices);
+        let u_block = crate::data::batch::Batch::from_rows(
+            &uniform.iter().map(|(x, _)| x.clone()).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        let mut from_view = vec![4.0f32]; // must be cleared
+        encode_oracle_batch_result_rows_into(9, &u_block.view(), &u_labels, &mut from_view);
+        assert_eq!(from_view, from_slices);
+        // truncation / trailing garbage / odd-part frames reject
+        assert!(decode_oracle_batch_result_views(&enc[..enc.len() - 1]).is_none());
+        let mut garbage = enc.clone();
+        garbage.push(7.0);
+        assert!(decode_oracle_batch_result_views(&garbage).is_none());
+        assert!(decode_oracle_batch_result_views(&[]).is_none());
+        // empty batch result round-trips
+        let empty = RowBlock::new();
+        encode_oracle_batch_result_into(0, &[], &empty, &mut enc);
+        assert_eq!(decode_oracle_batch_result_views(&enc).unwrap().1.len(), 0);
+    }
+
+    #[test]
     fn gen_encode_into_clears_scratch() {
         let mut scratch = vec![7.0f32; 5];
         encode_gen_into(true, &[1.0, 2.0], &mut scratch);
@@ -392,6 +580,7 @@ mod tests {
             TAG_GEN_TO_PRED, TAG_PRED_IN, TAG_PRED_OUT, TAG_GENE_IN, TAG_GEN_SIZE,
             TAG_PRED_BATCH, TAG_PRED_BATCH_RESULT,
             TAG_ORCL_SELECT, TAG_TO_ORACLE, TAG_ORACLE_RESULT,
+            TAG_ORACLE_BATCH, TAG_ORACLE_BATCH_RESULT,
             TAG_TRAIN_DATA, TAG_WEIGHTS, TAG_RETRAIN_DONE,
             TAG_RESCORE_REQ, TAG_RESCORE_RESP, TAG_STOP, TAG_SHUTDOWN,
         ];

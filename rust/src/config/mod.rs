@@ -4,5 +4,5 @@
 mod settings;
 pub mod topology;
 
-pub use settings::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
+pub use settings::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
 pub use topology::Topology;

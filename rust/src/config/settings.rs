@@ -56,7 +56,27 @@ pub enum ExchangeMode {
     Batched,
 }
 
-/// Micro-batching knobs for [`ExchangeMode::Batched`].
+/// How the Manager relays selected inputs to the oracle pool (green flow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OracleMode {
+    /// Paper-faithful: one `TAG_TO_ORACLE` message per input, one
+    /// `TAG_ORACLE_RESULT` message per label, dispatched to the first free
+    /// oracle.
+    PerLabel,
+    /// Coalesce buffered inputs into micro-batches ([`AlSetting::oracle_batch`]:
+    /// size- and deadline-triggered) and dispatch each batch to the
+    /// least-loaded oracle (`TAG_ORACLE_BATCH` / `TAG_ORACLE_BATCH_RESULT`
+    /// frames). Oracles with heterogeneous latencies naturally receive work
+    /// proportional to their speed; when every oracle has
+    /// `oracle_batch.max_outstanding` batches in flight, inputs queue in the
+    /// oracle buffer (FIFO backpressure). Labels and training-set order are
+    /// bit-identical to [`OracleMode::PerLabel`] (single-oracle runs are
+    /// FIFO end to end; see `rust/tests/test_determinism.rs`).
+    Batched,
+}
+
+/// Micro-batching knobs for [`ExchangeMode::Batched`] and
+/// [`OracleMode::Batched`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchSetting {
     /// Size trigger: dispatch as soon as this many requests are queued.
@@ -123,6 +143,11 @@ pub struct AlSetting {
     pub exchange_mode: ExchangeMode,
     /// Micro-batching knobs (used by [`ExchangeMode::Batched`]).
     pub batch: BatchSetting,
+    /// Oracle dispatch strategy (per-label messages vs batched frames).
+    pub oracle_mode: OracleMode,
+    /// Micro-batching knobs for the oracle plane (used by
+    /// [`OracleMode::Batched`]).
+    pub oracle_batch: BatchSetting,
     /// Committee members per prediction shard. `None` = all prediction
     /// ranks form one shard (the paper's layout). In batched mode,
     /// `pred_process / committee_size` shards serve batches concurrently,
@@ -158,10 +183,22 @@ impl Default for AlSetting {
             poll_interval: Duration::from_millis(2),
             exchange_mode: ExchangeMode::Lockstep,
             batch: BatchSetting::default(),
+            oracle_mode: OracleMode::PerLabel,
+            oracle_batch: BatchSetting::default(),
             committee_size: None,
             strict_label_budget: false,
         }
     }
+}
+
+/// Convert a user-supplied seconds value into a [`Duration`], rejecting
+/// negative (or NaN) input with a config error instead of the panic
+/// `Duration::from_secs_f64` would raise.
+fn non_negative_secs(key: &str, x: f64) -> anyhow::Result<Duration> {
+    if !(x >= 0.0) || !x.is_finite() {
+        bail!("{key} must be a non-negative number (got {x})");
+    }
+    Ok(Duration::from_secs_f64(x))
 }
 
 impl AlSetting {
@@ -234,6 +271,12 @@ impl AlSetting {
         if self.batch.max_outstanding == 0 {
             bail!("batch.max_outstanding must be >= 1");
         }
+        if self.oracle_batch.max_size == 0 {
+            bail!("oracle_batch.max_size must be >= 1");
+        }
+        if self.oracle_batch.max_outstanding == 0 {
+            bail!("oracle_batch.max_outstanding must be >= 1");
+        }
         if self.ml_process > 0 && self.retrain_size == 0 {
             bail!("retrain_size must be >= 1 when training is enabled");
         }
@@ -277,7 +320,7 @@ impl AlSetting {
             s.fixed_size_data = x;
         }
         if let Some(x) = v.get("progress_save_interval").as_f64() {
-            s.progress_save_interval = Duration::from_secs_f64(x);
+            s.progress_save_interval = non_negative_secs("progress_save_interval", x)?;
         }
         if let Some(x) = v.get("retrain_size").as_usize() {
             s.retrain_size = x;
@@ -293,7 +336,7 @@ impl AlSetting {
                 Some(arr.iter().filter_map(|x| x.as_usize()).collect());
         }
         if let Some(x) = v.get("comm_latency_ms").as_f64() {
-            s.comm_latency = Duration::from_secs_f64(x / 1e3);
+            s.comm_latency = non_negative_secs("comm_latency_ms", x / 1e3)?;
         }
         if let Some(x) = v.get("seed").as_f64() {
             s.seed = x as u64;
@@ -305,7 +348,7 @@ impl AlSetting {
             s.stop.max_labels = Some(x as u64);
         }
         if let Some(x) = v.get("max_wall_s").as_f64() {
-            s.stop.max_wall = Some(Duration::from_secs_f64(x));
+            s.stop.max_wall = Some(non_negative_secs("max_wall_s", x)?);
         }
         if let Some(x) = v.get("epochs_per_round").as_usize() {
             s.epochs_per_round = x;
@@ -321,10 +364,26 @@ impl AlSetting {
             s.batch.max_size = x;
         }
         if let Some(x) = v.get("batch_max_delay_ms").as_f64() {
-            s.batch.max_delay = Duration::from_secs_f64(x / 1e3);
+            s.batch.max_delay = non_negative_secs("batch_max_delay_ms", x / 1e3)?;
         }
         if let Some(x) = v.get("batch_max_outstanding").as_usize() {
             s.batch.max_outstanding = x;
+        }
+        if let Some(x) = v.get("oracle_mode").as_str() {
+            s.oracle_mode = match x {
+                "per_label" => OracleMode::PerLabel,
+                "batched" => OracleMode::Batched,
+                other => bail!("unknown oracle_mode: {other} (per_label|batched)"),
+            };
+        }
+        if let Some(x) = v.get("oracle_batch_max_size").as_usize() {
+            s.oracle_batch.max_size = x;
+        }
+        if let Some(x) = v.get("oracle_batch_max_delay_ms").as_f64() {
+            s.oracle_batch.max_delay = non_negative_secs("oracle_batch_max_delay_ms", x / 1e3)?;
+        }
+        if let Some(x) = v.get("oracle_batch_max_outstanding").as_usize() {
+            s.oracle_batch.max_outstanding = x;
         }
         if let Some(x) = v.get("committee_size").as_usize() {
             s.committee_size = Some(x);
@@ -370,6 +429,25 @@ impl AlSetting {
                 Value::Num(self.batch.max_delay.as_secs_f64() * 1e3),
             ),
             ("batch_max_outstanding", Value::Num(self.batch.max_outstanding as f64)),
+            (
+                "oracle_mode",
+                Value::Str(
+                    match self.oracle_mode {
+                        OracleMode::PerLabel => "per_label",
+                        OracleMode::Batched => "batched",
+                    }
+                    .into(),
+                ),
+            ),
+            ("oracle_batch_max_size", Value::Num(self.oracle_batch.max_size as f64)),
+            (
+                "oracle_batch_max_delay_ms",
+                Value::Num(self.oracle_batch.max_delay.as_secs_f64() * 1e3),
+            ),
+            (
+                "oracle_batch_max_outstanding",
+                Value::Num(self.oracle_batch.max_outstanding as f64),
+            ),
             ("committee_size", Value::Num(self.committee() as f64)),
             ("strict_label_budget", Value::Bool(self.strict_label_budget)),
         ])
@@ -479,6 +557,44 @@ mod tests {
         assert_eq!(s2.exchange_mode, s.exchange_mode);
         assert_eq!(s2.batch, s.batch);
         assert_eq!(s2.committee(), s.committee());
+    }
+
+    #[test]
+    fn oracle_batch_knobs_validated_and_roundtrip() {
+        let mut s = AlSetting::default();
+        s.oracle_batch.max_size = 0;
+        assert!(s.validate().is_err());
+        s.oracle_batch.max_size = 4;
+        s.oracle_batch.max_outstanding = 0;
+        assert!(s.validate().is_err());
+
+        let s = AlSetting::from_json(
+            r#"{"oracle_mode": "batched", "oracle_batch_max_size": 16,
+                "oracle_batch_max_delay_ms": 5, "oracle_batch_max_outstanding": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(s.oracle_mode, OracleMode::Batched);
+        assert_eq!(s.oracle_batch.max_size, 16);
+        assert_eq!(s.oracle_batch.max_delay, Duration::from_millis(5));
+        assert_eq!(s.oracle_batch.max_outstanding, 3);
+        let text = json::to_string(&s.to_json());
+        let s2 = AlSetting::from_json(&text).unwrap();
+        assert_eq!(s2.oracle_mode, s.oracle_mode);
+        assert_eq!(s2.oracle_batch, s.oracle_batch);
+        assert!(AlSetting::from_json(r#"{"oracle_mode": "bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn negative_durations_rejected_not_panicking() {
+        for bad in [
+            r#"{"oracle_batch_max_delay_ms": -5}"#,
+            r#"{"batch_max_delay_ms": -1}"#,
+            r#"{"progress_save_interval": -2}"#,
+            r#"{"comm_latency_ms": -3}"#,
+            r#"{"max_wall_s": -4}"#,
+        ] {
+            assert!(AlSetting::from_json(bad).is_err(), "{bad} must be a clean error");
+        }
     }
 
     #[test]

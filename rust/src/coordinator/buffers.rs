@@ -168,13 +168,22 @@ impl TrainBuffer {
         self.buf.len() >= self.threshold
     }
 
-    /// Take the accumulated batch if the threshold is met.
+    /// Take the accumulated batch if the threshold is met. The replacement
+    /// staging block is pre-sized to the flushed batch's shape, so a
+    /// steady-state flush cycle costs a fixed handful of allocations (the
+    /// replacement buffers) and the per-label `push_pair`s between flushes
+    /// allocate nothing — pinned by `test_oracle_plane`.
     pub fn flush(&mut self) -> Option<DatapointBlock> {
         if !self.ready() {
             return None;
         }
         self.flushed += self.buf.len() as u64;
-        Some(std::mem::take(&mut self.buf))
+        let fresh = DatapointBlock::with_capacity(
+            self.buf.len(),
+            self.buf.total_input_values(),
+            self.buf.total_label_values(),
+        );
+        Some(std::mem::replace(&mut self.buf, fresh))
     }
 
     /// Unconditional drain (shutdown path: don't lose labeled data).

@@ -48,7 +48,13 @@ pub fn recv_poll(
 /// every generator has already sent costs one mailbox scan instead of one
 /// wake-up per generator. Early next-round messages from an already-filled
 /// source are deferred and reinjected at the front of the mailbox when the
-/// gather ends (complete or not), preserving per-(src, tag) FIFO.
+/// gather completes, preserving per-(src, tag) FIFO.
+///
+/// An *aborted* gather (shutdown flag, world disconnect) requeues
+/// everything it consumed — the filled current-round messages ahead of the
+/// deferred next-round ones — so the mailbox never restarts mid-stream
+/// with an early next-round message interleaved in place of a consumed
+/// round (pinned by `gather_poll_requeues_consumed_round_on_shutdown`).
 pub fn gather_poll(
     ep: &mut Endpoint,
     srcs: &[usize],
@@ -56,12 +62,19 @@ pub fn gather_poll(
     down: &ShutdownFlag,
     poll: Duration,
 ) -> Option<Vec<Payload>> {
-    let mut slots: Vec<Option<Payload>> = vec![None; srcs.len()];
+    let mut slots: Vec<Option<Message>> = vec![None; srcs.len()];
     let mut remaining = srcs.len();
     let mut deferred: Vec<Message> = Vec::new();
+    let abort = |ep: &mut Endpoint, slots: Vec<Option<Message>>, deferred: Vec<Message>| {
+        // per-(src, tag) FIFO: each source's filled round precedes its
+        // deferred next rounds, which are already in arrival order
+        let mut msgs: Vec<Message> = slots.into_iter().flatten().collect();
+        msgs.extend(deferred);
+        ep.requeue_front(tag, msgs);
+    };
     while remaining > 0 {
         if is_down(down) {
-            ep.requeue_front(tag, deferred);
+            abort(ep, slots, deferred);
             return None;
         }
         let mut batch = ep.recv_ready_all(Src::Any, tag);
@@ -70,7 +83,7 @@ pub fn gather_poll(
                 Ok(m) => batch.push(m),
                 Err(crate::comm::RecvError::Timeout) => continue,
                 Err(crate::comm::RecvError::Disconnected) => {
-                    ep.requeue_front(tag, deferred);
+                    abort(ep, slots, deferred);
                     return None;
                 }
             }
@@ -78,7 +91,7 @@ pub fn gather_poll(
         remaining -= fill_gather_slots(batch, srcs, &mut slots, &mut deferred);
     }
     ep.requeue_front(tag, deferred);
-    Some(slots.into_iter().map(|s| s.unwrap()).collect())
+    Some(slots.into_iter().map(|s| s.unwrap().data).collect())
 }
 
 // ---------------------------------------------------------------------------
@@ -138,27 +151,103 @@ pub fn generator_host(
 // ---------------------------------------------------------------------------
 
 /// Drive one oracle process: receive inputs from the Manager, label, reply.
+///
+/// Serves both green-flow dispatch legs on one loop: legacy per-label
+/// messages (`TAG_TO_ORACLE` → `TAG_ORACLE_RESULT`, wire bytes unchanged)
+/// and oracle-plane batch frames (`TAG_ORACLE_BATCH` →
+/// `TAG_ORACLE_BATCH_RESULT`, one frame per micro-batch through
+/// [`Oracle::run_calc_batch`]). The receive is *vectored*: one wake-up
+/// drains every request already queued ([`Endpoint::recv_ready_all`]) and
+/// processes them strictly in dispatch order; if shutdown fires mid-drain,
+/// the unprocessed tail is requeued at the mailbox front — never dropped or
+/// reordered — so per-(src, tag) FIFO holds for whoever drains next.
 pub fn oracle_host(
     mut ep: Endpoint,
     mut oracle: Box<dyn Oracle>,
     setting: &AlSetting,
     down: ShutdownFlag,
 ) -> KernelTelemetry {
+    use crate::data::batch::RowBlock;
+
+    const MANAGER: usize = crate::config::topology::MANAGER;
+    const REQ_TAGS: [u32; 2] = [TAG_TO_ORACLE, TAG_ORACLE_BATCH];
     let mut tel = KernelTelemetry::new("oracle", ep.rank());
     let poll = setting.poll_interval;
     let mut reply = PackBuffer::new();
-    loop {
-        let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TO_ORACLE, &down, poll) {
-            Some(m) => m,
-            None => break,
+    // reusable batch-frame scratch (steady-state replies allocate only the
+    // label staging the oracle itself produces)
+    let mut frame: Vec<f32> = Vec::new();
+    'outer: loop {
+        if is_down(&down) {
+            break;
+        }
+        let first = match ep.recv_timeout_tags(Src::Rank(MANAGER), &REQ_TAGS, poll) {
+            Ok(m) => m,
+            Err(crate::comm::RecvError::Timeout) => continue,
+            Err(crate::comm::RecvError::Disconnected) => break,
         };
-        let label = tel.time("run_calc", || oracle.run_calc(&m.data));
-        tel.bump("labels");
-        ep.send(
-            crate::config::topology::MANAGER,
-            TAG_ORACLE_RESULT,
-            reply.pack(&[m.data.as_slice(), label.as_slice()]),
-        );
+        // vectored drain of this round's backlog (each mode uses one tag
+        // per run, so per-tag draining preserves dispatch order)
+        let mut backlog = std::collections::VecDeque::with_capacity(4);
+        backlog.push_back(first);
+        for tag in REQ_TAGS {
+            backlog.extend(ep.recv_ready_all(Src::Rank(MANAGER), tag));
+        }
+        while let Some(m) = backlog.pop_front() {
+            if is_down(&down) {
+                // shutdown mid-drain: requeue the unprocessed tail in order
+                backlog.push_front(m);
+                for tag in REQ_TAGS {
+                    let rest: Vec<Message> =
+                        backlog.iter().filter(|x| x.tag == tag).cloned().collect();
+                    ep.requeue_front(tag, rest);
+                }
+                break 'outer;
+            }
+            if m.tag == TAG_ORACLE_BATCH {
+                // oracle plane: label the whole micro-batch, reply with one
+                // frame of (input, label) pairs echoing the batch id
+                if let Some((id, view)) = decode_oracle_batch_rows(&m.data) {
+                    let labels = tel.time("run_calc", || oracle.run_calc_batch(&view));
+                    debug_assert_eq!(labels.len(), view.rows());
+                    tel.bump("batches");
+                    tel.add("labels", view.rows() as u64);
+                    encode_oracle_batch_result_rows_into(id, &view, &labels, &mut frame);
+                    ep.send(MANAGER, TAG_ORACLE_BATCH_RESULT, &frame[..]);
+                } else if let Some((id, views)) = decode_oracle_batch_views(&m.data) {
+                    // ragged batch: per-row labeling into a contiguous block
+                    let labels = tel.time("run_calc", || {
+                        let mut out = RowBlock::new();
+                        for row in &views {
+                            out.push_row(&oracle.run_calc(row));
+                        }
+                        out
+                    });
+                    tel.bump("batches");
+                    tel.add("labels", views.len() as u64);
+                    encode_oracle_batch_result_into(id, &views, &labels, &mut frame);
+                    ep.send(MANAGER, TAG_ORACLE_BATCH_RESULT, &frame[..]);
+                } else if let Some(id) = decode_oracle_batch_id(&m.data) {
+                    // undecodable item section: echo an *empty* result so
+                    // the Manager frees this batch's in-flight slot — a bad
+                    // frame costs its labels, never green-flow liveness
+                    tel.bump("malformed");
+                    encode_oracle_batch_result_into(id, &[], &RowBlock::new(), &mut frame);
+                    ep.send(MANAGER, TAG_ORACLE_BATCH_RESULT, &frame[..]);
+                } else {
+                    tel.bump("malformed");
+                }
+            } else {
+                // legacy per-label leg (wire bytes unchanged)
+                let label = tel.time("run_calc", || oracle.run_calc(&m.data));
+                tel.bump("labels");
+                ep.send(
+                    MANAGER,
+                    TAG_ORACLE_RESULT,
+                    reply.pack(&[m.data.as_slice(), label.as_slice()]),
+                );
+            }
+        }
     }
     oracle.stop_run();
     tel
@@ -438,15 +527,15 @@ mod tests {
     }
 
     #[test]
-    fn gather_poll_requeues_deferred_on_shutdown() {
+    fn gather_poll_requeues_consumed_round_on_shutdown() {
         let mut w = World::new(3);
         let mut eps = w.endpoints();
         let _e2 = eps.pop().unwrap();
         let e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
         let down = flag();
-        e1.send(0, 9, vec![1.0]); // round 1
-        e1.send(0, 9, vec![10.0]); // round 2, early — will be deferred
+        e1.send(0, 9, vec![1.0]); // round 1 — filled, then requeued on abort
+        e1.send(0, 9, vec![10.0]); // round 2, early — deferred, requeued
         // rank 2 never sends; shut down mid-gather from another thread
         let down2 = down.clone();
         let h = std::thread::spawn(move || {
@@ -455,9 +544,70 @@ mod tests {
         });
         assert!(gather_poll(&mut e0, &[1, 2], 9, &down, Duration::from_millis(2)).is_none());
         h.join().unwrap();
-        // the deferred early round survives in the mailbox (the filled
-        // round-1 slot is consumed — shutdown discards the partial gather)
+        // the aborted gather put *everything* back, in FIFO order: the
+        // consumed round-1 message first, the early round-2 one behind it —
+        // never round 2 interleaved in place of round 1
+        assert_eq!(e0.try_recv(Src::Rank(1), 9).unwrap().data, vec![1.0]);
         assert_eq!(e0.try_recv(Src::Rank(1), 9).unwrap().data, vec![10.0]);
         assert!(e0.try_recv(Src::Rank(1), 9).is_none());
+    }
+
+    #[test]
+    fn oracle_host_replies_to_queued_batches_in_dispatch_order() {
+        use crate::comm::protocol::{
+            decode_oracle_batch_result_views, encode_oracle_batch_block_into,
+            TAG_ORACLE_BATCH, TAG_ORACLE_BATCH_RESULT,
+        };
+        use crate::data::batch::RowBlock;
+
+        struct Echo;
+        impl crate::kernels::Oracle for Echo {
+            fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+                input.iter().map(|v| v + 100.0).collect()
+            }
+        }
+
+        let mut w = World::new(2); // rank 0 = Manager, rank 1 = oracle
+        let mut manager = w.endpoint(0);
+        let orcl_ep = w.endpoint(1);
+        let setting = crate::config::AlSetting::default();
+        let down = flag();
+
+        // two batch frames queued back to back (max_outstanding > 1): the
+        // host must serve them strictly in dispatch order
+        let mut frame = Vec::new();
+        let two_rows = RowBlock::from_rows(&[vec![1.0f32], vec![2.0]]);
+        encode_oracle_batch_block_into(7, &two_rows, &mut frame);
+        manager.send(1, TAG_ORACLE_BATCH, &frame[..]);
+        encode_oracle_batch_block_into(8, &RowBlock::from_rows(&[vec![3.0f32]]), &mut frame);
+        manager.send(1, TAG_ORACLE_BATCH, &frame[..]);
+        // a frame with a readable id but an undecodable item section must
+        // come back as an *empty* result (the Manager frees its slot)
+        manager.send(1, TAG_ORACLE_BATCH, vec![0.0, 9.0, 1.0]);
+
+        let down2 = down.clone();
+        let h = std::thread::spawn(move || {
+            oracle_host(orcl_ep, Box::new(Echo), &setting, down2)
+        });
+        let mut ids = Vec::new();
+        let mut pair_counts = Vec::new();
+        for _ in 0..3 {
+            let m = manager
+                .recv_timeout(Src::Rank(1), TAG_ORACLE_BATCH_RESULT, Duration::from_secs(5))
+                .unwrap();
+            let (id, pairs) = decode_oracle_batch_result_views(&m.data).unwrap();
+            for (x, y) in pairs.iter() {
+                assert_eq!(y[0], x[0] + 100.0, "label pairs with its own input");
+            }
+            ids.push(id);
+            pair_counts.push(pairs.len());
+        }
+        assert_eq!(ids, vec![7, 8, 9], "batches answered in dispatch order");
+        assert_eq!(pair_counts, vec![2, 1, 0], "malformed batch echoes empty");
+        down.store(true, Ordering::Release);
+        let tel = h.join().unwrap();
+        assert_eq!(tel.counter("batches"), 2);
+        assert_eq!(tel.counter("labels"), 3);
+        assert_eq!(tel.counter("malformed"), 1);
     }
 }

@@ -1,5 +1,6 @@
-//! Manager controller sub-kernel: buffers, oracle dispatch, training
-//! flushes, dynamic oracle-list adjustment, progress snapshots, shutdown.
+//! Manager controller sub-kernel: buffers, oracle dispatch (per-label or
+//! batched through the oracle plane), training flushes, dynamic oracle-list
+//! adjustment, progress snapshots, shutdown.
 
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
@@ -7,9 +8,11 @@ use std::time::{Duration, Instant};
 use crate::comm::bus::{Endpoint, Payload, Src};
 use crate::comm::codec;
 use crate::comm::protocol::*;
-use crate::config::{AlSetting, Topology};
+use crate::config::{AlSetting, OracleMode, Topology};
 use crate::coordinator::buffers::{OracleBuffer, TrainBuffer};
 use crate::coordinator::hosts::ShutdownFlag;
+use crate::coordinator::oracle_plane::OracleScheduler;
+use crate::data::batch::RowBlock;
 use crate::json::{obj, Value};
 use crate::kernels::Utils;
 use crate::telemetry::KernelTelemetry;
@@ -20,6 +23,38 @@ pub struct ManagerOutcome {
     pub oracle_labels: u64,
     pub retrain_rounds: u64,
     pub losses: Vec<f32>,
+}
+
+/// Ingest one `TAG_ORACLE_BATCH_RESULT` frame: free the scheduler's
+/// in-flight slot, stage every `(input, label)` pair into the train buffer
+/// (borrowed views — constant allocations per batch, zero per label), and
+/// keep the accounting identical between the main loop and the shutdown
+/// drain.
+fn ingest_oracle_batch_result(
+    data: &Payload,
+    sched: &mut OracleScheduler,
+    train_buffer: &mut TrainBuffer,
+    out: &mut ManagerOutcome,
+    tel: &mut KernelTelemetry,
+    drained: bool,
+) {
+    match decode_oracle_batch_result_views(data) {
+        Some((id, pairs)) => {
+            if sched.complete(id).is_none() {
+                tel.bump("orphan_results");
+            }
+            out.oracle_labels += pairs.len() as u64;
+            tel.add("labels", pairs.len() as u64);
+            tel.bump("oracle_batch_results");
+            if drained {
+                tel.add("drained_labels", pairs.len() as u64);
+            }
+            for (x, y) in pairs.iter() {
+                train_buffer.push_pair(x, y);
+            }
+        }
+        None => tel.bump("malformed"),
+    }
 }
 
 /// Run the Manager until a stop request or a stop criterion fires, then
@@ -47,6 +82,14 @@ pub fn manager_host(
     let mut dispatched_total: u64 = 0;
     let mut orcl_buffer = OracleBuffer::new(Some(4096));
     let mut train_buffer = TrainBuffer::new(setting.retrain_size);
+    // oracle plane (batched oracle mode): micro-batch scheduler over the
+    // oracle buffer, plus reusable staging/encode scratches — a steady-state
+    // batch dispatch moves rows buffer → scratch → frame with no fresh
+    // allocations
+    let oracle_batched = setting.oracle_mode == OracleMode::Batched && !orcl.is_empty();
+    let mut orcl_sched = OracleScheduler::new(&setting.oracle_batch, orcl.len());
+    let mut batch_scratch = RowBlock::new();
+    let mut orcl_frame: Vec<f32> = Vec::new();
     // reusable flush-encode scratch (steady-state flushes allocate nothing)
     let mut train_pack = codec::PackBuffer::new();
     let mut last_save = Instant::now();
@@ -64,8 +107,12 @@ pub fn manager_host(
             // buffer's contiguous staging storage — no per-row boxing
             if let Some(rows) = codec::unpack_views(&m.data) {
                 tel.add("selected_in", rows.len() as u64);
+                let any = !rows.is_empty();
                 for row in rows {
                     orcl_buffer.push_row(row);
+                }
+                if oracle_batched && any {
+                    orcl_sched.note_enqueued(Instant::now());
                 }
             } else {
                 tel.bump("malformed");
@@ -92,6 +139,19 @@ pub fn manager_host(
             did_work = true;
         }
 
+        // --- completed oracle batches (green flow back, batched mode) ---
+        while let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_BATCH_RESULT) {
+            ingest_oracle_batch_result(
+                &m.data,
+                &mut orcl_sched,
+                &mut train_buffer,
+                &mut out,
+                &mut tel,
+                false,
+            );
+            did_work = true;
+        }
+
         // --- retrain notifications ---
         while let Some(m) = ep.try_recv(Src::Any, TAG_RETRAIN_DONE) {
             out.retrain_rounds += 1;
@@ -109,31 +169,73 @@ pub fn manager_host(
             // dynamic oracle-list adjustment with the freshly-synced models
             if setting.dynamic_oracle_list && !orcl_buffer.is_empty() && !rescore.is_empty() {
                 adjust_oracle_buffer(&mut ep, &mut *utils, &mut orcl_buffer, &rescore, setting, &mut tel);
+                if oracle_batched {
+                    // rescore replacements route through the scheduler: only
+                    // still-queued rows were re-scored (in-flight batches are
+                    // already paid for), and the dispatch clock follows the
+                    // adjusted queue
+                    orcl_sched.sync_queue(orcl_buffer.len(), Instant::now());
+                }
             }
         }
 
-        // --- dispatch buffered inputs to free oracles (first available),
-        //     bounded by the label budget when one is set ---
-        for (i, &rank) in orcl.iter().enumerate() {
-            if oracle_busy[i] {
-                continue;
-            }
-            if let Some(max) = label_budget {
-                if dispatched_total >= max {
-                    tel.bump("budget_gated");
+        // --- dispatch buffered inputs (green flow out), bounded by the
+        //     label budget when one is set ---
+        if oracle_batched {
+            // oracle plane: coalesce queue-head rows into micro-batches,
+            // routed to the least-loaded oracle (triggers/backpressure in
+            // the scheduler; `dispatched` counts items in both modes)
+            let now = Instant::now();
+            loop {
+                let budget = label_budget.map(|max| max.saturating_sub(dispatched_total));
+                if budget == Some(0) {
+                    if !orcl_buffer.is_empty() {
+                        tel.bump("budget_gated");
+                    }
                     break;
                 }
-            }
-            if let Some(input) = orcl_buffer.pop_row() {
-                // borrowed row out of the flat buffer; the send ingests it
-                // into a shared payload (the one unavoidable copy)
-                ep.send(rank, TAG_TO_ORACLE, input);
-                oracle_busy[i] = true;
-                dispatched_total += 1;
-                tel.bump("dispatched");
+                let Some(d) = orcl_sched.try_dispatch(orcl_buffer.len(), now, budget) else {
+                    break;
+                };
+                batch_scratch.clear();
+                for _ in 0..d.take {
+                    let row = orcl_buffer.pop_row().expect("scheduler take within queue");
+                    batch_scratch.push_row(row);
+                }
+                encode_oracle_batch_block_into(d.id, &batch_scratch, &mut orcl_frame);
+                ep.send(orcl[d.oracle], TAG_ORACLE_BATCH, &orcl_frame[..]);
+                dispatched_total += d.take as u64;
+                tel.add("dispatched", d.take as u64);
+                tel.bump("oracle_batches");
+                if d.take < setting.oracle_batch.max_size {
+                    tel.bump("oracle_partial_batches");
+                }
                 did_work = true;
-            } else {
-                break;
+            }
+        } else {
+            // per-label path (paper-faithful): one input to the first free
+            // oracle, one message per label
+            for (i, &rank) in orcl.iter().enumerate() {
+                if oracle_busy[i] {
+                    continue;
+                }
+                if let Some(max) = label_budget {
+                    if dispatched_total >= max {
+                        tel.bump("budget_gated");
+                        break;
+                    }
+                }
+                if let Some(input) = orcl_buffer.pop_row() {
+                    // borrowed row out of the flat buffer; the send ingests
+                    // it into a shared payload (the one unavoidable copy)
+                    ep.send(rank, TAG_TO_ORACLE, input);
+                    oracle_busy[i] = true;
+                    dispatched_total += 1;
+                    tel.bump("dispatched");
+                    did_work = true;
+                } else {
+                    break;
+                }
             }
         }
 
@@ -189,9 +291,20 @@ pub fn manager_host(
     }
 
     // --- bounded drain: don't discard labels already paid for (a DFT hour
-    // that finished during shutdown must land in the training buffer) ---
+    // that finished during shutdown must land in the training buffer).
+    // Per-label mode waits on busy oracles; batched mode on in-flight
+    // batches ---
     let drain_deadline = Instant::now() + Duration::from_millis(300);
-    while oracle_busy.iter().any(|&b| b) && Instant::now() < drain_deadline {
+    loop {
+        let waiting = if oracle_batched {
+            orcl_sched.in_flight() > 0
+        } else {
+            oracle_busy.iter().any(|&b| b)
+        };
+        if !waiting || Instant::now() >= drain_deadline {
+            break;
+        }
+        let mut got = false;
         if let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_RESULT) {
             if let Some(i) = orcl.iter().position(|&r| r == m.src) {
                 oracle_busy[i] = false;
@@ -204,7 +317,20 @@ pub fn manager_host(
                     train_buffer.push_pair(parts[0], parts[1]);
                 }
             }
-        } else {
+            got = true;
+        }
+        if let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_BATCH_RESULT) {
+            ingest_oracle_batch_result(
+                &m.data,
+                &mut orcl_sched,
+                &mut train_buffer,
+                &mut out,
+                &mut tel,
+                true,
+            );
+            got = true;
+        }
+        if !got {
             std::thread::sleep(setting.poll_interval);
         }
     }

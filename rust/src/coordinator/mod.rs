@@ -14,10 +14,18 @@
 //!     FIFO backpressure at `batch.max_outstanding` per shard), UQ-checked
 //!     per batch, and scattered back per item.
 //! * [`manager`] — buffers (oracle input buffer, training data buffer),
-//!   oracle dispatch to the first free oracle (optionally capped by the
+//!   oracle dispatch (per-label to the first free oracle, or micro-batched
+//!   through the [`oracle_plane`] scheduler, optionally capped by the
 //!   strict label budget), retrain-threshold flushes to the training
 //!   kernel, `dynamic_orcale_list` re-scoring against one committee shard,
 //!   progress snapshots, and the shutdown fan-out.
+//!
+//! [`oracle_plane`] is the green flow's exchange discipline: the
+//! [`oracle_plane::OracleScheduler`] coalesces Manager-selected inputs into
+//! size-/deadline-triggered micro-batches, routes each batch to the
+//! least-loaded oracle (latency-aware under heterogeneous oracle costs),
+//! and applies per-oracle backpressure — mirroring the prediction plane's
+//! `BatchScheduler` on the labeling leg.
 //!
 //! [`hosts`] holds the per-kernel host loops (prediction / training /
 //! generator / oracle ranks) and [`workflow`] wires everything into threads
@@ -27,5 +35,6 @@ pub mod buffers;
 pub mod exchange;
 pub mod hosts;
 pub mod manager;
+pub mod oracle_plane;
 pub mod selection;
 pub mod workflow;

@@ -1,0 +1,298 @@
+//! Oracle plane: batched, latency-aware labeling dispatch (green flow).
+//!
+//! The paper's Manager ships one message per selected input and receives
+//! one message per label — fine when every label costs a DFT hour, but the
+//! dominant green-flow overhead once oracles are fast or plentiful. This
+//! module gives labeling the same exchange discipline PR 1 gave prediction:
+//!
+//! * **Coalescing** — buffered inputs form micro-batches under
+//!   `AlSetting::oracle_batch`: dispatch as soon as `max_size` inputs are
+//!   queued, or when the queue head has waited `max_delay` (partial batch).
+//! * **Latency-aware routing** — each batch goes to the oracle with the
+//!   fewest batches in flight (ties break to the lowest rank index, which
+//!   keeps single-oracle runs deterministic). Oracles have wildly
+//!   heterogeneous latencies (DFT ≈ 1 h, xTB ≈ 10 s — SI §S2.2, modeled by
+//!   [`crate::kernels::oracles::LatencyOracle`]); least-outstanding routing
+//!   feeds fast oracles proportionally more work without any latency
+//!   estimation.
+//! * **Backpressure** — at most `max_outstanding` batches in flight per
+//!   oracle; beyond that, inputs wait in the
+//!   [`crate::coordinator::buffers::OracleBuffer`] in FIFO order, where
+//!   `dynamic_orcale_list` re-scoring can still reorder or prune them
+//!   (rescore replacements route through the scheduler's queue clock via
+//!   [`OracleScheduler::sync_queue`]).
+//!
+//! The scheduler is a pure state machine over an *external* queue (the
+//! Manager's `OracleBuffer` — selection staging and scheduling share one
+//! row store, so nothing is copied between them): callers inject `now` and
+//! the current queue length, making trigger/backpressure semantics
+//! unit-testable without threads or sleeps. Wire frames are
+//! `TAG_ORACLE_BATCH` / `TAG_ORACLE_BATCH_RESULT`
+//! ([`crate::comm::protocol`]); the legacy per-label path
+//! (`TAG_TO_ORACLE`/`TAG_ORACLE_RESULT`) is preserved bit-compatible and
+//! remains the default ([`crate::config::OracleMode::PerLabel`]).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::config::BatchSetting;
+
+/// A dispatch decision: send batch `id` with `take` queue-head inputs to
+/// oracle index `oracle`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OracleDispatch {
+    pub id: u64,
+    /// Index into the oracle pool (not a rank).
+    pub oracle: usize,
+    /// How many rows to pop from the queue head (FIFO) into this batch.
+    pub take: usize,
+}
+
+/// One batch in flight (for drain accounting and completion routing).
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    oracle: usize,
+    items: usize,
+}
+
+/// Size-/deadline-triggered micro-batching with least-outstanding oracle
+/// routing and per-oracle backpressure. See the module docs for semantics.
+#[derive(Debug)]
+pub struct OracleScheduler {
+    max_size: usize,
+    max_delay: Duration,
+    max_outstanding: usize,
+    /// Batches in flight per oracle.
+    outstanding: Vec<usize>,
+    inflight: HashMap<u64, InFlight>,
+    /// Deadline clock: when the queue last became non-empty, or the last
+    /// dispatch left a non-empty remainder — whichever is later. The
+    /// deadline trigger fires `max_delay` after this instant, so a partial
+    /// batch waits at most `max_delay` behind the batch dispatched before
+    /// it.
+    queued_since: Option<Instant>,
+    next_id: u64,
+}
+
+impl OracleScheduler {
+    pub fn new(batch: &BatchSetting, n_oracles: usize) -> Self {
+        OracleScheduler {
+            max_size: batch.max_size.max(1),
+            max_delay: batch.max_delay,
+            max_outstanding: batch.max_outstanding.max(1),
+            outstanding: vec![0; n_oracles.max(1)],
+            inflight: HashMap::new(),
+            queued_since: None,
+            next_id: 0,
+        }
+    }
+
+    /// Inputs were appended to the (external) queue. Starts the deadline
+    /// clock if the queue was empty.
+    pub fn note_enqueued(&mut self, now: Instant) {
+        if self.queued_since.is_none() {
+            self.queued_since = Some(now);
+        }
+    }
+
+    /// The external queue was mutated out-of-band (a `dynamic_orcale_list`
+    /// rescore replaced its contents): resync the deadline clock. A queue
+    /// that emptied stops the clock; one that stays non-empty keeps its
+    /// original head-age (replacements are a permutation of queued rows,
+    /// not new arrivals).
+    pub fn sync_queue(&mut self, queue_len: usize, now: Instant) {
+        if queue_len == 0 {
+            self.queued_since = None;
+        } else if self.queued_since.is_none() {
+            self.queued_since = Some(now);
+        }
+    }
+
+    /// Batches currently in flight across the pool.
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.iter().sum()
+    }
+
+    /// Items currently in flight across the pool (diagnostics/telemetry;
+    /// the Manager's shutdown drain waits on [`OracleScheduler::in_flight`]
+    /// batches — a latency-scaled, item-aware drain bound is a ROADMAP
+    /// follow-up).
+    pub fn in_flight_items(&self) -> usize {
+        self.inflight.values().map(|f| f.items).sum()
+    }
+
+    /// Whether a dispatch trigger (size or deadline) has fired for a queue
+    /// of `queue_len` rows.
+    fn triggered(&self, queue_len: usize, now: Instant) -> bool {
+        if queue_len == 0 {
+            return false;
+        }
+        if queue_len >= self.max_size {
+            return true; // size trigger preempts the deadline
+        }
+        self.queued_since
+            .map(|t| now.duration_since(t) >= self.max_delay)
+            .unwrap_or(false)
+    }
+
+    /// The least-loaded oracle with spare capacity (lowest index on ties —
+    /// deterministic). `None` = every oracle saturated (backpressure).
+    fn pick_oracle(&self) -> Option<usize> {
+        let (best, &count) = self
+            .outstanding
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &c)| c)
+            .expect("at least one oracle");
+        (count < self.max_outstanding).then_some(best)
+    }
+
+    /// Decide one dispatch for a queue of `queue_len` rows, bounded by
+    /// `budget` items (the strict label budget's remaining headroom;
+    /// `None` = unbounded). On `Some`, the caller must pop exactly `take`
+    /// rows from the queue head, encode them under `id`, and send to
+    /// `oracle` — the scheduler has already recorded the batch as in
+    /// flight and restarted the deadline clock for the remainder.
+    pub fn try_dispatch(
+        &mut self,
+        queue_len: usize,
+        now: Instant,
+        budget: Option<u64>,
+    ) -> Option<OracleDispatch> {
+        if budget == Some(0) {
+            return None;
+        }
+        if !self.triggered(queue_len, now) {
+            return None;
+        }
+        let oracle = self.pick_oracle()?;
+        let mut take = queue_len.min(self.max_size);
+        if let Some(b) = budget {
+            take = take.min(b as usize);
+        }
+        debug_assert!(take > 0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outstanding[oracle] += 1;
+        self.inflight.insert(id, InFlight { oracle, items: take });
+        self.queued_since = if queue_len > take { Some(now) } else { None };
+        Some(OracleDispatch { id, oracle, take })
+    }
+
+    /// A batch's result frame arrived. Returns `(oracle, items)` of the
+    /// completed batch, or `None` for an unknown id (orphan/duplicate —
+    /// the caller should still ingest the labels, they were paid for).
+    pub fn complete(&mut self, id: u64) -> Option<(usize, usize)> {
+        let fl = self.inflight.remove(&id)?;
+        debug_assert!(self.outstanding[fl.oracle] > 0);
+        self.outstanding[fl.oracle] = self.outstanding[fl.oracle].saturating_sub(1);
+        Some((fl.oracle, fl.items))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Core trigger/routing semantics; the backpressure + budget properties
+    //! live in `rust/tests/test_props.rs` and the end-to-end behavior in
+    //! `test_determinism.rs` / `comm_overhead`.
+    use super::*;
+
+    fn sched(
+        max_size: usize,
+        max_delay_ms: u64,
+        max_outstanding: usize,
+        oracles: usize,
+    ) -> OracleScheduler {
+        OracleScheduler::new(
+            &BatchSetting {
+                max_size,
+                max_delay: Duration::from_millis(max_delay_ms),
+                max_outstanding,
+            },
+            oracles,
+        )
+    }
+
+    #[test]
+    fn size_trigger_fires_and_caps_take() {
+        let mut s = sched(4, 1_000_000, 2, 2);
+        let t0 = Instant::now();
+        s.note_enqueued(t0);
+        assert!(s.try_dispatch(3, t0, None).is_none(), "below size, before deadline");
+        let d = s.try_dispatch(6, t0, None).expect("size trigger");
+        assert_eq!((d.id, d.oracle, d.take), (0, 0, 4));
+        // remainder keeps the clock running: deadline fires max_delay later
+        assert_eq!(s.in_flight(), 1);
+    }
+
+    #[test]
+    fn deadline_trigger_flushes_partial_batch() {
+        let mut s = sched(8, 10, 2, 1);
+        let t0 = Instant::now();
+        s.note_enqueued(t0);
+        assert!(s.try_dispatch(2, t0 + Duration::from_millis(9), None).is_none());
+        let d = s.try_dispatch(2, t0 + Duration::from_millis(10), None).expect("deadline");
+        assert_eq!(d.take, 2, "partial batch takes everything queued");
+        // queue drained → clock stops; new enqueue restarts it
+        assert!(s.try_dispatch(0, t0 + Duration::from_secs(1), None).is_none());
+    }
+
+    #[test]
+    fn least_outstanding_routing_is_deterministic() {
+        let mut s = sched(1, 0, 2, 3);
+        let t0 = Instant::now();
+        s.note_enqueued(t0);
+        // equal load → lowest index; then always the least-loaded oracle
+        let picks: Vec<usize> =
+            (0..4).map(|i| s.try_dispatch(4 - i, t0, None).unwrap().oracle).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0]);
+        // oracle 1 frees first (it is faster): next batch routes to it
+        let id = 1; // second dispatch went to oracle 1
+        assert_eq!(s.complete(id), Some((1, 1)));
+        s.note_enqueued(t0);
+        assert_eq!(s.try_dispatch(1, t0, None).unwrap().oracle, 1);
+    }
+
+    #[test]
+    fn budget_caps_take_and_zero_budget_blocks() {
+        let mut s = sched(8, 0, 2, 1);
+        let t0 = Instant::now();
+        s.note_enqueued(t0);
+        assert!(s.try_dispatch(8, t0, Some(0)).is_none(), "budget exhausted");
+        let d = s.try_dispatch(8, t0, Some(3)).unwrap();
+        assert_eq!(d.take, 3, "budget bounds the batch");
+    }
+
+    #[test]
+    fn completion_accounting_and_orphans() {
+        let mut s = sched(2, 0, 1, 2);
+        let t0 = Instant::now();
+        s.note_enqueued(t0);
+        let a = s.try_dispatch(4, t0, None).unwrap();
+        let b = s.try_dispatch(2, t0, None).unwrap();
+        assert_eq!(s.in_flight(), 2);
+        assert_eq!(s.in_flight_items(), 4);
+        // both oracles saturated at max_outstanding = 1
+        s.note_enqueued(t0);
+        assert!(s.try_dispatch(5, t0, None).is_none(), "backpressure");
+        assert_eq!(s.complete(a.id), Some((a.oracle, 2)));
+        assert_eq!(s.complete(a.id), None, "duplicate completion is an orphan");
+        assert_eq!(s.complete(99), None, "unknown id is an orphan");
+        assert_eq!(s.complete(b.id), Some((b.oracle, 2)));
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.in_flight_items(), 0);
+    }
+
+    #[test]
+    fn sync_queue_resets_clock_only_when_emptied() {
+        let mut s = sched(8, 10, 2, 1);
+        let t0 = Instant::now();
+        s.note_enqueued(t0);
+        // rescore kept rows queued: head age is preserved
+        s.sync_queue(3, t0 + Duration::from_millis(6));
+        assert!(s.try_dispatch(3, t0 + Duration::from_millis(10), None).is_some());
+        // rescore pruned everything: clock stops until a fresh enqueue
+        s.sync_queue(0, t0 + Duration::from_millis(20));
+        assert!(s.try_dispatch(2, t0 + Duration::from_secs(1), None).is_none());
+    }
+}

@@ -268,6 +268,16 @@ impl RowBlock {
         self.ends.push(self.data.len());
     }
 
+    /// Append one row assembled from consecutive parts (e.g. an energy
+    /// block followed by a force block) without a temporary row buffer —
+    /// the ragged twin of [`Batch::push_row_concat`].
+    pub fn push_row_concat(&mut self, parts: &[&[f32]]) {
+        for p in parts {
+            self.data.extend_from_slice(p);
+        }
+        self.ends.push(self.data.len());
+    }
+
     /// Reserve space for `rows` more rows totalling `values` more values,
     /// so a following run of [`RowBlock::push_row`]s performs at most one
     /// (re)allocation per backing buffer regardless of the row count.
@@ -745,6 +755,17 @@ mod tests {
         assert_eq!((v.rows(), v.width()), (2, 2));
         assert_eq!(v.row(1), &[3.0, 4.0]);
         assert_eq!(RowBlock::new().as_view().unwrap().rows(), 0);
+    }
+
+    #[test]
+    fn row_block_push_row_concat_matches_push_row() {
+        let mut a = RowBlock::new();
+        a.push_row_concat(&[&[1.0, 2.0], &[], &[3.0]]);
+        a.push_row_concat(&[&[4.0]]);
+        let mut b = RowBlock::new();
+        b.push_row(&[1.0, 2.0, 3.0]);
+        b.push_row(&[4.0]);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::data::Dataset;
 use crate::kernels::{Mode, Model};
 use crate::runtime::{Engine, Manifest, TensorIn};
 
-use super::util::{pad_rows, plan_chunks, split_columns, split_columns_range};
+use super::util::{pad_rows, plan_chunks, split_columns, ColumnScratch};
 
 /// Tunables for the training side.
 #[derive(Debug, Clone)]
@@ -78,6 +78,12 @@ pub struct HloPotentialModel {
     last_round_epochs: u64,
     opts: TrainOptions,
     rounds: u64,
+    /// Persistent column-split scratches (cleared, not reallocated, per
+    /// call): input columns for forward/train staging, label columns for
+    /// the train step — the HLO hot paths are allocation-free in steady
+    /// state.
+    in_scratch: ColumnScratch,
+    lab_scratch: ColumnScratch,
 }
 
 impl HloPotentialModel {
@@ -153,6 +159,8 @@ impl HloPotentialModel {
             last_round_epochs: 0,
             opts,
             rounds: 0,
+            in_scratch: ColumnScratch::new(),
+            lab_scratch: ColumnScratch::new(),
         };
         model.try_load_checkpoint();
         Ok(model)
@@ -261,11 +269,13 @@ impl HloPotentialModel {
     /// each column block to the artifact batch, runs the forward, and
     /// extracts the `(e_mean, f_mean)` output tensors — the single place
     /// both the nested and flat predict paths get the output layout from.
+    /// `cols` may be the persistent [`ColumnScratch`] buffers; padding
+    /// mutates them in place.
     fn fwd_cols(
         &self,
         batch: usize,
         used: usize,
-        mut cols: Vec<Vec<f32>>,
+        cols: &mut [Vec<f32>],
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
         let name = &self.fwd_names[&batch];
         let [n3, g, s] = self.widths();
@@ -287,7 +297,8 @@ impl HloPotentialModel {
 
     /// Forward one padded chunk; returns (e rows, f rows) flattened.
     fn fwd_chunk(&self, batch: usize, rows: &[Vec<f32>]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        self.fwd_cols(batch, rows.len(), split_columns(rows, &self.widths()))
+        let mut cols = split_columns(rows, &self.widths());
+        self.fwd_cols(batch, rows.len(), &mut cols)
     }
 
     /// Energy-only committee UQ through the fused Pallas kernel path —
@@ -334,8 +345,13 @@ impl HloPotentialModel {
         let (xs, ys, real) = self.dataset.val_batch(batch);
         let view = BatchView::from_parts(&xs, batch, self.input_row_len())
             .context("validation batch shape mismatch")?;
-        let cols = split_columns_range(&view, 0, batch, &self.widths());
-        let (e, _f) = self.fwd_cols(batch, batch, cols)?;
+        // persistent scratch (taken out to split the borrow): column
+        // staging reuses last call's capacity, no fresh allocations
+        let widths = self.widths();
+        let mut scratch = std::mem::take(&mut self.in_scratch);
+        let result = self.fwd_cols(batch, batch, scratch.split_range(&view, 0, batch, &widths));
+        self.in_scratch = scratch;
+        let (e, _f) = result?;
         let s = self.n_states;
         let yl = self.label_row_len();
         let mut mse = 0.0f32;
@@ -357,8 +373,15 @@ impl HloPotentialModel {
             .context("minibatch input shape mismatch")?;
         let lab_view = BatchView::from_parts(&ys, t, self.label_row_len())
             .context("minibatch label shape mismatch")?;
-        let in_cols = split_columns_range(&in_view, 0, t, &self.widths());
-        let lab_cols = split_columns_range(&lab_view, 0, t, &[self.n_states, self.n_atoms * 3]);
+        // persistent scratches (taken out to split the borrow): both column
+        // stagings reuse last step's capacity — a steady-state train step
+        // performs no column-split allocations
+        let widths = self.widths();
+        let lab_widths = [self.n_states, self.n_atoms * 3];
+        let mut in_scratch = std::mem::take(&mut self.in_scratch);
+        let mut lab_scratch = std::mem::take(&mut self.lab_scratch);
+        let in_cols = in_scratch.split_range(&in_view, 0, t, &widths);
+        let lab_cols = lab_scratch.split_range(&lab_view, 0, t, &lab_widths);
         let out = self.engine.call(
             &self.train_name,
             &[
@@ -370,7 +393,10 @@ impl HloPotentialModel {
                 TensorIn::F32(&lab_cols[0]),
                 TensorIn::F32(&lab_cols[1]),
             ],
-        )?;
+        );
+        self.in_scratch = in_scratch;
+        self.lab_scratch = lab_scratch;
+        let out = out?;
         let mut it = out.into_iter();
         self.w = it.next().unwrap();
         self.w_shared = None;
@@ -412,7 +438,7 @@ impl Model for HloPotentialModel {
     }
 
     /// Native flat path: column splitting reads rows straight off the
-    /// strided view ([`split_columns_range`]) and each output row is the
+    /// strided view into the persistent [`ColumnScratch`] and each output row is the
     /// energy block + force block written contiguously into one [`Batch`].
     fn predict_batch(&mut self, view: &BatchView<'_>) -> RowBlock {
         let batches: Vec<usize> = self.fwd_names.keys().copied().collect();
@@ -422,8 +448,11 @@ impl Model for HloPotentialModel {
         let mut out = Batch::with_capacity(view.rows(), s + n3);
         let zero = vec![0.0; self.output_row_len()];
         let mut off = 0;
+        // persistent scratch (taken out to split the borrow): every chunk's
+        // column staging reuses the buffers of the one before it
+        let mut scratch = std::mem::take(&mut self.in_scratch);
         for (chunk_b, used) in plan_chunks(view.rows(), &batches) {
-            let cols = split_columns_range(view, off, off + used, &widths);
+            let cols = scratch.split_range(view, off, off + used, &widths);
             match self.fwd_cols(chunk_b, used, cols) {
                 Ok((e, f)) => {
                     for i in 0..used {
@@ -441,6 +470,7 @@ impl Model for HloPotentialModel {
             }
             off += used;
         }
+        self.in_scratch = scratch;
         out.into_row_block()
     }
 

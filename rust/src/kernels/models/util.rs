@@ -45,6 +45,59 @@ pub fn split_columns_range(
     out
 }
 
+/// Persistent column-split scratch: the per-model twin of
+/// [`split_columns_range`] that *clears* its column buffers instead of
+/// reallocating them, so the HLO forward/train staging is allocation-free
+/// in steady state (every call after the first at a given shape reuses the
+/// previous call's capacity).
+///
+/// One instance per distinct `widths` layout — a model keeps one for its
+/// input columns and one for its label columns.
+#[derive(Debug, Default)]
+pub struct ColumnScratch {
+    cols: Vec<Vec<f32>>,
+}
+
+impl ColumnScratch {
+    pub fn new() -> Self {
+        ColumnScratch::default()
+    }
+
+    /// [`split_columns_range`] into the reused buffers. Returns the filled
+    /// column blocks; they stay valid (and writable, e.g. for padding)
+    /// until the next call.
+    pub fn split_range(
+        &mut self,
+        view: &BatchView<'_>,
+        lo: usize,
+        hi: usize,
+        widths: &[usize],
+    ) -> &mut [Vec<f32>] {
+        let row_len: usize = widths.iter().sum();
+        self.cols.resize_with(widths.len(), Vec::new);
+        for (b, col) in self.cols.iter_mut().enumerate() {
+            col.clear();
+            col.reserve(widths[b] * (hi - lo));
+        }
+        for i in lo..hi {
+            let row = view.row(i);
+            assert_eq!(row.len(), row_len, "row width mismatch");
+            let mut off = 0;
+            for (b, &w) in widths.iter().enumerate() {
+                self.cols[b].extend_from_slice(&row[off..off + w]);
+                off += w;
+            }
+        }
+        &mut self.cols
+    }
+
+    /// Total retained capacity across column buffers (diagnostics: should
+    /// plateau on hot loops).
+    pub fn capacity_values(&self) -> usize {
+        self.cols.iter().map(|c| c.capacity()).sum()
+    }
+}
+
 /// Plan chunking of `n` rows over the available fixed batch sizes
 /// (ascending). Returns a list of `(batch_size, rows_used)` chunks covering
 /// all `n` rows; the final chunk may be padded (`rows_used < batch_size`).
@@ -107,6 +160,28 @@ mod tests {
         assert_eq!(all, split_columns(&rows, &[3, 1]));
         let tail = split_columns_range(&batch.view(), 1, 3, &[3, 1]);
         assert_eq!(tail, split_columns(&rows[1..], &[3, 1]));
+    }
+
+    #[test]
+    fn column_scratch_matches_split_columns_range_and_reuses_capacity() {
+        let rows: Vec<Vec<f32>> =
+            (0..6).map(|i| (0..8).map(|k| (i * 8 + k) as f32).collect()).collect();
+        let batch = crate::data::batch::Batch::from_rows(&rows).unwrap();
+        let widths = [5usize, 2, 1];
+        let mut scratch = ColumnScratch::new();
+        let got = scratch.split_range(&batch.view(), 1, 5, &widths).to_vec();
+        assert_eq!(got, split_columns_range(&batch.view(), 1, 5, &widths));
+        // steady state: repeated same-shape calls never grow capacity
+        let cap = scratch.capacity_values();
+        for _ in 0..10 {
+            let again = scratch.split_range(&batch.view(), 1, 5, &widths);
+            assert_eq!(again.len(), 3);
+        }
+        assert_eq!(scratch.capacity_values(), cap, "scratch must clear, not reallocate");
+        // shrinking the range reuses the same buffers too
+        let small = scratch.split_range(&batch.view(), 0, 2, &widths).to_vec();
+        assert_eq!(small, split_columns_range(&batch.view(), 0, 2, &widths));
+        assert_eq!(scratch.capacity_values(), cap);
     }
 
     #[test]

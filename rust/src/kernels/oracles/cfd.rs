@@ -11,6 +11,7 @@
 //! structure (more promoters → more drag *and* more heat transfer), which
 //! gives the PSO a meaningful Pareto landscape.
 
+use crate::data::batch::{BatchView, RowBlock};
 use crate::kernels::Oracle;
 
 /// Baseline fully-developed laminar values (dimensionless toy units).
@@ -91,6 +92,19 @@ impl Oracle for ChannelFlowOracle {
         let (cf, st) = self.evaluate(input);
         vec![cf, st]
     }
+
+    /// Native batch labeling: each `[C_f, St]` row writes straight into the
+    /// contiguous output block — no `Vec` per label, same values as the
+    /// per-label path.
+    fn run_calc_batch(&mut self, inputs: &BatchView<'_>) -> RowBlock {
+        let mut out = RowBlock::with_capacity(inputs.rows(), inputs.rows() * 2);
+        for row in inputs.iter() {
+            self.labels += 1;
+            let (cf, st) = self.evaluate(row);
+            out.push_row(&[cf, st]);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +169,21 @@ mod tests {
         let out = o.run_calc(&empty(8));
         assert_eq!(out.len(), 2);
         assert_eq!(o.labels(), 1);
+    }
+
+    #[test]
+    fn batch_labels_match_per_label_path() {
+        use crate::data::batch::Batch;
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..64).map(|k| if (i * 7 + k) % 9 == 0 { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let mut per_label = ChannelFlowOracle::new(8);
+        let want: Vec<Vec<f32>> = rows.iter().map(|r| per_label.run_calc(r)).collect();
+        let mut batched = ChannelFlowOracle::new(8);
+        let batch = Batch::from_rows(&rows).unwrap();
+        let got = batched.run_calc_batch(&batch.view());
+        assert_eq!(got.to_nested(), want);
+        assert_eq!(batched.labels(), per_label.labels());
     }
 
     #[test]

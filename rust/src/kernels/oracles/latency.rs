@@ -7,6 +7,7 @@
 
 use std::time::Duration;
 
+use crate::data::batch::{BatchView, RowBlock};
 use crate::kernels::Oracle;
 use crate::rng::Rng;
 
@@ -31,14 +32,37 @@ impl<O: Oracle> LatencyOracle<O> {
     }
 }
 
+impl<O: Oracle> LatencyOracle<O> {
+    /// One jittered per-item wait (advances the jitter RNG exactly once).
+    fn sample_wait(&mut self) -> Duration {
+        let scale = 1.0 + self.jitter * (2.0 * self.rng.f64() - 1.0);
+        self.latency.mul_f64(scale.max(0.0))
+    }
+}
+
 impl<O: Oracle> Oracle for LatencyOracle<O> {
     fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
-        let scale = 1.0 + self.jitter * (2.0 * self.rng.f64() - 1.0);
-        let wait = self.latency.mul_f64(scale.max(0.0));
+        let wait = self.sample_wait();
         if wait > Duration::ZERO {
             std::thread::sleep(wait);
         }
         self.inner.run_calc(input)
+    }
+
+    /// Native batch labeling: the per-item waits are sampled exactly as the
+    /// per-label path would (one jitter draw per item, same RNG stream, so
+    /// labels and total simulated cost are identical) but slept **once** as
+    /// their sum — a batch of n costs one syscall instead of n. The inner
+    /// oracle labels the whole batch through its own `run_calc_batch`.
+    fn run_calc_batch(&mut self, inputs: &BatchView<'_>) -> RowBlock {
+        let mut wait = Duration::ZERO;
+        for _ in 0..inputs.rows() {
+            wait += self.sample_wait();
+        }
+        if wait > Duration::ZERO {
+            std::thread::sleep(wait);
+        }
+        self.inner.run_calc_batch(inputs)
     }
 
     fn stop_run(&mut self) {
@@ -72,6 +96,31 @@ mod tests {
         let t0 = std::time::Instant::now();
         o.run_calc(&[1.0]);
         assert!(t0.elapsed() < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn batch_labels_and_rng_stream_match_per_label_path() {
+        use crate::data::batch::Batch;
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut a = LatencyOracle::new(Echo, Duration::ZERO).with_jitter(0.5, 42);
+        let want: Vec<Vec<f32>> = rows.iter().map(|r| a.run_calc(r)).collect();
+        let mut b = LatencyOracle::new(Echo, Duration::ZERO).with_jitter(0.5, 42);
+        let batch = Batch::from_rows(&rows).unwrap();
+        let got = b.run_calc_batch(&batch.view());
+        assert_eq!(got.to_nested(), want);
+        // the jitter streams advanced identically: the next draw matches
+        assert_eq!(a.rng.f64().to_bits(), b.rng.f64().to_bits());
+    }
+
+    #[test]
+    fn batch_sleeps_the_summed_latency_once() {
+        use crate::data::batch::Batch;
+        let mut o = LatencyOracle::new(Echo, Duration::from_millis(10));
+        let batch = Batch::from_rows(&[vec![1.0f32], vec![2.0], vec![3.0]]).unwrap();
+        let t0 = std::time::Instant::now();
+        let out = o.run_calc_batch(&batch.view());
+        assert!(t0.elapsed() >= Duration::from_millis(25), "summed latency applied");
+        assert_eq!(out.len(), 3);
     }
 
     #[test]

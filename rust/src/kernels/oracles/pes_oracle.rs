@@ -5,6 +5,7 @@
 //! label  = `[e (n_states), f (n_atoms*3)]`
 //! where `f` are the forces on the state-weighted PES.
 
+use crate::data::batch::{BatchView, RowBlock};
 use crate::kernels::Oracle;
 use crate::potential::{MultiState, Pes};
 
@@ -59,6 +60,26 @@ impl<P: Pes> Oracle for PesOracle<P> {
         out.extend_from_slice(&f);
         out
     }
+
+    /// Native batch labeling: each `[e, 0.., f]` row is concatenated
+    /// straight into the contiguous output block. Energies and forces are
+    /// computed by the same per-row evaluation as [`Oracle::run_calc`], so
+    /// labels are bit-identical to the per-label path.
+    fn run_calc_batch(&mut self, inputs: &BatchView<'_>) -> RowBlock {
+        let n3 = self.n_atoms * 3;
+        let pad = vec![0.0f32; self.n_states - 1];
+        let mut out = RowBlock::with_capacity(inputs.rows(), inputs.rows() * (self.n_states + n3));
+        for row in inputs.iter() {
+            let x = &row[..n3];
+            let g = &row[n3..n3 + self.n_globals];
+            let pes = (self.pes_for)(g);
+            let e = pes.energy(x) as f32;
+            let f = pes.forces(x);
+            self.labels += 1;
+            out.push_row_concat(&[&[e], &pad, &f]);
+        }
+        out
+    }
 }
 
 /// Excited-state oracle over [`MultiState`] (the TDDFT stand-in, §3.1):
@@ -79,8 +100,10 @@ impl MultiStateOracle {
     }
 }
 
-impl Oracle for MultiStateOracle {
-    fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+impl MultiStateOracle {
+    /// `(energies, forces)` of one input row — shared by both label paths
+    /// so they stay bit-identical.
+    fn label_row(&self, input: &[f32]) -> (Vec<f32>, Vec<f32>) {
         let n3 = self.pes.n_atoms * 3;
         let s_off = n3 + self.n_globals;
         let x = &input[..n3];
@@ -95,9 +118,29 @@ impl Oracle for MultiStateOracle {
             .map(|(i, _)| i)
             .unwrap_or(0);
         let f = self.pes.state_forces(x, active);
+        (energies, f)
+    }
+}
+
+impl Oracle for MultiStateOracle {
+    fn run_calc(&mut self, input: &[f32]) -> Vec<f32> {
+        let (energies, f) = self.label_row(input);
         self.labels += 1;
         let mut out = energies;
         out.extend_from_slice(&f);
+        out
+    }
+
+    /// Native batch labeling: energy + force blocks concatenate straight
+    /// into the contiguous output block, one row per input in order.
+    fn run_calc_batch(&mut self, inputs: &BatchView<'_>) -> RowBlock {
+        let width = self.pes.n_states + self.pes.n_atoms * 3;
+        let mut out = RowBlock::with_capacity(inputs.rows(), inputs.rows() * width);
+        for row in inputs.iter() {
+            let (energies, f) = self.label_row(row);
+            self.labels += 1;
+            out.push_row_concat(&[&energies, &f]);
+        }
         out
     }
 }
@@ -125,6 +168,35 @@ mod tests {
         input[6] = 1.0; // charge +1
         let cation = o.run_calc(&input);
         assert!((neutral[0] - cation[0]).abs() > 1e-7);
+    }
+
+    #[test]
+    fn batch_labels_bit_identical_to_per_label_path() {
+        use crate::data::batch::Batch;
+        let rows = vec![
+            vec![0.0, 0.0, 0.0, 1.4, 0.0, 0.0, 0.0, 1.0],
+            vec![0.0, 0.0, 0.0, 1.1, 0.0, 0.0, 0.0, 1.0],
+            vec![0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 1.0],
+        ];
+        let mut per_label = PesOracle::fixed(Morse::dimer(), 1);
+        let want: Vec<Vec<f32>> = rows.iter().map(|r| per_label.run_calc(r)).collect();
+        let mut batched = PesOracle::fixed(Morse::dimer(), 1);
+        let batch = Batch::from_rows(&rows).unwrap();
+        let got = batched.run_calc_batch(&batch.view());
+        assert_eq!(got.to_nested(), want, "batch labels must be bit-identical");
+        assert_eq!(batched.labels(), 3);
+
+        // multi-state twin
+        let pes = MultiState::photo(2, 3);
+        let ms_rows = vec![
+            vec![0.0, 0.0, 0.0, 1.5, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 0.0, 1.2, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0],
+        ];
+        let mut ms_a = MultiStateOracle::new(pes.clone(), 1);
+        let ms_want: Vec<Vec<f32>> = ms_rows.iter().map(|r| ms_a.run_calc(r)).collect();
+        let mut ms_b = MultiStateOracle::new(pes, 1);
+        let ms_batch = Batch::from_rows(&ms_rows).unwrap();
+        assert_eq!(ms_b.run_calc_batch(&ms_batch.view()).to_nested(), ms_want);
     }
 
     #[test]

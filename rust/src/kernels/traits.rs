@@ -41,6 +41,24 @@ pub trait Oracle: Send {
     /// Label one input (blocking; this is where DFT/CFD wall time lives).
     fn run_calc(&mut self, input_for_orcl: &[f32]) -> Vec<f32>;
 
+    /// Oracle-plane twin of [`Oracle::run_calc`]: label a whole micro-batch
+    /// of inputs (a strided view straight over the decoded
+    /// `TAG_ORACLE_BATCH` payload) into one contiguous [`RowBlock`] — one
+    /// label row per input row, in order, with no per-label boxing.
+    ///
+    /// The default implementation loops [`Oracle::run_calc`] in row order,
+    /// so labels are **bit-identical** to the per-label path for any
+    /// existing oracle; the built-in CFD, latency, and PES oracles override
+    /// it with native batch implementations (same labels, no intermediate
+    /// `Vec` per row).
+    fn run_calc_batch(&mut self, inputs: &BatchView<'_>) -> RowBlock {
+        let mut out = RowBlock::new();
+        for row in inputs.iter() {
+            out.push_row(&self.run_calc(row));
+        }
+        out
+    }
+
     fn stop_run(&mut self) {}
 }
 

@@ -101,6 +101,32 @@
 //! instead of one wake-up per source. `BENCH_train.json` tracks
 //! bytes-copied per flushed datapoint and per weight sync.
 //!
+//! ## Oracle plane (green flow)
+//!
+//! Labeling has the same exchange discipline as prediction. With
+//! `AlSetting { oracle_mode: OracleMode::Batched, .. }` the Manager stops
+//! shipping one message per input and one per label: the
+//! [`coordinator::oracle_plane::OracleScheduler`] coalesces
+//! Manager-selected inputs into size-/deadline-triggered micro-batches
+//! (`oracle_batch.max_size` / `max_delay`), routes each batch to the
+//! **least-loaded** oracle (oracles have wildly heterogeneous latencies —
+//! DFT hours vs xTB seconds — so least-outstanding routing feeds fast
+//! oracles proportionally more work), and applies per-oracle backpressure
+//! at `oracle_batch.max_outstanding` (excess inputs wait in the
+//! `OracleBuffer`, where `dynamic_orcale_list` re-scoring can still
+//! reorder them). On the wire, `TAG_ORACLE_BATCH` carries the inputs and
+//! `TAG_ORACLE_BATCH_RESULT` returns interleaved `(input, label)` pairs
+//! whose packed section is byte-identical to the training plane's
+//! `pack_datapoints`; oracles label through
+//! `Oracle::run_calc_batch(&BatchView) -> RowBlock` (default shim loops
+//! `run_calc`, so labels are bit-identical to the per-label path — proven
+//! end to end in `rust/tests/test_determinism.rs`), and batch results
+//! ingest straight into the Manager's `TrainBuffer` as borrowed views with
+//! constant allocations per batch (`rust/tests/test_oracle_plane.rs`). The
+//! per-label path (`OracleMode::PerLabel`, the default) is preserved
+//! bit-compatible. `BENCH_oracle.json` tracks green-flow messages per
+//! labeled sample (≥ 2× fewer at batch 8 with 4 oracles).
+//!
 //! ## Performance
 //!
 //! Perf-tracking benches write machine-readable JSON next to their

@@ -135,47 +135,67 @@ impl SerialWorkflow {
     }
 }
 
-/// Label `inputs` using round-robin assignment over `P` oracle workers run
-/// on scoped threads — the serial workflow's only concurrency (the paper
-/// assumes "only parallelization of the oracles", eq. (1)).
+/// Label `inputs` over `P` oracle workers run on scoped threads — the
+/// serial workflow's only concurrency (the paper assumes "only
+/// parallelization of the oracles", eq. (1)).
 ///
-/// Workers borrow the flat selection block directly (scoped threads share
-/// it read-only and index rows by stride), so no per-shard input copies are
-/// made; inputs and labels are copied exactly once, into the returned
-/// contiguous [`DatapointBlock`] — the flat training plane starts at the
-/// oracle, even in the serial baseline.
+/// Work splits into contiguous shard ranges, so a uniform selection block
+/// is consumed as zero-copy strided sub-views of the shared flat buffer
+/// and each worker labels its whole shard with **one**
+/// [`Oracle::run_calc_batch`] call — the serial baseline rides the oracle
+/// plane too (labels bit-identical to per-row `run_calc`, which remains
+/// the fallback for ragged selections). Inputs and labels are copied
+/// exactly once, into the returned contiguous [`DatapointBlock`].
 fn label_parallel(oracles: &mut [Box<dyn Oracle>], inputs: &RowBlock) -> DatapointBlock {
     if inputs.is_empty() || oracles.is_empty() {
         return DatapointBlock::new();
     }
     let p = oracles.len();
+    let n = inputs.len();
+    // worker w labels rows [lo_w, hi_w) — contiguous, so the uniform fast
+    // path is pointer arithmetic over the shared block
+    let bounds: Vec<(usize, usize)> = (0..p).map(|w| (w * n / p, (w + 1) * n / p)).collect();
+    let uniform = inputs.as_view();
     // Scoped threads: oracle objects are borrowed mutably, one per thread.
-    // Oracle is not Sync, so each worker gets exactly one oracle by value of
-    // the mutable borrow; worker w takes indices w, w+p, w+2p, ...
-    let shard_results: Vec<Vec<(usize, Vec<f32>)>> = std::thread::scope(|scope| {
+    // Oracle is not Sync, so each worker gets exactly one oracle by value
+    // of the mutable borrow.
+    let shard_results: Vec<RowBlock> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(p);
-        for (w, oracle) in oracles.iter_mut().enumerate() {
+        for (oracle, &(lo, hi)) in oracles.iter_mut().zip(&bounds) {
             handles.push(scope.spawn(move || {
-                (w..inputs.len())
-                    .step_by(p)
-                    .map(|i| (i, oracle.run_calc(inputs.row(i))))
-                    .collect::<Vec<_>>()
+                if lo == hi {
+                    return RowBlock::new();
+                }
+                match uniform {
+                    Some(view) => {
+                        let width = view.width();
+                        let sub = BatchView::from_parts(
+                            &view.flat()[lo * width..hi * width],
+                            hi - lo,
+                            width,
+                        )
+                        .expect("contiguous shard view");
+                        oracle.run_calc_batch(&sub)
+                    }
+                    None => {
+                        // ragged selections: per-row labeling, still into
+                        // one contiguous block per shard
+                        let mut out = RowBlock::new();
+                        for i in lo..hi {
+                            out.push_row(&oracle.run_calc(inputs.row(i)));
+                        }
+                        out
+                    }
+                }
             }));
         }
         handles.into_iter().map(|h| h.join().expect("oracle worker panicked")).collect()
     });
-    let mut labels: Vec<Option<Vec<f32>>> = vec![None; inputs.len()];
-    let mut label_values = 0;
-    for shard in shard_results {
-        for (i, y) in shard {
-            label_values += y.len();
-            labels[i] = Some(y);
-        }
-    }
-    let mut out = DatapointBlock::with_capacity(inputs.len(), inputs.total_values(), label_values);
-    for (i, y) in labels.into_iter().enumerate() {
-        if let Some(y) = y {
-            out.push(inputs.row(i), &y);
+    let label_values: usize = shard_results.iter().map(|b| b.total_values()).sum();
+    let mut out = DatapointBlock::with_capacity(n, inputs.total_values(), label_values);
+    for (block, &(lo, _)) in shard_results.iter().zip(&bounds) {
+        for (j, y) in block.iter().enumerate() {
+            out.push(inputs.row(lo + j), y);
         }
     }
     out

@@ -68,6 +68,26 @@ impl Oracle for SyntheticOracle {
             .map(|k| input.iter().enumerate().map(|(i, &v)| ((i + k + 1) as f32 * v).sin()).sum())
             .collect()
     }
+
+    /// Native batch labeling: one coalesced wait for the whole batch, label
+    /// values written straight into the contiguous block (bit-identical to
+    /// the per-label path).
+    fn run_calc_batch(&mut self, inputs: &BatchView<'_>) -> RowBlock {
+        busy_wait(self.label_cost * inputs.rows() as u32);
+        let mut out = RowBlock::with_capacity(inputs.rows(), inputs.rows() * self.out_dim);
+        let mut row = vec![0.0f32; self.out_dim];
+        for input in inputs.iter() {
+            for (k, slot) in row.iter_mut().enumerate() {
+                *slot = input
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| ((i + k + 1) as f32 * v).sin())
+                    .sum();
+            }
+            out.push_row(&row);
+        }
+        out
+    }
 }
 
 /// Model whose predict/train have fixed simulated cost. "Prediction" is a

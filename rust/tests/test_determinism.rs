@@ -21,7 +21,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use pal::config::{AlSetting, BatchSetting, ExchangeMode, StopCriteria};
+use pal::config::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
 use pal::coordinator::workflow::Workflow;
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
 use pal::kernels::oracles::PesOracle;
@@ -124,7 +124,7 @@ const SHARDS: usize = 2;
 const LABELS: u64 = 12;
 const RETRAIN_SIZE: usize = 4;
 
-fn deterministic_setting() -> AlSetting {
+fn deterministic_setting(oracle_mode: OracleMode) -> AlSetting {
     let flushes = LABELS / RETRAIN_SIZE as u64; // 3
     AlSetting {
         result_dir: "/tmp/pal-determinism".into(),
@@ -136,6 +136,14 @@ fn deterministic_setting() -> AlSetting {
         exchange_mode: ExchangeMode::Batched,
         retrain_size: RETRAIN_SIZE,
         strict_label_budget: true,
+        // exercise the rescore path end to end on every retrain:
+        // EnergySelectUtils keeps the default (identity)
+        // `adjust_input_for_oracle`, so the full drain → rescore →
+        // replace → scheduler-resync round-trip runs without changing the
+        // dispatch order — rescore replacements are bit-identical across
+        // oracle modes by construction, and any regression that perturbs
+        // the buffer or the batched scheduler clock breaks bit-stability
+        dynamic_oracle_list: true,
         seed: 7,
         batch: BatchSetting {
             // full batches only: every batch holds one item per generator,
@@ -143,6 +151,20 @@ fn deterministic_setting() -> AlSetting {
             max_size: GENS,
             max_delay: Duration::from_secs(10),
             max_outstanding: 2,
+        },
+        oracle_mode,
+        oracle_batch: BatchSetting {
+            // selections arrive in multiples of GENS = RETRAIN_SIZE, so the
+            // size trigger always forms *full* oracle batches aligned with
+            // the retrain flush boundary — batch composition (not just item
+            // order) is timing-independent, and label arrival partitions
+            // the train buffer exactly like the per-label path. One batch
+            // in flight at a time: with 2+, two result frames could land in
+            // one Manager drain and merge two retrain flushes into one,
+            // making the flush partitioning timing-dependent.
+            max_size: RETRAIN_SIZE,
+            max_delay: Duration::from_secs(10),
+            max_outstanding: 1,
         },
         stop: StopCriteria {
             max_iterations: None,
@@ -190,16 +212,16 @@ fn deterministic_kernels() -> KernelSet {
     KernelSet { generators, oracles, model, utils }
 }
 
-fn run_once() -> RunReport {
-    Workflow::new(deterministic_setting())
+fn run_once(oracle_mode: OracleMode) -> RunReport {
+    Workflow::new(deterministic_setting(oracle_mode))
         .run(deterministic_kernels())
         .unwrap()
 }
 
 #[test]
 fn muller_brown_loop_is_bit_stable_across_runs() {
-    let a = run_once();
-    let b = run_once();
+    let a = run_once(OracleMode::PerLabel);
+    let b = run_once(OracleMode::PerLabel);
 
     // exact label budget, both runs
     assert_eq!(a.oracle_labels, LABELS, "run A labels");
@@ -225,9 +247,52 @@ fn muller_brown_loop_is_bit_stable_across_runs() {
 
 #[test]
 fn strict_budget_never_overshoots() {
-    let report = run_once();
+    let report = run_once(OracleMode::PerLabel);
     let manager = &report.kernel("manager")[0];
     assert_eq!(manager.counter("dispatched"), LABELS);
     assert_eq!(manager.counter("labels"), LABELS);
     assert_eq!(report.sum_counter("oracle", "labels"), LABELS);
+}
+
+/// The oracle-plane acceptance pin: labels and the training-set order —
+/// and therefore every trainer's final loss, a pure function of the
+/// (ordered) labeled dataset — are **bit-identical** between the batched
+/// and per-label oracle modes, and the batched mode is itself bit-stable
+/// across runs. The single oracle makes batch completion FIFO, so item
+/// order through the train buffer matches the per-label dispatch order
+/// exactly, whatever the batch boundaries.
+#[test]
+fn batched_oracle_mode_is_bit_identical_to_per_label() {
+    let per_label = run_once(OracleMode::PerLabel);
+    let batched = run_once(OracleMode::Batched);
+    let batched2 = run_once(OracleMode::Batched);
+
+    // exact label budget in both modes (item-level `dispatched` semantics)
+    assert_eq!(per_label.oracle_labels, LABELS);
+    assert_eq!(batched.oracle_labels, LABELS, "batched mode labels");
+    let manager = &batched.kernel("manager")[0];
+    assert_eq!(manager.counter("dispatched"), LABELS);
+    assert_eq!(report_batches(&batched), (LABELS / RETRAIN_SIZE as u64, LABELS));
+    assert_eq!(per_label.retrain_rounds, batched.retrain_rounds);
+
+    // final losses bit-identical: per-label vs batched, and run to run
+    for (i, (x, y)) in per_label.final_losses.iter().zip(&batched.final_losses).enumerate() {
+        assert!(x.is_finite(), "trainer {i} loss not reported: {x}");
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "trainer {i} loss differs between oracle modes: {x} vs {y}"
+        );
+    }
+    for (x, y) in batched.final_losses.iter().zip(&batched2.final_losses) {
+        assert_eq!(x.to_bits(), y.to_bits(), "batched mode not bit-stable across runs");
+    }
+}
+
+/// `(oracle batch frames, labels they carried)` from the oracle telemetry.
+fn report_batches(report: &RunReport) -> (u64, u64) {
+    (
+        report.sum_counter("oracle", "batches"),
+        report.sum_counter("oracle", "labels"),
+    )
 }

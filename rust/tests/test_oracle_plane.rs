@@ -1,0 +1,127 @@
+//! Allocation-count regression for the oracle plane (the green-flow
+//! sibling of `test_flat_plane.rs` / `test_flat_train.rs`).
+//!
+//! Pins this PR's acceptance criteria for batched label ingest, on the
+//! exact path the Manager takes (`decode_oracle_batch_result_views` →
+//! one `TrainBuffer::push_pair` per pair):
+//!
+//! * after one warm flush cycle (the steady state — `TrainBuffer::flush`
+//!   pre-sizes the replacement staging block), ingesting a whole
+//!   `OracleBatchResult` frame performs a **constant** number of
+//!   allocations, independent of the batch size — zero per-label boxing
+//!   between the oracle and the training buffer;
+//! * the flat path allocates ≥ 8× less than the nested per-label baseline
+//!   it replaces (one owned `unpack` + `(Vec, Vec)` pair per label).
+//!
+//! This file installs a counting global allocator and therefore contains
+//! exactly ONE `#[test]`: the default test harness runs tests of a binary
+//! concurrently, and any sibling test's allocations would pollute the
+//! counters.
+
+use pal::bench_util::alloc::{alloc_count, CountingAlloc};
+use pal::comm::protocol::{decode_oracle_batch_result_views, encode_oracle_batch_result_into};
+use pal::coordinator::buffers::TrainBuffer;
+use pal::data::batch::RowBlock;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+const IN_DIM: usize = 8;
+const OUT_DIM: usize = 4;
+
+/// A `TAG_ORACLE_BATCH_RESULT` frame carrying `points` labeled samples.
+fn result_frame(points: usize) -> Vec<f32> {
+    let xs: Vec<Vec<f32>> = (0..points)
+        .map(|i| (0..IN_DIM).map(|k| ((i * 7 + k) % 13) as f32 * 0.1).collect())
+        .collect();
+    let ys: Vec<Vec<f32>> = (0..points)
+        .map(|i| (0..OUT_DIM).map(|k| ((i * 3 + k) % 5) as f32 * 0.2).collect())
+        .collect();
+    let inputs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+    let labels = RowBlock::from_rows(&ys);
+    let mut frame = Vec::new();
+    encode_oracle_batch_result_into(3, &inputs, &labels, &mut frame);
+    frame
+}
+
+/// A `TrainBuffer` in flush steady state: one full fill-and-flush cycle of
+/// `points` samples has run, so the staging block holds pre-sized backing
+/// buffers for the next cycle.
+fn warmed_buffer(points: usize) -> TrainBuffer {
+    let mut buf = TrainBuffer::new(points);
+    let frame = result_frame(points);
+    let (_id, view) = decode_oracle_batch_result_views(&frame).unwrap();
+    for (x, y) in view.iter() {
+        buf.push_pair(x, y);
+    }
+    buf.flush().expect("warm cycle flushes");
+    buf
+}
+
+/// Allocations for one batch-label ingest exactly as the Manager performs
+/// it: borrowed-view decode of the result frame + one `push_pair` per pair
+/// into the train buffer.
+fn flat_ingest_allocs(frame: &[f32], buffer: &mut TrainBuffer) -> u64 {
+    let before = alloc_count();
+    let (_id, view) = decode_oracle_batch_result_views(frame).unwrap();
+    for (x, y) in view.iter() {
+        buffer.push_pair(x, y);
+    }
+    let delta = alloc_count() - before;
+    std::hint::black_box(&view);
+    delta
+}
+
+/// Allocations for the nested per-label baseline this plane replaces: one
+/// owned decode + one boxed `(Vec, Vec)` pair per label.
+fn nested_ingest_allocs(frame: &[f32], staging: &mut Vec<(Vec<f32>, Vec<f32>)>) -> u64 {
+    use pal::comm::codec::unpack_datapoints;
+    let before = alloc_count();
+    // per-label wire: the packed section decodes pair by pair into owned Vecs
+    let points = unpack_datapoints(&frame[2..]).unwrap();
+    staging.extend(points);
+    let delta = alloc_count() - before;
+    std::hint::black_box(&staging);
+    delta
+}
+
+#[test]
+fn oracle_batch_label_ingest_allocates_constant() {
+    let small = result_frame(8);
+    let large = result_frame(64);
+
+    // warm-up: lazy one-time allocations out of the way
+    let _ = flat_ingest_allocs(&small, &mut warmed_buffer(64));
+
+    // --- decode → push_pair: constant allocations, independent of batch
+    // size (both buffers are in the steady state of a 64-sample flush
+    // cycle, exactly like the Manager between retrain flushes) ---
+    let mut buf_small = warmed_buffer(64);
+    let flat_small = flat_ingest_allocs(&small, &mut buf_small);
+    let mut buf_large = warmed_buffer(64);
+    let flat_large = flat_ingest_allocs(&large, &mut buf_large);
+    assert_eq!(buf_small.len(), 8);
+    assert_eq!(buf_large.len(), 64);
+    assert!(flat_small <= 4, "flat batch-label ingest allocated {flat_small} times (want <= 4)");
+    assert_eq!(
+        flat_small, flat_large,
+        "flat batch-label ingest must not allocate per label (8 rows: {flat_small}, \
+         64 rows: {flat_large})"
+    );
+
+    // --- ≥ 8× fewer allocations than the per-label nested baseline ---
+    let mut nested_stage = Vec::with_capacity(64);
+    let nested_large = nested_ingest_allocs(&large, &mut nested_stage);
+    assert_eq!(nested_stage.len(), 64);
+    assert!(
+        nested_large >= 8 * flat_large.max(1),
+        "flat path saves too little: nested {nested_large} vs flat {flat_large} allocs at batch 64"
+    );
+
+    // staged values are identical either way
+    let staged = buf_large.flush().expect("threshold met");
+    for i in 0..64 {
+        let (x, y) = staged.pair(i);
+        assert_eq!((x, y), (nested_stage[i].0.as_slice(), nested_stage[i].1.as_slice()));
+    }
+}

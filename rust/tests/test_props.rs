@@ -816,3 +816,227 @@ fn committee_stats_model_count_invariance() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Oracle plane: frame codecs + scheduler triggers/backpressure
+// ---------------------------------------------------------------------------
+
+use pal::config::BatchSetting;
+use pal::coordinator::oracle_plane::OracleScheduler;
+use std::time::{Duration, Instant};
+
+#[test]
+fn oracle_batch_frame_bytes_identical_to_predict_batch() {
+    // the dispatch frame reuses the PredictBatch layout byte for byte, and
+    // its decoders accept exactly the same inputs
+    forall(
+        150,
+        |g| {
+            let n = g.usize(0, 8);
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let w = g.usize(0, 12);
+                    g.vec_normal(w)
+                })
+                .collect();
+            let id = g.usize(0, 1 << 20) as u64;
+            (id, rows)
+        },
+        |(id, rows)| {
+            let rb = RowBlock::from_rows(&rows);
+            let mut frame = Vec::new();
+            protocol::encode_oracle_batch_block_into(id, &rb, &mut frame);
+            if frame != protocol::encode_predict_batch(id, &rows) {
+                return false;
+            }
+            match protocol::decode_oracle_batch_views(&frame) {
+                Some((got_id, views)) => {
+                    got_id == id
+                        && views.len() == rows.len()
+                        && views.iter().zip(&rows).all(|(a, b)| *a == b.as_slice())
+                }
+                None => false,
+            }
+        },
+    );
+}
+
+/// `[id_hi, id_lo]` header validity, mirrored from the frame codec.
+fn valid_frame_id(frame: &[f32]) -> bool {
+    let (Some(&hi), Some(&lo)) = (frame.first(), frame.get(1)) else {
+        return false;
+    };
+    hi >= 0.0
+        && lo >= 0.0
+        && hi.fract() == 0.0
+        && lo.fract() == 0.0
+        && (hi as u64) < (1 << 24)
+        && (lo as u64) < (1 << 24)
+}
+
+#[test]
+fn oracle_batch_result_frame_equivalent_to_legacy_per_label_wire() {
+    // one result frame carries exactly the pairs the per-label path would
+    // have shipped as n separate `pack(&[input, label])` messages, and its
+    // packed section is byte-identical to `pack_datapoints` over them
+    forall(
+        150,
+        |g| {
+            let n = g.usize(0, 8);
+            let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    let xw = g.usize(0, 10);
+                    let yw = g.usize(0, 6);
+                    (g.vec_normal(xw), g.vec_normal(yw))
+                })
+                .collect();
+            let id = g.usize(0, 1 << 20) as u64;
+            (id, pairs)
+        },
+        |(id, pairs)| {
+            let inputs: Vec<&[f32]> = pairs.iter().map(|(x, _)| x.as_slice()).collect();
+            let labels =
+                RowBlock::from_rows(&pairs.iter().map(|(_, y)| y.clone()).collect::<Vec<_>>());
+            let mut frame = Vec::new();
+            protocol::encode_oracle_batch_result_into(id, &inputs, &labels, &mut frame);
+            // packed section == legacy datapoint bytes
+            if frame[2..] != codec::pack_datapoints(&pairs)[..] {
+                return false;
+            }
+            // decoded pairs == what n per-label messages would decode to
+            let Some((got_id, view)) = protocol::decode_oracle_batch_result_views(&frame) else {
+                return false;
+            };
+            if got_id != id || view.len() != pairs.len() {
+                return false;
+            }
+            pairs.iter().enumerate().all(|(i, (x, y))| {
+                let legacy = codec::pack(&[x.as_slice(), y.as_slice()]);
+                let parts = codec::unpack_views(&legacy).unwrap();
+                view.pair(i) == (parts[0], parts[1])
+            })
+        },
+    );
+}
+
+#[test]
+fn oracle_batch_result_decode_rejects_exactly_like_datapoint_views() {
+    // truncation / trailing garbage / oversized headers anywhere in the
+    // frame: the frame decoder accepts iff the id header is valid AND the
+    // packed section passes the (already equivalence-tested) pair decoder
+    forall(
+        300,
+        |g| {
+            let n = g.usize(0, 6);
+            let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    let xw = g.usize(0, 8);
+                    let yw = g.usize(0, 4);
+                    (g.vec_normal(xw), g.vec_normal(yw))
+                })
+                .collect();
+            let inputs: Vec<&[f32]> = pairs.iter().map(|(x, _)| x.as_slice()).collect();
+            let labels =
+                RowBlock::from_rows(&pairs.iter().map(|(_, y)| y.clone()).collect::<Vec<_>>());
+            let mut frame = Vec::new();
+            protocol::encode_oracle_batch_result_into(7, &inputs, &labels, &mut frame);
+            mutate_packed(g, frame)
+        },
+        |mutated| {
+            let got = protocol::decode_oracle_batch_result_views(&mutated);
+            let expect = if valid_frame_id(&mutated) {
+                codec::unpack_datapoint_views(&mutated[2..])
+            } else {
+                None
+            };
+            match (got, expect) {
+                (Some((_, view)), Some(pairs)) => {
+                    view.len() == pairs.len()
+                        && (0..view.len()).all(|i| view.pair(i) == pairs[i])
+                }
+                (None, None) => true,
+                _ => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn oracle_scheduler_backpressure_releases_fifo_through_the_buffer() {
+    // the manager's dispatch discipline end to end: queue rows in an
+    // OracleBuffer, pop batches as the scheduler allows — backpressure must
+    // release strictly FIFO, in max_size chunks, never exceeding
+    // max_outstanding per oracle
+    let mut buffer = OracleBuffer::new(None);
+    let mut sched = OracleScheduler::new(
+        &BatchSetting {
+            max_size: 2,
+            max_delay: Duration::from_secs(10),
+            max_outstanding: 1,
+        },
+        1,
+    );
+    let t0 = Instant::now();
+    for i in 0..6 {
+        buffer.push_row(&[i as f32]);
+        sched.note_enqueued(t0);
+    }
+    let mut served: Vec<Vec<f32>> = Vec::new();
+    for _ in 0..3 {
+        let d = sched.try_dispatch(buffer.len(), t0, None).expect("dispatch");
+        assert_eq!(d.take, 2);
+        assert_eq!(d.oracle, 0);
+        for _ in 0..d.take {
+            served.push(buffer.pop_row().unwrap().to_vec());
+        }
+        // the single oracle is saturated until this batch completes
+        assert!(sched.try_dispatch(buffer.len(), t0, None).is_none(), "backpressure");
+        sched.complete(d.id).unwrap();
+    }
+    assert_eq!(
+        served,
+        (0..6).map(|i| vec![i as f32]).collect::<Vec<_>>(),
+        "items must leave the buffer strictly FIFO"
+    );
+    assert!(buffer.is_empty());
+    assert!(sched.try_dispatch(0, t0, None).is_none(), "nothing left to send");
+}
+
+#[test]
+fn oracle_rescore_replacements_route_through_the_next_batch() {
+    // dynamic_orcale_list parity between oracle modes: after a rescore
+    // replaces the buffer, the next batched dispatch carries exactly the
+    // rows the per-label path would pop next, in the same order
+    let mut buffer = OracleBuffer::new(None);
+    let mut sched = OracleScheduler::new(
+        &BatchSetting {
+            max_size: 3,
+            max_delay: Duration::from_secs(10),
+            max_outstanding: 2,
+        },
+        2,
+    );
+    let t0 = Instant::now();
+    for i in 0..4 {
+        buffer.push_row(&[i as f32, 0.5]);
+        sched.note_enqueued(t0);
+    }
+    // rescore: keep rows 3 and 1, most-uncertain first (a typical
+    // adjustment) — the scheduler only resyncs its clock, the buffer is
+    // the single source of row order
+    let drained = buffer.drain_block();
+    let mut adjusted = RowBlock::new();
+    adjusted.push_row(drained.row(3));
+    adjusted.push_row(drained.row(1));
+    buffer.replace_block(&adjusted);
+    sched.sync_queue(buffer.len(), t0);
+
+    // per-label reference order: what pop_row would dispatch
+    let want = vec![vec![3.0f32, 0.5], vec![1.0, 0.5]];
+    let later = t0 + Duration::from_secs(10); // deadline trigger fires
+    let d = sched.try_dispatch(buffer.len(), later, None).expect("size/deadline trigger");
+    assert_eq!(d.take, 2, "deadline flushes the whole adjusted remainder");
+    let got: Vec<Vec<f32>> =
+        (0..d.take).map(|_| buffer.pop_row().unwrap().to_vec()).collect();
+    assert_eq!(got, want, "batched dispatch must follow the rescored order");
+}
