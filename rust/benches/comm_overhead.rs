@@ -10,9 +10,12 @@
 //! shared `Payload` fan-out vs the per-destination clone it replaced,
 //! (f) allocations per item on the decode→reduce path, (g) flat training
 //! plane flush/weight-sync copy volume, (h) oracle-plane green-flow
-//! messages per labeled sample, batched vs per-label (`BENCH_oracle.json`).
+//! messages per labeled sample, batched vs per-label (`BENCH_oracle.json`),
+//! (i) adaptive vs static oracle routing under a heterogeneous-latency
+//! pool (`BENCH_sched.json`).
 //!
 //! Run: `cargo bench --bench comm_overhead`
+//! (append `-- sched-only` for just the scheduler comparison)
 //!
 //! Results are also written machine-readable to `BENCH_comm.json` so the
 //! perf trajectory is tracked across PRs.
@@ -26,7 +29,9 @@ use pal::comm::bus::{Src, World};
 use pal::comm::protocol::{
     decode_predict_batch_result, decode_predict_batch_result_rows, encode_predict_batch_result,
 };
-use pal::config::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
+use pal::config::{
+    AlSetting, BatchSetting, ExchangeMode, OracleMode, SchedPolicy, SchedSetting, StopCriteria,
+};
 use pal::coordinator::selection::{
     committee_std_check, committee_std_check_batch, CommitteeStdUtils, SelectAllUtils,
 };
@@ -475,7 +480,152 @@ fn oracle_messages(mode: OracleMode, labels: u64) -> OracleRun {
     }
 }
 
+/// One heterogeneous-pool labeling run under `policy`: `(labels, wall_s)`.
+///
+/// 4 oracles, one of which costs 4x per label (8 ms vs 2 ms — the paper's
+/// DFT-next-to-xTB shape at bench scale). Everything except `sched_policy`
+/// is identical between the static and adaptive runs, so the labels/sec
+/// delta is purely the routing win: EWMA least-estimated-completion-time
+/// dispatch with per-oracle batch caps starves the slow oracle down to its
+/// fair throughput share and keeps the final batches off it (the static
+/// run's shutdown tail waits on a full-size batch stuck behind the slow
+/// oracle).
+fn sched_run(policy: SchedPolicy, labels: u64) -> (u64, f64) {
+    const GENS: usize = 8;
+    const ORACLES: usize = 4;
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-sched".into(),
+        gene_process: GENS,
+        pred_process: 2,
+        ml_process: 0,
+        orcl_process: ORACLES,
+        committee_size: Some(2),
+        exchange_mode: ExchangeMode::Batched,
+        batch: BatchSetting {
+            max_size: GENS,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        },
+        oracle_mode: OracleMode::Batched,
+        oracle_batch: BatchSetting {
+            max_size: 8,
+            max_delay: Duration::from_millis(1),
+            max_outstanding: 2,
+        },
+        sched: SchedSetting {
+            policy,
+            // routing only: the 4x-slow oracle sits on the slow-streak
+            // threshold (slow_factor default 4.0), so disable streak
+            // eviction to keep the comparison about dispatch, not health
+            slow_factor: 16.0,
+            ..Default::default()
+        },
+        strict_label_budget: true,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(labels),
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let generators = (0..GENS)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(16, Duration::ZERO, u64::MAX, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..ORACLES)
+        .map(|i| {
+            Box::new(move || {
+                let label_cost =
+                    if i == 0 { Duration::from_millis(8) } else { Duration::from_millis(2) };
+                Box::new(SyntheticOracle { label_cost, out_dim: 2 }) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _m: usize| {
+        Box::new(SyntheticModel::new(16, 16, Duration::ZERO, Duration::ZERO, 1, mode))
+            as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(SelectAllUtils { max_per_iter: GENS }) as Box<dyn Utils>);
+    let report = Workflow::new(s)
+        .run(KernelSet { generators, oracles, model, utils })
+        .unwrap();
+    (report.oracle_labels, report.wall.as_secs_f64())
+}
+
 fn main() {
+    // `cargo bench --bench comm_overhead -- sched-only` runs just the
+    // scheduler comparison (the CI perf gate); no args runs everything.
+    let sched_only = std::env::args().any(|a| a == "sched-only");
+    if !sched_only {
+        run_comm_sections();
+    }
+
+    // ---- (i) adaptive vs static routing under a heterogeneous pool ----
+    const SCHED_LABELS: u64 = 240;
+    let (labels_static, wall_static) = sched_run(SchedPolicy::Static, SCHED_LABELS);
+    let (labels_adaptive, wall_adaptive) = sched_run(SchedPolicy::Adaptive, SCHED_LABELS);
+    let lps_static = labels_static as f64 / wall_static.max(1e-9);
+    let lps_adaptive = labels_adaptive as f64 / wall_adaptive.max(1e-9);
+    let speedup = lps_adaptive / lps_static.max(1e-9);
+    let mut rep9 = Report::new(format!(
+        "adaptive dispatch — labels/sec vs static routing \
+         (4 oracles, one 4x slower, {SCHED_LABELS} labels)"
+    ));
+    rep9.push(
+        Row::new("static least-outstanding")
+            .field("labels", labels_static)
+            .f("wall_s", wall_static)
+            .f("labels_per_s", lps_static),
+    );
+    rep9.push(
+        Row::new("adaptive EWMA/ECT")
+            .field("labels", labels_adaptive)
+            .f("wall_s", wall_adaptive)
+            .f("labels_per_s", lps_adaptive)
+            .f("speedup_x", speedup),
+    );
+    rep9.print();
+    println!(
+        "(adaptive routing labels {speedup:.2}x faster than static under the 4x-slow \
+         oracle{})",
+        if speedup >= 1.3 { " — >= 1.3x target met" } else { " — BELOW the 1.3x target" }
+    );
+    let sched_json = obj(vec![
+        ("bench", Value::Str("sched_throughput".into())),
+        ("oracles", Value::Num(4.0)),
+        ("slow_oracle_factor", Value::Num(4.0)),
+        ("labels", Value::Num(SCHED_LABELS as f64)),
+        (
+            "static",
+            obj(vec![
+                ("labels", Value::Num(labels_static as f64)),
+                ("wall_s", Value::Num(wall_static)),
+                ("labels_per_s", Value::Num(lps_static)),
+            ]),
+        ),
+        (
+            "adaptive",
+            obj(vec![
+                ("labels", Value::Num(labels_adaptive as f64)),
+                ("wall_s", Value::Num(wall_adaptive)),
+                ("labels_per_s", Value::Num(lps_adaptive)),
+            ]),
+        ),
+        ("speedup_x", Value::Num(speedup)),
+        ("target_met", Value::Bool(speedup >= 1.3)),
+    ]);
+    match std::fs::write("BENCH_sched.json", pal::json::to_string(&sched_json)) {
+        Ok(()) => println!("wrote BENCH_sched.json"),
+        Err(e) => eprintln!("failed to write BENCH_sched.json: {e}"),
+    }
+}
+
+fn run_comm_sections() {
     let mut json_sections: Vec<(&str, Value)> = vec![("bench", Value::Str("comm_overhead".into()))];
 
     // ---- (a) raw bus round-trip vs payload size ----

@@ -4,5 +4,7 @@
 mod settings;
 pub mod topology;
 
-pub use settings::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
+pub use settings::{
+    AlSetting, BatchSetting, ExchangeMode, OracleMode, SchedPolicy, SchedSetting, StopCriteria,
+};
 pub use topology::Topology;

@@ -98,6 +98,87 @@ impl Default for BatchSetting {
     }
 }
 
+/// Routing policy for the shared dispatch core
+/// ([`crate::coordinator::dispatch`]) used by both the batched exchange
+/// (prediction shards) and the batched oracle plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// PR-5 behavior, bit-for-bit: round-robin with least-outstanding
+    /// fallback on the prediction plane, least-outstanding (lowest-index
+    /// ties) on the oracle plane. Full batches, no health tracking. The
+    /// wire- and determinism-default.
+    Static,
+    /// Latency-aware: per-endpoint EWMA round-trip cost feeds
+    /// least-estimated-completion-time routing (deterministic lowest-index
+    /// ties), slow endpoints receive proportionally smaller batches, and
+    /// endpoints that time out or deliver `evict_after` consecutive slow
+    /// responses move to a rejected set (in-flight work requeued) until
+    /// they recover.
+    Adaptive,
+}
+
+/// Knobs for [`SchedPolicy::Adaptive`] plus the latency-scaled shutdown
+/// drain (`sched_*` JSON keys). All fields are inert under
+/// [`SchedPolicy::Static`] except `drain_factor`, which scales the
+/// Manager's shutdown drain bound with observed p95 oracle latency in both
+/// policies (the drain only waits longer, never ingests differently, so
+/// static-policy label streams stay bit-identical).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedSetting {
+    /// Routing policy (`sched_policy`: "static" | "adaptive").
+    pub policy: SchedPolicy,
+    /// EWMA smoothing for per-item round-trip cost (`sched_ewma_alpha`,
+    /// in (0, 1]; 1 = latest sample only).
+    pub ewma_alpha: f64,
+    /// A completion counts as *slow* when its per-item cost exceeds
+    /// `slow_factor ×` the fastest peer's EWMA (`sched_slow_factor`).
+    pub slow_factor: f64,
+    /// Consecutive slow completions before eviction (`sched_evict_after`).
+    pub evict_after: u32,
+    /// In-flight batch age that triggers eviction of its endpoint
+    /// (`sched_timeout_ms`; absent or 0 disables timeout eviction).
+    pub timeout: Option<Duration>,
+    /// How long an evicted endpoint stays rejected before it may be routed
+    /// to again (`sched_rejoin_ms`). A late reply arriving earlier also
+    /// readmits it.
+    pub rejoin_backoff: Duration,
+    /// Shutdown drain bound = `max(300 ms, drain_factor × p95 RTT)`
+    /// (`sched_drain_factor`).
+    pub drain_factor: f64,
+}
+
+impl Default for SchedSetting {
+    fn default() -> Self {
+        SchedSetting {
+            policy: SchedPolicy::Static,
+            ewma_alpha: 0.3,
+            slow_factor: 4.0,
+            evict_after: 3,
+            timeout: None,
+            rejoin_backoff: Duration::from_millis(500),
+            drain_factor: 3.0,
+        }
+    }
+}
+
+impl SchedSetting {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            bail!("sched_ewma_alpha must be in (0, 1] (got {})", self.ewma_alpha);
+        }
+        if !(self.slow_factor >= 1.0) {
+            bail!("sched_slow_factor must be >= 1 (got {})", self.slow_factor);
+        }
+        if self.evict_after == 0 {
+            bail!("sched_evict_after must be >= 1");
+        }
+        if !(self.drain_factor >= 1.0) {
+            bail!("sched_drain_factor must be >= 1 (got {})", self.drain_factor);
+        }
+        Ok(())
+    }
+}
+
 /// Mirror of the paper's `AL_SETTING` (SI §S3) plus reproduction-specific
 /// knobs. Field names follow the paper where a counterpart exists.
 #[derive(Debug, Clone)]
@@ -148,6 +229,9 @@ pub struct AlSetting {
     /// Micro-batching knobs for the oracle plane (used by
     /// [`OracleMode::Batched`]).
     pub oracle_batch: BatchSetting,
+    /// Dispatch-core routing policy and adaptive knobs (`sched_*` keys),
+    /// shared by the batched exchange and the batched oracle plane.
+    pub sched: SchedSetting,
     /// Committee members per prediction shard. `None` = all prediction
     /// ranks form one shard (the paper's layout). In batched mode,
     /// `pred_process / committee_size` shards serve batches concurrently,
@@ -185,6 +269,7 @@ impl Default for AlSetting {
             batch: BatchSetting::default(),
             oracle_mode: OracleMode::PerLabel,
             oracle_batch: BatchSetting::default(),
+            sched: SchedSetting::default(),
             committee_size: None,
             strict_label_budget: false,
         }
@@ -280,6 +365,7 @@ impl AlSetting {
         if self.ml_process > 0 && self.retrain_size == 0 {
             bail!("retrain_size must be >= 1 when training is enabled");
         }
+        self.sched.validate()?;
         if let Some(tpn) = &self.task_per_node {
             let total: usize = tpn.iter().sum();
             let want = self.pred_process + self.orcl_process + self.gene_process + self.ml_process + 2;
@@ -385,6 +471,32 @@ impl AlSetting {
         if let Some(x) = v.get("oracle_batch_max_outstanding").as_usize() {
             s.oracle_batch.max_outstanding = x;
         }
+        if let Some(x) = v.get("sched_policy").as_str() {
+            s.sched.policy = match x {
+                "static" => SchedPolicy::Static,
+                "adaptive" => SchedPolicy::Adaptive,
+                other => bail!("unknown sched_policy: {other} (static|adaptive)"),
+            };
+        }
+        if let Some(x) = v.get("sched_ewma_alpha").as_f64() {
+            s.sched.ewma_alpha = x;
+        }
+        if let Some(x) = v.get("sched_slow_factor").as_f64() {
+            s.sched.slow_factor = x;
+        }
+        if let Some(x) = v.get("sched_evict_after").as_usize() {
+            s.sched.evict_after = x as u32;
+        }
+        if let Some(x) = v.get("sched_timeout_ms").as_f64() {
+            let d = non_negative_secs("sched_timeout_ms", x / 1e3)?;
+            s.sched.timeout = if d.is_zero() { None } else { Some(d) };
+        }
+        if let Some(x) = v.get("sched_rejoin_ms").as_f64() {
+            s.sched.rejoin_backoff = non_negative_secs("sched_rejoin_ms", x / 1e3)?;
+        }
+        if let Some(x) = v.get("sched_drain_factor").as_f64() {
+            s.sched.drain_factor = x;
+        }
         if let Some(x) = v.get("committee_size").as_usize() {
             s.committee_size = Some(x);
         }
@@ -448,6 +560,28 @@ impl AlSetting {
                 "oracle_batch_max_outstanding",
                 Value::Num(self.oracle_batch.max_outstanding as f64),
             ),
+            (
+                "sched_policy",
+                Value::Str(
+                    match self.sched.policy {
+                        SchedPolicy::Static => "static",
+                        SchedPolicy::Adaptive => "adaptive",
+                    }
+                    .into(),
+                ),
+            ),
+            ("sched_ewma_alpha", Value::Num(self.sched.ewma_alpha)),
+            ("sched_slow_factor", Value::Num(self.sched.slow_factor)),
+            ("sched_evict_after", Value::Num(self.sched.evict_after as f64)),
+            (
+                "sched_timeout_ms",
+                Value::Num(self.sched.timeout.map_or(0.0, |d| d.as_secs_f64() * 1e3)),
+            ),
+            (
+                "sched_rejoin_ms",
+                Value::Num(self.sched.rejoin_backoff.as_secs_f64() * 1e3),
+            ),
+            ("sched_drain_factor", Value::Num(self.sched.drain_factor)),
             ("committee_size", Value::Num(self.committee() as f64)),
             ("strict_label_budget", Value::Bool(self.strict_label_budget)),
         ])
@@ -510,6 +644,78 @@ mod tests {
         .unwrap();
         assert!(s.dynamic_oracle_list);
         assert_eq!(s.retrain_size, 5);
+    }
+
+    #[test]
+    fn json_accepts_correct_oracle_list_spelling_and_it_wins_on_conflict() {
+        // the correctly spelled key alone works
+        let s = AlSetting::from_json(r#"{"dynamic_oracle_list": true}"#).unwrap();
+        assert!(s.dynamic_oracle_list);
+        // on conflict, the correct spelling wins over the paper's typo
+        let s = AlSetting::from_json(
+            r#"{"dynamic_orcale_list": true, "dynamic_oracle_list": false}"#,
+        )
+        .unwrap();
+        assert!(!s.dynamic_oracle_list);
+        let s = AlSetting::from_json(
+            r#"{"dynamic_orcale_list": false, "dynamic_oracle_list": true}"#,
+        )
+        .unwrap();
+        assert!(s.dynamic_oracle_list);
+        // serialization keeps emitting the paper key for round-trip
+        // compatibility with SI §S3 configs, and the value survives
+        let mut s = AlSetting::default();
+        s.dynamic_oracle_list = true;
+        let text = json::to_string(&s.to_json());
+        assert!(text.contains("dynamic_orcale_list"), "paper key emitted: {text}");
+        assert!(!text.contains("\"dynamic_oracle_list\""), "only the paper key: {text}");
+        assert!(AlSetting::from_json(&text).unwrap().dynamic_oracle_list);
+    }
+
+    #[test]
+    fn sched_knobs_validated_and_roundtrip() {
+        // defaults: static policy, valid
+        let s = AlSetting::default();
+        assert_eq!(s.sched.policy, SchedPolicy::Static);
+        s.validate().unwrap();
+
+        let s = AlSetting::from_json(
+            r#"{"sched_policy": "adaptive", "sched_ewma_alpha": 0.5,
+                "sched_slow_factor": 3, "sched_evict_after": 2,
+                "sched_timeout_ms": 250, "sched_rejoin_ms": 1000,
+                "sched_drain_factor": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(s.sched.policy, SchedPolicy::Adaptive);
+        assert_eq!(s.sched.ewma_alpha, 0.5);
+        assert_eq!(s.sched.slow_factor, 3.0);
+        assert_eq!(s.sched.evict_after, 2);
+        assert_eq!(s.sched.timeout, Some(Duration::from_millis(250)));
+        assert_eq!(s.sched.rejoin_backoff, Duration::from_secs(1));
+        assert_eq!(s.sched.drain_factor, 2.0);
+        let text = json::to_string(&s.to_json());
+        let s2 = AlSetting::from_json(&text).unwrap();
+        assert_eq!(s2.sched, s.sched);
+
+        // timeout 0 = disabled, and survives a round-trip as such
+        let s = AlSetting::from_json(r#"{"sched_timeout_ms": 0}"#).unwrap();
+        assert_eq!(s.sched.timeout, None);
+        let s2 = AlSetting::from_json(&json::to_string(&s.to_json())).unwrap();
+        assert_eq!(s2.sched.timeout, None);
+
+        // bad knobs are clean errors
+        for bad in [
+            r#"{"sched_policy": "bogus"}"#,
+            r#"{"sched_ewma_alpha": 0}"#,
+            r#"{"sched_ewma_alpha": 1.5}"#,
+            r#"{"sched_slow_factor": 0.5}"#,
+            r#"{"sched_evict_after": 0}"#,
+            r#"{"sched_timeout_ms": -1}"#,
+            r#"{"sched_rejoin_ms": -1}"#,
+            r#"{"sched_drain_factor": 0.2}"#,
+        ] {
+            assert!(AlSetting::from_json(bad).is_err(), "{bad} must be a clean error");
+        }
     }
 
     #[test]

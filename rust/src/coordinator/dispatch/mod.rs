@@ -1,0 +1,653 @@
+//! Shared dispatch core: the trigger/outstanding/backpressure state machine
+//! behind both exchange planes, generic over a routing [`Policy`].
+//!
+//! PR 1 (batched prediction exchange) and PR 5 (batched oracle plane) each
+//! grew their own copy of the same micro-batching discipline — size/deadline
+//! triggers, per-endpoint outstanding counts, backpressure at
+//! `max_outstanding`, sequential batch ids. This module extracts that state
+//! machine once and grows the latency-aware behavior PAL's heterogeneous
+//! pools need (DFT hours next to xTB seconds — SI §S2.2) in a single place:
+//!
+//! * **Static policies** ([`policy::LeastOutstanding`],
+//!   [`policy::RoundRobin`]) reproduce the old schedulers bit-for-bit —
+//!   the wire- and determinism-default (`sched_policy = "static"`;
+//!   equivalence pinned by `rust/tests/test_dispatch_core.rs`).
+//! * **EWMA latency tracking** — [`DispatchCore::complete`] timestamps give
+//!   a per-endpoint EWMA of per-item round-trip cost; the adaptive policy
+//!   ([`policy::AdaptiveEwma`]) routes each batch to the endpoint with the
+//!   least estimated completion time (deterministic lowest-index ties) and
+//!   shrinks batches for slow endpoints (proportional to the fastest peer's
+//!   EWMA) so a slow oracle chews small bites instead of parking a full
+//!   batch behind one long calculation.
+//! * **Health/eviction** — an endpoint whose in-flight batch exceeds
+//!   `sched_timeout_ms`, or that delivers `sched_evict_after` consecutive
+//!   slow completions (`> sched_slow_factor ×` the fastest peer), moves to
+//!   a *rejected* set (the active/rejected endpoint-group idiom of
+//!   agentgateway's load balancer). [`DispatchCore::check_health`] hands its
+//!   in-flight work back to the caller for requeue/reroute; the endpoint
+//!   rejoins after `sched_rejoin_ms`, or immediately when a late reply
+//!   proves it recovered. The last active endpoint is never evicted.
+//! * **Latency-scaled drain** — the core keeps a
+//!   [`crate::telemetry::LatencyWindow`] of observed round-trips;
+//!   [`DispatchCore::drain_bound`] scales the Manager's shutdown drain with
+//!   p95 RTT instead of a fixed 300 ms, so labels already paid for are not
+//!   discarded just because the oracle is slow.
+//!
+//! The core is clock-free and queue-free: callers inject `now`, the queue
+//! length, and the queue-head age, so every trigger/eviction path is
+//! unit-testable without threads or sleeps, and the two facades
+//! ([`crate::coordinator::exchange::BatchScheduler`],
+//! [`crate::coordinator::oracle_plane::OracleScheduler`]) keep owning their
+//! queues (flat [`crate::data::batch::RowQueue`] / external `OracleBuffer`).
+
+pub mod policy;
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::config::{BatchSetting, SchedPolicy, SchedSetting};
+use crate::telemetry::LatencyWindow;
+
+pub use policy::{AdaptiveEwma, BuiltinPolicy, LeastOutstanding, Policy, PoolView, RoundRobin};
+
+/// Batching + adaptive knobs, flattened from [`BatchSetting`] and
+/// [`SchedSetting`].
+#[derive(Debug, Clone)]
+pub struct DispatchConfig {
+    pub max_size: usize,
+    pub max_delay: Duration,
+    pub max_outstanding: usize,
+    /// Health tracking + eviction on (i.e. [`SchedPolicy::Adaptive`]).
+    pub adaptive: bool,
+    pub ewma_alpha: f64,
+    pub slow_factor: f64,
+    pub evict_after: u32,
+    pub timeout: Option<Duration>,
+    pub rejoin_backoff: Duration,
+    pub drain_factor: f64,
+}
+
+impl DispatchConfig {
+    pub fn new(batch: &BatchSetting, sched: &SchedSetting) -> Self {
+        DispatchConfig {
+            max_size: batch.max_size.max(1),
+            max_delay: batch.max_delay,
+            max_outstanding: batch.max_outstanding.max(1),
+            adaptive: sched.policy == SchedPolicy::Adaptive,
+            ewma_alpha: sched.ewma_alpha.clamp(f64::MIN_POSITIVE, 1.0),
+            slow_factor: sched.slow_factor.max(1.0),
+            evict_after: sched.evict_after.max(1),
+            timeout: sched.timeout,
+            rejoin_backoff: sched.rejoin_backoff,
+            drain_factor: sched.drain_factor.max(1.0),
+        }
+    }
+}
+
+/// Per-endpoint load + health state, readable by policies through
+/// [`PoolView`].
+#[derive(Debug, Clone, Default)]
+pub struct EndpointState {
+    /// Batches in flight.
+    pub outstanding: usize,
+    /// Items in flight (the adaptive policy's cost unit).
+    pub outstanding_items: usize,
+    /// EWMA of per-item round-trip cost, ms (`None` until first completion).
+    pub ewma_item_ms: Option<f64>,
+    /// Consecutive completions slower than `slow_factor ×` the fastest peer.
+    consecutive_slow: u32,
+    /// Rejected until this instant (`None` = never evicted). A past instant
+    /// means the endpoint is back on probation: routable again, but one
+    /// more timeout/slow streak re-evicts it.
+    rejected_until: Option<Instant>,
+}
+
+impl EndpointState {
+    /// Routable at `now` (never evicted, or its backoff elapsed).
+    pub fn active(&self, now: Instant) -> bool {
+        self.rejected_until.map_or(true, |t| now >= t)
+    }
+
+    fn is_rejected(&self, now: Instant) -> bool {
+        !self.active(now)
+    }
+}
+
+/// A dispatch decision: send batch `id` with `take` queue-head items to
+/// `endpoint`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch {
+    pub id: u64,
+    pub endpoint: usize,
+    pub take: usize,
+}
+
+/// A completed round-trip (returned by [`DispatchCore::complete`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    pub endpoint: usize,
+    pub items: usize,
+    pub rtt: Duration,
+}
+
+/// In-flight work evicted from an unhealthy endpoint; the caller owns the
+/// items and must requeue them (the core has already forgotten the batch —
+/// a late reply under this `id` counts as an orphan *and* readmits the
+/// endpoint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Eviction {
+    pub id: u64,
+    pub endpoint: usize,
+    pub items: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct InFlightRec {
+    endpoint: usize,
+    items: usize,
+    sent_at: Instant,
+}
+
+/// The shared scheduler state machine. See the module docs for semantics.
+#[derive(Debug)]
+pub struct DispatchCore<P: Policy> {
+    cfg: DispatchConfig,
+    policy: P,
+    eps: Vec<EndpointState>,
+    inflight: HashMap<u64, InFlightRec>,
+    /// Evicted batches by id: late replies are recognized as recovery
+    /// evidence (and orphans) instead of unknown ids.
+    evicted: HashMap<u64, InFlightRec>,
+    next_id: u64,
+    rtts: LatencyWindow,
+}
+
+impl<P: Policy> DispatchCore<P> {
+    pub fn new(cfg: DispatchConfig, policy: P, n_endpoints: usize) -> Self {
+        DispatchCore {
+            cfg,
+            policy,
+            eps: vec![EndpointState::default(); n_endpoints.max(1)],
+            inflight: HashMap::new(),
+            evicted: HashMap::new(),
+            next_id: 0,
+            rtts: LatencyWindow::default(),
+        }
+    }
+
+    pub fn config(&self) -> &DispatchConfig {
+        &self.cfg
+    }
+
+    pub fn n_endpoints(&self) -> usize {
+        self.eps.len()
+    }
+
+    pub fn endpoint(&self, e: usize) -> &EndpointState {
+        &self.eps[e]
+    }
+
+    /// Batches in flight per endpoint.
+    pub fn outstanding(&self, e: usize) -> usize {
+        self.eps[e].outstanding
+    }
+
+    /// Batches in flight across the pool.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Items in flight across the pool.
+    pub fn in_flight_items(&self) -> usize {
+        self.inflight.values().map(|f| f.items).sum()
+    }
+
+    /// Whether a dispatch trigger (size or deadline) has fired for a queue
+    /// of `queue_len` rows whose head has been waiting since `head_since`.
+    pub fn triggered(&self, queue_len: usize, head_since: Option<Instant>, now: Instant) -> bool {
+        if queue_len == 0 {
+            return false;
+        }
+        if queue_len >= self.cfg.max_size {
+            return true; // size trigger preempts the deadline
+        }
+        head_since
+            .map(|t| now.duration_since(t) >= self.cfg.max_delay)
+            .unwrap_or(false)
+    }
+
+    /// Routable-endpoint mask. Safety net: if every endpoint is rejected
+    /// (unreachable through [`DispatchCore::check_health`], which never
+    /// evicts the last active one), all are treated as routable rather than
+    /// deadlocking the queue.
+    fn active_mask(&self, now: Instant) -> Vec<bool> {
+        let mut mask: Vec<bool> = self.eps.iter().map(|e| e.active(now)).collect();
+        if !mask.iter().any(|&a| a) {
+            mask.iter_mut().for_each(|a| *a = true);
+        }
+        mask
+    }
+
+    /// Decide one dispatch for a queue of `queue_len` rows, bounded by
+    /// `budget` items (`None` = unbounded). On `Some`, the caller must pop
+    /// exactly `take` rows from the queue head, encode them under `id`, and
+    /// send to `endpoint` — the core has already recorded the batch as in
+    /// flight.
+    pub fn try_dispatch(
+        &mut self,
+        queue_len: usize,
+        head_since: Option<Instant>,
+        now: Instant,
+        budget: Option<u64>,
+    ) -> Option<Dispatch> {
+        if budget == Some(0) {
+            return None;
+        }
+        if !self.triggered(queue_len, head_since, now) {
+            return None;
+        }
+        let active = self.active_mask(now);
+        let view = PoolView {
+            eps: &self.eps,
+            active: &active,
+            max_size: self.cfg.max_size,
+            max_outstanding: self.cfg.max_outstanding,
+        };
+        let endpoint = self.policy.route(&view)?;
+        let cap = self.policy.batch_cap(endpoint, &view).clamp(1, self.cfg.max_size);
+        let mut take = queue_len.min(cap);
+        if let Some(b) = budget {
+            take = take.min(b as usize);
+        }
+        debug_assert!(take > 0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.eps[endpoint].outstanding += 1;
+        self.eps[endpoint].outstanding_items += take;
+        self.inflight.insert(id, InFlightRec { endpoint, items: take, sent_at: now });
+        Some(Dispatch { id, endpoint, take })
+    }
+
+    /// A batch's result arrived. Returns the completed round-trip, or
+    /// `None` for an orphan (unknown/duplicate id, or a batch already
+    /// evicted and requeued — the caller should still ingest the labels,
+    /// they were paid for). A late reply from an evicted batch readmits its
+    /// endpoint immediately: the reply is proof of life.
+    pub fn complete(&mut self, id: u64, now: Instant) -> Option<Completion> {
+        if let Some(rec) = self.inflight.remove(&id) {
+            let e = rec.endpoint;
+            self.eps[e].outstanding = self.eps[e].outstanding.saturating_sub(1);
+            self.eps[e].outstanding_items = self.eps[e].outstanding_items.saturating_sub(rec.items);
+            let rtt = now.saturating_duration_since(rec.sent_at);
+            self.rtts.record(rtt);
+            if self.cfg.adaptive {
+                self.observe(e, rtt, rec.items, now);
+            }
+            return Some(Completion { endpoint: e, items: rec.items, rtt });
+        }
+        if let Some(rec) = self.evicted.remove(&id) {
+            let e = rec.endpoint;
+            let rtt = now.saturating_duration_since(rec.sent_at);
+            self.rtts.record(rtt);
+            if self.cfg.adaptive {
+                // recovery: rejoin the active group (probation), and feed
+                // the observed cost into the EWMA so routing stays honest
+                // about how slow the comeback actually was
+                self.eps[e].rejected_until = None;
+                self.eps[e].consecutive_slow = 0;
+                self.update_ewma(e, rtt, rec.items);
+            }
+        }
+        None
+    }
+
+    /// EWMA + slow-streak bookkeeping for one observed round-trip.
+    fn observe(&mut self, e: usize, rtt: Duration, items: usize, now: Instant) {
+        let per_item_ms = rtt.as_secs_f64() * 1e3 / items.max(1) as f64;
+        // slow = markedly slower than the fastest *other* endpoint's EWMA
+        let fastest_peer = self
+            .eps
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != e)
+            .filter_map(|(_, s)| s.ewma_item_ms)
+            .fold(None::<f64>, |acc, x| Some(acc.map_or(x, |a| a.min(x))));
+        match fastest_peer {
+            Some(f) if f > 0.0 && per_item_ms > self.cfg.slow_factor * f => {
+                self.eps[e].consecutive_slow += 1;
+                if self.eps[e].consecutive_slow >= self.cfg.evict_after {
+                    self.reject(e, now);
+                }
+            }
+            Some(_) => self.eps[e].consecutive_slow = 0,
+            None => {}
+        }
+        self.update_ewma(e, rtt, items);
+    }
+
+    fn update_ewma(&mut self, e: usize, rtt: Duration, items: usize) {
+        let sample = rtt.as_secs_f64() * 1e3 / items.max(1) as f64;
+        let a = self.cfg.ewma_alpha;
+        self.eps[e].ewma_item_ms = Some(match self.eps[e].ewma_item_ms {
+            Some(prev) => a * sample + (1.0 - a) * prev,
+            None => sample,
+        });
+    }
+
+    /// Move `e` to the rejected group for `rejoin_backoff` — unless it is
+    /// the last active endpoint (someone has to serve the queue).
+    fn reject(&mut self, e: usize, now: Instant) -> bool {
+        let other_active = (0..self.eps.len()).any(|i| i != e && self.eps[i].active(now));
+        if !other_active {
+            return false;
+        }
+        self.eps[e].rejected_until = Some(now + self.cfg.rejoin_backoff);
+        self.eps[e].consecutive_slow = 0;
+        true
+    }
+
+    /// Timeout-evict endpoints with over-age in-flight batches and collect
+    /// every in-flight batch parked on a rejected endpoint for requeue
+    /// (id-ordered — deterministic requeue order). No-op under the static
+    /// policy. The caller must re-enqueue each eviction's items; the core
+    /// keeps the id so a late reply is recognized as recovery.
+    pub fn check_health(&mut self, now: Instant) -> Vec<Eviction> {
+        if !self.cfg.adaptive {
+            return Vec::new();
+        }
+        if let Some(timeout) = self.cfg.timeout {
+            let mut stale: Vec<usize> = self
+                .inflight
+                .values()
+                .filter(|r| now.saturating_duration_since(r.sent_at) >= timeout)
+                .map(|r| r.endpoint)
+                .collect();
+            // index order, not map order: deterministic when several
+            // endpoints go stale at once (and the last-active guard then
+            // spares the highest-indexed ones)
+            stale.sort_unstable();
+            stale.dedup();
+            for e in stale {
+                if self.eps[e].active(now) {
+                    self.reject(e, now);
+                }
+            }
+        }
+        let mut out: Vec<Eviction> = self
+            .inflight
+            .iter()
+            .filter(|(_, r)| self.eps[r.endpoint].is_rejected(now))
+            .map(|(&id, r)| Eviction { id, endpoint: r.endpoint, items: r.items })
+            .collect();
+        out.sort_by_key(|ev| ev.id);
+        for ev in &out {
+            let rec = self.inflight.remove(&ev.id).expect("collected above");
+            let e = rec.endpoint;
+            self.eps[e].outstanding = self.eps[e].outstanding.saturating_sub(1);
+            self.eps[e].outstanding_items = self.eps[e].outstanding_items.saturating_sub(rec.items);
+            self.evicted.insert(ev.id, rec);
+        }
+        out
+    }
+
+    /// p95 of observed round-trips (completions, including late replies).
+    pub fn rtt_p95(&self) -> Option<Duration> {
+        self.rtts.p95()
+    }
+
+    /// Shutdown drain bound: `max(base, drain_factor × p95 RTT)`. The drain
+    /// only ever waits *longer* than the fixed base, never ingests
+    /// differently, so static-policy label streams are unchanged.
+    pub fn drain_bound(&self, base: Duration) -> Duration {
+        scaled_drain_bound(self.rtts.p95(), self.cfg.drain_factor, base)
+    }
+}
+
+/// `max(base, factor × p95)` — shared by the batched core and the Manager's
+/// per-label path (which tracks its own RTT window).
+pub fn scaled_drain_bound(p95: Option<Duration>, factor: f64, base: Duration) -> Duration {
+    match p95 {
+        Some(p) => base.max(p.mul_f64(factor.max(1.0))),
+        None => base,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Adaptive-policy semantics (EWMA routing, adaptive batch caps,
+    //! eviction/recovery, drain scaling). Static-policy equivalence with
+    //! the pre-extraction schedulers is pinned in
+    //! `rust/tests/test_dispatch_core.rs`; the facades' trigger semantics
+    //! in `exchange.rs` / `oracle_plane.rs`.
+    use super::*;
+
+    fn cfg(max_size: usize, max_outstanding: usize, sched: &SchedSetting) -> DispatchConfig {
+        DispatchConfig::new(
+            &BatchSetting {
+                max_size,
+                max_delay: Duration::from_millis(1),
+                max_outstanding,
+            },
+            sched,
+        )
+    }
+
+    fn adaptive() -> SchedSetting {
+        SchedSetting { policy: SchedPolicy::Adaptive, ..Default::default() }
+    }
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    /// Dispatch + complete one batch with a synthetic RTT.
+    fn round_trip(
+        core: &mut DispatchCore<BuiltinPolicy>,
+        queue: usize,
+        now: Instant,
+        rtt: Duration,
+    ) -> (Dispatch, Instant) {
+        let d = core.try_dispatch(queue, Some(now), now, None).expect("dispatch");
+        let done = now + rtt;
+        core.complete(d.id, done).expect("completion");
+        (d, done)
+    }
+
+    #[test]
+    fn unexplored_endpoints_are_probed_first() {
+        let mut core =
+            DispatchCore::new(cfg(4, 2, &adaptive()), BuiltinPolicy::adaptive(), 3);
+        let t0 = Instant::now();
+        let picks: Vec<usize> = (0..3)
+            .map(|_| core.try_dispatch(8, Some(t0), t0, None).unwrap().endpoint)
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2], "probe every endpoint before trusting EWMAs");
+    }
+
+    #[test]
+    fn ewma_routing_prefers_the_faster_endpoint() {
+        let mut core =
+            DispatchCore::new(cfg(4, 4, &adaptive()), BuiltinPolicy::adaptive(), 2);
+        let t0 = Instant::now();
+        // probe both: endpoint 0 is 8×, endpoint 1 is 1× per item
+        let d0 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        let d1 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        assert_eq!((d0.endpoint, d1.endpoint), (0, 1));
+        core.complete(d0.id, t0 + ms(32)).unwrap(); // 8 ms/item
+        core.complete(d1.id, t0 + ms(4)).unwrap(); // 1 ms/item
+        // both idle: the fast endpoint wins the next several batches
+        let d = core.try_dispatch(4, Some(t0), t0 + ms(40), None).unwrap();
+        assert_eq!(d.endpoint, 1);
+        // pile work on the fast one until the slow one's ECT wins
+        let mut routed_to_slow = false;
+        for _ in 0..8 {
+            let d = core.try_dispatch(4, Some(t0), t0 + ms(40), None).unwrap();
+            if d.endpoint == 0 {
+                routed_to_slow = true;
+                break;
+            }
+        }
+        assert!(routed_to_slow, "a loaded fast endpoint eventually loses to an idle slow one");
+    }
+
+    #[test]
+    fn slow_endpoints_get_smaller_batches() {
+        let mut core =
+            DispatchCore::new(cfg(8, 4, &adaptive()), BuiltinPolicy::adaptive(), 2);
+        let t0 = Instant::now();
+        let d0 = core.try_dispatch(8, Some(t0), t0, None).unwrap();
+        let d1 = core.try_dispatch(8, Some(t0), t0, None).unwrap();
+        core.complete(d0.id, t0 + ms(8 * 8)).unwrap(); // endpoint 0: 8 ms/item
+        core.complete(d1.id, t0 + ms(8)).unwrap(); // endpoint 1: 1 ms/item
+        // force routing to the slow endpoint by saturating the fast one
+        for _ in 0..4 {
+            let d = core.try_dispatch(8, Some(t0), t0 + ms(70), None).unwrap();
+            if d.endpoint == 0 {
+                assert!(
+                    d.take <= 2,
+                    "4×-slower endpoint gets ≤ max_size × (1/4)-ish batches, got {}",
+                    d.take
+                );
+                return;
+            }
+            assert_eq!(d.take, 8, "fast endpoint keeps full batches");
+        }
+        panic!("slow endpoint was never routed to");
+    }
+
+    #[test]
+    fn timeout_evicts_and_requeues_in_flight_work() {
+        let sched = SchedSetting {
+            timeout: Some(ms(50)),
+            rejoin_backoff: ms(1_000),
+            ..adaptive()
+        };
+        let mut core = DispatchCore::new(cfg(4, 2, &sched), BuiltinPolicy::adaptive(), 2);
+        let t0 = Instant::now();
+        let d0 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        let d1 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        assert_eq!((d0.endpoint, d1.endpoint), (0, 1));
+        core.complete(d1.id, t0 + ms(10)).unwrap();
+        // endpoint 0's batch ages past the timeout → evicted with its work
+        assert!(core.check_health(t0 + ms(49)).is_empty(), "not stale yet");
+        let evs = core.check_health(t0 + ms(50));
+        assert_eq!(evs, vec![Eviction { id: d0.id, endpoint: 0, items: 4 }]);
+        assert_eq!(core.in_flight(), 0);
+        assert_eq!(core.outstanding(0), 0, "evicted work no longer counts as outstanding");
+        // rejected: routing skips endpoint 0 until the backoff elapses
+        let d = core.try_dispatch(4, Some(t0), t0 + ms(60), None).unwrap();
+        assert_eq!(d.endpoint, 1);
+        // …then it rejoins on probation
+        core.complete(d.id, t0 + ms(70)).unwrap();
+        let d = core.try_dispatch(4, Some(t0), t0 + ms(1_100), None).unwrap();
+        assert_eq!(d.endpoint, 0, "rejoined after backoff");
+    }
+
+    #[test]
+    fn late_reply_from_evicted_batch_is_orphan_and_readmits() {
+        let sched = SchedSetting {
+            timeout: Some(ms(50)),
+            rejoin_backoff: ms(60_000),
+            ..adaptive()
+        };
+        let mut core = DispatchCore::new(cfg(4, 2, &sched), BuiltinPolicy::adaptive(), 2);
+        let t0 = Instant::now();
+        let d0 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        assert_eq!(core.check_health(t0 + ms(50)), vec![Eviction {
+            id: d0.id,
+            endpoint: 0,
+            items: 4
+        }]);
+        // long backoff: still rejected…
+        let d = core.try_dispatch(4, Some(t0), t0 + ms(100), None).unwrap();
+        assert_eq!(d.endpoint, 1);
+        // …until the late reply lands: orphan for accounting, but recovery
+        assert_eq!(core.complete(d0.id, t0 + ms(200)), None);
+        core.complete(d.id, t0 + ms(200)).unwrap();
+        assert!(core.endpoint(0).active(t0 + ms(200)), "late reply readmits");
+        assert_eq!(core.complete(d0.id, t0 + ms(201)), None, "evicted id drops after reuse");
+    }
+
+    #[test]
+    fn last_active_endpoint_is_never_evicted() {
+        let sched = SchedSetting { timeout: Some(ms(10)), ..adaptive() };
+        let mut core = DispatchCore::new(cfg(4, 2, &sched), BuiltinPolicy::adaptive(), 2);
+        let t0 = Instant::now();
+        let d0 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        let d1 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        // both time out: only one may be evicted, and eviction scans
+        // endpoints in index order, so endpoint 0 goes and 1 survives
+        let evs = core.check_health(t0 + ms(20));
+        assert_eq!(evs, vec![Eviction { id: d0.id, endpoint: 0, items: 4 }]);
+        assert!(core.endpoint(1).active(t0 + ms(20)));
+        assert_eq!(core.in_flight(), 1, "survivor keeps its batch");
+        assert!(core.complete(d1.id, t0 + ms(30)).is_some());
+    }
+
+    #[test]
+    fn consecutive_slow_completions_evict() {
+        let sched = SchedSetting {
+            evict_after: 2,
+            slow_factor: 4.0,
+            rejoin_backoff: ms(1_000),
+            ..adaptive()
+        };
+        let mut core = DispatchCore::new(cfg(1, 1, &sched), BuiltinPolicy::adaptive(), 2);
+        let t0 = Instant::now();
+        // establish baselines: endpoint 0 at 2 ms/item, endpoint 1 at 1
+        let d0 = core.try_dispatch(2, Some(t0), t0, None).unwrap();
+        assert_eq!(d0.endpoint, 0);
+        core.complete(d0.id, t0 + ms(2)).unwrap();
+        let d1 = core.try_dispatch(2, Some(t0), t0, None).unwrap();
+        assert_eq!(d1.endpoint, 1, "unexplored endpoint probed next");
+        core.complete(d1.id, t0 + ms(1)).unwrap();
+        // endpoint 0 turns pathological: with the fast endpoint saturated
+        // (max_outstanding = 1), overflow work lands on 0 and comes back
+        // 10 ms/item — two consecutive slow completions (> 4 × 1 ms) evict
+        let mut now = t0 + ms(3);
+        for i in 0..2 {
+            let fast = core.try_dispatch(2, Some(now), now, None).unwrap();
+            assert_eq!(fast.endpoint, 1, "round {i}: lower-ECT endpoint preferred");
+            let slow = core.try_dispatch(2, Some(now), now, None).unwrap();
+            assert_eq!(slow.endpoint, 0, "round {i}: overflow routes to the slow endpoint");
+            core.complete(fast.id, now + ms(1)).unwrap();
+            core.complete(slow.id, now + ms(10)).unwrap();
+            now += ms(11);
+        }
+        assert!(
+            core.endpoint(0).is_rejected(now),
+            "two consecutive slow completions evict (ewma0={:?})",
+            core.endpoint(0).ewma_item_ms
+        );
+        assert!(core.endpoint(1).active(now));
+    }
+
+    #[test]
+    fn static_policy_never_evicts_and_drain_bound_scales() {
+        let mut core = DispatchCore::new(
+            cfg(4, 1, &SchedSetting { timeout: Some(ms(1)), ..Default::default() }),
+            BuiltinPolicy::least_outstanding(),
+            2,
+        );
+        let t0 = Instant::now();
+        let d = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        assert!(core.check_health(t0 + ms(500)).is_empty(), "static policy: no health plane");
+        assert_eq!(core.drain_bound(ms(300)), ms(300), "no samples yet → base bound");
+        core.complete(d.id, t0 + ms(400)).unwrap();
+        // p95 ≈ 400 ms, factor 3 → bound stretches to ~1.2 s
+        assert!(core.drain_bound(ms(300)) >= ms(1_100));
+        assert_eq!(scaled_drain_bound(Some(ms(10)), 3.0, ms(300)), ms(300), "base is a floor");
+    }
+
+    #[test]
+    fn adaptive_take_respects_queue_and_budget() {
+        let mut core =
+            DispatchCore::new(cfg(8, 4, &adaptive()), BuiltinPolicy::adaptive(), 1);
+        let t0 = Instant::now();
+        assert!(core.try_dispatch(8, Some(t0), t0, Some(0)).is_none(), "budget exhausted");
+        let d = core.try_dispatch(8, Some(t0), t0, Some(3)).unwrap();
+        assert_eq!(d.take, 3, "budget caps the batch");
+        let d = core.try_dispatch(2, Some(t0 - ms(10)), t0, None).unwrap();
+        assert_eq!(d.take, 2, "queue length caps the batch");
+    }
+}

@@ -1,0 +1,271 @@
+//! Routing policies for the dispatch core.
+//!
+//! A [`Policy`] answers two questions per dispatch: *which* endpoint takes
+//! the next batch ([`Policy::route`]) and *how large* that batch may be
+//! ([`Policy::batch_cap`]). Policies are pure functions over the
+//! [`PoolView`] (per-endpoint load/health snapshot) plus their own cursor
+//! state, so routing sequences are deterministic and unit-testable.
+//!
+//! [`LeastOutstanding`] and [`RoundRobin`] reproduce the pre-extraction
+//! oracle-plane and exchange schedulers; [`AdaptiveEwma`] adds
+//! least-estimated-completion-time routing with adaptive batch sizing.
+
+use super::EndpointState;
+
+/// Read-only pool snapshot handed to policies at routing time. `active`
+/// is the health mask (all-true under the static policies); a `false`
+/// endpoint must not receive work.
+#[derive(Debug)]
+pub struct PoolView<'a> {
+    pub eps: &'a [EndpointState],
+    pub active: &'a [bool],
+    pub max_size: usize,
+    pub max_outstanding: usize,
+}
+
+impl PoolView<'_> {
+    /// Routable: healthy and below the outstanding-batch cap.
+    fn candidate(&self, e: usize) -> bool {
+        self.active[e] && self.eps[e].outstanding < self.max_outstanding
+    }
+
+    /// Candidates in index order.
+    fn candidates(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.eps.len()).filter(move |&e| self.candidate(e))
+    }
+
+    /// Least-outstanding candidate, lowest index on ties (`None` = every
+    /// endpoint saturated or unhealthy: backpressure).
+    fn least_outstanding(&self) -> Option<usize> {
+        self.candidates().min_by_key(|&e| self.eps[e].outstanding)
+    }
+}
+
+/// Endpoint choice + batch-size cap per dispatch.
+pub trait Policy {
+    /// Pick the endpoint for the next batch (`None` = backpressure).
+    fn route(&mut self, view: &PoolView<'_>) -> Option<usize>;
+
+    /// Upper bound on the next batch's size for `endpoint` (clamped by the
+    /// core to `[1, max_size]`). Default: full batches.
+    fn batch_cap(&self, endpoint: usize, view: &PoolView<'_>) -> usize {
+        let _ = endpoint;
+        view.max_size
+    }
+}
+
+/// The oracle plane's static policy: fewest batches in flight, lowest
+/// index on ties — deterministic, and heterogeneous-latency pools are fed
+/// proportionally to their speed without any latency estimation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LeastOutstanding;
+
+impl Policy for LeastOutstanding {
+    fn route(&mut self, view: &PoolView<'_>) -> Option<usize> {
+        view.least_outstanding()
+    }
+}
+
+/// The prediction exchange's static policy: round-robin across shards with
+/// a least-outstanding fallback when the preferred shard is saturated. The
+/// cursor advances past the shard *actually chosen* (not the preferred
+/// one), so a briefly-saturated shard is not skipped on the next round
+/// after its work went elsewhere.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl Policy for RoundRobin {
+    fn route(&mut self, view: &PoolView<'_>) -> Option<usize> {
+        let n = view.eps.len();
+        let preferred = self.cursor % n;
+        let chosen = if view.candidate(preferred) {
+            preferred
+        } else {
+            view.least_outstanding()? // backpressure: cursor unchanged
+        };
+        self.cursor = (chosen + 1) % n;
+        Some(chosen)
+    }
+}
+
+/// Latency-aware routing: each batch goes to the candidate with the least
+/// estimated completion time `ewma_item_ms × (outstanding_items +
+/// planned_take)`, deterministic lowest-index ties. Endpoints without an
+/// EWMA yet are probed first (least outstanding items, lowest index), so
+/// every endpoint's cost gets measured before estimates are trusted. Batch
+/// caps shrink proportionally to how much slower an endpoint is than the
+/// fastest one, so a slow oracle receives small bites instead of parking a
+/// full batch behind one long calculation.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AdaptiveEwma;
+
+impl AdaptiveEwma {
+    fn cap_for(&self, e: usize, view: &PoolView<'_>) -> usize {
+        let Some(own) = view.eps[e].ewma_item_ms else {
+            return view.max_size; // unexplored: probe at full size
+        };
+        let fastest = (0..view.eps.len())
+            .filter(|&i| view.active[i])
+            .filter_map(|i| view.eps[i].ewma_item_ms)
+            .fold(own, f64::min);
+        if own <= 0.0 || fastest <= 0.0 {
+            return view.max_size;
+        }
+        let cap = (view.max_size as f64 * fastest / own).round() as usize;
+        cap.clamp(1, view.max_size)
+    }
+}
+
+impl Policy for AdaptiveEwma {
+    fn route(&mut self, view: &PoolView<'_>) -> Option<usize> {
+        // probe unexplored endpoints first (least items, lowest index)
+        if let Some(e) = view
+            .candidates()
+            .filter(|&e| view.eps[e].ewma_item_ms.is_none())
+            .min_by_key(|&e| view.eps[e].outstanding_items)
+        {
+            return Some(e);
+        }
+        // least estimated completion time, strict-improvement scan →
+        // lowest index wins ties
+        let mut best: Option<(usize, f64)> = None;
+        for e in view.candidates() {
+            let ewma = view.eps[e].ewma_item_ms.expect("unexplored handled above");
+            let planned = view.eps[e].outstanding_items + self.cap_for(e, view);
+            let ect = ewma * planned as f64;
+            if best.map_or(true, |(_, b)| ect < b) {
+                best = Some((e, ect));
+            }
+        }
+        best.map(|(e, _)| e)
+    }
+
+    fn batch_cap(&self, endpoint: usize, view: &PoolView<'_>) -> usize {
+        self.cap_for(endpoint, view)
+    }
+}
+
+/// The concrete policy set the facades instantiate (an enum, so
+/// `DispatchCore<BuiltinPolicy>` stays a single monomorphization per
+/// facade while the `Policy` trait stays open for tests and extensions).
+#[derive(Debug, Clone, Copy)]
+pub enum BuiltinPolicy {
+    LeastOutstanding(LeastOutstanding),
+    RoundRobin(RoundRobin),
+    Adaptive(AdaptiveEwma),
+}
+
+impl BuiltinPolicy {
+    pub fn least_outstanding() -> Self {
+        BuiltinPolicy::LeastOutstanding(LeastOutstanding)
+    }
+
+    pub fn round_robin() -> Self {
+        BuiltinPolicy::RoundRobin(RoundRobin::default())
+    }
+
+    pub fn adaptive() -> Self {
+        BuiltinPolicy::Adaptive(AdaptiveEwma)
+    }
+}
+
+impl Policy for BuiltinPolicy {
+    fn route(&mut self, view: &PoolView<'_>) -> Option<usize> {
+        match self {
+            BuiltinPolicy::LeastOutstanding(p) => p.route(view),
+            BuiltinPolicy::RoundRobin(p) => p.route(view),
+            BuiltinPolicy::Adaptive(p) => p.route(view),
+        }
+    }
+
+    fn batch_cap(&self, endpoint: usize, view: &PoolView<'_>) -> usize {
+        match self {
+            BuiltinPolicy::LeastOutstanding(p) => p.batch_cap(endpoint, view),
+            BuiltinPolicy::RoundRobin(p) => p.batch_cap(endpoint, view),
+            BuiltinPolicy::Adaptive(p) => p.batch_cap(endpoint, view),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(outstanding: &[usize]) -> Vec<EndpointState> {
+        outstanding
+            .iter()
+            .map(|&o| EndpointState { outstanding: o, outstanding_items: o, ..Default::default() })
+            .collect()
+    }
+
+    fn view<'a>(
+        eps: &'a [EndpointState],
+        active: &'a [bool],
+        max_outstanding: usize,
+    ) -> PoolView<'a> {
+        PoolView { eps, active, max_size: 8, max_outstanding }
+    }
+
+    #[test]
+    fn least_outstanding_lowest_index_ties() {
+        let eps = pool(&[1, 0, 0]);
+        let active = [true; 3];
+        let mut p = LeastOutstanding;
+        assert_eq!(p.route(&view(&eps, &active, 2)), Some(1));
+        let eps = pool(&[0, 0, 0]);
+        assert_eq!(p.route(&view(&eps, &active, 2)), Some(0));
+        let eps = pool(&[2, 2, 2]);
+        assert_eq!(p.route(&view(&eps, &active, 2)), None, "saturated → backpressure");
+    }
+
+    #[test]
+    fn round_robin_advances_past_chosen_not_preferred() {
+        let mut eps = pool(&[0, 0]);
+        let active = [true; 2];
+        let mut p = RoundRobin::default();
+        // 0 chosen, cursor → 1
+        assert_eq!(p.route(&view(&eps, &active, 1)), Some(0));
+        eps[0].outstanding = 1;
+        // 1 chosen, cursor → 0
+        assert_eq!(p.route(&view(&eps, &active, 1)), Some(1));
+        eps[1].outstanding = 1;
+        // saturated: no dispatch, cursor stays at 0
+        assert_eq!(p.route(&view(&eps, &active, 1)), None);
+        // shard 1 frees; preferred 0 still busy → fallback to 1, and the
+        // cursor must advance past *1* (the chosen shard), back to 0
+        eps[1].outstanding = 0;
+        assert_eq!(p.route(&view(&eps, &active, 1)), Some(1));
+        eps[1].outstanding = 1;
+        // both free again: preferred is 0 — the briefly-saturated shard is
+        // not skipped (the old scheduler would advance to 1 here)
+        eps[0].outstanding = 0;
+        eps[1].outstanding = 0;
+        assert_eq!(p.route(&view(&eps, &active, 1)), Some(0));
+    }
+
+    #[test]
+    fn rejected_endpoints_are_not_candidates() {
+        let eps = pool(&[0, 5]);
+        let active = [false, true];
+        let mut lo = LeastOutstanding;
+        assert_eq!(lo.route(&view(&eps, &active, 8)), Some(1), "idle-but-rejected skipped");
+        let mut rr = RoundRobin::default();
+        assert_eq!(rr.route(&view(&eps, &active, 8)), Some(1), "preferred-but-rejected skipped");
+        let mut ad = AdaptiveEwma;
+        assert_eq!(ad.route(&view(&eps, &active, 8)), Some(1));
+    }
+
+    #[test]
+    fn adaptive_cap_scales_with_relative_speed() {
+        let mut eps = pool(&[0, 0]);
+        eps[0].ewma_item_ms = Some(8.0);
+        eps[1].ewma_item_ms = Some(2.0);
+        let active = [true; 2];
+        let p = AdaptiveEwma;
+        let v = view(&eps, &active, 4);
+        assert_eq!(p.batch_cap(1, &v), 8, "fastest endpoint: full batches");
+        assert_eq!(p.batch_cap(0, &v), 2, "4×-slower endpoint: quarter batches");
+    }
+}

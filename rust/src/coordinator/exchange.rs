@@ -23,7 +23,10 @@ use std::time::{Duration, Instant};
 use crate::comm::bus::{Endpoint, Payload, Src};
 use crate::comm::codec;
 use crate::comm::protocol::*;
-use crate::config::{topology, AlSetting, BatchSetting, ExchangeMode, Topology};
+use crate::config::{
+    topology, AlSetting, BatchSetting, ExchangeMode, SchedPolicy, SchedSetting, Topology,
+};
+use crate::coordinator::dispatch::{BuiltinPolicy, DispatchConfig, DispatchCore, Eviction};
 use crate::coordinator::hosts::{gather_poll, is_down, ShutdownFlag};
 use crate::data::batch::{PayloadBatch, RowBlock, RowQueue};
 use crate::kernels::Utils;
@@ -248,8 +251,16 @@ pub struct DispatchedBatch {
 }
 
 /// Size-/deadline-triggered micro-batching with shard routing and
-/// per-shard backpressure. Pure state machine: callers inject `now`, so the
-/// trigger semantics are unit-testable without threads or sleeps.
+/// per-shard backpressure — a facade over the shared
+/// [`crate::coordinator::dispatch::DispatchCore`] state machine. Pure:
+/// callers inject `now`, so the trigger semantics are unit-testable without
+/// threads or sleeps.
+///
+/// The default static policy is round-robin with a least-outstanding
+/// fallback (PR-1 semantics, with the cursor advancing past the shard
+/// actually chosen); `sched_policy = "adaptive"` upgrades routing to the
+/// EWMA least-estimated-completion-time policy with shard health/eviction
+/// (see [`BatchScheduler::check_health`]).
 ///
 /// The queue is flat: request values are staged contiguously in a
 /// [`RowQueue`] (the generator buffer of the flat data plane), so enqueuing
@@ -258,27 +269,25 @@ pub struct DispatchedBatch {
 pub struct BatchScheduler {
     queue: VecDeque<Pending>,
     rows: RowQueue,
-    max_size: usize,
-    max_delay: Duration,
-    max_outstanding: usize,
-    /// Batches in flight per shard.
-    outstanding: Vec<usize>,
-    /// Round-robin preference for the next dispatch.
-    rr_cursor: usize,
-    next_id: u64,
+    core: DispatchCore<BuiltinPolicy>,
 }
 
 impl BatchScheduler {
+    /// Static-policy scheduler (round-robin + least-outstanding fallback).
     pub fn new(batch: &BatchSetting, n_shards: usize) -> Self {
+        Self::with_policy(batch, &SchedSetting::default(), n_shards)
+    }
+
+    /// Scheduler with the configured routing policy (`sched_*` knobs).
+    pub fn with_policy(batch: &BatchSetting, sched: &SchedSetting, n_shards: usize) -> Self {
+        let policy = match sched.policy {
+            SchedPolicy::Static => BuiltinPolicy::round_robin(),
+            SchedPolicy::Adaptive => BuiltinPolicy::adaptive(),
+        };
         BatchScheduler {
             queue: VecDeque::new(),
             rows: RowQueue::new(),
-            max_size: batch.max_size.max(1),
-            max_delay: batch.max_delay,
-            max_outstanding: batch.max_outstanding.max(1),
-            outstanding: vec![0; n_shards.max(1)],
-            rr_cursor: 0,
-            next_id: 0,
+            core: DispatchCore::new(DispatchConfig::new(batch, sched), policy, n_shards),
         }
     }
 
@@ -294,45 +303,11 @@ impl BatchScheduler {
     }
 
     pub fn outstanding(&self, shard: usize) -> usize {
-        self.outstanding[shard]
+        self.core.outstanding(shard)
     }
 
     pub fn in_flight(&self) -> usize {
-        self.outstanding.iter().sum()
-    }
-
-    /// Whether a dispatch trigger (size or deadline) has fired.
-    fn triggered(&self, now: Instant) -> bool {
-        if self.queue.len() >= self.max_size {
-            return true; // size trigger preempts the deadline
-        }
-        self.queue
-            .front()
-            .map(|p| now.duration_since(p.enqueued) >= self.max_delay)
-            .unwrap_or(false)
-    }
-
-    /// Pick a shard with spare capacity: the round-robin preferred shard if
-    /// free, otherwise the least-outstanding one. `None` = all saturated.
-    fn pick_shard(&mut self) -> Option<usize> {
-        let n = self.outstanding.len();
-        let preferred = self.rr_cursor % n;
-        let shard = if self.outstanding[preferred] < self.max_outstanding {
-            preferred
-        } else {
-            let (best, &count) = self
-                .outstanding
-                .iter()
-                .enumerate()
-                .min_by_key(|&(_, &c)| c)
-                .expect("at least one shard");
-            if count >= self.max_outstanding {
-                return None; // backpressure: every shard saturated
-            }
-            best
-        };
-        self.rr_cursor = (preferred + 1) % n;
-        Some(shard)
+        self.core.in_flight()
     }
 
     /// Form and route one batch if a trigger fired and a shard is free.
@@ -341,11 +316,9 @@ impl BatchScheduler {
     /// generator", SI) so downstream processing is arrival-order
     /// independent.
     pub fn try_dispatch(&mut self, now: Instant) -> Option<DispatchedBatch> {
-        if !self.triggered(now) {
-            return None;
-        }
-        let shard = self.pick_shard()?;
-        let n = self.queue.len().min(self.max_size);
+        let head_since = self.queue.front().map(|p| p.enqueued);
+        let d = self.core.try_dispatch(self.queue.len(), head_since, now, None)?;
+        let n = d.take;
         // origin-sorted take order (stable: FIFO within an origin)
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| self.queue[i].origin);
@@ -358,16 +331,22 @@ impl BatchScheduler {
         }
         self.queue.drain(..n);
         self.rows.drop_front(n);
-        let id = self.next_id;
-        self.next_id += 1;
-        self.outstanding[shard] += 1;
-        Some(DispatchedBatch { id, shard, origins, items })
+        Some(DispatchedBatch { id: d.id, shard: d.endpoint, origins, items })
     }
 
-    /// A batch for `shard` completed its round-trip.
-    pub fn complete(&mut self, shard: usize) {
-        debug_assert!(self.outstanding[shard] > 0);
-        self.outstanding[shard] = self.outstanding[shard].saturating_sub(1);
+    /// Batch `id` completed its round-trip at `now`. Returns
+    /// `(shard, items)`, or `None` for an orphan (unknown/duplicate id, or
+    /// a batch already evicted and re-dispatched). The timestamp feeds the
+    /// adaptive policy's EWMA.
+    pub fn complete(&mut self, id: u64, now: Instant) -> Option<(usize, usize)> {
+        self.core.complete(id, now).map(|c| (c.endpoint, c.items))
+    }
+
+    /// Evict unhealthy shards (adaptive policy only) and return their
+    /// in-flight batches; the caller requeues each batch's items so they
+    /// are re-served elsewhere. No-op under the static policy.
+    pub fn check_health(&mut self, now: Instant) -> Vec<Eviction> {
+        self.core.check_health(now)
     }
 }
 
@@ -459,7 +438,7 @@ fn batched_host(
     let committee = topo.committee.max(1);
     let shards = topo.shards();
     let oracle_enabled = !topo.orcl_ranks().is_empty();
-    let mut scheduler = BatchScheduler::new(&setting.batch, shards.len());
+    let mut scheduler = BatchScheduler::with_policy(&setting.batch, &setting.sched, shards.len());
     let mut inflight: HashMap<u64, InFlight> = HashMap::new();
     // reusable scratches: each dispatched batch is encoded in place and
     // converted once into a shared payload for the whole committee shard
@@ -554,7 +533,9 @@ fn batched_host(
 
             // batch complete: UQ check, forward selections, scatter results
             let fl = inflight.remove(&id).expect("present above");
-            scheduler.complete(fl.shard);
+            if scheduler.complete(id, Instant::now()).is_none() {
+                tel.bump("orphan_completions");
+            }
             let replies: Vec<MemberReply> = fl.replies.into_iter().flatten().collect();
             let t0 = Instant::now();
             let (to_orcl, checked) = reduce_batch(&mut *utils, &fl.items, replies);
@@ -587,6 +568,22 @@ fn batched_host(
                 // so the counter lands exactly on the limit; the outer loop
                 // sends the stop signal
                 break;
+            }
+        }
+
+        // --- health: evict unresponsive/slow shards (adaptive policy
+        // only; a no-op under the static default) and requeue their
+        // in-flight items so generators are never stranded behind a dead
+        // shard — late replies from the evicted batch become orphans ---
+        for ev in scheduler.check_health(Instant::now()) {
+            tel.bump("shard_evictions");
+            if let Some(fl) = inflight.remove(&ev.id) {
+                let now = Instant::now();
+                for (i, &origin) in fl.origins.iter().enumerate() {
+                    scheduler.push(origin, fl.items.row(i), now);
+                }
+                tel.add("requeued_items", fl.items.len() as u64);
+                did_work = true;
             }
         }
 
@@ -784,9 +781,41 @@ mod tests {
         assert!(s.try_dispatch(t0).is_none());
         // shard 1 frees; preferred cursor points at 0 (saturated) → fall
         // back to the least-outstanding shard 1
-        s.complete(1);
+        assert_eq!(s.complete(b.id, t0), Some((1, 1)));
         let c = s.try_dispatch(t0).unwrap();
         assert_eq!(c.shard, 1);
+    }
+
+    #[test]
+    fn rr_cursor_advances_past_chosen_shard_not_preferred() {
+        // regression: the old scheduler advanced the cursor past the
+        // *preferred* shard even when the fallback shard took the batch, so
+        // a briefly-saturated shard was skipped on the next round despite
+        // having received nothing
+        let mut s = sched(1, 0, 1, 2);
+        let t0 = Instant::now();
+        for i in 0..2 {
+            s.push(8, &[i as f32], t0);
+        }
+        let d1 = s.try_dispatch(t0).unwrap(); // preferred 0 → shard 0, cursor → 1
+        let d2 = s.try_dispatch(t0).unwrap(); // preferred 1 → shard 1, cursor → 0
+        assert_eq!((d1.shard, d2.shard), (0, 1));
+        // shard 1 frees while 0 is busy: the fallback sends the next batch
+        // to shard 1, and the cursor must advance past *shard 1*
+        s.complete(d2.id, t0);
+        s.push(8, &[2.0], t0);
+        let d3 = s.try_dispatch(t0).unwrap();
+        assert_eq!(d3.shard, 1, "fallback to the free shard");
+        // everything frees: the preferred shard is now 0 — the
+        // briefly-saturated shard that never got the fallback batch (the
+        // old cursor logic would skip it and pick 1 again)
+        s.complete(d1.id, t0);
+        s.complete(d3.id, t0);
+        s.push(8, &[3.0], t0);
+        let d4 = s.try_dispatch(t0).unwrap();
+        assert_eq!(d4.shard, 0, "shard 0 is next in rotation after the fallback chose 1");
+        let shards: Vec<usize> = vec![d1.shard, d2.shard, d3.shard, d4.shard];
+        assert_eq!(shards, vec![0, 1, 1, 0], "pinned dispatch sequence");
     }
 
     #[test]
@@ -803,10 +832,12 @@ mod tests {
         assert!(s.try_dispatch(t0).is_none(), "shard saturated");
         assert_eq!(s.queue_len(), 3, "backpressure leaves the queue intact");
         // each completion releases exactly the oldest queued request
+        let mut last = first.id;
         for i in 1..=3 {
-            s.complete(0);
+            assert_eq!(s.complete(last, t0), Some((0, 1)));
             let b = s.try_dispatch(t0).unwrap();
             assert_eq!(b.items.to_nested(), vec![vec![i as f32]], "FIFO release");
+            last = b.id;
         }
         assert_eq!(s.queue_len(), 0);
     }

@@ -161,6 +161,13 @@ pub fn generator_host(
 /// processes them strictly in dispatch order; if shutdown fires mid-drain,
 /// the unprocessed tail is requeued at the mailbox front — never dropped or
 /// reordered — so per-(src, tag) FIFO holds for whoever drains next.
+///
+/// Eviction safety: the host never needs to know it was evicted by the
+/// adaptive scheduler's health plane. A reply to an already-evicted batch
+/// id is ingested by the Manager as an orphan (the labels were paid for)
+/// and doubles as proof of life — the dispatch core readmits the oracle —
+/// while the evicted inputs were requeued and relabeled elsewhere, so a
+/// stalled oracle costs at most duplicate labels, never lost ones.
 pub fn oracle_host(
     mut ep: Endpoint,
     mut oracle: Box<dyn Oracle>,

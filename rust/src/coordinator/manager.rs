@@ -2,20 +2,22 @@
 //! batched through the oracle plane), training flushes, dynamic oracle-list
 //! adjustment, progress snapshots, shutdown.
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use crate::comm::bus::{Endpoint, Payload, Src};
 use crate::comm::codec;
 use crate::comm::protocol::*;
-use crate::config::{AlSetting, OracleMode, Topology};
+use crate::config::{AlSetting, OracleMode, SchedPolicy, Topology};
 use crate::coordinator::buffers::{OracleBuffer, TrainBuffer};
+use crate::coordinator::dispatch::scaled_drain_bound;
 use crate::coordinator::hosts::ShutdownFlag;
 use crate::coordinator::oracle_plane::OracleScheduler;
 use crate::data::batch::RowBlock;
 use crate::json::{obj, Value};
 use crate::kernels::Utils;
-use crate::telemetry::KernelTelemetry;
+use crate::telemetry::{KernelTelemetry, LatencyWindow};
 
 /// Outcome counters the workflow report needs from the Manager.
 #[derive(Debug, Default, Clone)]
@@ -26,13 +28,18 @@ pub struct ManagerOutcome {
 }
 
 /// Ingest one `TAG_ORACLE_BATCH_RESULT` frame: free the scheduler's
-/// in-flight slot, stage every `(input, label)` pair into the train buffer
-/// (borrowed views — constant allocations per batch, zero per label), and
-/// keep the accounting identical between the main loop and the shutdown
-/// drain.
+/// in-flight slot (the arrival timestamp feeds the RTT window and, under
+/// the adaptive policy, the EWMA), stage every `(input, label)` pair into
+/// the train buffer (borrowed views — constant allocations per batch, zero
+/// per label), and keep the accounting identical between the main loop and
+/// the shutdown drain. Undecodable frames are counted (`malformed` +
+/// `bad_frames`), never silently dropped.
+#[allow(clippy::too_many_arguments)]
 fn ingest_oracle_batch_result(
     data: &Payload,
+    now: Instant,
     sched: &mut OracleScheduler,
+    inflight_rows: &mut HashMap<u64, RowBlock>,
     train_buffer: &mut TrainBuffer,
     out: &mut ManagerOutcome,
     tel: &mut KernelTelemetry,
@@ -40,9 +47,13 @@ fn ingest_oracle_batch_result(
 ) {
     match decode_oracle_batch_result_views(data) {
         Some((id, pairs)) => {
-            if sched.complete(id).is_none() {
+            if sched.complete(id, now).is_none() {
+                // duplicate, or a late reply from an evicted batch whose
+                // inputs were already requeued — the labels are still paid
+                // for, so they are ingested either way
                 tel.bump("orphan_results");
             }
+            inflight_rows.remove(&id);
             out.oracle_labels += pairs.len() as u64;
             tel.add("labels", pairs.len() as u64);
             tel.bump("oracle_batch_results");
@@ -53,7 +64,59 @@ fn ingest_oracle_batch_result(
                 train_buffer.push_pair(x, y);
             }
         }
-        None => tel.bump("malformed"),
+        None => {
+            tel.bump("malformed");
+            tel.bump("bad_frames");
+        }
+    }
+}
+
+/// Ingest one per-label `TAG_ORACLE_RESULT` frame — the single ingest path
+/// shared by the main loop and the shutdown drain, so busy-flag, RTT, and
+/// label accounting cannot diverge between them (the old drain silently
+/// discarded malformed results and left no trace of unknown-rank senders).
+/// The decoded `(input, label)` views copy straight into the train buffer's
+/// contiguous block — no per-sample boxing.
+#[allow(clippy::too_many_arguments)]
+fn ingest_oracle_result(
+    src: usize,
+    data: &Payload,
+    now: Instant,
+    orcl: &[usize],
+    oracle_busy: &mut [bool],
+    busy_since: &mut [Option<Instant>],
+    label_rtts: &mut LatencyWindow,
+    train_buffer: &mut TrainBuffer,
+    out: &mut ManagerOutcome,
+    tel: &mut KernelTelemetry,
+    drained: bool,
+) {
+    match orcl.iter().position(|&r| r == src) {
+        Some(i) => {
+            oracle_busy[i] = false;
+            if let Some(sent) = busy_since[i].take() {
+                label_rtts.record(now.saturating_duration_since(sent));
+            }
+        }
+        // a result from a rank that is not an oracle: no busy flag to
+        // clear, but the protocol breakage is counted, not ignored
+        None => tel.bump("bad_frames"),
+    }
+    match codec::unpack_views(data) {
+        Some(parts) if parts.len() == 2 => {
+            out.oracle_labels += 1;
+            tel.bump("labels");
+            if drained {
+                tel.bump("drained_labels");
+            }
+            train_buffer.push_pair(parts[0], parts[1]);
+        }
+        // malformed or wrong arity: the label is lost on the wire, but the
+        // loss is visible in telemetry instead of silent
+        _ => {
+            tel.bump("malformed");
+            tel.bump("bad_frames");
+        }
     }
 }
 
@@ -74,6 +137,11 @@ pub fn manager_host(
     let rescore = topo.rescore_ranks();
     let train = topo.train_ranks();
     let mut oracle_busy = vec![false; orcl.len()];
+    // per-label dispatch timestamps → RTT window: the shutdown drain bound
+    // scales with the observed p95 label latency instead of assuming a
+    // fixed 300 ms covers every oracle pool
+    let mut busy_since: Vec<Option<Instant>> = vec![None; orcl.len()];
+    let mut label_rtts = LatencyWindow::default();
     // strict label budget: never dispatch beyond stop.max_labels — oracle
     // hours past the stop criterion are wasted work, and a bounded dispatch
     // count makes the final label tally exact (the deterministic e2e test
@@ -87,7 +155,13 @@ pub fn manager_host(
     // batch dispatch moves rows buffer → scratch → frame with no fresh
     // allocations
     let oracle_batched = setting.oracle_mode == OracleMode::Batched && !orcl.is_empty();
-    let mut orcl_sched = OracleScheduler::new(&setting.oracle_batch, orcl.len());
+    let adaptive = setting.sched.policy == SchedPolicy::Adaptive;
+    let mut orcl_sched =
+        OracleScheduler::with_policy(&setting.oracle_batch, &setting.sched, orcl.len());
+    // adaptive only: in-flight batch inputs by id, so an evicted batch's
+    // rows can be requeued and relabeled elsewhere (one clone per dispatch;
+    // the static policy keeps the zero-copy steady state)
+    let mut inflight_rows: HashMap<u64, RowBlock> = HashMap::new();
     let mut batch_scratch = RowBlock::new();
     let mut orcl_frame: Vec<f32> = Vec::new();
     // reusable flush-encode scratch (steady-state flushes allocate nothing)
@@ -122,20 +196,19 @@ pub fn manager_host(
 
         // --- completed oracle labels (green flow back) ---
         while let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_RESULT) {
-            if let Some(i) = orcl.iter().position(|&r| r == m.src) {
-                oracle_busy[i] = false;
-            }
-            // flat ingest: the (input, label) views copy straight from the
-            // decoded payload into the train buffer's contiguous block —
-            // no per-sample (Vec, Vec) boxing
-            match codec::unpack_views(&m.data) {
-                Some(parts) if parts.len() == 2 => {
-                    out.oracle_labels += 1;
-                    tel.bump("labels");
-                    train_buffer.push_pair(parts[0], parts[1]);
-                }
-                _ => tel.bump("malformed"),
-            }
+            ingest_oracle_result(
+                m.src,
+                &m.data,
+                Instant::now(),
+                &orcl,
+                &mut oracle_busy,
+                &mut busy_since,
+                &mut label_rtts,
+                &mut train_buffer,
+                &mut out,
+                &mut tel,
+                false,
+            );
             did_work = true;
         }
 
@@ -143,7 +216,9 @@ pub fn manager_host(
         while let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_BATCH_RESULT) {
             ingest_oracle_batch_result(
                 &m.data,
+                Instant::now(),
                 &mut orcl_sched,
+                &mut inflight_rows,
                 &mut train_buffer,
                 &mut out,
                 &mut tel,
@@ -182,10 +257,27 @@ pub fn manager_host(
         // --- dispatch buffered inputs (green flow out), bounded by the
         //     label budget when one is set ---
         if oracle_batched {
-            // oracle plane: coalesce queue-head rows into micro-batches,
-            // routed to the least-loaded oracle (triggers/backpressure in
-            // the scheduler; `dispatched` counts items in both modes)
             let now = Instant::now();
+            // health plane (adaptive policy only; a no-op under static):
+            // evict stalled oracles and requeue their in-flight inputs so
+            // they are relabeled elsewhere — inputs already dispatched are
+            // never lost to a dead oracle, and their budget headroom is
+            // released for the re-dispatch
+            for ev in orcl_sched.check_health(now) {
+                tel.bump("oracle_evictions");
+                if let Some(rows) = inflight_rows.remove(&ev.id) {
+                    for i in 0..rows.len() {
+                        orcl_buffer.push_row(rows.row(i));
+                    }
+                    orcl_sched.note_enqueued(now);
+                    dispatched_total = dispatched_total.saturating_sub(rows.len() as u64);
+                    tel.add("requeued_inputs", rows.len() as u64);
+                    did_work = true;
+                }
+            }
+            // oracle plane: coalesce queue-head rows into micro-batches,
+            // routed by the configured policy (triggers/backpressure in
+            // the scheduler; `dispatched` counts items in both modes)
             loop {
                 let budget = label_budget.map(|max| max.saturating_sub(dispatched_total));
                 if budget == Some(0) {
@@ -204,6 +296,9 @@ pub fn manager_host(
                 }
                 encode_oracle_batch_block_into(d.id, &batch_scratch, &mut orcl_frame);
                 ep.send(orcl[d.oracle], TAG_ORACLE_BATCH, &orcl_frame[..]);
+                if adaptive {
+                    inflight_rows.insert(d.id, batch_scratch.clone());
+                }
                 dispatched_total += d.take as u64;
                 tel.add("dispatched", d.take as u64);
                 tel.bump("oracle_batches");
@@ -230,6 +325,7 @@ pub fn manager_host(
                     // it into a shared payload (the one unavoidable copy)
                     ep.send(rank, TAG_TO_ORACLE, input);
                     oracle_busy[i] = true;
+                    busy_since[i] = Some(Instant::now());
                     dispatched_total += 1;
                     tel.bump("dispatched");
                     did_work = true;
@@ -291,49 +387,32 @@ pub fn manager_host(
     }
 
     // --- bounded drain: don't discard labels already paid for (a DFT hour
-    // that finished during shutdown must land in the training buffer).
-    // Per-label mode waits on busy oracles; batched mode on in-flight
-    // batches ---
-    let drain_deadline = Instant::now() + Duration::from_millis(300);
-    loop {
-        let waiting = if oracle_batched {
-            orcl_sched.in_flight() > 0
-        } else {
-            oracle_busy.iter().any(|&b| b)
-        };
-        if !waiting || Instant::now() >= drain_deadline {
-            break;
-        }
-        let mut got = false;
-        if let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_RESULT) {
-            if let Some(i) = orcl.iter().position(|&r| r == m.src) {
-                oracle_busy[i] = false;
-            }
-            if let Some(parts) = codec::unpack_views(&m.data) {
-                if parts.len() == 2 {
-                    out.oracle_labels += 1;
-                    tel.bump("labels");
-                    tel.bump("drained_labels");
-                    train_buffer.push_pair(parts[0], parts[1]);
-                }
-            }
-            got = true;
-        }
-        if let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_BATCH_RESULT) {
-            ingest_oracle_batch_result(
-                &m.data,
-                &mut orcl_sched,
-                &mut train_buffer,
-                &mut out,
-                &mut tel,
-                true,
-            );
-            got = true;
-        }
-        if !got {
-            std::thread::sleep(setting.poll_interval);
-        }
-    }
+    // that finished during shutdown must land in the training buffer). The
+    // bound scales with the observed p95 oracle latency (`sched_drain_factor
+    // × p95`, floored at 300 ms) instead of assuming a fixed 300 ms covers
+    // every pool; per-label mode waits on busy oracles, batched mode on
+    // in-flight batches ---
+    let drain_base = Duration::from_millis(300);
+    let drain_bound = if oracle_batched {
+        orcl_sched.drain_bound(drain_base)
+    } else {
+        scaled_drain_bound(label_rtts.p95(), setting.sched.drain_factor, drain_base)
+    };
+    drain_oracle_results(
+        &mut ep,
+        &orcl,
+        &mut oracle_busy,
+        &mut busy_since,
+        &mut label_rtts,
+        &mut orcl_sched,
+        &mut inflight_rows,
+        &mut train_buffer,
+        &mut out,
+        &mut tel,
+        oracle_batched,
+        drain_bound,
+        setting.poll_interval,
+    );
     // flush what we can so trainers see the drained labels before exiting
     if !train.is_empty() {
         if let Some(batch) = train_buffer.flush() {
@@ -362,6 +441,75 @@ pub fn manager_host(
 
     out.losses = losses_latest;
     (tel, out)
+}
+
+/// Shutdown drain: ingest oracle results still in flight, bounded by
+/// `bound`. The receive is *vectored* — every ready frame lands per pass
+/// ([`Endpoint::recv_ready_all`]), so a burst of completions arriving
+/// together is fully ingested before the wait condition is re-checked. The
+/// old loop took at most one frame per tag per pass with a sleep in
+/// between, so clearing the last busy flag ended the drain with ready
+/// results still parked in the mailbox — labels paid for and thrown away.
+#[allow(clippy::too_many_arguments)]
+fn drain_oracle_results(
+    ep: &mut Endpoint,
+    orcl: &[usize],
+    oracle_busy: &mut [bool],
+    busy_since: &mut [Option<Instant>],
+    label_rtts: &mut LatencyWindow,
+    orcl_sched: &mut OracleScheduler,
+    inflight_rows: &mut HashMap<u64, RowBlock>,
+    train_buffer: &mut TrainBuffer,
+    out: &mut ManagerOutcome,
+    tel: &mut KernelTelemetry,
+    oracle_batched: bool,
+    bound: Duration,
+    poll: Duration,
+) {
+    let deadline = Instant::now() + bound;
+    loop {
+        let waiting = if oracle_batched {
+            orcl_sched.in_flight() > 0
+        } else {
+            oracle_busy.iter().any(|&b| b)
+        };
+        if !waiting || Instant::now() >= deadline {
+            break;
+        }
+        let mut got = false;
+        for m in ep.recv_ready_all(Src::Any, TAG_ORACLE_RESULT) {
+            ingest_oracle_result(
+                m.src,
+                &m.data,
+                Instant::now(),
+                orcl,
+                oracle_busy,
+                busy_since,
+                label_rtts,
+                train_buffer,
+                out,
+                tel,
+                true,
+            );
+            got = true;
+        }
+        for m in ep.recv_ready_all(Src::Any, TAG_ORACLE_BATCH_RESULT) {
+            ingest_oracle_batch_result(
+                &m.data,
+                Instant::now(),
+                orcl_sched,
+                inflight_rows,
+                train_buffer,
+                out,
+                tel,
+                true,
+            );
+            got = true;
+        }
+        if !got {
+            std::thread::sleep(poll);
+        }
+    }
 }
 
 /// Re-score the oracle buffer with the prediction committee and let the
@@ -464,4 +612,122 @@ fn save_progress(
         ("setting", setting.to_json()),
     ]);
     let _ = std::fs::write(dir.join("progress.json"), crate::json::to_string(&snapshot));
+}
+
+#[cfg(test)]
+mod tests {
+    //! Shutdown-drain pins: the vectored drain must ingest every parked
+    //! result (the old one-frame-per-pass loop could exit with paid-for
+    //! labels still in the mailbox) and account for bad frames instead of
+    //! silently discarding them.
+    use super::*;
+    use crate::comm::bus::World;
+    use crate::config::BatchSetting;
+
+    #[test]
+    fn drain_ingests_all_parked_results_and_counts_bad_frames() {
+        let mut world = World::new(4);
+        let mut eps = world.endpoints();
+        let mut other = eps.pop().unwrap(); // rank 3: not an oracle
+        let mut orcl2 = eps.pop().unwrap(); // rank 2
+        let mut orcl1 = eps.pop().unwrap(); // rank 1
+        let mut mgr = eps.pop().unwrap(); // rank 0: the Manager
+        let orcl = vec![1usize, 2];
+        // park 4 good results (2 per oracle), one malformed frame, and one
+        // well-formed frame from a non-oracle rank — all ready before the
+        // drain starts
+        for (k, ep) in [&mut orcl1, &mut orcl2].into_iter().enumerate() {
+            for v in [1.0f32, 2.0] {
+                let x = v + k as f32 * 10.0;
+                let (input, label) = ([x, x], [x * 10.0]);
+                ep.send(0, TAG_ORACLE_RESULT, codec::pack(&[&input[..], &label[..]]));
+            }
+        }
+        orcl1.send(0, TAG_ORACLE_RESULT, [3.0f32, 9.9].as_slice()); // truncated header
+        other.send(0, TAG_ORACLE_RESULT, codec::pack(&[&[7.0f32, 7.0][..], &[70.0f32][..]]));
+
+        let t0 = Instant::now();
+        let mut oracle_busy = vec![true, true];
+        let mut busy_since = vec![Some(t0), Some(t0)];
+        let mut label_rtts = LatencyWindow::default();
+        let mut orcl_sched = OracleScheduler::new(&BatchSetting::default(), orcl.len());
+        let mut inflight_rows = HashMap::new();
+        let mut train_buffer = TrainBuffer::new(100);
+        let mut out = ManagerOutcome::default();
+        let mut tel = KernelTelemetry::new("manager", 0);
+        drain_oracle_results(
+            &mut mgr,
+            &orcl,
+            &mut oracle_busy,
+            &mut busy_since,
+            &mut label_rtts,
+            &mut orcl_sched,
+            &mut inflight_rows,
+            &mut train_buffer,
+            &mut out,
+            &mut tel,
+            false,
+            Duration::from_millis(300),
+            Duration::from_millis(1),
+        );
+        // every parked label lands — including the unknown-rank one (it was
+        // paid for) — even though the first pass clears both busy flags
+        assert_eq!(train_buffer.len(), 5, "all parked labels staged, none starved");
+        assert_eq!(out.oracle_labels, 5);
+        assert_eq!(tel.counter("drained_labels"), 5);
+        assert_eq!(tel.counter("malformed"), 1);
+        assert_eq!(tel.counter("bad_frames"), 2, "1 malformed + 1 unknown-rank sender");
+        assert!(oracle_busy.iter().all(|&b| !b), "busy flags cleared");
+        assert_eq!(label_rtts.len(), 2, "one RTT per oracle's first drained result");
+    }
+
+    #[test]
+    fn drain_frees_batched_slots_and_stages_pairs() {
+        let mut world = World::new(2);
+        let mut eps = world.endpoints();
+        let mut orcl1 = eps.pop().unwrap();
+        let mut mgr = eps.pop().unwrap();
+        let batch = BatchSetting { max_size: 2, ..Default::default() };
+        let mut orcl_sched = OracleScheduler::new(&batch, 1);
+        let t0 = Instant::now();
+        orcl_sched.note_enqueued(t0);
+        let d = orcl_sched.try_dispatch(2, t0, None).expect("size trigger");
+        assert_eq!(d.take, 2);
+        // the oracle's reply is already parked when the drain starts
+        let inputs: [&[f32]; 2] = [&[1.0, 2.0], &[3.0, 4.0]];
+        let mut labels = RowBlock::new();
+        labels.push_row(&[10.0]);
+        labels.push_row(&[30.0]);
+        let mut frame = Vec::new();
+        encode_oracle_batch_result_into(d.id, &inputs, &labels, &mut frame);
+        orcl1.send(0, TAG_ORACLE_BATCH_RESULT, frame);
+
+        let mut oracle_busy = vec![false];
+        let mut busy_since = vec![None];
+        let mut label_rtts = LatencyWindow::default();
+        let mut inflight_rows = HashMap::new();
+        let mut train_buffer = TrainBuffer::new(100);
+        let mut out = ManagerOutcome::default();
+        let mut tel = KernelTelemetry::new("manager", 0);
+        drain_oracle_results(
+            &mut mgr,
+            &[1],
+            &mut oracle_busy,
+            &mut busy_since,
+            &mut label_rtts,
+            &mut orcl_sched,
+            &mut inflight_rows,
+            &mut train_buffer,
+            &mut out,
+            &mut tel,
+            true,
+            Duration::from_millis(300),
+            Duration::from_millis(1),
+        );
+        assert_eq!(orcl_sched.in_flight(), 0, "slot freed by the drained result");
+        assert_eq!(train_buffer.len(), 2);
+        assert_eq!(out.oracle_labels, 2);
+        assert_eq!(tel.counter("drained_labels"), 2);
+        assert!(orcl_sched.rtt_p95().is_some(), "drained completion feeds the RTT window");
+    }
 }

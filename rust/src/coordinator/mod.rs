@@ -27,11 +27,22 @@
 //! and applies per-oracle backpressure — mirroring the prediction plane's
 //! `BatchScheduler` on the labeling leg.
 //!
+//! Both batched planes share one dispatch discipline: [`dispatch`] holds
+//! the extracted trigger/outstanding/backpressure state machine
+//! ([`dispatch::DispatchCore`]) behind a routing [`dispatch::Policy`].
+//! The static policies (least-outstanding for the oracle plane,
+//! round-robin for the prediction exchange) reproduce the pre-extraction
+//! schedulers bit-for-bit; the opt-in adaptive policy
+//! ([`crate::config::SchedPolicy::Adaptive`]) adds per-endpoint EWMA
+//! latency tracking, least-estimated-completion-time routing, adaptive
+//! batch sizing, and health/eviction of stalled endpoints.
+//!
 //! [`hosts`] holds the per-kernel host loops (prediction / training /
 //! generator / oracle ranks) and [`workflow`] wires everything into threads
 //! over a [`crate::comm::World`].
 
 pub mod buffers;
+pub mod dispatch;
 pub mod exchange;
 pub mod hosts;
 pub mod manager;

@@ -8,13 +8,18 @@
 //! * **Coalescing** — buffered inputs form micro-batches under
 //!   `AlSetting::oracle_batch`: dispatch as soon as `max_size` inputs are
 //!   queued, or when the queue head has waited `max_delay` (partial batch).
-//! * **Latency-aware routing** — each batch goes to the oracle with the
-//!   fewest batches in flight (ties break to the lowest rank index, which
-//!   keeps single-oracle runs deterministic). Oracles have wildly
-//!   heterogeneous latencies (DFT ≈ 1 h, xTB ≈ 10 s — SI §S2.2, modeled by
+//! * **Latency-aware routing** — under the default static policy each
+//!   batch goes to the oracle with the fewest batches in flight (ties
+//!   break to the lowest rank index, which keeps single-oracle runs
+//!   deterministic). Oracles have wildly heterogeneous latencies (DFT ≈
+//!   1 h, xTB ≈ 10 s — SI §S2.2, modeled by
 //!   [`crate::kernels::oracles::LatencyOracle`]); least-outstanding routing
 //!   feeds fast oracles proportionally more work without any latency
-//!   estimation.
+//!   estimation. With `sched_policy = "adaptive"`
+//!   ([`crate::config::SchedPolicy::Adaptive`]) the shared dispatch core
+//!   ([`crate::coordinator::dispatch`]) upgrades this to EWMA
+//!   least-estimated-completion-time routing with per-oracle batch sizing
+//!   and health/eviction — see [`OracleScheduler::check_health`].
 //! * **Backpressure** — at most `max_outstanding` batches in flight per
 //!   oracle; beyond that, inputs wait in the
 //!   [`crate::coordinator::buffers::OracleBuffer`] in FIFO order, where
@@ -22,20 +27,21 @@
 //!   (rescore replacements route through the scheduler's queue clock via
 //!   [`OracleScheduler::sync_queue`]).
 //!
-//! The scheduler is a pure state machine over an *external* queue (the
-//! Manager's `OracleBuffer` — selection staging and scheduling share one
-//! row store, so nothing is copied between them): callers inject `now` and
-//! the current queue length, making trigger/backpressure semantics
-//! unit-testable without threads or sleeps. Wire frames are
-//! `TAG_ORACLE_BATCH` / `TAG_ORACLE_BATCH_RESULT`
+//! The scheduler is a thin facade over the shared
+//! [`crate::coordinator::dispatch::DispatchCore`] state machine, keeping
+//! the queue external (the Manager's `OracleBuffer` — selection staging and
+//! scheduling share one row store, so nothing is copied between them):
+//! callers inject `now` and the current queue length, making
+//! trigger/backpressure semantics unit-testable without threads or sleeps.
+//! Wire frames are `TAG_ORACLE_BATCH` / `TAG_ORACLE_BATCH_RESULT`
 //! ([`crate::comm::protocol`]); the legacy per-label path
 //! (`TAG_TO_ORACLE`/`TAG_ORACLE_RESULT`) is preserved bit-compatible and
 //! remains the default ([`crate::config::OracleMode::PerLabel`]).
 
-use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::config::BatchSetting;
+use crate::config::{BatchSetting, SchedPolicy, SchedSetting};
+use crate::coordinator::dispatch::{BuiltinPolicy, DispatchConfig, DispatchCore, Eviction};
 
 /// A dispatch decision: send batch `id` with `take` queue-head inputs to
 /// oracle index `oracle`.
@@ -48,42 +54,34 @@ pub struct OracleDispatch {
     pub take: usize,
 }
 
-/// One batch in flight (for drain accounting and completion routing).
-#[derive(Debug, Clone, Copy)]
-struct InFlight {
-    oracle: usize,
-    items: usize,
-}
-
-/// Size-/deadline-triggered micro-batching with least-outstanding oracle
+/// Size-/deadline-triggered micro-batching with policy-driven oracle
 /// routing and per-oracle backpressure. See the module docs for semantics.
 #[derive(Debug)]
 pub struct OracleScheduler {
-    max_size: usize,
-    max_delay: Duration,
-    max_outstanding: usize,
-    /// Batches in flight per oracle.
-    outstanding: Vec<usize>,
-    inflight: HashMap<u64, InFlight>,
+    core: DispatchCore<BuiltinPolicy>,
     /// Deadline clock: when the queue last became non-empty, or the last
     /// dispatch left a non-empty remainder — whichever is later. The
     /// deadline trigger fires `max_delay` after this instant, so a partial
     /// batch waits at most `max_delay` behind the batch dispatched before
     /// it.
     queued_since: Option<Instant>,
-    next_id: u64,
 }
 
 impl OracleScheduler {
+    /// Static-policy scheduler (PR-5 semantics, bit-for-bit).
     pub fn new(batch: &BatchSetting, n_oracles: usize) -> Self {
+        Self::with_policy(batch, &SchedSetting::default(), n_oracles)
+    }
+
+    /// Scheduler with the configured routing policy (`sched_*` knobs).
+    pub fn with_policy(batch: &BatchSetting, sched: &SchedSetting, n_oracles: usize) -> Self {
+        let policy = match sched.policy {
+            SchedPolicy::Static => BuiltinPolicy::least_outstanding(),
+            SchedPolicy::Adaptive => BuiltinPolicy::adaptive(),
+        };
         OracleScheduler {
-            max_size: batch.max_size.max(1),
-            max_delay: batch.max_delay,
-            max_outstanding: batch.max_outstanding.max(1),
-            outstanding: vec![0; n_oracles.max(1)],
-            inflight: HashMap::new(),
+            core: DispatchCore::new(DispatchConfig::new(batch, sched), policy, n_oracles),
             queued_since: None,
-            next_id: 0,
         }
     }
 
@@ -110,41 +108,12 @@ impl OracleScheduler {
 
     /// Batches currently in flight across the pool.
     pub fn in_flight(&self) -> usize {
-        self.outstanding.iter().sum()
+        self.core.in_flight()
     }
 
-    /// Items currently in flight across the pool (diagnostics/telemetry;
-    /// the Manager's shutdown drain waits on [`OracleScheduler::in_flight`]
-    /// batches — a latency-scaled, item-aware drain bound is a ROADMAP
-    /// follow-up).
+    /// Items currently in flight across the pool.
     pub fn in_flight_items(&self) -> usize {
-        self.inflight.values().map(|f| f.items).sum()
-    }
-
-    /// Whether a dispatch trigger (size or deadline) has fired for a queue
-    /// of `queue_len` rows.
-    fn triggered(&self, queue_len: usize, now: Instant) -> bool {
-        if queue_len == 0 {
-            return false;
-        }
-        if queue_len >= self.max_size {
-            return true; // size trigger preempts the deadline
-        }
-        self.queued_since
-            .map(|t| now.duration_since(t) >= self.max_delay)
-            .unwrap_or(false)
-    }
-
-    /// The least-loaded oracle with spare capacity (lowest index on ties —
-    /// deterministic). `None` = every oracle saturated (backpressure).
-    fn pick_oracle(&self) -> Option<usize> {
-        let (best, &count) = self
-            .outstanding
-            .iter()
-            .enumerate()
-            .min_by_key(|&(_, &c)| c)
-            .expect("at least one oracle");
-        (count < self.max_outstanding).then_some(best)
+        self.core.in_flight_items()
     }
 
     /// Decide one dispatch for a queue of `queue_len` rows, bounded by
@@ -159,41 +128,45 @@ impl OracleScheduler {
         now: Instant,
         budget: Option<u64>,
     ) -> Option<OracleDispatch> {
-        if budget == Some(0) {
-            return None;
-        }
-        if !self.triggered(queue_len, now) {
-            return None;
-        }
-        let oracle = self.pick_oracle()?;
-        let mut take = queue_len.min(self.max_size);
-        if let Some(b) = budget {
-            take = take.min(b as usize);
-        }
-        debug_assert!(take > 0);
-        let id = self.next_id;
-        self.next_id += 1;
-        self.outstanding[oracle] += 1;
-        self.inflight.insert(id, InFlight { oracle, items: take });
-        self.queued_since = if queue_len > take { Some(now) } else { None };
-        Some(OracleDispatch { id, oracle, take })
+        let d = self.core.try_dispatch(queue_len, self.queued_since, now, budget)?;
+        self.queued_since = if queue_len > d.take { Some(now) } else { None };
+        Some(OracleDispatch { id: d.id, oracle: d.endpoint, take: d.take })
     }
 
-    /// A batch's result frame arrived. Returns `(oracle, items)` of the
-    /// completed batch, or `None` for an unknown id (orphan/duplicate —
-    /// the caller should still ingest the labels, they were paid for).
-    pub fn complete(&mut self, id: u64) -> Option<(usize, usize)> {
-        let fl = self.inflight.remove(&id)?;
-        debug_assert!(self.outstanding[fl.oracle] > 0);
-        self.outstanding[fl.oracle] = self.outstanding[fl.oracle].saturating_sub(1);
-        Some((fl.oracle, fl.items))
+    /// A batch's result frame arrived at `now`. Returns `(oracle, items)`
+    /// of the completed batch, or `None` for an unknown id
+    /// (orphan/duplicate, or an evicted-then-relabeled batch — the caller
+    /// should still ingest the labels, they were paid for). The timestamp
+    /// feeds the adaptive policy's EWMA and the drain bound's RTT window.
+    pub fn complete(&mut self, id: u64, now: Instant) -> Option<(usize, usize)> {
+        self.core.complete(id, now).map(|c| (c.endpoint, c.items))
+    }
+
+    /// Evict unhealthy oracles (timed-out or consecutively slow under the
+    /// adaptive policy) and return their in-flight batches; the caller must
+    /// requeue each eviction's inputs so they are relabeled elsewhere.
+    /// No-op under the static policy.
+    pub fn check_health(&mut self, now: Instant) -> Vec<Eviction> {
+        self.core.check_health(now)
+    }
+
+    /// Shutdown drain bound: `max(base, sched_drain_factor × p95 RTT)`.
+    pub fn drain_bound(&self, base: Duration) -> Duration {
+        self.core.drain_bound(base)
+    }
+
+    /// p95 of observed batch round-trips.
+    pub fn rtt_p95(&self) -> Option<Duration> {
+        self.core.rtt_p95()
     }
 }
 
 #[cfg(test)]
 mod tests {
     //! Core trigger/routing semantics; the backpressure + budget properties
-    //! live in `rust/tests/test_props.rs` and the end-to-end behavior in
+    //! live in `rust/tests/test_props.rs`, the static-policy equivalence
+    //! with the pre-extraction scheduler in
+    //! `rust/tests/test_dispatch_core.rs`, and the end-to-end behavior in
     //! `test_determinism.rs` / `comm_overhead`.
     use super::*;
 
@@ -248,7 +221,7 @@ mod tests {
         assert_eq!(picks, vec![0, 1, 2, 0]);
         // oracle 1 frees first (it is faster): next batch routes to it
         let id = 1; // second dispatch went to oracle 1
-        assert_eq!(s.complete(id), Some((1, 1)));
+        assert_eq!(s.complete(id, t0), Some((1, 1)));
         s.note_enqueued(t0);
         assert_eq!(s.try_dispatch(1, t0, None).unwrap().oracle, 1);
     }
@@ -275,10 +248,10 @@ mod tests {
         // both oracles saturated at max_outstanding = 1
         s.note_enqueued(t0);
         assert!(s.try_dispatch(5, t0, None).is_none(), "backpressure");
-        assert_eq!(s.complete(a.id), Some((a.oracle, 2)));
-        assert_eq!(s.complete(a.id), None, "duplicate completion is an orphan");
-        assert_eq!(s.complete(99), None, "unknown id is an orphan");
-        assert_eq!(s.complete(b.id), Some((b.oracle, 2)));
+        assert_eq!(s.complete(a.id, t0), Some((a.oracle, 2)));
+        assert_eq!(s.complete(a.id, t0), None, "duplicate completion is an orphan");
+        assert_eq!(s.complete(99, t0), None, "unknown id is an orphan");
+        assert_eq!(s.complete(b.id, t0), Some((b.oracle, 2)));
         assert_eq!(s.in_flight(), 0);
         assert_eq!(s.in_flight_items(), 0);
     }
@@ -294,5 +267,19 @@ mod tests {
         // rescore pruned everything: clock stops until a fresh enqueue
         s.sync_queue(0, t0 + Duration::from_millis(20));
         assert!(s.try_dispatch(2, t0 + Duration::from_secs(1), None).is_none());
+    }
+
+    #[test]
+    fn static_policy_health_is_inert_and_drain_scales() {
+        let mut s = sched(2, 0, 1, 2);
+        let t0 = Instant::now();
+        s.note_enqueued(t0);
+        let d = s.try_dispatch(2, t0, None).unwrap();
+        assert!(s.check_health(t0 + Duration::from_secs(10)).is_empty());
+        assert_eq!(s.drain_bound(Duration::from_millis(300)), Duration::from_millis(300));
+        // one slow round-trip stretches the drain bound past the base
+        s.complete(d.id, t0 + Duration::from_millis(500));
+        assert!(s.drain_bound(Duration::from_millis(300)) >= Duration::from_millis(1_400));
+        assert!(s.rtt_p95().unwrap() >= Duration::from_millis(500));
     }
 }

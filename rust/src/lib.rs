@@ -127,6 +127,32 @@
 //! bit-compatible. `BENCH_oracle.json` tracks green-flow messages per
 //! labeled sample (≥ 2× fewer at batch 8 with 4 oracles).
 //!
+//! ## Adaptive dispatch core
+//!
+//! Both batched planes now share one scheduler state machine:
+//! [`coordinator::dispatch::DispatchCore`] owns the size-/deadline
+//! triggers, per-endpoint outstanding counts, backpressure, and sequential
+//! batch ids, behind a routing [`coordinator::dispatch::Policy`]. The
+//! static policies (round-robin for prediction shards, least-outstanding
+//! for oracles) reproduce the pre-extraction schedulers bit-for-bit and
+//! remain the default — `test_determinism` and the equivalence suite in
+//! `rust/tests/test_dispatch_core.rs` pin this. Opting in with
+//! `sched_policy = "adaptive"` turns on per-endpoint EWMA latency tracking
+//! from completion timestamps: batches route to the endpoint with the
+//! least estimated completion time (deterministic lowest-index ties),
+//! batch caps shrink proportionally for slow endpoints (`sched_ewma_alpha`),
+//! and a health plane evicts endpoints that time out (`sched_timeout_ms`)
+//! or deliver `sched_evict_after` consecutive slow completions
+//! (`sched_slow_factor ×` the fastest peer) — their in-flight work is
+//! requeued and relabeled/re-served elsewhere, the endpoint rejoins after
+//! `sched_rejoin_ms` or immediately when a late reply proves recovery, and
+//! the last active endpoint is never evicted. The Manager's shutdown drain
+//! bound scales with observed p95 oracle RTT (`sched_drain_factor`)
+//! instead of a fixed 300 ms, so paid-for labels survive slow pools.
+//! `BENCH_sched.json` (`cargo bench --bench comm_overhead`) tracks the
+//! labels/sec win of adaptive routing over static least-outstanding under
+//! a heterogeneous-latency oracle pool.
+//!
 //! ## Performance
 //!
 //! Perf-tracking benches write machine-readable JSON next to their

@@ -40,6 +40,66 @@ impl Timer {
     }
 }
 
+/// Bounded ring of recent duration samples with percentile queries.
+///
+/// [`Timer`] keeps count/total/max only, which is enough for means but not
+/// for tail-aware decisions (the dispatch core scales the Manager's shutdown
+/// drain bound with observed p95 oracle latency). This window keeps the last
+/// `cap` samples and answers percentiles by nearest-rank over a sorted copy —
+/// O(n log n) per query on a small bounded n, called once per drain.
+#[derive(Debug, Clone)]
+pub struct LatencyWindow {
+    samples: Vec<Duration>,
+    next: usize,
+    cap: usize,
+}
+
+impl Default for LatencyWindow {
+    fn default() -> Self {
+        LatencyWindow::new(256)
+    }
+}
+
+impl LatencyWindow {
+    pub fn new(cap: usize) -> Self {
+        LatencyWindow { samples: Vec::new(), next: 0, cap: cap.max(1) }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        if self.samples.len() < self.cap {
+            self.samples.push(d);
+        } else {
+            self.samples[self.next] = d;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Nearest-rank percentile (`q` in [0, 1]) over the retained samples.
+    pub fn percentile(&self, q: f64) -> Option<Duration> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize)
+            .saturating_sub(1)
+            .min(sorted.len() - 1);
+        Some(sorted[rank])
+    }
+
+    pub fn p95(&self) -> Option<Duration> {
+        self.percentile(0.95)
+    }
+}
+
 /// One kernel instance's telemetry.
 #[derive(Debug, Default, Clone)]
 pub struct KernelTelemetry {
@@ -196,6 +256,31 @@ mod tests {
         assert_eq!(t.count, 2);
         assert_eq!(t.max, Duration::from_millis(30));
         assert!((t.mean_ms() - 20.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn latency_window_percentiles() {
+        let mut w = LatencyWindow::new(100);
+        assert_eq!(w.p95(), None);
+        for ms in 1..=100u64 {
+            w.record(Duration::from_millis(ms));
+        }
+        assert_eq!(w.percentile(0.5), Some(Duration::from_millis(50)));
+        assert_eq!(w.p95(), Some(Duration::from_millis(95)));
+        assert_eq!(w.percentile(1.0), Some(Duration::from_millis(100)));
+        assert_eq!(w.percentile(0.0), Some(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn latency_window_evicts_oldest_beyond_cap() {
+        let mut w = LatencyWindow::new(4);
+        for ms in [1u64, 2, 3, 4, 100, 100] {
+            w.record(Duration::from_millis(ms));
+        }
+        assert_eq!(w.len(), 4);
+        // 1 and 2 were overwritten; the max of the retained set is 100.
+        assert_eq!(w.percentile(1.0), Some(Duration::from_millis(100)));
+        assert_eq!(w.percentile(0.0), Some(Duration::from_millis(3)));
     }
 
     #[test]

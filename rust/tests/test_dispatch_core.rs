@@ -1,0 +1,591 @@
+//! Equivalence + eviction pins for the shared dispatch core.
+//!
+//! Two layers of proof for this PR's refactor:
+//!
+//! 1. **Static-policy equivalence** — the extracted
+//!    [`pal::coordinator::dispatch::DispatchCore`] behind the default
+//!    static policies must be *bit-identical* to the pre-extraction
+//!    schedulers. The reference implementations below are verbatim ports
+//!    of the PR-5 `OracleScheduler` / `BatchScheduler` (captured from git
+//!    history before the extraction), driven side-by-side with the real
+//!    schedulers through seeded random op sequences: enqueues, simulated
+//!    clock advances (no sleeps), dispatch attempts under random label
+//!    budgets, out-of-order completions, and rescore queue resyncs. Every
+//!    dispatch decision `(id, endpoint, take)`, origin-sorted batch
+//!    composition, trigger timing, backpressure refusal, and in-flight
+//!    count must match at every step, across a grid of batch settings and
+//!    pool sizes.
+//!
+//!    One intentional divergence: the round-robin reference applies this
+//!    PR's cursor bugfix (advance past the shard *actually chosen*, not
+//!    the saturated preferred one). The buggy pre-fix sequence is pinned
+//!    negatively in `exchange.rs::rr_cursor_advances_past_chosen_shard_not_preferred`.
+//!
+//! 2. **Eviction end-to-end** — a full Workflow run under the adaptive
+//!    policy where one oracle stops replying mid-run (simulated by a
+//!    per-item latency far past `sched_timeout_ms`). The health plane must
+//!    evict it, requeue its in-flight inputs, and relabel them elsewhere —
+//!    with a strict label budget the run can only reach `max_labels` if
+//!    the requeue released the stalled batch's budget headroom, so the
+//!    stop criterion itself proves zero lost labels.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pal::config::{
+    AlSetting, BatchSetting, ExchangeMode, OracleMode, SchedPolicy, SchedSetting, StopCriteria,
+};
+use pal::coordinator::exchange::BatchScheduler;
+use pal::coordinator::oracle_plane::OracleScheduler;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::oracles::{LatencyOracle, PesOracle};
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::potential::{MullerBrown, Pes};
+use pal::rng::Rng;
+use pal::sim::workload::SyntheticModel;
+
+// ---------------------------------------------------------------------------
+// Reference: the PR-5 OracleScheduler, verbatim (pre-extraction)
+// ---------------------------------------------------------------------------
+
+struct RefOracleScheduler {
+    max_size: usize,
+    max_delay: Duration,
+    max_outstanding: usize,
+    outstanding: Vec<usize>,
+    inflight: HashMap<u64, (usize, usize)>, // id -> (oracle, items)
+    queued_since: Option<Instant>,
+    next_id: u64,
+}
+
+impl RefOracleScheduler {
+    fn new(batch: &BatchSetting, n_oracles: usize) -> Self {
+        RefOracleScheduler {
+            max_size: batch.max_size.max(1),
+            max_delay: batch.max_delay,
+            max_outstanding: batch.max_outstanding.max(1),
+            outstanding: vec![0; n_oracles.max(1)],
+            inflight: HashMap::new(),
+            queued_since: None,
+            next_id: 0,
+        }
+    }
+
+    fn note_enqueued(&mut self, now: Instant) {
+        if self.queued_since.is_none() {
+            self.queued_since = Some(now);
+        }
+    }
+
+    fn sync_queue(&mut self, queue_len: usize, now: Instant) {
+        if queue_len == 0 {
+            self.queued_since = None;
+        } else if self.queued_since.is_none() {
+            self.queued_since = Some(now);
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        self.outstanding.iter().sum()
+    }
+
+    fn in_flight_items(&self) -> usize {
+        self.inflight.values().map(|&(_, items)| items).sum()
+    }
+
+    fn triggered(&self, queue_len: usize, now: Instant) -> bool {
+        if queue_len == 0 {
+            return false;
+        }
+        if queue_len >= self.max_size {
+            return true;
+        }
+        self.queued_since
+            .map(|t| now.duration_since(t) >= self.max_delay)
+            .unwrap_or(false)
+    }
+
+    /// Old routing: global least-outstanding, then the capacity check.
+    fn pick_oracle(&self) -> Option<usize> {
+        let (best, &count) = self
+            .outstanding
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &c)| c)
+            .expect("at least one oracle");
+        (count < self.max_outstanding).then_some(best)
+    }
+
+    fn try_dispatch(
+        &mut self,
+        queue_len: usize,
+        now: Instant,
+        budget: Option<u64>,
+    ) -> Option<(u64, usize, usize)> {
+        if budget == Some(0) {
+            return None;
+        }
+        if !self.triggered(queue_len, now) {
+            return None;
+        }
+        let oracle = self.pick_oracle()?;
+        let mut take = queue_len.min(self.max_size);
+        if let Some(b) = budget {
+            take = take.min(b as usize);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outstanding[oracle] += 1;
+        self.inflight.insert(id, (oracle, take));
+        self.queued_since = if queue_len > take { Some(now) } else { None };
+        Some((id, oracle, take))
+    }
+
+    fn complete(&mut self, id: u64) -> Option<(usize, usize)> {
+        let (oracle, items) = self.inflight.remove(&id)?;
+        self.outstanding[oracle] = self.outstanding[oracle].saturating_sub(1);
+        Some((oracle, items))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference: the PR-5 BatchScheduler, verbatim except the cursor bugfix
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct RefDispatch {
+    id: u64,
+    shard: usize,
+    origins: Vec<usize>,
+    items: Vec<Vec<f32>>,
+}
+
+struct RefBatchScheduler {
+    queue: VecDeque<(usize, Instant, Vec<f32>)>, // (origin, enqueued, row)
+    max_size: usize,
+    max_delay: Duration,
+    max_outstanding: usize,
+    outstanding: Vec<usize>,
+    inflight: HashMap<u64, (usize, usize)>, // id -> (shard, items)
+    rr_cursor: usize,
+    next_id: u64,
+}
+
+impl RefBatchScheduler {
+    fn new(batch: &BatchSetting, n_shards: usize) -> Self {
+        RefBatchScheduler {
+            queue: VecDeque::new(),
+            max_size: batch.max_size.max(1),
+            max_delay: batch.max_delay,
+            max_outstanding: batch.max_outstanding.max(1),
+            outstanding: vec![0; n_shards.max(1)],
+            inflight: HashMap::new(),
+            rr_cursor: 0,
+            next_id: 0,
+        }
+    }
+
+    fn push(&mut self, origin: usize, data: &[f32], now: Instant) {
+        self.queue.push_back((origin, now, data.to_vec()));
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.outstanding.iter().sum()
+    }
+
+    fn triggered(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.max_size {
+            return true;
+        }
+        self.queue
+            .front()
+            .map(|&(_, t, _)| now.duration_since(t) >= self.max_delay)
+            .unwrap_or(false)
+    }
+
+    /// Old routing (round-robin preferred, least-outstanding fallback,
+    /// backpressure before any cursor change) with this PR's fix applied:
+    /// the cursor advances past the shard actually chosen.
+    fn pick_shard(&mut self) -> Option<usize> {
+        let n = self.outstanding.len();
+        let preferred = self.rr_cursor % n;
+        let shard = if self.outstanding[preferred] < self.max_outstanding {
+            preferred
+        } else {
+            let (best, &count) = self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &c)| c)
+                .expect("at least one shard");
+            if count >= self.max_outstanding {
+                return None;
+            }
+            best
+        };
+        self.rr_cursor = (shard + 1) % n;
+        Some(shard)
+    }
+
+    fn try_dispatch(&mut self, now: Instant) -> Option<RefDispatch> {
+        if !self.triggered(now) {
+            return None;
+        }
+        let shard = self.pick_shard()?;
+        let n = self.queue.len().min(self.max_size);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| self.queue[i].0);
+        let mut origins = Vec::with_capacity(n);
+        let mut items = Vec::with_capacity(n);
+        for &i in &order {
+            origins.push(self.queue[i].0);
+            items.push(self.queue[i].2.clone());
+        }
+        self.queue.drain(..n);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outstanding[shard] += 1;
+        self.inflight.insert(id, (shard, n));
+        Some(RefDispatch { id, shard, origins, items })
+    }
+
+    fn complete(&mut self, id: u64) -> Option<(usize, usize)> {
+        let (shard, items) = self.inflight.remove(&id)?;
+        self.outstanding[shard] = self.outstanding[shard].saturating_sub(1);
+        Some((shard, items))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seeded op-sequence drivers
+// ---------------------------------------------------------------------------
+
+const STEPS: usize = 600;
+
+fn oracle_equivalence_run(cfg: &BatchSetting, n_oracles: usize, seed: u64) {
+    let mut real = OracleScheduler::new(cfg, n_oracles);
+    let mut reference = RefOracleScheduler::new(cfg, n_oracles);
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut clock_ms: u64 = 0;
+    let mut queue_len: usize = 0;
+    let mut live: Vec<u64> = Vec::new();
+    let ctx = format!(
+        "oracle cfg (size {}, delay {:?}, outstanding {}, pool {n_oracles}, seed {seed})",
+        cfg.max_size, cfg.max_delay, cfg.max_outstanding
+    );
+
+    for step in 0..STEPS {
+        let now = t0 + Duration::from_millis(clock_ms);
+        match rng.below(5) {
+            0 => {
+                queue_len += rng.below(3) + 1;
+                real.note_enqueued(now);
+                reference.note_enqueued(now);
+            }
+            1 => clock_ms += rng.below(9) as u64,
+            2 => {
+                let budget = match rng.below(3) {
+                    0 => None,
+                    _ => Some(rng.below(11) as u64),
+                };
+                let a = real.try_dispatch(queue_len, now, budget).map(|d| (d.id, d.oracle, d.take));
+                let b = reference.try_dispatch(queue_len, now, budget);
+                assert_eq!(a, b, "step {step}, {ctx}: dispatch diverged");
+                if let Some((id, _, take)) = a {
+                    assert!(take > 0, "step {step}, {ctx}: empty batch");
+                    queue_len -= take.min(queue_len);
+                    live.push(id);
+                }
+            }
+            3 => {
+                if let Some(i) = (!live.is_empty()).then(|| rng.below(live.len())) {
+                    let id = live.swap_remove(i);
+                    assert_eq!(
+                        real.complete(id, now),
+                        reference.complete(id),
+                        "step {step}, {ctx}: completion diverged"
+                    );
+                }
+            }
+            _ => {
+                // rescore resync: the external buffer was pruned/replaced
+                queue_len = rng.below(queue_len + 1);
+                real.sync_queue(queue_len, now);
+                reference.sync_queue(queue_len, now);
+            }
+        }
+        assert_eq!(real.in_flight(), reference.in_flight(), "step {step}, {ctx}");
+        assert_eq!(real.in_flight_items(), reference.in_flight_items(), "step {step}, {ctx}");
+    }
+}
+
+fn batch_equivalence_run(cfg: &BatchSetting, n_shards: usize, seed: u64) {
+    let mut real = BatchScheduler::new(cfg, n_shards);
+    let mut reference = RefBatchScheduler::new(cfg, n_shards);
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut clock_ms: u64 = 0;
+    let mut live: Vec<u64> = Vec::new();
+    let mut pushed = 0usize;
+    let ctx = format!(
+        "batch cfg (size {}, delay {:?}, outstanding {}, shards {n_shards}, seed {seed})",
+        cfg.max_size, cfg.max_delay, cfg.max_outstanding
+    );
+
+    for step in 0..STEPS {
+        let now = t0 + Duration::from_millis(clock_ms);
+        match rng.below(4) {
+            0 => {
+                for _ in 0..rng.below(3) + 1 {
+                    let origin = rng.below(4);
+                    let row = [pushed as f32, origin as f32];
+                    real.push(origin, &row, now);
+                    reference.push(origin, &row, now);
+                    pushed += 1;
+                }
+            }
+            1 => clock_ms += rng.below(9) as u64,
+            2 => {
+                let a = real.try_dispatch(now);
+                let b = reference.try_dispatch(now);
+                match (&a, &b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        assert_eq!((x.id, x.shard), (y.id, y.shard), "step {step}, {ctx}");
+                        assert_eq!(x.origins, y.origins, "step {step}, {ctx}: origin order");
+                        assert_eq!(x.items.len(), y.items.len(), "step {step}, {ctx}");
+                        for i in 0..y.items.len() {
+                            assert_eq!(
+                                x.items.row(i),
+                                y.items[i].as_slice(),
+                                "step {step}, {ctx}: row {i}"
+                            );
+                        }
+                        live.push(x.id);
+                    }
+                    _ => panic!("step {step}, {ctx}: dispatch diverged ({a:?} vs {b:?})"),
+                }
+            }
+            _ => {
+                if let Some(i) = (!live.is_empty()).then(|| rng.below(live.len())) {
+                    let id = live.swap_remove(i);
+                    assert_eq!(
+                        real.complete(id, now),
+                        reference.complete(id),
+                        "step {step}, {ctx}: completion diverged"
+                    );
+                }
+            }
+        }
+        assert_eq!(real.queue_len(), reference.queue_len(), "step {step}, {ctx}");
+        assert_eq!(real.in_flight(), reference.in_flight(), "step {step}, {ctx}");
+    }
+}
+
+/// (max_size, max_delay_ms, max_outstanding, pool size) grid: degenerate
+/// single-endpoint pools, size- and deadline-dominated triggers, deep and
+/// shallow backpressure.
+const GRID: &[(usize, u64, usize, usize)] = &[
+    (1, 0, 1, 1),
+    (2, 5, 1, 2),
+    (4, 0, 2, 3),
+    (8, 5, 3, 5),
+    (3, 7, 2, 2),
+    (6, 2, 1, 4),
+];
+
+fn grid_setting(max_size: usize, delay_ms: u64, max_outstanding: usize) -> BatchSetting {
+    BatchSetting {
+        max_size,
+        max_delay: Duration::from_millis(delay_ms),
+        max_outstanding,
+    }
+}
+
+#[test]
+fn static_oracle_scheduler_is_bit_identical_to_pr5() {
+    for (k, &(size, delay, outstanding, pool)) in GRID.iter().enumerate() {
+        let cfg = grid_setting(size, delay, outstanding);
+        for rep in 0..3u64 {
+            oracle_equivalence_run(&cfg, pool, 0xD15_0000 + 31 * k as u64 + rep);
+        }
+    }
+}
+
+#[test]
+fn static_batch_scheduler_is_bit_identical_to_pr5() {
+    for (k, &(size, delay, outstanding, pool)) in GRID.iter().enumerate() {
+        let cfg = grid_setting(size, delay, outstanding);
+        for rep in 0..3u64 {
+            batch_equivalence_run(&cfg, pool, 0xBA7C_0000 + 31 * k as u64 + rep);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eviction end-to-end: an oracle that stops replying mid-run
+// ---------------------------------------------------------------------------
+
+/// Wire layout for a 1-"atom" PES with 1 global and 1 state:
+/// input `[x, y, z, g, s]`, label `[e, fx, fy, fz]`.
+const IN_DIM: usize = 5;
+const OUT_DIM: usize = 4;
+
+const GENS: usize = 4;
+const ORACLES: usize = 4;
+const LABELS: u64 = 24;
+
+/// Fixed-seed random walker (ignores checked predictions).
+struct MbWalker {
+    rng: Rng,
+    pos: [f32; 2],
+}
+
+impl MbWalker {
+    fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let pes = MullerBrown::default();
+        let x0 = pes.initial_geometry(&mut rng);
+        MbWalker { rng, pos: [x0[0], x0[1]] }
+    }
+}
+
+impl Generator for MbWalker {
+    fn generate_new_data(&mut self, _data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        self.pos[0] += (self.rng.normal() * 0.08) as f32;
+        self.pos[1] += (self.rng.normal() * 0.08) as f32;
+        (false, vec![self.pos[0], self.pos[1], 0.0, 0.0, 1.0])
+    }
+}
+
+/// Select every input (the run is throughput-, not selection-, focused).
+struct SelectAllUtils;
+
+impl Utils for SelectAllUtils {
+    fn prediction_check(
+        &mut self,
+        list_data_to_pred: &[Vec<f32>],
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let checked = pal::coordinator::selection::committee_mean(preds_per_model);
+        (list_data_to_pred.to_vec(), checked)
+    }
+}
+
+fn eviction_setting() -> AlSetting {
+    AlSetting {
+        result_dir: "/tmp/pal-eviction".into(),
+        gene_process: GENS,
+        pred_process: 1,
+        ml_process: 0, // training disabled: the green flow is the subject
+        orcl_process: ORACLES,
+        committee_size: Some(1),
+        exchange_mode: ExchangeMode::Batched,
+        retrain_size: 10_000, // never flush
+        strict_label_budget: true,
+        seed: 11,
+        batch: BatchSetting {
+            max_size: GENS,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        },
+        oracle_mode: OracleMode::Batched,
+        oracle_batch: BatchSetting {
+            max_size: 4,
+            max_delay: Duration::from_millis(1),
+            max_outstanding: 1,
+        },
+        sched: SchedSetting {
+            policy: SchedPolicy::Adaptive,
+            // evict on in-flight age; the stalled oracle sleeps far past it
+            timeout: Some(Duration::from_millis(120)),
+            // no timed rejoin within the test window — only a late reply
+            // (proof of life) can readmit the stalled oracle
+            rejoin_backoff: Duration::from_secs(120),
+            ..Default::default()
+        },
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(LABELS),
+            min_retrain_rounds: 0,
+            min_train_epochs: 0,
+            max_wall: Some(Duration::from_secs(60)),
+        },
+        ..Default::default()
+    }
+}
+
+fn eviction_kernels() -> KernelSet {
+    let generators = (0..GENS)
+        .map(|i| {
+            let seed = 300 + i as u64;
+            Box::new(move || Box::new(MbWalker::new(seed)) as Box<dyn Generator>)
+                as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    // oracle 0 stalls: 400 ms per item dwarfs the 120 ms eviction timeout,
+    // so its first batch times out mid-run; oracles 1-3 label instantly
+    let oracles = (0..ORACLES)
+        .map(|i| {
+            Box::new(move || {
+                let inner = PesOracle::fixed(MullerBrown::default(), 1);
+                if i == 0 {
+                    Box::new(LatencyOracle::new(inner, Duration::from_millis(400)))
+                        as Box<dyn Oracle>
+                } else {
+                    Box::new(inner) as Box<dyn Oracle>
+                }
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _member: usize| {
+        Box::new(SyntheticModel::new(IN_DIM, OUT_DIM, Duration::ZERO, Duration::ZERO, 8, mode))
+            as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(SelectAllUtils) as Box<dyn Utils>);
+    KernelSet { generators, oracles, model, utils }
+}
+
+/// The acceptance pin: with a strict label budget of `LABELS`, the stalled
+/// oracle's in-flight batch would strand its budget headroom forever —
+/// labels would plateau below `LABELS` and the run could only end by
+/// hitting `max_wall`. Reaching `max_labels` therefore proves the health
+/// plane evicted the stalled oracle, requeued its in-flight inputs,
+/// released their budget, and relabeled them on a live oracle: zero lost
+/// labels. A late reply from the evicted oracle may add duplicate labels
+/// (they were paid for), never fewer.
+#[test]
+fn stalled_oracle_is_evicted_and_its_labels_are_recovered() {
+    let report = Workflow::new(eviction_setting()).run(eviction_kernels()).unwrap();
+
+    assert!(
+        report.oracle_labels >= LABELS,
+        "labels lost to the stalled oracle: {} < {LABELS}",
+        report.oracle_labels
+    );
+    assert!(
+        report.wall < Duration::from_secs(50),
+        "run only finished via max_wall ({:?}): eviction did not recover the budget",
+        report.wall
+    );
+
+    let manager = &report.kernel("manager")[0];
+    assert!(
+        manager.counter("oracle_evictions") >= 1,
+        "stalled oracle was never evicted"
+    );
+    assert!(
+        manager.counter("requeued_inputs") >= 1,
+        "evicted batch's inputs were not requeued"
+    );
+    // every ingested label landed in the training buffer exactly once per
+    // result frame — duplicates (relabels + a late reply) allowed, losses not
+    assert!(manager.counter("labels") >= LABELS);
+}
