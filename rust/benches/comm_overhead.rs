@@ -12,10 +12,13 @@
 //! plane flush/weight-sync copy volume, (h) oracle-plane green-flow
 //! messages per labeled sample, batched vs per-label (`BENCH_oracle.json`),
 //! (i) adaptive vs static oracle routing under a heterogeneous-latency
-//! pool (`BENCH_sched.json`).
+//! pool (`BENCH_sched.json`), (j) fault recovery — one oracle killed at
+//! ~50% of the label budget vs a clean run, time-to-evict and the
+//! recovery wall-clock ratio (`BENCH_fault.json`, gated at 2x).
 //!
 //! Run: `cargo bench --bench comm_overhead`
-//! (append `-- sched-only` for just the scheduler comparison)
+//! (append `-- sched-only` for just the scheduler comparison, or
+//! `-- fault-only` for just the fault-recovery gate)
 //!
 //! Results are also written machine-readable to `BENCH_comm.json` so the
 //! perf trajectory is tracked across PRs.
@@ -29,8 +32,10 @@ use pal::comm::bus::{Src, World};
 use pal::comm::protocol::{
     decode_predict_batch_result, decode_predict_batch_result_rows, encode_predict_batch_result,
 };
+use pal::comm::FaultPlan;
 use pal::config::{
     AlSetting, BatchSetting, ExchangeMode, OracleMode, SchedPolicy, SchedSetting, StopCriteria,
+    Topology,
 };
 use pal::coordinator::selection::{
     committee_std_check, committee_std_check_batch, CommitteeStdUtils, SelectAllUtils,
@@ -557,12 +562,188 @@ fn sched_run(policy: SchedPolicy, labels: u64) -> (u64, f64) {
     (report.oracle_labels, report.wall.as_secs_f64())
 }
 
+/// One fault-recovery run: `(labels, wall_s, evictions, requeued_inputs,
+/// time-to-first-evict ms, failed ranks)`.
+struct FaultRun {
+    labels: u64,
+    wall_s: f64,
+    evictions: u64,
+    requeued: u64,
+    evict_ms: f64,
+    failed_ranks: Vec<usize>,
+}
+
+/// Strict-budget labeling run over 4 equal-cost oracles; with `kill`, a
+/// seeded [`FaultPlan`] kills the first oracle on its 4th batch arrival —
+/// about half of its share of the budget (each frame carries up to 8
+/// labels, the pool serves ~`labels / 4` per oracle). The Manager must
+/// evict the dead oracle, requeue its in-flight batch on the survivors,
+/// and still reach the full budget; the wall-clock ratio vs the clean run
+/// is the recovery cost the CI gate bounds.
+fn fault_run(kill: bool, labels: u64) -> FaultRun {
+    const GENS: usize = 8;
+    const ORACLES: usize = 4;
+    let s = AlSetting {
+        result_dir: "/tmp/pal-bench-fault".into(),
+        gene_process: GENS,
+        pred_process: 2,
+        ml_process: 0,
+        orcl_process: ORACLES,
+        committee_size: Some(2),
+        exchange_mode: ExchangeMode::Batched,
+        batch: BatchSetting {
+            max_size: GENS,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        },
+        oracle_mode: OracleMode::Batched,
+        oracle_batch: BatchSetting {
+            max_size: 8,
+            max_delay: Duration::from_millis(1),
+            max_outstanding: 2,
+        },
+        strict_label_budget: true,
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(labels),
+            max_wall: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let victim = Topology::new(&s).orcl_ranks()[0];
+    let generators = (0..GENS)
+        .map(|i| {
+            Box::new(move || {
+                Box::new(SyntheticGenerator::new(16, Duration::ZERO, u64::MAX, i as u64))
+                    as Box<dyn Generator>
+            }) as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..ORACLES)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle { label_cost: Duration::from_millis(2), out_dim: 2 })
+                    as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, _m: usize| {
+        Box::new(SyntheticModel::new(16, 16, Duration::ZERO, Duration::ZERO, 1, mode))
+            as Box<dyn Model>
+    });
+    let utils = Arc::new(|| Box::new(SelectAllUtils { max_per_iter: GENS }) as Box<dyn Utils>);
+    let mut wf = Workflow::new(s);
+    if kill {
+        wf = wf.with_faults(FaultPlan::default().kill_after_recvs(victim, 4));
+    }
+    let report = wf.run(KernelSet { generators, oracles, model, utils }).unwrap();
+    let manager = &report.kernel("manager")[0];
+    FaultRun {
+        labels: report.oracle_labels,
+        wall_s: report.wall.as_secs_f64(),
+        evictions: report.faults.oracle_evictions,
+        requeued: report.faults.requeued_inputs,
+        evict_ms: manager.timer("time_to_first_evict").mean_ms(),
+        failed_ranks: report.faults.failed_ranks.clone(),
+    }
+}
+
+/// Section (j): fault recovery vs a clean run. Returns whether the gate
+/// held (budget reached, oracle actually killed + evicted, recovery wall
+/// within 2x of clean).
+fn run_fault_section() -> bool {
+    const FAULT_LABELS: u64 = 240;
+    let clean = fault_run(false, FAULT_LABELS);
+    let killed = fault_run(true, FAULT_LABELS);
+    let lps_clean = clean.labels as f64 / clean.wall_s.max(1e-9);
+    let lps_killed = killed.labels as f64 / killed.wall_s.max(1e-9);
+    let recovery_ratio = killed.wall_s / clean.wall_s.max(1e-9);
+    let target_met = killed.labels >= FAULT_LABELS
+        && !killed.failed_ranks.is_empty()
+        && killed.evictions >= 1
+        && recovery_ratio <= 2.0;
+
+    let mut rep = Report::new(format!(
+        "fault recovery — one oracle killed at ~50% budget vs clean \
+         (4 oracles, {FAULT_LABELS} labels, strict budget)"
+    ));
+    rep.push(
+        Row::new("clean")
+            .field("labels", clean.labels)
+            .f("wall_s", clean.wall_s)
+            .f("labels_per_s", lps_clean),
+    );
+    rep.push(
+        Row::new("one oracle killed")
+            .field("labels", killed.labels)
+            .f("wall_s", killed.wall_s)
+            .f("labels_per_s", lps_killed)
+            .f("time_to_evict_ms", killed.evict_ms)
+            .field("requeued_inputs", killed.requeued)
+            .f("recovery_ratio_x", recovery_ratio),
+    );
+    rep.print();
+    println!(
+        "(killed run reached {} / {FAULT_LABELS} labels at {recovery_ratio:.2}x the clean \
+         wall{})",
+        killed.labels,
+        if target_met { " — within the 2x recovery gate" } else { " — RECOVERY GATE MISSED" }
+    );
+    let fault_json = obj(vec![
+        ("bench", Value::Str("fault_recovery".into())),
+        ("oracles", Value::Num(4.0)),
+        ("labels", Value::Num(FAULT_LABELS as f64)),
+        (
+            "clean",
+            obj(vec![
+                ("labels", Value::Num(clean.labels as f64)),
+                ("wall_s", Value::Num(clean.wall_s)),
+                ("labels_per_s", Value::Num(lps_clean)),
+            ]),
+        ),
+        (
+            "killed",
+            obj(vec![
+                ("labels", Value::Num(killed.labels as f64)),
+                ("wall_s", Value::Num(killed.wall_s)),
+                ("labels_per_s", Value::Num(lps_killed)),
+                ("time_to_evict_ms", Value::Num(killed.evict_ms)),
+                ("oracle_evictions", Value::Num(killed.evictions as f64)),
+                ("requeued_inputs", Value::Num(killed.requeued as f64)),
+                (
+                    "failed_ranks",
+                    Value::Array(
+                        killed.failed_ranks.iter().map(|&r| Value::Num(r as f64)).collect(),
+                    ),
+                ),
+            ]),
+        ),
+        ("recovery_ratio_x", Value::Num(recovery_ratio)),
+        ("target_met", Value::Bool(target_met)),
+    ]);
+    match std::fs::write("BENCH_fault.json", pal::json::to_string(&fault_json)) {
+        Ok(()) => println!("wrote BENCH_fault.json"),
+        Err(e) => eprintln!("failed to write BENCH_fault.json: {e}"),
+    }
+    target_met
+}
+
 fn main() {
     // `cargo bench --bench comm_overhead -- sched-only` runs just the
-    // scheduler comparison (the CI perf gate); no args runs everything.
+    // scheduler comparison, `-- fault-only` just the fault-recovery gate
+    // (both CI gates); no args runs everything.
     let sched_only = std::env::args().any(|a| a == "sched-only");
-    if !sched_only {
+    let fault_only = std::env::args().any(|a| a == "fault-only");
+    if !sched_only && !fault_only {
         run_comm_sections();
+    }
+    if fault_only {
+        // ---- (j) fault recovery: killed-oracle wall vs clean ----
+        if !run_fault_section() {
+            std::process::exit(1);
+        }
+        return;
     }
 
     // ---- (i) adaptive vs static routing under a heterogeneous pool ----
@@ -622,6 +803,13 @@ fn main() {
     match std::fs::write("BENCH_sched.json", pal::json::to_string(&sched_json)) {
         Ok(()) => println!("wrote BENCH_sched.json"),
         Err(e) => eprintln!("failed to write BENCH_sched.json: {e}"),
+    }
+
+    if !sched_only {
+        // ---- (j) fault recovery: killed-oracle wall vs clean ----
+        if !run_fault_section() {
+            std::process::exit(1);
+        }
     }
 }
 

@@ -28,6 +28,8 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::comm::fault::{ArrivalAction, FaultPlan, FaultState};
+
 /// A shared, immutable message payload: a range view into an `Arc<[f32]>`.
 ///
 /// Cloning is a refcount bump; all reads go through `Deref<Target = [f32]>`.
@@ -264,6 +266,10 @@ pub struct WorldStats {
     pub payload_clones: AtomicU64,
     /// Bytes physically copied into shared storage by the transport.
     pub bytes_copied: AtomicU64,
+    /// Sends that found the destination's endpoint already dropped (its
+    /// host dead or shut down): the message was lost, and the sender was
+    /// told so ([`Endpoint::send`] returned `false`).
+    pub dead_letters: AtomicU64,
 }
 
 impl WorldStats {
@@ -282,6 +288,10 @@ impl WorldStats {
     pub fn bytes_copied(&self) -> u64 {
         self.bytes_copied.load(Ordering::Relaxed)
     }
+    /// Messages lost to a disconnected destination endpoint.
+    pub fn dead_letters(&self) -> u64 {
+        self.dead_letters.load(Ordering::Relaxed)
+    }
 }
 
 /// A communicator over `n` ranks.
@@ -290,6 +300,10 @@ pub struct World {
     receivers: Vec<Option<Receiver<Message>>>,
     latency: Duration,
     stats: Arc<WorldStats>,
+    /// Installed fault plan (chaos runs only) and its anchor instant for
+    /// time-triggered kills. `None` for the empty plan, so clean runs pay
+    /// no per-endpoint fault state at all.
+    fault: Option<(FaultPlan, Instant)>,
 }
 
 impl World {
@@ -307,7 +321,7 @@ impl World {
             senders.push(tx);
             receivers.push(Some(rx));
         }
-        World { senders, receivers, latency, stats: Arc::new(WorldStats::default()) }
+        World { senders, receivers, latency, stats: Arc::new(WorldStats::default()), fault: None }
     }
 
     pub fn size(&self) -> usize {
@@ -316,6 +330,15 @@ impl World {
 
     pub fn stats(&self) -> Arc<WorldStats> {
         Arc::clone(&self.stats)
+    }
+
+    /// Install a fault plan. Must be called before endpoints are taken;
+    /// time-triggered kills are anchored at the call instant. An empty plan
+    /// is a no-op, keeping clean runs bit-identical.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        if !plan.is_empty() {
+            self.fault = Some((plan, Instant::now()));
+        }
     }
 
     /// Take rank `rank`'s endpoint. Each endpoint can be taken exactly once
@@ -336,12 +359,71 @@ impl World {
             next_seq: 0,
             latency: self.latency,
             stats: Arc::clone(&self.stats),
+            fault: self.fault.as_ref().and_then(|(p, t0)| p.compile(rank, *t0)),
+            fault_active: self.fault.is_some(),
         }
     }
 
     /// Take all endpoints in rank order (convenience for spawning).
     pub fn endpoints(&mut self) -> Vec<Endpoint> {
         (0..self.size()).map(|r| self.endpoint(r)).collect()
+    }
+
+    /// A send-only handle for `rank`, usable alongside (and after) the
+    /// rank's own endpoint. The workflow supervisor holds one per host so
+    /// a panicking host's rank-down notification can be sent after the
+    /// host body — and the endpoint it consumed — are gone.
+    pub fn control_handle(&self, rank: usize) -> ControlHandle {
+        ControlHandle {
+            rank,
+            senders: self
+                .senders
+                .iter()
+                .enumerate()
+                .map(|(i, s)| if i == rank { None } else { Some(s.clone()) })
+                .collect(),
+            latency: self.latency,
+            stats: Arc::clone(&self.stats),
+        }
+    }
+}
+
+/// Send-only sibling of [`Endpoint`] (see [`World::control_handle`]).
+/// Carries no mailbox, no fault state: control traffic about a fault must
+/// not itself be subject to the dead rank's fault rules.
+pub struct ControlHandle {
+    rank: usize,
+    senders: Vec<Option<Sender<Message>>>,
+    latency: Duration,
+    stats: Arc<WorldStats>,
+}
+
+impl ControlHandle {
+    /// Send `data` to `dst`; `false` if the destination is disconnected
+    /// (counted as a dead letter, like [`Endpoint::send`]).
+    pub fn send(&self, dst: usize, tag: u32, data: Vec<f32>) -> bool {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.payload_f32s.fetch_add(data.len() as u64, Ordering::Relaxed);
+        if !data.is_empty() {
+            self.stats.payload_clones.fetch_add(1, Ordering::Relaxed);
+            self.stats.bytes_copied.fetch_add(data.len() as u64 * 4, Ordering::Relaxed);
+        }
+        let Some(tx) = &self.senders[dst] else {
+            return true; // self-send: dropped by design, not a dead peer
+        };
+        let ok = tx
+            .send(Message {
+                src: self.rank,
+                tag,
+                data: Payload::from(data),
+                ready_at: Instant::now() + self.latency,
+                seq: 0,
+            })
+            .is_ok();
+        if !ok {
+            self.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
     }
 }
 
@@ -359,6 +441,13 @@ pub struct Endpoint {
     next_seq: u64,
     latency: Duration,
     stats: Arc<WorldStats>,
+    /// Compiled fault actions targeting this rank (`None` outside chaos
+    /// runs and for untargeted ranks — one branch, no allocations).
+    fault: Option<Box<FaultState>>,
+    /// Whether the world has *any* fault plan installed. Lets callers keep
+    /// recovery bookkeeping (e.g. retaining in-flight inputs for requeue)
+    /// off the hot path unless a chaos run or adaptive policy needs it.
+    fault_active: bool,
 }
 
 /// Matcher for receives: exact source or any.
@@ -386,6 +475,13 @@ impl Endpoint {
         self.senders.len()
     }
 
+    /// True when the world has a (non-empty) fault plan installed — chaos
+    /// runs opt callers into failure-recovery bookkeeping that clean runs
+    /// skip.
+    pub fn fault_active(&self) -> bool {
+        self.fault_active
+    }
+
     fn note_copy(&self, copied: bool, len: usize) {
         if copied {
             self.stats.payload_clones.fetch_add(1, Ordering::Relaxed);
@@ -404,42 +500,70 @@ impl Endpoint {
     }
 
     /// Ship an already-shared payload to `dst`: refcount bump, no copy.
-    fn send_payload(&self, dst: usize, tag: u32, data: Payload) {
+    /// `false` if the destination endpoint is gone (dead letter).
+    fn send_payload(&self, dst: usize, tag: u32, data: Payload) -> bool {
+        if let Some(f) = &self.fault {
+            f.check_time(Instant::now());
+        }
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.payload_f32s.fetch_add(data.len() as u64, Ordering::Relaxed);
-        // A send can fail only if the destination endpoint was dropped during
-        // shutdown; that's benign by design (drain discipline). Sends to
-        // self are not part of the protocol and are dropped.
-        if let Some(tx) = &self.senders[dst] {
-            let _ = tx.send(Message {
-                src: self.rank,
-                tag,
-                data,
-                ready_at: Instant::now() + self.latency,
-                seq: 0,
-            });
+        // A send to a dropped destination endpoint is a *dead letter*: the
+        // message is lost. During the shutdown drain that's benign by
+        // design (drain discipline), but mid-run it means the peer's host
+        // died — so it is counted and surfaced to the caller. Sends to
+        // self are not part of the protocol and are dropped silently.
+        let delivered = match &self.senders[dst] {
+            Some(tx) => {
+                let ok = tx
+                    .send(Message {
+                        src: self.rank,
+                        tag,
+                        data,
+                        ready_at: Instant::now() + self.latency,
+                        seq: 0,
+                    })
+                    .is_ok();
+                if !ok {
+                    self.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
+                }
+                ok
+            }
+            None => true,
+        };
+        if let Some(f) = &self.fault {
+            f.on_send(); // may panic: kill-after-Nth-send fires post-delivery
         }
+        delivered
     }
 
     /// Point-to-point send. Never blocks (channels are unbounded); the
     /// injected latency delays *visibility*, not the sender. Accepts
     /// anything [`IntoPayload`]: pass a [`Payload`] (or `&Payload`) for a
     /// zero-copy send, or owned/borrowed data for a one-copy ingest.
-    pub fn send<P: IntoPayload>(&self, dst: usize, tag: u32, data: P) {
+    /// Returns `false` if the destination's endpoint is disconnected (its
+    /// host died or shut down) — the message was not delivered and the
+    /// loss is counted in [`WorldStats::dead_letters`].
+    pub fn send<P: IntoPayload>(&self, dst: usize, tag: u32, data: P) -> bool {
         let (payload, copied) = data.into_payload();
         self.note_copy(copied, payload.len());
-        self.send_payload(dst, tag, payload);
+        self.send_payload(dst, tag, payload)
     }
 
     /// Broadcast the same payload to every rank in `dsts`. The payload is
     /// converted to shared storage at most once; each destination then gets
     /// a refcount bump, so physical copy cost is independent of `dsts.len()`.
-    pub fn bcast<P: IntoPayload>(&self, dsts: &[usize], tag: u32, data: P) {
+    /// Returns how many destinations accepted the message; a shortfall
+    /// means dead peers (each counted in [`WorldStats::dead_letters`]).
+    pub fn bcast<P: IntoPayload>(&self, dsts: &[usize], tag: u32, data: P) -> usize {
         let (payload, copied) = data.into_payload();
         self.note_copy(copied, payload.len());
+        let mut delivered = 0;
         for &d in dsts {
-            self.send_payload(d, tag, payload.clone());
+            if self.send_payload(d, tag, payload.clone()) {
+                delivered += 1;
+            }
         }
+        delivered
     }
 
     /// Scatter one payload per destination (lengths may differ).
@@ -457,9 +581,29 @@ impl Endpoint {
         self.pending.entry(m.tag).or_default().push_back(m);
     }
 
+    /// The single arrival choke point (both the non-blocking drain and the
+    /// blocking park loop route through here): applies this rank's fault
+    /// rules — kill-on-Nth-arrival, drop, extra delay — then files the
+    /// message.
+    fn arrive(&mut self, mut m: Message) {
+        if let Some(f) = &self.fault {
+            match f.on_arrival(m.src, m.tag) {
+                ArrivalAction::Deliver => {}
+                ArrivalAction::Drop => return,
+                ArrivalAction::Delay(extra) => m.ready_at += extra,
+            }
+        }
+        self.enqueue(m);
+    }
+
     fn drain_channel(&mut self) {
+        if let Some(f) = &self.fault {
+            // idle hosts poll receives, so a time-triggered kill fires here
+            // even if the rank never sends
+            f.check_time(Instant::now());
+        }
         while let Ok(m) = self.rx.try_recv() {
-            self.enqueue(m);
+            self.arrive(m);
         }
     }
 
@@ -575,7 +719,7 @@ impl Endpoint {
             let wait_until = next_ready.unwrap_or(deadline).min(deadline);
             if wait_until > now {
                 match self.rx.recv_timeout(wait_until - now) {
-                    Ok(m) => self.enqueue(m),
+                    Ok(m) => self.arrive(m),
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => {
                         // Drain pending before giving up.
@@ -1112,6 +1256,106 @@ mod tests {
         assert_eq!(stats.payload_clones(), 0);
         assert_eq!(stats.bytes_copied(), 0);
         assert_eq!(e1.recv_timeout(Src::Rank(0), 90, Duration::from_secs(1)).unwrap().data.len(), 0);
+    }
+
+    #[test]
+    fn send_to_dropped_endpoint_is_a_counted_dead_letter() {
+        let mut w = World::new(3);
+        let stats = w.stats();
+        let a = w.endpoint(0);
+        let b = w.endpoint(1);
+        let mut c = w.endpoint(2);
+        drop(b); // rank 1's host dies
+        assert!(!a.send(1, 7, vec![1.0]), "send to a dead rank must report failure");
+        assert_eq!(stats.dead_letters(), 1);
+        // live peers are unaffected
+        assert!(a.send(2, 7, vec![2.0]));
+        assert_eq!(c.recv_timeout(Src::Rank(0), 7, Duration::from_secs(1)).unwrap().data, vec![
+            2.0
+        ]);
+        // bcast reports the delivered count and charges the shortfall
+        assert_eq!(a.bcast(&[1, 2], 8, vec![3.0]), 1);
+        assert_eq!(stats.dead_letters(), 2);
+    }
+
+    #[test]
+    fn control_handle_sends_after_endpoint_drop() {
+        let mut w = World::new(2);
+        let stats = w.stats();
+        let ctrl = w.control_handle(0);
+        let ep0 = w.endpoint(0);
+        let mut e1 = w.endpoint(1);
+        drop(ep0); // the host body (and its endpoint) are gone
+        assert!(ctrl.send(1, 92, vec![0.0]));
+        let m = e1.recv_timeout(Src::Rank(0), 92, Duration::from_secs(1)).unwrap();
+        assert_eq!(m.src, 0);
+        // a control send to a dead rank is a dead letter like any other
+        drop(e1);
+        drop(w);
+        assert!(!ctrl.send(1, 92, vec![0.0]));
+        assert_eq!(stats.dead_letters(), 1);
+    }
+
+    #[test]
+    fn fault_kill_after_sends_delivers_then_dies() {
+        use crate::comm::fault::{FaultKill, FaultPlan};
+        let mut w = World::new(2);
+        w.set_fault_plan(FaultPlan::default().kill_after_sends(0, 2));
+        let a = w.endpoint(0);
+        let mut b = w.endpoint(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.send(1, 1, vec![1.0]);
+            a.send(1, 1, vec![2.0]); // dies here, after delivery
+            a.send(1, 1, vec![3.0]);
+        }));
+        let err = r.unwrap_err();
+        assert_eq!(err.downcast_ref::<FaultKill>(), Some(&FaultKill { rank: 0 }));
+        // both pre-kill sends were delivered; nothing after
+        for want in [1.0, 2.0] {
+            let m = b.recv_timeout(Src::Rank(0), 1, Duration::from_secs(1)).unwrap();
+            assert_eq!(m.data, vec![want]);
+        }
+        assert!(b.try_recv(Src::Rank(0), 1).is_none());
+    }
+
+    #[test]
+    fn fault_drop_and_delay_rules_apply_on_arrival() {
+        use crate::comm::fault::FaultPlan;
+        let mut w = World::new(2);
+        w.set_fault_plan(
+            FaultPlan::default()
+                .drop_msgs(1, 0, 7, 1)
+                .delay_msgs(1, 0, 9, Duration::from_millis(40), 1),
+        );
+        let a = w.endpoint(0);
+        let mut b = w.endpoint(1);
+        assert!(b.fault_active());
+        // first tag-7 frame is dropped on arrival; the second delivers
+        a.send(1, 7, vec![1.0]);
+        a.send(1, 7, vec![2.0]);
+        let m = b.recv_timeout(Src::Rank(0), 7, Duration::from_secs(1)).unwrap();
+        assert_eq!(m.data, vec![2.0]);
+        assert!(b.try_recv(Src::Rank(0), 7).is_none());
+        // the delayed tag-9 frame arrives late but intact
+        let t0 = Instant::now();
+        a.send(1, 9, vec![9.0]);
+        let m = b.recv_timeout(Src::Rank(0), 9, Duration::from_secs(1)).unwrap();
+        assert_eq!(m.data, vec![9.0]);
+        assert!(t0.elapsed() >= Duration::from_millis(35), "delay rule not applied");
+    }
+
+    #[test]
+    fn empty_fault_plan_installs_nothing() {
+        use crate::comm::fault::FaultPlan;
+        let mut w = World::new(2);
+        w.set_fault_plan(FaultPlan::default());
+        let a = w.endpoint(0);
+        let mut b = w.endpoint(1);
+        assert!(!a.fault_active() && !b.fault_active());
+        assert!(a.send(1, 1, vec![1.0]));
+        assert_eq!(b.recv_timeout(Src::Rank(0), 1, Duration::from_secs(1)).unwrap().data, vec![
+            1.0
+        ]);
     }
 
     #[test]

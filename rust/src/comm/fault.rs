@@ -1,0 +1,356 @@
+//! Deterministic fault injection for the in-process bus.
+//!
+//! A [`FaultPlan`] is a declarative list of fault actions targeting
+//! specific ranks — kill rank *k* after its *N*th send or receive or at an
+//! injected run time, drop or delay the first *c* messages matching a
+//! `(dst, src, tag)` triple — compiled per rank into a [`FaultState`] that
+//! the [`crate::comm::bus::Endpoint`] consults on every send and arrival.
+//! Because the triggers count *protocol events* (sends, arrivals) rather
+//! than wall-clock samples, a chaos run under a given plan is exactly as
+//! reproducible as the clean run it perturbs: the same plan kills the same
+//! rank at the same point in its message stream every time.
+//!
+//! Kills are delivered as panics carrying a [`FaultKill`] payload, so the
+//! workflow supervisor ([`crate::coordinator::workflow`]) can distinguish
+//! an injected kill from a genuine host bug while treating both as a dead
+//! rank. A process-wide panic hook installed on first kill suppresses the
+//! default stderr backtrace for `FaultKill` panics only — injected chaos is
+//! expected, real panics still print.
+//!
+//! The empty plan compiles to `None` everywhere: endpoints carry no fault
+//! state, take no extra branches beyond one `Option` check, and allocate
+//! nothing — clean runs are bit-identical with or without the fault plane.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Panic payload carried by an injected kill: the rank that was killed.
+/// The workflow supervisor downcasts panic payloads to this type to tell
+/// injected faults from genuine host bugs in the degraded-run report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultKill {
+    pub rank: usize,
+}
+
+/// What a message-matching rule does to a matched arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgAction {
+    /// Discard the message before it reaches the mailbox.
+    Drop,
+    /// Deliver, but push the simulated arrival time back by this much.
+    Delay(Duration),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum KillWhen {
+    AfterSends(u64),
+    AfterRecvs(u64),
+    At(Duration),
+}
+
+#[derive(Debug, Clone)]
+struct KillRule {
+    rank: usize,
+    when: KillWhen,
+}
+
+#[derive(Debug, Clone)]
+struct MsgRule {
+    /// Receiving rank the rule applies to.
+    rank: usize,
+    src: usize,
+    tag: u32,
+    action: MsgAction,
+    count: u64,
+}
+
+/// A reproducible plan of fault actions. Built fluently, installed on the
+/// [`crate::comm::bus::World`] before endpoints are taken (or passed to
+/// `Workflow::with_faults`), and compiled per rank at endpoint creation.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    kills: Vec<KillRule>,
+    rules: Vec<MsgRule>,
+}
+
+impl FaultPlan {
+    /// Kill `rank` immediately after its `n`th successful send completes
+    /// (the `n`th message is delivered, then the host dies).
+    pub fn kill_after_sends(mut self, rank: usize, n: u64) -> Self {
+        self.kills.push(KillRule { rank, when: KillWhen::AfterSends(n.max(1)) });
+        self
+    }
+
+    /// Kill `rank` as its `n`th message arrives (the `n`th message is lost
+    /// with the host — it never reaches the mailbox).
+    pub fn kill_after_recvs(mut self, rank: usize, n: u64) -> Self {
+        self.kills.push(KillRule { rank, when: KillWhen::AfterRecvs(n.max(1)) });
+        self
+    }
+
+    /// Kill `rank` at the first bus operation at or after `t` past the
+    /// plan's installation time.
+    pub fn kill_at(mut self, rank: usize, t: Duration) -> Self {
+        self.kills.push(KillRule { rank, when: KillWhen::At(t) });
+        self
+    }
+
+    /// Drop the first `count` messages from `src` with `tag` arriving at
+    /// `rank` (silent wire loss).
+    pub fn drop_msgs(mut self, rank: usize, src: usize, tag: u32, count: u64) -> Self {
+        self.rules.push(MsgRule { rank, src, tag, action: MsgAction::Drop, count });
+        self
+    }
+
+    /// Delay the first `count` messages from `src` with `tag` arriving at
+    /// `rank` by `extra` on top of the world latency.
+    pub fn delay_msgs(
+        mut self,
+        rank: usize,
+        src: usize,
+        tag: u32,
+        extra: Duration,
+        count: u64,
+    ) -> Self {
+        self.rules.push(MsgRule { rank, src, tag, action: MsgAction::Delay(extra), count });
+        self
+    }
+
+    /// A plan with no actions — the bit-identical no-op.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.rules.is_empty()
+    }
+
+    /// Compile the per-rank fault state. `None` when no action targets
+    /// `rank` — the endpoint then carries no fault machinery at all.
+    /// `t0` anchors [`FaultPlan::kill_at`] deadlines.
+    pub(crate) fn compile(&self, rank: usize, t0: Instant) -> Option<Box<FaultState>> {
+        let mut state = FaultState {
+            rank,
+            sends: Cell::new(0),
+            kill_after_sends: None,
+            recvs: Cell::new(0),
+            kill_after_recvs: None,
+            kill_at: None,
+            rules: Vec::new(),
+        };
+        let mut any = false;
+        for k in self.kills.iter().filter(|k| k.rank == rank) {
+            any = true;
+            match k.when {
+                // multiple kill rules for one rank: earliest trigger wins
+                KillWhen::AfterSends(n) => {
+                    state.kill_after_sends =
+                        Some(state.kill_after_sends.map_or(n, |p: u64| p.min(n)));
+                }
+                KillWhen::AfterRecvs(n) => {
+                    state.kill_after_recvs =
+                        Some(state.kill_after_recvs.map_or(n, |p: u64| p.min(n)));
+                }
+                KillWhen::At(d) => {
+                    let at = t0 + d;
+                    state.kill_at = Some(state.kill_at.map_or(at, |p: Instant| p.min(at)));
+                }
+            }
+        }
+        for r in self.rules.iter().filter(|r| r.rank == rank) {
+            any = true;
+            state.rules.push(CompiledRule {
+                src: r.src,
+                tag: r.tag,
+                action: r.action,
+                remaining: Cell::new(r.count),
+            });
+        }
+        any.then(|| Box::new(state))
+    }
+}
+
+#[derive(Debug)]
+struct CompiledRule {
+    src: usize,
+    tag: u32,
+    action: MsgAction,
+    remaining: Cell<u64>,
+}
+
+/// What the endpoint should do with an arrived message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ArrivalAction {
+    Deliver,
+    Drop,
+    Delay(Duration),
+}
+
+/// Per-rank compiled fault state, consulted by the owning endpoint on
+/// every send and arrival. Counters are `Cell`s because sends take
+/// `&self`; the state lives inside one endpoint on one thread.
+#[derive(Debug)]
+pub(crate) struct FaultState {
+    rank: usize,
+    sends: Cell<u64>,
+    kill_after_sends: Option<u64>,
+    recvs: Cell<u64>,
+    kill_after_recvs: Option<u64>,
+    kill_at: Option<Instant>,
+    rules: Vec<CompiledRule>,
+}
+
+impl FaultState {
+    /// Fire a pending time-triggered kill. Called from both the send and
+    /// receive paths so an idle polling host still dies on schedule.
+    pub(crate) fn check_time(&self, now: Instant) {
+        if let Some(t) = self.kill_at {
+            if now >= t {
+                kill(self.rank);
+            }
+        }
+    }
+
+    /// Count one completed send; panics with [`FaultKill`] once the
+    /// configured send count is reached (the message was delivered first).
+    pub(crate) fn on_send(&self) {
+        let n = self.sends.get() + 1;
+        self.sends.set(n);
+        if let Some(k) = self.kill_after_sends {
+            if n >= k {
+                kill(self.rank);
+            }
+        }
+    }
+
+    /// Classify one arriving message. Panics with [`FaultKill`] on the
+    /// configured arrival (that message dies with the host); otherwise the
+    /// first live matching rule consumes one count and acts.
+    pub(crate) fn on_arrival(&self, src: usize, tag: u32) -> ArrivalAction {
+        let n = self.recvs.get() + 1;
+        self.recvs.set(n);
+        if let Some(k) = self.kill_after_recvs {
+            if n >= k {
+                kill(self.rank);
+            }
+        }
+        for r in &self.rules {
+            if r.src == src && r.tag == tag && r.remaining.get() > 0 {
+                r.remaining.set(r.remaining.get() - 1);
+                return match r.action {
+                    MsgAction::Drop => ArrivalAction::Drop,
+                    MsgAction::Delay(d) => ArrivalAction::Delay(d),
+                };
+            }
+        }
+        ArrivalAction::Deliver
+    }
+}
+
+/// Panic with a [`FaultKill`] payload, first making sure the process-wide
+/// hook that silences injected-kill backtraces is installed. Real panics
+/// keep the previous hook's behavior.
+fn kill(rank: usize) -> ! {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<FaultKill>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+    std::panic::panic_any(FaultKill { rank });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn kill_payload(r: std::thread::Result<()>) -> FaultKill {
+        *r.unwrap_err().downcast_ref::<FaultKill>().expect("FaultKill payload")
+    }
+
+    #[test]
+    fn empty_plan_compiles_to_none_everywhere() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        let t0 = Instant::now();
+        for rank in 0..8 {
+            assert!(plan.compile(rank, t0).is_none());
+        }
+    }
+
+    #[test]
+    fn compile_targets_only_named_ranks() {
+        let plan = FaultPlan::default()
+            .kill_after_sends(2, 3)
+            .drop_msgs(4, 0, 7, 1);
+        assert!(!plan.is_empty());
+        let t0 = Instant::now();
+        assert!(plan.compile(0, t0).is_none());
+        assert!(plan.compile(2, t0).is_some());
+        assert!(plan.compile(4, t0).is_some());
+    }
+
+    #[test]
+    fn kill_after_sends_fires_on_the_nth_send() {
+        let plan = FaultPlan::default().kill_after_sends(1, 2);
+        let st = plan.compile(1, Instant::now()).unwrap();
+        st.on_send(); // 1st: survives
+        let r = catch_unwind(AssertUnwindSafe(|| st.on_send()));
+        assert_eq!(kill_payload(r), FaultKill { rank: 1 });
+    }
+
+    #[test]
+    fn kill_after_recvs_fires_on_the_nth_arrival() {
+        let plan = FaultPlan::default().kill_after_recvs(3, 2);
+        let st = plan.compile(3, Instant::now()).unwrap();
+        assert_eq!(st.on_arrival(0, 9), ArrivalAction::Deliver);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            st.on_arrival(0, 9);
+        }));
+        assert_eq!(kill_payload(r), FaultKill { rank: 3 });
+    }
+
+    #[test]
+    fn kill_at_fires_once_the_deadline_passes() {
+        let t0 = Instant::now();
+        let plan = FaultPlan::default().kill_at(5, Duration::from_millis(10));
+        let st = plan.compile(5, t0).unwrap();
+        st.check_time(t0); // before the deadline: survives
+        st.check_time(t0 + Duration::from_millis(9));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            st.check_time(t0 + Duration::from_millis(10));
+        }));
+        assert_eq!(kill_payload(r), FaultKill { rank: 5 });
+    }
+
+    #[test]
+    fn earliest_kill_rule_wins_per_rank() {
+        let plan = FaultPlan::default().kill_after_sends(1, 5).kill_after_sends(1, 2);
+        let st = plan.compile(1, Instant::now()).unwrap();
+        st.on_send();
+        let r = catch_unwind(AssertUnwindSafe(|| st.on_send()));
+        assert_eq!(kill_payload(r), FaultKill { rank: 1 });
+    }
+
+    #[test]
+    fn drop_rule_consumes_its_count_then_delivers() {
+        let plan = FaultPlan::default().drop_msgs(2, 1, 7, 2);
+        let st = plan.compile(2, Instant::now()).unwrap();
+        assert_eq!(st.on_arrival(1, 7), ArrivalAction::Drop);
+        assert_eq!(st.on_arrival(1, 7), ArrivalAction::Drop);
+        assert_eq!(st.on_arrival(1, 7), ArrivalAction::Deliver, "count exhausted");
+        // non-matching (src, tag) never drops
+        assert_eq!(st.on_arrival(0, 7), ArrivalAction::Deliver);
+        assert_eq!(st.on_arrival(1, 8), ArrivalAction::Deliver);
+    }
+
+    #[test]
+    fn delay_rule_adds_extra_latency() {
+        let extra = Duration::from_millis(25);
+        let plan = FaultPlan::default().delay_msgs(2, 0, 9, extra, 1);
+        let st = plan.compile(2, Instant::now()).unwrap();
+        assert_eq!(st.on_arrival(0, 9), ArrivalAction::Delay(extra));
+        assert_eq!(st.on_arrival(0, 9), ArrivalAction::Deliver);
+    }
+}

@@ -137,9 +137,36 @@
 //! constant allocations and zero per-label boxing. The per-label leg
 //! ([`protocol::TAG_TO_ORACLE`] / [`protocol::TAG_ORACLE_RESULT`]) is
 //! unchanged on the wire; both legs produce bit-identical labels.
+//!
+//! ## Fault model
+//!
+//! The bus assumes a host can die at any bus operation (panic, injected
+//! [`fault::FaultKill`]) and makes the failure *observable* rather than
+//! silent:
+//!
+//! * **Send to a dead rank** — [`bus::Endpoint::send`] returns `false` and
+//!   the loss is counted in [`bus::WorldStats::dead_letters`];
+//!   [`bus::Endpoint::bcast`] reports how many destinations accepted.
+//!   During the shutdown drain dead letters are benign (drain discipline);
+//!   mid-run they are the liveness signal the coordinator reacts to.
+//! * **Supervised death** — every workflow host runs under `catch_unwind`;
+//!   the supervisor announces the dead rank on
+//!   [`protocol::TAG_RANK_DOWN`] via a [`bus::ControlHandle`] (send-only,
+//!   immune to the dead rank's own fault rules), and the Manager/Exchange
+//!   evict the rank and requeue its in-flight work.
+//! * **Deterministic injection** — a [`fault::FaultPlan`] installed with
+//!   [`bus::World::set_fault_plan`] compiles per rank and triggers on
+//!   protocol events (Nth send/arrival) or injected time, so chaos runs
+//!   replay exactly; the empty plan compiles to nothing and clean runs are
+//!   bit-identical.
+//!
+//! What the system tolerates, what degrades, and what aborts is documented
+//! at the crate root (`lib.rs`, "Fault plane").
 
 pub mod bus;
 pub mod codec;
+pub mod fault;
 pub mod protocol;
 
-pub use bus::{Endpoint, Message, Payload, RecvError, World};
+pub use bus::{ControlHandle, Endpoint, Message, Payload, RecvError, World};
+pub use fault::{FaultKill, FaultPlan};

@@ -16,7 +16,8 @@
 //! * weights — trainer *i* → predictor *i* directly (paper §2.4: "trained
 //!   model weights are periodically copied directly to the prediction
 //!   kernel")
-//! * control — stop requests to Manager; shutdown fan-out from Manager.
+//! * control — stop requests to Manager; shutdown fan-out from Manager;
+//!   rank-down notices from host supervisors ([`TAG_RANK_DOWN`]).
 
 /// generator → Exchange: `[stop_flag, data_to_pred...]` (red flow).
 pub const TAG_GEN_TO_PRED: u32 = 10;
@@ -76,6 +77,11 @@ pub const TAG_RESCORE_RESP: u32 = 41;
 pub const TAG_STOP: u32 = 90;
 /// Manager → everyone: drain and exit.
 pub const TAG_SHUTDOWN: u32 = 91;
+/// supervisor → Manager/Exchange: `[rank]` of a host that died (panic or
+/// injected fault). Sent from the joining supervisor thread via a
+/// [`crate::comm::bus::ControlHandle`], so it is delivered even though the
+/// dead rank's own endpoint is gone.
+pub const TAG_RANK_DOWN: u32 = 92;
 
 /// Encode a generator's step message into a reusable scratch buffer:
 /// `[stop_flag, data...]`. Clears `out` first.
@@ -582,7 +588,7 @@ mod tests {
             TAG_ORCL_SELECT, TAG_TO_ORACLE, TAG_ORACLE_RESULT,
             TAG_ORACLE_BATCH, TAG_ORACLE_BATCH_RESULT,
             TAG_TRAIN_DATA, TAG_WEIGHTS, TAG_RETRAIN_DONE,
-            TAG_RESCORE_REQ, TAG_RESCORE_RESP, TAG_STOP, TAG_SHUTDOWN,
+            TAG_RESCORE_REQ, TAG_RESCORE_RESP, TAG_STOP, TAG_SHUTDOWN, TAG_RANK_DOWN,
         ];
         let mut sorted = tags.to_vec();
         sorted.sort();

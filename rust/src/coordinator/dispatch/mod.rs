@@ -100,12 +100,21 @@ pub struct EndpointState {
     /// means the endpoint is back on probation: routable again, but one
     /// more timeout/slow streak re-evicts it.
     rejected_until: Option<Instant>,
+    /// Permanently down ([`DispatchCore::mark_down`]): its host died. Never
+    /// routable again, and a late reply does *not* readmit it.
+    dead: bool,
 }
 
 impl EndpointState {
-    /// Routable at `now` (never evicted, or its backoff elapsed).
+    /// Routable at `now` (never evicted, or its backoff elapsed; dead
+    /// endpoints are never routable).
     pub fn active(&self, now: Instant) -> bool {
-        self.rejected_until.map_or(true, |t| now >= t)
+        !self.dead && self.rejected_until.map_or(true, |t| now >= t)
+    }
+
+    /// Permanently down (its host died).
+    pub fn is_dead(&self) -> bool {
+        self.dead
     }
 
     fn is_rejected(&self, now: Instant) -> bool {
@@ -218,12 +227,16 @@ impl<P: Policy> DispatchCore<P> {
 
     /// Routable-endpoint mask. Safety net: if every endpoint is rejected
     /// (unreachable through [`DispatchCore::check_health`], which never
-    /// evicts the last active one), all are treated as routable rather than
-    /// deadlocking the queue.
+    /// evicts the last active one), the non-dead ones are treated as
+    /// routable rather than deadlocking the queue. Dead endpoints are never
+    /// resurrected — with every endpoint dead the mask stays all-false and
+    /// dispatch stalls (the coordinator aborts the run instead).
     fn active_mask(&self, now: Instant) -> Vec<bool> {
         let mut mask: Vec<bool> = self.eps.iter().map(|e| e.active(now)).collect();
         if !mask.iter().any(|&a| a) {
-            mask.iter_mut().for_each(|a| *a = true);
+            for (m, e) in mask.iter_mut().zip(&self.eps) {
+                *m = !e.dead;
+            }
         }
         mask
     }
@@ -289,16 +302,47 @@ impl<P: Policy> DispatchCore<P> {
             let e = rec.endpoint;
             let rtt = now.saturating_duration_since(rec.sent_at);
             self.rtts.record(rtt);
-            if self.cfg.adaptive {
+            if self.cfg.adaptive && !self.eps[e].dead {
                 // recovery: rejoin the active group (probation), and feed
                 // the observed cost into the EWMA so routing stays honest
-                // about how slow the comeback actually was
+                // about how slow the comeback actually was. A *dead*
+                // endpoint is never readmitted — its host is gone, and a
+                // reply it sent before dying is not proof of life.
                 self.eps[e].rejected_until = None;
                 self.eps[e].consecutive_slow = 0;
                 self.update_ewma(e, rtt, rec.items);
             }
         }
         None
+    }
+
+    /// The host behind endpoint `e` died (rank-down notice or failed send):
+    /// mark it permanently unroutable — under *any* policy, static
+    /// included, since a dead host is not a tuning question — and hand its
+    /// in-flight batches back for requeue (id-ordered, same contract as
+    /// [`DispatchCore::check_health`]). Idempotent; out-of-range indices
+    /// are ignored.
+    pub fn mark_down(&mut self, e: usize, now: Instant) -> Vec<Eviction> {
+        if e >= self.eps.len() || self.eps[e].dead {
+            return Vec::new();
+        }
+        self.eps[e].dead = true;
+        self.eps[e].rejected_until = Some(now + Duration::from_secs(86_400 * 365));
+        self.eps[e].consecutive_slow = 0;
+        let mut out: Vec<Eviction> = self
+            .inflight
+            .iter()
+            .filter(|(_, r)| r.endpoint == e)
+            .map(|(&id, r)| Eviction { id, endpoint: e, items: r.items })
+            .collect();
+        out.sort_by_key(|ev| ev.id);
+        for ev in &out {
+            let rec = self.inflight.remove(&ev.id).expect("collected above");
+            self.eps[e].outstanding = self.eps[e].outstanding.saturating_sub(1);
+            self.eps[e].outstanding_items = self.eps[e].outstanding_items.saturating_sub(rec.items);
+            self.evicted.insert(ev.id, rec);
+        }
+        out
     }
 
     /// EWMA + slow-streak bookkeeping for one observed round-trip.
@@ -582,6 +626,40 @@ mod tests {
         assert!(core.endpoint(1).active(t0 + ms(20)));
         assert_eq!(core.in_flight(), 1, "survivor keeps its batch");
         assert!(core.complete(d1.id, t0 + ms(30)).is_some());
+    }
+
+    #[test]
+    fn mark_down_evicts_under_any_policy_and_is_permanent() {
+        // static policy: rank-down eviction must work even though the
+        // timeout/slow health plane is off
+        let mut core = DispatchCore::new(
+            cfg(4, 2, &SchedSetting::default()),
+            BuiltinPolicy::least_outstanding(),
+            2,
+        );
+        let t0 = Instant::now();
+        let d0 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        let d1 = core.try_dispatch(4, Some(t0), t0, None).unwrap();
+        assert_eq!((d0.endpoint, d1.endpoint), (0, 1));
+        let evs = core.mark_down(0, t0 + ms(5));
+        assert_eq!(evs, vec![Eviction { id: d0.id, endpoint: 0, items: 4 }]);
+        assert!(core.endpoint(0).is_dead());
+        assert_eq!(core.outstanding(0), 0);
+        assert!(core.mark_down(0, t0 + ms(6)).is_empty(), "idempotent");
+        assert!(core.mark_down(99, t0 + ms(6)).is_empty(), "out of range ignored");
+        // routing skips the dead endpoint forever
+        let d = core.try_dispatch(4, Some(t0), t0 + ms(10), None).unwrap();
+        assert_eq!(d.endpoint, 1);
+        // a late reply from the dead endpoint is an orphan and does NOT
+        // readmit it
+        assert_eq!(core.complete(d0.id, t0 + ms(20)), None);
+        assert!(!core.endpoint(0).active(t0 + ms(20)), "dead endpoint stays down");
+        core.complete(d1.id, t0 + ms(20)).unwrap();
+        core.complete(d.id, t0 + ms(21)).unwrap();
+        // both endpoints down → dispatch stalls instead of resurrecting
+        let evs = core.mark_down(1, t0 + ms(30));
+        assert!(evs.is_empty());
+        assert!(core.try_dispatch(4, Some(t0), t0 + ms(40), None).is_none());
     }
 
     #[test]

@@ -79,6 +79,15 @@ fn lockstep_host(
         if is_down(&down) {
             break;
         }
+        if ep.try_recv(Src::Any, TAG_RANK_DOWN).is_some() {
+            // lockstep rounds need every generator and every prediction
+            // rank alive — the next gather would hang on a dead peer, so
+            // abort the run (the batched mode degrades instead)
+            tel.bump("rank_down_notices");
+            ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
+            tel.bump("stop_signals");
+            break;
+        }
         if let Some(max) = setting.stop.max_iterations {
             if iterations >= max {
                 ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
@@ -348,6 +357,20 @@ impl BatchScheduler {
     pub fn check_health(&mut self, now: Instant) -> Vec<Eviction> {
         self.core.check_health(now)
     }
+
+    /// A host in shard `shard` died (rank-down notice or failed send):
+    /// permanently evict the whole shard — a committee gather can never
+    /// complete with a member missing — under any policy, and return its
+    /// in-flight batches for requeue. See
+    /// [`crate::coordinator::dispatch::DispatchCore::mark_down`].
+    pub fn mark_down(&mut self, shard: usize, now: Instant) -> Vec<Eviction> {
+        self.core.mark_down(shard, now)
+    }
+
+    /// Whether `shard` has been permanently marked down.
+    pub fn is_down(&self, shard: usize) -> bool {
+        self.core.endpoint(shard).is_dead()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -426,6 +449,33 @@ fn reduce_batch(
     (RowBlock::from_rows(&o), RowBlock::from_rows(&c))
 }
 
+/// Permanently evict `shard` (a host in it died) and requeue every
+/// in-flight batch it held so generators are re-served elsewhere. Returns
+/// whether anything was requeued. Idempotent per shard.
+fn evict_dead_shard(
+    scheduler: &mut BatchScheduler,
+    inflight: &mut HashMap<u64, InFlight>,
+    tel: &mut KernelTelemetry,
+    shard: usize,
+    now: Instant,
+) -> bool {
+    if scheduler.is_down(shard) {
+        return false;
+    }
+    tel.bump("shard_evictions");
+    let mut requeued = false;
+    for ev in scheduler.mark_down(shard, now) {
+        if let Some(fl) = inflight.remove(&ev.id) {
+            for (i, &origin) in fl.origins.iter().enumerate() {
+                scheduler.push(origin, fl.items.row(i), now);
+            }
+            tel.add("requeued_items", fl.items.len() as u64);
+            requeued = true;
+        }
+    }
+    requeued
+}
+
 fn batched_host(
     mut ep: Endpoint,
     mut utils: Box<dyn Utils>,
@@ -468,6 +518,19 @@ fn batched_host(
         }
 
         let mut did_work = false;
+
+        // --- control: rank-down notices from host supervisors — evict the
+        // dead rank's shard immediately and requeue its in-flight items ---
+        while let Some(m) = ep.try_recv(Src::Any, TAG_RANK_DOWN) {
+            did_work = true;
+            tel.bump("rank_down_notices");
+            let Some(rank) = m.data.first().map(|&f| f as usize) else {
+                continue;
+            };
+            if let Some(shard) = shards.iter().position(|s| s.contains(&rank)) {
+                evict_dead_shard(&mut scheduler, &mut inflight, &mut tel, shard, Instant::now());
+            }
+        }
 
         // --- red flow in: drain generator requests into the queue ---
         while ep.try_recv(Src::Any, TAG_GEN_SIZE).is_some() {
@@ -600,21 +663,29 @@ fn batched_host(
                 break;
             };
             encode_predict_batch_block_into(batch.id, &batch.items, &mut frame_buf);
-            ep.bcast(&shards[batch.shard], TAG_PRED_BATCH, &frame_buf[..]);
+            let delivered = ep.bcast(&shards[batch.shard], TAG_PRED_BATCH, &frame_buf[..]);
             tel.bump("batches_dispatched");
             if batch.items.len() < setting.batch.max_size {
                 tel.bump("partial_batches");
             }
+            let shard = batch.shard;
             inflight.insert(
                 batch.id,
                 InFlight {
-                    shard: batch.shard,
+                    shard,
                     origins: batch.origins,
                     items: batch.items,
                     replies: vec![None; committee],
                     n_replies: 0,
                 },
             );
+            if delivered < shards[shard].len() && !is_down(&down) {
+                // a committee member's endpoint is gone: the gather can
+                // never complete — evict the shard now (requeues this
+                // batch) instead of waiting for the rank-down notice
+                tel.bump("dead_letter_dispatches");
+                evict_dead_shard(&mut scheduler, &mut inflight, &mut tel, shard, Instant::now());
+            }
             did_work = true;
         }
         if scheduler.queue_len() > 0 && scheduler.in_flight() == shards.len() * setting.batch.max_outstanding {

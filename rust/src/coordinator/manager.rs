@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 use crate::comm::bus::{Endpoint, Payload, Src};
 use crate::comm::codec;
 use crate::comm::protocol::*;
-use crate::config::{AlSetting, OracleMode, SchedPolicy, Topology};
+use crate::config::{AlSetting, ExchangeMode, OracleMode, SchedPolicy, Topology};
 use crate::coordinator::buffers::{OracleBuffer, TrainBuffer};
 use crate::coordinator::dispatch::scaled_drain_bound;
 use crate::coordinator::hosts::ShutdownFlag;
@@ -71,6 +71,41 @@ fn ingest_oracle_batch_result(
     }
 }
 
+/// Permanently evict batched-mode oracle `i` (its host died — rank-down
+/// notice or failed send) and requeue its in-flight batches. Retained rows
+/// go back to the buffer with their budget headroom released; unretained
+/// batches (plain static runs without a fault plan) are recorded as lost,
+/// releasing the headroom so the budget can still be met by the survivors.
+/// Idempotent per oracle.
+#[allow(clippy::too_many_arguments)]
+fn evict_dead_oracle(
+    orcl_sched: &mut OracleScheduler,
+    inflight_rows: &mut HashMap<u64, RowBlock>,
+    orcl_buffer: &mut OracleBuffer,
+    dispatched_total: &mut u64,
+    tel: &mut KernelTelemetry,
+    i: usize,
+    now: Instant,
+) {
+    if orcl_sched.is_down(i) {
+        return;
+    }
+    tel.bump("oracle_evictions");
+    for ev in orcl_sched.mark_down(i, now) {
+        if let Some(rows) = inflight_rows.remove(&ev.id) {
+            for r in 0..rows.len() {
+                orcl_buffer.push_row(rows.row(r));
+            }
+            orcl_sched.note_enqueued(now);
+            *dispatched_total = dispatched_total.saturating_sub(rows.len() as u64);
+            tel.add("requeued_inputs", rows.len() as u64);
+        } else {
+            *dispatched_total = dispatched_total.saturating_sub(ev.items as u64);
+            tel.add("lost_inputs", ev.items as u64);
+        }
+    }
+}
+
 /// Ingest one per-label `TAG_ORACLE_RESULT` frame — the single ingest path
 /// shared by the main loop and the shutdown drain, so busy-flag, RTT, and
 /// label accounting cannot diverge between them (the old drain silently
@@ -85,6 +120,8 @@ fn ingest_oracle_result(
     orcl: &[usize],
     oracle_busy: &mut [bool],
     busy_since: &mut [Option<Instant>],
+    oracle_retry_until: &mut [Option<Instant>],
+    inflight_input: &mut [Option<Payload>],
     label_rtts: &mut LatencyWindow,
     train_buffer: &mut TrainBuffer,
     out: &mut ManagerOutcome,
@@ -94,6 +131,11 @@ fn ingest_oracle_result(
     match orcl.iter().position(|&r| r == src) {
         Some(i) => {
             oracle_busy[i] = false;
+            // the retained in-flight input (fault/adaptive retention) is
+            // answered; a reply from a timeout-evicted oracle is proof of
+            // life and readmits it (dead oracles are gated separately)
+            inflight_input[i] = None;
+            oracle_retry_until[i] = None;
             if let Some(sent) = busy_since[i].take() {
                 label_rtts.record(now.saturating_duration_since(sent));
             }
@@ -158,10 +200,21 @@ pub fn manager_host(
     let adaptive = setting.sched.policy == SchedPolicy::Adaptive;
     let mut orcl_sched =
         OracleScheduler::with_policy(&setting.oracle_batch, &setting.sched, orcl.len());
-    // adaptive only: in-flight batch inputs by id, so an evicted batch's
-    // rows can be requeued and relabeled elsewhere (one clone per dispatch;
-    // the static policy keeps the zero-copy steady state)
+    // in-flight input retention, so an evicted/dead oracle's inputs can be
+    // requeued and relabeled elsewhere (one clone per dispatch). On under
+    // the adaptive policy and whenever a fault plan is installed — chaos
+    // runs never lose inputs; plain static runs keep the zero-copy steady
+    // state (a genuinely dying oracle there loses its batch, honestly
+    // accounted as `lost_inputs`).
+    let retain_inflight = adaptive || ep.fault_active();
     let mut inflight_rows: HashMap<u64, RowBlock> = HashMap::new();
+    // per-label fault/eviction state: dead oracles (never dispatched to
+    // again), timeout-evicted oracles on rejoin backoff, and the retained
+    // in-flight input per oracle
+    let mut oracle_down = vec![false; orcl.len()];
+    let mut oracle_retry_until: Vec<Option<Instant>> = vec![None; orcl.len()];
+    let mut inflight_input: Vec<Option<Payload>> = vec![None; orcl.len()];
+    let mut exchange_down = false;
     let mut batch_scratch = RowBlock::new();
     let mut orcl_frame: Vec<f32> = Vec::new();
     // reusable flush-encode scratch (steady-state flushes allocate nothing)
@@ -171,9 +224,65 @@ pub fn manager_host(
     let mut losses_latest: Vec<f32> = vec![f32::NAN; train.len()];
     let mut total_epochs: u64 = 0;
     let mut stop_requested = false;
+    let mut evict_noted = false;
 
     loop {
         let mut did_work = false;
+
+        // --- control: rank-down notices from host supervisors — evict the
+        // dead rank immediately, requeue its in-flight inputs, and note a
+        // dead Exchange (no further selections will arrive) ---
+        while let Some(m) = ep.try_recv(Src::Any, TAG_RANK_DOWN) {
+            did_work = true;
+            tel.bump("rank_down_notices");
+            let Some(rank) = m.data.first().map(|&f| f as usize) else {
+                continue;
+            };
+            if rank == crate::config::topology::EXCHANGE {
+                exchange_down = true;
+            } else if let Some(i) = orcl.iter().position(|&r| r == rank) {
+                if oracle_batched {
+                    evict_dead_oracle(
+                        &mut orcl_sched,
+                        &mut inflight_rows,
+                        &mut orcl_buffer,
+                        &mut dispatched_total,
+                        &mut tel,
+                        i,
+                        Instant::now(),
+                    );
+                } else if !oracle_down[i] {
+                    tel.bump("oracle_evictions");
+                    oracle_down[i] = true;
+                    let was_busy = std::mem::replace(&mut oracle_busy[i], false);
+                    busy_since[i] = None;
+                    oracle_retry_until[i] = None;
+                    if let Some(p) = inflight_input[i].take() {
+                        orcl_buffer.push_row(&p);
+                        dispatched_total = dispatched_total.saturating_sub(1);
+                        tel.bump("requeued_inputs");
+                    } else if was_busy {
+                        // input was not retained: lost with the host —
+                        // release its budget headroom, record the loss
+                        dispatched_total = dispatched_total.saturating_sub(1);
+                        tel.bump("lost_inputs");
+                    }
+                }
+            } else if setting.exchange_mode == ExchangeMode::Lockstep
+                && (topo.gene_ranks().contains(&rank) || topo.pred_ranks().contains(&rank))
+            {
+                // lockstep rounds gather from every generator and every
+                // prediction rank; the Exchange aborts on its own notice,
+                // but if it is already blocked mid-gather on the dead peer
+                // only the Manager can break the cycle — initiate shutdown
+                stop_requested = true;
+                tel.bump("lockstep_abort_stops");
+            }
+            // otherwise (trainers; batched-mode generators): nothing for
+            // the Manager to evict — the Exchange owns prediction shards,
+            // a dead generator just stops contributing to the red flow,
+            // and flushes to a dead trainer become counted dead letters
+        }
 
         // --- selected inputs from the Exchange (green flow in) ---
         while let Some(m) = ep.try_recv(Src::Rank(crate::config::topology::EXCHANGE), TAG_ORCL_SELECT) {
@@ -203,6 +312,8 @@ pub fn manager_host(
                 &orcl,
                 &mut oracle_busy,
                 &mut busy_since,
+                &mut oracle_retry_until,
+                &mut inflight_input,
                 &mut label_rtts,
                 &mut train_buffer,
                 &mut out,
@@ -254,15 +365,18 @@ pub fn manager_host(
             }
         }
 
-        // --- dispatch buffered inputs (green flow out), bounded by the
-        //     label budget when one is set ---
+        // --- health sweep: runs every loop pass (not just on dispatch),
+        // so an idle Manager still notices a stalled or dead oracle.
+        // Batched mode: evict stalled oracles (adaptive policy; a no-op
+        // under static) and requeue their in-flight inputs — inputs
+        // already dispatched are never lost to a dead oracle, and their
+        // budget headroom is released for the re-dispatch. Per-label mode:
+        // the same timeout eviction, extended to the paper-faithful path —
+        // a busy oracle past `sched_timeout_ms` frees its slot, its
+        // retained input requeues, and the oracle backs off for
+        // `sched_rejoin_ms` (a later reply readmits it) ---
+        let now = Instant::now();
         if oracle_batched {
-            let now = Instant::now();
-            // health plane (adaptive policy only; a no-op under static):
-            // evict stalled oracles and requeue their in-flight inputs so
-            // they are relabeled elsewhere — inputs already dispatched are
-            // never lost to a dead oracle, and their budget headroom is
-            // released for the re-dispatch
             for ev in orcl_sched.check_health(now) {
                 tel.bump("oracle_evictions");
                 if let Some(rows) = inflight_rows.remove(&ev.id) {
@@ -275,6 +389,37 @@ pub fn manager_host(
                     did_work = true;
                 }
             }
+        } else if adaptive {
+            if let Some(timeout) = setting.sched.timeout {
+                for i in 0..orcl.len() {
+                    if !oracle_busy[i] || oracle_down[i] {
+                        continue;
+                    }
+                    let stale = busy_since[i]
+                        .map_or(false, |t| now.saturating_duration_since(t) >= timeout);
+                    if !stale {
+                        continue;
+                    }
+                    tel.bump("oracle_evictions");
+                    oracle_busy[i] = false;
+                    busy_since[i] = None;
+                    oracle_retry_until[i] = Some(now + setting.sched.rejoin_backoff);
+                    dispatched_total = dispatched_total.saturating_sub(1);
+                    if let Some(p) = inflight_input[i].take() {
+                        orcl_buffer.push_row(&p);
+                        tel.bump("requeued_inputs");
+                    } else {
+                        tel.bump("lost_inputs");
+                    }
+                    did_work = true;
+                }
+            }
+        }
+
+        // --- dispatch buffered inputs (green flow out), bounded by the
+        //     label budget when one is set ---
+        if oracle_batched {
+            let now = Instant::now();
             // oracle plane: coalesce queue-head rows into micro-batches,
             // routed by the configured policy (triggers/backpressure in
             // the scheduler; `dispatched` counts items in both modes)
@@ -295,8 +440,8 @@ pub fn manager_host(
                     batch_scratch.push_row(row);
                 }
                 encode_oracle_batch_block_into(d.id, &batch_scratch, &mut orcl_frame);
-                ep.send(orcl[d.oracle], TAG_ORACLE_BATCH, &orcl_frame[..]);
-                if adaptive {
+                let delivered = ep.send(orcl[d.oracle], TAG_ORACLE_BATCH, &orcl_frame[..]);
+                if retain_inflight {
                     inflight_rows.insert(d.id, batch_scratch.clone());
                 }
                 dispatched_total += d.take as u64;
@@ -305,13 +450,33 @@ pub fn manager_host(
                 if d.take < setting.oracle_batch.max_size {
                     tel.bump("oracle_partial_batches");
                 }
+                if !delivered {
+                    // dead letter: the oracle's endpoint is gone — evict it
+                    // now (requeues this batch and any others it held)
+                    // instead of waiting for the rank-down notice
+                    tel.bump("dead_letter_dispatches");
+                    evict_dead_oracle(
+                        &mut orcl_sched,
+                        &mut inflight_rows,
+                        &mut orcl_buffer,
+                        &mut dispatched_total,
+                        &mut tel,
+                        d.oracle,
+                        now,
+                    );
+                }
                 did_work = true;
             }
         } else {
             // per-label path (paper-faithful): one input to the first free
-            // oracle, one message per label
+            // oracle, one message per label. Dead oracles never dispatch
+            // again; timeout-evicted ones sit out their rejoin backoff.
+            let now = Instant::now();
             for (i, &rank) in orcl.iter().enumerate() {
-                if oracle_busy[i] {
+                if oracle_busy[i] || oracle_down[i] {
+                    continue;
+                }
+                if oracle_retry_until[i].map_or(false, |t| now < t) {
                     continue;
                 }
                 if let Some(max) = label_budget {
@@ -321,9 +486,41 @@ pub fn manager_host(
                     }
                 }
                 if let Some(input) = orcl_buffer.pop_row() {
-                    // borrowed row out of the flat buffer; the send ingests
-                    // it into a shared payload (the one unavoidable copy)
-                    ep.send(rank, TAG_TO_ORACLE, input);
+                    let sent = if retain_inflight {
+                        // ingest once into a shared payload the Manager
+                        // keeps a handle on, so a dying oracle's input can
+                        // be requeued (same single copy as the plain send)
+                        let p: Payload = input.to_vec().into();
+                        ep.note_ingest(p.len());
+                        let ok = ep.send(rank, TAG_TO_ORACLE, &p);
+                        if ok {
+                            inflight_input[i] = Some(p);
+                        } else {
+                            orcl_buffer.push_row(&p);
+                            tel.bump("requeued_inputs");
+                        }
+                        ok
+                    } else {
+                        // borrowed row out of the flat buffer; the send
+                        // ingests it into a shared payload (the one
+                        // unavoidable copy). A failed send loses the input:
+                        // counted, and headroom stays released.
+                        let ok = ep.send(rank, TAG_TO_ORACLE, input);
+                        if !ok {
+                            tel.bump("lost_inputs");
+                        }
+                        ok
+                    };
+                    if !sent {
+                        // dead letter: the oracle's endpoint is gone
+                        tel.bump("dead_letter_dispatches");
+                        if !oracle_down[i] {
+                            tel.bump("oracle_evictions");
+                            oracle_down[i] = true;
+                        }
+                        did_work = true;
+                        continue;
+                    }
                     oracle_busy[i] = true;
                     busy_since[i] = Some(Instant::now());
                     dispatched_total += 1;
@@ -361,6 +558,26 @@ pub fn manager_host(
             tel.bump("stop_requests");
             stop_requested = true;
         }
+        if exchange_down {
+            // no further selections can arrive; everything already queued
+            // was dispatched above, in-flight labels are collected by the
+            // bounded drain — finish degraded instead of polling forever
+            stop_requested = true;
+            tel.bump("exchange_down_stops");
+        }
+        if !orcl.is_empty() {
+            let all_down = if oracle_batched {
+                (0..orcl.len()).all(|i| orcl_sched.is_down(i))
+            } else {
+                oracle_down.iter().all(|&d| d)
+            };
+            if all_down {
+                // nobody left to label: the budget is unreachable — finish
+                // degraded with the labels already earned
+                stop_requested = true;
+                tel.bump("all_oracles_down_stops");
+            }
+        }
         if let Some(max) = setting.stop.max_labels {
             if out.oracle_labels >= max
                 && out.retrain_rounds >= setting.stop.min_retrain_rounds
@@ -376,6 +593,12 @@ pub fn manager_host(
                 stop_requested = true;
                 tel.bump("wall_backstop");
             }
+        }
+        // time-to-evict for the fault bench: run start → first oracle
+        // eviction, whichever path detected it (notice, dead letter, health)
+        if !evict_noted && tel.counter("oracle_evictions") > 0 {
+            tel.record("time_to_first_evict", t_start.elapsed());
+            evict_noted = true;
         }
         if stop_requested {
             break;
@@ -403,6 +626,8 @@ pub fn manager_host(
         &orcl,
         &mut oracle_busy,
         &mut busy_since,
+        &mut oracle_retry_until,
+        &mut inflight_input,
         &mut label_rtts,
         &mut orcl_sched,
         &mut inflight_rows,
@@ -456,6 +681,8 @@ fn drain_oracle_results(
     orcl: &[usize],
     oracle_busy: &mut [bool],
     busy_since: &mut [Option<Instant>],
+    oracle_retry_until: &mut [Option<Instant>],
+    inflight_input: &mut [Option<Payload>],
     label_rtts: &mut LatencyWindow,
     orcl_sched: &mut OracleScheduler,
     inflight_rows: &mut HashMap<u64, RowBlock>,
@@ -476,6 +703,31 @@ fn drain_oracle_results(
         if !waiting || Instant::now() >= deadline {
             break;
         }
+        // a rank-down notice mid-drain frees the dead host's slots so the
+        // drain is not pinned open waiting on replies that can never come
+        while let Some(m) = ep.try_recv(Src::Any, TAG_RANK_DOWN) {
+            tel.bump("rank_down_notices");
+            let Some(rank) = m.data.first().map(|&f| f as usize) else {
+                continue;
+            };
+            if let Some(i) = orcl.iter().position(|&r| r == rank) {
+                if oracle_batched {
+                    for ev in orcl_sched.mark_down(i, Instant::now()) {
+                        tel.bump("oracle_evictions");
+                        // the run is ending: nothing re-dispatches, so the
+                        // dead host's in-flight inputs are honestly lost
+                        inflight_rows.remove(&ev.id);
+                        tel.add("lost_inputs", ev.items as u64);
+                    }
+                } else {
+                    oracle_busy[i] = false;
+                    busy_since[i] = None;
+                    if inflight_input[i].take().is_some() {
+                        tel.bump("lost_inputs");
+                    }
+                }
+            }
+        }
         let mut got = false;
         for m in ep.recv_ready_all(Src::Any, TAG_ORACLE_RESULT) {
             ingest_oracle_result(
@@ -485,6 +737,8 @@ fn drain_oracle_results(
                 orcl,
                 oracle_busy,
                 busy_since,
+                oracle_retry_until,
+                inflight_input,
                 label_rtts,
                 train_buffer,
                 out,
@@ -649,6 +903,8 @@ mod tests {
         let t0 = Instant::now();
         let mut oracle_busy = vec![true, true];
         let mut busy_since = vec![Some(t0), Some(t0)];
+        let mut oracle_retry_until = vec![None, None];
+        let mut inflight_input = vec![None, None];
         let mut label_rtts = LatencyWindow::default();
         let mut orcl_sched = OracleScheduler::new(&BatchSetting::default(), orcl.len());
         let mut inflight_rows = HashMap::new();
@@ -660,6 +916,8 @@ mod tests {
             &orcl,
             &mut oracle_busy,
             &mut busy_since,
+            &mut oracle_retry_until,
+            &mut inflight_input,
             &mut label_rtts,
             &mut orcl_sched,
             &mut inflight_rows,
@@ -704,6 +962,8 @@ mod tests {
 
         let mut oracle_busy = vec![false];
         let mut busy_since = vec![None];
+        let mut oracle_retry_until = vec![None];
+        let mut inflight_input = vec![None];
         let mut label_rtts = LatencyWindow::default();
         let mut inflight_rows = HashMap::new();
         let mut train_buffer = TrainBuffer::new(100);
@@ -714,6 +974,8 @@ mod tests {
             &[1],
             &mut oracle_busy,
             &mut busy_since,
+            &mut oracle_retry_until,
+            &mut inflight_input,
             &mut label_rtts,
             &mut orcl_sched,
             &mut inflight_rows,

@@ -150,6 +150,19 @@ impl OracleScheduler {
         self.core.check_health(now)
     }
 
+    /// The host behind oracle index `oracle` died (rank-down notice or
+    /// failed send): permanently evict it — under any policy — and return
+    /// its in-flight batches for requeue. See
+    /// [`crate::coordinator::dispatch::DispatchCore::mark_down`].
+    pub fn mark_down(&mut self, oracle: usize, now: Instant) -> Vec<Eviction> {
+        self.core.mark_down(oracle, now)
+    }
+
+    /// Whether `oracle` has been permanently marked down.
+    pub fn is_down(&self, oracle: usize) -> bool {
+        self.core.endpoint(oracle).is_dead()
+    }
+
     /// Shutdown drain bound: `max(base, sched_drain_factor × p95 RTT)`.
     pub fn drain_bound(&self, base: Duration) -> Duration {
         self.core.drain_bound(base)

@@ -1,28 +1,78 @@
 //! Workflow launcher: spawns one host thread per rank over a
 //! [`crate::comm::World`] and aggregates the run report.
+//!
+//! Every spawned host runs under [`supervised`]: a panicking or
+//! fault-killed host is caught at the thread boundary, announces itself to
+//! the Manager and Exchange with a [`TAG_RANK_DOWN`] control message, and
+//! returns a failed [`KernelTelemetry`] record instead of poisoning the
+//! join. [`Workflow::run`] therefore completes with a *degraded*
+//! [`RunReport`] — the `faults` section says who died and what the
+//! coordinators recovered — rather than an `Err`. The one exception is the
+//! Manager itself: it runs on the caller thread as the shutdown authority,
+//! so its death is the run's death.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Context;
 
-use crate::comm::World;
+use crate::comm::protocol::TAG_RANK_DOWN;
+use crate::comm::{ControlHandle, FaultKill, FaultPlan, World};
 use crate::config::{topology, AlSetting, Topology};
 use crate::coordinator::{exchange, hosts, manager};
 use crate::kernels::{KernelSet, Mode};
-use crate::telemetry::{KernelTelemetry, RunReport};
+use crate::telemetry::{FaultReport, KernelTelemetry, RunReport};
 
 pub use crate::kernels::KernelSet as Kernels;
+
+/// Run `body` on a host thread, catching panics at the boundary.
+///
+/// On a panic (genuine bug or injected [`FaultKill`]) the dead rank's own
+/// endpoint is already gone — unwinding dropped it — so the rank-down
+/// notice travels over the world's control plane instead, which outlives
+/// every endpoint. Both coordinators are told: the Manager owns oracle
+/// eviction and shutdown, the Exchange owns prediction shards.
+fn supervised<F>(ctrl: ControlHandle, kernel: &'static str, rank: usize, body: F) -> KernelTelemetry
+where
+    F: FnOnce() -> KernelTelemetry,
+{
+    match catch_unwind(AssertUnwindSafe(body)) {
+        Ok(tel) => tel,
+        Err(payload) => {
+            let mut tel = KernelTelemetry::new(kernel, rank);
+            tel.bump("failed");
+            if payload.downcast_ref::<FaultKill>().is_some() {
+                tel.bump("fault_injected");
+            }
+            ctrl.send(topology::MANAGER, TAG_RANK_DOWN, vec![rank as f32]);
+            if rank != topology::EXCHANGE {
+                ctrl.send(topology::EXCHANGE, TAG_RANK_DOWN, vec![rank as f32]);
+            }
+            tel
+        }
+    }
+}
 
 /// A configured PAL workflow, ready to run a kernel set.
 pub struct Workflow {
     setting: AlSetting,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl Workflow {
     pub fn new(setting: AlSetting) -> Self {
-        Workflow { setting }
+        Workflow { setting, fault_plan: None }
+    }
+
+    /// Install a deterministic fault plan for the next run (chaos testing).
+    /// An empty plan is a no-op: the run stays bit-identical to a plain one.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        if !plan.is_empty() {
+            self.fault_plan = Some(plan);
+        }
+        self
     }
 
     pub fn setting(&self) -> &AlSetting {
@@ -36,6 +86,11 @@ impl Workflow {
         kernels.validate(&self.setting)?;
         let topo = Topology::new(&self.setting);
         let mut world = World::with_latency(topo.n_ranks(), self.setting.comm_latency);
+        if let Some(plan) = &self.fault_plan {
+            // must precede endpoint handout: each endpoint compiles its
+            // rank's slice of the plan when it is taken from the world
+            world.set_fault_plan(plan.clone());
+        }
         let world_stats = world.stats();
         let down = Arc::new(AtomicBool::new(false));
         let t0 = Instant::now();
@@ -47,6 +102,7 @@ impl Workflow {
         // Exchange controller (rank 1)
         {
             let ep = world.endpoint(topology::EXCHANGE);
+            let ctrl = world.control_handle(topology::EXCHANGE);
             let setting = self.setting.clone();
             let topo = topo.clone();
             let down = down.clone();
@@ -54,7 +110,11 @@ impl Workflow {
             tel_handles.push(
                 std::thread::Builder::new()
                     .name("pal-exchange".into())
-                    .spawn(move || exchange::exchange_host(ep, utils_f(), &setting, &topo, down))
+                    .spawn(move || {
+                        supervised(ctrl, "exchange", topology::EXCHANGE, move || {
+                            exchange::exchange_host(ep, utils_f(), &setting, &topo, down)
+                        })
+                    })
                     .context("spawning exchange")?,
             );
         }
@@ -65,6 +125,7 @@ impl Workflow {
         // member's trainer keeps every replica in sync.
         for (i, rank) in topo.pred_ranks().into_iter().enumerate() {
             let ep = world.endpoint(rank);
+            let ctrl = world.control_handle(rank);
             let setting = self.setting.clone();
             let down = down.clone();
             let factory = model.clone();
@@ -73,8 +134,10 @@ impl Workflow {
                 std::thread::Builder::new()
                     .name(format!("pal-pred-{i}"))
                     .spawn(move || {
-                        let m = factory(Mode::Predict, member);
-                        hosts::prediction_host(ep, m, &setting, down)
+                        supervised(ctrl, "prediction", rank, move || {
+                            let m = factory(Mode::Predict, member);
+                            hosts::prediction_host(ep, m, &setting, down)
+                        })
                     })
                     .context("spawning predictor")?,
             );
@@ -83,6 +146,7 @@ impl Workflow {
         // Training hosts
         for (i, rank) in topo.train_ranks().into_iter().enumerate() {
             let ep = world.endpoint(rank);
+            let ctrl = world.control_handle(rank);
             let setting = self.setting.clone();
             let topo2 = topo.clone();
             let down = down.clone();
@@ -91,8 +155,10 @@ impl Workflow {
                 std::thread::Builder::new()
                     .name(format!("pal-train-{i}"))
                     .spawn(move || {
-                        let m = factory(Mode::Train, i);
-                        hosts::training_host(ep, m, &setting, &topo2, down)
+                        supervised(ctrl, "training", rank, move || {
+                            let m = factory(Mode::Train, i);
+                            hosts::training_host(ep, m, &setting, &topo2, down)
+                        })
                     })
                     .context("spawning trainer")?,
             );
@@ -106,12 +172,17 @@ impl Workflow {
             .enumerate()
         {
             let ep = world.endpoint(rank);
+            let ctrl = world.control_handle(rank);
             let setting = self.setting.clone();
             let down = down.clone();
             tel_handles.push(
                 std::thread::Builder::new()
                     .name(format!("pal-gen-{i}"))
-                    .spawn(move || hosts::generator_host(ep, factory(), &setting, down))
+                    .spawn(move || {
+                        supervised(ctrl, "generator", rank, move || {
+                            hosts::generator_host(ep, factory(), &setting, down)
+                        })
+                    })
                     .context("spawning generator")?,
             );
         }
@@ -124,12 +195,17 @@ impl Workflow {
             .enumerate()
         {
             let ep = world.endpoint(rank);
+            let ctrl = world.control_handle(rank);
             let setting = self.setting.clone();
             let down = down.clone();
             tel_handles.push(
                 std::thread::Builder::new()
                     .name(format!("pal-orcl-{i}"))
-                    .spawn(move || hosts::oracle_host(ep, factory(), &setting, down))
+                    .spawn(move || {
+                        supervised(ctrl, "oracle", rank, move || {
+                            hosts::oracle_host(ep, factory(), &setting, down)
+                        })
+                    })
                     .context("spawning oracle")?,
             );
         }
@@ -152,9 +228,20 @@ impl Workflow {
             payload_bytes: world_stats.payload_bytes(),
             payload_clones: world_stats.payload_clones(),
             bytes_copied: world_stats.bytes_copied(),
+            faults: FaultReport::default(),
         };
+        // Supervised hosts catch their own panics and return a failed
+        // telemetry record, so every join completes in spawn order — a dead
+        // host can no longer abort this loop early and leave later handles
+        // unjoined (the old `Err("kernel host panicked")` path). The
+        // unwrap_or_else is a belt-and-braces backstop for a thread that
+        // dies outside the catch (it cannot name its rank).
         for h in tel_handles {
-            let tel = h.join().map_err(|_| anyhow::anyhow!("kernel host panicked"))?;
+            let tel = h.join().unwrap_or_else(|_| {
+                let mut t = KernelTelemetry::new("unknown", usize::MAX);
+                t.bump("failed");
+                t
+            });
             if tel.kernel == "exchange" {
                 report.al_iterations = tel.counter("iterations");
             }
@@ -170,6 +257,32 @@ impl Workflow {
         report.payload_bytes = world_stats.payload_bytes();
         report.payload_clones = world_stats.payload_clones();
         report.bytes_copied = world_stats.bytes_copied();
+        // Fault section: aggregate the supervision and eviction counters
+        // into one honest summary. `bad_frames`/`malformed` overlap inside
+        // the Manager (bumped together on the paths that see both), so per
+        // kernel the larger of the two is the frame-fault count.
+        let mut faults = FaultReport::default();
+        for k in &report.kernels {
+            if k.counter("failed") > 0 {
+                faults.failed_ranks.push(k.rank);
+            }
+            faults.bad_frames += k.counter("bad_frames").max(k.counter("malformed"));
+            match k.kernel.as_str() {
+                "manager" => {
+                    faults.oracle_evictions += k.counter("oracle_evictions");
+                    faults.requeued_inputs += k.counter("requeued_inputs");
+                    faults.lost_inputs += k.counter("lost_inputs");
+                }
+                "exchange" => {
+                    faults.shard_evictions += k.counter("shard_evictions");
+                    faults.requeued_items += k.counter("requeued_items");
+                }
+                _ => {}
+            }
+        }
+        faults.failed_ranks.sort_unstable();
+        faults.dead_letters = world_stats.dead_letters();
+        report.faults = faults;
         Ok(report)
     }
 }

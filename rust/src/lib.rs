@@ -153,13 +153,43 @@
 //! labels/sec win of adaptive routing over static least-outstanding under
 //! a heterogeneous-latency oracle pool.
 //!
+//! ## Fault plane
+//!
+//! Chaos is a first-class, *deterministic* input. A
+//! [`comm::FaultPlan`] — kill rank *k* after its *N*th send/receive or at
+//! time *t*, drop or delay specific `(src, tag)` messages — installs into
+//! the [`comm::World`] before endpoints are handed out, so a seeded chaos
+//! run replays bit-for-bit and an **empty plan is free**: no fault hooks
+//! on the hot paths, runs bit-identical to a plain build (pinned in
+//! `rust/tests/test_determinism.rs`). Every host thread runs supervised
+//! (`catch_unwind` at the thread boundary): a panicking or fault-killed
+//! host announces itself over the control plane (`TAG_RANK_DOWN`, which
+//! outlives the dead rank's endpoint) and returns a failed telemetry
+//! record, so `Workflow::run` completes with a *degraded* `RunReport`
+//! whose `faults` section (failed ranks, evictions, requeues, lost inputs,
+//! bad frames, dead letters) says what happened — never a poisoned join.
+//!
+//! What the run *tolerates* (completes, and still reaches a strict label
+//! budget): any single non-last oracle or prediction shard dying mid-run
+//! — the Manager/Exchange evict it on the rank-down notice or on the
+//! first dead-letter send, requeue its in-flight inputs, and relabel them
+//! elsewhere, in both batched and per-label oracle modes. What *degrades*
+//! (completes, possibly short of the budget): dead trainers (no further
+//! retrains), dead generators in batched exchange mode (less red flow),
+//! a dead Exchange or all oracles dead (the Manager stops and drains
+//! honestly), any lockstep-round participant dying (lockstep rounds need
+//! every peer, so the run aborts cleanly into a degraded report). What
+//! *aborts*: death of the Manager itself — it runs on the caller thread
+//! as the shutdown authority. See [`comm`] for the injection layer and
+//! `rust/tests/test_fault_plane.rs` for the chaos matrix.
+//!
 //! ## Performance
 //!
 //! Perf-tracking benches write machine-readable JSON next to their
 //! human-readable tables, so the trajectory is comparable across PRs:
 //!
 //! ```text
-//! cargo bench --bench comm_overhead   # → BENCH_comm.json
+//! cargo bench --bench comm_overhead   # → BENCH_comm.json  + BENCH_fault.json
 //! cargo bench --bench fig1_speedup    # → BENCH_speedup.json
 //! ```
 //!

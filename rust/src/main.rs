@@ -168,6 +168,22 @@ fn cmd_run(args: &Args) -> i32 {
                 report.bytes_copied / 1024,
                 report.payload_clones
             );
+            if !report.faults.is_clean() {
+                let f = &report.faults;
+                println!(
+                    "DEGRADED: failed ranks {:?}; evictions {} oracle / {} shard; \
+                     requeued {} inputs / {} items; lost {} inputs; \
+                     {} bad frames, {} dead letters",
+                    f.failed_ranks,
+                    f.oracle_evictions,
+                    f.shard_evictions,
+                    f.requeued_inputs,
+                    f.requeued_items,
+                    f.lost_inputs,
+                    f.bad_frames,
+                    f.dead_letters
+                );
+            }
             0
         }
         Err(e) => {

@@ -171,6 +171,65 @@ impl KernelTelemetry {
     }
 }
 
+/// Fault-plane summary of one run: which hosts died and what the
+/// coordinators did about it. An all-zero report (see
+/// [`FaultReport::is_clean`]) is the healthy steady state; anything else
+/// means the run completed *degraded* and the numbers say how.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Ranks whose hosts panicked or were fault-killed (sorted).
+    pub failed_ranks: Vec<usize>,
+    /// Oracles permanently or temporarily evicted by the Manager.
+    pub oracle_evictions: u64,
+    /// Prediction shards evicted by the Exchange.
+    pub shard_evictions: u64,
+    /// Oracle inputs requeued after an eviction (relabeled elsewhere).
+    pub requeued_inputs: u64,
+    /// Prediction items requeued after a shard eviction.
+    pub requeued_items: u64,
+    /// Dispatched inputs lost with a dead host (not retained/requeueable).
+    pub lost_inputs: u64,
+    /// Undecodable frames observed across all kernels.
+    pub bad_frames: u64,
+    /// Sends that found the destination endpoint already dropped.
+    pub dead_letters: u64,
+}
+
+impl FaultReport {
+    /// No host died and nothing was evicted, requeued, lost, or malformed.
+    /// `dead_letters` is deliberately excluded: the shutdown fan-out sets the
+    /// stop flag before waking every rank, so a host that polls the flag can
+    /// drop its endpoint a beat before the wake-up send lands. Those benign
+    /// races are still reported in the count, but they do not make a run
+    /// degraded — every *harmful* dead letter also surfaces as an eviction
+    /// or a failed rank.
+    pub fn is_clean(&self) -> bool {
+        self.failed_ranks.is_empty()
+            && self.oracle_evictions == 0
+            && self.shard_evictions == 0
+            && self.requeued_inputs == 0
+            && self.requeued_items == 0
+            && self.lost_inputs == 0
+            && self.bad_frames == 0
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            (
+                "failed_ranks",
+                Value::Array(self.failed_ranks.iter().map(|&r| Value::Num(r as f64)).collect()),
+            ),
+            ("oracle_evictions", Value::Num(self.oracle_evictions as f64)),
+            ("shard_evictions", Value::Num(self.shard_evictions as f64)),
+            ("requeued_inputs", Value::Num(self.requeued_inputs as f64)),
+            ("requeued_items", Value::Num(self.requeued_items as f64)),
+            ("lost_inputs", Value::Num(self.lost_inputs as f64)),
+            ("bad_frames", Value::Num(self.bad_frames as f64)),
+            ("dead_letters", Value::Num(self.dead_letters as f64)),
+        ])
+    }
+}
+
 /// Aggregated result of one workflow run.
 #[derive(Debug, Default, Clone)]
 pub struct RunReport {
@@ -196,6 +255,9 @@ pub struct RunReport {
     /// Bytes physically copied by the transport (the copy volume behind
     /// `payload_clones`; compare against `payload_bytes` to see sharing).
     pub bytes_copied: u64,
+    /// Fault-plane summary: failed ranks, evictions, requeues, dead
+    /// letters. Clean runs carry an all-zero report.
+    pub faults: FaultReport,
 }
 
 impl RunReport {
@@ -239,6 +301,7 @@ impl RunReport {
                 "final_losses",
                 Value::Array(self.final_losses.iter().map(|l| Value::Num(*l as f64)).collect()),
             ),
+            ("faults", self.faults.to_json()),
             ("kernels", Value::Array(self.kernels.iter().map(|k| k.to_json()).collect())),
         ])
     }

@@ -21,6 +21,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use pal::comm::FaultPlan;
 use pal::config::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
 use pal::coordinator::workflow::Workflow;
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
@@ -286,6 +287,30 @@ fn batched_oracle_mode_is_bit_identical_to_per_label() {
     }
     for (x, y) in batched.final_losses.iter().zip(&batched2.final_losses) {
         assert_eq!(x.to_bits(), y.to_bits(), "batched mode not bit-stable across runs");
+    }
+}
+
+/// The fault plane's zero-cost pin: installing an *empty* `FaultPlan`
+/// compiles to no per-rank fault state at all, so the run is bit-identical
+/// to a plain one — same labels, same rounds, same final losses to the
+/// bit — and its fault report is clean.
+#[test]
+fn empty_fault_plan_is_bit_identical_to_plain_run() {
+    let plain = run_once(OracleMode::PerLabel);
+    let planned = Workflow::new(deterministic_setting(OracleMode::PerLabel))
+        .with_faults(FaultPlan::default())
+        .run(deterministic_kernels())
+        .unwrap();
+
+    assert!(planned.faults.is_clean(), "{:?}", planned.faults);
+    assert_eq!(plain.oracle_labels, planned.oracle_labels);
+    assert_eq!(plain.retrain_rounds, planned.retrain_rounds);
+    for (i, (x, y)) in plain.final_losses.iter().zip(&planned.final_losses).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "trainer {i} loss differs under an empty fault plan: {x} vs {y}"
+        );
     }
 }
 

@@ -1,0 +1,365 @@
+//! Chaos matrix for the fault plane: seeded [`FaultPlan`] kills of one
+//! rank from every kernel class mid-run, plus a genuine (un-planned) host
+//! panic, all asserting *degraded completion* — `Workflow::run` returns
+//! `Ok(RunReport)` with the dead rank in `faults.failed_ranks`, and where
+//! the class is redundant (oracles, prediction shards) the strict label
+//! budget is still reached: the coordinators evicted the dead rank,
+//! requeued its in-flight work, and relabeled/re-served it elsewhere.
+//!
+//! Faults are deterministic protocol-event triggers (kill on the Nth
+//! arrival or after the Nth send), so each scenario perturbs the same
+//! point in the message stream every run — the reproducibility test pins
+//! that the same plan yields the same failed ranks and the same label
+//! count twice.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pal::comm::FaultPlan;
+use pal::config::{
+    topology, AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria, Topology,
+};
+use pal::coordinator::selection::SelectAllUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::kernels::oracles::PesOracle;
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::potential::{MullerBrown, Pes};
+use pal::rng::Rng;
+use pal::sim::workload::SyntheticModel;
+use pal::telemetry::RunReport;
+
+/// Wire layout for a 1-"atom" PES with 1 global and 1 state:
+/// input `[x, y, z, g, s]`, label `[e, fx, fy, fz]`.
+const IN_DIM: usize = 5;
+const OUT_DIM: usize = 4;
+
+const GENS: usize = 4;
+const ORACLES: usize = 4;
+const LABELS: u64 = 24;
+
+/// Fixed-seed random walker (ignores checked predictions).
+struct MbWalker {
+    rng: Rng,
+    pos: [f32; 2],
+}
+
+impl MbWalker {
+    fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let pes = MullerBrown::default();
+        let x0 = pes.initial_geometry(&mut rng);
+        MbWalker { rng, pos: [x0[0], x0[1]] }
+    }
+}
+
+impl Generator for MbWalker {
+    fn generate_new_data(&mut self, _data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        self.pos[0] += (self.rng.normal() * 0.08) as f32;
+        self.pos[1] += (self.rng.normal() * 0.08) as f32;
+        (false, vec![self.pos[0], self.pos[1], 0.0, 0.0, 1.0])
+    }
+}
+
+/// A generator with a genuine bug: panics (no fault plan involved) on its
+/// fourth step. The supervisor must treat it exactly like an injected kill
+/// minus the `fault_injected` marker.
+struct PanicGen {
+    steps: usize,
+}
+
+impl Generator for PanicGen {
+    fn generate_new_data(&mut self, _data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        self.steps += 1;
+        if self.steps > 3 {
+            panic!("injected genuine bug (expected panic output in this test)");
+        }
+        (false, vec![0.1 * self.steps as f32, 0.2, 0.0, 0.0, 1.0])
+    }
+}
+
+/// Batched green + blue flows, strict label budget, no training: the
+/// recovery invariant (budget reached despite a dead rank) is the subject.
+fn chaos_setting() -> AlSetting {
+    AlSetting {
+        result_dir: "/tmp/pal-fault-plane".into(),
+        gene_process: GENS,
+        pred_process: 1,
+        ml_process: 0,
+        orcl_process: ORACLES,
+        committee_size: Some(1),
+        exchange_mode: ExchangeMode::Batched,
+        retrain_size: 10_000, // never flush
+        strict_label_budget: true,
+        seed: 11,
+        batch: BatchSetting {
+            max_size: GENS,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        },
+        oracle_mode: OracleMode::Batched,
+        oracle_batch: BatchSetting {
+            max_size: 4,
+            max_delay: Duration::from_millis(1),
+            max_outstanding: 1,
+        },
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(LABELS),
+            min_retrain_rounds: 0,
+            min_train_epochs: 0,
+            max_wall: Some(Duration::from_secs(60)),
+        },
+        ..Default::default()
+    }
+}
+
+fn walkers(n: usize) -> Vec<Box<dyn FnOnce() -> Box<dyn Generator> + Send>> {
+    (0..n)
+        .map(|i| {
+            let seed = 300 + i as u64;
+            Box::new(move || Box::new(MbWalker::new(seed)) as Box<dyn Generator>)
+                as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect()
+}
+
+fn instant_oracles(n: usize) -> Vec<Box<dyn FnOnce() -> Box<dyn Oracle> + Send>> {
+    (0..n)
+        .map(|_| {
+            Box::new(|| Box::new(PesOracle::fixed(MullerBrown::default(), 1)) as Box<dyn Oracle>)
+                as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect()
+}
+
+fn chaos_kernels(s: &AlSetting) -> KernelSet {
+    let max_sel = s.gene_process;
+    KernelSet {
+        generators: walkers(s.gene_process),
+        oracles: instant_oracles(s.orcl_process),
+        model: Arc::new(|mode: Mode, _member: usize| {
+            Box::new(SyntheticModel::new(IN_DIM, OUT_DIM, Duration::ZERO, Duration::ZERO, 8, mode))
+                as Box<dyn Model>
+        }),
+        utils: Arc::new(move || {
+            Box::new(SelectAllUtils { max_per_iter: max_sel }) as Box<dyn Utils>
+        }),
+    }
+}
+
+fn run_with(setting: AlSetting, plan: FaultPlan) -> RunReport {
+    let kernels = chaos_kernels(&setting);
+    Workflow::new(setting).with_faults(plan).run(kernels).expect("degraded Ok, never Err")
+}
+
+// ---------------------------------------------------------------------------
+// The chaos matrix: one kill per rank class
+// ---------------------------------------------------------------------------
+
+/// Oracle killed as its first batch arrives (the batch dies with the
+/// host). The Manager must evict it on the rank-down notice, requeue the
+/// retained in-flight inputs, relabel them elsewhere, and still reach the
+/// strict budget — the eviction invariant, now under a real dead thread
+/// instead of a simulated stall.
+#[test]
+fn killed_batched_oracle_still_reaches_label_budget() {
+    let setting = chaos_setting();
+    let victim = Topology::new(&setting).orcl_ranks()[0];
+    let report = run_with(setting, FaultPlan::default().kill_after_recvs(victim, 1));
+
+    assert!(
+        report.oracle_labels >= LABELS,
+        "labels lost with the dead oracle: {} < {LABELS}",
+        report.oracle_labels
+    );
+    assert!(
+        report.wall < Duration::from_secs(50),
+        "run only finished via max_wall ({:?}): recovery failed",
+        report.wall
+    );
+    assert!(report.faults.failed_ranks.contains(&victim), "{:?}", report.faults);
+    assert!(report.faults.oracle_evictions >= 1, "{:?}", report.faults);
+    assert!(report.faults.requeued_inputs >= 1, "in-flight inputs not requeued");
+}
+
+/// Prediction shard killed as its second batch arrives. The Exchange must
+/// evict the whole shard, requeue the lost batch's items by origin, and
+/// re-serve them on the surviving shard — red/blue flow keeps moving and
+/// the label budget is still reached.
+#[test]
+fn killed_prediction_shard_still_reaches_label_budget() {
+    let setting = AlSetting { pred_process: 2, ..chaos_setting() };
+    let victim = Topology::new(&setting).pred_ranks()[0];
+    let report = run_with(setting, FaultPlan::default().kill_after_recvs(victim, 2));
+
+    assert!(
+        report.oracle_labels >= LABELS,
+        "labels starved by the dead shard: {} < {LABELS}",
+        report.oracle_labels
+    );
+    assert!(report.wall < Duration::from_secs(50), "finished via max_wall: {:?}", report.wall);
+    assert!(report.faults.failed_ranks.contains(&victim), "{:?}", report.faults);
+    assert!(report.faults.shard_evictions >= 1, "{:?}", report.faults);
+    assert!(report.faults.requeued_items >= 1, "lost batch's items not requeued");
+}
+
+/// Trainer killed as its first labeled flush arrives. Training is not on
+/// the label path, so the run degrades (no more retrains for that member,
+/// later flushes to it become dead letters) but the budget is reached.
+#[test]
+fn killed_trainer_degrades_but_reaches_label_budget() {
+    let setting = AlSetting {
+        pred_process: 2,
+        ml_process: 2,
+        committee_size: Some(2),
+        retrain_size: 8, // flushes at 8 and 16 labels, well inside the run
+        ..chaos_setting()
+    };
+    let victim = Topology::new(&setting).train_ranks()[0];
+    let report = run_with(setting, FaultPlan::default().kill_after_recvs(victim, 1));
+
+    assert!(report.oracle_labels >= LABELS, "labels: {}", report.oracle_labels);
+    assert!(report.wall < Duration::from_secs(50), "finished via max_wall: {:?}", report.wall);
+    assert!(report.faults.failed_ranks.contains(&victim), "{:?}", report.faults);
+}
+
+/// Generator killed after its third send. In batched exchange mode the
+/// remaining generators keep the red flow alive (partial batches dispatch
+/// on the deadline trigger), so the budget is still reached.
+#[test]
+fn killed_generator_still_reaches_label_budget() {
+    let setting = chaos_setting();
+    let victim = Topology::new(&setting).gene_ranks()[0];
+    let report = run_with(setting, FaultPlan::default().kill_after_sends(victim, 3));
+
+    assert!(report.oracle_labels >= LABELS, "labels: {}", report.oracle_labels);
+    assert!(report.wall < Duration::from_secs(50), "finished via max_wall: {:?}", report.wall);
+    assert!(report.faults.failed_ranks.contains(&victim), "{:?}", report.faults);
+}
+
+// ---------------------------------------------------------------------------
+// Kill the Exchange: bounded drains, degraded completion (the join-order pin)
+// ---------------------------------------------------------------------------
+
+/// The Exchange itself dies mid-run. No further selections can arrive, so
+/// the Manager must notice (rank-down), stop, run its p95-bounded drain,
+/// and join every host promptly — the old join loop would have returned
+/// `Err("kernel host panicked")` and, worse, could hang on hosts blocked
+/// behind the dead relay.
+#[test]
+fn killed_exchange_completes_bounded_and_degraded() {
+    let setting = chaos_setting();
+    // 12 arrivals ≈ two generator rounds: far before the 24-label budget
+    // can complete, so the kill always lands mid-run
+    let report = run_with(setting, FaultPlan::default().kill_after_recvs(topology::EXCHANGE, 12));
+
+    assert!(
+        report.faults.failed_ranks.contains(&topology::EXCHANGE),
+        "{:?}",
+        report.faults
+    );
+    assert!(
+        report.wall < Duration::from_secs(30),
+        "Manager did not stop promptly on a dead Exchange: {:?}",
+        report.wall
+    );
+    let manager = &report.kernel("manager")[0];
+    assert!(manager.counter("exchange_down_stops") >= 1, "stop not attributed to the dead relay");
+}
+
+/// A lockstep-round participant dies. Lockstep gathers need every peer, so
+/// the Exchange may already be blocked mid-gather on the dead generator —
+/// only the Manager can break the cycle, and it must: escalate to
+/// shutdown, drain, and complete degraded instead of hanging.
+#[test]
+fn lockstep_generator_death_aborts_cleanly() {
+    let setting = AlSetting {
+        exchange_mode: ExchangeMode::Lockstep,
+        oracle_mode: OracleMode::PerLabel,
+        orcl_process: 1,
+        strict_label_budget: false,
+        stop: StopCriteria {
+            max_iterations: Some(1_000_000), // ended by the abort, not this
+            max_labels: None,
+            min_retrain_rounds: 0,
+            min_train_epochs: 0,
+            max_wall: Some(Duration::from_secs(30)),
+        },
+        ..chaos_setting()
+    };
+    let victim = Topology::new(&setting).gene_ranks()[0];
+    let report = run_with(setting, FaultPlan::default().kill_after_sends(victim, 5));
+
+    assert!(report.faults.failed_ranks.contains(&victim), "{:?}", report.faults);
+    assert!(
+        report.wall < Duration::from_secs(25),
+        "lockstep abort did not complete promptly: {:?}",
+        report.wall
+    );
+    let manager = &report.kernel("manager")[0];
+    assert!(manager.counter("lockstep_abort_stops") >= 1, "Manager never escalated");
+}
+
+// ---------------------------------------------------------------------------
+// Per-label oracle path: same eviction/requeue discipline
+// ---------------------------------------------------------------------------
+
+/// Oracle death in the legacy per-label mode. The retained in-flight input
+/// must be requeued on the rank-down notice and relabeled by a surviving
+/// oracle — the eviction machinery is not batched-mode-only.
+#[test]
+fn per_label_oracle_death_recovers_via_requeue() {
+    let setting = AlSetting { oracle_mode: OracleMode::PerLabel, ..chaos_setting() };
+    let victim = Topology::new(&setting).orcl_ranks()[0];
+    let report = run_with(setting, FaultPlan::default().kill_after_recvs(victim, 1));
+
+    assert!(
+        report.oracle_labels >= LABELS,
+        "labels lost with the dead oracle: {} < {LABELS}",
+        report.oracle_labels
+    );
+    assert!(report.wall < Duration::from_secs(50), "finished via max_wall: {:?}", report.wall);
+    assert!(report.faults.failed_ranks.contains(&victim), "{:?}", report.faults);
+    assert!(report.faults.oracle_evictions >= 1, "{:?}", report.faults);
+    assert!(report.faults.requeued_inputs >= 1, "retained input not requeued");
+}
+
+// ---------------------------------------------------------------------------
+// Reproducibility + genuine panics
+// ---------------------------------------------------------------------------
+
+/// The same seeded plan twice: faults trigger on protocol events, not
+/// wall-clock, so the failed ranks and the (budget-exact) label count are
+/// identical across runs.
+#[test]
+fn same_fault_plan_is_reproducible() {
+    let victim = Topology::new(&chaos_setting()).orcl_ranks()[0];
+    let a = run_with(chaos_setting(), FaultPlan::default().kill_after_recvs(victim, 1));
+    let b = run_with(chaos_setting(), FaultPlan::default().kill_after_recvs(victim, 1));
+
+    assert_eq!(a.faults.failed_ranks, b.faults.failed_ranks);
+    assert_eq!(a.oracle_labels, b.oracle_labels, "label count not reproducible");
+    assert!(!a.faults.is_clean() && !b.faults.is_clean());
+}
+
+/// A genuine host bug — a plain `panic!`, no fault plan installed — takes
+/// the same supervised path: degraded completion, the rank reported, but
+/// *not* marked as an injected fault.
+#[test]
+fn genuine_panic_is_supervised_not_fatal() {
+    let setting = chaos_setting();
+    let victim = Topology::new(&setting).gene_ranks()[0];
+    let mut kernels = chaos_kernels(&setting);
+    kernels.generators[0] = Box::new(|| Box::new(PanicGen { steps: 0 }) as Box<dyn Generator>);
+    let report = Workflow::new(setting).run(kernels).expect("degraded Ok, never Err");
+
+    assert!(report.oracle_labels >= LABELS, "labels: {}", report.oracle_labels);
+    assert!(report.faults.failed_ranks.contains(&victim), "{:?}", report.faults);
+    let dead = report
+        .kernels
+        .iter()
+        .find(|k| k.rank == victim)
+        .expect("failed host still reports telemetry");
+    assert_eq!(dead.counter("failed"), 1);
+    assert_eq!(dead.counter("fault_injected"), 0, "genuine panic mislabeled as injected");
+}
