@@ -14,11 +14,16 @@
 //! (i) adaptive vs static oracle routing under a heterogeneous-latency
 //! pool (`BENCH_sched.json`), (j) fault recovery — one oracle killed at
 //! ~50% of the label budget vs a clean run, time-to-evict and the
-//! recovery wall-clock ratio (`BENCH_fault.json`, gated at 2x).
+//! recovery wall-clock ratio (`BENCH_fault.json`, gated at 2x),
+//! (k) memory plane — labels-only oracle-result bytes per label vs the
+//! legacy interleaved frame (gated at 1.8x), device-resident weight-cache
+//! upload bytes on repeat calls (gated at zero), and minibatch gather
+//! allocations vs rolling-window size (gated flat; `BENCH_mem.json`).
 //!
 //! Run: `cargo bench --bench comm_overhead`
-//! (append `-- sched-only` for just the scheduler comparison, or
-//! `-- fault-only` for just the fault-recovery gate)
+//! (append `-- sched-only` for just the scheduler comparison,
+//! `-- fault-only` for just the fault-recovery gate, or `-- mem-only`
+//! for just the memory-plane gates)
 //!
 //! Results are also written machine-readable to `BENCH_comm.json` so the
 //! perf trajectory is tracked across PRs.
@@ -28,9 +33,10 @@ use std::time::Duration;
 
 use pal::bench_util::alloc::{alloc_count, CountingAlloc};
 use pal::bench_util::{bench, black_box, Report, Row};
-use pal::comm::bus::{Src, World};
+use pal::comm::bus::{Payload, Src, World};
 use pal::comm::protocol::{
-    decode_predict_batch_result, decode_predict_batch_result_rows, encode_predict_batch_result,
+    decode_predict_batch_result, decode_predict_batch_result_rows, encode_oracle_batch_result_into,
+    encode_oracle_labels_into, encode_predict_batch_result,
 };
 use pal::comm::FaultPlan;
 use pal::config::{
@@ -41,9 +47,11 @@ use pal::coordinator::selection::{
     committee_std_check, committee_std_check_batch, CommitteeStdUtils, SelectAllUtils,
 };
 use pal::coordinator::workflow::Workflow;
-use pal::data::batch::{Batch, BatchView};
+use pal::data::batch::{Batch, BatchView, RowBlock};
+use pal::data::Dataset;
 use pal::json::{obj, Value};
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::runtime::UploadCache;
 use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
 
 // Counting allocator: only the allocations-per-item section reads the
@@ -729,12 +737,178 @@ fn run_fault_section() -> bool {
     target_met
 }
 
+/// Steady-state allocations per `Dataset::minibatch` call at a given
+/// rolling-window size. One warmup call sizes the gather scratch; the
+/// measured loop must then be allocation-free regardless of window.
+fn minibatch_allocs(window: usize) -> u64 {
+    const DIM: usize = 8;
+    const MB: usize = 16;
+    const ITERS: u64 = 64;
+    let mut d = Dataset::new(0.0, 7).with_rolling_window(window);
+    let pts: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..window + 32).map(|i| (vec![i as f32; DIM], vec![i as f32])).collect();
+    d.add(&pts);
+    black_box(d.minibatch(MB));
+    let a0 = alloc_count();
+    for _ in 0..ITERS {
+        black_box(d.minibatch(MB));
+    }
+    (alloc_count() - a0) / ITERS
+}
+
+/// Section (k): memory-plane gates. (1) labels-only oracle-result frame
+/// vs the legacy interleaved frame, bytes per label at batch 8 (>= 1.8x
+/// fewer); (2) identity-keyed weight upload cache, staged bytes on repeat
+/// calls (zero after the first); (3) minibatch gather allocations flat in
+/// the rolling-window size. Returns whether all three gates held.
+fn run_mem_section() -> bool {
+    // ---- labels-only result frames vs interleaved inputs+labels ----
+    const MB_BATCH: usize = 8;
+    const IN_W: usize = 32;
+    const LAB_W: usize = 32;
+    let inputs: Vec<Vec<f32>> = (0..MB_BATCH).map(|i| vec![i as f32; IN_W]).collect();
+    let input_refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let mut labels = RowBlock::new();
+    for i in 0..MB_BATCH {
+        labels.push_row(&[i as f32; LAB_W]);
+    }
+    let mut legacy_frame = Vec::new();
+    encode_oracle_batch_result_into(77, &input_refs, &labels, &mut legacy_frame);
+    let mut labels_frame = Vec::new();
+    encode_oracle_labels_into(77, &labels, &mut labels_frame);
+    let legacy_bpl = legacy_frame.len() as f64 * 4.0 / MB_BATCH as f64;
+    let labels_bpl = labels_frame.len() as f64 * 4.0 / MB_BATCH as f64;
+    let bytes_reduction = legacy_bpl / labels_bpl.max(1e-9);
+
+    // ---- device-resident weight cache: repeat uploads must stage zero ----
+    const WLEN: usize = 4096;
+    const ROUNDS: u64 = 32;
+    let weights = Payload::from(vec![0.5f32; WLEN]);
+    let mut cached = UploadCache::new(8);
+    for _ in 0..ROUNDS {
+        cached.ensure(&weights, &[WLEN as i64]).expect("stage shared weights");
+    }
+    let cs = cached.stats();
+    let first_upload = 4 * WLEN as u64;
+    let hit_upload_bytes = cs.bytes_uploaded.saturating_sub(first_upload);
+    // pre-cache engine behaviour: every call stages a fresh buffer, so the
+    // identity changes and the cache can never hit
+    let mut uncached = UploadCache::new(8);
+    for _ in 0..ROUNDS {
+        let w = Payload::from(vec![0.5f32; WLEN]);
+        uncached.ensure(&w, &[WLEN as i64]).expect("stage fresh weights");
+    }
+    let us = uncached.stats();
+    let upload_reduction = us.bytes_uploaded as f64 / cs.bytes_uploaded.max(1) as f64;
+    let cache_ok = hit_upload_bytes == 0 && cs.hits == ROUNDS - 1;
+
+    // ---- minibatch gather: allocation count flat in the window size ----
+    let allocs_64 = minibatch_allocs(64);
+    let allocs_512 = minibatch_allocs(512);
+    let minibatch_flat = allocs_64 == allocs_512;
+
+    let target_met = bytes_reduction >= 1.8 && cache_ok && minibatch_flat;
+
+    let mut rep = Report::new(format!(
+        "memory plane — result bytes/label (batch {MB_BATCH}), weight-upload bytes \
+         ({ROUNDS} rounds), minibatch allocs vs window"
+    ));
+    rep.push(
+        Row::new("legacy interleaved result")
+            .f("bytes_per_label", legacy_bpl)
+            .field("frame_f32", legacy_frame.len()),
+    );
+    rep.push(
+        Row::new("labels-only result")
+            .f("bytes_per_label", labels_bpl)
+            .field("frame_f32", labels_frame.len())
+            .f("reduction_x", bytes_reduction),
+    );
+    rep.push(
+        Row::new("weight upload, uncached")
+            .field("bytes_uploaded", us.bytes_uploaded)
+            .field("misses", us.misses),
+    );
+    rep.push(
+        Row::new("weight upload, cached")
+            .field("bytes_uploaded", cs.bytes_uploaded)
+            .field("hits", cs.hits)
+            .field("hit_upload_bytes", hit_upload_bytes)
+            .f("reduction_x", upload_reduction),
+    );
+    rep.push(Row::new("minibatch allocs, window 64").field("allocs_per_call", allocs_64));
+    rep.push(Row::new("minibatch allocs, window 512").field("allocs_per_call", allocs_512));
+    rep.print();
+    println!(
+        "(labels-only results carry {bytes_reduction:.2}x fewer bytes per label{})",
+        if bytes_reduction >= 1.8 { " — >= 1.8x target met" } else { " — BELOW the 1.8x target" }
+    );
+    println!(
+        "(repeat weight uploads staged {hit_upload_bytes} bytes{})",
+        if cache_ok { " — zero-byte cache-hit target met" } else { " — CACHE-HIT GATE MISSED" }
+    );
+    println!(
+        "(minibatch allocs/call {allocs_64} at window 64 vs {allocs_512} at 512{})",
+        if minibatch_flat { " — flat-in-window target met" } else { " — NOT FLAT" }
+    );
+
+    let mem_json = obj(vec![
+        ("bench", Value::Str("mem_plane".into())),
+        (
+            "oracle_result",
+            obj(vec![
+                ("batch", Value::Num(MB_BATCH as f64)),
+                ("input_width", Value::Num(IN_W as f64)),
+                ("label_width", Value::Num(LAB_W as f64)),
+                ("legacy_bytes_per_label", Value::Num(legacy_bpl)),
+                ("labels_only_bytes_per_label", Value::Num(labels_bpl)),
+                ("bytes_reduction_x", Value::Num(bytes_reduction)),
+            ]),
+        ),
+        (
+            "weight_upload",
+            obj(vec![
+                ("rounds", Value::Num(ROUNDS as f64)),
+                ("weight_f32", Value::Num(WLEN as f64)),
+                ("uncached_bytes", Value::Num(us.bytes_uploaded as f64)),
+                ("cached_bytes", Value::Num(cs.bytes_uploaded as f64)),
+                ("cache_hits", Value::Num(cs.hits as f64)),
+                ("hit_upload_bytes", Value::Num(hit_upload_bytes as f64)),
+                ("upload_reduction_x", Value::Num(upload_reduction)),
+            ]),
+        ),
+        (
+            "minibatch",
+            obj(vec![
+                ("allocs_per_call_window_64", Value::Num(allocs_64 as f64)),
+                ("allocs_per_call_window_512", Value::Num(allocs_512 as f64)),
+                ("flat_in_window", Value::Bool(minibatch_flat)),
+            ]),
+        ),
+        ("target_met", Value::Bool(target_met)),
+    ]);
+    match std::fs::write("BENCH_mem.json", pal::json::to_string(&mem_json)) {
+        Ok(()) => println!("wrote BENCH_mem.json"),
+        Err(e) => eprintln!("failed to write BENCH_mem.json: {e}"),
+    }
+    target_met
+}
+
 fn main() {
     // `cargo bench --bench comm_overhead -- sched-only` runs just the
-    // scheduler comparison, `-- fault-only` just the fault-recovery gate
-    // (both CI gates); no args runs everything.
+    // scheduler comparison, `-- fault-only` just the fault-recovery gate,
+    // `-- mem-only` just the memory-plane gates (all CI gates); no args
+    // runs everything.
     let sched_only = std::env::args().any(|a| a == "sched-only");
     let fault_only = std::env::args().any(|a| a == "fault-only");
+    let mem_only = std::env::args().any(|a| a == "mem-only");
+    if mem_only {
+        // ---- (k) memory plane: result bytes, upload cache, minibatch ----
+        if !run_mem_section() {
+            std::process::exit(1);
+        }
+        return;
+    }
     if !sched_only && !fault_only {
         run_comm_sections();
     }
@@ -808,6 +982,10 @@ fn main() {
     if !sched_only {
         // ---- (j) fault recovery: killed-oracle wall vs clean ----
         if !run_fault_section() {
+            std::process::exit(1);
+        }
+        // ---- (k) memory plane: result bytes, upload cache, minibatch ----
+        if !run_mem_section() {
             std::process::exit(1);
         }
     }

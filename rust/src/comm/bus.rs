@@ -81,6 +81,28 @@ impl Payload {
     pub fn shared_handles(&self) -> usize {
         Arc::strong_count(&self.buf)
     }
+
+    /// Identity of the viewed data: backing-buffer address plus view range.
+    /// Two payloads with equal identity alias the same immutable values, so
+    /// the identity is a valid cache key for derived state (the runtime's
+    /// device-resident upload cache) for as long as a handle to the payload
+    /// is held. The address is only meaningful while the `Arc` is alive —
+    /// never dereference it, and never compare identities across a drop.
+    pub fn ident(&self) -> PayloadId {
+        PayloadId {
+            addr: Arc::as_ptr(&self.buf) as *const f32 as usize,
+            start: self.start,
+            len: self.len,
+        }
+    }
+}
+
+/// Value identity of a [`Payload`] view (see [`Payload::ident`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PayloadId {
+    addr: usize,
+    start: usize,
+    len: usize,
 }
 
 impl From<Vec<f32>> for Payload {
@@ -1221,6 +1243,20 @@ mod tests {
         assert_eq!(sub.as_slice(), &[3.0]);
         // empty range is fine
         assert_eq!(p.slice(6..6).len(), 0);
+    }
+
+    #[test]
+    fn payload_ident_tracks_buffer_and_range() {
+        let p = Payload::from(vec![0.0, 1.0, 2.0, 3.0]);
+        // clones alias the same data → same identity
+        assert_eq!(p.ident(), p.clone().ident());
+        // a sub-view is a distinct identity on the same buffer
+        assert_ne!(p.ident(), p.slice(0..2).ident());
+        assert_eq!(p.slice(0..2).ident(), p.slice(0..2).ident());
+        // equal values in a different buffer are a different identity
+        let q = Payload::from(vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(p, q);
+        assert_ne!(p.ident(), q.ident());
     }
 
     #[test]

@@ -199,6 +199,35 @@ pub fn unpack_batch_view(data: &[f32]) -> Option<BatchView<'_>> {
     BatchView::from_parts(&data[start..], rows, width)
 }
 
+/// Ragged-capable header parse with a single bounds allocation: returns
+/// `(ends, data_offset)` where row `i` spans
+/// `data_offset + ends[i-1] .. data_offset + ends[i]` (`ends[-1]` read as
+/// 0). Accepts exactly the [`unpack_views`]-valid payloads; callers that
+/// hold the payload by refcount use this to build a
+/// [`crate::data::batch::SharedRows`] over the data section instead of
+/// boxing per-row copies.
+pub fn unpack_row_ends(data: &[f32]) -> Option<(Vec<usize>, usize)> {
+    let count = *data.first()? as usize;
+    if count >= MAX_LEN {
+        return None;
+    }
+    let mut ends = Vec::with_capacity(count);
+    let mut total = 0usize;
+    for i in 0..count {
+        let l = *data.get(1 + i)? as usize;
+        if l >= MAX_LEN {
+            return None;
+        }
+        total = total.checked_add(l)?;
+        ends.push(total);
+    }
+    let start = 1 + count;
+    if start.checked_add(total)? != data.len() {
+        return None; // truncated or trailing garbage
+    }
+    Some((ends, start))
+}
+
 /// Append the packed encoding of a uniform batch to `out` — wire-identical
 /// to [`pack_into`] over the batch's rows, but the data section is one
 /// `memcpy` of the flat buffer.
@@ -405,6 +434,24 @@ mod tests {
         assert_eq!(unpack_uniform(&pack(&[])).unwrap(), (0, 0, 1));
         let zw = pack(&[&[][..], &[][..]]);
         assert_eq!(unpack_uniform(&zw).unwrap(), (2, 0, 3));
+    }
+
+    #[test]
+    fn row_ends_parse_matches_views() {
+        let parts = vec![vec![1.0f32, 2.0], vec![], vec![3.0, 4.0, 5.0]];
+        let packed = pack_vecs(&parts);
+        let (ends, start) = unpack_row_ends(&packed).unwrap();
+        assert_eq!(ends, vec![2, 2, 5]);
+        assert_eq!(&packed[start..start + 2], &[1.0, 2.0]);
+        assert_eq!(&packed[start + 2..start + 5], &[3.0, 4.0, 5.0]);
+        // empty list
+        assert_eq!(unpack_row_ends(&pack(&[])).unwrap(), (vec![], 1));
+        // same rejection set as the view parse
+        assert!(unpack_row_ends(&packed[..packed.len() - 1]).is_none());
+        let mut garbage = packed.clone();
+        garbage.push(9.0);
+        assert!(unpack_row_ends(&garbage).is_none());
+        assert!(unpack_row_ends(&[]).is_none());
     }
 
     #[test]

@@ -129,14 +129,17 @@
 //! The batched oracle mode rides the same frame discipline: `OracleBatch`
 //! ([`protocol::TAG_ORACLE_BATCH`], layout identical to `PredictBatch`)
 //! carries a micro-batch of Manager-selected inputs to one oracle, and
-//! `OracleBatchResult` ([`protocol::TAG_ORACLE_BATCH_RESULT`]) returns the
-//! interleaved `(input, label)` pairs under the echoed id — its packed
-//! section is byte-identical to `pack_datapoints` over the pairs, so the
-//! Manager ingests a whole batch of labels through the training plane's
-//! borrowed-pair decoder ([`codec::decode_train_block_views`]) with
-//! constant allocations and zero per-label boxing. The per-label leg
+//! `OracleLabels` ([`protocol::TAG_ORACLE_LABELS`], layout identical to
+//! `PredictBatchResult`) returns *only the labels* under the echoed id —
+//! the Manager retains each dispatched input block keyed by batch id and
+//! pairs label row `i` with retained input row `i`, so the inputs never
+//! travel back over the wire (roughly halving green-flow result bytes at
+//! typical label widths). The legacy interleaved layout
+//! (`OracleBatchResult`, [`protocol::TAG_ORACLE_BATCH_RESULT`], packed
+//! section byte-identical to `pack_datapoints` over the `(input, label)`
+//! pairs) is still decoded for mixed-version runs. The per-label leg
 //! ([`protocol::TAG_TO_ORACLE`] / [`protocol::TAG_ORACLE_RESULT`]) is
-//! unchanged on the wire; both legs produce bit-identical labels.
+//! unchanged on the wire; all legs produce bit-identical labels.
 //!
 //! ## Fault model
 //!
@@ -168,5 +171,5 @@ pub mod codec;
 pub mod fault;
 pub mod protocol;
 
-pub use bus::{ControlHandle, Endpoint, Message, Payload, RecvError, World};
+pub use bus::{ControlHandle, Endpoint, Message, Payload, PayloadId, RecvError, World};
 pub use fault::{FaultKill, FaultPlan};

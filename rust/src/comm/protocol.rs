@@ -50,8 +50,17 @@ pub const TAG_ORACLE_RESULT: u32 = 22;
 pub const TAG_ORACLE_BATCH: u32 = 23;
 /// oracle → Manager: the matching `OracleBatchResult` frame — interleaved
 /// `(input, label)` pairs, one per batched item in dispatch order, echoing
-/// the batch id (green, batched oracle mode).
+/// the batch id (green, batched oracle mode). Legacy layout: superseded by
+/// [`TAG_ORACLE_LABELS`], kept for per-frame compatibility tests and
+/// mixed-version runs.
 pub const TAG_ORACLE_BATCH_RESULT: u32 = 24;
+/// oracle → Manager: labels-only `OracleLabels` frame — one label row per
+/// batched item in dispatch order under the echoed batch id, layout
+/// `[id_hi, id_lo, pack of label rows]` (same as `PredictBatchResult`).
+/// The Manager retains each dispatched input block and pairs label row `i`
+/// with retained input row `i`, so the inputs never travel back over the
+/// wire — roughly halving green-flow result bytes at typical batch sizes.
+pub const TAG_ORACLE_LABELS: u32 = 25;
 
 /// Manager → trainers: packed labeled datapoints (yellow). Encoded from
 /// the Manager's flat [`crate::data::batch::DatapointBlock`] via
@@ -220,7 +229,7 @@ pub fn decode_predict_batch_result_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]
 // ---------------------------------------------------------------------------
 
 use crate::comm::bus::Payload;
-use crate::data::batch::{BatchView, PayloadBatch, RowBlock};
+use crate::data::batch::{BatchView, PayloadBatch, RowBlock, SharedRows};
 
 fn decode_frame_rows(msg: &[f32]) -> Option<(u64, BatchView<'_>)> {
     let (id, rest) = decode_frame_id(msg)?;
@@ -252,6 +261,21 @@ pub fn decode_predict_batch_result_shared(msg: &Payload) -> Option<(u64, Payload
     let data_start = 2 + start;
     let pb = PayloadBatch::from_payload(msg.slice(data_start..msg.len()), rows, width)?;
     Some((id, pb))
+}
+
+/// Payload-retaining decode of a **ragged-capable** `PredictBatchResult`
+/// frame: row bounds parse from the packed header and the data section is
+/// sliced out of the received payload as a [`SharedRows`] — committee
+/// replies of any shape are held by refcount until reduction, with no
+/// owned per-row copies (the uniform fast path stays
+/// [`decode_predict_batch_result_shared`]).
+pub fn decode_predict_batch_result_shared_rows(msg: &Payload) -> Option<(u64, SharedRows)> {
+    let (id, rest) = decode_frame_id(msg)?;
+    let (ends, start) = crate::comm::codec::unpack_row_ends(rest)?;
+    // `rest` starts 2 values into the frame
+    let data_start = 2 + start;
+    let rows = SharedRows::from_payload_ends(msg.slice(data_start..msg.len()), ends)?;
+    Some((id, rows))
 }
 
 fn encode_frame_rows_into(id: u64, batch: &BatchView<'_>, out: &mut Vec<f32>) {
@@ -397,6 +421,37 @@ pub fn encode_oracle_batch_result_rows_into(
 pub fn decode_oracle_batch_result_views(msg: &[f32]) -> Option<(u64, DatapointView<'_>)> {
     let (id, rest) = decode_frame_id(msg)?;
     Some((id, crate::comm::codec::decode_train_block_views(rest)?))
+}
+
+// ---------------------------------------------------------------------------
+// Labels-only oracle results (TAG_ORACLE_LABELS)
+// ---------------------------------------------------------------------------
+//
+// The Manager already holds every input it dispatched (it staged the batch),
+// so echoing inputs back in the result frame is pure wire waste. An
+// `OracleLabels` frame ships only the label rows, in dispatch order, under
+// the echoed id: `[id_hi, id_lo, pack of label rows]` — the exact
+// `PredictBatchResult` layout, so all existing frame validation applies.
+
+/// Encode an `OracleLabels` frame from the oracle's staged label rows
+/// (clears `out`): `labels.row(i)` answers input `i` of the batch.
+pub fn encode_oracle_labels_into(id: u64, labels: &RowBlock, out: &mut Vec<f32>) {
+    push_frame_id(id, out);
+    crate::comm::codec::pack_rows_into_buf(labels, out);
+}
+
+/// Borrowed-view decode of an `OracleLabels` frame (ragged-capable): label
+/// rows are subslices of `msg`, in dispatch order. `None` on malformed
+/// input.
+pub fn decode_oracle_labels_views(msg: &[f32]) -> Option<(u64, Vec<&[f32]>)> {
+    decode_frame_views(msg)
+}
+
+/// Flat decode of a uniform `OracleLabels` frame as a strided
+/// [`BatchView`] — zero allocations; `None` on malformed input or ragged
+/// label widths (fall back to [`decode_oracle_labels_views`]).
+pub fn decode_oracle_labels_rows(msg: &[f32]) -> Option<(u64, BatchView<'_>)> {
+    decode_frame_rows(msg)
 }
 
 #[cfg(test)]
@@ -561,6 +616,56 @@ mod tests {
     }
 
     #[test]
+    fn oracle_labels_frame_roundtrip() {
+        let labels = RowBlock::from_rows(&[vec![0.5f32, 1.5], vec![2.5, 3.5], vec![4.5, 5.5]]);
+        let mut enc = vec![9.9f32; 3]; // must be cleared
+        encode_oracle_labels_into(13, &labels, &mut enc);
+        // same frame layout as a PredictBatchResult over the label rows
+        assert_eq!(
+            enc,
+            encode_predict_batch_result(
+                13,
+                &[vec![0.5, 1.5], vec![2.5, 3.5], vec![4.5, 5.5]]
+            )
+        );
+        let (id, views) = decode_oracle_labels_views(&enc).unwrap();
+        assert_eq!((id, views.len()), (13, 3));
+        assert_eq!(views[2], &[4.5, 5.5]);
+        let (id2, rows) = decode_oracle_labels_rows(&enc).unwrap();
+        assert_eq!((id2, rows.rows(), rows.width()), (13, 3, 2));
+        // ragged labels survive the view decode, reject the flat decode
+        let ragged = RowBlock::from_rows(&[vec![1.0f32], vec![2.0, 3.0]]);
+        encode_oracle_labels_into(1, &ragged, &mut enc);
+        assert!(decode_oracle_labels_rows(&enc).is_none());
+        assert_eq!(decode_oracle_labels_views(&enc).unwrap().1.len(), 2);
+        // an empty echo (malformed-batch reply) round-trips and keeps its id
+        encode_oracle_labels_into(42, &RowBlock::new(), &mut enc);
+        let (id3, views3) = decode_oracle_labels_views(&enc).unwrap();
+        assert_eq!((id3, views3.len()), (42, 0));
+        // truncation rejects
+        encode_oracle_labels_into(7, &labels, &mut enc);
+        assert!(decode_oracle_labels_views(&enc[..enc.len() - 1]).is_none());
+    }
+
+    #[test]
+    fn shared_rows_decode_handles_ragged_results() {
+        use crate::comm::bus::Payload;
+        let items = vec![vec![1.0f32, 2.0], vec![3.0], vec![], vec![4.0, 5.0, 6.0]];
+        let p = Payload::from(encode_predict_batch_result(21, &items));
+        let (id, rows) = decode_predict_batch_result_shared_rows(&p).unwrap();
+        assert_eq!((id, rows.len()), (21, 4));
+        for (i, item) in items.iter().enumerate() {
+            assert_eq!(rows.row(i), item.as_slice());
+        }
+        // the rows region shares the frame payload's buffer
+        assert!(p.shared_handles() >= 2);
+        // truncated frames reject
+        let full: Vec<f32> = p.as_slice().to_vec();
+        let trunc = Payload::from(&full[..full.len() - 1]);
+        assert!(decode_predict_batch_result_shared_rows(&trunc).is_none());
+    }
+
+    #[test]
     fn gen_encode_into_clears_scratch() {
         let mut scratch = vec![7.0f32; 5];
         encode_gen_into(true, &[1.0, 2.0], &mut scratch);
@@ -586,7 +691,7 @@ mod tests {
             TAG_GEN_TO_PRED, TAG_PRED_IN, TAG_PRED_OUT, TAG_GENE_IN, TAG_GEN_SIZE,
             TAG_PRED_BATCH, TAG_PRED_BATCH_RESULT,
             TAG_ORCL_SELECT, TAG_TO_ORACLE, TAG_ORACLE_RESULT,
-            TAG_ORACLE_BATCH, TAG_ORACLE_BATCH_RESULT,
+            TAG_ORACLE_BATCH, TAG_ORACLE_BATCH_RESULT, TAG_ORACLE_LABELS,
             TAG_TRAIN_DATA, TAG_WEIGHTS, TAG_RETRAIN_DONE,
             TAG_RESCORE_REQ, TAG_RESCORE_RESP, TAG_STOP, TAG_SHUTDOWN, TAG_RANK_DOWN,
         ];

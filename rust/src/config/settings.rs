@@ -65,8 +65,10 @@ pub enum OracleMode {
     PerLabel,
     /// Coalesce buffered inputs into micro-batches ([`AlSetting::oracle_batch`]:
     /// size- and deadline-triggered) and dispatch each batch to the
-    /// least-loaded oracle (`TAG_ORACLE_BATCH` / `TAG_ORACLE_BATCH_RESULT`
-    /// frames). Oracles with heterogeneous latencies naturally receive work
+    /// least-loaded oracle (`TAG_ORACLE_BATCH` out, labels-only
+    /// `TAG_ORACLE_LABELS` back — the Manager retains the dispatched
+    /// inputs, so result frames skip them). Oracles with heterogeneous
+    /// latencies naturally receive work
     /// proportional to their speed; when every oracle has
     /// `oracle_batch.max_outstanding` batches in flight, inputs queue in the
     /// oracle buffer (FIFO backpressure). Labels and training-set order are

@@ -28,7 +28,7 @@ use crate::config::{
 };
 use crate::coordinator::dispatch::{BuiltinPolicy, DispatchConfig, DispatchCore, Eviction};
 use crate::coordinator::hosts::{gather_poll, is_down, ShutdownFlag};
-use crate::data::batch::{PayloadBatch, RowBlock, RowQueue};
+use crate::data::batch::{PayloadBatch, RowBlock, RowQueue, SharedRows};
 use crate::kernels::Utils;
 use crate::telemetry::KernelTelemetry;
 
@@ -377,15 +377,17 @@ impl BatchScheduler {
 // Batched relay host
 // ---------------------------------------------------------------------------
 
-/// One committee member's accepted reply.
+/// One committee member's accepted reply. Both variants borrow the received
+/// wire payload (refcount bump) — no reply is copied at ingest; ragged rows
+/// materialize only if the legacy nested reduction actually runs.
 #[derive(Debug, Clone)]
 enum MemberReply {
     /// Uniform reply retained as a zero-copy slice of the received payload
     /// (the steady state): rows are read by stride straight off the wire
     /// buffer at reduction time.
     Flat(PayloadBatch),
-    /// Ragged reply (legacy encoder): owned rows.
-    Nested(Vec<Vec<f32>>),
+    /// Ragged reply: per-row bounds over the same shared payload.
+    Ragged(SharedRows),
 }
 
 /// A dispatched batch awaiting its committee replies.
@@ -423,7 +425,7 @@ fn reduce_batch(
         for r in &replies {
             match r {
                 MemberReply::Flat(pb) => views.push(pb.view()),
-                MemberReply::Nested(_) => {
+                MemberReply::Ragged(_) => {
                     views.clear();
                     break;
                 }
@@ -435,13 +437,13 @@ fn reduce_batch(
             return utils.prediction_check_batch(&input_view, &views);
         }
     }
-    // ragged fallback: legacy nested reduction (owned replies move in;
-    // only payload-backed ones must materialize)
+    // ragged fallback: the legacy nested reduction is the one place rows
+    // materialize — and only when it actually runs
     let preds_per_model: Vec<Vec<Vec<f32>>> = replies
         .into_iter()
         .map(|r| match r {
             MemberReply::Flat(pb) => pb.view().to_nested(),
-            MemberReply::Nested(v) => v,
+            MemberReply::Ragged(rows) => rows.to_nested(),
         })
         .collect();
     let nested_inputs = items.to_nested();
@@ -559,15 +561,14 @@ fn batched_host(
         // --- blue flow in: committee replies, one frame per member ---
         while let Some(m) = ep.try_recv(Src::Any, TAG_PRED_BATCH_RESULT) {
             did_work = true;
-            // uniform replies are retained as zero-copy slices of the
-            // received payload; ragged ones fall back to owned rows; both
-            // reject orphans, duplicates and wrong arity before any boxing
+            // uniform and ragged replies are both retained as zero-copy
+            // views of the received payload (a refcount bump each) — no
+            // reply bytes are copied at ingest in either shape
             let (id, reply_rows, reply) =
                 if let Some((id, pb)) = decode_predict_batch_result_shared(&m.data) {
                     (id, pb.rows(), MemberReply::Flat(pb))
-                } else if let Some((id, views)) = decode_predict_batch_result_views(&m.data) {
-                    let owned: Vec<Vec<f32>> = views.into_iter().map(|s| s.to_vec()).collect();
-                    (id, owned.len(), MemberReply::Nested(owned))
+                } else if let Some((id, rows)) = decode_predict_batch_result_shared_rows(&m.data) {
+                    (id, rows.len(), MemberReply::Ragged(rows))
                 } else {
                     tel.bump("malformed");
                     continue;

@@ -155,8 +155,10 @@ pub fn generator_host(
 /// Serves both green-flow dispatch legs on one loop: legacy per-label
 /// messages (`TAG_TO_ORACLE` → `TAG_ORACLE_RESULT`, wire bytes unchanged)
 /// and oracle-plane batch frames (`TAG_ORACLE_BATCH` →
-/// `TAG_ORACLE_BATCH_RESULT`, one frame per micro-batch through
-/// [`Oracle::run_calc_batch`]). The receive is *vectored*: one wake-up
+/// `TAG_ORACLE_LABELS`, one labels-only frame per micro-batch through
+/// [`Oracle::run_calc_batch`] — the Manager retained the dispatched
+/// inputs, so echoing them back would be pure wire waste; result bytes
+/// drop to the labels alone). The receive is *vectored*: one wake-up
 /// drains every request already queued ([`Endpoint::recv_ready_all`]) and
 /// processes them strictly in dispatch order; if shutdown fires mid-drain,
 /// the unprocessed tail is requeued at the mailbox front — never dropped or
@@ -213,14 +215,15 @@ pub fn oracle_host(
             }
             if m.tag == TAG_ORACLE_BATCH {
                 // oracle plane: label the whole micro-batch, reply with one
-                // frame of (input, label) pairs echoing the batch id
+                // labels-only frame echoing the batch id — row i answers
+                // input i, which the Manager retained at dispatch
                 if let Some((id, view)) = decode_oracle_batch_rows(&m.data) {
                     let labels = tel.time("run_calc", || oracle.run_calc_batch(&view));
                     debug_assert_eq!(labels.len(), view.rows());
                     tel.bump("batches");
                     tel.add("labels", view.rows() as u64);
-                    encode_oracle_batch_result_rows_into(id, &view, &labels, &mut frame);
-                    ep.send(MANAGER, TAG_ORACLE_BATCH_RESULT, &frame[..]);
+                    encode_oracle_labels_into(id, &labels, &mut frame);
+                    ep.send(MANAGER, TAG_ORACLE_LABELS, &frame[..]);
                 } else if let Some((id, views)) = decode_oracle_batch_views(&m.data) {
                     // ragged batch: per-row labeling into a contiguous block
                     let labels = tel.time("run_calc", || {
@@ -232,15 +235,15 @@ pub fn oracle_host(
                     });
                     tel.bump("batches");
                     tel.add("labels", views.len() as u64);
-                    encode_oracle_batch_result_into(id, &views, &labels, &mut frame);
-                    ep.send(MANAGER, TAG_ORACLE_BATCH_RESULT, &frame[..]);
+                    encode_oracle_labels_into(id, &labels, &mut frame);
+                    ep.send(MANAGER, TAG_ORACLE_LABELS, &frame[..]);
                 } else if let Some(id) = decode_oracle_batch_id(&m.data) {
                     // undecodable item section: echo an *empty* result so
                     // the Manager frees this batch's in-flight slot — a bad
                     // frame costs its labels, never green-flow liveness
                     tel.bump("malformed");
-                    encode_oracle_batch_result_into(id, &[], &RowBlock::new(), &mut frame);
-                    ep.send(MANAGER, TAG_ORACLE_BATCH_RESULT, &frame[..]);
+                    encode_oracle_labels_into(id, &RowBlock::new(), &mut frame);
+                    ep.send(MANAGER, TAG_ORACLE_LABELS, &frame[..]);
                 } else {
                     tel.bump("malformed");
                 }
@@ -562,8 +565,8 @@ mod tests {
     #[test]
     fn oracle_host_replies_to_queued_batches_in_dispatch_order() {
         use crate::comm::protocol::{
-            decode_oracle_batch_result_views, encode_oracle_batch_block_into,
-            TAG_ORACLE_BATCH, TAG_ORACLE_BATCH_RESULT,
+            decode_oracle_labels_views, encode_oracle_batch_block_into, TAG_ORACLE_BATCH,
+            TAG_ORACLE_LABELS,
         };
         use crate::data::batch::RowBlock;
 
@@ -583,10 +586,10 @@ mod tests {
         // two batch frames queued back to back (max_outstanding > 1): the
         // host must serve them strictly in dispatch order
         let mut frame = Vec::new();
-        let two_rows = RowBlock::from_rows(&[vec![1.0f32], vec![2.0]]);
-        encode_oracle_batch_block_into(7, &two_rows, &mut frame);
+        let dispatched = [vec![vec![1.0f32], vec![2.0]], vec![vec![3.0f32]]];
+        encode_oracle_batch_block_into(7, &RowBlock::from_rows(&dispatched[0]), &mut frame);
         manager.send(1, TAG_ORACLE_BATCH, &frame[..]);
-        encode_oracle_batch_block_into(8, &RowBlock::from_rows(&[vec![3.0f32]]), &mut frame);
+        encode_oracle_batch_block_into(8, &RowBlock::from_rows(&dispatched[1]), &mut frame);
         manager.send(1, TAG_ORACLE_BATCH, &frame[..]);
         // a frame with a readable id but an undecodable item section must
         // come back as an *empty* result (the Manager frees its slot)
@@ -597,20 +600,25 @@ mod tests {
             oracle_host(orcl_ep, Box::new(Echo), &setting, down2)
         });
         let mut ids = Vec::new();
-        let mut pair_counts = Vec::new();
-        for _ in 0..3 {
+        let mut label_counts = Vec::new();
+        for round in 0..3 {
             let m = manager
-                .recv_timeout(Src::Rank(1), TAG_ORACLE_BATCH_RESULT, Duration::from_secs(5))
+                .recv_timeout(Src::Rank(1), TAG_ORACLE_LABELS, Duration::from_secs(5))
                 .unwrap();
-            let (id, pairs) = decode_oracle_batch_result_views(&m.data).unwrap();
-            for (x, y) in pairs.iter() {
-                assert_eq!(y[0], x[0] + 100.0, "label pairs with its own input");
+            let (id, labels) = decode_oracle_labels_views(&m.data).unwrap();
+            if let Some(inputs) = dispatched.get(round) {
+                // labels-only contract: label row i answers dispatched
+                // input row i of the same batch
+                assert_eq!(labels.len(), inputs.len());
+                for (x, y) in inputs.iter().zip(&labels) {
+                    assert_eq!(y[0], x[0] + 100.0, "label pairs with its own input");
+                }
             }
             ids.push(id);
-            pair_counts.push(pairs.len());
+            label_counts.push(labels.len());
         }
         assert_eq!(ids, vec![7, 8, 9], "batches answered in dispatch order");
-        assert_eq!(pair_counts, vec![2, 1, 0], "malformed batch echoes empty");
+        assert_eq!(label_counts, vec![2, 1, 0], "malformed batch echoes empty");
         down.store(true, Ordering::Release);
         let tel = h.join().unwrap();
         assert_eq!(tel.counter("batches"), 2);

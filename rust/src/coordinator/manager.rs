@@ -27,7 +27,10 @@ pub struct ManagerOutcome {
     pub losses: Vec<f32>,
 }
 
-/// Ingest one `TAG_ORACLE_BATCH_RESULT` frame: free the scheduler's
+/// Ingest one legacy interleaved `TAG_ORACLE_BATCH_RESULT` frame (current
+/// oracle hosts reply labels-only — see [`ingest_oracle_labels`] — but
+/// mixed-version runs and the per-frame compatibility tests still produce
+/// the old layout): free the scheduler's
 /// in-flight slot (the arrival timestamp feeds the RTT window and, under
 /// the adaptive policy, the EWMA), stage every `(input, label)` pair into
 /// the train buffer (borrowed views — constant allocations per batch, zero
@@ -71,16 +74,87 @@ fn ingest_oracle_batch_result(
     }
 }
 
+/// Return a retained input block to the dispatch pool: cleared in place so
+/// the next batched dispatch refills it without a fresh allocation. The pool
+/// is bounded — blocks past the cap (more in-flight batches than the pool
+/// ever needs to recycle at once) simply drop.
+fn recycle_block(pool: &mut Vec<RowBlock>, mut block: RowBlock) {
+    const POOL_CAP: usize = 16;
+    block.clear();
+    if pool.len() < POOL_CAP {
+        pool.push(block);
+    }
+}
+
+/// Ingest one labels-only `TAG_ORACLE_LABELS` frame: free the scheduler's
+/// in-flight slot, then pair label row `i` with row `i` of the input block
+/// retained at dispatch — the inputs never travel back over the wire, which
+/// is what halves batched green-flow result bytes. The emptied block returns
+/// to the dispatch pool. Labels whose batch was already evicted (inputs
+/// requeued) are orphans: paid for but unpairable, so they are counted and
+/// dropped — the requeued inputs will be relabeled. A label count that does
+/// not match the retained batch means the pairing is untrustworthy; the
+/// frame is rejected as malformed with the slot still freed.
+#[allow(clippy::too_many_arguments)]
+fn ingest_oracle_labels(
+    data: &Payload,
+    now: Instant,
+    sched: &mut OracleScheduler,
+    inflight_rows: &mut HashMap<u64, RowBlock>,
+    block_pool: &mut Vec<RowBlock>,
+    train_buffer: &mut TrainBuffer,
+    out: &mut ManagerOutcome,
+    tel: &mut KernelTelemetry,
+    drained: bool,
+) {
+    match decode_oracle_labels_views(data) {
+        Some((id, labels)) => {
+            if sched.complete(id, now).is_none() {
+                tel.bump("orphan_results");
+            }
+            match inflight_rows.remove(&id) {
+                Some(inputs) if inputs.len() == labels.len() => {
+                    out.oracle_labels += labels.len() as u64;
+                    tel.add("labels", labels.len() as u64);
+                    tel.bump("oracle_batch_results");
+                    if drained {
+                        tel.add("drained_labels", labels.len() as u64);
+                    }
+                    for (i, y) in labels.iter().enumerate() {
+                        train_buffer.push_pair(inputs.row(i), y);
+                    }
+                    recycle_block(block_pool, inputs);
+                }
+                Some(inputs) => {
+                    tel.bump("malformed");
+                    tel.bump("bad_frames");
+                    tel.add("lost_inputs", inputs.len() as u64);
+                    recycle_block(block_pool, inputs);
+                }
+                None => {
+                    tel.add("orphan_labels", labels.len() as u64);
+                }
+            }
+        }
+        None => {
+            tel.bump("malformed");
+            tel.bump("bad_frames");
+        }
+    }
+}
+
 /// Permanently evict batched-mode oracle `i` (its host died — rank-down
 /// notice or failed send) and requeue its in-flight batches. Retained rows
-/// go back to the buffer with their budget headroom released; unretained
-/// batches (plain static runs without a fault plan) are recorded as lost,
-/// releasing the headroom so the budget can still be met by the survivors.
-/// Idempotent per oracle.
+/// go back to the buffer with their budget headroom released and the emptied
+/// block returns to the dispatch pool; a batch with no retained block (its
+/// labels already landed between the send failure and this eviction) is
+/// recorded as lost, releasing the headroom so the budget can still be met
+/// by the survivors. Idempotent per oracle.
 #[allow(clippy::too_many_arguments)]
 fn evict_dead_oracle(
     orcl_sched: &mut OracleScheduler,
     inflight_rows: &mut HashMap<u64, RowBlock>,
+    block_pool: &mut Vec<RowBlock>,
     orcl_buffer: &mut OracleBuffer,
     dispatched_total: &mut u64,
     tel: &mut KernelTelemetry,
@@ -99,6 +173,7 @@ fn evict_dead_oracle(
             orcl_sched.note_enqueued(now);
             *dispatched_total = dispatched_total.saturating_sub(rows.len() as u64);
             tel.add("requeued_inputs", rows.len() as u64);
+            recycle_block(block_pool, rows);
         } else {
             *dispatched_total = dispatched_total.saturating_sub(ev.items as u64);
             tel.add("lost_inputs", ev.items as u64);
@@ -200,14 +275,19 @@ pub fn manager_host(
     let adaptive = setting.sched.policy == SchedPolicy::Adaptive;
     let mut orcl_sched =
         OracleScheduler::with_policy(&setting.oracle_batch, &setting.sched, orcl.len());
-    // in-flight input retention, so an evicted/dead oracle's inputs can be
-    // requeued and relabeled elsewhere (one clone per dispatch). On under
-    // the adaptive policy and whenever a fault plan is installed — chaos
-    // runs never lose inputs; plain static runs keep the zero-copy steady
-    // state (a genuinely dying oracle there loses its batch, honestly
-    // accounted as `lost_inputs`).
+    // Per-label in-flight input retention, so an evicted/dead oracle's
+    // input can be requeued and relabeled elsewhere (one clone per
+    // dispatch); on under the adaptive policy and whenever a fault plan is
+    // installed. Batched mode always retains: oracle replies are
+    // labels-only (`TAG_ORACLE_LABELS`), so the dispatched block is the
+    // only copy of the inputs — retention is what the ingest pairs labels
+    // against and what eviction requeues.
     let retain_inflight = adaptive || ep.fault_active();
     let mut inflight_rows: HashMap<u64, RowBlock> = HashMap::new();
+    // recycled input blocks: a batched dispatch moves a pooled block into
+    // `inflight_rows`; ingest and eviction clear it and hand it back —
+    // steady-state retention allocates nothing per batch
+    let mut block_pool: Vec<RowBlock> = Vec::new();
     // per-label fault/eviction state: dead oracles (never dispatched to
     // again), timeout-evicted oracles on rejoin backoff, and the retained
     // in-flight input per oracle
@@ -215,7 +295,6 @@ pub fn manager_host(
     let mut oracle_retry_until: Vec<Option<Instant>> = vec![None; orcl.len()];
     let mut inflight_input: Vec<Option<Payload>> = vec![None; orcl.len()];
     let mut exchange_down = false;
-    let mut batch_scratch = RowBlock::new();
     let mut orcl_frame: Vec<f32> = Vec::new();
     // reusable flush-encode scratch (steady-state flushes allocate nothing)
     let mut train_pack = codec::PackBuffer::new();
@@ -245,6 +324,7 @@ pub fn manager_host(
                     evict_dead_oracle(
                         &mut orcl_sched,
                         &mut inflight_rows,
+                        &mut block_pool,
                         &mut orcl_buffer,
                         &mut dispatched_total,
                         &mut tel,
@@ -323,7 +403,23 @@ pub fn manager_host(
             did_work = true;
         }
 
-        // --- completed oracle batches (green flow back, batched mode) ---
+        // --- completed oracle batches (green flow back, batched mode):
+        // labels-only frames pair with the retained input blocks; the legacy
+        // interleaved layout is still ingested for mixed-version runs ---
+        while let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_LABELS) {
+            ingest_oracle_labels(
+                &m.data,
+                Instant::now(),
+                &mut orcl_sched,
+                &mut inflight_rows,
+                &mut block_pool,
+                &mut train_buffer,
+                &mut out,
+                &mut tel,
+                false,
+            );
+            did_work = true;
+        }
         while let Some(m) = ep.try_recv(Src::Any, TAG_ORACLE_BATCH_RESULT) {
             ingest_oracle_batch_result(
                 &m.data,
@@ -386,6 +482,7 @@ pub fn manager_host(
                     orcl_sched.note_enqueued(now);
                     dispatched_total = dispatched_total.saturating_sub(rows.len() as u64);
                     tel.add("requeued_inputs", rows.len() as u64);
+                    recycle_block(&mut block_pool, rows);
                     did_work = true;
                 }
             }
@@ -434,16 +531,17 @@ pub fn manager_host(
                 let Some(d) = orcl_sched.try_dispatch(orcl_buffer.len(), now, budget) else {
                     break;
                 };
-                batch_scratch.clear();
+                // fill a pooled block (moved into `inflight_rows` below —
+                // no per-dispatch clone): the labels-only reply pairs
+                // against these rows, so retention is unconditional
+                let mut block = block_pool.pop().unwrap_or_else(RowBlock::new);
                 for _ in 0..d.take {
                     let row = orcl_buffer.pop_row().expect("scheduler take within queue");
-                    batch_scratch.push_row(row);
+                    block.push_row(row);
                 }
-                encode_oracle_batch_block_into(d.id, &batch_scratch, &mut orcl_frame);
+                encode_oracle_batch_block_into(d.id, &block, &mut orcl_frame);
                 let delivered = ep.send(orcl[d.oracle], TAG_ORACLE_BATCH, &orcl_frame[..]);
-                if retain_inflight {
-                    inflight_rows.insert(d.id, batch_scratch.clone());
-                }
+                inflight_rows.insert(d.id, block);
                 dispatched_total += d.take as u64;
                 tel.add("dispatched", d.take as u64);
                 tel.bump("oracle_batches");
@@ -458,6 +556,7 @@ pub fn manager_host(
                     evict_dead_oracle(
                         &mut orcl_sched,
                         &mut inflight_rows,
+                        &mut block_pool,
                         &mut orcl_buffer,
                         &mut dispatched_total,
                         &mut tel,
@@ -631,6 +730,7 @@ pub fn manager_host(
         &mut label_rtts,
         &mut orcl_sched,
         &mut inflight_rows,
+        &mut block_pool,
         &mut train_buffer,
         &mut out,
         &mut tel,
@@ -686,6 +786,7 @@ fn drain_oracle_results(
     label_rtts: &mut LatencyWindow,
     orcl_sched: &mut OracleScheduler,
     inflight_rows: &mut HashMap<u64, RowBlock>,
+    block_pool: &mut Vec<RowBlock>,
     train_buffer: &mut TrainBuffer,
     out: &mut ManagerOutcome,
     tel: &mut KernelTelemetry,
@@ -716,7 +817,9 @@ fn drain_oracle_results(
                         tel.bump("oracle_evictions");
                         // the run is ending: nothing re-dispatches, so the
                         // dead host's in-flight inputs are honestly lost
-                        inflight_rows.remove(&ev.id);
+                        if let Some(rows) = inflight_rows.remove(&ev.id) {
+                            recycle_block(block_pool, rows);
+                        }
                         tel.add("lost_inputs", ev.items as u64);
                     }
                 } else {
@@ -740,6 +843,20 @@ fn drain_oracle_results(
                 oracle_retry_until,
                 inflight_input,
                 label_rtts,
+                train_buffer,
+                out,
+                tel,
+                true,
+            );
+            got = true;
+        }
+        for m in ep.recv_ready_all(Src::Any, TAG_ORACLE_LABELS) {
+            ingest_oracle_labels(
+                &m.data,
+                Instant::now(),
+                orcl_sched,
+                inflight_rows,
+                block_pool,
                 train_buffer,
                 out,
                 tel,
@@ -908,6 +1025,7 @@ mod tests {
         let mut label_rtts = LatencyWindow::default();
         let mut orcl_sched = OracleScheduler::new(&BatchSetting::default(), orcl.len());
         let mut inflight_rows = HashMap::new();
+        let mut block_pool = Vec::new();
         let mut train_buffer = TrainBuffer::new(100);
         let mut out = ManagerOutcome::default();
         let mut tel = KernelTelemetry::new("manager", 0);
@@ -921,6 +1039,7 @@ mod tests {
             &mut label_rtts,
             &mut orcl_sched,
             &mut inflight_rows,
+            &mut block_pool,
             &mut train_buffer,
             &mut out,
             &mut tel,
@@ -966,6 +1085,7 @@ mod tests {
         let mut inflight_input = vec![None];
         let mut label_rtts = LatencyWindow::default();
         let mut inflight_rows = HashMap::new();
+        let mut block_pool = Vec::new();
         let mut train_buffer = TrainBuffer::new(100);
         let mut out = ManagerOutcome::default();
         let mut tel = KernelTelemetry::new("manager", 0);
@@ -979,6 +1099,7 @@ mod tests {
             &mut label_rtts,
             &mut orcl_sched,
             &mut inflight_rows,
+            &mut block_pool,
             &mut train_buffer,
             &mut out,
             &mut tel,
@@ -991,5 +1112,75 @@ mod tests {
         assert_eq!(out.oracle_labels, 2);
         assert_eq!(tel.counter("drained_labels"), 2);
         assert!(orcl_sched.rtt_p95().is_some(), "drained completion feeds the RTT window");
+    }
+
+    #[test]
+    fn drain_pairs_labels_only_results_with_retained_inputs() {
+        let mut world = World::new(2);
+        let mut eps = world.endpoints();
+        let mut orcl1 = eps.pop().unwrap();
+        let mut mgr = eps.pop().unwrap();
+        let batch = BatchSetting { max_size: 2, ..Default::default() };
+        let mut orcl_sched = OracleScheduler::new(&batch, 1);
+        let t0 = Instant::now();
+        orcl_sched.note_enqueued(t0);
+        let d = orcl_sched.try_dispatch(2, t0, None).expect("size trigger");
+        assert_eq!(d.take, 2);
+        // the Manager retained the dispatched inputs; the oracle's
+        // labels-only reply is already parked when the drain starts
+        let mut retained = RowBlock::new();
+        retained.push_row(&[1.0, 2.0]);
+        retained.push_row(&[3.0, 4.0]);
+        let mut inflight_rows = HashMap::new();
+        inflight_rows.insert(d.id, retained);
+        let mut labels = RowBlock::new();
+        labels.push_row(&[10.0]);
+        labels.push_row(&[30.0]);
+        let mut frame = Vec::new();
+        encode_oracle_labels_into(d.id, &labels, &mut frame);
+        orcl1.send(0, TAG_ORACLE_LABELS, frame);
+        // labels for an unknown batch id are orphans: counted, not paired
+        let mut stray = Vec::new();
+        encode_oracle_labels_into(d.id + 999, &labels, &mut stray);
+        orcl1.send(0, TAG_ORACLE_LABELS, stray);
+
+        let mut oracle_busy = vec![false];
+        let mut busy_since = vec![None];
+        let mut oracle_retry_until = vec![None];
+        let mut inflight_input = vec![None];
+        let mut label_rtts = LatencyWindow::default();
+        let mut block_pool = Vec::new();
+        let mut train_buffer = TrainBuffer::new(100);
+        let mut out = ManagerOutcome::default();
+        let mut tel = KernelTelemetry::new("manager", 0);
+        drain_oracle_results(
+            &mut mgr,
+            &[1],
+            &mut oracle_busy,
+            &mut busy_since,
+            &mut oracle_retry_until,
+            &mut inflight_input,
+            &mut label_rtts,
+            &mut orcl_sched,
+            &mut inflight_rows,
+            &mut block_pool,
+            &mut train_buffer,
+            &mut out,
+            &mut tel,
+            true,
+            Duration::from_millis(300),
+            Duration::from_millis(1),
+        );
+        assert_eq!(orcl_sched.in_flight(), 0, "slot freed by the drained result");
+        assert_eq!(train_buffer.len(), 2, "labels paired with the retained inputs");
+        assert_eq!(out.oracle_labels, 2);
+        assert_eq!(tel.counter("drained_labels"), 2);
+        assert_eq!(tel.counter("orphan_labels"), 2, "stray-id labels counted, not staged");
+        assert_eq!(tel.counter("orphan_results"), 1, "stray id had no in-flight slot");
+        assert!(inflight_rows.is_empty(), "retained block released on ingest");
+        assert_eq!(block_pool.len(), 1, "emptied block returned to the dispatch pool");
+        let staged = train_buffer.flush_all();
+        assert_eq!(staged.pair(0), (&[1.0f32, 2.0][..], &[10.0f32][..]), "row i pairs label i");
+        assert_eq!(staged.pair(1), (&[3.0f32, 4.0][..], &[30.0f32][..]));
     }
 }

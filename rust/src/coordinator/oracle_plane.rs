@@ -33,8 +33,10 @@
 //! scheduling share one row store, so nothing is copied between them):
 //! callers inject `now` and the current queue length, making
 //! trigger/backpressure semantics unit-testable without threads or sleeps.
-//! Wire frames are `TAG_ORACLE_BATCH` / `TAG_ORACLE_BATCH_RESULT`
-//! ([`crate::comm::protocol`]); the legacy per-label path
+//! Wire frames are `TAG_ORACLE_BATCH` out and labels-only
+//! `TAG_ORACLE_LABELS` back ([`crate::comm::protocol`]; the Manager pairs
+//! the labels with the input block it retained at dispatch, so inputs
+//! never re-ship); the legacy per-label path
 //! (`TAG_TO_ORACLE`/`TAG_ORACLE_RESULT`) is preserved bit-compatible and
 //! remains the default ([`crate::config::OracleMode::PerLabel`]).
 

@@ -552,6 +552,21 @@ pub struct SharedRows {
 }
 
 impl SharedRows {
+    /// Wrap a payload with explicit row bounds: row `i` spans
+    /// `ends[i-1]..ends[i]` (row 0 starts at 0). `None` unless the bounds
+    /// are monotonically non-decreasing and stay inside the payload — the
+    /// validated entry point for rows decoded straight off a wire frame.
+    pub fn from_payload_ends(payload: Payload, ends: Vec<usize>) -> Option<Self> {
+        let mut prev = 0usize;
+        for &e in &ends {
+            if e < prev || e > payload.len() {
+                return None;
+            }
+            prev = e;
+        }
+        Some(SharedRows { payload, ends })
+    }
+
     pub fn len(&self) -> usize {
         self.ends.len()
     }
@@ -569,6 +584,16 @@ impl SharedRows {
     pub fn row_payload(&self, i: usize) -> Payload {
         let start = if i == 0 { 0 } else { self.ends[i - 1] };
         self.payload.slice(start..self.ends[i])
+    }
+
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = &[f32]> {
+        (0..self.len()).map(move |i| self.row(i))
+    }
+
+    /// Materialize as nested rows — the legacy-`Utils` boundary only;
+    /// everything upstream of the reduction stays payload-backed.
+    pub fn to_nested(&self) -> Vec<Vec<f32>> {
+        self.iter().map(|r| r.to_vec()).collect()
     }
 }
 
@@ -613,7 +638,7 @@ impl PayloadBatch {
 /// advances the head. The buffer compacts lazily once at least half of it
 /// is dead space in front of the head, so steady-state traffic moves values
 /// without per-row heap allocations.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct RowQueue {
     data: Vec<f32>,
     rows: VecDeque<(usize, usize)>,
@@ -779,6 +804,20 @@ mod tests {
         assert_eq!(shared.row_payload(2).len(), 0);
         // row payloads share the block's backing buffer
         assert!(p.shared_handles() >= 2);
+    }
+
+    #[test]
+    fn shared_rows_from_payload_ends_validates_bounds() {
+        let p = Payload::from(vec![1.0, 2.0, 3.0, 4.0]);
+        let s = SharedRows::from_payload_ends(p.clone(), vec![2, 2, 4]).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.row(0), &[1.0, 2.0]);
+        assert_eq!(s.row(1), &[] as &[f32]);
+        assert_eq!(s.row(2), &[3.0, 4.0]);
+        assert_eq!(s.to_nested(), vec![vec![1.0, 2.0], vec![], vec![3.0, 4.0]]);
+        // decreasing or out-of-range bounds are rejected
+        assert!(SharedRows::from_payload_ends(p.clone(), vec![3, 2]).is_none());
+        assert!(SharedRows::from_payload_ends(p, vec![5]).is_none());
     }
 
     #[test]

@@ -8,39 +8,54 @@ pub use batch::{
     Batch, BatchView, DatapointBlock, DatapointView, PayloadBatch, RowBlock, RowQueue, SharedRows,
 };
 
+use batch::RowQueue as Split;
+
 /// One labeled sample: `(input, label)` flat arrays (paper wire format).
 pub type Datapoint = (Vec<f32>, Vec<f32>);
 
 /// Training/validation store with optional rolling window.
+///
+/// Storage is flat: each split is a [`RowQueue`] — one contiguous `f32`
+/// buffer plus per-row bounds — so adding a sample appends values instead
+/// of boxing a `Vec` per row, and the rolling window drops index entries
+/// (lazy buffer compaction) instead of `remove(0)`-shifting every row.
+/// [`Dataset::minibatch`] gathers sampled rows into a reused scratch
+/// buffer, so steady-state training allocates nothing regardless of the
+/// window size.
 ///
 /// The rolling window implements the SI use-case-2 recommendation: "newly
 /// incoming xTB-labeled samples are added after every single training epoch,
 /// and old samples are removed to keep the training set size constant".
 #[derive(Debug, Clone)]
 pub struct Dataset {
-    pub x_train: Vec<Vec<f32>>,
-    pub y_train: Vec<Vec<f32>>,
-    pub x_val: Vec<Vec<f32>>,
-    pub y_val: Vec<Vec<f32>>,
+    x_train: Split,
+    y_train: Split,
+    x_val: Split,
+    y_val: Split,
     /// Fraction of incoming data routed to validation.
     pub val_split: f64,
     /// If set, training set is capped at this size (oldest dropped first).
     pub rolling_window: Option<usize>,
     rng: Rng,
     total_added: u64,
+    /// Minibatch gather scratch, reused across calls.
+    mb_x: Vec<f32>,
+    mb_y: Vec<f32>,
 }
 
 impl Dataset {
     pub fn new(val_split: f64, seed: u64) -> Self {
         Dataset {
-            x_train: vec![],
-            y_train: vec![],
-            x_val: vec![],
-            y_val: vec![],
+            x_train: Split::new(),
+            y_train: Split::new(),
+            x_val: Split::new(),
+            y_val: Split::new(),
             val_split,
             rolling_window: None,
             rng: Rng::new(seed),
             total_added: 0,
+            mb_x: Vec::new(),
+            mb_y: Vec::new(),
         }
     }
 
@@ -73,25 +88,23 @@ impl Dataset {
     fn add_one(&mut self, x: &[f32], y: &[f32]) {
         self.total_added += 1;
         if self.rng.f64() < self.val_split && !self.x_train.is_empty() {
-            self.x_val.push(x.to_vec());
-            self.y_val.push(y.to_vec());
+            self.x_val.push_row(x);
+            self.y_val.push_row(y);
         } else {
-            self.x_train.push(x.to_vec());
-            self.y_train.push(y.to_vec());
+            self.x_train.push_row(x);
+            self.y_train.push_row(y);
         }
     }
 
     fn apply_window(&mut self) {
         if let Some(cap) = self.rolling_window {
-            while self.x_train.len() > cap {
-                self.x_train.remove(0);
-                self.y_train.remove(0);
-            }
+            let over = self.x_train.len().saturating_sub(cap);
+            self.x_train.drop_front(over);
+            self.y_train.drop_front(over);
             // keep validation bounded too (half the window)
-            while self.x_val.len() > cap / 2 + 1 {
-                self.x_val.remove(0);
-                self.y_val.remove(0);
-            }
+            let over = self.x_val.len().saturating_sub(cap / 2 + 1);
+            self.x_val.drop_front(over);
+            self.y_val.drop_front(over);
         }
     }
 
@@ -111,21 +124,42 @@ impl Dataset {
         self.x_train.is_empty()
     }
 
+    /// Training input row `i` (0 = oldest retained).
+    pub fn train_input(&self, i: usize) -> &[f32] {
+        self.x_train.row(i)
+    }
+
+    /// Training label row `i` (0 = oldest retained).
+    pub fn train_label(&self, i: usize) -> &[f32] {
+        self.y_train.row(i)
+    }
+
+    /// Iterate the retained training inputs oldest-first (checkpoint I/O).
+    pub fn train_inputs(&self) -> impl Iterator<Item = &[f32]> {
+        self.x_train.iter()
+    }
+
+    /// Iterate the retained training labels oldest-first (checkpoint I/O).
+    pub fn train_labels(&self) -> impl Iterator<Item = &[f32]> {
+        self.y_train.iter()
+    }
+
     /// Sample a training minibatch of exactly `batch` rows (with
     /// replacement if the set is smaller — the fixed-shape HLO train step
-    /// needs full batches).
-    pub fn minibatch(&mut self, batch: usize) -> (Vec<f32>, Vec<f32>) {
+    /// needs full batches). The returned slices borrow the dataset's
+    /// reused gather scratch: valid until the next `&mut self` call,
+    /// zero allocations in steady state.
+    pub fn minibatch(&mut self, batch: usize) -> (&[f32], &[f32]) {
         assert!(!self.x_train.is_empty(), "minibatch from empty dataset");
-        let xw = self.x_train[0].len();
-        let yw = self.y_train[0].len();
-        let mut xs = Vec::with_capacity(batch * xw);
-        let mut ys = Vec::with_capacity(batch * yw);
+        let n = self.x_train.len();
+        self.mb_x.clear();
+        self.mb_y.clear();
         for _ in 0..batch {
-            let i = self.rng.below(self.x_train.len());
-            xs.extend_from_slice(&self.x_train[i]);
-            ys.extend_from_slice(&self.y_train[i]);
+            let i = self.rng.below(n);
+            self.mb_x.extend_from_slice(self.x_train.row(i));
+            self.mb_y.extend_from_slice(self.y_train.row(i));
         }
-        (xs, ys)
+        (&self.mb_x, &self.mb_y)
     }
 
     /// Flattened validation set (or train set if no val yet), padded by
@@ -141,8 +175,8 @@ impl Dataset {
         let mut ys = Vec::new();
         for i in 0..batch {
             let idx = i % xs_src.len();
-            xs.extend_from_slice(&xs_src[idx]);
-            ys.extend_from_slice(&ys_src[idx]);
+            xs.extend_from_slice(xs_src.row(idx));
+            ys.extend_from_slice(ys_src.row(idx));
         }
         (xs, ys, n)
     }
@@ -154,6 +188,13 @@ mod tests {
 
     fn pts(n: usize) -> Vec<Datapoint> {
         (0..n).map(|i| (vec![i as f32; 3], vec![i as f32])).collect()
+    }
+
+    fn nested(d: &Dataset) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        (
+            d.train_inputs().map(|x| x.to_vec()).collect(),
+            d.train_labels().map(|y| y.to_vec()).collect(),
+        )
     }
 
     #[test]
@@ -178,7 +219,7 @@ mod tests {
         d.add(&pts(25));
         assert_eq!(d.n_train(), 10);
         // oldest dropped: first remaining input should be from the tail
-        assert!(d.x_train[0][0] >= 15.0);
+        assert!(d.train_input(0)[0] >= 15.0);
     }
 
     #[test]
@@ -188,6 +229,44 @@ mod tests {
         let (xs, ys) = d.minibatch(8);
         assert_eq!(xs.len(), 8 * 3);
         assert_eq!(ys.len(), 8);
+    }
+
+    /// The flat store must not perturb the sampling stream: the RNG draw
+    /// sequence (one split draw per added point, one index draw per
+    /// minibatch row) matches a reference nested implementation exactly.
+    #[test]
+    fn minibatch_rng_stream_matches_nested_reference() {
+        let mut d = Dataset::new(0.3, 11).with_rolling_window(16);
+        // reference: the pre-flat nested implementation, inlined
+        let mut rng = Rng::new(11);
+        let mut rx: Vec<Vec<f32>> = vec![];
+        let mut ry: Vec<Vec<f32>> = vec![];
+        for (x, y) in pts(40) {
+            d.add(&[(x.clone(), y.clone())]);
+            if rng.f64() < 0.3 && !rx.is_empty() {
+                // val row: the flat store consumes the same single draw
+            } else {
+                rx.push(x);
+                ry.push(y);
+            }
+            while rx.len() > 16 {
+                rx.remove(0);
+                ry.remove(0);
+            }
+        }
+        assert_eq!(d.n_train(), rx.len());
+        for round in 0..5 {
+            let (xs, ys) = d.minibatch(6);
+            let mut ex = Vec::new();
+            let mut ey = Vec::new();
+            for _ in 0..6 {
+                let i = rng.below(rx.len());
+                ex.extend_from_slice(&rx[i]);
+                ey.extend_from_slice(&ry[i]);
+            }
+            assert_eq!(xs, ex.as_slice(), "round {round} inputs diverge");
+            assert_eq!(ys, ey.as_slice(), "round {round} labels diverge");
+        }
     }
 
     #[test]
@@ -202,16 +281,14 @@ mod tests {
     #[test]
     fn add_view_identical_to_add() {
         let points = pts(60);
-        let mut nested = Dataset::new(0.3, 7).with_rolling_window(25);
-        nested.add(&points);
-        let mut flat = Dataset::new(0.3, 7).with_rolling_window(25);
+        let mut a = Dataset::new(0.3, 7).with_rolling_window(25);
+        a.add(&points);
+        let mut b = Dataset::new(0.3, 7).with_rolling_window(25);
         let block = batch::DatapointBlock::from_pairs(&points);
-        flat.add_view(&block.view());
-        assert_eq!(flat.x_train, nested.x_train);
-        assert_eq!(flat.y_train, nested.y_train);
-        assert_eq!(flat.x_val, nested.x_val);
-        assert_eq!(flat.y_val, nested.y_val);
-        assert_eq!(flat.total_added(), nested.total_added());
+        b.add_view(&block.view());
+        assert_eq!(nested(&a), nested(&b));
+        assert_eq!(a.n_val(), b.n_val());
+        assert_eq!(a.total_added(), b.total_added());
     }
 
     #[test]

@@ -208,8 +208,8 @@ impl HloPotentialModel {
             let _ = std::fs::create_dir_all(parent);
         }
         use crate::json::{arr_f32, obj, Value};
-        let xs = Value::Array(self.dataset.x_train.iter().map(|x| arr_f32(x)).collect());
-        let ys = Value::Array(self.dataset.y_train.iter().map(|y| arr_f32(y)).collect());
+        let xs = Value::Array(self.dataset.train_inputs().map(arr_f32).collect());
+        let ys = Value::Array(self.dataset.train_labels().map(arr_f32).collect());
         let snap = obj(vec![
             ("w", arr_f32(self.weights_slice())),
             ("opt", arr_f32(&self.opt)),
@@ -261,6 +261,16 @@ impl HloPotentialModel {
         }
     }
 
+    /// Active weights as an engine input. An adopted shared payload goes in
+    /// as [`TensorIn::Shared`], so repeat calls between weight syncs hit the
+    /// engine's upload cache instead of re-staging `param_size` floats.
+    fn weights_in(&self) -> TensorIn<'_> {
+        match &self.w_shared {
+            Some(p) => TensorIn::Shared(p),
+            None => TensorIn::F32(&self.w),
+        }
+    }
+
     fn widths(&self) -> [usize; 3] {
         [self.n_atoms * 3, self.n_globals, self.n_states]
     }
@@ -285,7 +295,7 @@ impl HloPotentialModel {
         let out = self.engine.call(
             name,
             &[
-                TensorIn::F32(self.weights_slice()),
+                self.weights_in(),
                 TensorIn::F32(&cols[0]),
                 TensorIn::F32(&cols[1]),
                 TensorIn::F32(&cols[2]),
@@ -326,7 +336,7 @@ impl HloPotentialModel {
         let out = self.engine.call(
             &name,
             &[
-                TensorIn::F32(self.weights_slice()),
+                self.weights_in(),
                 TensorIn::F32(&cols[0]),
                 TensorIn::F32(&cols[1]),
             ],
@@ -366,26 +376,32 @@ impl HloPotentialModel {
 
     fn train_step(&mut self) -> anyhow::Result<f32> {
         let t = self.train_batch;
-        let (xs, ys) = self.dataset.minibatch(t);
-        // flat path: both flattened minibatch buffers are viewed as strided
-        // rows and column-split without materializing nested row lists
-        let in_view = BatchView::from_parts(&xs, t, self.input_row_len())
-            .context("minibatch input shape mismatch")?;
-        let lab_view = BatchView::from_parts(&ys, t, self.label_row_len())
-            .context("minibatch label shape mismatch")?;
-        // persistent scratches (taken out to split the borrow): both column
-        // stagings reuse last step's capacity — a steady-state train step
-        // performs no column-split allocations
+        // row shapes and scratches are hoisted before `minibatch`: its
+        // returned slices keep the dataset mutably borrowed, so only
+        // disjoint-field accesses are legal afterwards
+        let in_len = self.input_row_len();
+        let lab_len = self.label_row_len();
         let widths = self.widths();
         let lab_widths = [self.n_states, self.n_atoms * 3];
         let mut in_scratch = std::mem::take(&mut self.in_scratch);
         let mut lab_scratch = std::mem::take(&mut self.lab_scratch);
+        // flat path: the minibatch is gathered into the dataset's reused
+        // scratch and viewed as strided rows — no nested row lists and no
+        // per-step sample copies
+        let (xs, ys) = self.dataset.minibatch(t);
+        let in_view =
+            BatchView::from_parts(xs, t, in_len).context("minibatch input shape mismatch")?;
+        let lab_view =
+            BatchView::from_parts(ys, t, lab_len).context("minibatch label shape mismatch")?;
         let in_cols = in_scratch.split_range(&in_view, 0, t, &widths);
         let lab_cols = lab_scratch.split_range(&lab_view, 0, t, &lab_widths);
         let out = self.engine.call(
             &self.train_name,
             &[
-                TensorIn::F32(self.weights_slice()),
+                match &self.w_shared {
+                    Some(p) => TensorIn::Shared(p),
+                    None => TensorIn::F32(&self.w),
+                },
                 TensorIn::F32(&self.opt),
                 TensorIn::F32(&in_cols[0]),
                 TensorIn::F32(&in_cols[1]),

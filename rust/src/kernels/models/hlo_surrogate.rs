@@ -109,15 +109,23 @@ impl HloSurrogateModel {
         }
     }
 
+    /// Active weights as an engine input. An adopted shared payload goes in
+    /// as [`TensorIn::Shared`], so repeat calls between weight syncs hit the
+    /// engine's upload cache instead of re-staging `param_size` floats.
+    fn weights_in(&self) -> TensorIn<'_> {
+        match &self.w_shared {
+            Some(p) => TensorIn::Shared(p),
+            None => TensorIn::F32(&self.w),
+        }
+    }
+
     /// Forward one stacked chunk (`used` live rows in `flat`): pads to the
     /// artifact batch, runs the forward, extracts `y_mean` — the single
     /// place both predict paths get the output-tensor layout from.
     fn fwd_flat(&self, batch: usize, used: usize, flat: &mut Vec<f32>) -> anyhow::Result<Vec<f32>> {
         let name = &self.fwd_names[&batch];
         pad_rows(flat, used, batch, self.input_row_len());
-        let out = self
-            .engine
-            .call(name, &[TensorIn::F32(self.weights_slice()), TensorIn::F32(flat)])?;
+        let out = self.engine.call(name, &[self.weights_in(), TensorIn::F32(flat)])?;
         Ok(out[1].clone()) // y_mean (B, n_out)
     }
 
@@ -130,14 +138,19 @@ impl HloSurrogateModel {
     }
 
     fn train_step(&mut self) -> anyhow::Result<f32> {
+        // the minibatch borrows the dataset's gather scratch, so only
+        // disjoint-field access (engine, weights, opt) is legal below
         let (xs, ys) = self.dataset.minibatch(self.train_batch);
         let out = self.engine.call(
             &self.train_name,
             &[
-                TensorIn::F32(self.weights_slice()),
+                match &self.w_shared {
+                    Some(p) => TensorIn::Shared(p),
+                    None => TensorIn::F32(&self.w),
+                },
                 TensorIn::F32(&self.opt),
-                TensorIn::F32(&xs),
-                TensorIn::F32(&ys),
+                TensorIn::F32(xs),
+                TensorIn::F32(ys),
             ],
         )?;
         let mut it = out.into_iter();

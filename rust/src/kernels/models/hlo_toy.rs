@@ -36,6 +36,11 @@ pub struct HloToyModel {
     /// Weights adopted from a shared wire payload (`update_from`); cleared
     /// whenever `w` is written locally.
     w_shared: Option<Payload>,
+    /// Fused-forward staging: this member's weights replicated `n_members`
+    /// times, kept as a shared payload so every predict between weight
+    /// syncs reuses one buffer (and the engine's upload cache sees one
+    /// stable identity). Cleared alongside any weight write.
+    w_all_shared: Option<Payload>,
     opt: Vec<f32>,
     dataset: Dataset,
     last_loss: Option<f32>,
@@ -80,6 +85,7 @@ impl HloToyModel {
             train_batch,
             w,
             w_shared: None,
+            w_all_shared: None,
             opt: vec![0.0; opt_size],
             dataset: Dataset::new(0.2, seed as u64),
             last_loss: None,
@@ -96,12 +102,19 @@ impl HloToyModel {
         }
     }
 
-    fn replicated_weights(&self) -> Vec<f32> {
-        let mut w_all = Vec::with_capacity(self.n_members * self.param_size);
-        for _ in 0..self.n_members {
-            w_all.extend_from_slice(self.weights_slice());
+    /// The member's weights replicated for the fused committee forward,
+    /// as a cached shared payload (cheap handle clone). Rebuilt only after
+    /// a weight write invalidated the cache — steady-state prediction
+    /// re-serves the same buffer, so the engine stages it exactly once.
+    fn replicated_weights(&mut self) -> Payload {
+        if self.w_all_shared.is_none() {
+            let mut w_all = Vec::with_capacity(self.n_members * self.param_size);
+            for _ in 0..self.n_members {
+                w_all.extend_from_slice(self.weights_slice());
+            }
+            self.w_all_shared = Some(Payload::from(w_all));
         }
-        w_all
+        self.w_all_shared.clone().expect("filled above")
     }
 
     /// Forward one stacked chunk (`used` live rows already normalized to
@@ -109,9 +122,9 @@ impl HloToyModel {
     /// fused forward, and extracts `y_mean` — the single place both the
     /// nested and flat predict paths get the output-tensor layout from.
     /// `None` on engine failure (callers degrade to zero rows).
-    fn fwd_stacked(&self, w_all: &[f32], used: usize, flat: &mut Vec<f32>) -> Option<Vec<f32>> {
+    fn fwd_stacked(&self, w_all: &Payload, used: usize, flat: &mut Vec<f32>) -> Option<Vec<f32>> {
         pad_rows(flat, used, self.fwd_batch, self.n_in);
-        match self.engine.call(&self.fwd_name, &[TensorIn::F32(w_all), TensorIn::F32(flat)]) {
+        match self.engine.call(&self.fwd_name, &[TensorIn::Shared(w_all), TensorIn::F32(flat)]) {
             // outputs: y_all, y_mean (B, n_out) — members identical
             Ok(res) => Some(res[1].clone()),
             Err(_) => None,
@@ -190,6 +203,7 @@ impl Model for HloToyModel {
     fn update(&mut self, weight_array: &[f32]) {
         if weight_array.len() == self.param_size {
             self.w_shared = None;
+            self.w_all_shared = None;
             self.w.copy_from_slice(weight_array);
         }
     }
@@ -199,6 +213,7 @@ impl Model for HloToyModel {
         // bump) instead of copying it into the owned weight array
         if weights.len() == self.param_size {
             self.w_shared = Some(weights.clone());
+            self.w_all_shared = None;
         }
     }
 
@@ -232,20 +247,26 @@ impl Model for HloToyModel {
             return false;
         }
         for _ in 0..self.epochs_per_round {
+            // the minibatch borrows the dataset's gather scratch, so only
+            // disjoint-field access (engine, weights, opt) is legal below
             let (xs, ys) = self.dataset.minibatch(self.train_batch);
             match self.engine.call(
                 &self.train_name,
                 &[
-                    TensorIn::F32(self.weights_slice()),
+                    match &self.w_shared {
+                        Some(p) => TensorIn::Shared(p),
+                        None => TensorIn::F32(&self.w),
+                    },
                     TensorIn::F32(&self.opt),
-                    TensorIn::F32(&xs),
-                    TensorIn::F32(&ys),
+                    TensorIn::F32(xs),
+                    TensorIn::F32(ys),
                 ],
             ) {
                 Ok(res) => {
                     let mut it = res.into_iter();
                     self.w = it.next().unwrap();
                     self.w_shared = None;
+                    self.w_all_shared = None;
                     self.opt = it.next().unwrap();
                     self.last_loss = Some(it.next().unwrap()[0]);
                 }

@@ -115,17 +115,50 @@
 //! at `oracle_batch.max_outstanding` (excess inputs wait in the
 //! `OracleBuffer`, where `dynamic_orcale_list` re-scoring can still
 //! reorder them). On the wire, `TAG_ORACLE_BATCH` carries the inputs and
-//! `TAG_ORACLE_BATCH_RESULT` returns interleaved `(input, label)` pairs
-//! whose packed section is byte-identical to the training plane's
-//! `pack_datapoints`; oracles label through
+//! `TAG_ORACLE_LABELS` returns *only* the labels under the echoed batch id
+//! — the Manager retains each dispatched input block and pairs label row
+//! `i` with retained input row `i`, so inputs never re-ship (the legacy
+//! interleaved `TAG_ORACLE_BATCH_RESULT` layout is still decoded for
+//! mixed-version runs); oracles label through
 //! `Oracle::run_calc_batch(&BatchView) -> RowBlock` (default shim loops
 //! `run_calc`, so labels are bit-identical to the per-label path — proven
-//! end to end in `rust/tests/test_determinism.rs`), and batch results
-//! ingest straight into the Manager's `TrainBuffer` as borrowed views with
+//! end to end in `rust/tests/test_determinism.rs`), and labels ingest
+//! straight into the Manager's `TrainBuffer` as borrowed views with
 //! constant allocations per batch (`rust/tests/test_oracle_plane.rs`). The
 //! per-label path (`OracleMode::PerLabel`, the default) is preserved
 //! bit-compatible. `BENCH_oracle.json` tracks green-flow messages per
 //! labeled sample (≥ 2× fewer at batch 8 with 4 oracles).
+//!
+//! ## Memory plane
+//!
+//! The last per-iteration copies on the green + yellow paths are gone:
+//!
+//! * **Flat [`data::Dataset`]** — each split stores its rows in one
+//!   [`data::RowQueue`] (contiguous values + end offsets) instead of
+//!   `Vec<Vec<f32>>`; `minibatch` is a strided gather into a reused
+//!   scratch pair, so a training step allocates a small constant
+//!   independent of the rolling-window size, and `apply_window` drops
+//!   index ranges instead of shifting boxed rows. RNG draw order and
+//!   window semantics are bit-identical to the nested store (pinned in
+//!   `rust/tests/test_determinism.rs`).
+//! * **Device-resident weight cache** — [`runtime::Engine::call`] keys
+//!   [`runtime::TensorIn::Shared`] inputs by payload identity
+//!   ([`comm::Payload::ident`]) in an [`runtime::UploadCache`]: weights
+//!   adopted from a trainer sync stage once and every subsequent
+//!   `predict_batch`/`train_step`/`validation_mse` between syncs reuses
+//!   the staged literal (zero re-upload bytes; cache hits tracked by
+//!   [`runtime::UploadStats`]). Invalidation is by construction: any
+//!   local weight write drops the shared payload, and a fresh sync is a
+//!   new identity.
+//! * **Labels-only oracle results** — see the oracle plane above; batched
+//!   result frames carry labels, not echoed inputs, ~halving green-flow
+//!   result bytes at batch 8.
+//!
+//! All three are pinned by the counting-allocator/cache tests in
+//! `rust/tests/test_mem_plane.rs` and tracked in `BENCH_mem.json`
+//! (`cargo bench --bench comm_overhead`); `scripts/check_bench.py` diffs
+//! every `BENCH_*.json` against the committed `BENCH_baseline.json` and
+//! fails CI on a >10% regression of any gated metric.
 //!
 //! ## Adaptive dispatch core
 //!

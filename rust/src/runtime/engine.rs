@@ -11,14 +11,22 @@ use super::artifact::{ArtifactEntry, DType, Manifest};
 // build can't link; the stub exposes the same API and fails only at compile
 // (`Engine::backend_available` lets callers probe before relying on it).
 use super::pjrt_stub as xla;
+use super::upload_cache::{UploadCache, UploadStats};
+use crate::comm::Payload;
 
 /// Borrowed input tensor for [`Engine::call`].
 #[derive(Debug, Clone, Copy)]
 pub enum TensorIn<'a> {
-    /// Flat f32 data; must match the spec's element count.
+    /// Flat f32 data; must match the spec's element count. Staged as a
+    /// fresh literal on every call — use for per-call data (minibatches).
     F32(&'a [f32]),
     /// Scalar u32 (seeds).
     U32(u32),
+    /// Shared f32 payload, staged through the engine's identity-keyed
+    /// upload cache: an unchanged payload (same backing buffer and range)
+    /// skips the host-side literal build on repeat calls. Use for inputs
+    /// that are stable across many calls — committee weights between syncs.
+    Shared(&'a Payload),
 }
 
 /// Per-artifact execution statistics (used by the §Perf pass).
@@ -38,7 +46,15 @@ pub struct Engine {
     client: xla::PjRtClient,
     executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<HashMap<String, CallStats>>,
+    /// Identity-keyed staging cache for [`TensorIn::Shared`] inputs.
+    uploads: RefCell<UploadCache>,
 }
+
+/// How many distinct shared payloads the upload cache retains per engine.
+/// A kernel host stages at most a handful of stable tensors (its own
+/// weights, a replicated committee block); 8 leaves headroom without
+/// pinning unbounded device memory.
+const UPLOAD_CACHE_CAP: usize = 8;
 
 impl Engine {
     /// Create a CPU engine over a manifest.
@@ -56,6 +72,7 @@ impl Engine {
             client,
             executables: RefCell::new(HashMap::new()),
             stats: RefCell::new(HashMap::new()),
+            uploads: RefCell::new(UploadCache::new(UPLOAD_CACHE_CAP)),
         })
     }
 
@@ -125,6 +142,18 @@ impl Engine {
                         );
                     }
                 }
+                (DType::F32, TensorIn::Shared(p)) => {
+                    if p.len() != spec.len() {
+                        bail!(
+                            "artifact {} input {}: expected {} elements ({:?}), got {}",
+                            entry.name,
+                            spec.name,
+                            spec.len(),
+                            spec.shape,
+                            p.len()
+                        );
+                    }
+                }
                 (DType::U32, TensorIn::U32(_)) => {
                     if !spec.shape.is_empty() {
                         bail!("artifact {} input {}: u32 inputs must be scalar", entry.name, spec.name);
@@ -145,29 +174,58 @@ impl Engine {
         self.validate(&entry, inputs)?;
         self.warm(name)?;
 
-        let mut literals = Vec::with_capacity(inputs.len());
+        // Stage shared inputs through the identity cache first: an unchanged
+        // payload reuses its literal from a previous call, skipping the
+        // host-side copy entirely.
+        {
+            let mut uploads = self.uploads.borrow_mut();
+            for (spec, input) in entry.inputs.iter().zip(inputs) {
+                if let TensorIn::Shared(p) = input {
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    uploads
+                        .ensure(p, &dims)
+                        .with_context(|| format!("staging shared input {}", spec.name))?;
+                }
+            }
+        }
+
+        // Per-call inputs are staged fresh; `None` marks cache-resident slots.
+        let mut owned: Vec<Option<xla::Literal>> = Vec::with_capacity(inputs.len());
         for (spec, input) in entry.inputs.iter().zip(inputs) {
             let lit = match input {
                 TensorIn::F32(data) => {
                     let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data)
-                        .reshape(&dims)
-                        .with_context(|| format!("reshaping input {}", spec.name))?
+                    Some(
+                        xla::Literal::vec1(data)
+                            .reshape(&dims)
+                            .with_context(|| format!("reshaping input {}", spec.name))?,
+                    )
                 }
-                TensorIn::U32(v) => xla::Literal::scalar(*v),
+                TensorIn::U32(v) => Some(xla::Literal::scalar(*v)),
+                TensorIn::Shared(_) => None,
             };
-            literals.push(lit);
+            owned.push(lit);
         }
 
         let t0 = Instant::now();
+        let uploads = self.uploads.borrow();
+        let mut literals: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+        for (input, slot) in inputs.iter().zip(owned.iter()) {
+            if let TensorIn::Shared(p) = input {
+                literals.push(uploads.get(p).expect("staged above"));
+            } else {
+                literals.push(slot.as_ref().expect("owned literal staged above"));
+            }
+        }
         let exes = self.executables.borrow();
         let exe = exes.get(name).expect("warmed above");
         let result = exe
-            .execute::<xla::Literal>(&literals)
+            .execute::<&xla::Literal>(&literals)
             .with_context(|| format!("executing artifact {name}"))?[0][0]
             .to_literal_sync()
             .context("fetching result literal")?;
         drop(exes);
+        drop(uploads);
 
         // aot.py lowers with return_tuple=True — always a tuple root.
         let parts = result.to_tuple().context("decomposing result tuple")?;
@@ -204,6 +262,11 @@ impl Engine {
     /// Snapshot of per-artifact stats (name → stats).
     pub fn stats(&self) -> HashMap<String, CallStats> {
         self.stats.borrow().clone()
+    }
+
+    /// Snapshot of the shared-input upload cache counters.
+    pub fn upload_stats(&self) -> UploadStats {
+        self.uploads.borrow().stats()
     }
 
     /// Mean execution latency of `name` in milliseconds, if called.
@@ -254,6 +317,15 @@ mod tests {
         // dtype mismatch
         assert!(engine
             .validate(&entry, &[TensorIn::U32(3), TensorIn::U32(1)])
+            .is_err());
+        // shared payloads validate like flat f32
+        let good = Payload::from(vec![0f32; 6]);
+        let bad = Payload::from(vec![0f32; 5]);
+        assert!(engine
+            .validate(&entry, &[TensorIn::Shared(&good), TensorIn::U32(1)])
+            .is_ok());
+        assert!(engine
+            .validate(&entry, &[TensorIn::Shared(&bad), TensorIn::U32(1)])
             .is_err());
     }
 

@@ -19,9 +19,11 @@
 mod artifact;
 mod engine;
 pub mod pjrt_stub;
+mod upload_cache;
 
 pub use artifact::{ArtifactEntry, DType, Manifest, TensorSpec};
 pub use engine::{Engine, TensorIn};
+pub use upload_cache::{UploadCache, UploadStats};
 
 /// True when HLO artifacts exist *and* a real PJRT backend is linked, i.e.
 /// the full artifact execution path can run. Tests and examples that

@@ -24,6 +24,7 @@ use std::time::Duration;
 use pal::comm::FaultPlan;
 use pal::config::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
 use pal::coordinator::workflow::Workflow;
+use pal::data::Dataset;
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
 use pal::kernels::oracles::PesOracle;
 use pal::potential::{MullerBrown, Pes};
@@ -287,6 +288,148 @@ fn batched_oracle_mode_is_bit_identical_to_per_label() {
     }
     for (x, y) in batched.final_losses.iter().zip(&batched2.final_losses) {
         assert_eq!(x.to_bits(), y.to_bits(), "batched mode not bit-stable across runs");
+    }
+}
+
+/// Committee member backed by the flat [`Dataset`]: labeled pairs go
+/// through `Dataset::add` (val split + rolling window), and every retrain
+/// round draws fixed-size minibatches via the strided-gather `minibatch`
+/// and takes one SGD step per draw on a linear map. The final loss is a
+/// pure function of the ordered labeled stream and the dataset's RNG
+/// stream, so it pins the flat Dataset's draw order and window semantics
+/// end to end.
+struct DatasetModel {
+    data: Dataset,
+    w: Vec<f32>,
+    loss: Option<f32>,
+    epochs: u64,
+}
+
+const DS_WINDOW: usize = 8;
+const DS_EPOCHS: usize = 4;
+const DS_MB: usize = 2;
+
+impl DatasetModel {
+    fn new(member: usize) -> Self {
+        let w = (0..IN_DIM * OUT_DIM)
+            .map(|k| ((k + member * 11) % 7) as f32 * 0.05)
+            .collect();
+        DatasetModel {
+            data: Dataset::new(0.25, 1000 + member as u64).with_rolling_window(DS_WINDOW),
+            w,
+            loss: None,
+            epochs: 0,
+        }
+    }
+
+    fn forward(&self, x: &[f32], out: &mut [f32]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (0..IN_DIM).map(|i| x[i] * self.w[i * OUT_DIM + j]).sum();
+        }
+    }
+}
+
+impl Model for DatasetModel {
+    fn predict(&mut self, list: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        list.iter()
+            .map(|x| {
+                let mut out = vec![0.0; OUT_DIM];
+                self.forward(x, &mut out);
+                out
+            })
+            .collect()
+    }
+    fn update(&mut self, w: &[f32]) {
+        self.w = w.to_vec();
+    }
+    fn get_weight(&self) -> Vec<f32> {
+        self.w.clone()
+    }
+    fn get_weight_size(&self) -> usize {
+        IN_DIM * OUT_DIM
+    }
+    fn add_trainingset(&mut self, points: &[(Vec<f32>, Vec<f32>)]) {
+        self.data.add(points);
+    }
+    fn retrain(&mut self, _interrupt: &mut dyn FnMut() -> bool) -> bool {
+        if self.data.is_empty() {
+            return false;
+        }
+        let mut loss_acc = 0.0f32;
+        for _ in 0..DS_EPOCHS {
+            let mut grad = [0.0f32; IN_DIM * OUT_DIM];
+            {
+                let (xs, ys) = self.data.minibatch(DS_MB);
+                for r in 0..DS_MB {
+                    let x = &xs[r * IN_DIM..(r + 1) * IN_DIM];
+                    let y = &ys[r * OUT_DIM..(r + 1) * OUT_DIM];
+                    for j in 0..OUT_DIM {
+                        let p: f32 = (0..IN_DIM).map(|i| x[i] * self.w[i * OUT_DIM + j]).sum();
+                        let e = p - y[j];
+                        loss_acc += e * e;
+                        for i in 0..IN_DIM {
+                            grad[i * OUT_DIM + j] += e * x[i];
+                        }
+                    }
+                }
+            }
+            for (wk, gk) in self.w.iter_mut().zip(grad.iter()) {
+                *wk -= 1e-4 * gk;
+            }
+        }
+        self.loss = Some(loss_acc / (DS_EPOCHS * DS_MB) as f32);
+        self.epochs += DS_EPOCHS as u64;
+        false
+    }
+    fn last_loss(&self) -> Option<f32> {
+        self.loss
+    }
+    fn last_round_epochs(&self) -> u64 {
+        DS_EPOCHS as u64
+    }
+}
+
+fn dataset_kernels() -> KernelSet {
+    let KernelSet { generators, oracles, utils, .. } = deterministic_kernels();
+    let model = Arc::new(move |_mode: Mode, member: usize| {
+        Box::new(DatasetModel::new(member)) as Box<dyn Model>
+    });
+    KernelSet { generators, oracles, model, utils }
+}
+
+fn run_dataset(oracle_mode: OracleMode) -> RunReport {
+    Workflow::new(deterministic_setting(oracle_mode))
+        .run(dataset_kernels())
+        .unwrap()
+}
+
+/// The memory-plane determinism pin: routing every labeled pair through
+/// the flat `Dataset` (val split, index-based rolling window, strided
+/// `minibatch` gather) keeps labels and final losses **bit-identical**
+/// between the per-label and batched oracle modes, and bit-stable across
+/// runs. Any drift in the Dataset's RNG draw order, window eviction, or
+/// gather layout shows up here as a loss mismatch.
+#[test]
+fn flat_dataset_model_is_bit_identical_across_oracle_modes() {
+    let per_label = run_dataset(OracleMode::PerLabel);
+    let batched = run_dataset(OracleMode::Batched);
+    let batched2 = run_dataset(OracleMode::Batched);
+
+    assert_eq!(per_label.oracle_labels, LABELS);
+    assert_eq!(batched.oracle_labels, LABELS, "batched mode labels");
+    assert_eq!(per_label.retrain_rounds, batched.retrain_rounds);
+
+    assert_eq!(per_label.final_losses.len(), MEMBERS);
+    for (i, (x, y)) in per_label.final_losses.iter().zip(&batched.final_losses).enumerate() {
+        assert!(x.is_finite(), "trainer {i} loss not reported: {x}");
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "trainer {i} Dataset-backed loss differs between oracle modes: {x} vs {y}"
+        );
+    }
+    for (x, y) in batched.final_losses.iter().zip(&batched2.final_losses) {
+        assert_eq!(x.to_bits(), y.to_bits(), "Dataset-backed run not bit-stable");
     }
 }
 

@@ -1,0 +1,131 @@
+//! Allocation/byte regression for the memory plane (PR 8).
+//!
+//! Pins the three memory-plane claims:
+//! 1. `Dataset::minibatch` is a strided gather into reused scratch —
+//!    steady-state allocations are zero and independent of the rolling
+//!    window size.
+//! 2. The identity-keyed [`UploadCache`] stages unchanged shared weights
+//!    once: a repeat `ensure` uploads zero bytes and allocates nothing.
+//! 3. Labels-only oracle result frames (`TAG_ORACLE_LABELS`) carry no
+//!    input bytes — the frame size is independent of the input width, and
+//!    the borrowed-view decode allocates a constant count per frame.
+//!
+//! This file installs a counting global allocator and therefore contains
+//! exactly ONE `#[test]`: the default harness runs a binary's tests
+//! concurrently, and any sibling test's allocations would pollute the
+//! counters (same discipline as `test_flat_plane.rs`).
+
+use pal::bench_util::alloc::{alloc_count, CountingAlloc};
+use pal::comm::bus::Payload;
+use pal::comm::protocol::{
+    decode_oracle_labels_views, encode_oracle_batch_result_into, encode_oracle_labels_into,
+};
+use pal::data::batch::RowBlock;
+use pal::data::Dataset;
+use pal::runtime::UploadCache;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Steady-state allocations of one `minibatch` call at `window`, measured
+/// after a warmup call has sized the gather scratch.
+fn minibatch_steady_allocs(window: usize) -> u64 {
+    const DIM: usize = 8;
+    const MB: usize = 16;
+    let mut d = Dataset::new(0.0, 11).with_rolling_window(window);
+    let pts: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..window + 16).map(|i| (vec![i as f32; DIM], vec![i as f32])).collect();
+    d.add(&pts);
+    std::hint::black_box(d.minibatch(MB));
+    let before = alloc_count();
+    for _ in 0..32 {
+        std::hint::black_box(d.minibatch(MB));
+    }
+    alloc_count() - before
+}
+
+/// Allocations of one labels-only decode over `frame`.
+fn labels_decode_allocs(frame: &[f32]) -> u64 {
+    let before = alloc_count();
+    let (_, rows) = decode_oracle_labels_views(frame).expect("valid labels frame");
+    std::hint::black_box(&rows);
+    let delta = alloc_count() - before;
+    drop(rows);
+    delta
+}
+
+/// A labels-only frame plus the legacy interleaved frame for the same
+/// batch: `rows` inputs of `in_w` f32, one-f32 labels.
+fn result_frames(rows: usize, in_w: usize) -> (Vec<f32>, Vec<f32>) {
+    let inputs: Vec<Vec<f32>> = (0..rows).map(|i| vec![i as f32; in_w]).collect();
+    let input_refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let mut labels = RowBlock::new();
+    for i in 0..rows {
+        labels.push_row(&[i as f32]);
+    }
+    let mut labels_frame = Vec::new();
+    encode_oracle_labels_into(9, &labels, &mut labels_frame);
+    let mut legacy_frame = Vec::new();
+    encode_oracle_batch_result_into(9, &input_refs, &labels, &mut legacy_frame);
+    (labels_frame, legacy_frame)
+}
+
+#[test]
+fn memory_plane_is_copy_and_allocation_free() {
+    // --- (1) minibatch: zero steady-state allocs, flat in the window ---
+    let allocs_64 = minibatch_steady_allocs(64);
+    let allocs_512 = minibatch_steady_allocs(512);
+    assert_eq!(allocs_64, 0, "minibatch allocated {allocs_64} times at window 64 (want 0)");
+    assert_eq!(
+        allocs_64, allocs_512,
+        "minibatch allocations must be flat in the window (64: {allocs_64}, 512: {allocs_512})"
+    );
+
+    // --- (2) upload cache: repeat ensure of the same payload stages zero
+    //     bytes and allocates nothing ---
+    let weights = Payload::from(vec![0.5f32; 4096]);
+    let mut cache = UploadCache::new(8);
+    assert!(cache.ensure(&weights, &[4096]).unwrap(), "first stage is a miss");
+    let staged = cache.stats().bytes_uploaded;
+    assert_eq!(staged, 4 * 4096, "miss uploads the full weight buffer");
+    let before = alloc_count();
+    for _ in 0..16 {
+        assert!(!cache.ensure(&weights, &[4096]).unwrap(), "repeat stage must hit");
+    }
+    let hit_allocs = alloc_count() - before;
+    assert_eq!(hit_allocs, 0, "cache hits allocated {hit_allocs} times (want 0)");
+    let s = cache.stats();
+    assert_eq!(s.bytes_uploaded, staged, "cache hits must upload zero bytes");
+    assert_eq!(s.hits, 16);
+    assert_eq!(s.bytes_reused, 16 * 4 * 4096);
+
+    // --- (3) labels-only results: no input bytes on the wire, constant
+    //     decode allocations ---
+    let (labels_8_narrow, legacy_8_narrow) = result_frames(8, 8);
+    let (labels_8_wide, legacy_8_wide) = result_frames(8, 512);
+    assert_eq!(
+        labels_8_narrow.len(),
+        labels_8_wide.len(),
+        "labels-only frame size must not depend on the input width"
+    );
+    assert!(
+        legacy_8_wide.len() > legacy_8_narrow.len(),
+        "legacy interleaved frame re-ships inputs, so it must grow with input width"
+    );
+    assert!(
+        legacy_8_narrow.len() as f64 >= 1.8 * labels_8_narrow.len() as f64,
+        "labels-only must cut result-frame f32s >= 1.8x even at narrow inputs \
+         (legacy {}, labels-only {})",
+        legacy_8_narrow.len(),
+        labels_8_narrow.len()
+    );
+    let (labels_64, _) = result_frames(64, 8);
+    let _ = labels_decode_allocs(&labels_8_narrow); // warmup
+    let decode_small = labels_decode_allocs(&labels_8_narrow);
+    let decode_large = labels_decode_allocs(&labels_64);
+    assert!(decode_small <= 2, "labels decode allocated {decode_small} times (want <= 2)");
+    assert_eq!(
+        decode_small, decode_large,
+        "labels decode must not allocate per row (8 rows: {decode_small}, 64: {decode_large})"
+    );
+}

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: diff BENCH_*.json outputs against the committed
+baseline (BENCH_baseline.json) and fail on regression.
+
+The benches already hard-gate their own targets (they exit non-zero when a
+target is missed); this comparator adds the *trajectory* check on top:
+every gated metric must stay within 10% of its baseline value, so a PR
+that keeps a bench barely above its floor while eroding a 10x win into a
+4x win still fails CI.
+
+Baseline entries are machine-independent ratios (allocation/copy/message
+reductions, speedups, byte counts), never wall-clock times, so the check
+is stable across runners. Each entry:
+
+    {"file": "BENCH_alloc.json", "path": "reduction_x_at_batch8",
+     "direction": "higher", "value": 10.0}
+
+`direction: "higher"` means bigger is better (regression = current <
+0.9 * baseline); `"lower"` means smaller is better (regression = current >
+1.1 * baseline, so a 0.0 baseline tolerates exactly 0.0).
+
+A baseline entry whose BENCH file was not produced by this run is skipped
+with a note (CI's bench steps each emit a subset); a produced file missing
+the metric's path is a hard failure (schema drift must be loud). Any
+`"target_met": false` anywhere in a produced file also fails.
+
+Usage: python3 scripts/check_bench.py [--baseline PATH] [--dir DIR]
+Only the standard library is used.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+TOLERANCE = 0.10
+
+
+def lookup(doc, dotted):
+    """Resolve 'a.b.c' in nested dicts; None when any hop is missing."""
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def failed_target_flags(doc, prefix=""):
+    """All paths in `doc` where a `target_met` flag is false."""
+    bad = []
+    if isinstance(doc, dict):
+        for key, val in doc.items():
+            path = f"{prefix}{key}"
+            if key == "target_met" and val is False:
+                bad.append(path)
+            bad.extend(failed_target_flags(val, path + "."))
+    elif isinstance(doc, list):
+        for i, val in enumerate(doc):
+            bad.extend(failed_target_flags(val, f"{prefix}{i}."))
+    return bad
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--dir", default=".", help="directory holding BENCH_*.json outputs")
+    args = ap.parse_args()
+
+    with open(args.baseline, encoding="utf-8") as fh:
+        baseline = json.load(fh)
+
+    docs = {}
+    failures = []
+    checked = 0
+    skipped = []
+
+    for entry in baseline["metrics"]:
+        fname, path = entry["file"], entry["path"]
+        fpath = os.path.join(args.dir, fname)
+        if fname not in docs:
+            if not os.path.exists(fpath):
+                docs[fname] = None
+            else:
+                with open(fpath, encoding="utf-8") as fh:
+                    docs[fname] = json.load(fh)
+        doc = docs[fname]
+        if doc is None:
+            skipped.append(f"{fname}:{path}")
+            continue
+        current = lookup(doc, path)
+        if not isinstance(current, (int, float)) or isinstance(current, bool):
+            failures.append(f"{fname}:{path} missing or non-numeric (schema drift?)")
+            continue
+        base, direction = float(entry["value"]), entry["direction"]
+        if direction == "higher":
+            ok = current >= base * (1.0 - TOLERANCE)
+            bound = f">= {base * (1.0 - TOLERANCE):.4g}"
+        elif direction == "lower":
+            ok = current <= base * (1.0 + TOLERANCE)
+            bound = f"<= {base * (1.0 + TOLERANCE):.4g}"
+        else:
+            failures.append(f"{fname}:{path} has unknown direction {direction!r}")
+            continue
+        checked += 1
+        verdict = "ok" if ok else "REGRESSED"
+        print(f"{verdict:>9}  {fname}:{path} = {current:.4g} (baseline {base:.4g}, want {bound})")
+        if not ok:
+            failures.append(f"{fname}:{path} = {current:.4g} vs baseline {base:.4g} ({bound})")
+
+    # every produced BENCH file (baseline-listed or not) must have all its
+    # own gates green
+    for fpath in sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json"))):
+        fname = os.path.basename(fpath)
+        if fname == os.path.basename(args.baseline):
+            continue
+        if docs.get(fname) is None:
+            with open(fpath, encoding="utf-8") as fh:
+                docs[fname] = json.load(fh)
+        for flag in failed_target_flags(docs[fname]):
+            failures.append(f"{fname}:{flag} is false (bench-local gate missed)")
+
+    if skipped:
+        print(f"skipped {len(skipped)} baseline metrics (bench not run): {', '.join(skipped)}")
+    if checked == 0:
+        print("error: no BENCH_*.json outputs matched the baseline — did the benches run?")
+        return 1
+    if failures:
+        print(f"\nperf trajectory check FAILED ({len(failures)} regression(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nperf trajectory check passed: {checked} gated metrics within {TOLERANCE:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
