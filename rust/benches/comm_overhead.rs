@@ -18,12 +18,17 @@
 //! (k) memory plane — labels-only oracle-result bytes per label vs the
 //! legacy interleaved frame (gated at 1.8x), device-resident weight-cache
 //! upload bytes on repeat calls (gated at zero), and minibatch gather
-//! allocations vs rolling-window size (gated flat; `BENCH_mem.json`).
+//! allocations vs rolling-window size (gated flat; `BENCH_mem.json`),
+//! (l) transport plane — fan-in messages/sec over the pluggable backends
+//! at 8 ranks: the lock-free `shm` rings vs the default `channel` bus
+//! (gated at 1.5x for small payloads) plus the `tcp` loopback rate and
+//! its serialization copy volume (`BENCH_transport.json`).
 //!
 //! Run: `cargo bench --bench comm_overhead`
 //! (append `-- sched-only` for just the scheduler comparison,
-//! `-- fault-only` for just the fault-recovery gate, or `-- mem-only`
-//! for just the memory-plane gates)
+//! `-- fault-only` for just the fault-recovery gate, `-- mem-only`
+//! for just the memory-plane gates, or `-- transport-only` for just the
+//! transport-plane gate)
 //!
 //! Results are also written machine-readable to `BENCH_comm.json` so the
 //! perf trajectory is tracked across PRs.
@@ -33,12 +38,13 @@ use std::time::Duration;
 
 use pal::bench_util::alloc::{alloc_count, CountingAlloc};
 use pal::bench_util::{bench, black_box, Report, Row};
-use pal::comm::bus::{Payload, Src, World};
+use pal::comm::bus::{Endpoint, Payload, Src, World};
 use pal::comm::protocol::{
     decode_predict_batch_result, decode_predict_batch_result_rows, encode_oracle_batch_result_into,
     encode_oracle_labels_into, encode_predict_batch_result,
 };
-use pal::comm::FaultPlan;
+use pal::comm::transport::tcp::Bootstrap;
+use pal::comm::{FaultPlan, TransportKind};
 use pal::config::{
     AlSetting, BatchSetting, ExchangeMode, OracleMode, SchedPolicy, SchedSetting, StopCriteria,
     Topology,
@@ -894,14 +900,213 @@ fn run_mem_section() -> bool {
     target_met
 }
 
+/// Fan-in throughput core: every producer endpoint pushes `per_producer`
+/// copies of one pre-built shared payload of `size` f32 at rank 0, which
+/// drains them with the vectored receive. All senders start on a barrier;
+/// the clock runs from the barrier release to the last receive. Returns
+/// messages/sec.
+fn measure_fan_in(
+    mut consumer: Endpoint,
+    producers: Vec<Endpoint>,
+    size: usize,
+    per_producer: usize,
+) -> f64 {
+    let total = producers.len() * per_producer;
+    let barrier = Arc::new(std::sync::Barrier::new(producers.len() + 1));
+    let handles: Vec<_> = producers
+        .into_iter()
+        .map(|e| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                // pre-built payload: sends are refcount bumps (or, on tcp,
+                // serialized frames) — never a fresh ingest per message
+                let payload = Payload::from(vec![0.5f32; size]);
+                barrier.wait();
+                for _ in 0..per_producer {
+                    assert!(e.send(0, 41, &payload), "producer send failed");
+                }
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = std::time::Instant::now();
+    let mut got = 0usize;
+    while got < total {
+        let batch = consumer.recv_ready_all(Src::Any, 41);
+        if batch.is_empty() {
+            consumer.recv_timeout(Src::Any, 41, Duration::from_secs(30)).expect("fan-in recv");
+            got += 1;
+        } else {
+            got += batch.len();
+        }
+    }
+    let dt = t0.elapsed();
+    for h in handles {
+        h.join().unwrap();
+    }
+    total as f64 / dt.as_secs_f64()
+}
+
+/// One in-process fan-in run (7 producers → rank 0) over `kind`:
+/// `(msgs_per_s, bytes_copied)`. Both in-process backends move shared
+/// payloads without touching the bytes, so the copy count doubles as a
+/// zero-copy check.
+fn transport_throughput(kind: TransportKind, size: usize, per_producer: usize) -> (f64, u64) {
+    let mut w = World::with_backend(8, Duration::ZERO, kind);
+    let stats = w.stats();
+    let mut eps = w.endpoints();
+    let consumer = eps.remove(0);
+    let msgs_per_s = measure_fan_in(consumer, eps, size, per_producer);
+    (msgs_per_s, stats.bytes_copied())
+}
+
+/// Socket twin of [`transport_throughput`]: a loopback pair of tcp worlds
+/// in one process, producers homed on the connect side, consumer behind
+/// the listener. Returns `(msgs_per_s, producer-side bytes_copied)` — on
+/// tcp the frame serialization at the process boundary is a real copy,
+/// so the copy volume ≈ the full payload traffic.
+fn tcp_transport_throughput(size: usize, per_producer: usize) -> (f64, u64) {
+    let boot = Bootstrap::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = boot.local_addr().expect("loopback addr").to_string();
+    let follower = std::thread::spawn(move || {
+        let locals: Vec<usize> = (1..8).collect();
+        let (mut w, _monitor) =
+            World::connect(&addr, 8, &locals, Duration::ZERO, Duration::from_secs(10))
+                .expect("connect loopback");
+        let stats = w.stats();
+        let producers: Vec<Endpoint> = locals.iter().map(|&r| w.endpoint(r)).collect();
+        (producers, stats)
+    });
+    let (mut w, _monitor) = World::listen(boot, 8, &[0], Duration::ZERO).expect("listen loopback");
+    let consumer = w.endpoint(0);
+    let (producers, follower_stats) = follower.join().expect("join tcp follower");
+    let msgs_per_s = measure_fan_in(consumer, producers, size, per_producer);
+    (msgs_per_s, follower_stats.bytes_copied())
+}
+
+/// Section (l): transport plane — fan-in msgs/sec over the pluggable
+/// backends at 8 ranks. The gate: the lock-free shm rings must move small
+/// payloads at >= 1.5x the channel backend's rate. The tcp loopback rate
+/// is reported, not gated — serialization at the process boundary puts it
+/// in a different class. Returns whether the gate held.
+fn run_transport_section() -> bool {
+    const SMALL: usize = 1;
+    const LARGE: usize = 1024;
+    const SMALL_MSGS: usize = 4000;
+    const LARGE_MSGS: usize = 500;
+
+    let (ch_s, ch_s_copied) = transport_throughput(TransportKind::Channel, SMALL, SMALL_MSGS);
+    let (shm_s, shm_s_copied) = transport_throughput(TransportKind::Shm, SMALL, SMALL_MSGS);
+    let (tcp_s, tcp_s_copied) = tcp_transport_throughput(SMALL, SMALL_MSGS);
+    let (ch_l, ch_l_copied) = transport_throughput(TransportKind::Channel, LARGE, LARGE_MSGS);
+    let (shm_l, shm_l_copied) = transport_throughput(TransportKind::Shm, LARGE, LARGE_MSGS);
+    let (tcp_l, tcp_l_copied) = tcp_transport_throughput(LARGE, LARGE_MSGS);
+
+    let speedup_small = shm_s / ch_s.max(1e-9);
+    let speedup_large = shm_l / ch_l.max(1e-9);
+    // in-process backends must also stay zero-copy on the shared payloads
+    let target_met = speedup_small >= 1.5 && shm_s_copied == 0 && ch_s_copied == 0;
+
+    let mut rep = Report::new(format!(
+        "transport plane — fan-in msgs/sec at 8 ranks, 7 producers -> rank 0 \
+         ({SMALL_MSGS} small / {LARGE_MSGS} large msgs per producer)"
+    ));
+    rep.push(
+        Row::new(format!("channel, {SMALL} f32"))
+            .f("msgs_per_s", ch_s)
+            .field("bytes_copied", ch_s_copied),
+    );
+    rep.push(
+        Row::new(format!("shm, {SMALL} f32"))
+            .f("msgs_per_s", shm_s)
+            .field("bytes_copied", shm_s_copied)
+            .f("speedup_x", speedup_small),
+    );
+    rep.push(
+        Row::new(format!("tcp loopback, {SMALL} f32"))
+            .f("msgs_per_s", tcp_s)
+            .field("bytes_copied", tcp_s_copied),
+    );
+    rep.push(
+        Row::new(format!("channel, {LARGE} f32"))
+            .f("msgs_per_s", ch_l)
+            .field("bytes_copied", ch_l_copied),
+    );
+    rep.push(
+        Row::new(format!("shm, {LARGE} f32"))
+            .f("msgs_per_s", shm_l)
+            .field("bytes_copied", shm_l_copied)
+            .f("speedup_x", speedup_large),
+    );
+    rep.push(
+        Row::new(format!("tcp loopback, {LARGE} f32"))
+            .f("msgs_per_s", tcp_l)
+            .field("bytes_copied", tcp_l_copied),
+    );
+    rep.print();
+    println!(
+        "(shm moves small payloads at {speedup_small:.2}x the channel rate{})",
+        if target_met { " — >= 1.5x target met" } else { " — TRANSPORT GATE MISSED" }
+    );
+
+    let transport_json = obj(vec![
+        ("bench", Value::Str("transport_plane".into())),
+        ("ranks", Value::Num(8.0)),
+        ("producers", Value::Num(7.0)),
+        (
+            "small_payload",
+            obj(vec![
+                ("size_f32", Value::Num(SMALL as f64)),
+                ("msgs_per_producer", Value::Num(SMALL_MSGS as f64)),
+                ("channel_msgs_per_s", Value::Num(ch_s)),
+                ("shm_msgs_per_s", Value::Num(shm_s)),
+                ("tcp_msgs_per_s", Value::Num(tcp_s)),
+                ("channel_bytes_copied", Value::Num(ch_s_copied as f64)),
+                ("shm_bytes_copied", Value::Num(shm_s_copied as f64)),
+                ("tcp_bytes_copied", Value::Num(tcp_s_copied as f64)),
+                ("shm_speedup_x", Value::Num(speedup_small)),
+                ("target_met", Value::Bool(target_met)),
+            ]),
+        ),
+        (
+            "large_payload",
+            obj(vec![
+                ("size_f32", Value::Num(LARGE as f64)),
+                ("msgs_per_producer", Value::Num(LARGE_MSGS as f64)),
+                ("channel_msgs_per_s", Value::Num(ch_l)),
+                ("shm_msgs_per_s", Value::Num(shm_l)),
+                ("tcp_msgs_per_s", Value::Num(tcp_l)),
+                ("channel_bytes_copied", Value::Num(ch_l_copied as f64)),
+                ("shm_bytes_copied", Value::Num(shm_l_copied as f64)),
+                ("tcp_bytes_copied", Value::Num(tcp_l_copied as f64)),
+                ("shm_speedup_x", Value::Num(speedup_large)),
+            ]),
+        ),
+        ("target_met", Value::Bool(target_met)),
+    ]);
+    match std::fs::write("BENCH_transport.json", pal::json::to_string(&transport_json)) {
+        Ok(()) => println!("wrote BENCH_transport.json"),
+        Err(e) => eprintln!("failed to write BENCH_transport.json: {e}"),
+    }
+    target_met
+}
+
 fn main() {
     // `cargo bench --bench comm_overhead -- sched-only` runs just the
     // scheduler comparison, `-- fault-only` just the fault-recovery gate,
-    // `-- mem-only` just the memory-plane gates (all CI gates); no args
-    // runs everything.
+    // `-- mem-only` just the memory-plane gates, `-- transport-only` just
+    // the transport-plane gate (all CI gates); no args runs everything.
     let sched_only = std::env::args().any(|a| a == "sched-only");
     let fault_only = std::env::args().any(|a| a == "fault-only");
     let mem_only = std::env::args().any(|a| a == "mem-only");
+    let transport_only = std::env::args().any(|a| a == "transport-only");
+    if transport_only {
+        // ---- (l) transport plane: backend fan-in throughput gate ----
+        if !run_transport_section() {
+            std::process::exit(1);
+        }
+        return;
+    }
     if mem_only {
         // ---- (k) memory plane: result bytes, upload cache, minibatch ----
         if !run_mem_section() {
@@ -986,6 +1191,10 @@ fn main() {
         }
         // ---- (k) memory plane: result bytes, upload cache, minibatch ----
         if !run_mem_section() {
+            std::process::exit(1);
+        }
+        // ---- (l) transport plane: backend fan-in throughput gate ----
+        if !run_transport_section() {
             std::process::exit(1);
         }
     }

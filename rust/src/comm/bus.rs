@@ -24,11 +24,14 @@
 use std::collections::{HashMap, VecDeque};
 use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::comm::fault::{ArrivalAction, FaultPlan, FaultState};
+use crate::comm::transport::{
+    self, channel::ChannelWorld, shm::ShmWorld, Transport, TransportKind, TransportSender,
+    TransportWorld,
+};
 
 /// A shared, immutable message payload: a range view into an `Arc<[f32]>`.
 ///
@@ -38,9 +41,12 @@ use crate::comm::fault::{ArrivalAction, FaultPlan, FaultState};
 /// re-sent on a relay hop) without touching the heap. [`Payload::slice`]
 /// carves sub-range views that share the same backing buffer, so scattering
 /// the rows of one batch to many destinations is *n* refcount bumps over one
-/// allocation. This is the seam where a real shared-memory or RDMA transport
-/// would plug in: everything above the bus already treats payloads as
-/// immutable shared buffers.
+/// allocation. Everything above the bus treats payloads as immutable shared
+/// buffers — which is exactly what lets the concrete transports slot in
+/// underneath: [`crate::comm::transport::channel`] (the default `mpsc` bus),
+/// [`crate::comm::transport::shm`] (lock-free per-rank-pair rings that hand
+/// off buffer ownership), and [`crate::comm::transport::tcp`] (framed
+/// sockets that serialize at the process boundary only).
 #[derive(Debug, Clone)]
 pub struct Payload {
     buf: Arc<[f32]>,
@@ -247,11 +253,13 @@ pub struct Message {
     pub src: usize,
     pub tag: u32,
     pub data: Payload,
-    /// Simulated arrival time (send time + world latency).
-    ready_at: Instant,
+    /// Simulated arrival time (send time + world latency). Monotonic per
+    /// sender; the shm backend also uses it to merge its per-source rings
+    /// back into global arrival order.
+    pub(crate) ready_at: Instant,
     /// Mailbox arrival stamp (assigned by the receiving endpoint) so
     /// multi-tag receives preserve cross-tag arrival order.
-    seq: u64,
+    pub(crate) seq: u64,
 }
 
 /// Error returned by receive operations.
@@ -316,10 +324,10 @@ impl WorldStats {
     }
 }
 
-/// A communicator over `n` ranks.
+/// A communicator over `n` ranks, generic over the delivery backend (see
+/// [`crate::comm::transport`]).
 pub struct World {
-    senders: Vec<Sender<Message>>,
-    receivers: Vec<Option<Receiver<Message>>>,
+    transport: Box<dyn TransportWorld>,
     latency: Duration,
     stats: Arc<WorldStats>,
     /// Installed fault plan (chaos runs only) and its anchor instant for
@@ -336,18 +344,42 @@ impl World {
 
     /// Create a world where every message arrives `latency` after sending.
     pub fn with_latency(n: usize, latency: Duration) -> Self {
-        let mut senders = Vec::with_capacity(n);
-        let mut receivers = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(Some(rx));
-        }
-        World { senders, receivers, latency, stats: Arc::new(WorldStats::default()), fault: None }
+        Self::with_backend(n, latency, TransportKind::Channel)
+    }
+
+    /// Create a world over an explicit in-process transport backend.
+    /// `TransportKind::Tcp` cannot be built here — a socket world needs the
+    /// listen/connect bootstrap ([`World::listen`] / [`World::connect`]).
+    pub fn with_backend(n: usize, latency: Duration, kind: TransportKind) -> Self {
+        let transport: Box<dyn TransportWorld> = match kind {
+            TransportKind::Channel => Box::new(ChannelWorld::new(n)),
+            TransportKind::Shm => Box::new(ShmWorld::new(n)),
+            TransportKind::Tcp => panic!(
+                "tcp transport needs the socket bootstrap: use World::listen / World::connect"
+            ),
+        };
+        Self::from_parts(transport, latency, Arc::new(WorldStats::default()))
+    }
+
+    /// Assemble a world around an already-constructed backend. The tcp
+    /// bootstrap builds its backend first (it needs the stats handle to
+    /// charge serialization copies) and then wraps it here.
+    pub(crate) fn from_parts(
+        transport: Box<dyn TransportWorld>,
+        latency: Duration,
+        stats: Arc<WorldStats>,
+    ) -> Self {
+        World { transport, latency, stats, fault: None }
     }
 
     pub fn size(&self) -> usize {
-        self.senders.len()
+        self.transport.size()
+    }
+
+    /// Whether `rank` is homed in this process (always true for in-process
+    /// backends; a tcp world homes only the ranks it was bootstrapped with).
+    pub fn owns(&self, rank: usize) -> bool {
+        self.transport.owns(rank)
     }
 
     pub fn stats(&self) -> Arc<WorldStats> {
@@ -366,17 +398,10 @@ impl World {
     /// Take rank `rank`'s endpoint. Each endpoint can be taken exactly once
     /// and moved into that kernel's host thread.
     pub fn endpoint(&mut self, rank: usize) -> Endpoint {
-        let rx = self.receivers[rank].take().expect("endpoint already taken");
-        let senders = self
-            .senders
-            .iter()
-            .enumerate()
-            .map(|(i, s)| if i == rank { None } else { Some(s.clone()) })
-            .collect();
         Endpoint {
             rank,
-            rx,
-            senders,
+            world_n: self.transport.size(),
+            transport: self.transport.take(rank),
             pending: HashMap::new(),
             next_seq: 0,
             latency: self.latency,
@@ -398,12 +423,7 @@ impl World {
     pub fn control_handle(&self, rank: usize) -> ControlHandle {
         ControlHandle {
             rank,
-            senders: self
-                .senders
-                .iter()
-                .enumerate()
-                .map(|(i, s)| if i == rank { None } else { Some(s.clone()) })
-                .collect(),
+            tx: self.transport.control_sender(rank),
             latency: self.latency,
             stats: Arc::clone(&self.stats),
         }
@@ -415,7 +435,7 @@ impl World {
 /// not itself be subject to the dead rank's fault rules.
 pub struct ControlHandle {
     rank: usize,
-    senders: Vec<Option<Sender<Message>>>,
+    tx: Box<dyn TransportSender>,
     latency: Duration,
     stats: Arc<WorldStats>,
 }
@@ -430,18 +450,16 @@ impl ControlHandle {
             self.stats.payload_clones.fetch_add(1, Ordering::Relaxed);
             self.stats.bytes_copied.fetch_add(data.len() as u64 * 4, Ordering::Relaxed);
         }
-        let Some(tx) = &self.senders[dst] else {
-            return true; // self-send: dropped by design, not a dead peer
-        };
-        let ok = tx
-            .send(Message {
+        let ok = self.tx.send(
+            dst,
+            Message {
                 src: self.rank,
                 tag,
                 data: Payload::from(data),
                 ready_at: Instant::now() + self.latency,
                 seq: 0,
-            })
-            .is_ok();
+            },
+        );
         if !ok {
             self.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
         }
@@ -452,10 +470,11 @@ impl ControlHandle {
 /// One rank's communication handle.
 pub struct Endpoint {
     rank: usize,
-    rx: Receiver<Message>,
-    /// Senders to every rank; the slot for our own rank is None so that
-    /// channel disconnection (all peers + World dropped) is observable.
-    senders: Vec<Option<Sender<Message>>>,
+    world_n: usize,
+    /// The delivery backend for this rank (see [`crate::comm::transport`]).
+    /// Self-sends are dropped inside the backend; disconnection (all peers
+    /// + World gone) surfaces from its `recv_deadline`.
+    transport: Box<dyn Transport>,
     /// Received-but-unmatched messages, indexed by tag (MPI-style
     /// out-of-order matching without rescanning unrelated traffic).
     pending: HashMap<u32, VecDeque<Message>>,
@@ -494,7 +513,7 @@ impl Endpoint {
     }
 
     pub fn world_size(&self) -> usize {
-        self.senders.len()
+        self.world_n
     }
 
     /// True when the world has a (non-empty) fault plan installed — chaos
@@ -533,25 +552,15 @@ impl Endpoint {
         // message is lost. During the shutdown drain that's benign by
         // design (drain discipline), but mid-run it means the peer's host
         // died — so it is counted and surfaced to the caller. Sends to
-        // self are not part of the protocol and are dropped silently.
-        let delivered = match &self.senders[dst] {
-            Some(tx) => {
-                let ok = tx
-                    .send(Message {
-                        src: self.rank,
-                        tag,
-                        data,
-                        ready_at: Instant::now() + self.latency,
-                        seq: 0,
-                    })
-                    .is_ok();
-                if !ok {
-                    self.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
-                }
-                ok
-            }
-            None => true,
-        };
+        // self are not part of the protocol and are dropped silently
+        // (inside the backend, which reports them as delivered).
+        let delivered = self.transport.send(
+            dst,
+            Message { src: self.rank, tag, data, ready_at: Instant::now() + self.latency, seq: 0 },
+        );
+        if !delivered {
+            self.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
+        }
         if let Some(f) = &self.fault {
             f.on_send(); // may panic: kill-after-Nth-send fires post-delivery
         }
@@ -618,13 +627,13 @@ impl Endpoint {
         self.enqueue(m);
     }
 
-    fn drain_channel(&mut self) {
+    fn drain_transport(&mut self) {
         if let Some(f) = &self.fault {
             // idle hosts poll receives, so a time-triggered kill fires here
             // even if the rank never sends
             f.check_time(Instant::now());
         }
-        while let Ok(m) = self.rx.try_recv() {
+        while let Some(m) = self.transport.try_recv() {
             self.arrive(m);
         }
     }
@@ -678,7 +687,7 @@ impl Endpoint {
     /// Non-blocking check whether a matching message is available
     /// (the paper's `req_data.Test()`).
     pub fn probe(&mut self, src: Src, tag: u32) -> bool {
-        self.drain_channel();
+        self.drain_transport();
         let now = Instant::now();
         match self.pending.get(&tag) {
             Some(q) => q.iter().any(|m| src.matches(m.src) && m.ready_at <= now),
@@ -711,17 +720,17 @@ impl Endpoint {
         tags: &[u32],
         timeout: Duration,
     ) -> Result<Message, RecvError> {
-        // short cooperative spin before blocking
-        for _ in 0..8 {
-            self.drain_channel();
-            if let Some(m) = self.pop_pending_tags(src, tags) {
-                return Ok(m);
-            }
-            std::thread::yield_now();
+        // short cooperative spin before blocking (shared anti-spin tuning:
+        // transport::spin_then)
+        if let Some(m) = transport::spin_then(|| {
+            self.drain_transport();
+            self.pop_pending_tags(src, tags)
+        }) {
+            return Ok(m);
         }
         let deadline = Instant::now() + timeout;
         loop {
-            self.drain_channel();
+            self.drain_transport();
             if let Some(m) = self.pop_pending_tags(src, tags) {
                 return Ok(m);
             }
@@ -740,10 +749,10 @@ impl Endpoint {
             }
             let wait_until = next_ready.unwrap_or(deadline).min(deadline);
             if wait_until > now {
-                match self.rx.recv_timeout(wait_until - now) {
+                match self.transport.recv_deadline(wait_until) {
                     Ok(m) => self.arrive(m),
-                    Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => {
+                    Err(RecvError::Timeout) => {}
+                    Err(RecvError::Disconnected) => {
                         // Drain pending before giving up.
                         if self.pending_matches(src, tags) {
                             continue;
@@ -757,7 +766,7 @@ impl Endpoint {
 
     /// Non-blocking receive.
     pub fn try_recv(&mut self, src: Src, tag: u32) -> Option<Message> {
-        self.drain_channel();
+        self.drain_transport();
         self.pop_pending(src, tag)
     }
 
@@ -768,7 +777,7 @@ impl Endpoint {
     /// Messages whose simulated arrival time lies in the future stay
     /// queued, preserving the injected-latency semantics.
     pub fn recv_ready_all(&mut self, src: Src, tag: u32) -> Vec<Message> {
-        self.drain_channel();
+        self.drain_transport();
         let now = Instant::now();
         let Some(q) = self.pending.get_mut(&tag) else {
             return Vec::new();

@@ -165,11 +165,37 @@
 //!
 //! What the system tolerates, what degrades, and what aborts is documented
 //! at the crate root (`lib.rs`, "Fault plane").
+//!
+//! ## Transport plane
+//!
+//! Everything above — mailboxes, matching, latency, faults, stats — is
+//! protocol; *delivery* is a pluggable backend behind the
+//! [`transport::Transport`] trait ([`transport::TransportKind`] selects it
+//! per run via the `transport` config key or `pal run --transport=...`):
+//!
+//! * [`transport::channel`] — the original `std::sync::mpsc` bus
+//!   (default; bit-identical to the pre-trait behavior).
+//! * [`transport::shm`] — lock-free shared-memory-style rings, one per
+//!   (src, dst) rank pair; buffer ownership is handed off on send, so the
+//!   hot path has no mutex and no per-message channel-node allocation.
+//! * [`transport::tcp`] — length-prefixed framed sockets over `std::net`
+//!   for true multi-process worlds, bootstrapped with
+//!   [`bus::World::listen`] / [`bus::World::connect`]; payload bytes are
+//!   serialized only at the process boundary and charged to
+//!   [`bus::WorldStats::bytes_copied`].
+//!
+//! Because the backends slot in *under* the mailbox layer, the zero-copy
+//! payload model, fault injection, injected latency, and dead-letter
+//! accounting apply to all of them unchanged; the cross-backend conformance
+//! suite (`rust/tests/test_transport.rs`) pins that contract, including
+//! bit-identical active-learning runs across the in-process backends.
 
 pub mod bus;
 pub mod codec;
 pub mod fault;
 pub mod protocol;
+pub mod transport;
 
 pub use bus::{ControlHandle, Endpoint, Message, Payload, PayloadId, RecvError, World};
 pub use fault::{FaultKill, FaultPlan};
+pub use transport::TransportKind;

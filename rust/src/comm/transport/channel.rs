@@ -1,0 +1,97 @@
+//! The original `std::sync::mpsc` backend: one unbounded channel per
+//! rank, senders cloned per peer. This is the default transport and is
+//! bit-identical in behavior to the pre-trait bus — disconnection is the
+//! channel's own (`recv` errors once every `Sender` clone is dropped),
+//! and a send to a dropped endpoint fails at `Sender::send`.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Instant;
+
+use crate::comm::bus::{Message, RecvError};
+use crate::comm::transport::{Transport, TransportSender, TransportWorld};
+
+pub struct ChannelWorld {
+    senders: Vec<Sender<Message>>,
+    receivers: Vec<Option<Receiver<Message>>>,
+}
+
+impl ChannelWorld {
+    pub fn new(n: usize) -> Self {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+        ChannelWorld { senders, receivers }
+    }
+
+    /// Sender set for `rank`: the slot for the rank's own channel is
+    /// `None` (self-sends are dropped by design), so disconnection — all
+    /// peers + World dropped — stays observable on the rank's receiver.
+    fn senders_for(&self, rank: usize) -> Vec<Option<Sender<Message>>> {
+        self.senders
+            .iter()
+            .enumerate()
+            .map(|(i, s)| if i == rank { None } else { Some(s.clone()) })
+            .collect()
+    }
+}
+
+impl TransportWorld for ChannelWorld {
+    fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    fn take(&mut self, rank: usize) -> Box<dyn Transport> {
+        let rx = self.receivers[rank].take().expect("endpoint already taken");
+        Box::new(ChannelTransport { rx, senders: self.senders_for(rank) })
+    }
+
+    fn control_sender(&self, rank: usize) -> Box<dyn TransportSender> {
+        Box::new(ChannelSender { senders: self.senders_for(rank) })
+    }
+}
+
+fn channel_send(senders: &[Option<Sender<Message>>], dst: usize, m: Message) -> bool {
+    match &senders[dst] {
+        Some(tx) => tx.send(m).is_ok(),
+        None => true, // self-send: dropped by design, not a dead peer
+    }
+}
+
+pub struct ChannelTransport {
+    rx: Receiver<Message>,
+    senders: Vec<Option<Sender<Message>>>,
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, dst: usize, m: Message) -> bool {
+        channel_send(&self.senders, dst, m)
+    }
+
+    fn try_recv(&mut self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Message, RecvError> {
+        // No spin phase here: the endpoint already ran `spin_then` over
+        // its mailbox before parking, and `mpsc` blocks efficiently.
+        match self.rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(m) => Ok(m),
+            Err(RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(RecvError::Disconnected),
+        }
+    }
+}
+
+pub struct ChannelSender {
+    senders: Vec<Option<Sender<Message>>>,
+}
+
+impl TransportSender for ChannelSender {
+    fn send(&self, dst: usize, m: Message) -> bool {
+        channel_send(&self.senders, dst, m)
+    }
+}

@@ -1,0 +1,351 @@
+//! Lock-free shared-memory-style backend: one fixed-capacity ring FIFO
+//! per (src, dst) rank pair, modeled on the shared-memory BTL idiom
+//! (fixed block store + per-pair FIFO; block *ownership* is handed off on
+//! send, so a [`Message`]'s `Arc`-backed payload moves by refcount, never
+//! by copy). There is no mutex and no per-message channel-node
+//! allocation anywhere on the hot path: a send is one CAS on the ring
+//! tail plus a slot write, a receive is one atomic load per non-empty
+//! peer ring plus a slot read.
+//!
+//! Each ring is consumed only by its destination rank (single consumer)
+//! but written with a multi-producer-safe sequence protocol (Vyukov
+//! bounded-queue style), because a rank's [`crate::comm::ControlHandle`]
+//! may produce concurrently with — or after — the rank's own endpoint.
+//!
+//! ## Ordering
+//!
+//! Per (src, dst) FIFO is the ring's own order. *Cross-source* arrival
+//! order — which the channel backend gets for free from its single
+//! receiver queue — is reconstructed by popping the peer ring whose head
+//! message has the earliest send stamp (`Message::ready_at`, monotonic
+//! across threads), with lowest source rank breaking exact ties. The
+//! conformance suite in `rust/tests/test_transport.rs` pins this against
+//! the channel backend.
+//!
+//! ## Liveness and dead letters
+//!
+//! A per-rank state word (untaken → live → dropped) plus a world-open
+//! flag reproduce the channel bus's semantics exactly: sends to a
+//! dropped endpoint fail (dead letter), sends to a not-yet-taken rank of
+//! a live world queue up, and a receiver reports
+//! [`RecvError::Disconnected`] only when the world and every peer
+//! endpoint are gone and its inbound rings are drained. A full ring
+//! applies bounded backpressure (yield-and-retry) instead of allocating;
+//! the retry loop rechecks destination liveness, so it can never spin
+//! against a dead peer.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::comm::bus::{Message, RecvError};
+use crate::comm::transport::{self, Transport, TransportSender, TransportWorld};
+
+/// Slots per rank-pair ring. Power of two; deep enough that the bounded
+/// backpressure path is cold for the workflow's bounded-outstanding
+/// traffic, small enough that a full toy topology (33 ranks → 33² rings)
+/// stays in the tens of megabytes.
+const RING_CAP: usize = 128;
+
+/// How long the park loop naps between polls once the spin phase
+/// (`transport::spin_then`) has run dry. Bounded by the caller deadline.
+const PARK_NAP: Duration = Duration::from_micros(200);
+
+/// Rank lifecycle states (`ShmState::rank_state`).
+const UNTAKEN: usize = 0;
+const LIVE: usize = 1;
+const DROPPED: usize = 2;
+
+struct Slot {
+    /// Vyukov sequence word: `pos` = empty and claimable at `pos`,
+    /// `pos + 1` = full, `pos + cap` = empty for the next lap.
+    seq: AtomicUsize,
+    msg: UnsafeCell<Option<Message>>,
+}
+
+/// One (src, dst) FIFO. Multi-producer (endpoint + control handles of
+/// one src rank), single-consumer (the dst rank's endpoint).
+struct Ring {
+    slots: Box<[Slot]>,
+    /// Consumer cursor. Only the consumer writes it, so a plain store
+    /// suffices; producers never read it (fullness is detected via the
+    /// slot sequence words).
+    head: AtomicUsize,
+    tail: AtomicUsize,
+}
+
+// SAFETY: slot payload access is guarded by the `seq` protocol — a
+// producer writes `msg` only between winning the tail CAS and releasing
+// `seq = pos + 1`; the single consumer reads it only after acquiring
+// that store. No two parties touch a slot's cell concurrently.
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        assert!(cap.is_power_of_two());
+        Ring {
+            slots: (0..cap)
+                .map(|i| Slot { seq: AtomicUsize::new(i), msg: UnsafeCell::new(None) })
+                .collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    /// Multi-producer push; `Err(m)` returns ownership when full.
+    fn push(&self, m: Message) -> Result<(), Message> {
+        let mask = self.slots.len() - 1;
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq.wrapping_sub(pos) as isize;
+            if dif == 0 {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: we own this slot until the seq release.
+                        unsafe { *slot.msg.get() = Some(m) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if dif < 0 {
+                return Err(m); // a full lap behind: ring is full
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Whether the head slot holds a message (consumer only).
+    fn head_full(&self) -> bool {
+        let mask = self.slots.len() - 1;
+        let pos = self.head.load(Ordering::Relaxed);
+        let seq = self.slots[pos & mask].seq.load(Ordering::Acquire);
+        seq.wrapping_sub(pos.wrapping_add(1)) as isize >= 0
+    }
+
+    /// Send stamp of the head message, if any (consumer only).
+    fn peek_ready_at(&self) -> Option<Instant> {
+        if !self.head_full() {
+            return None;
+        }
+        let mask = self.slots.len() - 1;
+        let pos = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[pos & mask];
+        // SAFETY: head_full acquired `seq == pos + 1`, so the producer's
+        // write is visible and no other party touches the slot until the
+        // (single) consumer advances past it.
+        unsafe { (*slot.msg.get()).as_ref().map(|m| m.ready_at) }
+    }
+
+    /// Pop the head message (consumer only).
+    fn pop(&self) -> Option<Message> {
+        if !self.head_full() {
+            return None;
+        }
+        let mask = self.slots.len() - 1;
+        let pos = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[pos & mask];
+        // SAFETY: see peek_ready_at.
+        let m = unsafe { (*slot.msg.get()).take() };
+        self.head.store(pos.wrapping_add(1), Ordering::Relaxed);
+        // hand the slot back to producers, one lap ahead
+        slot.seq.store(pos.wrapping_add(mask).wrapping_add(1), Ordering::Release);
+        m
+    }
+}
+
+struct ShmState {
+    n: usize,
+    /// `rings[src * n + dst]`.
+    rings: Box<[Ring]>,
+    rank_state: Box<[AtomicUsize]>,
+    world_open: AtomicBool,
+}
+
+impl ShmState {
+    fn ring(&self, src: usize, dst: usize) -> &Ring {
+        &self.rings[src * self.n + dst]
+    }
+
+    /// Whether a message for `dst` can still be consumed — its endpoint
+    /// is live, or not yet taken from a still-open world.
+    fn dst_reachable(&self, dst: usize) -> bool {
+        match self.rank_state[dst].load(Ordering::Acquire) {
+            LIVE => true,
+            UNTAKEN => self.world_open.load(Ordering::Acquire),
+            _ => false,
+        }
+    }
+
+    /// Shared send path (endpoint + control handles): FIFO push with
+    /// bounded backpressure, dead letter once `dst` is unreachable.
+    fn send(&self, dst: usize, m: Message) -> bool {
+        let src = m.src;
+        if dst == src {
+            return true; // self-send: dropped by design, not a dead peer
+        }
+        let mut m = m;
+        loop {
+            if !self.dst_reachable(dst) {
+                return false;
+            }
+            match self.ring(src, dst).push(m) {
+                Ok(()) => return true,
+                Err(back) => {
+                    m = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+pub struct ShmWorld {
+    state: Arc<ShmState>,
+}
+
+impl ShmWorld {
+    pub fn new(n: usize) -> Self {
+        let state = ShmState {
+            n,
+            rings: (0..n * n).map(|_| Ring::new(RING_CAP)).collect(),
+            rank_state: (0..n).map(|_| AtomicUsize::new(UNTAKEN)).collect(),
+            world_open: AtomicBool::new(true),
+        };
+        ShmWorld { state: Arc::new(state) }
+    }
+}
+
+impl Drop for ShmWorld {
+    fn drop(&mut self) {
+        // mirrors dropping the channel world's spare sender clones
+        self.state.world_open.store(false, Ordering::Release);
+    }
+}
+
+impl TransportWorld for ShmWorld {
+    fn size(&self) -> usize {
+        self.state.n
+    }
+
+    fn take(&mut self, rank: usize) -> Box<dyn Transport> {
+        let prev = self.state.rank_state[rank].compare_exchange(
+            UNTAKEN,
+            LIVE,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        assert!(prev.is_ok(), "endpoint already taken");
+        Box::new(ShmTransport { rank, state: Arc::clone(&self.state) })
+    }
+
+    fn control_sender(&self, _rank: usize) -> Box<dyn TransportSender> {
+        // routes on Message::src, so no per-rank state is needed
+        Box::new(ShmSender { state: Arc::clone(&self.state) })
+    }
+}
+
+pub struct ShmTransport {
+    rank: usize,
+    state: Arc<ShmState>,
+}
+
+impl ShmTransport {
+    /// Pop the globally-earliest head across this rank's inbound rings
+    /// (send-stamp order; lowest src breaks exact ties via scan order).
+    fn pop_earliest(&self) -> Option<Message> {
+        let me = self.rank;
+        let mut best: Option<(Instant, usize)> = None;
+        for src in 0..self.state.n {
+            if src == me {
+                continue;
+            }
+            if let Some(t) = self.state.ring(src, me).peek_ready_at() {
+                if best.map(|(bt, _)| t < bt).unwrap_or(true) {
+                    best = Some((t, src));
+                }
+            }
+        }
+        best.and_then(|(_, src)| self.state.ring(src, me).pop())
+    }
+
+    /// Disconnected ⇔ the world and every peer endpoint are gone and the
+    /// inbound rings are drained — exactly when an mpsc receiver with a
+    /// `None` self-slot would report disconnection.
+    fn disconnected(&self) -> bool {
+        if self.state.world_open.load(Ordering::Acquire) {
+            return false;
+        }
+        for src in 0..self.state.n {
+            if src == self.rank {
+                continue;
+            }
+            if self.state.rank_state[src].load(Ordering::Acquire) == LIVE {
+                return false;
+            }
+            if self.state.ring(src, self.rank).head_full() {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl Transport for ShmTransport {
+    fn send(&self, dst: usize, m: Message) -> bool {
+        self.state.send(dst, m)
+    }
+
+    fn try_recv(&mut self) -> Option<Message> {
+        self.pop_earliest()
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Message, RecvError> {
+        if let Some(m) = transport::spin_then(|| self.pop_earliest()) {
+            return Ok(m);
+        }
+        loop {
+            if let Some(m) = self.pop_earliest() {
+                return Ok(m);
+            }
+            if self.disconnected() {
+                return Err(RecvError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            std::thread::sleep((deadline - now).min(PARK_NAP));
+        }
+    }
+}
+
+impl Drop for ShmTransport {
+    fn drop(&mut self) {
+        self.state.rank_state[self.rank].store(DROPPED, Ordering::Release);
+        // Free undelivered traffic now (the channel backend frees it when
+        // the receiver drops); producers racing this drain observe the
+        // DROPPED state on their next liveness check.
+        while self.pop_earliest().is_some() {}
+    }
+}
+
+pub struct ShmSender {
+    state: Arc<ShmState>,
+}
+
+impl TransportSender for ShmSender {
+    fn send(&self, dst: usize, m: Message) -> bool {
+        self.state.send(dst, m)
+    }
+}

@@ -1,0 +1,492 @@
+//! Length-prefixed framed socket backend over `std::net`: the transport
+//! that takes a [`crate::comm::World`] across OS process boundaries.
+//!
+//! ## Topology
+//!
+//! One process is the *listener* (in the workflow: the process hosting the
+//! Manager) and every other process *connects* to it — a star. Each process
+//! homes a disjoint set of ranks; frames addressed to a rank the listener
+//! does not home are relayed to the peer that advertised it, so two
+//! follower processes can exchange traffic through the listener without a
+//! full mesh. Bootstrap is [`Bootstrap::bind`] (split from the accept so
+//! tests can bind port 0 and read the real port back) +
+//! [`World::listen`] / [`World::connect`]; `connect` retries with doubling
+//! backoff so process launch order does not matter.
+//!
+//! ## Wire format
+//!
+//! All integers are little-endian `u32`. The handshake each side sends on
+//! connect is `[MAGIC, world_n, k, rank_0 .. rank_{k-1}]` — the ranks the
+//! sender homes. After the handshake the stream is a sequence of frames:
+//! `[src, dst, tag, len]` followed by `len` payload `f32`s (LE bytes).
+//! `Message::ready_at` does not travel — the receiving process re-stamps
+//! arrival time (+ injected latency) when the frame lands, since `Instant`s
+//! are meaningless across processes.
+//!
+//! ## Threads and accounting
+//!
+//! Per peer socket: one *writer* thread (drains an `mpsc` queue of
+//! outbound messages, serializes into a `BufWriter`, flushes when the
+//! queue runs dry) and one *reader* thread (demuxes inbound frames to the
+//! homed ranks' inboxes, or relays them on the listener). Serialization is
+//! the one place this crate physically copies payload bytes per
+//! destination, and it is charged to [`WorldStats::bytes_copied`] /
+//! `payload_clones` by the writer; in-process traffic between two ranks
+//! homed in the same process stays refcount-only, exactly like the channel
+//! backend.
+//!
+//! ## Shutdown
+//!
+//! Cross-process endpoint death cannot be observed synchronously, so
+//! `send` to a remote rank only fails once the carrying socket is gone.
+//! Each bootstrap returns a [`LinkMonitor`]; a process that serves
+//! request/reply hosts (the follower running oracle ranks) watches
+//! [`LinkMonitor::all_peers_closed`] and raises its local down flag when
+//! the far side hangs up — that is the cross-process analogue of the
+//! in-process `Disconnected` drain.
+
+use std::io::{self, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Weak};
+use std::time::{Duration, Instant};
+
+use crate::comm::bus::{Message, Payload, RecvError, World, WorldStats};
+use crate::comm::transport::{Transport, TransportSender, TransportWorld};
+
+/// Handshake magic: "PAL1".
+const MAGIC: u32 = 0x50414C31;
+
+/// First connect-retry delay; doubles per attempt up to [`BACKOFF_MAX`].
+const BACKOFF_START: Duration = Duration::from_millis(10);
+const BACKOFF_MAX: Duration = Duration::from_millis(200);
+
+/// A bound-but-not-yet-accepting listener. Binding is split from
+/// [`World::listen`] so the caller can bind `127.0.0.1:0`, read the real
+/// port with [`Bootstrap::local_addr`], and hand it to the follower
+/// processes before blocking in accept.
+pub struct Bootstrap {
+    listener: TcpListener,
+}
+
+impl Bootstrap {
+    pub fn bind(addr: &str) -> io::Result<Bootstrap> {
+        Ok(Bootstrap { listener: TcpListener::bind(addr)? })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+}
+
+/// Watch over the process's peer links (see module docs, "Shutdown").
+#[derive(Clone)]
+pub struct LinkMonitor {
+    peers_open: Arc<AtomicUsize>,
+}
+
+impl LinkMonitor {
+    pub fn peers_open(&self) -> usize {
+        self.peers_open.load(Ordering::Acquire)
+    }
+
+    /// True once every peer socket has closed — no remote rank can be
+    /// reached or heard from again.
+    pub fn all_peers_closed(&self) -> bool {
+        self.peers_open() == 0
+    }
+}
+
+/// One outbound frame, still unserialized (the payload is a refcounted
+/// view until the writer thread hits the socket).
+struct WireMsg {
+    src: usize,
+    dst: usize,
+    tag: u32,
+    data: Payload,
+}
+
+struct Peer {
+    tx: Sender<WireMsg>,
+}
+
+struct TcpState {
+    n: usize,
+    latency: Duration,
+    stats: Arc<WorldStats>,
+    /// Ranks homed in this process.
+    local: Vec<bool>,
+    /// Inbox senders for homed ranks (the paired receiver lives in that
+    /// rank's [`TcpTransport`]).
+    inbox_tx: Vec<Option<Sender<Message>>>,
+    peers: Vec<Peer>,
+    /// rank → peer index carrying it (remote ranks only).
+    route: Vec<Option<usize>>,
+}
+
+impl TcpState {
+    /// Deliver locally or enqueue on the carrying peer's writer. Shared by
+    /// endpoint transports and control senders.
+    fn send(&self, dst: usize, m: Message) -> bool {
+        if dst == m.src {
+            return true; // self-send: dropped by design, not a dead peer
+        }
+        if self.local[dst] {
+            return match &self.inbox_tx[dst] {
+                Some(tx) => tx.send(m).is_ok(),
+                None => false,
+            };
+        }
+        let Some(p) = self.route[dst].map(|i| &self.peers[i]) else {
+            return false;
+        };
+        p.tx.send(WireMsg { src: m.src, dst, tag: m.tag, data: m.data }).is_ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire helpers
+
+fn write_u32s<W: Write>(w: &mut W, vals: &[u32]) -> io::Result<()> {
+    for &v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Send our handshake, read and validate the peer's; returns the ranks the
+/// peer homes.
+fn handshake(stream: &mut TcpStream, n: usize, local: &[usize]) -> io::Result<Vec<usize>> {
+    let mut ours = vec![MAGIC, n as u32, local.len() as u32];
+    ours.extend(local.iter().map(|&r| r as u32));
+    write_u32s(stream, &ours)?;
+    stream.flush()?;
+    if read_u32(stream)? != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad transport handshake magic"));
+    }
+    if read_u32(stream)? as usize != n {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "world size mismatch in handshake"));
+    }
+    let k = read_u32(stream)? as usize;
+    let mut ranks = Vec::with_capacity(k);
+    for _ in 0..k {
+        let r = read_u32(stream)? as usize;
+        if r >= n {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "handshake rank out of range"));
+        }
+        ranks.push(r);
+    }
+    Ok(ranks)
+}
+
+/// Writer thread body: serialize queued frames, flush when the queue runs
+/// dry, exit when the queue disconnects or the socket dies. Serialization
+/// is charged as the physical copy it is.
+fn writer_loop(stream: TcpStream, rx: Receiver<WireMsg>, stats: Arc<WorldStats>) {
+    let mut w = BufWriter::new(stream);
+    let mut scratch: Vec<u8> = Vec::new();
+    'link: while let Ok(m) = rx.recv() {
+        let mut next = Some(m);
+        while let Some(m) = next {
+            let data = m.data.as_slice();
+            scratch.clear();
+            scratch.reserve(16 + data.len() * 4);
+            for v in [m.src as u32, m.dst as u32, m.tag, data.len() as u32] {
+                scratch.extend_from_slice(&v.to_le_bytes());
+            }
+            for &f in data {
+                scratch.extend_from_slice(&f.to_le_bytes());
+            }
+            if !data.is_empty() {
+                stats.payload_clones.fetch_add(1, Ordering::Relaxed);
+                stats.bytes_copied.fetch_add(data.len() as u64 * 4, Ordering::Relaxed);
+            }
+            if w.write_all(&scratch).is_err() {
+                break 'link;
+            }
+            next = rx.try_recv().ok();
+        }
+        if w.flush().is_err() {
+            break 'link;
+        }
+    }
+    // The queue disconnected (this process's world is gone) or the socket
+    // died. Send FIN so the remote reader sees EOF even while our own
+    // reader thread still holds a clone of the socket open.
+    let _ = w.flush();
+    let _ = w.get_ref().shutdown(std::net::Shutdown::Write);
+}
+
+/// Reader thread body: demux inbound frames to homed ranks (stamping
+/// arrival + injected latency) or relay them toward the peer that homes
+/// the destination (listener only). Decrements the peer count on exit so
+/// the [`LinkMonitor`] sees the hangup.
+///
+/// Holds the state only *weakly*: once every world/endpoint/control handle
+/// in this process is gone the state must drop (that is what disconnects
+/// the writer queues and closes the sockets), so a blocked reader must not
+/// keep it alive.
+fn reader_loop(mut stream: TcpStream, state: Weak<TcpState>, peers_open: Arc<AtomicUsize>) {
+    loop {
+        let mut hdr = [0u8; 16];
+        if stream.read_exact(&mut hdr).is_err() {
+            break;
+        }
+        let word = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap());
+        let (src, dst, tag, len) =
+            (word(0) as usize, word(1) as usize, word(2), word(3) as usize);
+        let mut bytes = vec![0u8; len * 4];
+        if stream.read_exact(&mut bytes).is_err() {
+            break;
+        }
+        let Some(state) = state.upgrade() else {
+            break; // our side of the world is gone; nothing to deliver to
+        };
+        if src >= state.n || dst >= state.n {
+            break; // corrupt frame: drop the link
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if state.local[dst] {
+            let m = Message {
+                src,
+                tag,
+                data: Payload::from(floats),
+                ready_at: Instant::now() + state.latency,
+                seq: 0,
+            };
+            let delivered = match &state.inbox_tx[dst] {
+                Some(tx) => tx.send(m).is_ok(),
+                None => false,
+            };
+            if !delivered {
+                state.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
+            }
+        } else if let Some(p) = state.route[dst].map(|i| &state.peers[i]) {
+            // star relay: forward toward the process homing `dst`
+            let _ = p.tx.send(WireMsg { src, dst, tag, data: Payload::from(floats) });
+        }
+    }
+    peers_open.fetch_sub(1, Ordering::AcqRel);
+}
+
+// ---------------------------------------------------------------------------
+// backend types
+
+pub struct TcpWorld {
+    state: Arc<TcpState>,
+    inbox_rx: Vec<Option<Receiver<Message>>>,
+}
+
+impl TransportWorld for TcpWorld {
+    fn size(&self) -> usize {
+        self.state.n
+    }
+
+    fn take(&mut self, rank: usize) -> Box<dyn Transport> {
+        assert!(self.state.local[rank], "rank {rank} is not homed in this process");
+        let rx = self.inbox_rx[rank].take().expect("endpoint already taken");
+        Box::new(TcpTransport { rx, state: Arc::clone(&self.state) })
+    }
+
+    fn control_sender(&self, _rank: usize) -> Box<dyn TransportSender> {
+        Box::new(TcpSender { state: Arc::clone(&self.state) })
+    }
+
+    fn owns(&self, rank: usize) -> bool {
+        self.state.local[rank]
+    }
+}
+
+pub struct TcpTransport {
+    rx: Receiver<Message>,
+    state: Arc<TcpState>,
+}
+
+impl Transport for TcpTransport {
+    fn send(&self, dst: usize, m: Message) -> bool {
+        self.state.send(dst, m)
+    }
+
+    fn try_recv(&mut self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Message, RecvError> {
+        match self.rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(m) => Ok(m),
+            Err(RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(RecvError::Disconnected),
+        }
+    }
+}
+
+pub struct TcpSender {
+    state: Arc<TcpState>,
+}
+
+impl TransportSender for TcpSender {
+    fn send(&self, dst: usize, m: Message) -> bool {
+        self.state.send(dst, m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bootstrap
+
+fn build_state(
+    n: usize,
+    local: &[usize],
+    latency: Duration,
+    stats: &Arc<WorldStats>,
+    peers: Vec<Peer>,
+    route: Vec<Option<usize>>,
+) -> (Arc<TcpState>, Vec<Option<Receiver<Message>>>) {
+    let mut is_local = vec![false; n];
+    for &r in local {
+        is_local[r] = true;
+    }
+    let mut inbox_tx: Vec<Option<Sender<Message>>> = (0..n).map(|_| None).collect();
+    let mut inbox_rx: Vec<Option<Receiver<Message>>> = (0..n).map(|_| None).collect();
+    for &r in local {
+        let (tx, rx) = channel();
+        inbox_tx[r] = Some(tx);
+        inbox_rx[r] = Some(rx);
+    }
+    let state = Arc::new(TcpState {
+        n,
+        latency,
+        stats: Arc::clone(stats),
+        local: is_local,
+        inbox_tx,
+        peers,
+        route,
+    });
+    (state, inbox_rx)
+}
+
+impl World {
+    /// Listener-side bootstrap of a tcp world over `n` ranks, homing
+    /// `local` in this process. Blocks accepting connections until every
+    /// non-local rank is advertised by some peer, then starts the per-peer
+    /// reader/writer threads. Returns the world plus the process's
+    /// [`LinkMonitor`].
+    pub fn listen(
+        bootstrap: Bootstrap,
+        n: usize,
+        local: &[usize],
+        latency: Duration,
+    ) -> io::Result<(World, LinkMonitor)> {
+        let stats = Arc::new(WorldStats::default());
+        let mut covered = vec![false; n];
+        for &r in local {
+            covered[r] = true;
+        }
+        let mut route: Vec<Option<usize>> = vec![None; n];
+        let mut conns: Vec<TcpStream> = Vec::new();
+        while covered.iter().any(|&c| !c) {
+            let (mut stream, _) = bootstrap.listener.accept()?;
+            stream.set_nodelay(true).ok();
+            let ranks = handshake(&mut stream, n, local)?;
+            let idx = conns.len();
+            for r in ranks {
+                if covered[r] {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("rank {r} advertised by two processes"),
+                    ));
+                }
+                covered[r] = true;
+                route[r] = Some(idx);
+            }
+            conns.push(stream);
+        }
+        finish(n, local, latency, stats, conns, route)
+    }
+
+    /// Connector-side bootstrap: dial the listener at `addr` (retrying
+    /// with backoff until `timeout`), home `local` in this process, and
+    /// route every other rank through the listener (star relay).
+    pub fn connect(
+        addr: &str,
+        n: usize,
+        local: &[usize],
+        latency: Duration,
+        timeout: Duration,
+    ) -> io::Result<(World, LinkMonitor)> {
+        let deadline = Instant::now() + timeout;
+        let mut backoff = BACKOFF_START;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() + backoff > deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(BACKOFF_MAX);
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        handshake(&mut stream, n, local)?;
+        let stats = Arc::new(WorldStats::default());
+        let mut route: Vec<Option<usize>> = vec![None; n];
+        let local_set: Vec<bool> = {
+            let mut v = vec![false; n];
+            for &r in local {
+                v[r] = true;
+            }
+            v
+        };
+        for (r, slot) in route.iter_mut().enumerate() {
+            if !local_set[r] {
+                *slot = Some(0);
+            }
+        }
+        finish(n, local, latency, stats, vec![stream], route)
+    }
+}
+
+/// Shared tail of both bootstraps: wire up writer queues, build the state,
+/// spawn the per-peer threads (readers last, so the relay table they use
+/// is complete), assemble the [`World`].
+fn finish(
+    n: usize,
+    local: &[usize],
+    latency: Duration,
+    stats: Arc<WorldStats>,
+    conns: Vec<TcpStream>,
+    route: Vec<Option<usize>>,
+) -> io::Result<(World, LinkMonitor)> {
+    let mut peers = Vec::with_capacity(conns.len());
+    let mut writer_parts = Vec::with_capacity(conns.len());
+    for stream in &conns {
+        let (tx, rx) = channel::<WireMsg>();
+        peers.push(Peer { tx });
+        writer_parts.push((stream.try_clone()?, rx));
+    }
+    let (state, inbox_rx) = build_state(n, local, latency, &stats, peers, route);
+    for (stream, rx) in writer_parts {
+        let stats = Arc::clone(&stats);
+        std::thread::spawn(move || writer_loop(stream, rx, stats));
+    }
+    let peers_open = Arc::new(AtomicUsize::new(conns.len()));
+    for stream in conns {
+        let state = Arc::downgrade(&state);
+        let peers_open = Arc::clone(&peers_open);
+        std::thread::spawn(move || reader_loop(stream, state, peers_open));
+    }
+    let world =
+        World::from_parts(Box::new(TcpWorld { state, inbox_rx }), latency, stats);
+    Ok((world, LinkMonitor { peers_open }))
+}

@@ -4,6 +4,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context};
 
+use crate::comm::TransportKind;
 use crate::json::{self, obj, Value};
 
 /// Workflow-level stop criteria (ours; the paper leaves stopping to
@@ -247,6 +248,10 @@ pub struct AlSetting {
     /// labeling continues until the stop fires — the paper's behavior, and
     /// what the equal-work speedup benches rely on.
     pub strict_label_budget: bool,
+    /// Delivery backend for the rank bus (`"channel"` | `"shm"` |
+    /// `"tcp"`); see [`crate::comm::transport`]. `tcp` additionally needs
+    /// the multi-process bootstrap (leader/follower entry points).
+    pub transport: TransportKind,
 }
 
 impl Default for AlSetting {
@@ -274,6 +279,7 @@ impl Default for AlSetting {
             sched: SchedSetting::default(),
             committee_size: None,
             strict_label_budget: false,
+            transport: TransportKind::Channel,
         }
     }
 }
@@ -505,6 +511,12 @@ impl AlSetting {
         if let Some(x) = v.get("strict_label_budget").as_bool() {
             s.strict_label_budget = x;
         }
+        if let Some(x) = v.get("transport").as_str() {
+            s.transport = match TransportKind::parse(x) {
+                Ok(k) => k,
+                Err(e) => bail!("{e}"),
+            };
+        }
         s.validate()?;
         Ok(s)
     }
@@ -586,6 +598,7 @@ impl AlSetting {
             ("sched_drain_factor", Value::Num(self.sched.drain_factor)),
             ("committee_size", Value::Num(self.committee() as f64)),
             ("strict_label_budget", Value::Bool(self.strict_label_budget)),
+            ("transport", Value::Str(self.transport.as_str().into())),
         ])
     }
 }
@@ -635,6 +648,30 @@ mod tests {
         assert_eq!(s2.gene_process, s.gene_process);
         assert_eq!(s2.retrain_size, s.retrain_size);
         assert_eq!(s2.fixed_size_data, s.fixed_size_data);
+    }
+
+    #[test]
+    fn transport_key_roundtrips_and_rejects_unknown() {
+        // default stays the channel bus
+        assert_eq!(AlSetting::default().transport, TransportKind::Channel);
+        for (spelling, kind) in [
+            ("channel", TransportKind::Channel),
+            ("shm", TransportKind::Shm),
+            ("tcp", TransportKind::Tcp),
+        ] {
+            let s =
+                AlSetting::from_json(&format!(r#"{{"transport": "{spelling}"}}"#)).unwrap();
+            assert_eq!(s.transport, kind);
+            // round-trip through to_json preserves the spelling
+            let s2 = AlSetting::from_json(&json::to_string(&s.to_json())).unwrap();
+            assert_eq!(s2.transport, kind);
+        }
+        // unknown value is a loud error naming the accepted spellings
+        let err = AlSetting::from_json(r#"{"transport": "carrier-pigeon"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown transport"), "got: {err}");
+        assert!(err.contains("channel|shm|tcp"), "got: {err}");
     }
 
     #[test]

@@ -12,17 +12,18 @@
 //! so its death is the run's death.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
 use crate::comm::protocol::TAG_RANK_DOWN;
-use crate::comm::{ControlHandle, FaultKill, FaultPlan, World};
+use crate::comm::transport::tcp::Bootstrap;
+use crate::comm::{ControlHandle, FaultKill, FaultPlan, TransportKind, World};
 use crate::config::{topology, AlSetting, Topology};
 use crate::coordinator::{exchange, hosts, manager};
-use crate::kernels::{KernelSet, Mode};
+use crate::kernels::{KernelSet, Mode, OracleFactory};
 use crate::telemetry::{FaultReport, KernelTelemetry, RunReport};
 
 pub use crate::kernels::KernelSet as Kernels;
@@ -81,11 +82,134 @@ impl Workflow {
 
     /// Run the five-kernel workflow to completion. Blocks until every rank
     /// has drained and joined; returns the aggregated report.
+    ///
+    /// Serves the in-process transports (`channel`, `shm` — selected by
+    /// `setting.transport`); a `tcp` setting is refused here because a
+    /// socket world spans processes: use [`Workflow::run_tcp_leader`] in
+    /// the process hosting the coordinators and
+    /// [`Workflow::run_tcp_follower`] in each oracle process.
     pub fn run(&self, kernels: KernelSet) -> anyhow::Result<RunReport> {
         self.setting.validate()?;
         kernels.validate(&self.setting)?;
+        if self.setting.transport == TransportKind::Tcp {
+            anyhow::bail!(
+                "transport \"tcp\" spans processes: run the coordinator side with \
+                 Workflow::run_tcp_leader and each oracle process with \
+                 Workflow::run_tcp_follower"
+            );
+        }
         let topo = Topology::new(&self.setting);
-        let mut world = World::with_latency(topo.n_ranks(), self.setting.comm_latency);
+        let world =
+            World::with_backend(topo.n_ranks(), self.setting.comm_latency, self.setting.transport);
+        self.run_on(world, kernels, &topo)
+    }
+
+    /// Leader-side tcp run: this process homes every rank *except* the
+    /// oracles (Manager, Exchange, predictors, trainers, generators) and
+    /// blocks in accept until follower processes have advertised all
+    /// oracle ranks — the paper's deployment shape, where the expensive
+    /// oracle evaluations live on other nodes. `kernels.oracles` must be
+    /// empty; the followers bring the oracles.
+    pub fn run_tcp_leader(
+        &self,
+        kernels: KernelSet,
+        bootstrap: Bootstrap,
+    ) -> anyhow::Result<RunReport> {
+        self.setting.validate()?;
+        anyhow::ensure!(
+            kernels.oracles.is_empty(),
+            "tcp leader homes no oracle ranks; follower processes bring the oracles"
+        );
+        let topo = Topology::new(&self.setting);
+        let orcl = topo.orcl_ranks();
+        let local: Vec<usize> =
+            (0..topo.n_ranks()).filter(|r| !orcl.contains(r)).collect();
+        let (world, _monitor) =
+            World::listen(bootstrap, topo.n_ranks(), &local, self.setting.comm_latency)
+                .context("tcp leader bootstrap")?;
+        self.run_on(world, kernels, &topo)
+    }
+
+    /// Follower-side tcp run: homes this process's oracle ranks, serves
+    /// oracle requests until the leader hangs up (the cross-process
+    /// shutdown signal — see [`crate::comm::transport::tcp::LinkMonitor`]),
+    /// then drains and returns. `oracles` must staff *all* oracle ranks of
+    /// the topology (single-follower deployment; multi-follower splits
+    /// ride the same bootstrap with disjoint rank sets).
+    pub fn run_tcp_follower(
+        setting: &AlSetting,
+        oracles: Vec<OracleFactory>,
+        addr: &str,
+        timeout: Duration,
+    ) -> anyhow::Result<()> {
+        setting.validate()?;
+        let topo = Topology::new(setting);
+        let orcl = topo.orcl_ranks();
+        anyhow::ensure!(
+            oracles.len() == orcl.len(),
+            "follower staffs {} oracle ranks, got {} factories",
+            orcl.len(),
+            oracles.len()
+        );
+        let (mut world, monitor) =
+            World::connect(addr, topo.n_ranks(), &orcl, setting.comm_latency, timeout)
+                .context("tcp follower bootstrap")?;
+        let down = Arc::new(AtomicBool::new(false));
+        let done = Arc::new(AtomicBool::new(false));
+        // Bridge "all peer sockets closed" onto the local shutdown flag:
+        // the oracle hosts' request loop polls `down` between receives, so
+        // the leader hanging up ends the follower like a local shutdown.
+        let watcher = {
+            let down = down.clone();
+            let done = done.clone();
+            let monitor = monitor.clone();
+            std::thread::spawn(move || {
+                while !done.load(Ordering::Acquire) && !monitor.all_peers_closed() {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                down.store(true, Ordering::Release);
+            })
+        };
+        let mut handles = Vec::new();
+        for (i, (rank, factory)) in orcl.into_iter().zip(oracles).enumerate() {
+            let ep = world.endpoint(rank);
+            let ctrl = world.control_handle(rank);
+            let setting = setting.clone();
+            let down = down.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pal-orcl-{i}"))
+                    .spawn(move || {
+                        supervised(ctrl, "oracle", rank, move || {
+                            hosts::oracle_host(ep, factory(), &setting, down)
+                        })
+                    })
+                    .context("spawning oracle")?,
+            );
+        }
+        drop(world);
+        for h in handles {
+            let _ = h.join();
+        }
+        done.store(true, Ordering::Release);
+        let _ = watcher.join();
+        Ok(())
+    }
+
+    /// Shared body of every entry point: spawn a supervised host for each
+    /// rank *homed in this world* (an in-process world homes all of them;
+    /// a tcp world only its bootstrapped subset), run the Manager on the
+    /// caller thread, and aggregate the report.
+    fn run_on(
+        &self,
+        mut world: World,
+        kernels: KernelSet,
+        topo: &Topology,
+    ) -> anyhow::Result<RunReport> {
+        anyhow::ensure!(
+            world.owns(topology::MANAGER) && world.owns(topology::EXCHANGE),
+            "the coordinator ranks must be homed in this process"
+        );
         if let Some(plan) = &self.fault_plan {
             // must precede endpoint handout: each endpoint compiles its
             // rank's slice of the plan when it is taken from the world
@@ -96,6 +220,14 @@ impl Workflow {
         let t0 = Instant::now();
 
         let KernelSet { generators, oracles, model, utils } = kernels;
+        // Only oracle ranks may live in another process (tcp follower);
+        // everything else must be spawnable right here.
+        for r in topo.pred_ranks().into_iter().chain(topo.train_ranks()).chain(topo.gene_ranks()) {
+            anyhow::ensure!(
+                world.owns(r),
+                "rank {r} must be homed in this process (only oracle ranks may be remote)"
+            );
+        }
 
         let mut tel_handles: Vec<std::thread::JoinHandle<KernelTelemetry>> = Vec::new();
 
@@ -187,13 +319,16 @@ impl Workflow {
             );
         }
 
-        // Oracle hosts
-        for (i, (rank, factory)) in topo
-            .orcl_ranks()
-            .into_iter()
-            .zip(oracles.into_iter())
-            .enumerate()
-        {
+        // Oracle hosts (only those homed here — a tcp leader homes none)
+        let owned_orcl: Vec<usize> =
+            topo.orcl_ranks().into_iter().filter(|&r| world.owns(r)).collect();
+        anyhow::ensure!(
+            owned_orcl.len() == oracles.len(),
+            "kernel set has {} oracles, this process homes {} oracle ranks",
+            oracles.len(),
+            owned_orcl.len()
+        );
+        for (i, (rank, factory)) in owned_orcl.into_iter().zip(oracles.into_iter()).enumerate() {
             let ep = world.endpoint(rank);
             let ctrl = world.control_handle(rank);
             let setting = self.setting.clone();
@@ -215,7 +350,7 @@ impl Workflow {
         let manager_ep = world.endpoint(topology::MANAGER);
         drop(world); // release the spare sender clones held by World
         let (manager_tel, outcome) =
-            manager::manager_host(manager_ep, utils(), &self.setting, &topo, down);
+            manager::manager_host(manager_ep, utils(), &self.setting, topo, down);
 
         let mut report = RunReport {
             al_iterations: 0,

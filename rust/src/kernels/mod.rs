@@ -13,5 +13,6 @@ pub mod oracles;
 pub mod traits;
 
 pub use traits::{
-    Generator, KernelSet, Mode, Model, ModelFactory, Oracle, Utils,
+    Generator, GeneratorFactory, KernelSet, Mode, Model, ModelFactory, Oracle, OracleFactory,
+    Utils,
 };

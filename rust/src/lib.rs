@@ -216,6 +216,36 @@
 //! as the shutdown authority. See [`comm`] for the injection layer and
 //! `rust/tests/test_fault_plane.rs` for the chaos matrix.
 //!
+//! ## Transport plane
+//!
+//! The bus is now a *protocol* over a pluggable delivery layer: tag/src
+//! matching, latency visibility, gathers, fault injection, and
+//! [`comm::bus::WorldStats`] accounting all live in [`comm::bus`], while
+//! raw rank-to-rank delivery sits behind the [`comm::transport`] traits.
+//! Three backends ship (`AlSetting { transport, .. }`, JSON key
+//! `"transport"`, CLI `pal run --transport=`):
+//!
+//! * **`channel`** (default) — the original `std::sync::mpsc` bus,
+//!   bit-identical to every prior release;
+//! * **`shm`** — lock-free shared-memory idiom: one bounded Vyukov ring
+//!   per rank pair, payload ownership handed off on send (fan-out stays
+//!   refcount-only), no mutex and no per-message allocation on the hot
+//!   path, receivers spin briefly ([`comm::transport::spin_then`]) before
+//!   parking;
+//! * **`tcp`** — length-prefixed frames over `std::net` with per-peer
+//!   writer threads and a demux reader, `World::listen`/`World::connect`
+//!   bootstrap, and a star relay through the listener, so a Workflow can
+//!   span real OS processes (`Workflow::run_tcp_leader` +
+//!   `Workflow::run_tcp_follower` put oracle ranks in follower
+//!   processes).
+//!
+//! The conformance contract is behavioral equivalence: the deterministic
+//! Müller–Brown scenario ([`sim::scenario`]) must produce **bit-identical**
+//! labels, retrain rounds, and losses on every backend
+//! (`rust/tests/test_transport.rs`, including a two-process tcp e2e), and
+//! `BENCH_transport.json` gates the shm rings at ≥ 1.5× the channel
+//! backend's small-payload fan-in rate with zero payload bytes copied.
+//!
 //! ## Performance
 //!
 //! Perf-tracking benches write machine-readable JSON next to their

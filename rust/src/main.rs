@@ -30,7 +30,8 @@ fn main() {
                  info                       artifact + topology summary\n\
                  speedup [--n N --p P]      SI §S2 analytic speedup table\n\
                  run [--config f.json]      run the SI toy workflow\n\
-                 \x20   [--iters N]          bound exchange iterations (default 50)"
+                 \x20   [--iters N]          bound exchange iterations (default 50)\n\
+                 \x20   [--transport T]      rank bus backend: channel|shm|tcp"
             );
             if cmd == "help" { 0 } else { 2 }
         }
@@ -106,6 +107,15 @@ fn cmd_run(args: &Args) -> i32 {
     let iters = args.get_u64("iters", 50);
     setting.stop.max_iterations = Some(iters);
     setting.stop.max_wall = Some(Duration::from_secs(args.get_u64("max-wall-s", 120)));
+    if let Some(t) = args.get("transport") {
+        setting.transport = match pal::comm::TransportKind::parse(t) {
+            Ok(k) => k,
+            Err(e) => {
+                eprintln!("bad --transport: {e}");
+                return 2;
+            }
+        };
+    }
 
     let dir = default_artifacts_dir();
     let manifest = match Manifest::load(&dir) {

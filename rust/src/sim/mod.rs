@@ -1,4 +1,7 @@
-//! Analytic models + synthetic workloads for the speedup experiments.
+//! Analytic models + synthetic workloads for the speedup experiments,
+//! plus the deterministic Müller–Brown end-to-end scenario shared by the
+//! determinism and transport-conformance suites.
 
+pub mod scenario;
 pub mod speedup;
 pub mod workload;

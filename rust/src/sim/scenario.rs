@@ -1,0 +1,266 @@
+//! Deterministic Müller–Brown active-learning scenario.
+//!
+//! A full Manager + Exchange workflow whose labels, retrain rounds, and
+//! final training losses are **bit-stable across runs** — the shared
+//! harness behind `rust/tests/test_determinism.rs` (oracle-plane and
+//! memory-plane pins) and `rust/tests/test_transport.rs` (cross-backend
+//! bit-identity, TCP loopback e2e).
+//!
+//! Determinism is by construction, not by luck:
+//!
+//! * generators are fixed-seed walkers that ignore `data_to_gene`, so
+//!   trajectories don't depend on when weight syncs land;
+//! * selection is a pure function of the *inputs* (Müller–Brown energy
+//!   threshold), not of the committee's predictions;
+//! * batches are full (`batch.max_size = gene_process`, long deadline) and
+//!   items are ordered by origin rank inside a batch, so batch composition
+//!   is arrival-order independent;
+//! * a single oracle labels in dispatch order, and the Manager's strict
+//!   label budget (`strict_label_budget`) dispatches exactly
+//!   `stop.max_labels` inputs — never an in-flight extra;
+//! * trainers run fixed-epoch rounds (interrupts ignored), so the final
+//!   loss is a pure function of the (deterministic) labeled dataset.
+//!
+//! Because no part of the recipe depends on message *timing* — only on
+//! per-(src, tag) FIFO order, which every transport backend guarantees —
+//! the same scenario must produce bit-identical results over the
+//! `channel`, `shm`, and (single-host) `tcp` transports. That is exactly
+//! the cross-backend conformance contract.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::TransportKind;
+use crate::config::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
+use crate::coordinator::selection::committee_mean;
+use crate::coordinator::workflow::Workflow;
+use crate::kernels::oracles::PesOracle;
+use crate::kernels::{Generator, KernelSet, Mode, Model, Oracle, OracleFactory, Utils};
+use crate::potential::{MullerBrown, Pes};
+use crate::rng::Rng;
+use crate::sim::workload::SyntheticModel;
+use crate::telemetry::RunReport;
+
+/// Wire layout for a 1-"atom" PES with 1 global and 1 state:
+/// input `[x, y, z, g, s]`, label `[e, fx, fy, fz]`.
+pub const IN_DIM: usize = 5;
+/// Label width: `[e, fx, fy, fz]`.
+pub const OUT_DIM: usize = 4;
+
+/// Generator count (and batch size — full batches only).
+pub const GENS: usize = 4;
+/// Committee members (= trainer count).
+pub const MEMBERS: usize = 2;
+/// Prediction shards per committee member.
+pub const SHARDS: usize = 2;
+/// Strict oracle-label budget for the run.
+pub const LABELS: u64 = 12;
+/// Labeled pairs per retrain flush.
+pub const RETRAIN_SIZE: usize = 4;
+
+/// Fixed-seed random walker over the Müller–Brown landscape. Ignores the
+/// checked predictions entirely: the trajectory is a pure function of the
+/// seed, which is what makes the whole loop replayable.
+pub struct MbWalker {
+    rng: Rng,
+    pos: [f32; 2],
+}
+
+impl MbWalker {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let pes = MullerBrown::default();
+        let x0 = pes.initial_geometry(&mut rng);
+        MbWalker { rng, pos: [x0[0], x0[1]] }
+    }
+}
+
+impl Generator for MbWalker {
+    fn generate_new_data(&mut self, _data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
+        self.pos[0] += (self.rng.normal() * 0.08) as f32;
+        self.pos[1] += (self.rng.normal() * 0.08) as f32;
+        (false, vec![self.pos[0], self.pos[1], 0.0, 0.0, 1.0])
+    }
+}
+
+/// Selection that depends only on the *input*: configurations whose
+/// Müller–Brown energy exceeds `threshold` go to the oracle (high-energy =
+/// poorly-sampled transition regions). The checked payloads are the
+/// committee means, but nothing downstream consumes them.
+pub struct EnergySelectUtils {
+    pub pes: MullerBrown,
+    pub threshold: f64,
+    pub max_per_batch: usize,
+}
+
+impl Utils for EnergySelectUtils {
+    fn prediction_check(
+        &mut self,
+        list_data_to_pred: &[Vec<f32>],
+        preds_per_model: &[Vec<Vec<f32>>],
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let checked = committee_mean(preds_per_model);
+        let to_orcl: Vec<Vec<f32>> = list_data_to_pred
+            .iter()
+            .filter(|x| self.pes.energy(&x[..3]) > self.threshold)
+            .take(self.max_per_batch)
+            .cloned()
+            .collect();
+        (to_orcl, checked)
+    }
+}
+
+/// Fixed-epoch committee member: like the synthetic model but immune to
+/// retraining interrupts, so every round runs the same number of epochs.
+pub struct FixedEpochModel(pub SyntheticModel);
+
+impl Model for FixedEpochModel {
+    fn predict(&mut self, list: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.0.predict(list)
+    }
+    fn update(&mut self, w: &[f32]) {
+        self.0.update(w)
+    }
+    fn get_weight(&self) -> Vec<f32> {
+        self.0.get_weight()
+    }
+    fn get_weight_size(&self) -> usize {
+        self.0.get_weight_size()
+    }
+    fn add_trainingset(&mut self, points: &[(Vec<f32>, Vec<f32>)]) {
+        self.0.add_trainingset(points)
+    }
+    fn retrain(&mut self, _interrupt: &mut dyn FnMut() -> bool) -> bool {
+        self.0.retrain(&mut || false)
+    }
+    fn last_loss(&self) -> Option<f32> {
+        self.0.last_loss()
+    }
+    fn last_round_epochs(&self) -> u64 {
+        self.0.last_round_epochs()
+    }
+}
+
+/// The deterministic run recipe: batched exchange, strict label budget of
+/// [`LABELS`], full timing-independent batches, and a stop rule that waits
+/// for every flushed batch to finish retraining.
+pub fn deterministic_setting(oracle_mode: OracleMode) -> AlSetting {
+    let flushes = LABELS / RETRAIN_SIZE as u64; // 3
+    AlSetting {
+        result_dir: "/tmp/pal-determinism".into(),
+        gene_process: GENS,
+        pred_process: MEMBERS * SHARDS,
+        ml_process: MEMBERS,
+        orcl_process: 1, // single oracle → labels land in dispatch order
+        committee_size: Some(MEMBERS),
+        exchange_mode: ExchangeMode::Batched,
+        retrain_size: RETRAIN_SIZE,
+        strict_label_budget: true,
+        // exercise the rescore path end to end on every retrain:
+        // EnergySelectUtils keeps the default (identity)
+        // `adjust_input_for_oracle`, so the full drain → rescore →
+        // replace → scheduler-resync round-trip runs without changing the
+        // dispatch order — rescore replacements are bit-identical across
+        // oracle modes by construction, and any regression that perturbs
+        // the buffer or the batched scheduler clock breaks bit-stability
+        dynamic_oracle_list: true,
+        seed: 7,
+        batch: BatchSetting {
+            // full batches only: every batch holds one item per generator,
+            // ordered by rank — composition is timing-independent
+            max_size: GENS,
+            max_delay: Duration::from_secs(10),
+            max_outstanding: 2,
+        },
+        oracle_mode,
+        oracle_batch: BatchSetting {
+            // selections arrive in multiples of GENS = RETRAIN_SIZE, so the
+            // size trigger always forms *full* oracle batches aligned with
+            // the retrain flush boundary — batch composition (not just item
+            // order) is timing-independent, and label arrival partitions
+            // the train buffer exactly like the per-label path. One batch
+            // in flight at a time: with 2+, two result frames could land in
+            // one Manager drain and merge two retrain flushes into one,
+            // making the flush partitioning timing-dependent.
+            max_size: RETRAIN_SIZE,
+            max_delay: Duration::from_secs(10),
+            max_outstanding: 1,
+        },
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(LABELS),
+            // wait for every flushed batch to finish retraining (one
+            // RETRAIN_DONE per trainer per flush) before shutting down
+            min_retrain_rounds: flushes * MEMBERS as u64,
+            min_train_epochs: 0,
+            max_wall: Some(Duration::from_secs(60)),
+        },
+        ..Default::default()
+    }
+}
+
+/// The scenario's oracle side alone: one fixed Müller–Brown PES oracle.
+/// Split out so a TCP follower process can host exactly these oracles
+/// while the leader runs [`deterministic_kernels_without_oracles`].
+pub fn deterministic_oracles() -> Vec<OracleFactory> {
+    vec![Box::new(|| {
+        Box::new(PesOracle::fixed(MullerBrown::default(), 1)) as Box<dyn Oracle>
+    }) as OracleFactory]
+}
+
+/// The full in-process kernel set: walkers, PES oracle, fixed-epoch
+/// committee, energy-threshold selection.
+pub fn deterministic_kernels() -> KernelSet {
+    let mut kernels = deterministic_kernels_without_oracles();
+    kernels.oracles = deterministic_oracles();
+    kernels
+}
+
+/// The kernel set a TCP *leader* passes to
+/// `Workflow::run_tcp_leader` — identical to [`deterministic_kernels`]
+/// minus the oracles, which the follower process hosts.
+pub fn deterministic_kernels_without_oracles() -> KernelSet {
+    let generators = (0..GENS)
+        .map(|i| {
+            let seed = 100 + i as u64;
+            Box::new(move || Box::new(MbWalker::new(seed)) as Box<dyn Generator>)
+                as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let model = Arc::new(move |mode: Mode, member: usize| {
+        let mut inner =
+            SyntheticModel::new(IN_DIM, OUT_DIM, Duration::ZERO, Duration::ZERO, 8, mode);
+        inner.update(&dataset_seed_weights(member));
+        Box::new(FixedEpochModel(inner)) as Box<dyn Model>
+    });
+    let utils = Arc::new(|| {
+        Box::new(EnergySelectUtils {
+            pes: MullerBrown::default(),
+            // far below every reachable energy → select everything, so the
+            // selected sequence is exactly the generator round-robin
+            threshold: -1e9,
+            max_per_batch: GENS,
+        }) as Box<dyn Utils>
+    });
+    KernelSet { generators, oracles: Vec::new(), model, utils }
+}
+
+/// Member-specific deterministic initial weights (`IN_DIM * OUT_DIM`
+/// linear map); replicas of the same member match exactly.
+pub fn dataset_seed_weights(member: usize) -> Vec<f32> {
+    (0..IN_DIM * OUT_DIM)
+        .map(|k| ((k + member * 11) % 7) as f32 * 0.05)
+        .collect()
+}
+
+/// One full deterministic run on the default (`channel`) transport.
+pub fn run_once(oracle_mode: OracleMode) -> RunReport {
+    run_with_transport(oracle_mode, TransportKind::Channel)
+}
+
+/// One full deterministic run on the given in-process transport backend.
+pub fn run_with_transport(oracle_mode: OracleMode, transport: TransportKind) -> RunReport {
+    let mut setting = deterministic_setting(oracle_mode);
+    setting.transport = transport;
+    Workflow::new(setting).run(deterministic_kernels()).unwrap()
+}

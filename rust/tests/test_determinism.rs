@@ -3,222 +3,24 @@
 //! oracle-label count, the retrain-round count, and the final training
 //! losses are bit-stable across runs.
 //!
-//! Determinism is by construction, not by luck:
-//!
-//! * generators are fixed-seed walkers that ignore `data_to_gene`, so
-//!   trajectories don't depend on when weight syncs land;
-//! * selection is a pure function of the *inputs* (Müller–Brown energy
-//!   threshold), not of the committee's predictions;
-//! * batches are full (`batch.max_size = gene_process`, long deadline) and
-//!   items are ordered by origin rank inside a batch, so batch composition
-//!   is arrival-order independent;
-//! * a single oracle labels in dispatch order, and the Manager's strict
-//!   label budget (`strict_label_budget`) dispatches exactly
-//!   `stop.max_labels` inputs — never an in-flight extra;
-//! * trainers run fixed-epoch rounds (interrupts ignored), so the final
-//!   loss is a pure function of the (deterministic) labeled dataset.
+//! The scenario itself (walkers, selection, fixed-epoch committee, run
+//! recipe, and *why* it is deterministic by construction) lives in
+//! [`pal::sim::scenario`] so the transport-conformance suite can replay
+//! the identical run over other backends; this file pins the baseline
+//! behavior on the default `channel` transport.
 
 use std::sync::Arc;
-use std::time::Duration;
 
 use pal::comm::FaultPlan;
-use pal::config::{AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria};
+use pal::config::OracleMode;
 use pal::coordinator::workflow::Workflow;
 use pal::data::Dataset;
-use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
-use pal::kernels::oracles::PesOracle;
-use pal::potential::{MullerBrown, Pes};
-use pal::rng::Rng;
-use pal::sim::workload::SyntheticModel;
+use pal::kernels::{KernelSet, Mode, Model};
+use pal::sim::scenario::{
+    dataset_seed_weights, deterministic_kernels, deterministic_setting, run_once, IN_DIM, LABELS,
+    MEMBERS, OUT_DIM, RETRAIN_SIZE,
+};
 use pal::telemetry::RunReport;
-
-/// Wire layout for a 1-"atom" PES with 1 global and 1 state:
-/// input `[x, y, z, g, s]`, label `[e, fx, fy, fz]`.
-const IN_DIM: usize = 5;
-const OUT_DIM: usize = 4;
-
-/// Fixed-seed random walker over the Müller–Brown landscape. Ignores the
-/// checked predictions entirely: the trajectory is a pure function of the
-/// seed, which is what makes the whole loop replayable.
-struct MbWalker {
-    rng: Rng,
-    pos: [f32; 2],
-}
-
-impl MbWalker {
-    fn new(seed: u64) -> Self {
-        let mut rng = Rng::new(seed);
-        let pes = MullerBrown::default();
-        let x0 = pes.initial_geometry(&mut rng);
-        MbWalker { rng, pos: [x0[0], x0[1]] }
-    }
-}
-
-impl Generator for MbWalker {
-    fn generate_new_data(&mut self, _data_to_gene: Option<&[f32]>) -> (bool, Vec<f32>) {
-        self.pos[0] += (self.rng.normal() * 0.08) as f32;
-        self.pos[1] += (self.rng.normal() * 0.08) as f32;
-        (false, vec![self.pos[0], self.pos[1], 0.0, 0.0, 1.0])
-    }
-}
-
-/// Selection that depends only on the *input*: configurations whose
-/// Müller–Brown energy exceeds `threshold` go to the oracle (high-energy =
-/// poorly-sampled transition regions). The checked payloads are the
-/// committee means, but nothing downstream consumes them.
-struct EnergySelectUtils {
-    pes: MullerBrown,
-    threshold: f64,
-    max_per_batch: usize,
-}
-
-impl Utils for EnergySelectUtils {
-    fn prediction_check(
-        &mut self,
-        list_data_to_pred: &[Vec<f32>],
-        preds_per_model: &[Vec<Vec<f32>>],
-    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
-        let checked = pal::coordinator::selection::committee_mean(preds_per_model);
-        let to_orcl: Vec<Vec<f32>> = list_data_to_pred
-            .iter()
-            .filter(|x| self.pes.energy(&x[..3]) > self.threshold)
-            .take(self.max_per_batch)
-            .cloned()
-            .collect();
-        (to_orcl, checked)
-    }
-}
-
-/// Fixed-epoch committee member: like the synthetic model but immune to
-/// retraining interrupts, so every round runs the same number of epochs.
-struct FixedEpochModel(SyntheticModel);
-
-impl Model for FixedEpochModel {
-    fn predict(&mut self, list: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        self.0.predict(list)
-    }
-    fn update(&mut self, w: &[f32]) {
-        self.0.update(w)
-    }
-    fn get_weight(&self) -> Vec<f32> {
-        self.0.get_weight()
-    }
-    fn get_weight_size(&self) -> usize {
-        self.0.get_weight_size()
-    }
-    fn add_trainingset(&mut self, points: &[(Vec<f32>, Vec<f32>)]) {
-        self.0.add_trainingset(points)
-    }
-    fn retrain(&mut self, _interrupt: &mut dyn FnMut() -> bool) -> bool {
-        self.0.retrain(&mut || false)
-    }
-    fn last_loss(&self) -> Option<f32> {
-        self.0.last_loss()
-    }
-    fn last_round_epochs(&self) -> u64 {
-        self.0.last_round_epochs()
-    }
-}
-
-const GENS: usize = 4;
-const MEMBERS: usize = 2;
-const SHARDS: usize = 2;
-const LABELS: u64 = 12;
-const RETRAIN_SIZE: usize = 4;
-
-fn deterministic_setting(oracle_mode: OracleMode) -> AlSetting {
-    let flushes = LABELS / RETRAIN_SIZE as u64; // 3
-    AlSetting {
-        result_dir: "/tmp/pal-determinism".into(),
-        gene_process: GENS,
-        pred_process: MEMBERS * SHARDS,
-        ml_process: MEMBERS,
-        orcl_process: 1, // single oracle → labels land in dispatch order
-        committee_size: Some(MEMBERS),
-        exchange_mode: ExchangeMode::Batched,
-        retrain_size: RETRAIN_SIZE,
-        strict_label_budget: true,
-        // exercise the rescore path end to end on every retrain:
-        // EnergySelectUtils keeps the default (identity)
-        // `adjust_input_for_oracle`, so the full drain → rescore →
-        // replace → scheduler-resync round-trip runs without changing the
-        // dispatch order — rescore replacements are bit-identical across
-        // oracle modes by construction, and any regression that perturbs
-        // the buffer or the batched scheduler clock breaks bit-stability
-        dynamic_oracle_list: true,
-        seed: 7,
-        batch: BatchSetting {
-            // full batches only: every batch holds one item per generator,
-            // ordered by rank — composition is timing-independent
-            max_size: GENS,
-            max_delay: Duration::from_secs(10),
-            max_outstanding: 2,
-        },
-        oracle_mode,
-        oracle_batch: BatchSetting {
-            // selections arrive in multiples of GENS = RETRAIN_SIZE, so the
-            // size trigger always forms *full* oracle batches aligned with
-            // the retrain flush boundary — batch composition (not just item
-            // order) is timing-independent, and label arrival partitions
-            // the train buffer exactly like the per-label path. One batch
-            // in flight at a time: with 2+, two result frames could land in
-            // one Manager drain and merge two retrain flushes into one,
-            // making the flush partitioning timing-dependent.
-            max_size: RETRAIN_SIZE,
-            max_delay: Duration::from_secs(10),
-            max_outstanding: 1,
-        },
-        stop: StopCriteria {
-            max_iterations: None,
-            max_labels: Some(LABELS),
-            // wait for every flushed batch to finish retraining (one
-            // RETRAIN_DONE per trainer per flush) before shutting down
-            min_retrain_rounds: flushes * MEMBERS as u64,
-            min_train_epochs: 0,
-            max_wall: Some(Duration::from_secs(60)),
-        },
-        ..Default::default()
-    }
-}
-
-fn deterministic_kernels() -> KernelSet {
-    let generators = (0..GENS)
-        .map(|i| {
-            let seed = 100 + i as u64;
-            Box::new(move || Box::new(MbWalker::new(seed)) as Box<dyn Generator>)
-                as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
-        })
-        .collect();
-    let oracles = vec![Box::new(|| {
-        Box::new(PesOracle::fixed(MullerBrown::default(), 1)) as Box<dyn Oracle>
-    }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>];
-    let model = Arc::new(move |mode: Mode, member: usize| {
-        let mut inner =
-            SyntheticModel::new(IN_DIM, OUT_DIM, Duration::ZERO, Duration::ZERO, 8, mode);
-        // member-specific deterministic init; replicas of a member match
-        let w: Vec<f32> = (0..IN_DIM * OUT_DIM)
-            .map(|k| ((k + member * 11) % 7) as f32 * 0.05)
-            .collect();
-        inner.update(&w);
-        Box::new(FixedEpochModel(inner)) as Box<dyn Model>
-    });
-    let utils = Arc::new(|| {
-        Box::new(EnergySelectUtils {
-            pes: MullerBrown::default(),
-            // far below every reachable energy → select everything, so the
-            // selected sequence is exactly the generator round-robin
-            threshold: -1e9,
-            max_per_batch: GENS,
-        }) as Box<dyn Utils>
-    });
-    KernelSet { generators, oracles, model, utils }
-}
-
-fn run_once(oracle_mode: OracleMode) -> RunReport {
-    Workflow::new(deterministic_setting(oracle_mode))
-        .run(deterministic_kernels())
-        .unwrap()
-}
 
 #[test]
 fn muller_brown_loop_is_bit_stable_across_runs() {
@@ -311,12 +113,9 @@ const DS_MB: usize = 2;
 
 impl DatasetModel {
     fn new(member: usize) -> Self {
-        let w = (0..IN_DIM * OUT_DIM)
-            .map(|k| ((k + member * 11) % 7) as f32 * 0.05)
-            .collect();
         DatasetModel {
             data: Dataset::new(0.25, 1000 + member as u64).with_rolling_window(DS_WINDOW),
-            w,
+            w: dataset_seed_weights(member),
             loss: None,
             epochs: 0,
         }
