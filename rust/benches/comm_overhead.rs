@@ -22,19 +22,25 @@
 //! (l) transport plane — fan-in messages/sec over the pluggable backends
 //! at 8 ranks: the lock-free `shm` rings vs the default `channel` bus
 //! (gated at 1.5x for small payloads) plus the `tcp` loopback rate and
-//! its serialization copy volume (`BENCH_transport.json`).
+//! its serialization copy volume (`BENCH_transport.json`),
+//! (m) observability plane — the live metrics registry's cost: the
+//! section-(i) adaptive labeling run with the registry enabled vs
+//! disabled (gated at <= 2% wall overhead) and the disabled publish hot
+//! path under the counting allocator (gated allocation-free;
+//! `BENCH_obs.json`).
 //!
 //! Run: `cargo bench --bench comm_overhead`
 //! (append `-- sched-only` for just the scheduler comparison,
 //! `-- fault-only` for just the fault-recovery gate, `-- mem-only`
-//! for just the memory-plane gates, or `-- transport-only` for just the
-//! transport-plane gate)
+//! for just the memory-plane gates, `-- transport-only` for just the
+//! transport-plane gate, or `-- obs-only` for just the observability
+//! gates)
 //!
 //! Results are also written machine-readable to `BENCH_comm.json` so the
 //! perf trajectory is tracked across PRs.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use pal::bench_util::alloc::{alloc_count, CountingAlloc};
 use pal::bench_util::{bench, black_box, Report, Row};
@@ -59,6 +65,7 @@ use pal::json::{obj, Value};
 use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
 use pal::runtime::UploadCache;
 use pal::sim::workload::{SyntheticGenerator, SyntheticModel, SyntheticOracle};
+use pal::telemetry::registry::{registry, Counter as ObsCounter, Gauge as ObsGauge};
 
 // Counting allocator: only the allocations-per-item section reads the
 // counters; the passthrough costs the other sections nothing measurable.
@@ -1091,15 +1098,150 @@ fn run_transport_section() -> bool {
     target_met
 }
 
+/// One publish pass against the process-wide registry in whatever enabled
+/// state it currently holds: each iteration is a plausible coordinator
+/// step (counter bump, gauge overwrite, RTT observation, endpoint slot
+/// update). Returns `(ns per iteration, allocations observed)`.
+fn obs_publish_pass(events: u64) -> (f64, u64) {
+    let reg = black_box(registry());
+    let a0 = alloc_count();
+    let t0 = Instant::now();
+    for i in 0..events {
+        reg.inc(ObsCounter::Labels);
+        reg.gauge_set(ObsGauge::OracleQueueDepth, i % 64);
+        reg.observe_oracle_rtt(Duration::from_millis(i % 32));
+        reg.endpoint_outstanding(5, i % 4, (i % 4) * 8);
+        reg.endpoint_ewma_ms(5, 2.5);
+    }
+    let dt = t0.elapsed();
+    (dt.as_nanos() as f64 / events as f64, alloc_count() - a0)
+}
+
+/// Section (m): observability-plane gates. (1) The section-(i) adaptive
+/// labeling workload runs with the registry disabled and enabled; min
+/// wall over the trials must agree within 2% (sleep-bounded synthetic
+/// oracles give both modes the same deterministic floor, so min isolates
+/// the registry cost from scheduler noise). (2) A tight publish loop
+/// against the *disabled* registry — the default state of every
+/// non-observed run — must be allocation-free under the counting
+/// allocator. Returns whether both gates held.
+fn run_obs_section() -> bool {
+    const OBS_LABELS: u64 = 240;
+    const TRIALS: usize = 3;
+    const HOT_EVENTS: u64 = 1_000_000;
+    let reg = registry();
+
+    // ---- enabled-vs-disabled wall on a real labeling run ----
+    reg.set_enabled(false);
+    let mut disabled_wall = f64::INFINITY;
+    for _ in 0..TRIALS {
+        disabled_wall = disabled_wall.min(sched_run(SchedPolicy::Adaptive, OBS_LABELS).1);
+    }
+    let mut enabled_wall = f64::INFINITY;
+    for _ in 0..TRIALS {
+        reg.reset_for_run(None);
+        reg.set_enabled(true);
+        let wall = sched_run(SchedPolicy::Adaptive, OBS_LABELS).1;
+        reg.set_enabled(false);
+        enabled_wall = enabled_wall.min(wall);
+    }
+    // last enabled trial's live view — proves the run actually published
+    let enabled_labels = reg.counter(ObsCounter::Labels);
+    let wall_ratio = enabled_wall / disabled_wall.max(1e-9);
+
+    // ---- publish hot path: disabled must be branch-only, alloc-free ----
+    let (disabled_ns, disabled_allocs) = obs_publish_pass(HOT_EVENTS);
+    reg.reset_for_run(None);
+    reg.set_enabled(true);
+    let (enabled_ns, enabled_allocs) = obs_publish_pass(HOT_EVENTS);
+    reg.set_enabled(false);
+
+    let target_met = wall_ratio <= 1.02 && disabled_allocs == 0 && enabled_labels >= OBS_LABELS;
+
+    let mut rep = Report::new(format!(
+        "observability plane — registry enabled vs disabled on the adaptive \
+         labeling run ({OBS_LABELS} labels, min of {TRIALS}), publish hot path \
+         ({HOT_EVENTS} events)"
+    ));
+    rep.push(
+        Row::new("registry disabled")
+            .f("wall_s", disabled_wall)
+            .f("ns_per_event", disabled_ns)
+            .field("hot_allocs", disabled_allocs),
+    );
+    rep.push(
+        Row::new("registry enabled")
+            .f("wall_s", enabled_wall)
+            .f("ns_per_event", enabled_ns)
+            .field("hot_allocs", enabled_allocs)
+            .field("live_labels", enabled_labels)
+            .f("wall_ratio_x", wall_ratio),
+    );
+    rep.print();
+    println!(
+        "(enabled registry cost {wall_ratio:.3}x the disabled wall{})",
+        if wall_ratio <= 1.02 {
+            " — within the 2% overhead gate"
+        } else {
+            " — OVERHEAD GATE MISSED"
+        }
+    );
+    println!(
+        "(disabled publish hot path made {disabled_allocs} allocations over {HOT_EVENTS} \
+         events{})",
+        if disabled_allocs == 0 { " — allocation-free target met" } else { " — NOT ALLOC-FREE" }
+    );
+
+    let obs_json = obj(vec![
+        ("bench", Value::Str("obs_plane".into())),
+        (
+            "overhead",
+            obj(vec![
+                ("labels", Value::Num(OBS_LABELS as f64)),
+                ("trials", Value::Num(TRIALS as f64)),
+                ("disabled_wall_s", Value::Num(disabled_wall)),
+                ("enabled_wall_s", Value::Num(enabled_wall)),
+                ("enabled_live_labels", Value::Num(enabled_labels as f64)),
+                ("enabled_over_disabled_wall_x", Value::Num(wall_ratio)),
+            ]),
+        ),
+        (
+            "hot_path",
+            obj(vec![
+                ("events", Value::Num(HOT_EVENTS as f64)),
+                ("disabled_ns_per_event", Value::Num(disabled_ns)),
+                ("enabled_ns_per_event", Value::Num(enabled_ns)),
+                ("disabled_allocs", Value::Num(disabled_allocs as f64)),
+                ("enabled_allocs", Value::Num(enabled_allocs as f64)),
+            ]),
+        ),
+        ("target_met", Value::Bool(target_met)),
+    ]);
+    match std::fs::write("BENCH_obs.json", pal::json::to_string(&obs_json)) {
+        Ok(()) => println!("wrote BENCH_obs.json"),
+        Err(e) => eprintln!("failed to write BENCH_obs.json: {e}"),
+    }
+    target_met
+}
+
 fn main() {
     // `cargo bench --bench comm_overhead -- sched-only` runs just the
     // scheduler comparison, `-- fault-only` just the fault-recovery gate,
     // `-- mem-only` just the memory-plane gates, `-- transport-only` just
-    // the transport-plane gate (all CI gates); no args runs everything.
+    // the transport-plane gate, `-- obs-only` just the observability-plane
+    // gates (all CI gates); no args runs everything.
     let sched_only = std::env::args().any(|a| a == "sched-only");
     let fault_only = std::env::args().any(|a| a == "fault-only");
     let mem_only = std::env::args().any(|a| a == "mem-only");
     let transport_only = std::env::args().any(|a| a == "transport-only");
+    let obs_only = std::env::args().any(|a| a == "obs-only");
+    if obs_only {
+        // ---- (m) observability plane: registry overhead + hot path ----
+        if !run_obs_section() {
+            std::process::exit(1);
+        }
+        return;
+    }
     if transport_only {
         // ---- (l) transport plane: backend fan-in throughput gate ----
         if !run_transport_section() {
@@ -1195,6 +1337,10 @@ fn main() {
         }
         // ---- (l) transport plane: backend fan-in throughput gate ----
         if !run_transport_section() {
+            std::process::exit(1);
+        }
+        // ---- (m) observability plane: registry overhead + hot path ----
+        if !run_obs_section() {
             std::process::exit(1);
         }
     }

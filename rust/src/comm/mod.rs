@@ -189,6 +189,20 @@
 //! accounting apply to all of them unchanged; the cross-backend conformance
 //! suite (`rust/tests/test_transport.rs`) pins that contract, including
 //! bit-identical active-learning runs across the in-process backends.
+//!
+//! ## Live observability
+//!
+//! During an observed run (`pal run --metrics-addr=...`) the workflow
+//! hands the run's [`bus::WorldStats`] to the live metrics registry
+//! ([`crate::telemetry::registry`]): `/metrics` exports the same
+//! logical-vs-physical counters as `pal_world_*` series
+//! (`pal_world_messages_total`, `pal_world_payload_bytes_total`,
+//! `pal_world_bytes_copied_total`, `pal_world_dead_letters_total`, …)
+//! and `/status` embeds them as the `world` object — so the zero-copy
+//! invariant (`bytes_copied` flat while `payload_bytes` scales with
+//! fan-out) is scrapeable mid-run instead of only visible in the final
+//! `RunReport`. The crate-root docs ("Observability plane") describe the
+//! full surface, metric naming scheme, and trace span taxonomy.
 
 pub mod bus;
 pub mod codec;

@@ -252,6 +252,16 @@ pub struct AlSetting {
     /// `"tcp"`); see [`crate::comm::transport`]. `tcp` additionally needs
     /// the multi-process bootstrap (leader/follower entry points).
     pub transport: TransportKind,
+    /// When set, `Workflow::run` starts the live metrics/admin HTTP
+    /// server ([`crate::telemetry::server`]) on this address for the
+    /// duration of the run (`metrics_addr`; e.g. `"127.0.0.1:9090"`,
+    /// port 0 for ephemeral). `None` (default) keeps the registry
+    /// publication path a no-op.
+    pub metrics_addr: Option<String>,
+    /// When set, `Workflow::run` records per-rank phase spans
+    /// ([`crate::telemetry::trace`]) and drains them into this file as
+    /// Chrome trace-event JSON at join (`trace_out`).
+    pub trace_out: Option<String>,
 }
 
 impl Default for AlSetting {
@@ -280,6 +290,8 @@ impl Default for AlSetting {
             committee_size: None,
             strict_label_budget: false,
             transport: TransportKind::Channel,
+            metrics_addr: None,
+            trace_out: None,
         }
     }
 }
@@ -517,6 +529,16 @@ impl AlSetting {
                 Err(e) => bail!("{e}"),
             };
         }
+        if let Some(x) = v.get("metrics_addr").as_str() {
+            if !x.is_empty() {
+                s.metrics_addr = Some(x.to_string());
+            }
+        }
+        if let Some(x) = v.get("trace_out").as_str() {
+            if !x.is_empty() {
+                s.trace_out = Some(x.to_string());
+            }
+        }
         s.validate()?;
         Ok(s)
     }
@@ -599,6 +621,12 @@ impl AlSetting {
             ("committee_size", Value::Num(self.committee() as f64)),
             ("strict_label_budget", Value::Bool(self.strict_label_budget)),
             ("transport", Value::Str(self.transport.as_str().into())),
+            // empty string = unset; from_json treats "" as None
+            (
+                "metrics_addr",
+                Value::Str(self.metrics_addr.clone().unwrap_or_default()),
+            ),
+            ("trace_out", Value::Str(self.trace_out.clone().unwrap_or_default())),
         ])
     }
 }
@@ -672,6 +700,27 @@ mod tests {
             .to_string();
         assert!(err.contains("unknown transport"), "got: {err}");
         assert!(err.contains("channel|shm|tcp"), "got: {err}");
+    }
+
+    #[test]
+    fn observability_keys_roundtrip() {
+        // unset by default, emitted as "" and parsed back as None
+        let s = AlSetting::default();
+        assert_eq!(s.metrics_addr, None);
+        assert_eq!(s.trace_out, None);
+        let s2 = AlSetting::from_json(&json::to_string(&s.to_json())).unwrap();
+        assert_eq!(s2.metrics_addr, None);
+        assert_eq!(s2.trace_out, None);
+        // set values survive the round-trip
+        let s = AlSetting::from_json(
+            r#"{"metrics_addr": "127.0.0.1:9090", "trace_out": "trace.json"}"#,
+        )
+        .unwrap();
+        assert_eq!(s.metrics_addr.as_deref(), Some("127.0.0.1:9090"));
+        assert_eq!(s.trace_out.as_deref(), Some("trace.json"));
+        let s2 = AlSetting::from_json(&json::to_string(&s.to_json())).unwrap();
+        assert_eq!(s2.metrics_addr, s.metrics_addr);
+        assert_eq!(s2.trace_out, s.trace_out);
     }
 
     #[test]

@@ -46,6 +46,7 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use crate::config::{BatchSetting, SchedPolicy, SchedSetting};
+use crate::telemetry::registry::registry;
 use crate::telemetry::LatencyWindow;
 
 pub use policy::{AdaptiveEwma, BuiltinPolicy, LeastOutstanding, Policy, PoolView, RoundRobin};
@@ -157,6 +158,16 @@ struct InFlightRec {
     sent_at: Instant,
 }
 
+/// Which round-trip leg a core serves — selects the live-registry latency
+/// histogram its completions feed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchLeg {
+    /// Manager → oracle → Manager (labeling round-trips).
+    Oracle,
+    /// Exchange → prediction shard → Exchange (inference round-trips).
+    Prediction,
+}
+
 /// The shared scheduler state machine. See the module docs for semantics.
 #[derive(Debug)]
 pub struct DispatchCore<P: Policy> {
@@ -169,6 +180,10 @@ pub struct DispatchCore<P: Policy> {
     evicted: HashMap<u64, InFlightRec>,
     next_id: u64,
     rtts: LatencyWindow,
+    /// Live-registry publication map: endpoint index → world rank (for
+    /// prediction shards, the shard's lead rank), plus the RTT leg. `None`
+    /// (default, and every bare test core) publishes nothing.
+    observe: Option<(Vec<usize>, DispatchLeg)>,
 }
 
 impl<P: Policy> DispatchCore<P> {
@@ -181,7 +196,62 @@ impl<P: Policy> DispatchCore<P> {
             evicted: HashMap::new(),
             next_id: 0,
             rtts: LatencyWindow::default(),
+            observe: None,
         }
+    }
+
+    /// Publish this core's per-endpoint state to the live metrics registry
+    /// under the given rank labels (endpoint index order). The registry's
+    /// enabled gate still applies — with observability off every publish
+    /// is a single relaxed load.
+    pub fn observe_as(&mut self, ranks: Vec<usize>, leg: DispatchLeg) {
+        self.observe = Some((ranks, leg));
+    }
+
+    /// Rank label of endpoint `e` when observation is wired up.
+    fn observed_rank(&self, e: usize) -> Option<usize> {
+        self.observe.as_ref().and_then(|(ranks, _)| ranks.get(e).copied())
+    }
+
+    /// Push endpoint `e`'s outstanding counts to the registry.
+    fn publish_endpoint(&self, e: usize) {
+        if let Some(rank) = self.observed_rank(e) {
+            registry().endpoint_outstanding(
+                rank,
+                self.eps[e].outstanding as u64,
+                self.eps[e].outstanding_items as u64,
+            );
+        }
+    }
+
+    /// Push one completed round-trip (histogram + per-endpoint EWMA) and
+    /// record the batch-lifecycle trace span (`oracle_batch`/`pred_batch`,
+    /// `tid` = the serving endpoint's rank).
+    fn publish_completion(&self, e: usize, id: u64, rtt: Duration, items: usize) {
+        let Some((ranks, leg)) = &self.observe else {
+            return;
+        };
+        let Some(&rank) = ranks.get(e) else {
+            return;
+        };
+        let span_name = match leg {
+            DispatchLeg::Oracle => {
+                registry().observe_oracle_rtt(rtt);
+                "oracle_batch"
+            }
+            DispatchLeg::Prediction => {
+                registry().observe_pred_rtt(rtt);
+                "pred_batch"
+            }
+        };
+        // prefer the policy's EWMA; static policies don't keep one, so
+        // fall back to the raw per-item cost of this completion
+        let ms = self.eps[e]
+            .ewma_item_ms
+            .unwrap_or_else(|| rtt.as_secs_f64() * 1e3 / items.max(1) as f64);
+        registry().endpoint_ewma_ms(rank, ms);
+        let t0 = Instant::now().checked_sub(rtt).unwrap_or_else(Instant::now);
+        crate::telemetry::trace::sink().span(rank, span_name, t0, id, items as u64);
     }
 
     pub fn config(&self) -> &DispatchConfig {
@@ -278,6 +348,7 @@ impl<P: Policy> DispatchCore<P> {
         self.eps[endpoint].outstanding += 1;
         self.eps[endpoint].outstanding_items += take;
         self.inflight.insert(id, InFlightRec { endpoint, items: take, sent_at: now });
+        self.publish_endpoint(endpoint);
         Some(Dispatch { id, endpoint, take })
     }
 
@@ -296,6 +367,8 @@ impl<P: Policy> DispatchCore<P> {
             if self.cfg.adaptive {
                 self.observe(e, rtt, rec.items, now);
             }
+            self.publish_endpoint(e);
+            self.publish_completion(e, id, rtt, rec.items);
             return Some(Completion { endpoint: e, items: rec.items, rtt });
         }
         if let Some(rec) = self.evicted.remove(&id) {
@@ -342,6 +415,11 @@ impl<P: Policy> DispatchCore<P> {
             self.eps[e].outstanding_items = self.eps[e].outstanding_items.saturating_sub(rec.items);
             self.evicted.insert(ev.id, rec);
         }
+        if let Some(rank) = self.observed_rank(e) {
+            registry().endpoint_dead(rank, true);
+            crate::telemetry::trace::sink().instant(rank, "evict", e as u64);
+        }
+        self.publish_endpoint(e);
         out
     }
 
@@ -430,6 +508,10 @@ impl<P: Policy> DispatchCore<P> {
             self.eps[e].outstanding = self.eps[e].outstanding.saturating_sub(1);
             self.eps[e].outstanding_items = self.eps[e].outstanding_items.saturating_sub(rec.items);
             self.evicted.insert(ev.id, rec);
+            self.publish_endpoint(e);
+            if let Some(rank) = self.observed_rank(e) {
+                crate::telemetry::trace::sink().instant(rank, "evict", ev.id);
+            }
         }
         out
     }

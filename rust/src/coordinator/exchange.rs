@@ -26,10 +26,13 @@ use crate::comm::protocol::*;
 use crate::config::{
     topology, AlSetting, BatchSetting, ExchangeMode, SchedPolicy, SchedSetting, Topology,
 };
-use crate::coordinator::dispatch::{BuiltinPolicy, DispatchConfig, DispatchCore, Eviction};
+use crate::coordinator::dispatch::{
+    BuiltinPolicy, DispatchConfig, DispatchCore, DispatchLeg, Eviction,
+};
 use crate::coordinator::hosts::{gather_poll, is_down, ShutdownFlag};
 use crate::data::batch::{PayloadBatch, RowBlock, RowQueue, SharedRows};
 use crate::kernels::Utils;
+use crate::telemetry::registry::{registry, Counter, Gauge};
 use crate::telemetry::KernelTelemetry;
 
 /// Run the Exchange loop until stop criteria or shutdown.
@@ -84,6 +87,7 @@ fn lockstep_host(
             // rank alive — the next gather would hang on a dead peer, so
             // abort the run (the batched mode degrades instead)
             tel.bump("rank_down_notices");
+            registry().inc(Counter::RankDownNotices);
             ep.send(topology::MANAGER, TAG_STOP, Payload::empty());
             tel.bump("stop_signals");
             break;
@@ -183,6 +187,7 @@ fn lockstep_host(
                 );
                 if oracle_enabled && !to_orcl.is_empty() {
                     tel.add("selected_for_oracle", to_orcl.len() as u64);
+                    registry().add(Counter::SelectedForOracle, to_orcl.len() as u64);
                     ep.send(
                         topology::MANAGER,
                         TAG_ORCL_SELECT,
@@ -214,6 +219,7 @@ fn lockstep_host(
                 );
                 if oracle_enabled && !to_orcl.is_empty() {
                     tel.add("selected_for_oracle", to_orcl.len() as u64);
+                    registry().add(Counter::SelectedForOracle, to_orcl.len() as u64);
                     ep.send(topology::MANAGER, TAG_ORCL_SELECT, codec::pack_vecs(&to_orcl));
                 }
                 RowBlock::from_rows(&checked)
@@ -232,6 +238,7 @@ fn lockstep_host(
 
         iterations += 1;
         tel.bump("iterations");
+        registry().inc(Counter::AlIterations);
     }
     tel
 }
@@ -305,6 +312,14 @@ impl BatchScheduler {
     pub fn push(&mut self, origin: usize, data: &[f32], now: Instant) {
         self.queue.push_back(Pending { origin, enqueued: now });
         self.rows.push_row(data);
+    }
+
+    /// Publish per-shard dispatch state (outstanding batches, EWMA) to the
+    /// live metrics registry, labeling shard `i` as `ranks[i]` (the shard's
+    /// lead rank). See
+    /// [`crate::coordinator::dispatch::DispatchCore::observe_as`].
+    pub fn observe_as(&mut self, ranks: Vec<usize>) {
+        self.core.observe_as(ranks, DispatchLeg::Prediction);
     }
 
     pub fn queue_len(&self) -> usize {
@@ -465,6 +480,7 @@ fn evict_dead_shard(
         return false;
     }
     tel.bump("shard_evictions");
+    registry().inc(Counter::ShardEvictions);
     let mut requeued = false;
     for ev in scheduler.mark_down(shard, now) {
         if let Some(fl) = inflight.remove(&ev.id) {
@@ -472,6 +488,7 @@ fn evict_dead_shard(
                 scheduler.push(origin, fl.items.row(i), now);
             }
             tel.add("requeued_items", fl.items.len() as u64);
+            registry().add(Counter::RequeuedItems, fl.items.len() as u64);
             requeued = true;
         }
     }
@@ -491,6 +508,9 @@ fn batched_host(
     let shards = topo.shards();
     let oracle_enabled = !topo.orcl_ranks().is_empty();
     let mut scheduler = BatchScheduler::with_policy(&setting.batch, &setting.sched, shards.len());
+    // live registry: label shard i by its lead rank (no-op publishes while
+    // observability is disabled)
+    scheduler.observe_as(shards.iter().filter_map(|s| s.first().copied()).collect());
     let mut inflight: HashMap<u64, InFlight> = HashMap::new();
     // reusable scratches: each dispatched batch is encoded in place and
     // converted once into a shared payload for the whole committee shard
@@ -526,6 +546,7 @@ fn batched_host(
         while let Some(m) = ep.try_recv(Src::Any, TAG_RANK_DOWN) {
             did_work = true;
             tel.bump("rank_down_notices");
+            registry().inc(Counter::RankDownNotices);
             let Some(rank) = m.data.first().map(|&f| f as usize) else {
                 continue;
             };
@@ -611,6 +632,7 @@ fn batched_host(
             );
             if oracle_enabled && !to_orcl.is_empty() {
                 tel.add("selected_for_oracle", to_orcl.len() as u64);
+                registry().add(Counter::SelectedForOracle, to_orcl.len() as u64);
                 ep.send(
                     topology::MANAGER,
                     TAG_ORCL_SELECT,
@@ -626,6 +648,7 @@ fn batched_host(
             }
             iterations += 1;
             tel.bump("iterations");
+            registry().inc(Counter::AlIterations);
             tel.add("batch_items", fl.items.len() as u64);
             if setting.stop.max_iterations.map_or(false, |max| iterations >= max) {
                 // budget reached mid-drain: stop completing further batches
@@ -641,12 +664,14 @@ fn batched_host(
         // shard — late replies from the evicted batch become orphans ---
         for ev in scheduler.check_health(Instant::now()) {
             tel.bump("shard_evictions");
+            registry().inc(Counter::ShardEvictions);
             if let Some(fl) = inflight.remove(&ev.id) {
                 let now = Instant::now();
                 for (i, &origin) in fl.origins.iter().enumerate() {
                     scheduler.push(origin, fl.items.row(i), now);
                 }
                 tel.add("requeued_items", fl.items.len() as u64);
+                registry().add(Counter::RequeuedItems, fl.items.len() as u64);
                 did_work = true;
             }
         }
@@ -666,6 +691,7 @@ fn batched_host(
             encode_predict_batch_block_into(batch.id, &batch.items, &mut frame_buf);
             let delivered = ep.bcast(&shards[batch.shard], TAG_PRED_BATCH, &frame_buf[..]);
             tel.bump("batches_dispatched");
+            registry().inc(Counter::PredBatches);
             if batch.items.len() < setting.batch.max_size {
                 tel.bump("partial_batches");
             }
@@ -685,6 +711,7 @@ fn batched_host(
                 // never complete — evict the shard now (requeues this
                 // batch) instead of waiting for the rank-down notice
                 tel.bump("dead_letter_dispatches");
+                registry().inc(Counter::DeadLetterDispatches);
                 evict_dead_shard(&mut scheduler, &mut inflight, &mut tel, shard, Instant::now());
             }
             did_work = true;
@@ -692,6 +719,11 @@ fn batched_host(
         if scheduler.queue_len() > 0 && scheduler.in_flight() == shards.len() * setting.batch.max_outstanding {
             tel.bump("backpressure_polls");
         }
+
+        // --- live gauges: overwritten once per loop pass (each a single
+        // relaxed load + branch while observability is disabled) ---
+        registry().gauge_set(Gauge::PredQueueDepth, scheduler.queue_len() as u64);
+        registry().gauge_set(Gauge::PredInFlight, scheduler.in_flight() as u64);
 
         if !did_work {
             // bound the sleep by the deadline trigger so partial batches

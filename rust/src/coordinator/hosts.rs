@@ -4,14 +4,27 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::comm::bus::{fill_gather_slots, Endpoint, Message, Payload, Src};
 use crate::comm::codec::{self, PackBuffer};
 use crate::comm::protocol::*;
 use crate::config::{AlSetting, Topology};
 use crate::kernels::{Generator, Mode, Model, Oracle};
-use crate::telemetry::KernelTelemetry;
+use crate::telemetry::registry::{registry, Counter};
+use crate::telemetry::{trace, KernelTelemetry};
+
+/// Fold a model's upload-cache statistics (if its backend keeps any) into
+/// the host's telemetry counters, so `RunReport::to_json` can aggregate
+/// engine-level cache efficiency across kernels.
+fn record_upload_stats(tel: &mut KernelTelemetry, model: &dyn Model) {
+    if let Some(us) = model.upload_stats() {
+        tel.add("upload_cache_hits", us.hits);
+        tel.add("upload_cache_misses", us.misses);
+        tel.add("upload_cache_bytes_uploaded", us.bytes_uploaded);
+        tel.add("upload_cache_bytes_reused", us.bytes_reused);
+    }
+}
 
 /// Shared run flag; `true` once the Manager initiates shutdown.
 pub type ShutdownFlag = Arc<AtomicBool>;
@@ -218,14 +231,17 @@ pub fn oracle_host(
                 // labels-only frame echoing the batch id — row i answers
                 // input i, which the Manager retained at dispatch
                 if let Some((id, view)) = decode_oracle_batch_rows(&m.data) {
+                    let t0 = Instant::now();
                     let labels = tel.time("run_calc", || oracle.run_calc_batch(&view));
                     debug_assert_eq!(labels.len(), view.rows());
                     tel.bump("batches");
                     tel.add("labels", view.rows() as u64);
+                    trace::sink().span(ep.rank(), "oracle_calc", t0, id, view.rows() as u64);
                     encode_oracle_labels_into(id, &labels, &mut frame);
                     ep.send(MANAGER, TAG_ORACLE_LABELS, &frame[..]);
                 } else if let Some((id, views)) = decode_oracle_batch_views(&m.data) {
                     // ragged batch: per-row labeling into a contiguous block
+                    let t0 = Instant::now();
                     let labels = tel.time("run_calc", || {
                         let mut out = RowBlock::new();
                         for row in &views {
@@ -235,6 +251,7 @@ pub fn oracle_host(
                     });
                     tel.bump("batches");
                     tel.add("labels", views.len() as u64);
+                    trace::sink().span(ep.rank(), "oracle_calc", t0, id, views.len() as u64);
                     encode_oracle_labels_into(id, &labels, &mut frame);
                     ep.send(MANAGER, TAG_ORACLE_LABELS, &frame[..]);
                 } else if let Some(id) = decode_oracle_batch_id(&m.data) {
@@ -329,10 +346,12 @@ pub fn prediction_host(
         ) {
             Ok(m) if m.tag == TAG_PRED_BATCH => {
                 if let Some((id, view)) = decode_predict_batch_rows(&m.data) {
+                    let t0 = Instant::now();
                     let preds = tel.time("predict", || model.predict_batch(&view));
                     debug_assert_eq!(preds.len(), view.rows());
                     tel.bump("batches");
                     tel.add("samples", view.rows() as u64);
+                    trace::sink().span(ep.rank(), "predict", t0, id, view.rows() as u64);
                     encode_predict_batch_result_block_into(id, &preds, &mut frame);
                     ep.send(
                         crate::config::topology::EXCHANGE,
@@ -340,10 +359,12 @@ pub fn prediction_host(
                         &frame[..],
                     );
                 } else if let Some((id, items)) = decode_predict_batch(&m.data) {
+                    let t0 = Instant::now();
                     let preds = tel.time("predict", || model.predict(&items));
                     debug_assert_eq!(preds.len(), items.len());
                     tel.bump("batches");
                     tel.add("samples", items.len() as u64);
+                    trace::sink().span(ep.rank(), "predict", t0, id, items.len() as u64);
                     encode_predict_batch_result_into(id, &preds, &mut frame);
                     ep.send(
                         crate::config::topology::EXCHANGE,
@@ -356,20 +377,24 @@ pub fn prediction_host(
             }
             Ok(m) => {
                 if let Some(view) = codec::unpack_batch_view(&m.data) {
+                    let t0 = Instant::now();
                     let preds = tel.time("predict", || model.predict_batch(&view));
                     debug_assert_eq!(preds.len(), view.rows());
                     tel.bump("batches");
                     tel.add("samples", view.rows() as u64);
+                    trace::sink().span(ep.rank(), "predict", t0, u64::MAX, view.rows() as u64);
                     ep.send(
                         crate::config::topology::EXCHANGE,
                         TAG_PRED_OUT,
                         reply.pack_row_block(&preds),
                     );
                 } else if let Some(inputs) = codec::unpack(&m.data) {
+                    let t0 = Instant::now();
                     let preds = tel.time("predict", || model.predict(&inputs));
                     debug_assert_eq!(preds.len(), inputs.len());
                     tel.bump("batches");
                     tel.add("samples", inputs.len() as u64);
+                    trace::sink().span(ep.rank(), "predict", t0, u64::MAX, inputs.len() as u64);
                     ep.send(
                         crate::config::topology::EXCHANGE,
                         TAG_PRED_OUT,
@@ -383,6 +408,7 @@ pub fn prediction_host(
             Err(crate::comm::RecvError::Disconnected) => break,
         }
     }
+    record_upload_stats(&mut tel, &*model);
     model.stop_run();
     tel
 }
@@ -428,7 +454,14 @@ pub fn training_host(
     // initial weight sync so predictors start from the same replica; one
     // shared payload fans out by refcount — replica count does not
     // multiply copies
-    sync_weights(&ep, &replicas, &*model);
+    let mut rounds: u64 = 0;
+    if !replicas.is_empty() {
+        let t0 = Instant::now();
+        sync_weights(&ep, &replicas, &*model);
+        tel.bump("weight_syncs");
+        registry().inc(Counter::WeightSyncs);
+        trace::sink().span(ep.rank(), "weight_sync", t0, rounds, replicas.len() as u64);
+    }
     loop {
         let m = match recv_poll(&mut ep, Src::Rank(crate::config::topology::MANAGER), TAG_TRAIN_DATA, &down, poll) {
             Some(m) => m,
@@ -455,11 +488,19 @@ pub fn training_host(
             // endpoint. Endpoint probing is cheap and lock-free.
             let stop = model.retrain(&mut || probe_ep_interrupt(&mut ep));
             tel.record("retrain", t0.elapsed());
+            trace::sink().span(ep.rank(), "retrain", t0, rounds, points.len() as u64);
             stop
         };
         tel.bump("rounds");
+        rounds += 1;
         // one shared weight payload for every shard replica (zero-copy fan-out)
-        sync_weights(&ep, &replicas, &*model);
+        if !replicas.is_empty() {
+            let t0 = Instant::now();
+            sync_weights(&ep, &replicas, &*model);
+            tel.bump("weight_syncs");
+            registry().inc(Counter::WeightSyncs);
+            trace::sink().span(ep.rank(), "weight_sync", t0, rounds, replicas.len() as u64);
+        }
         let loss = model.last_loss().unwrap_or(f32::NAN);
         let epochs = model.last_round_epochs() as f32;
         tel.add("epochs", epochs as u64);
@@ -474,6 +515,7 @@ pub fn training_host(
             ep.send(crate::config::topology::MANAGER, TAG_STOP, Payload::empty());
         }
     }
+    record_upload_stats(&mut tel, &*model);
     model.stop_run();
     tel
 }

@@ -17,6 +17,7 @@ use crate::coordinator::oracle_plane::OracleScheduler;
 use crate::data::batch::RowBlock;
 use crate::json::{obj, Value};
 use crate::kernels::Utils;
+use crate::telemetry::registry::{registry, Counter, Gauge};
 use crate::telemetry::{KernelTelemetry, LatencyWindow};
 
 /// Outcome counters the workflow report needs from the Manager.
@@ -59,6 +60,7 @@ fn ingest_oracle_batch_result(
             inflight_rows.remove(&id);
             out.oracle_labels += pairs.len() as u64;
             tel.add("labels", pairs.len() as u64);
+            registry().add(Counter::Labels, pairs.len() as u64);
             tel.bump("oracle_batch_results");
             if drained {
                 tel.add("drained_labels", pairs.len() as u64);
@@ -70,6 +72,7 @@ fn ingest_oracle_batch_result(
         None => {
             tel.bump("malformed");
             tel.bump("bad_frames");
+            registry().inc(Counter::BadFrames);
         }
     }
 }
@@ -116,6 +119,7 @@ fn ingest_oracle_labels(
                 Some(inputs) if inputs.len() == labels.len() => {
                     out.oracle_labels += labels.len() as u64;
                     tel.add("labels", labels.len() as u64);
+                    registry().add(Counter::Labels, labels.len() as u64);
                     tel.bump("oracle_batch_results");
                     if drained {
                         tel.add("drained_labels", labels.len() as u64);
@@ -128,7 +132,9 @@ fn ingest_oracle_labels(
                 Some(inputs) => {
                     tel.bump("malformed");
                     tel.bump("bad_frames");
+                    registry().inc(Counter::BadFrames);
                     tel.add("lost_inputs", inputs.len() as u64);
+                    registry().add(Counter::LostInputs, inputs.len() as u64);
                     recycle_block(block_pool, inputs);
                 }
                 None => {
@@ -139,6 +145,7 @@ fn ingest_oracle_labels(
         None => {
             tel.bump("malformed");
             tel.bump("bad_frames");
+            registry().inc(Counter::BadFrames);
         }
     }
 }
@@ -165,6 +172,7 @@ fn evict_dead_oracle(
         return;
     }
     tel.bump("oracle_evictions");
+    registry().inc(Counter::OracleEvictions);
     for ev in orcl_sched.mark_down(i, now) {
         if let Some(rows) = inflight_rows.remove(&ev.id) {
             for r in 0..rows.len() {
@@ -173,10 +181,12 @@ fn evict_dead_oracle(
             orcl_sched.note_enqueued(now);
             *dispatched_total = dispatched_total.saturating_sub(rows.len() as u64);
             tel.add("requeued_inputs", rows.len() as u64);
+            registry().add(Counter::RequeuedInputs, rows.len() as u64);
             recycle_block(block_pool, rows);
         } else {
             *dispatched_total = dispatched_total.saturating_sub(ev.items as u64);
             tel.add("lost_inputs", ev.items as u64);
+            registry().add(Counter::LostInputs, ev.items as u64);
         }
     }
 }
@@ -212,17 +222,23 @@ fn ingest_oracle_result(
             inflight_input[i] = None;
             oracle_retry_until[i] = None;
             if let Some(sent) = busy_since[i].take() {
-                label_rtts.record(now.saturating_duration_since(sent));
+                let rtt = now.saturating_duration_since(sent);
+                label_rtts.record(rtt);
+                registry().observe_oracle_rtt(rtt);
             }
         }
         // a result from a rank that is not an oracle: no busy flag to
         // clear, but the protocol breakage is counted, not ignored
-        None => tel.bump("bad_frames"),
+        None => {
+            tel.bump("bad_frames");
+            registry().inc(Counter::BadFrames);
+        }
     }
     match codec::unpack_views(data) {
         Some(parts) if parts.len() == 2 => {
             out.oracle_labels += 1;
             tel.bump("labels");
+            registry().inc(Counter::Labels);
             if drained {
                 tel.bump("drained_labels");
             }
@@ -233,6 +249,7 @@ fn ingest_oracle_result(
         _ => {
             tel.bump("malformed");
             tel.bump("bad_frames");
+            registry().inc(Counter::BadFrames);
         }
     }
 }
@@ -275,6 +292,9 @@ pub fn manager_host(
     let adaptive = setting.sched.policy == SchedPolicy::Adaptive;
     let mut orcl_sched =
         OracleScheduler::with_policy(&setting.oracle_batch, &setting.sched, orcl.len());
+    // live registry: label oracle index i as world rank orcl[i] (no-op
+    // publishes while observability is disabled)
+    orcl_sched.observe_as(orcl.clone());
     // Per-label in-flight input retention, so an evicted/dead oracle's
     // input can be requeued and relabeled elsewhere (one clone per
     // dispatch); on under the adaptive policy and whenever a fault plan is
@@ -314,6 +334,7 @@ pub fn manager_host(
         while let Some(m) = ep.try_recv(Src::Any, TAG_RANK_DOWN) {
             did_work = true;
             tel.bump("rank_down_notices");
+            registry().inc(Counter::RankDownNotices);
             let Some(rank) = m.data.first().map(|&f| f as usize) else {
                 continue;
             };
@@ -333,6 +354,8 @@ pub fn manager_host(
                     );
                 } else if !oracle_down[i] {
                     tel.bump("oracle_evictions");
+                    registry().inc(Counter::OracleEvictions);
+                    crate::telemetry::trace::sink().instant(ep.rank(), "evict", rank as u64);
                     oracle_down[i] = true;
                     let was_busy = std::mem::replace(&mut oracle_busy[i], false);
                     busy_since[i] = None;
@@ -341,11 +364,13 @@ pub fn manager_host(
                         orcl_buffer.push_row(&p);
                         dispatched_total = dispatched_total.saturating_sub(1);
                         tel.bump("requeued_inputs");
+                        registry().inc(Counter::RequeuedInputs);
                     } else if was_busy {
                         // input was not retained: lost with the host —
                         // release its budget headroom, record the loss
                         dispatched_total = dispatched_total.saturating_sub(1);
                         tel.bump("lost_inputs");
+                        registry().inc(Counter::LostInputs);
                     }
                 }
             } else if setting.exchange_mode == ExchangeMode::Lockstep
@@ -438,6 +463,7 @@ pub fn manager_host(
         while let Some(m) = ep.try_recv(Src::Any, TAG_RETRAIN_DONE) {
             out.retrain_rounds += 1;
             tel.bump("retrain_rounds");
+            registry().inc(Counter::RetrainRounds);
             if let Some(i) = train.iter().position(|&r| r == m.src) {
                 if let Some(&loss) = m.data.first() {
                     losses_latest[i] = loss;
@@ -475,6 +501,7 @@ pub fn manager_host(
         if oracle_batched {
             for ev in orcl_sched.check_health(now) {
                 tel.bump("oracle_evictions");
+                registry().inc(Counter::OracleEvictions);
                 if let Some(rows) = inflight_rows.remove(&ev.id) {
                     for i in 0..rows.len() {
                         orcl_buffer.push_row(rows.row(i));
@@ -482,6 +509,7 @@ pub fn manager_host(
                     orcl_sched.note_enqueued(now);
                     dispatched_total = dispatched_total.saturating_sub(rows.len() as u64);
                     tel.add("requeued_inputs", rows.len() as u64);
+                    registry().add(Counter::RequeuedInputs, rows.len() as u64);
                     recycle_block(&mut block_pool, rows);
                     did_work = true;
                 }
@@ -498,6 +526,8 @@ pub fn manager_host(
                         continue;
                     }
                     tel.bump("oracle_evictions");
+                    registry().inc(Counter::OracleEvictions);
+                    crate::telemetry::trace::sink().instant(ep.rank(), "evict", orcl[i] as u64);
                     oracle_busy[i] = false;
                     busy_since[i] = None;
                     oracle_retry_until[i] = Some(now + setting.sched.rejoin_backoff);
@@ -505,8 +535,10 @@ pub fn manager_host(
                     if let Some(p) = inflight_input[i].take() {
                         orcl_buffer.push_row(&p);
                         tel.bump("requeued_inputs");
+                        registry().inc(Counter::RequeuedInputs);
                     } else {
                         tel.bump("lost_inputs");
+                        registry().inc(Counter::LostInputs);
                     }
                     did_work = true;
                 }
@@ -544,7 +576,9 @@ pub fn manager_host(
                 inflight_rows.insert(d.id, block);
                 dispatched_total += d.take as u64;
                 tel.add("dispatched", d.take as u64);
+                registry().add(Counter::Dispatched, d.take as u64);
                 tel.bump("oracle_batches");
+                registry().inc(Counter::OracleBatches);
                 if d.take < setting.oracle_batch.max_size {
                     tel.bump("oracle_partial_batches");
                 }
@@ -553,6 +587,7 @@ pub fn manager_host(
                     // now (requeues this batch and any others it held)
                     // instead of waiting for the rank-down notice
                     tel.bump("dead_letter_dispatches");
+                    registry().inc(Counter::DeadLetterDispatches);
                     evict_dead_oracle(
                         &mut orcl_sched,
                         &mut inflight_rows,
@@ -597,6 +632,7 @@ pub fn manager_host(
                         } else {
                             orcl_buffer.push_row(&p);
                             tel.bump("requeued_inputs");
+                            registry().inc(Counter::RequeuedInputs);
                         }
                         ok
                     } else {
@@ -607,14 +643,17 @@ pub fn manager_host(
                         let ok = ep.send(rank, TAG_TO_ORACLE, input);
                         if !ok {
                             tel.bump("lost_inputs");
+                            registry().inc(Counter::LostInputs);
                         }
                         ok
                     };
                     if !sent {
                         // dead letter: the oracle's endpoint is gone
                         tel.bump("dead_letter_dispatches");
+                        registry().inc(Counter::DeadLetterDispatches);
                         if !oracle_down[i] {
                             tel.bump("oracle_evictions");
+                            registry().inc(Counter::OracleEvictions);
                             oracle_down[i] = true;
                         }
                         did_work = true;
@@ -624,6 +663,7 @@ pub fn manager_host(
                     busy_since[i] = Some(Instant::now());
                     dispatched_total += 1;
                     tel.bump("dispatched");
+                    registry().inc(Counter::Dispatched);
                     did_work = true;
                 } else {
                     break;
@@ -643,6 +683,13 @@ pub fn manager_host(
                 did_work = true;
             }
         }
+
+        // --- live gauges: overwritten once per loop pass (each a single
+        // relaxed load + branch while observability is disabled) ---
+        registry().gauge_set(Gauge::OracleQueueDepth, orcl_buffer.len() as u64);
+        registry().gauge_set(Gauge::TrainBufferDepth, train_buffer.len() as u64);
+        registry().gauge_set(Gauge::OracleInFlight, orcl_sched.in_flight() as u64);
+        registry().gauge_set(Gauge::OracleInFlightItems, orcl_sched.in_flight_items() as u64);
 
         // --- progress snapshot ---
         if last_save.elapsed() >= setting.progress_save_interval {
@@ -808,6 +855,7 @@ fn drain_oracle_results(
         // drain is not pinned open waiting on replies that can never come
         while let Some(m) = ep.try_recv(Src::Any, TAG_RANK_DOWN) {
             tel.bump("rank_down_notices");
+            registry().inc(Counter::RankDownNotices);
             let Some(rank) = m.data.first().map(|&f| f as usize) else {
                 continue;
             };
@@ -815,18 +863,21 @@ fn drain_oracle_results(
                 if oracle_batched {
                     for ev in orcl_sched.mark_down(i, Instant::now()) {
                         tel.bump("oracle_evictions");
+                        registry().inc(Counter::OracleEvictions);
                         // the run is ending: nothing re-dispatches, so the
                         // dead host's in-flight inputs are honestly lost
                         if let Some(rows) = inflight_rows.remove(&ev.id) {
                             recycle_block(block_pool, rows);
                         }
                         tel.add("lost_inputs", ev.items as u64);
+                        registry().add(Counter::LostInputs, ev.items as u64);
                     }
                 } else {
                     oracle_busy[i] = false;
                     busy_since[i] = None;
                     if inflight_input[i].take().is_some() {
                         tel.bump("lost_inputs");
+                        registry().inc(Counter::LostInputs);
                     }
                 }
             }

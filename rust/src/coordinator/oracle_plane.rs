@@ -43,7 +43,9 @@
 use std::time::{Duration, Instant};
 
 use crate::config::{BatchSetting, SchedPolicy, SchedSetting};
-use crate::coordinator::dispatch::{BuiltinPolicy, DispatchConfig, DispatchCore, Eviction};
+use crate::coordinator::dispatch::{
+    BuiltinPolicy, DispatchConfig, DispatchCore, DispatchLeg, Eviction,
+};
 
 /// A dispatch decision: send batch `id` with `take` queue-head inputs to
 /// oracle index `oracle`.
@@ -85,6 +87,13 @@ impl OracleScheduler {
             core: DispatchCore::new(DispatchConfig::new(batch, sched), policy, n_oracles),
             queued_since: None,
         }
+    }
+
+    /// Publish per-oracle dispatch state (outstanding batches, EWMA) to the
+    /// live metrics registry, labeling oracle index `i` as `ranks[i]`.
+    /// See [`crate::coordinator::dispatch::DispatchCore::observe_as`].
+    pub fn observe_as(&mut self, ranks: Vec<usize>) {
+        self.core.observe_as(ranks, DispatchLeg::Oracle);
     }
 
     /// Inputs were appended to the (external) queue. Starts the deadline

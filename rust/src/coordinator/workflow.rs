@@ -24,7 +24,9 @@ use crate::comm::{ControlHandle, FaultKill, FaultPlan, TransportKind, World};
 use crate::config::{topology, AlSetting, Topology};
 use crate::coordinator::{exchange, hosts, manager};
 use crate::kernels::{KernelSet, Mode, OracleFactory};
-use crate::telemetry::{FaultReport, KernelTelemetry, RunReport};
+use crate::telemetry::registry::{registry, Counter, RankKind, RankState};
+use crate::telemetry::server::MetricsServer;
+use crate::telemetry::{trace, FaultReport, KernelTelemetry, RunReport};
 
 pub use crate::kernels::KernelSet as Kernels;
 
@@ -39,14 +41,24 @@ fn supervised<F>(ctrl: ControlHandle, kernel: &'static str, rank: usize, body: F
 where
     F: FnOnce() -> KernelTelemetry,
 {
+    // live registry: the supervisor owns the rank's lifecycle row in
+    // `/status` (no-op publishes while observability is disabled)
+    registry().set_rank_kind(rank, RankKind::from_kernel(kernel));
+    registry().set_rank_state(rank, RankState::Running);
     match catch_unwind(AssertUnwindSafe(body)) {
-        Ok(tel) => tel,
+        Ok(tel) => {
+            registry().set_rank_state(rank, RankState::Done);
+            tel
+        }
         Err(payload) => {
             let mut tel = KernelTelemetry::new(kernel, rank);
             tel.bump("failed");
             if payload.downcast_ref::<FaultKill>().is_some() {
                 tel.bump("fault_injected");
             }
+            registry().set_rank_state(rank, RankState::Failed);
+            registry().inc(Counter::HostFailures);
+            trace::sink().instant(rank, "rank_down", rank as u64);
             ctrl.send(topology::MANAGER, TAG_RANK_DOWN, vec![rank as f32]);
             if rank != topology::EXCHANGE {
                 ctrl.send(topology::EXCHANGE, TAG_RANK_DOWN, vec![rank as f32]);
@@ -216,6 +228,25 @@ impl Workflow {
             world.set_fault_plan(plan.clone());
         }
         let world_stats = world.stats();
+        // Observability plane: arm the live registry (and, if configured,
+        // the HTTP surface and trace sink) before any kernel thread spawns
+        // so no publish is lost. Everything below is a no-op for runs that
+        // configure neither `metrics_addr` nor `trace_out`.
+        let observing = self.setting.metrics_addr.is_some() || self.setting.trace_out.is_some();
+        if observing {
+            registry().reset_for_run(Some(world_stats.clone()));
+            registry().set_enabled(true);
+        }
+        let metrics_server = match self.setting.metrics_addr.as_deref() {
+            Some(addr) => Some(
+                MetricsServer::start(addr)
+                    .with_context(|| format!("binding metrics server on {addr}"))?,
+            ),
+            None => None,
+        };
+        if self.setting.trace_out.is_some() {
+            trace::sink().begin();
+        }
         let down = Arc::new(AtomicBool::new(false));
         let t0 = Instant::now();
 
@@ -346,11 +377,16 @@ impl Workflow {
         }
 
         // Manager runs on the caller thread (rank 0) — it is the shutdown
-        // authority, so the workflow returns exactly when it decides.
+        // authority, so the workflow returns exactly when it decides. It is
+        // not `supervised` (its death is the run's death), so its registry
+        // lifecycle row is published here.
+        registry().set_rank_kind(topology::MANAGER, RankKind::Manager);
+        registry().set_rank_state(topology::MANAGER, RankState::Running);
         let manager_ep = world.endpoint(topology::MANAGER);
         drop(world); // release the spare sender clones held by World
         let (manager_tel, outcome) =
             manager::manager_host(manager_ep, utils(), &self.setting, topo, down);
+        registry().set_rank_state(topology::MANAGER, RankState::Done);
 
         let mut report = RunReport {
             al_iterations: 0,
@@ -418,6 +454,21 @@ impl Workflow {
         faults.failed_ranks.sort_unstable();
         faults.dead_letters = world_stats.dead_letters();
         report.faults = faults;
+        // Tear down the observability plane last, so a scraper that raced
+        // the final joins still saw live (and now final) numbers. The
+        // trace drains only after every host joined — lanes are complete.
+        if let Some(server) = metrics_server {
+            server.stop();
+        }
+        if let Some(path) = self.setting.trace_out.as_deref() {
+            trace::sink().end();
+            trace::sink()
+                .drain_to_file(path)
+                .with_context(|| format!("writing trace to {path}"))?;
+        }
+        if observing {
+            registry().set_enabled(false);
+        }
         Ok(report)
     }
 }

@@ -560,6 +560,10 @@ impl Model for HloPotentialModel {
         self.last_round_epochs
     }
 
+    fn upload_stats(&self) -> Option<crate::runtime::UploadStats> {
+        Some(self.engine.upload_stats())
+    }
+
     fn save_progress(&mut self) {
         self.write_checkpoint();
     }

@@ -303,4 +303,8 @@ impl Model for HloSurrogateModel {
     fn last_loss(&self) -> Option<f32> {
         self.last_loss
     }
+
+    fn upload_stats(&self) -> Option<crate::runtime::UploadStats> {
+        Some(self.engine.upload_stats())
+    }
 }

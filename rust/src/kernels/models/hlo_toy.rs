@@ -282,4 +282,8 @@ impl Model for HloToyModel {
     fn last_loss(&self) -> Option<f32> {
         self.last_loss
     }
+
+    fn upload_stats(&self) -> Option<crate::runtime::UploadStats> {
+        Some(self.engine.upload_stats())
+    }
 }

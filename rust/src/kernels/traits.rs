@@ -160,6 +160,15 @@ pub trait Model {
     fn save_progress(&mut self) {}
 
     fn stop_run(&mut self) {}
+
+    /// Device upload-cache statistics, if this model's backend keeps any
+    /// (observability hook). The hosts fold the returned snapshot into
+    /// their [`KernelTelemetry`](crate::telemetry::KernelTelemetry) at
+    /// join, so `RunReport::to_json` can report engine-level cache
+    /// efficiency; models without a device engine keep the `None` default.
+    fn upload_stats(&self) -> Option<crate::runtime::UploadStats> {
+        None
+    }
 }
 
 /// Controller customization points (SI "Utilities").

@@ -21,7 +21,7 @@
 //! | [`serial`] | the Fig.-1a serial active-learning baseline |
 //! | [`sim`] | SI §S2 analytic speedup model + synthetic workloads |
 //! | [`data`] | labeled dataset store, splits, rolling windows |
-//! | [`telemetry`] | per-kernel timing and counters |
+//! | [`telemetry`] | post-mortem per-kernel timing/counters + the live observability plane (metrics registry, HTTP surface, trace recorder) |
 //! | [`json`], [`rng`], [`prop`], [`bench_util`] | offline substrates (no external deps available) |
 //!
 //! ## Batched, sharded prediction (beyond the paper)
@@ -147,9 +147,10 @@
 //!   adopted from a trainer sync stage once and every subsequent
 //!   `predict_batch`/`train_step`/`validation_mse` between syncs reuses
 //!   the staged literal (zero re-upload bytes; cache hits tracked by
-//!   [`runtime::UploadStats`]). Invalidation is by construction: any
-//!   local weight write drops the shared payload, and a fresh sync is a
-//!   new identity.
+//!   [`runtime::UploadStats`] and folded into each host's telemetry as
+//!   `upload_cache_*` counters, aggregated in `RunReport::to_json`).
+//!   Invalidation is by construction: any local weight write drops the
+//!   shared payload, and a fresh sync is a new identity.
 //! * **Labels-only oracle results** — see the oracle plane above; batched
 //!   result frames carry labels, not echoed inputs, ~halving green-flow
 //!   result bytes at batch 8.
@@ -245,6 +246,46 @@
 //! (`rust/tests/test_transport.rs`, including a two-process tcp e2e), and
 //! `BENCH_transport.json` gates the shm rings at ≥ 1.5× the channel
 //! backend's small-payload fan-in rate with zero payload bytes copied.
+//!
+//! ## Observability plane
+//!
+//! A live run is no longer a black box that only yields a `RunReport` at
+//! join. Three layers sit on the post-mortem [`telemetry`]:
+//!
+//! * **[`telemetry::registry`]** — one process-wide `MetricsRegistry` of
+//!   relaxed atomics that the Manager, Exchange, dispatch core, oracle
+//!   plane, and host supervisors publish into while running: labels/sec
+//!   and campaign progress, queue depths, per-endpoint outstanding
+//!   batches / EWMA latency / liveness, log₂-bucketed oracle- and
+//!   prediction-leg RTT histograms, live fault counters, per-rank kernel
+//!   state, and the [`comm::bus::WorldStats`] logical-vs-physical byte
+//!   split. Every publish is enabled-gated: the disabled registry (the
+//!   default — no `--metrics-addr`) costs one relaxed load and a branch,
+//!   zero stores and zero allocations, so unobserved runs stay
+//!   bit-identical (pinned in `rust/tests/test_observability.rs`).
+//!   Naming scheme: `pal_` prefix, counters end `_total`, instantaneous
+//!   gauges are bare, histograms are `_ms` log₂ buckets, per-endpoint
+//!   series carry `{rank,kind}` labels (see [`telemetry::registry`]).
+//! * **[`telemetry::server`]** — `pal run --metrics-addr=127.0.0.1:9090`
+//!   (config key `metrics_addr`; port 0 binds ephemerally) serves
+//!   `/metrics` (Prometheus text exposition), `/status` (JSON snapshot
+//!   whose `faults` section is field-consistent with the final
+//!   `RunReport.faults` — same counters, same call sites), and
+//!   `/healthz`, on the same `std::net` stack as the tcp transport; the
+//!   scrape path never locks the publish path.
+//! * **[`telemetry::trace`]** — `pal run --trace-out=trace.json` (config
+//!   key `trace_out`) records bounded per-rank spans — `predict`,
+//!   `oracle_calc`, `retrain`, `weight_sync` work spans plus
+//!   `pred_batch`/`oracle_batch` dispatch-leg lifecycles and
+//!   `rank_down`/`evict` instants — and drains them at join into Chrome
+//!   trace-event JSON loadable in Perfetto. Span counts equal the
+//!   matching `RunReport` counters by construction (same call sites).
+//!
+//! `rust/tests/test_observability.rs` scrapes both endpoints mid-run,
+//! clean and under chaos, and `BENCH_obs.json` gates the cost: a
+//! registry-enabled labeling run within 2% of the disabled wall, and the
+//! disabled publish hot path allocation-free under the counting
+//! allocator.
 //!
 //! ## Performance
 //!

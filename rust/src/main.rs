@@ -31,7 +31,10 @@ fn main() {
                  speedup [--n N --p P]      SI §S2 analytic speedup table\n\
                  run [--config f.json]      run the SI toy workflow\n\
                  \x20   [--iters N]          bound exchange iterations (default 50)\n\
-                 \x20   [--transport T]      rank bus backend: channel|shm|tcp"
+                 \x20   [--transport T]      rank bus backend: channel|shm|tcp\n\
+                 \x20   [--metrics-addr A]   serve live /metrics + /status on A\n\
+                 \x20                        (e.g. 127.0.0.1:9090; port 0 = ephemeral)\n\
+                 \x20   [--trace-out F]      write per-phase Chrome trace JSON to F"
             );
             if cmd == "help" { 0 } else { 2 }
         }
@@ -115,6 +118,12 @@ fn cmd_run(args: &Args) -> i32 {
                 return 2;
             }
         };
+    }
+    if let Some(a) = args.get("metrics-addr") {
+        setting.metrics_addr = Some(a.to_string());
+    }
+    if let Some(f) = args.get("trace-out") {
+        setting.trace_out = Some(f.to_string());
     }
 
     let dir = default_artifacts_dir();

@@ -4,11 +4,22 @@
 //! 4.27 ms communication + propagation). Each kernel host owns a
 //! [`KernelTelemetry`], times its phases with [`KernelTelemetry::time`],
 //! and returns it on join; [`RunReport`] aggregates across ranks.
+//!
+//! Post-mortem telemetry is complemented by the live observability plane:
+//! [`registry`] is the process-wide atomic [`registry::MetricsRegistry`]
+//! the coordinators publish into while a run is in flight, [`server`]
+//! serves it over HTTP (`/metrics`, `/status`, `/healthz`), and [`trace`]
+//! records per-rank phase spans drained into Chrome trace-event JSON.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::json::{obj, Value};
+
+pub mod registry;
+pub mod server;
+pub mod trace;
 
 /// Accumulating timer: count + total + max.
 #[derive(Debug, Default, Clone, Copy)]
@@ -45,13 +56,18 @@ impl Timer {
 /// [`Timer`] keeps count/total/max only, which is enough for means but not
 /// for tail-aware decisions (the dispatch core scales the Manager's shutdown
 /// drain bound with observed p95 oracle latency). This window keeps the last
-/// `cap` samples and answers percentiles by nearest-rank over a sorted copy —
-/// O(n log n) per query on a small bounded n, called once per drain.
-#[derive(Debug, Clone)]
+/// `cap` samples and answers percentiles by nearest-rank over a reusable
+/// sort scratch — O(n log n) per query on a small bounded n, but zero
+/// steady-state allocations now that the metrics server queries it on
+/// every scrape rather than once per drain.
+#[derive(Debug)]
 pub struct LatencyWindow {
     samples: Vec<Duration>,
     next: usize,
     cap: usize,
+    /// Reusable percentile sort buffer; interior mutability keeps the
+    /// `&self` query signature for the read-mostly call sites.
+    scratch: RefCell<Vec<Duration>>,
 }
 
 impl Default for LatencyWindow {
@@ -60,9 +76,26 @@ impl Default for LatencyWindow {
     }
 }
 
+impl Clone for LatencyWindow {
+    fn clone(&self) -> Self {
+        // the scratch is a cache, not state — fresh clones start empty
+        LatencyWindow {
+            samples: self.samples.clone(),
+            next: self.next,
+            cap: self.cap,
+            scratch: RefCell::new(Vec::new()),
+        }
+    }
+}
+
 impl LatencyWindow {
     pub fn new(cap: usize) -> Self {
-        LatencyWindow { samples: Vec::new(), next: 0, cap: cap.max(1) }
+        LatencyWindow {
+            samples: Vec::new(),
+            next: 0,
+            cap: cap.max(1),
+            scratch: RefCell::new(Vec::new()),
+        }
     }
 
     pub fn record(&mut self, d: Duration) {
@@ -83,11 +116,15 @@ impl LatencyWindow {
     }
 
     /// Nearest-rank percentile (`q` in [0, 1]) over the retained samples.
+    /// Sorts into the reusable scratch buffer: the first query allocates
+    /// it, every later query (one per `/metrics` scrape) reuses it.
     pub fn percentile(&self, q: f64) -> Option<Duration> {
         if self.samples.is_empty() {
             return None;
         }
-        let mut sorted = self.samples.clone();
+        let mut sorted = self.scratch.borrow_mut();
+        sorted.clear();
+        sorted.extend_from_slice(&self.samples);
         sorted.sort_unstable();
         let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize)
             .saturating_sub(1)
@@ -287,6 +324,27 @@ impl RunReport {
         self.kernel(kernel).iter().map(|k| k.counter(counter)).sum()
     }
 
+    /// Sum of a counter across every kernel of every rank.
+    pub fn sum_counter_all(&self, counter: &str) -> u64 {
+        self.kernels.iter().map(|k| k.counter(counter)).sum()
+    }
+
+    /// Aggregated `UploadCache` effectiveness across every engine-backed
+    /// kernel (prediction replicas + trainers): cache hits skip the
+    /// host→device staging copy entirely, `bytes_reused` is the staging
+    /// volume those hits avoided.
+    pub fn upload_cache_json(&self) -> Value {
+        obj(vec![
+            ("hits", Value::Num(self.sum_counter_all("upload_cache_hits") as f64)),
+            ("misses", Value::Num(self.sum_counter_all("upload_cache_misses") as f64)),
+            (
+                "bytes_uploaded",
+                Value::Num(self.sum_counter_all("upload_cache_bytes_uploaded") as f64),
+            ),
+            ("bytes_reused", Value::Num(self.sum_counter_all("upload_cache_bytes_reused") as f64)),
+        ])
+    }
+
     pub fn to_json(&self) -> Value {
         obj(vec![
             ("al_iterations", Value::Num(self.al_iterations as f64)),
@@ -302,6 +360,7 @@ impl RunReport {
                 Value::Array(self.final_losses.iter().map(|l| Value::Num(*l as f64)).collect()),
             ),
             ("faults", self.faults.to_json()),
+            ("upload_cache", self.upload_cache_json()),
             ("kernels", Value::Array(self.kernels.iter().map(|k| k.to_json()).collect())),
         ])
     }
@@ -332,6 +391,25 @@ mod tests {
         assert_eq!(w.p95(), Some(Duration::from_millis(95)));
         assert_eq!(w.percentile(1.0), Some(Duration::from_millis(100)));
         assert_eq!(w.percentile(0.0), Some(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn latency_window_percentile_scratch_is_reused() {
+        let mut w = LatencyWindow::new(64);
+        for ms in [5u64, 1, 9, 3] {
+            w.record(Duration::from_millis(ms));
+        }
+        // repeated queries (the per-scrape pattern) stay consistent and
+        // interleave with records without disturbing the ring
+        for _ in 0..3 {
+            assert_eq!(w.percentile(1.0), Some(Duration::from_millis(9)));
+            assert_eq!(w.percentile(0.0), Some(Duration::from_millis(1)));
+        }
+        w.record(Duration::from_millis(20));
+        assert_eq!(w.p95(), Some(Duration::from_millis(20)));
+        // clones answer queries independently of the source's scratch
+        let c = w.clone();
+        assert_eq!(c.percentile(0.5), w.percentile(0.5));
     }
 
     #[test]
@@ -371,5 +449,23 @@ mod tests {
         assert_eq!(r.sum_counter("prediction", "n"), 3);
         assert!((r.mean_timer_ms("prediction", "fwd") - 10.0).abs() < 2.0);
         assert_eq!(r.mean_timer_ms("oracle", "calc"), 0.0);
+    }
+
+    #[test]
+    fn report_aggregates_upload_cache_counters() {
+        let mut r = RunReport::default();
+        let mut p = KernelTelemetry::new("prediction", 2);
+        p.add("upload_cache_hits", 7);
+        p.add("upload_cache_bytes_reused", 640);
+        let mut t = KernelTelemetry::new("training", 5);
+        t.add("upload_cache_hits", 3);
+        t.add("upload_cache_misses", 1);
+        r.kernels.push(p);
+        r.kernels.push(t);
+        let j = r.to_json();
+        let up = j.get("upload_cache");
+        assert_eq!(up.get("hits").as_f64(), Some(10.0));
+        assert_eq!(up.get("misses").as_f64(), Some(1.0));
+        assert_eq!(up.get("bytes_reused").as_f64(), Some(640.0));
     }
 }

@@ -1,0 +1,874 @@
+//! Process-wide live metrics registry — the publish side of the
+//! observability plane.
+//!
+//! [`KernelTelemetry`](super::KernelTelemetry) is post-mortem: it is only
+//! visible after a host joins. The [`MetricsRegistry`] is the *live* view:
+//! Manager, Exchange, the dispatch core, the oracle plane, and the host
+//! supervisors publish into one process-wide set of relaxed atomics while
+//! the run is in flight, and the metrics server
+//! ([`super::server`]) renders a consistent-enough snapshot on every
+//! scrape without ever touching a lock on the publish path.
+//!
+//! Publish-path cost model, in order:
+//! - registry **disabled** (the default — no `--metrics-addr`, no bench
+//!   opt-in): one relaxed load + one predictable branch, zero stores,
+//!   zero allocations. `BENCH_obs.json` gates this with the counting
+//!   allocator.
+//! - registry **enabled**: one relaxed `fetch_add`/`store` per event,
+//!   still zero allocations — all storage is fixed-size arrays of
+//!   atomics sized at init.
+//!
+//! Naming scheme (Prometheus exposition): every series is prefixed
+//! `pal_`; monotonic counters end in `_total`; instantaneous values are
+//! bare gauges (`pal_oracle_queue_depth`); latency distributions are
+//! log₂-bucketed histograms in milliseconds (`pal_oracle_rtt_ms`);
+//! per-endpoint series carry `{rank="…",kind="…"}` labels. The same
+//! names (sans prefix) appear in the `/status` JSON snapshot.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::comm::bus::WorldStats;
+use crate::json::{obj, Value};
+
+/// Endpoint/rank slots the registry pre-allocates. Ranks at or above this
+/// simply aren't tracked per-endpoint (global counters still see them).
+pub const MAX_RANKS: usize = 128;
+
+/// Monotonic global counters. One atomic each, published with
+/// [`MetricsRegistry::inc`]/[`MetricsRegistry::add`] at the same sites
+/// that bump the matching [`KernelTelemetry`](super::KernelTelemetry)
+/// counter — so the live view and the post-mortem report agree by
+/// construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Labeled samples ingested by the Manager.
+    Labels = 0,
+    /// Inputs dispatched to oracles.
+    Dispatched,
+    /// Oracle micro-batches dispatched.
+    OracleBatches,
+    /// Prediction micro-batches dispatched by the Exchange.
+    PredBatches,
+    /// Candidate samples selected for oracle labeling.
+    SelectedForOracle,
+    /// Exchange main-loop iterations.
+    AlIterations,
+    /// Retrain rounds observed by the Manager.
+    RetrainRounds,
+    /// Weight syncs broadcast by trainers.
+    WeightSyncs,
+    /// Oracles evicted by the Manager (fault plane).
+    OracleEvictions,
+    /// Prediction shards evicted by the Exchange (fault plane).
+    ShardEvictions,
+    /// Oracle inputs requeued after an eviction.
+    RequeuedInputs,
+    /// Prediction items requeued after a shard eviction.
+    RequeuedItems,
+    /// Dispatched inputs lost with a dead host.
+    LostInputs,
+    /// Dispatches that dead-lettered on send.
+    DeadLetterDispatches,
+    /// Undecodable/unknown-sender frames.
+    BadFrames,
+    /// TAG_RANK_DOWN notices processed by coordinators.
+    RankDownNotices,
+    /// Host panics caught by the supervisor (incl. injected faults).
+    HostFailures,
+}
+
+const N_COUNTERS: usize = Counter::HostFailures as usize + 1;
+
+impl Counter {
+    const ALL: [Counter; N_COUNTERS] = [
+        Counter::Labels,
+        Counter::Dispatched,
+        Counter::OracleBatches,
+        Counter::PredBatches,
+        Counter::SelectedForOracle,
+        Counter::AlIterations,
+        Counter::RetrainRounds,
+        Counter::WeightSyncs,
+        Counter::OracleEvictions,
+        Counter::ShardEvictions,
+        Counter::RequeuedInputs,
+        Counter::RequeuedItems,
+        Counter::LostInputs,
+        Counter::DeadLetterDispatches,
+        Counter::BadFrames,
+        Counter::RankDownNotices,
+        Counter::HostFailures,
+    ];
+
+    /// Prometheus series name (also the `/status` JSON key sans `pal_`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Labels => "pal_labels_total",
+            Counter::Dispatched => "pal_dispatched_inputs_total",
+            Counter::OracleBatches => "pal_oracle_batches_total",
+            Counter::PredBatches => "pal_pred_batches_total",
+            Counter::SelectedForOracle => "pal_selected_for_oracle_total",
+            Counter::AlIterations => "pal_al_iterations_total",
+            Counter::RetrainRounds => "pal_retrain_rounds_total",
+            Counter::WeightSyncs => "pal_weight_syncs_total",
+            Counter::OracleEvictions => "pal_oracle_evictions_total",
+            Counter::ShardEvictions => "pal_shard_evictions_total",
+            Counter::RequeuedInputs => "pal_requeued_inputs_total",
+            Counter::RequeuedItems => "pal_requeued_items_total",
+            Counter::LostInputs => "pal_lost_inputs_total",
+            Counter::DeadLetterDispatches => "pal_dead_letter_dispatches_total",
+            Counter::BadFrames => "pal_bad_frames_total",
+            Counter::RankDownNotices => "pal_rank_down_notices_total",
+            Counter::HostFailures => "pal_host_failures_total",
+        }
+    }
+
+    fn json_key(self) -> &'static str {
+        // strip "pal_" — the JSON snapshot nests under explicit sections
+        &self.name()[4..]
+    }
+}
+
+/// Instantaneous gauges, overwritten each coordinator pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Gauge {
+    /// Inputs buffered at the Manager awaiting oracle dispatch.
+    OracleQueueDepth = 0,
+    /// Labeled pairs buffered at the Manager awaiting a train flush.
+    TrainBufferDepth,
+    /// Generator items queued at the Exchange awaiting a shard.
+    PredQueueDepth,
+    /// Oracle batches currently in flight.
+    OracleInFlight,
+    /// Oracle *items* currently in flight.
+    OracleInFlightItems,
+    /// Prediction batches currently in flight.
+    PredInFlight,
+}
+
+const N_GAUGES: usize = Gauge::PredInFlight as usize + 1;
+
+impl Gauge {
+    const ALL: [Gauge; N_GAUGES] = [
+        Gauge::OracleQueueDepth,
+        Gauge::TrainBufferDepth,
+        Gauge::PredQueueDepth,
+        Gauge::OracleInFlight,
+        Gauge::OracleInFlightItems,
+        Gauge::PredInFlight,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::OracleQueueDepth => "pal_oracle_queue_depth",
+            Gauge::TrainBufferDepth => "pal_train_buffer_depth",
+            Gauge::PredQueueDepth => "pal_pred_queue_depth",
+            Gauge::OracleInFlight => "pal_oracle_in_flight_batches",
+            Gauge::OracleInFlightItems => "pal_oracle_in_flight_items",
+            Gauge::PredInFlight => "pal_pred_in_flight_batches",
+        }
+    }
+
+    fn json_key(self) -> &'static str {
+        &self.name()[4..]
+    }
+}
+
+/// What kind of kernel a rank hosts (for `/status` and endpoint labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u64)]
+pub enum RankKind {
+    Unknown = 0,
+    Manager,
+    Exchange,
+    Prediction,
+    Training,
+    Generator,
+    Oracle,
+}
+
+impl RankKind {
+    fn from_u64(v: u64) -> RankKind {
+        match v {
+            1 => RankKind::Manager,
+            2 => RankKind::Exchange,
+            3 => RankKind::Prediction,
+            4 => RankKind::Training,
+            5 => RankKind::Generator,
+            6 => RankKind::Oracle,
+            _ => RankKind::Unknown,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RankKind::Unknown => "unknown",
+            RankKind::Manager => "manager",
+            RankKind::Exchange => "exchange",
+            RankKind::Prediction => "prediction",
+            RankKind::Training => "training",
+            RankKind::Generator => "generator",
+            RankKind::Oracle => "oracle",
+        }
+    }
+
+    /// Map a host thread's kernel label (as used by `supervised`) back to
+    /// a kind; unknown labels stay `Unknown`.
+    pub fn from_kernel(kernel: &str) -> RankKind {
+        match kernel {
+            "manager" => RankKind::Manager,
+            "exchange" => RankKind::Exchange,
+            "prediction" => RankKind::Prediction,
+            "training" => RankKind::Training,
+            "generator" => RankKind::Generator,
+            "oracle" => RankKind::Oracle,
+            _ => RankKind::Unknown,
+        }
+    }
+}
+
+/// Lifecycle state of a rank's host thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u64)]
+pub enum RankState {
+    Absent = 0,
+    Running,
+    Done,
+    Failed,
+}
+
+impl RankState {
+    fn from_u64(v: u64) -> RankState {
+        match v {
+            1 => RankState::Running,
+            2 => RankState::Done,
+            3 => RankState::Failed,
+            _ => RankState::Absent,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RankState::Absent => "absent",
+            RankState::Running => "running",
+            RankState::Done => "done",
+            RankState::Failed => "failed",
+        }
+    }
+}
+
+/// Per-rank slot: kernel kind + lifecycle + (for dispatch endpoints)
+/// outstanding work and smoothed latency. All fields relaxed atomics;
+/// `ewma_ms` carries `f64::to_bits`.
+#[derive(Default)]
+struct RankSlot {
+    kind: AtomicU64,
+    state: AtomicU64,
+    outstanding: AtomicU64,
+    outstanding_items: AtomicU64,
+    completed_batches: AtomicU64,
+    ewma_ms_bits: AtomicU64,
+    dead: AtomicU64,
+}
+
+impl RankSlot {
+    fn reset(&self) {
+        self.kind.store(0, Ordering::Relaxed);
+        self.state.store(0, Ordering::Relaxed);
+        self.outstanding.store(0, Ordering::Relaxed);
+        self.outstanding_items.store(0, Ordering::Relaxed);
+        self.completed_batches.store(0, Ordering::Relaxed);
+        self.ewma_ms_bits.store(0, Ordering::Relaxed);
+        self.dead.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Log₂-bucketed latency histogram in milliseconds: `le` bounds
+/// 1, 2, 4, …, 2^15 ms plus +Inf. Fixed shape → publish is one
+/// `fetch_add` into a bucket plus count/sum, zero allocations.
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 17; // le=1..=32768 ms (16) + +Inf
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    fn bucket_bound_ms(i: usize) -> u64 {
+        1u64 << i
+    }
+
+    fn observe(&self, d: Duration) {
+        let ms = d.as_millis() as u64;
+        // index of the first power-of-two bound >= ms (+Inf past 2^15)
+        let idx = if ms <= 1 {
+            0
+        } else {
+            let b = 64 - (ms - 1).leading_zeros() as usize;
+            b.min(HIST_BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ms() / n as f64
+        }
+    }
+
+    /// Approximate nearest-rank percentile: the upper bound of the bucket
+    /// holding the q-th observation (+Inf reports the largest finite bound).
+    fn percentile_ms(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_bound_ms(i.min(HIST_BUCKETS - 2)) as f64;
+            }
+        }
+        Self::bucket_bound_ms(HIST_BUCKETS - 2) as f64
+    }
+
+    /// Cumulative Prometheus buckets: `(le_label, cumulative_count)`.
+    fn cumulative(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::with_capacity(HIST_BUCKETS);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            let le = if i == HIST_BUCKETS - 1 {
+                "+Inf".to_string()
+            } else {
+                format!("{}", Self::bucket_bound_ms(i))
+            };
+            out.push((le, cum));
+        }
+        out
+    }
+}
+
+/// The process-wide live metrics registry. One instance per process
+/// (see [`registry()`]); a [`Workflow`](crate::coordinator::Workflow)
+/// run resets it at start when observability is configured.
+pub struct MetricsRegistry {
+    enabled: AtomicBool,
+    counters: [AtomicU64; N_COUNTERS],
+    gauges: [AtomicU64; N_GAUGES],
+    ranks: [RankSlot; MAX_RANKS],
+    /// Oracle-leg round-trip (dispatch → labels ingested at the Manager).
+    oracle_rtt: AtomicHistogram,
+    /// Prediction-leg round-trip (dispatch → batch completed at the Exchange).
+    pred_rtt: AtomicHistogram,
+    /// Run start, for scrape-time rates (labels/sec). Scrape-path only.
+    start: Mutex<Option<Instant>>,
+    /// Live transport stats of the current run's `World`. Scrape-path only.
+    world: Mutex<Option<Arc<WorldStats>>>,
+    /// Address the metrics server actually bound (port 0 resolves here).
+    bound_addr: Mutex<Option<SocketAddr>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry {
+            enabled: AtomicBool::new(false),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            ranks: std::array::from_fn(|_| RankSlot::default()),
+            oracle_rtt: AtomicHistogram::default(),
+            pred_rtt: AtomicHistogram::default(),
+            start: Mutex::new(None),
+            world: Mutex::new(None),
+            bound_addr: Mutex::new(None),
+        }
+    }
+}
+
+static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-wide registry (created on first touch, disabled until a
+/// run or bench enables it).
+pub fn registry() -> &'static MetricsRegistry {
+    REGISTRY.get_or_init(MetricsRegistry::default)
+}
+
+impl MetricsRegistry {
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn publication on/off. Off is the hot-path no-op state.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Zero every counter/gauge/slot/histogram and (re)arm the run clock.
+    /// Called by `Workflow::run_on` before any kernel thread spawns.
+    pub fn reset_for_run(&self, world: Option<Arc<WorldStats>>) {
+        for c in &self.counters {
+            c.store(0, Ordering::Relaxed);
+        }
+        for g in &self.gauges {
+            g.store(0, Ordering::Relaxed);
+        }
+        for r in &self.ranks {
+            r.reset();
+        }
+        self.oracle_rtt.reset();
+        self.pred_rtt.reset();
+        *self.start.lock().unwrap() = Some(Instant::now());
+        *self.world.lock().unwrap() = world;
+    }
+
+    // ---- publish path (hot; enabled-gated, relaxed, allocation-free) ----
+
+    #[inline]
+    pub fn inc(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn gauge_set(&self, g: Gauge, v: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.gauges[g as usize].store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn observe_oracle_rtt(&self, d: Duration) {
+        if !self.enabled() {
+            return;
+        }
+        self.oracle_rtt.observe(d);
+    }
+
+    #[inline]
+    pub fn observe_pred_rtt(&self, d: Duration) {
+        if !self.enabled() {
+            return;
+        }
+        self.pred_rtt.observe(d);
+    }
+
+    /// Per-endpoint outstanding work, published by the dispatch core on
+    /// every dispatch/complete transition.
+    #[inline]
+    pub fn endpoint_outstanding(&self, rank: usize, batches: u64, items: u64) {
+        if !self.enabled() || rank >= MAX_RANKS {
+            return;
+        }
+        let s = &self.ranks[rank];
+        s.outstanding.store(batches, Ordering::Relaxed);
+        s.outstanding_items.store(items, Ordering::Relaxed);
+    }
+
+    /// Per-endpoint smoothed latency (EWMA ms), published on completion.
+    #[inline]
+    pub fn endpoint_ewma_ms(&self, rank: usize, ms: f64) {
+        if !self.enabled() || rank >= MAX_RANKS {
+            return;
+        }
+        let s = &self.ranks[rank];
+        s.ewma_ms_bits.store(ms.to_bits(), Ordering::Relaxed);
+        s.completed_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark an endpoint dead/alive (fault-plane eviction + readmission).
+    #[inline]
+    pub fn endpoint_dead(&self, rank: usize, dead: bool) {
+        if !self.enabled() || rank >= MAX_RANKS {
+            return;
+        }
+        self.ranks[rank].dead.store(dead as u64, Ordering::Relaxed);
+    }
+
+    /// Register a rank's kernel kind (idempotent; survives state changes).
+    pub fn set_rank_kind(&self, rank: usize, kind: RankKind) {
+        if !self.enabled() || rank >= MAX_RANKS {
+            return;
+        }
+        self.ranks[rank].kind.store(kind as u64, Ordering::Relaxed);
+    }
+
+    /// Publish a rank's lifecycle transition (supervisor call sites).
+    pub fn set_rank_state(&self, rank: usize, state: RankState) {
+        if !self.enabled() || rank >= MAX_RANKS {
+            return;
+        }
+        self.ranks[rank].state.store(state as u64, Ordering::Relaxed);
+    }
+
+    // ---- scrape path (server-only; locks allowed) ----
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn oracle_rtt_count(&self) -> u64 {
+        self.oracle_rtt.count()
+    }
+
+    pub fn set_bound_addr(&self, addr: Option<SocketAddr>) {
+        *self.bound_addr.lock().unwrap() = addr;
+    }
+
+    /// The metrics server's actual bound address (tests bind port 0).
+    pub fn bound_addr(&self) -> Option<SocketAddr> {
+        *self.bound_addr.lock().unwrap()
+    }
+
+    fn elapsed_s(&self) -> f64 {
+        self.start.lock().unwrap().map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    fn labels_per_sec(&self) -> f64 {
+        let el = self.elapsed_s();
+        if el <= 0.0 {
+            0.0
+        } else {
+            self.counter(Counter::Labels) as f64 / el
+        }
+    }
+
+    fn ranks_with_state(&self, want: RankState) -> Vec<usize> {
+        (0..MAX_RANKS)
+            .filter(|&r| {
+                RankState::from_u64(self.ranks[r].state.load(Ordering::Relaxed)) == want
+            })
+            .collect()
+    }
+
+    /// Render the full Prometheus text exposition (format 0.0.4).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        for c in Counter::ALL {
+            out.push_str(&format!("# TYPE {} counter\n", c.name()));
+            out.push_str(&format!("{} {}\n", c.name(), self.counter(c)));
+        }
+        for g in Gauge::ALL {
+            out.push_str(&format!("# TYPE {} gauge\n", g.name()));
+            out.push_str(&format!("{} {}\n", g.name(), self.gauge(g)));
+        }
+        out.push_str("# TYPE pal_labels_per_sec gauge\n");
+        out.push_str(&format!("pal_labels_per_sec {:.3}\n", self.labels_per_sec()));
+        out.push_str("# TYPE pal_run_elapsed_seconds gauge\n");
+        out.push_str(&format!("pal_run_elapsed_seconds {:.3}\n", self.elapsed_s()));
+        if let Some(w) = self.world.lock().unwrap().as_ref() {
+            for (name, v) in [
+                ("pal_world_messages_total", w.messages()),
+                ("pal_world_payload_bytes_total", w.payload_bytes()),
+                ("pal_world_payload_clones_total", w.payload_clones()),
+                ("pal_world_bytes_copied_total", w.bytes_copied()),
+                ("pal_world_dead_letters_total", w.dead_letters()),
+            ] {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+            }
+        }
+        for (hist, name) in
+            [(&self.oracle_rtt, "pal_oracle_rtt_ms"), (&self.pred_rtt, "pal_pred_rtt_ms")]
+        {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            for (le, cum) in hist.cumulative() {
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_sum {:.3}\n", hist.sum_ms()));
+            out.push_str(&format!("{name}_count {}\n", hist.count()));
+        }
+        out.push_str("# TYPE pal_endpoint_outstanding_batches gauge\n");
+        out.push_str("# TYPE pal_endpoint_ewma_ms gauge\n");
+        out.push_str("# TYPE pal_endpoint_dead gauge\n");
+        for (rank, s) in self.ranks.iter().enumerate() {
+            let kind = RankKind::from_u64(s.kind.load(Ordering::Relaxed));
+            let completed = s.completed_batches.load(Ordering::Relaxed);
+            let outstanding = s.outstanding.load(Ordering::Relaxed);
+            if completed == 0 && outstanding == 0 && kind == RankKind::Unknown {
+                continue;
+            }
+            let labels = format!("{{rank=\"{rank}\",kind=\"{}\"}}", kind.name());
+            out.push_str(&format!("pal_endpoint_outstanding_batches{labels} {outstanding}\n"));
+            let ewma = f64::from_bits(s.ewma_ms_bits.load(Ordering::Relaxed));
+            out.push_str(&format!("pal_endpoint_ewma_ms{labels} {ewma:.3}\n"));
+            out.push_str(&format!(
+                "pal_endpoint_dead{labels} {}\n",
+                s.dead.load(Ordering::Relaxed)
+            ));
+        }
+        out
+    }
+
+    /// Render the `/status` JSON snapshot: run progress, queues, live
+    /// fault counters (consistent with the final
+    /// [`FaultReport`](super::FaultReport) fields by shared call sites),
+    /// per-rank kernel state, per-endpoint dispatch state, and transport
+    /// stats.
+    pub fn snapshot_json(&self) -> Value {
+        let run = obj(vec![
+            ("elapsed_s", Value::Num(self.elapsed_s())),
+            ("labels", Value::Num(self.counter(Counter::Labels) as f64)),
+            ("labels_per_sec", Value::Num(self.labels_per_sec())),
+            ("al_iterations", Value::Num(self.counter(Counter::AlIterations) as f64)),
+            ("retrain_rounds", Value::Num(self.counter(Counter::RetrainRounds) as f64)),
+            ("weight_syncs", Value::Num(self.counter(Counter::WeightSyncs) as f64)),
+        ]);
+        let counters = Value::Object(
+            Counter::ALL
+                .iter()
+                .map(|&c| (c.json_key().to_string(), Value::Num(self.counter(c) as f64)))
+                .collect(),
+        );
+        let queues = Value::Object(
+            Gauge::ALL
+                .iter()
+                .map(|&g| (g.json_key().to_string(), Value::Num(self.gauge(g) as f64)))
+                .collect(),
+        );
+        let world = match self.world.lock().unwrap().as_ref() {
+            Some(w) => obj(vec![
+                ("messages", Value::Num(w.messages() as f64)),
+                ("payload_bytes", Value::Num(w.payload_bytes() as f64)),
+                ("payload_clones", Value::Num(w.payload_clones() as f64)),
+                ("bytes_copied", Value::Num(w.bytes_copied() as f64)),
+                ("dead_letters", Value::Num(w.dead_letters() as f64)),
+            ]),
+            None => Value::Null,
+        };
+        let dead_letters = self
+            .world
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|w| w.dead_letters())
+            .unwrap_or(0);
+        let faults = obj(vec![
+            (
+                "failed_ranks",
+                Value::Array(
+                    self.ranks_with_state(RankState::Failed)
+                        .into_iter()
+                        .map(|r| Value::Num(r as f64))
+                        .collect(),
+                ),
+            ),
+            ("oracle_evictions", Value::Num(self.counter(Counter::OracleEvictions) as f64)),
+            ("shard_evictions", Value::Num(self.counter(Counter::ShardEvictions) as f64)),
+            ("requeued_inputs", Value::Num(self.counter(Counter::RequeuedInputs) as f64)),
+            ("requeued_items", Value::Num(self.counter(Counter::RequeuedItems) as f64)),
+            ("lost_inputs", Value::Num(self.counter(Counter::LostInputs) as f64)),
+            ("bad_frames", Value::Num(self.counter(Counter::BadFrames) as f64)),
+            ("dead_letters", Value::Num(dead_letters as f64)),
+        ]);
+        let mut ranks = Vec::new();
+        for (rank, s) in self.ranks.iter().enumerate() {
+            let state = RankState::from_u64(s.state.load(Ordering::Relaxed));
+            let kind = RankKind::from_u64(s.kind.load(Ordering::Relaxed));
+            if state == RankState::Absent && kind == RankKind::Unknown {
+                continue;
+            }
+            let mut fields = vec![
+                ("rank", Value::Num(rank as f64)),
+                ("kernel", Value::Str(kind.name().to_string())),
+                ("state", Value::Str(state.name().to_string())),
+            ];
+            let outstanding = s.outstanding.load(Ordering::Relaxed);
+            let completed = s.completed_batches.load(Ordering::Relaxed);
+            if outstanding > 0 || completed > 0 {
+                fields.push(("outstanding_batches", Value::Num(outstanding as f64)));
+                fields.push((
+                    "outstanding_items",
+                    Value::Num(s.outstanding_items.load(Ordering::Relaxed) as f64),
+                ));
+                fields.push(("completed_batches", Value::Num(completed as f64)));
+                fields.push((
+                    "ewma_ms",
+                    Value::Num(f64::from_bits(s.ewma_ms_bits.load(Ordering::Relaxed))),
+                ));
+                fields.push((
+                    "dead",
+                    Value::Bool(s.dead.load(Ordering::Relaxed) != 0),
+                ));
+            }
+            ranks.push(obj(fields));
+        }
+        let latency = obj(vec![
+            (
+                "oracle_rtt",
+                obj(vec![
+                    ("count", Value::Num(self.oracle_rtt.count() as f64)),
+                    ("mean_ms", Value::Num(self.oracle_rtt.mean_ms())),
+                    ("p95_ms", Value::Num(self.oracle_rtt.percentile_ms(0.95))),
+                ]),
+            ),
+            (
+                "pred_rtt",
+                obj(vec![
+                    ("count", Value::Num(self.pred_rtt.count() as f64)),
+                    ("mean_ms", Value::Num(self.pred_rtt.mean_ms())),
+                    ("p95_ms", Value::Num(self.pred_rtt.percentile_ms(0.95))),
+                ]),
+            ),
+        ]);
+        obj(vec![
+            ("run", run),
+            ("counters", counters),
+            ("queues", queues),
+            ("latency", latency),
+            ("world", world),
+            ("faults", faults),
+            ("ranks", Value::Array(ranks)),
+        ])
+    }
+}
+
+/// Serializes lib tests (across telemetry submodules) that mutate the
+/// process-wide registry.
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Enabled;
+    impl Enabled {
+        fn new() -> Self {
+            registry().reset_for_run(None);
+            registry().set_enabled(true);
+            Enabled
+        }
+    }
+    impl Drop for Enabled {
+        fn drop(&mut self) {
+            registry().set_enabled(false);
+        }
+    }
+
+    #[test]
+    fn disabled_registry_ignores_publishes() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let r = registry();
+        r.reset_for_run(None);
+        r.set_enabled(false);
+        r.inc(Counter::Labels);
+        r.gauge_set(Gauge::OracleQueueDepth, 9);
+        r.observe_oracle_rtt(Duration::from_millis(5));
+        r.endpoint_ewma_ms(3, 5.0);
+        assert_eq!(r.counter(Counter::Labels), 0);
+        assert_eq!(r.gauge(Gauge::OracleQueueDepth), 0);
+        assert_eq!(r.oracle_rtt_count(), 0);
+    }
+
+    #[test]
+    fn enabled_registry_accumulates_and_renders() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let _e = Enabled::new();
+        let r = registry();
+        r.add(Counter::Labels, 12);
+        r.inc(Counter::OracleEvictions);
+        r.gauge_set(Gauge::OracleQueueDepth, 4);
+        r.observe_oracle_rtt(Duration::from_millis(3));
+        r.observe_oracle_rtt(Duration::from_millis(70));
+        r.set_rank_kind(5, RankKind::Oracle);
+        r.set_rank_state(5, RankState::Running);
+        r.endpoint_outstanding(5, 2, 16);
+        r.endpoint_ewma_ms(5, 6.25);
+        assert_eq!(r.counter(Counter::Labels), 12);
+        let prom = r.render_prometheus();
+        assert!(prom.contains("pal_labels_total 12"));
+        assert!(prom.contains("pal_oracle_evictions_total 1"));
+        assert!(prom.contains("pal_oracle_queue_depth 4"));
+        assert!(prom.contains("pal_oracle_rtt_ms_count 2"));
+        assert!(prom.contains("pal_oracle_rtt_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(prom.contains("pal_endpoint_outstanding_batches{rank=\"5\",kind=\"oracle\"} 2"));
+        let snap = r.snapshot_json();
+        assert_eq!(snap.path("run.labels").as_f64(), Some(12.0));
+        assert_eq!(snap.path("faults.oracle_evictions").as_f64(), Some(1.0));
+        assert_eq!(snap.path("latency.oracle_rtt.count").as_f64(), Some(2.0));
+        let ranks = snap.get("ranks").as_array().unwrap();
+        assert!(ranks.iter().any(|v| {
+            v.get("rank").as_f64() == Some(5.0)
+                && v.get("kernel").as_str() == Some("oracle")
+                && v.get("state").as_str() == Some("running")
+        }));
+    }
+
+    #[test]
+    fn histogram_percentile_is_bucket_bound() {
+        let h = AtomicHistogram::default();
+        for _ in 0..95 {
+            h.observe(Duration::from_millis(2));
+        }
+        for _ in 0..5 {
+            h.observe(Duration::from_millis(300));
+        }
+        // p50 lands in the le=2 bucket, p99 in le=512
+        assert_eq!(h.percentile_ms(0.50), 2.0);
+        assert_eq!(h.percentile_ms(0.99), 512.0);
+    }
+
+    #[test]
+    fn failed_rank_listed_in_status() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let _e = Enabled::new();
+        let r = registry();
+        r.set_rank_kind(7, RankKind::Prediction);
+        r.set_rank_state(7, RankState::Failed);
+        r.inc(Counter::HostFailures);
+        let snap = r.snapshot_json();
+        let failed = snap.path("faults.failed_ranks").as_array().unwrap();
+        assert_eq!(failed, &[Value::Num(7.0)]);
+    }
+}

@@ -1,0 +1,248 @@
+//! Minimal HTTP metrics/admin surface over `std::net` (no new deps, same
+//! stack as [`crate::comm::transport::tcp`]).
+//!
+//! Routes:
+//! - `GET /metrics` — Prometheus text exposition (format 0.0.4) of the
+//!   live [`MetricsRegistry`](super::registry::MetricsRegistry)
+//! - `GET /status` — JSON snapshot: run progress, queue depths, live
+//!   fault counters, per-rank kernel state, per-endpoint dispatch state
+//! - `GET /healthz` — liveness probe, always `200 ok`
+//!
+//! [`MetricsServer::start`] binds (port 0 allowed — the resolved address
+//! is published via
+//! [`registry().bound_addr()`](super::registry::MetricsRegistry::bound_addr)
+//! and returned by [`MetricsServer::addr`]), then serves scrapes from one
+//! accept-loop thread. Requests are handled inline — scrapes are small,
+//! rare, and read-only, so a connection pool would be dead weight. The
+//! server never touches the bus or any kernel lock: everything it renders
+//! comes from the registry's atomics and the `Arc<WorldStats>` snapshot.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::registry;
+use crate::json::to_string;
+
+/// How long the accept loop sleeps between polls while idle.
+const ACCEPT_IDLE: Duration = Duration::from_millis(5);
+
+/// Per-connection read/write deadline — a stalled scraper cannot wedge
+/// the accept loop for longer than this.
+const IO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Largest request head we will buffer before answering 400.
+const MAX_REQUEST: usize = 8192;
+
+/// Running metrics/admin HTTP server; stop it with [`MetricsServer::stop`]
+/// (also invoked on drop).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9090`, port 0 for ephemeral) and start
+    /// the accept loop. Publishes the resolved address to the registry so
+    /// in-process scrapers (tests) can find an ephemeral port.
+    pub fn start(addr: &str) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let bound = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        registry().set_bound_addr(Some(bound));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("pal-metrics".into())
+            .spawn(move || accept_loop(listener, stop2))
+            .expect("spawn metrics server thread");
+        Ok(MetricsServer { addr: bound, stop, handle: Some(handle) })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop and join it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        registry().set_bound_addr(None);
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        if self.handle.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+/// Accept-loop body: nonblocking accept + idle sleep, so the stop flag is
+/// observed within one [`ACCEPT_IDLE`] even with no traffic.
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // scrape errors (hangups, timeouts) only affect that client
+                let _ = handle_conn(stream);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_IDLE);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_IDLE),
+        }
+    }
+}
+
+/// Read one request head, route it, write one response, close.
+fn handle_conn(mut stream: TcpStream) -> io::Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    stream.set_nonblocking(false)?;
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    // read until the blank line ending the request head (we ignore bodies)
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+        if buf.len() > MAX_REQUEST {
+            return respond(&mut stream, 400, "text/plain", "request too large");
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(e),
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut stream, 405, "text/plain", "method not allowed");
+    }
+    // ignore any query string — routes take no parameters
+    match path.split('?').next().unwrap_or("") {
+        "/metrics" => {
+            let body = registry().render_prometheus();
+            respond(&mut stream, 200, "text/plain; version=0.0.4; charset=utf-8", &body)
+        }
+        "/status" => {
+            let body = to_string(&registry().snapshot_json());
+            respond(&mut stream, 200, "application/json", &body)
+        }
+        "/healthz" | "/" => respond(&mut stream, 200, "text/plain", "ok\n"),
+        _ => respond(&mut stream, 404, "text/plain", "not found"),
+    }
+}
+
+fn respond(stream: &mut TcpStream, code: u16, content_type: &str, body: &str) -> io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Blocking in-process HTTP GET against `addr` — the scrape helper the
+/// observability tests (and the CLI's own smoke checks) use so no external
+/// HTTP client is needed. Returns `(status_code, body)`.
+pub fn http_get(addr: SocketAddr, path: &str) -> io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: pal\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let code = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "malformed http response"))?;
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    Ok((code, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::{Counter, Gauge, TEST_LOCK};
+
+    #[test]
+    fn serves_metrics_status_and_healthz() {
+        let _g = TEST_LOCK.lock().unwrap();
+        registry().reset_for_run(None);
+        registry().set_enabled(true);
+        registry().add(Counter::Labels, 3);
+        registry().gauge_set(Gauge::OracleQueueDepth, 2);
+        let server = MetricsServer::start("127.0.0.1:0").expect("bind");
+        let addr = server.addr();
+        assert_eq!(registry().bound_addr(), Some(addr));
+
+        let (code, body) = http_get(addr, "/healthz").unwrap();
+        assert_eq!((code, body.as_str()), (200, "ok\n"));
+
+        let (code, body) = http_get(addr, "/metrics").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("pal_labels_total 3"));
+        assert!(body.contains("pal_oracle_queue_depth 2"));
+        assert!(body.contains("# TYPE pal_oracle_rtt_ms histogram"));
+
+        let (code, body) = http_get(addr, "/status").unwrap();
+        assert_eq!(code, 200);
+        let v = crate::json::parse(&body).expect("valid status json");
+        assert_eq!(v.path("run.labels").as_f64(), Some(3.0));
+        assert_eq!(v.path("queues.oracle_queue_depth").as_f64(), Some(2.0));
+
+        let (code, _) = http_get(addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+
+        server.stop();
+        registry().set_enabled(false);
+        // the bound address is withdrawn once the server is gone
+        assert_eq!(registry().bound_addr(), None);
+    }
+
+    #[test]
+    fn concurrent_scrapes_all_succeed() {
+        let _g = TEST_LOCK.lock().unwrap();
+        registry().reset_for_run(None);
+        registry().set_enabled(true);
+        let server = MetricsServer::start("127.0.0.1:0").expect("bind");
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let path = if i % 2 == 0 { "/metrics" } else { "/status" };
+                    http_get(addr, path).map(|(code, _)| code)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap().unwrap(), 200);
+        }
+        server.stop();
+        registry().set_enabled(false);
+    }
+}

@@ -1,0 +1,250 @@
+//! Bounded per-rank span recorder drained into Chrome trace-event JSON.
+//!
+//! Every kernel host records phase spans (one [`TraceEvent`] per
+//! completed phase) into its *own* lane — a per-rank `Mutex<Vec<_>>`
+//! that only that rank's thread locks while recording, so recording is
+//! uncontended and the cost is one lock + one `Vec::push` into
+//! pre-reserved capacity. Lanes are bounded ([`LANE_CAP`] events per
+//! rank); overflow is dropped and counted, never reallocated past the
+//! cap.
+//!
+//! Span taxonomy (names are stable; the observability e2e asserts span
+//! counts against `RunReport` counters):
+//! - `predict` — one committee forward on a prediction rank
+//!   (== prediction `batches`)
+//! - `oracle_calc` — one labeling call on an oracle rank
+//!   (== oracle `batches`)
+//! - `retrain` — one training round on a trainer rank
+//!   (== training `rounds`)
+//! - `weight_sync` — one weight broadcast from a trainer
+//!   (== training `weight_syncs`)
+//! - `oracle_batch` — Manager-side oracle-leg lifecycle,
+//!   dispatch → labels ingested
+//! - `pred_batch` — Exchange-side prediction-leg lifecycle,
+//!   dispatch → completion ingested
+//! - `rank_down` (instant) — a host panicked or was fault-killed
+//! - `evict` (instant) — a coordinator evicted a dead endpoint
+//!
+//! The drained file is a plain Chrome trace-event array (`ph: "X"` for
+//! spans, `ph: "i"` for instants, `tid` = rank) loadable in Perfetto or
+//! `chrome://tracing`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Per-rank lanes pre-allocated by the sink (ranks past this share lane 0's
+/// fate: they are simply not recorded).
+pub const MAX_RANKS: usize = super::registry::MAX_RANKS;
+
+/// Events retained per rank before dropping (bounds memory on long runs).
+pub const LANE_CAP: usize = 65_536;
+
+/// One recorded phase span or instant event.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Stable span name from the module-level taxonomy.
+    pub name: &'static str,
+    /// Wall-clock start of the span.
+    pub t0: Instant,
+    /// Span duration (zero for instant events).
+    pub dur: Duration,
+    /// Recording rank (becomes `tid`).
+    pub rank: usize,
+    /// Span-specific id (batch id, round index, …); `u64::MAX` = none.
+    pub id: u64,
+    /// Item count carried by the span (0 = not applicable).
+    pub items: u64,
+}
+
+/// The process-wide trace sink (see [`sink()`]).
+pub struct TraceSink {
+    enabled: AtomicBool,
+    lanes: [Mutex<Vec<TraceEvent>>; MAX_RANKS],
+    dropped: AtomicU64,
+}
+
+static SINK: OnceLock<TraceSink> = OnceLock::new();
+
+/// The process-wide sink (created on first touch, disabled by default).
+pub fn sink() -> &'static TraceSink {
+    SINK.get_or_init(|| TraceSink {
+        enabled: AtomicBool::new(false),
+        lanes: std::array::from_fn(|_| Mutex::new(Vec::new())),
+        dropped: AtomicU64::new(0),
+    })
+}
+
+impl TraceSink {
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Clear all lanes and start recording. Called by `Workflow::run_on`
+    /// when `trace_out` is configured.
+    pub fn begin(&self) {
+        for lane in &self.lanes {
+            lane.lock().unwrap().clear();
+        }
+        self.dropped.store(0, Ordering::Relaxed);
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop recording (lanes keep their events until the next `begin`).
+    pub fn end(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    /// Record a completed span. No-op while disabled.
+    #[inline]
+    pub fn span(&self, rank: usize, name: &'static str, t0: Instant, id: u64, items: u64) {
+        if !self.enabled() || rank >= MAX_RANKS {
+            return;
+        }
+        let dur = t0.elapsed();
+        self.push(TraceEvent { name, t0, dur, rank, id, items });
+    }
+
+    /// Record an instant event (zero duration). No-op while disabled.
+    #[inline]
+    pub fn instant(&self, rank: usize, name: &'static str, id: u64) {
+        if !self.enabled() || rank >= MAX_RANKS {
+            return;
+        }
+        self.push(TraceEvent { name, t0: Instant::now(), dur: Duration::ZERO, rank, id, items: 0 });
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut lane = self.lanes[ev.rank].lock().unwrap();
+        if lane.len() >= LANE_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if lane.capacity() == 0 {
+            lane.reserve(1024);
+        }
+        lane.push(ev);
+    }
+
+    /// Events dropped to the per-lane cap since the last `begin`.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Count of recorded spans with `name` across all lanes.
+    pub fn count(&self, name: &str) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.lock().unwrap().iter().filter(|e| e.name == name).count() as u64)
+            .sum()
+    }
+
+    /// Drain every lane into a Chrome trace-event JSON array string.
+    /// Timestamps are microseconds relative to the earliest recorded
+    /// event, so the trace always starts at ts=0.
+    pub fn drain_chrome_json(&self) -> String {
+        let mut events: Vec<TraceEvent> = Vec::new();
+        for lane in &self.lanes {
+            events.append(&mut lane.lock().unwrap());
+        }
+        let origin = events.iter().map(|e| e.t0).min();
+        let mut out = String::with_capacity(events.len() * 96 + 2);
+        out.push('[');
+        for (i, e) in events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let ts = origin.map(|o| e.t0.duration_since(o).as_micros() as u64).unwrap_or(0);
+            let ph = if e.dur.is_zero() { "i" } else { "X" };
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"{}\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{}",
+                e.name,
+                ph,
+                ts,
+                e.dur.as_micros() as u64,
+                e.rank
+            ));
+            if ph == "i" {
+                // chrome requires a scope on instant events
+                out.push_str(",\"s\":\"t\"");
+            }
+            out.push_str(&format!(",\"args\":{{\"id\":{},\"items\":{}}}}}", e.id, e.items));
+        }
+        out.push(']');
+        out
+    }
+
+    /// Drain to a file at `path` (the `--trace-out` target).
+    pub fn drain_to_file(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.drain_chrome_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let s = sink();
+        s.begin();
+        s.end();
+        s.span(1, "predict", Instant::now(), 0, 4);
+        s.instant(1, "rank_down", 1);
+        assert_eq!(s.count("predict"), 0);
+        assert_eq!(s.drain_chrome_json(), "[]");
+    }
+
+    #[test]
+    fn spans_drain_as_chrome_trace() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let s = sink();
+        s.begin();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        s.span(3, "oracle_calc", t0, 7, 8);
+        s.instant(5, "rank_down", 5);
+        s.end();
+        assert_eq!(s.count("oracle_calc"), 1);
+        let json = s.drain_chrome_json();
+        let v = crate::json::parse(&json).expect("valid json");
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        let span = arr
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("oracle_calc"))
+            .expect("span present");
+        assert_eq!(span.get("ph").as_str(), Some("X"));
+        assert_eq!(span.get("tid").as_f64(), Some(3.0));
+        assert!(span.get("dur").as_f64().unwrap() >= 1_000.0);
+        assert_eq!(span.path("args.items").as_f64(), Some(8.0));
+        let inst = arr
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("rank_down"))
+            .expect("instant present");
+        assert_eq!(inst.get("ph").as_str(), Some("i"));
+        // drained — lanes are now empty
+        assert_eq!(s.drain_chrome_json(), "[]");
+    }
+
+    #[test]
+    fn lane_cap_drops_and_counts() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let s = sink();
+        s.begin();
+        let t0 = Instant::now();
+        for i in 0..(LANE_CAP + 10) {
+            s.span(2, "predict", t0, i as u64, 1);
+        }
+        s.end();
+        assert_eq!(s.count("predict"), LANE_CAP as u64);
+        assert_eq!(s.dropped(), 10);
+        // clean up the big lane so other tests start fresh
+        s.begin();
+        s.end();
+    }
+}

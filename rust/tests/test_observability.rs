@@ -1,0 +1,346 @@
+//! Observability-plane e2e: scrape `/metrics` + `/status` from a *live*
+//! run (clean and chaos), check the mid-run numbers against the final
+//! [`RunReport`], verify `trace_out` produces a Chrome trace whose span
+//! counts match the report's counters, and pin that enabling the registry
+//! does not perturb the deterministic scenario.
+//!
+//! The registry, trace sink, and metrics-server bound address are
+//! process-wide singletons, so every test here serializes on one lock —
+//! same discipline as the telemetry lib tests.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use pal::comm::FaultPlan;
+use pal::config::{
+    AlSetting, BatchSetting, ExchangeMode, OracleMode, StopCriteria, Topology,
+};
+use pal::coordinator::selection::SelectAllUtils;
+use pal::coordinator::workflow::Workflow;
+use pal::json::{parse, Value};
+use pal::kernels::{Generator, KernelSet, Mode, Model, Oracle, Utils};
+use pal::sim::scenario::{self, MbWalker};
+use pal::sim::workload::{SyntheticModel, SyntheticOracle};
+use pal::telemetry::registry::registry;
+use pal::telemetry::server::http_get;
+use pal::telemetry::RunReport;
+
+/// Wire layout shared with the chaos matrix: input `[x, y, z, g, s]`,
+/// label `[e, fx, fy, fz]`.
+const IN_DIM: usize = 5;
+const OUT_DIM: usize = 4;
+
+const GENS: usize = 4;
+const ORACLES: usize = 4;
+/// Large enough that the run stays alive for many scrape rounds (each
+/// label costs ~2 ms of oracle wall time across 4 oracles).
+const LABELS: u64 = 200;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    // a poisoned lock only means an earlier test failed; the registry is
+    // reset per run, so continuing is safe
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Batched flows, strict label budget, slow-ish oracles: long enough to
+/// scrape mid-run, fast enough for CI.
+fn live_setting() -> AlSetting {
+    AlSetting {
+        result_dir: "/tmp/pal-observability".into(),
+        gene_process: GENS,
+        pred_process: 1,
+        ml_process: 0,
+        orcl_process: ORACLES,
+        committee_size: Some(1),
+        exchange_mode: ExchangeMode::Batched,
+        retrain_size: 10_000, // never flush
+        strict_label_budget: true,
+        seed: 23,
+        batch: BatchSetting {
+            max_size: GENS,
+            max_delay: Duration::from_millis(2),
+            max_outstanding: 2,
+        },
+        oracle_mode: OracleMode::Batched,
+        oracle_batch: BatchSetting {
+            max_size: 4,
+            max_delay: Duration::from_millis(1),
+            max_outstanding: 1,
+        },
+        stop: StopCriteria {
+            max_iterations: None,
+            max_labels: Some(LABELS),
+            min_retrain_rounds: 0,
+            min_train_epochs: 0,
+            max_wall: Some(Duration::from_secs(60)),
+        },
+        ..Default::default()
+    }
+}
+
+fn live_kernels(s: &AlSetting) -> KernelSet {
+    let max_sel = s.gene_process;
+    let generators = (0..s.gene_process)
+        .map(|i| {
+            let seed = 900 + i as u64;
+            Box::new(move || Box::new(MbWalker::new(seed)) as Box<dyn Generator>)
+                as Box<dyn FnOnce() -> Box<dyn Generator> + Send>
+        })
+        .collect();
+    let oracles = (0..s.orcl_process)
+        .map(|_| {
+            Box::new(|| {
+                Box::new(SyntheticOracle {
+                    label_cost: Duration::from_millis(2),
+                    out_dim: OUT_DIM,
+                }) as Box<dyn Oracle>
+            }) as Box<dyn FnOnce() -> Box<dyn Oracle> + Send>
+        })
+        .collect();
+    KernelSet {
+        generators,
+        oracles,
+        model: Arc::new(|mode: Mode, _member: usize| {
+            Box::new(SyntheticModel::new(IN_DIM, OUT_DIM, Duration::ZERO, Duration::ZERO, 8, mode))
+                as Box<dyn Model>
+        }),
+        utils: Arc::new(move || {
+            Box::new(SelectAllUtils { max_per_iter: max_sel }) as Box<dyn Utils>
+        }),
+    }
+}
+
+/// Wait for the run-started signal: the metrics server's bound address
+/// appears in the registry once `Workflow::run_on` has it listening.
+fn wait_for_server() -> std::net::SocketAddr {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        if let Some(addr) = registry().bound_addr() {
+            return addr;
+        }
+        assert!(Instant::now() < deadline, "metrics server never came up");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Scrape `/status` until `pred(snapshot)` holds, returning that
+/// snapshot. Panics if the server goes away (run over) first.
+fn poll_status_until(
+    addr: std::net::SocketAddr,
+    what: &str,
+    pred: impl Fn(&Value) -> bool,
+) -> Value {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (code, body) = http_get(addr, "/status").expect("run ended before /status satisfied");
+        assert_eq!(code, 200);
+        let snap = parse(&body).expect("valid /status json");
+        if pred(&snap) {
+            return snap;
+        }
+        assert!(Instant::now() < deadline, "{what} never observed in /status");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live scrape during a clean run
+// ---------------------------------------------------------------------------
+
+/// `--metrics-addr` serves `/metrics`, `/status`, and `/healthz` while the
+/// workflow is in flight, with live (nonzero, monotonically growing)
+/// numbers that end consistent with the final report.
+#[test]
+fn live_run_serves_metrics_and_status_mid_run() {
+    let _g = serial();
+    let mut setting = live_setting();
+    setting.metrics_addr = Some("127.0.0.1:0".into());
+    let kernels = live_kernels(&setting);
+    let runner = std::thread::spawn(move || Workflow::new(setting).run(kernels).unwrap());
+
+    let addr = wait_for_server();
+    let (code, body) = http_get(addr, "/healthz").unwrap();
+    assert_eq!((code, body.as_str()), (200, "ok\n"));
+
+    // live progress: labels grow while the run is still in flight
+    let snap = poll_status_until(addr, "first labels", |s| {
+        s.path("run.labels").as_f64().unwrap_or(0.0) > 0.0
+    });
+    let mid_labels = snap.path("run.labels").as_f64().unwrap();
+    assert!(mid_labels >= 1.0);
+    // every rank row the supervisors registered is present and typed
+    let ranks = snap.get("ranks").as_array().expect("ranks section");
+    assert!(
+        ranks.iter().any(|r| r.get("kernel").as_str() == Some("oracle")),
+        "no oracle rank row in /status"
+    );
+    assert!(
+        ranks.iter().any(|r| r.get("state").as_str() == Some("running")),
+        "no running rank mid-run"
+    );
+
+    // the Prometheus rendering serves the same counters
+    let (code, prom) = http_get(addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert!(prom.contains("pal_labels_total"), "no labels counter in /metrics");
+    assert!(prom.contains("pal_oracle_rtt_ms_count"), "no rtt histogram in /metrics");
+    assert!(prom.contains("pal_world_messages_total"), "no world stats in /metrics");
+
+    let report = runner.join().unwrap();
+    assert!(report.oracle_labels >= LABELS);
+    // mid-run counters never exceed the final truth
+    assert!(mid_labels <= report.oracle_labels as f64);
+    // the server is torn down with the run
+    assert_eq!(registry().bound_addr(), None);
+    assert!(http_get(addr, "/healthz").is_err(), "server still up after join");
+}
+
+// ---------------------------------------------------------------------------
+// Live scrape during a chaos run
+// ---------------------------------------------------------------------------
+
+/// Fault counters are visible in `/status` *before* join — an operator
+/// watching the surface sees the eviction while the run is still degraded
+/// but alive — and the mid-run numbers agree with the final FaultReport.
+#[test]
+fn chaos_run_shows_fault_counters_before_join() {
+    let _g = serial();
+    let mut setting = live_setting();
+    setting.metrics_addr = Some("127.0.0.1:0".into());
+    let victim = Topology::new(&setting).orcl_ranks()[0];
+    let kernels = live_kernels(&setting);
+    let plan = FaultPlan::default().kill_after_recvs(victim, 1);
+    let runner =
+        std::thread::spawn(move || Workflow::new(setting).with_faults(plan).run(kernels).unwrap());
+
+    let addr = wait_for_server();
+    let snap = poll_status_until(addr, "oracle eviction", |s| {
+        s.path("faults.oracle_evictions").as_f64().unwrap_or(0.0) >= 1.0
+    });
+    let mid_evictions = snap.path("faults.oracle_evictions").as_f64().unwrap();
+    let failed: Vec<f64> = snap
+        .path("faults.failed_ranks")
+        .as_array()
+        .expect("failed_ranks")
+        .iter()
+        .filter_map(|v| v.as_f64())
+        .collect();
+    assert!(
+        failed.contains(&(victim as f64)),
+        "victim {victim} not in live failed_ranks {failed:?}"
+    );
+    // the dead endpoint is flagged on its rank row
+    let ranks = snap.get("ranks").as_array().unwrap();
+    assert!(
+        ranks.iter().any(|r| {
+            r.get("rank").as_f64() == Some(victim as f64)
+                && r.get("state").as_str() == Some("failed")
+        }),
+        "victim rank row not marked failed"
+    );
+
+    let report = runner.join().unwrap();
+    assert!(report.oracle_labels >= LABELS, "recovery failed: {}", report.oracle_labels);
+    assert!(report.faults.failed_ranks.contains(&victim));
+    // live counters are a prefix of the final truth
+    assert!(mid_evictions >= 1.0);
+    assert!(mid_evictions <= report.faults.oracle_evictions as f64);
+}
+
+// ---------------------------------------------------------------------------
+// Trace recorder vs RunReport counters
+// ---------------------------------------------------------------------------
+
+fn span_count(events: &[Value], name: &str) -> u64 {
+    events.iter().filter(|e| e.get("name").as_str() == Some(name)).count() as u64
+}
+
+/// `--trace-out` writes a Chrome trace-event array whose per-phase span
+/// counts equal the post-mortem counters: `predict` == prediction
+/// batches, `oracle_calc` == oracle batches, `retrain` == training
+/// rounds, `weight_sync` == training weight syncs.
+#[test]
+fn trace_span_counts_match_report_counters() {
+    let _g = serial();
+    let path = "/tmp/pal-observability-trace.json";
+    let _ = std::fs::remove_file(path);
+    let mut setting = scenario::deterministic_setting(OracleMode::Batched);
+    setting.trace_out = Some(path.into());
+    let report: RunReport =
+        Workflow::new(setting).run(scenario::deterministic_kernels()).unwrap();
+
+    let text = std::fs::read_to_string(path).expect("trace file written");
+    let events = parse(&text).expect("valid trace json");
+    let events = events.as_array().expect("trace is an array").to_vec();
+    assert!(!events.is_empty(), "empty trace from a full run");
+
+    // every event is well-formed Chrome trace: complete span or instant
+    for e in &events {
+        let ph = e.get("ph").as_str().expect("ph");
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph}");
+        assert!(e.get("ts").as_f64().is_some());
+        assert!(e.get("tid").as_f64().is_some());
+    }
+
+    assert_eq!(
+        span_count(&events, "predict"),
+        report.sum_counter("prediction", "batches"),
+        "predict spans vs prediction batches"
+    );
+    assert_eq!(
+        span_count(&events, "oracle_calc"),
+        report.sum_counter("oracle", "batches"),
+        "oracle_calc spans vs oracle batches"
+    );
+    assert_eq!(
+        span_count(&events, "retrain"),
+        report.sum_counter("training", "rounds"),
+        "retrain spans vs training rounds"
+    );
+    assert_eq!(
+        span_count(&events, "weight_sync"),
+        report.sum_counter("training", "weight_syncs"),
+        "weight_sync spans vs training weight_syncs"
+    );
+    // the dispatch legs trace their batch lifecycles too
+    assert!(span_count(&events, "oracle_batch") >= 1, "no oracle_batch lifecycle spans");
+    assert!(span_count(&events, "pred_batch") >= 1, "no pred_batch lifecycle spans");
+    // a clean run records no fault events
+    assert_eq!(span_count(&events, "rank_down"), 0);
+    assert_eq!(span_count(&events, "evict"), 0);
+    let _ = std::fs::remove_file(path);
+}
+
+// ---------------------------------------------------------------------------
+// Determinism with the registry enabled
+// ---------------------------------------------------------------------------
+
+/// Publishing live metrics must not perturb the run: the deterministic
+/// scenario stays bit-identical with the registry enabled vs disabled.
+#[test]
+fn registry_enabled_run_is_bit_identical_to_disabled() {
+    let _g = serial();
+    registry().reset_for_run(None);
+    registry().set_enabled(true);
+    let observed = scenario::run_once(OracleMode::Batched);
+    // the registry actually saw the run it observed
+    assert!(
+        registry().counter(pal::telemetry::registry::Counter::Labels) >= scenario::LABELS,
+        "registry missed the run's labels"
+    );
+    registry().set_enabled(false);
+    let plain = scenario::run_once(OracleMode::Batched);
+
+    assert_eq!(observed.oracle_labels, plain.oracle_labels);
+    assert_eq!(observed.retrain_rounds, plain.retrain_rounds);
+    assert_eq!(observed.final_losses.len(), plain.final_losses.len());
+    for (i, (x, y)) in observed.final_losses.iter().zip(&plain.final_losses).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "trainer {i} loss differs with registry on: {x} vs {y}"
+        );
+    }
+}
